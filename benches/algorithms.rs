@@ -1,0 +1,48 @@
+//! Benches of full algorithm rounds on the pure-Rust quadratic oracle
+//! (isolates the L3 algorithm cost from the PJRT compute cost).
+//! Run: `cargo bench --bench algorithms`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedeff::algorithms::efbv::EfBv;
+use fedeff::algorithms::scafflix::Scafflix;
+use fedeff::algorithms::sppm::SppmAs;
+use fedeff::algorithms::RunOptions;
+use fedeff::compress::topk::TopK;
+use fedeff::oracle::quadratic::QuadraticOracle;
+use fedeff::prox::LbfgsSolver;
+use fedeff::sampling::NiceSampling;
+use harness::{black_box, Bench};
+
+fn main() {
+    let b = Bench::new(10);
+    let mut rng = fedeff::rng(2);
+    let q = QuadraticOracle::random(16, 256, 0.5, 3.0, 1.0, &mut rng);
+    let x0 = vec![1.0f32; 256];
+    let opts = RunOptions { rounds: 20, eval_every: 1000, ..Default::default() };
+
+    {
+        let comp = TopK::new(16);
+        let alg = EfBv::new(&comp);
+        b.run("efbv_topk_20rounds_n16_d256", || {
+            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+        });
+    }
+
+    {
+        let alg = Scafflix::i_scaffnew(&q, 0.3);
+        b.run("scafflix_20rounds_n16_d256", || {
+            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+        });
+    }
+
+    {
+        let sampler = NiceSampling { n: 16, tau: 4 };
+        let solver = LbfgsSolver::default();
+        let alg = SppmAs::new(&sampler, &solver, 10.0, 8);
+        b.run("sppm_bfgs_k8_20rounds", || {
+            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+        });
+    }
+}

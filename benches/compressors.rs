@@ -1,0 +1,54 @@
+//! Microbenches for the L3 hot path: compressors + aggregation.
+//!
+//! DESIGN.md §Perf target: the compression/aggregation layer must cost
+//! <10% of an end-to-end round (the PJRT gradient call dominates).
+//! Run: `cargo bench --bench compressors`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedeff::compress::comp::CompKK;
+use fedeff::compress::mix::MixKK;
+use fedeff::compress::quantize::Qsgd;
+use fedeff::compress::randk::RandK;
+use fedeff::compress::topk::TopK;
+use fedeff::compress::Compressor;
+use harness::{black_box, Bench};
+
+fn main() {
+    let b = Bench::new(30);
+    for &d in &[128usize, 1024, 16384] {
+        let mut rng = fedeff::rng(1);
+        let x: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut out = vec![0.0f32; d];
+        let k = (d / 32).max(1);
+
+        let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
+            ("topk", Box::new(TopK::new(k))),
+            ("randk", Box::new(RandK::unbiased(k))),
+            ("mix", Box::new(MixKK::new(k, 2 * k))),
+            ("comp", Box::new(CompKK::new(k, d / 2))),
+            ("qsgd4", Box::new(Qsgd::new(4))),
+        ];
+        for (name, comp) in cases {
+            // pre-warm comp-(k,k') param estimation outside the timing loop
+            let _ = comp.params(d);
+            b.run(&format!("compress/{name}/d={d}"), || {
+                black_box(comp.compress(black_box(&x), black_box(&mut out), &mut rng));
+            });
+        }
+    }
+
+    // aggregation
+    for &d in &[1024usize, 65536] {
+        let n = 16;
+        let grads: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; d]).collect();
+        let mut acc = vec![0.0f32; d];
+        b.run(&format!("aggregate/mean/d={d}/n={n}"), || {
+            acc.fill(0.0);
+            for g in &grads {
+                fedeff::vecmath::acc_mean(black_box(g), n as f32, &mut acc);
+            }
+        });
+    }
+}

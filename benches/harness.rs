@@ -1,0 +1,63 @@
+//! Minimal in-tree bench harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with median/mean reporting; each `[[bench]]`
+//! target is `harness = false` and drives this from `main()`. Output is
+//! one line per bench: `bench <name> ... median 1.23ms mean 1.25ms (n=30)`.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub samples: usize,
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { samples: 30, warmup: 3 }
+    }
+}
+
+impl Bench {
+    pub fn new(samples: usize) -> Self {
+        Self { samples, warmup: (samples / 10).max(1) }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean: Duration = times.iter().sum::<Duration>() / times.len() as u32;
+        println!(
+            "bench {name:<48} median {:>12} mean {:>12} (n={})",
+            fmt(median),
+            fmt(mean),
+            self.samples
+        );
+    }
+}
+
+pub fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Opaque value sink (optimization barrier).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

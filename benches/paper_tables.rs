@@ -1,0 +1,33 @@
+//! End-to-end paper-table benches: each bench regenerates (a scaled-down
+//! version of) one dissertation table/figure through the same driver the
+//! `repro` example uses — wall-clock tracked so regressions in the full
+//! pipeline are visible. Run: `cargo bench --bench paper_tables`
+//!
+//! Experiments needing HLO artifacts are skipped gracefully when
+//! `artifacts/` is absent.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+
+fn main() {
+    let b = Bench::new(3);
+    let outdir = std::path::PathBuf::from("target/bench-results");
+    // pure-algorithm experiments (run with or without artifacts)
+    for id in ["fig2_2", "fig5_3"] {
+        b.run(&format!("repro_{id}_fast"), || {
+            fedeff::repro::run(id, true, &outdir).unwrap();
+        });
+    }
+    // artifact-dependent experiments: only when available
+    if fedeff::manifest::Manifest::load_default().is_ok() {
+        for id in ["tab6_2"] {
+            b.run(&format!("repro_{id}_fast"), || {
+                fedeff::repro::run(id, true, &outdir).unwrap();
+            });
+        }
+    } else {
+        eprintln!("artifacts missing; skipping artifact-dependent benches");
+    }
+}

@@ -1,0 +1,100 @@
+//! The §Perf measurement harness (EXPERIMENTS.md §Perf).
+//!
+//! Quantifies the three optimization levers on the end-to-end round path:
+//!   L2a  per-client gradient, fresh host literals every call (baseline)
+//!   L2b  per-client gradient, shard staged on device once (optimized)
+//!   L2c  all-clients batched artifact: one dispatch per round (optimized)
+//!   L3   compressor + aggregation cost, to verify the <10%-of-round target
+//!
+//! Run: `cargo bench --bench perf_pass` (needs `make artifacts`).
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedeff::compress::Compressor;
+use fedeff::data::synth::{logreg_dataset, Heterogeneity};
+use fedeff::oracle::hlo::HloLogReg;
+use fedeff::oracle::Oracle;
+use fedeff::runtime::Runtime;
+use harness::{black_box, Bench};
+use std::rc::Rc;
+
+fn main() {
+    let Ok(rt) = Runtime::from_default_manifest() else {
+        eprintln!("perf_pass needs `make artifacts`");
+        return;
+    };
+    let rt = Rc::new(rt);
+    let b = Bench::new(30);
+    let n = rt.manifest().logreg_batch_n;
+    let mut rng = fedeff::rng(42);
+    let data = logreg_dataset(112, 256, n, Heterogeneity::FeatureShift(0.5), 0.3, &mut rng);
+    let oracle = HloLogReg::new(rt.clone(), "mushrooms", data.clone(), 0.1).unwrap();
+    let d = 112;
+    let w = vec![0.05f32; d];
+    let mut g = vec![0.0f32; d];
+
+    // L2a: per-client grad via fresh host literals (no staging)
+    {
+        let exe = rt.load("logreg_grad_mushrooms").unwrap();
+        let shard = &data.clients[0];
+        let mu = [0.1f32];
+        b.run("L2a/per-client-grad/host-literals", || {
+            black_box(exe.run(&[&shard.x, &shard.y, &w, &mu]).unwrap());
+        });
+    }
+
+    // L2b: per-client grad with staged shard (the HloLogReg hot path)
+    b.run("L2b/per-client-grad/staged-buffers", || {
+        black_box(oracle.loss_grad(0, &w, &mut g).unwrap());
+    });
+
+    // full-cohort round: n per-client calls (staged)
+    b.run(&format!("L2b/cohort-round/{n}x-per-client"), || {
+        for i in 0..n {
+            black_box(oracle.loss_grad(i, &w, &mut g).unwrap());
+        }
+    });
+
+    // L2c: batched all-clients artifact, one dispatch
+    let ws: Vec<f32> = (0..n).flat_map(|_| w.clone()).collect();
+    b.run(&format!("L2c/cohort-round/batched-{n}"), || {
+        black_box(oracle.batch_loss_grad(&ws, n).unwrap());
+    });
+
+    // L3: compression + control-variate update + aggregation for the cohort
+    {
+        let comp = fedeff::compress::topk::TopK::new(d / 16);
+        let grads: Vec<Vec<f32>> = (0..n).map(|i| vec![0.1 * i as f32; d]).collect();
+        let mut h = vec![vec![0.0f32; d]; n];
+        let mut di = vec![0.0f32; d];
+        let mut agg = vec![0.0f32; d];
+        let mut resid = vec![0.0f32; d];
+        b.run(&format!("L3/efbv-round-math/{n}clients"), || {
+            agg.fill(0.0);
+            for i in 0..n {
+                fedeff::vecmath::sub(&grads[i], &h[i], &mut resid);
+                comp.compress(&resid, &mut di, &mut rng);
+                fedeff::vecmath::axpy(0.5, &di, &mut h[i]);
+                fedeff::vecmath::acc_mean(&di, n as f32, &mut agg);
+            }
+            black_box(&agg);
+        });
+    }
+
+    // LM: transformer grad dispatch (the e2e hot path)
+    if let Ok(layout) = rt.manifest().layout("lm_small") {
+        let layout = layout.clone();
+        let prof = rt.manifest().lm_configs["lm_small"].clone();
+        let mut rng2 = fedeff::rng(7);
+        let lm_data =
+            fedeff::data::corpus::fed_token_dataset(2, 8, 8, prof.seq_len, &mut rng2);
+        let lm = fedeff::oracle::hlo::HloLm::new(rt.clone(), "lm_small", lm_data).unwrap();
+        let theta = fedeff::manifest::init_flat(&layout, &mut rng2);
+        let mut gl = vec![0.0f32; theta.len()];
+        let b2 = Bench::new(10);
+        b2.run("L2/lm_small-grad-step", || {
+            black_box(lm.loss_grad_stoch(0, &theta, &mut gl, &mut rng2).unwrap());
+        });
+    }
+}

@@ -1,0 +1,77 @@
+//! Post-training pruning of the e2e-trained transformer (Ch. 6 pipeline).
+//!
+//! Loads the model saved by `train_transformer`, collects Wanda/RIA
+//! calibration activations through the AOT `lm_calib` artifact, prunes
+//! with every method of the SymWanda family at several sparsities,
+//! applies R²-DSnoT training-free fine-tuning, and reports perplexities.
+//!
+//! ```bash
+//! cargo run --release --example prune_llm -- [cfg] [sparsity]
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use fedeff::data::corpus::fed_token_dataset;
+use fedeff::metrics::Table;
+use fedeff::oracle::hlo::HloLm;
+use fedeff::pruning::dsnot::{finetune_model, DsnotConfig};
+use fedeff::pruning::{prune_model, Method, Scope};
+use fedeff::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let cfg = args.get(1).map(|s| s.as_str()).unwrap_or("lm_small").to_string();
+    let sparsity: f32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    let rt = Rc::new(Runtime::from_default_manifest()?);
+    let prof = rt.manifest().lm_configs[&cfg].clone();
+    let layout = rt.manifest().layout(&cfg)?.clone();
+    let calib_layout = rt.manifest().calib_layouts[&cfg].clone();
+
+    // model: prefer the e2e-trained checkpoint; otherwise random init
+    let path = format!("results/cache/e2e_{cfg}.f32");
+    let theta: Vec<f32> = match std::fs::read(&path) {
+        Ok(bytes) if bytes.len() == prof.n_params * 4 => {
+            println!("loaded {path}");
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+        }
+        _ => {
+            println!("no checkpoint at {path}; run `train_transformer` first. Using random init.");
+            let mut rng = fedeff::rng(1);
+            fedeff::manifest::init_flat(&layout, &mut rng)
+        }
+    };
+
+    let mut rng = fedeff::rng(11);
+    let data = fed_token_dataset(4, 8, 32, prof.seq_len, &mut rng);
+    let oracle = HloLm::new(rt.clone(), &cfg, data)?;
+
+    println!("calibrating activation norms over held-out batches...");
+    let calib = oracle.calibrate(&theta, 2)?;
+    let dense_ppl = oracle.eval_perplexity(&theta)?;
+
+    let mut table = Table::new(
+        format!("prune_llm: {cfg} at {:.0}% sparsity (dense ppl {dense_ppl:.3})", sparsity * 100.0),
+        &["method", "ppl", "ppl + R2-DSnoT"],
+    );
+    for (name, m) in [
+        ("magnitude", Method::Magnitude),
+        ("wanda", Method::Wanda),
+        ("RIA", Method::Ria { alpha: 1.0, p: 0.5 }),
+        ("symwanda a=0.5", Method::SymWanda { alpha: 0.5 }),
+    ] {
+        let mut th = theta.clone();
+        let (zeroed, total) =
+            prune_model(&layout, &calib_layout, &mut th, &calib, m, sparsity, Scope::PerRow);
+        let ppl = oracle.eval_perplexity(&th)?;
+        let mut th_ft = th.clone();
+        finetune_model(&layout, &calib_layout, &mut th_ft, &theta, &calib, &DsnotConfig::default());
+        let ppl_ft = oracle.eval_perplexity(&th_ft)?;
+        println!("  {name}: zeroed {zeroed}/{total} prunable params");
+        table.row(vec![name.into(), format!("{ppl:.3}"), format!("{ppl_ft:.3}")]);
+    }
+    println!("{}", table.render());
+    table.write_csv("results", "prune_llm")?;
+    Ok(())
+}

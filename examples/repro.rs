@@ -1,0 +1,34 @@
+//! Regenerate paper tables/figures: thin wrapper over `fedeff repro`.
+//!
+//! ```bash
+//! cargo run --release --example repro -- fig2_2 --fast
+//! cargo run --release --example repro -- all --fast
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let ids: Vec<String> = args.into_iter().filter(|a| !a.starts_with("--")).collect();
+    let ids: Vec<String> = if ids.is_empty() || ids[0] == "all" {
+        fedeff::repro::EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        ids
+    };
+    let outdir = PathBuf::from("results");
+    for id in &ids {
+        eprintln!("=== {id} (fast={fast}) ===");
+        match fedeff::repro::run(id, fast, &outdir) {
+            Ok(tables) => {
+                for t in tables {
+                    println!("{}", t.render());
+                }
+            }
+            Err(e) => eprintln!("{id} failed: {e:#}"),
+        }
+    }
+    Ok(())
+}

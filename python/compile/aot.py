@@ -1,0 +1,274 @@
+"""AOT export: lower every L2 entry point to HLO text + emit manifest.json.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the HLO
+text with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client and executes it on the request path. Python never runs at serve
+time.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, for every artifact, the input/output shapes; and for
+every model, the flat-parameter layout (name/shape/offset/init_scale) plus
+the calibration-vector layout — everything the Rust side needs to
+initialize, slice, prune and aggregate parameters without ever importing
+Python.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only PAT] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# --------------------------------------------------------------------------
+# Profiles (the dissertation's workloads; see DESIGN.md §Substitutions)
+# --------------------------------------------------------------------------
+
+# LibSVM dataset profiles: (d, per-client shard rows m, minibatch rows)
+LOGREG_PROFILES = {
+    "mushrooms": dict(d=112, m=256, mb=32),
+    "a6a": dict(d=123, m=256, mb=32),
+    "w6a": dict(d=300, m=256, mb=32),
+    "a9a": dict(d=123, m=256, mb=32),
+    "ijcnn1": dict(d=22, m=256, mb=32),
+}
+LOGREG_BATCH_N = 10  # cohort size for the batched all-clients artifact
+
+# MLP profiles: substitution architectures for the paper's image datasets.
+MLP_PROFILES = {
+    "femnist": dict(sizes=[784, 128, 64, 62], batch=64, eval_batch=256),
+    "emnistl": dict(sizes=[784, 200, 100, 10], batch=64, eval_batch=256),
+    "fashion": dict(sizes=[784, 128, 128, 64, 10], batch=64, eval_batch=256),
+    "cifar10": dict(sizes=[1024, 256, 128, 64, 10], batch=64, eval_batch=256),
+    "cifar100": dict(sizes=[1024, 256, 128, 64, 100], batch=64, eval_batch=256),
+}
+
+LM_CONFIGS = {
+    "lm_tiny": dict(cfg=M.LmConfig(vocab=96, n_layers=2, d_model=64, n_heads=4,
+                                   d_ff=128, seq_len=64), batch=8, eval_batch=16),
+    "lm_small": dict(cfg=M.LmConfig(vocab=96, n_layers=4, d_model=128, n_heads=4,
+                                    d_ff=384, seq_len=128), batch=8, eval_batch=16),
+    "lm_base": dict(cfg=M.LmConfig(vocab=96, n_layers=6, d_model=256, n_heads=8,
+                                   d_ff=1024, seq_len=128), batch=8, eval_batch=16),
+}
+# Shapes for which the L1 wanda/ria score kernels are AOT-compiled (the
+# distinct linear shapes of the default pruning model, lm_small).
+WANDA_SHAPES_FROM = "lm_small"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# Export registry
+# --------------------------------------------------------------------------
+
+
+def build_exports():
+    """Returns {artifact_name: (fn, example_args, io_doc)}."""
+    exports = {}
+
+    # ---- logistic regression -------------------------------------------
+    for prof, pc in LOGREG_PROFILES.items():
+        d, m, mb = pc["d"], pc["m"], pc["mb"]
+
+        def lr(X, y, w, mu):
+            return M.logreg_loss_grad(X, y, w, mu[0], use_kernel=True)
+
+        def lr_ref(X, y, w, mu):
+            return M.logreg_loss_grad(X, y, w, mu[0], use_kernel=False)
+
+        exports[f"logreg_grad_{prof}"] = (
+            lr, (spec(m, d), spec(m), spec(d), spec(1)),
+            dict(inputs=[["X", [m, d]], ["y", [m]], ["w", [d]], ["mu", [1]]],
+                 outputs=[["loss", []], ["grad", [d]]]))
+        exports[f"logreg_grad_mb_{prof}"] = (
+            lr_ref, (spec(mb, d), spec(mb), spec(d), spec(1)),
+            dict(inputs=[["X", [mb, d]], ["y", [mb]], ["w", [d]], ["mu", [1]]],
+                 outputs=[["loss", []], ["grad", [d]]]))
+
+        n = LOGREG_BATCH_N
+
+        def lr_batch(Xs, ys, Ws, mu):
+            return M.logreg_batch_loss_grad(Xs, ys, Ws, mu[0])
+
+        exports[f"logreg_batch_grad_{prof}"] = (
+            lr_batch, (spec(n, m, d), spec(n, m), spec(n, d), spec(1)),
+            dict(inputs=[["Xs", [n, m, d]], ["ys", [n, m]], ["Ws", [n, d]], ["mu", [1]]],
+                 outputs=[["loss", [n]], ["grad", [n, d]]]))
+
+    # ---- MLP classifiers -------------------------------------------------
+    for prof, pc in MLP_PROFILES.items():
+        sizes, b, eb = pc["sizes"], pc["batch"], pc["eval_batch"]
+        layout = M.mlp_layout(sizes)
+        din = sizes[0]
+
+        def mg(theta, X, y, l2, layout=layout, sizes=sizes):
+            return M.mlp_loss_grad(layout, sizes, theta, X, y, l2[0])
+
+        def me(theta, X, y, layout=layout, sizes=sizes):
+            return M.mlp_eval(layout, sizes, theta, X, y)
+
+        exports[f"mlp_grad_{prof}"] = (
+            mg, (spec(layout.total), spec(b, din), spec(b), spec(1)),
+            dict(inputs=[["theta", [layout.total]], ["X", [b, din]], ["y", [b]], ["l2", [1]]],
+                 outputs=[["loss", []], ["grad", [layout.total]]]))
+        exports[f"mlp_eval_{prof}"] = (
+            me, (spec(layout.total), spec(eb, din), spec(eb)),
+            dict(inputs=[["theta", [layout.total]], ["X", [eb, din]], ["y", [eb]]],
+                 outputs=[["correct", []]]))
+
+    # ---- transformer LM --------------------------------------------------
+    for name, lc in LM_CONFIGS.items():
+        cfg, b, eb = lc["cfg"], lc["batch"], lc["eval_batch"]
+        layout = M.lm_layout(cfg)
+        S = cfg.seq_len
+        _, _, calib_total = M.lm_calib_layout(cfg, layout)
+
+        def lg(theta, toks, cfg=cfg, layout=layout):
+            return M.lm_loss_grad(cfg, layout, theta, toks)
+
+        def le(theta, toks, cfg=cfg, layout=layout):
+            return M.lm_eval_nll(cfg, layout, theta, toks)
+
+        def lcal(theta, toks, cfg=cfg, layout=layout):
+            return M.lm_calib(cfg, layout, theta, toks)
+
+        exports[f"lm_grad_{name}"] = (
+            lg, (spec(layout.total), spec(b, S)),
+            dict(inputs=[["theta", [layout.total]], ["tokens", [b, S]]],
+                 outputs=[["loss", []], ["grad", [layout.total]]]))
+        exports[f"lm_eval_{name}"] = (
+            le, (spec(layout.total), spec(eb, S)),
+            dict(inputs=[["theta", [layout.total]], ["tokens", [eb, S]]],
+                 outputs=[["nll_sum", []]]))
+        exports[f"lm_calib_{name}"] = (
+            lcal, (spec(layout.total), spec(eb, S)),
+            dict(inputs=[["theta", [layout.total]], ["tokens", [eb, S]]],
+                 outputs=[["calib", [calib_total]]]))
+
+    # ---- Pallas pruning-score kernels ------------------------------------
+    from .kernels import wanda as wk
+
+    cfg = LM_CONFIGS[WANDA_SHAPES_FROM]["cfg"]
+    layout = M.lm_layout(cfg)
+    shapes = sorted({e.shape for e in layout.entries if e.kind == "linear"})
+    for (o, i) in shapes:
+        def sw(W, ain, aout, alpha):
+            return wk.symwanda_score(W, ain, aout, alpha[0])
+
+        def ria(W, ain, aout, alpha, p):
+            return wk.ria_score(W, ain, aout, alpha[0], p[0])
+
+        exports[f"wanda_score_{o}x{i}"] = (
+            sw, (spec(o, i), spec(i), spec(o), spec(1)),
+            dict(inputs=[["W", [o, i]], ["ain", [i]], ["aout", [o]], ["alpha", [1]]],
+                 outputs=[["score", [o, i]]]))
+        exports[f"ria_score_{o}x{i}"] = (
+            ria, (spec(o, i), spec(i), spec(o), spec(1), spec(1)),
+            dict(inputs=[["W", [o, i]], ["ain", [i]], ["aout", [o]], ["alpha", [1]], ["p", [1]]],
+                 outputs=[["score", [o, i]]]))
+
+    return exports
+
+
+def build_manifest():
+    layouts = {}
+    calib_layouts = {}
+    lm_configs = {}
+    for prof, pc in MLP_PROFILES.items():
+        layouts[f"mlp_{prof}"] = M.mlp_layout(pc["sizes"]).to_json()
+    for name, lc in LM_CONFIGS.items():
+        cfg = lc["cfg"]
+        layout = M.lm_layout(cfg)
+        layouts[name] = layout.to_json()
+        _, centries, ctotal = M.lm_calib_layout(cfg, layout)
+        calib_layouts[name] = dict(entries=centries, total=ctotal)
+        lm_configs[name] = dict(vocab=cfg.vocab, n_layers=cfg.n_layers,
+                                d_model=cfg.d_model, n_heads=cfg.n_heads,
+                                d_ff=cfg.d_ff, seq_len=cfg.seq_len,
+                                batch=lc["batch"], eval_batch=lc["eval_batch"],
+                                n_params=layout.total)
+    return dict(
+        version=1,
+        logreg_profiles=LOGREG_PROFILES,
+        logreg_batch_n=LOGREG_BATCH_N,
+        mlp_profiles=MLP_PROFILES,
+        lm_configs=lm_configs,
+        layouts=layouts,
+        calib_layouts=calib_layouts,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    exports = build_exports()
+    if args.list:
+        for k in exports:
+            print(k)
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    src_mtime = max(
+        os.path.getmtime(p)
+        for p in [__file__, M.__file__,
+                  os.path.join(os.path.dirname(__file__), "kernels", "logreg.py"),
+                  os.path.join(os.path.dirname(__file__), "kernels", "wanda.py"),
+                  os.path.join(os.path.dirname(__file__), "kernels", "ref.py")]
+    )
+
+    manifest = build_manifest()
+    manifest["artifacts"] = {}
+    n_built = n_skipped = 0
+    for name, (fn, eargs, io) in exports.items():
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        manifest["artifacts"][name] = dict(file=f"{name}.hlo.txt", **io)
+        if not args.force and os.path.exists(path) and os.path.getmtime(path) > src_mtime:
+            n_skipped += 1
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*eargs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"[aot] {name}: {len(text)} chars in {time.time()-t0:.1f}s", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] built={n_built} skipped={n_skipped} -> {args.out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written in straightforward jax.numpy. pytest (python/tests/) asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes and dtypes. The oracles are also what the L2 model falls back to
+when a kernel is not applicable (e.g. shapes below the block size).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logreg_loss_grad_ref(X, y, w, mu):
+    """l2-regularized logistic loss and gradient.
+
+    f(w) = mean_j log(1 + exp(-y_j <x_j, w>)) + mu/2 ||w||^2
+
+    Args:
+      X: [m, d] feature matrix.
+      y: [m] labels in {-1, +1}.
+      w: [d] parameter vector.
+      mu: scalar l2 regularization strength.
+
+    Returns:
+      (loss: scalar, grad: [d])
+    """
+    m = X.shape[0]
+    margins = X @ w * y  # [m]
+    # log(1+exp(-t)) computed stably as logaddexp(0, -t)
+    loss = jnp.mean(jnp.logaddexp(0.0, -margins)) + 0.5 * mu * jnp.sum(w * w)
+    # d/dt log(1+exp(-t)) = -sigmoid(-t)
+    coeff = -jax.nn.sigmoid(-margins) * y  # [m]
+    grad = X.T @ coeff / m + mu * w
+    return loss, grad
+
+
+def wanda_score_ref(W, act_in, act_out, alpha):
+    """Symmetric Wanda (SymWanda) pruning score (Ch. 6).
+
+    score_ij = alpha * |W_ij| * a_in_j + (1 - alpha) * |W_ij| * a_out_i
+
+    alpha=1 recovers Wanda (input-activation weighting only); alpha=0
+    weighs only the output side. a_in are the per-input-feature activation
+    l2 norms over a calibration set; a_out the per-output norms.
+
+    Args:
+      W: [o, i] weight matrix.
+      act_in: [i] input activation norms.
+      act_out: [o] output activation norms.
+      alpha: scalar blend in [0, 1].
+
+    Returns:
+      score: [o, i]
+    """
+    aw = jnp.abs(W)
+    return alpha * aw * act_in[None, :] + (1.0 - alpha) * aw * act_out[:, None]
+
+
+def ria_score_ref(W, act_in, act_out, alpha, p=0.5):
+    """Relative Importance & Activations score (RIA, Zhang et al. 2024).
+
+    RI_ij = |W_ij| / sum_col(|W|)_j + |W_ij| / sum_row(|W|)_i
+    RIA_ij = RI_ij * (a_in_j)^p    (activation-aware re-weighting)
+
+    The symmetric extension blends the output norms with the same exponent,
+    mirroring wanda_score_ref's alpha blend.
+    """
+    aw = jnp.abs(W)
+    row = jnp.sum(aw, axis=1, keepdims=True)  # [o, 1]
+    col = jnp.sum(aw, axis=0, keepdims=True)  # [1, i]
+    ri = aw / jnp.where(col == 0, 1.0, col) + aw / jnp.where(row == 0, 1.0, row)
+    win = act_in[None, :] ** p
+    wout = act_out[:, None] ** p
+    return ri * (alpha * win + (1.0 - alpha) * wout)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: SymWanda / RIA pruning-score computation (Ch. 6).
+
+score(W)_ij = alpha * |W_ij| * a_in_j + (1 - alpha) * |W_ij| * a_out_i
+  (SymWanda; alpha=1 recovers Wanda, alpha=0 the pure output-side variant)
+
+ria(W)_ij = (|W_ij|/colsum_j + |W_ij|/rowsum_i) * (alpha*a_in_j^p + (1-alpha)*a_out_i^p)
+
+The RIA row/column sums are computed by XLA outside the kernel (cheap
+reductions); the kernel consumes them as [o] / [i] vectors so each weight
+tile is read exactly once. Grid is 2D over (o, i) tiles; every tile is an
+independent elementwise job — the kernel is trivially parallel and
+bandwidth-bound, the right shape for VPU work (no MXU involvement).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _symwanda_kernel(w_ref, ain_ref, aout_ref, alpha_ref, score_ref):
+    w = w_ref[...]               # [bo, bi]
+    ain = ain_ref[...]           # [bi]
+    aout = aout_ref[...]         # [bo]
+    alpha = alpha_ref[0]
+    aw = jnp.abs(w)
+    score_ref[...] = alpha * aw * ain[None, :] + (1.0 - alpha) * aw * aout[:, None]
+
+
+def _ria_kernel(w_ref, ain_ref, aout_ref, rows_ref, cols_ref, alpha_ref, p_ref, score_ref):
+    w = w_ref[...]
+    ain = ain_ref[...]
+    aout = aout_ref[...]
+    rows = rows_ref[...]         # [bo] row |W| sums
+    cols = cols_ref[...]         # [bi] col |W| sums
+    alpha = alpha_ref[0]
+    p = p_ref[0]
+    aw = jnp.abs(w)
+    ri = aw / jnp.where(cols == 0.0, 1.0, cols)[None, :] + aw / jnp.where(
+        rows == 0.0, 1.0, rows
+    )[:, None]
+    act = alpha * (ain[None, :] ** p) + (1.0 - alpha) * (aout[:, None] ** p)
+    score_ref[...] = ri * act
+
+
+def _pad_to(x, n, axis=0):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+def symwanda_score(W, act_in, act_out, alpha, *, block: int = DEFAULT_BLOCK):
+    """SymWanda score via the Pallas kernel; matches ref.wanda_score_ref."""
+    o, i = W.shape
+    op = ((o + block - 1) // block) * block
+    ip = ((i + block - 1) // block) * block
+    Wp = _pad_to(_pad_to(W, op, 0), ip, 1)
+    ainp = _pad_to(act_in, ip)
+    aoutp = _pad_to(act_out, op)
+    alpha_v = jnp.asarray([alpha], jnp.float32)
+
+    grid = (op // block, ip // block)
+    score = pl.pallas_call(
+        _symwanda_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda a, b: (a, b)),
+            pl.BlockSpec((block,), lambda a, b: (b,)),
+            pl.BlockSpec((block,), lambda a, b: (a,)),
+            pl.BlockSpec((1,), lambda a, b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda a, b: (a, b)),
+        out_shape=jax.ShapeDtypeStruct((op, ip), jnp.float32),
+        interpret=True,
+    )(Wp, ainp, aoutp, alpha_v)
+    return score[:o, :i]
+
+
+def ria_score(W, act_in, act_out, alpha, p=0.5, *, block: int = DEFAULT_BLOCK):
+    """RIA score via the Pallas kernel; matches ref.ria_score_ref."""
+    o, i = W.shape
+    op = ((o + block - 1) // block) * block
+    ip = ((i + block - 1) // block) * block
+    aw = jnp.abs(W)
+    rows = jnp.sum(aw, axis=1)  # [o]
+    cols = jnp.sum(aw, axis=0)  # [i]
+    Wp = _pad_to(_pad_to(W, op, 0), ip, 1)
+    grid = (op // block, ip // block)
+    score = pl.pallas_call(
+        _ria_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda a, b: (a, b)),
+            pl.BlockSpec((block,), lambda a, b: (b,)),
+            pl.BlockSpec((block,), lambda a, b: (a,)),
+            pl.BlockSpec((block,), lambda a, b: (a,)),
+            pl.BlockSpec((block,), lambda a, b: (b,)),
+            pl.BlockSpec((1,), lambda a, b: (0,)),
+            pl.BlockSpec((1,), lambda a, b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda a, b: (a, b)),
+        out_shape=jax.ShapeDtypeStruct((op, ip), jnp.float32),
+        interpret=True,
+    )(
+        Wp,
+        _pad_to(act_in, ip),
+        _pad_to(act_out, op),
+        _pad_to(rows, op),
+        _pad_to(cols, ip),
+        jnp.asarray([alpha], jnp.float32),
+        jnp.asarray([p], jnp.float32),
+    )
+    return score[:o, :i]

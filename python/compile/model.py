@@ -1,0 +1,313 @@
+"""L2: the paper's compute graphs in JAX, AOT-lowered for the Rust runtime.
+
+Three model families, matching the dissertation's experimental workloads:
+
+  * logistic regression (chapters 2, 3, 5) — loss/grad through the L1
+    Pallas kernel (kernels/logreg.py);
+  * MLP classifiers (chapters 3, 4) — the FEMNIST / CIFAR / EMNIST-L
+    substitution profiles, fwd/bwd/eval;
+  * decoder-only transformer LM (chapter 6 + the e2e federated
+    pretraining example) — fwd/bwd, NLL eval, and the Wanda calibration
+    pass that returns per-layer input/output activation norms.
+
+Every entry point takes a FLAT float32 parameter vector. The layout
+(name/shape/offset per tensor) is emitted into artifacts/manifest.json by
+aot.py so the Rust coordinator can treat the model as x in R^d — the exact
+object every algorithm in the paper manipulates — while still doing
+layer-aware operations (FedP3 layer selection, per-matrix pruning).
+
+Integer inputs (labels, tokens) are passed as float32 and cast inside, so
+the Rust runtime only ever marshals f32 buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logreg as logreg_kernel
+from .kernels import ref as kref
+
+# --------------------------------------------------------------------------
+# Flat-parameter layout machinery
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Entry:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    kind: str  # "linear" | "bias" | "ln" | "embedding"
+    init_scale: float
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+class Layout:
+    """Describes how a list of named tensors packs into one flat vector."""
+
+    def __init__(self, specs: List[Tuple[str, Tuple[int, ...], str, float]]):
+        self.entries: List[Entry] = []
+        off = 0
+        for name, shape, kind, scale in specs:
+            e = Entry(name, tuple(shape), off, kind, scale)
+            self.entries.append(e)
+            off += e.size
+        self.total = off
+        self.by_name: Dict[str, Entry] = {e.name: e for e in self.entries}
+
+    def unflatten(self, theta) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for e in self.entries:
+            out[e.name] = jax.lax.dynamic_slice(theta, (e.offset,), (e.size,)).reshape(e.shape)
+        return out
+
+    def to_json(self) -> list:
+        return [
+            dict(name=e.name, shape=list(e.shape), offset=e.offset, size=e.size,
+                 kind=e.kind, init_scale=e.init_scale)
+            for e in self.entries
+        ]
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (chapters 2, 3, 5)
+# --------------------------------------------------------------------------
+
+
+def logreg_loss_grad(X, y, w, mu, use_kernel: bool = True):
+    """(loss, grad) for l2-regularized logistic regression.
+
+    The hot path goes through the L1 Pallas kernel; ref path kept for the
+    vmapped batched-clients artifact (vmap over interpret-mode pallas_call
+    is avoided for lowering robustness — numerics are identical, asserted
+    by pytest).
+    """
+    if use_kernel:
+        return logreg_kernel.logreg_loss_grad(X, y, w, mu)
+    return kref.logreg_loss_grad_ref(X, y, w, mu)
+
+
+def logreg_batch_loss_grad(Xs, ys, Ws, mu):
+    """All-clients batched oracle: Xs [n,m,d], ys [n,m], Ws [n,d].
+
+    One PJRT dispatch per round instead of one per client (the L2 perf
+    optimization recorded in DESIGN.md §Perf).
+    """
+    def one(X, y, w):
+        return kref.logreg_loss_grad_ref(X, y, w, mu)
+
+    return jax.vmap(one)(Xs, ys, Ws)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (chapters 3, 4)
+# --------------------------------------------------------------------------
+
+
+def mlp_layout(sizes: List[int]) -> Layout:
+    """sizes = [d_in, h1, ..., classes]."""
+    specs = []
+    for i in range(len(sizes) - 1):
+        fan_in, fan_out = sizes[i], sizes[i + 1]
+        scale = (2.0 / fan_in) ** 0.5
+        specs.append((f"fc{i}.w", (fan_out, fan_in), "linear", scale))
+        specs.append((f"fc{i}.b", (fan_out,), "bias", 0.0))
+    return Layout(specs)
+
+
+def mlp_logits(layout: Layout, sizes: List[int], theta, X):
+    p = layout.unflatten(theta)
+    h = X
+    n_layers = len(sizes) - 1
+    for i in range(n_layers):
+        h = h @ p[f"fc{i}.w"].T + p[f"fc{i}.b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(layout: Layout, sizes: List[int], theta, X, y_f32, l2: float):
+    y = y_f32.astype(jnp.int32)
+    logits = mlp_logits(layout, sizes, theta, X)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    return nll + 0.5 * l2 * jnp.sum(theta * theta)
+
+
+def mlp_loss_grad(layout: Layout, sizes: List[int], theta, X, y_f32, l2: float):
+    return jax.value_and_grad(lambda t: mlp_loss(layout, sizes, t, X, y_f32, l2))(theta)
+
+
+def mlp_eval(layout: Layout, sizes: List[int], theta, X, y_f32):
+    """Returns the number of correct predictions as a float32 scalar."""
+    y = y_f32.astype(jnp.int32)
+    logits = mlp_logits(layout, sizes, theta, X)
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (chapter 6 + e2e pretraining)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 96
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    seq_len: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def lm_layout(cfg: LmConfig) -> Layout:
+    D, F, V, S = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs = [
+        ("tok_emb", (V, D), "embedding", 0.02),
+        ("pos_emb", (S, D), "embedding", 0.02),
+    ]
+    attn_scale = (1.0 / D) ** 0.5
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"blk{l}.ln1.g", (D,), "ln", 1.0),
+            (f"blk{l}.ln1.b", (D,), "ln", 0.0),
+            (f"blk{l}.wq", (D, D), "linear", attn_scale),
+            (f"blk{l}.wk", (D, D), "linear", attn_scale),
+            (f"blk{l}.wv", (D, D), "linear", attn_scale),
+            (f"blk{l}.wo", (D, D), "linear", attn_scale / (2 * cfg.n_layers) ** 0.5),
+            (f"blk{l}.ln2.g", (D,), "ln", 1.0),
+            (f"blk{l}.ln2.b", (D,), "ln", 0.0),
+            (f"blk{l}.w1", (F, D), "linear", (2.0 / D) ** 0.5),
+            (f"blk{l}.w2", (D, F), "linear", (2.0 / F) ** 0.5 / (2 * cfg.n_layers) ** 0.5),
+        ]
+    specs += [
+        ("lnf.g", (D,), "ln", 1.0),
+        ("lnf.b", (D,), "ln", 0.0),
+        ("head", (V, D), "linear", attn_scale),
+    ]
+    return Layout(specs)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def lm_forward(cfg: LmConfig, layout: Layout, theta, tokens_f32, collect_acts: bool = False):
+    """Causal LM forward. tokens [B, S] float32 (cast to int inside).
+
+    Returns logits [B, S, V]; if collect_acts, also a dict mapping each
+    linear's name to (in_sq_sum [i], out_sq_sum [o]) — the squared-l2
+    activation sums that the Wanda/RIA/SymWanda calibration needs.
+    """
+    p = layout.unflatten(theta)
+    B, S = tokens_f32.shape
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    t = tokens_f32.astype(jnp.int32)
+    x = p["tok_emb"][t] + p["pos_emb"][None, :S, :]
+
+    acts: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    def lin(name, inp, W):
+        out = inp @ W.T
+        if collect_acts:
+            flat_in = inp.reshape(-1, inp.shape[-1])
+            flat_out = out.reshape(-1, out.shape[-1])
+            acts[name] = (jnp.sum(flat_in * flat_in, axis=0), jnp.sum(flat_out * flat_out, axis=0))
+        return out
+
+    causal = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    for l in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"blk{l}.ln1.g"], p[f"blk{l}.ln1.b"])
+        q = lin(f"blk{l}.wq", h, p[f"blk{l}.wq"]).reshape(B, S, H, Dh)
+        k = lin(f"blk{l}.wk", h, p[f"blk{l}.wk"]).reshape(B, S, H, Dh)
+        v = lin(f"blk{l}.wv", h, p[f"blk{l}.wv"]).reshape(B, S, H, Dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (Dh ** 0.5)
+        att = jnp.where(causal[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, D)
+        x = x + lin(f"blk{l}.wo", o, p[f"blk{l}.wo"])
+        h2 = _layer_norm(x, p[f"blk{l}.ln2.g"], p[f"blk{l}.ln2.b"])
+        ff = jax.nn.gelu(lin(f"blk{l}.w1", h2, p[f"blk{l}.w1"]))
+        x = x + lin(f"blk{l}.w2", ff, p[f"blk{l}.w2"])
+
+    x = _layer_norm(x, p["lnf.g"], p["lnf.b"])
+    logits = lin("head", x, p["head"])
+    if collect_acts:
+        return logits, acts
+    return logits
+
+
+def lm_loss(cfg: LmConfig, layout: Layout, theta, tokens_f32):
+    """Mean next-token NLL over [B, S-1] positions."""
+    logits = lm_forward(cfg, layout, theta, tokens_f32)
+    t = tokens_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = t[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def lm_loss_grad(cfg: LmConfig, layout: Layout, theta, tokens_f32):
+    return jax.value_and_grad(lambda th: lm_loss(cfg, layout, th, tokens_f32))(theta)
+
+
+def lm_eval_nll(cfg: LmConfig, layout: Layout, theta, tokens_f32):
+    """Summed NLL over the batch (Rust divides by token count, exps for ppl)."""
+    logits = lm_forward(cfg, layout, theta, tokens_f32)
+    t = tokens_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = t[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.sum(nll)
+
+
+def lm_calib_layout(cfg: LmConfig, layout: Layout):
+    """Layout of the calibration vector: per prunable linear, the input
+    squared-activation sums [i] then the output sums [o], concatenated in
+    layout order. Returns (names, json_entries, total_len)."""
+    entries = []
+    off = 0
+    names = []
+    for e in layout.entries:
+        if e.kind != "linear":
+            continue
+        o, i = e.shape
+        entries.append(dict(name=e.name, in_offset=off, in_size=i,
+                            out_offset=off + i, out_size=o))
+        names.append(e.name)
+        off += i + o
+    return names, entries, off
+
+
+def lm_calib(cfg: LmConfig, layout: Layout, theta, tokens_f32):
+    """Returns the flat calibration vector of squared activation sums.
+
+    Rust accumulates these over calibration batches and takes sqrt to get
+    the l2 norms Wanda/RIA consume.
+    """
+    _, acts = lm_forward(cfg, layout, theta, tokens_f32, collect_acts=True)
+    names, _, total = lm_calib_layout(cfg, layout)
+    parts = []
+    for n in names:
+        a_in, a_out = acts[n]
+        parts += [a_in, a_out]
+    vec = jnp.concatenate(parts)
+    assert vec.shape == (total,)
+    return vec

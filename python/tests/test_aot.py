@@ -1,0 +1,72 @@
+"""AOT export sanity: the manifest and HLO artifacts agree with the models."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_export_registry_builds():
+    exports = aot.build_exports()
+    # one grad + one minibatch grad + one batched grad per logreg profile
+    for prof in aot.LOGREG_PROFILES:
+        assert f"logreg_grad_{prof}" in exports
+        assert f"logreg_grad_mb_{prof}" in exports
+        assert f"logreg_batch_grad_{prof}" in exports
+    for prof in aot.MLP_PROFILES:
+        assert f"mlp_grad_{prof}" in exports
+        assert f"mlp_eval_{prof}" in exports
+    for name in aot.LM_CONFIGS:
+        for kind in ("lm_grad", "lm_eval", "lm_calib"):
+            assert f"{kind}_{name}" in exports
+
+
+def test_manifest_layout_sizes_match_models():
+    man = aot.build_manifest()
+    for prof, pc in aot.MLP_PROFILES.items():
+        layout = M.mlp_layout(pc["sizes"])
+        entries = man["layouts"][f"mlp_{prof}"]
+        assert sum(e["size"] for e in entries) == layout.total
+    for name, lc in aot.LM_CONFIGS.items():
+        layout = M.lm_layout(lc["cfg"])
+        assert man["lm_configs"][name]["n_params"] == layout.total
+        assert sum(e["size"] for e in man["layouts"][name]) == layout.total
+
+
+def test_manifest_calib_layouts_consistent():
+    man = aot.build_manifest()
+    for name, lc in aot.LM_CONFIGS.items():
+        cfg = lc["cfg"]
+        layout = M.lm_layout(cfg)
+        _, entries, total = M.lm_calib_layout(cfg, layout)
+        assert man["calib_layouts"][name]["total"] == total
+        assert man["calib_layouts"][name]["entries"] == entries
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_artifacts_exist_and_parse():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, meta in man["artifacts"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_entry_point_shapes():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    a = man["artifacts"]["logreg_grad_mushrooms"]
+    d = man["logreg_profiles"]["mushrooms"]["d"]
+    m = man["logreg_profiles"]["mushrooms"]["m"]
+    assert a["inputs"][0] == ["X", [m, d]]
+    assert a["outputs"][1] == ["grad", [d]]

@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/values; this is the CORE correctness signal for
+the compute layer — if these pass, the HLO artifacts the Rust runtime
+executes are numerically the reference math.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logreg, ref, wanda
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    d=st.integers(1, 64),
+    mu=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logreg_kernel_matches_ref(m, d, mu, seed):
+    r = _rng(seed)
+    X = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=m), jnp.float32)
+    w = jnp.asarray(r.normal(size=d), jnp.float32)
+    l_k, g_k = logreg.logreg_loss_grad(X, y, w, mu)
+    l_r, g_r = ref.logreg_loss_grad_ref(X, y, w, mu)
+    np.testing.assert_allclose(l_k, l_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(g_k, g_r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_m", [32, 128, 256])
+def test_logreg_kernel_block_size_invariance(block_m):
+    r = _rng(7)
+    X = jnp.asarray(r.normal(size=(200, 40)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=200), jnp.float32)
+    w = jnp.asarray(r.normal(size=40), jnp.float32)
+    l_k, g_k = logreg.logreg_loss_grad(X, y, w, 0.1, block_m=block_m)
+    l_r, g_r = ref.logreg_loss_grad_ref(X, y, w, 0.1)
+    np.testing.assert_allclose(l_k, l_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(g_k, g_r, rtol=RTOL, atol=ATOL)
+
+
+def test_logreg_kernel_extreme_margins_stable():
+    # Large |margins| must not overflow (stable softplus).
+    r = _rng(3)
+    X = jnp.asarray(r.normal(size=(64, 8)) * 100.0, jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=64), jnp.float32)
+    w = jnp.asarray(r.normal(size=8) * 100.0, jnp.float32)
+    l_k, g_k = logreg.logreg_loss_grad(X, y, w, 0.0)
+    assert np.isfinite(float(l_k))
+    assert np.all(np.isfinite(np.asarray(g_k)))
+
+
+def test_logreg_grad_matches_finite_differences():
+    r = _rng(11)
+    X = jnp.asarray(r.normal(size=(50, 6)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=50), jnp.float32)
+    w = np.asarray(r.normal(size=6), np.float32)
+    _, g = logreg.logreg_loss_grad(X, y, jnp.asarray(w), 0.05)
+    eps = 1e-3
+    for j in range(6):
+        wp, wm = w.copy(), w.copy()
+        wp[j] += eps
+        wm[j] -= eps
+        lp, _ = ref.logreg_loss_grad_ref(X, y, jnp.asarray(wp), 0.05)
+        lm, _ = ref.logreg_loss_grad_ref(X, y, jnp.asarray(wm), 0.05)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        np.testing.assert_allclose(float(g[j]), fd, rtol=2e-2, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    o=st.integers(1, 200),
+    i=st.integers(1, 200),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_symwanda_kernel_matches_ref(o, i, alpha, seed):
+    r = _rng(seed)
+    W = jnp.asarray(r.normal(size=(o, i)), jnp.float32)
+    ain = jnp.asarray(np.abs(r.normal(size=i)), jnp.float32)
+    aout = jnp.asarray(np.abs(r.normal(size=o)), jnp.float32)
+    s_k = wanda.symwanda_score(W, ain, aout, alpha)
+    s_r = ref.wanda_score_ref(W, ain, aout, alpha)
+    np.testing.assert_allclose(s_k, s_r, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    o=st.integers(1, 150),
+    i=st.integers(1, 150),
+    alpha=st.floats(0.0, 1.0),
+    p=st.floats(0.1, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ria_kernel_matches_ref(o, i, alpha, p, seed):
+    r = _rng(seed)
+    W = jnp.asarray(r.normal(size=(o, i)), jnp.float32)
+    ain = jnp.asarray(np.abs(r.normal(size=i)) + 0.01, jnp.float32)
+    aout = jnp.asarray(np.abs(r.normal(size=o)) + 0.01, jnp.float32)
+    s_k = wanda.ria_score(W, ain, aout, alpha, p)
+    s_r = ref.ria_score_ref(W, ain, aout, alpha, p)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-4, atol=1e-5)
+
+
+def test_wanda_alpha_one_is_input_only():
+    r = _rng(5)
+    W = jnp.asarray(r.normal(size=(30, 20)), jnp.float32)
+    ain = jnp.asarray(np.abs(r.normal(size=20)), jnp.float32)
+    aout = jnp.asarray(np.abs(r.normal(size=30)), jnp.float32)
+    s = wanda.symwanda_score(W, ain, aout, 1.0)
+    expected = jnp.abs(W) * ain[None, :]
+    np.testing.assert_allclose(s, expected, rtol=RTOL, atol=ATOL)
+
+
+def test_wanda_zero_weights_zero_score():
+    W = jnp.zeros((17, 9), jnp.float32)
+    ain = jnp.ones((9,), jnp.float32)
+    aout = jnp.ones((17,), jnp.float32)
+    s = wanda.symwanda_score(W, ain, aout, 0.5)
+    assert float(jnp.abs(s).max()) == 0.0

@@ -1,0 +1,210 @@
+"""L2 model correctness: shapes, gradients, layouts, calibration vectors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- layouts
+
+
+def test_mlp_layout_offsets_contiguous():
+    layout = M.mlp_layout([784, 128, 64, 62])
+    off = 0
+    for e in layout.entries:
+        assert e.offset == off
+        off += e.size
+    assert layout.total == off
+
+
+def test_mlp_layout_roundtrip():
+    layout = M.mlp_layout([20, 10, 5])
+    r = _rng(1)
+    theta = jnp.asarray(r.normal(size=layout.total), jnp.float32)
+    p = layout.unflatten(theta)
+    assert p["fc0.w"].shape == (10, 20)
+    assert p["fc1.b"].shape == (5,)
+    # concatenating back reproduces theta
+    flat = jnp.concatenate([p[e.name].ravel() for e in layout.entries])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(theta))
+
+
+def test_lm_layout_param_count():
+    cfg = M.LmConfig(vocab=96, n_layers=2, d_model=64, n_heads=4, d_ff=128, seq_len=64)
+    layout = M.lm_layout(cfg)
+    D, F, V, S, L = 64, 128, 96, 64, 2
+    expected = V * D + S * D + L * (4 * D + 4 * D * D + 2 * F * D) + 2 * D + V * D
+    assert layout.total == expected
+
+
+def test_lm_calib_layout_covers_all_linears():
+    cfg = M.LmConfig()
+    layout = M.lm_layout(cfg)
+    names, entries, total = M.lm_calib_layout(cfg, layout)
+    linears = [e for e in layout.entries if e.kind == "linear"]
+    assert len(entries) == len(linears)
+    assert total == sum(e.shape[0] + e.shape[1] for e in linears)
+    # offsets strictly increasing and non-overlapping
+    off = 0
+    for ce in entries:
+        assert ce["in_offset"] == off
+        assert ce["out_offset"] == off + ce["in_size"]
+        off += ce["in_size"] + ce["out_size"]
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def test_mlp_grad_matches_autodiff_finite_diff():
+    sizes = [12, 8, 4]
+    layout = M.mlp_layout(sizes)
+    r = _rng(2)
+    theta = np.asarray(r.normal(size=layout.total) * 0.3, np.float32)
+    X = jnp.asarray(r.normal(size=(10, 12)), jnp.float32)
+    y = jnp.asarray(r.integers(0, 4, size=10), jnp.float32)
+    _, g = M.mlp_loss_grad(layout, sizes, jnp.asarray(theta), X, y, 1e-3)
+    eps = 1e-2
+    for j in r.integers(0, layout.total, size=5):
+        tp, tm = theta.copy(), theta.copy()
+        tp[j] += eps
+        tm[j] -= eps
+        lp = M.mlp_loss(layout, sizes, jnp.asarray(tp), X, y, 1e-3)
+        lm = M.mlp_loss(layout, sizes, jnp.asarray(tm), X, y, 1e-3)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        np.testing.assert_allclose(float(g[j]), fd, rtol=5e-2, atol=5e-3)
+
+
+def test_mlp_eval_counts():
+    sizes = [5, 3]
+    layout = M.mlp_layout(sizes)
+    theta = jnp.zeros((layout.total,), jnp.float32)
+    # zero params -> logits all equal -> argmax = 0 for all rows
+    X = jnp.ones((7, 5), jnp.float32)
+    y = jnp.asarray([0, 0, 1, 2, 0, 1, 0], jnp.float32)
+    correct = float(M.mlp_eval(layout, sizes, theta, X, y))
+    assert correct == 4.0
+
+
+def test_mlp_loss_decreases_under_gd():
+    sizes = [10, 16, 3]
+    layout = M.mlp_layout(sizes)
+    r = _rng(3)
+    theta = jnp.asarray(r.normal(size=layout.total) * 0.1, jnp.float32)
+    X = jnp.asarray(r.normal(size=(64, 10)), jnp.float32)
+    y = jnp.asarray(r.integers(0, 3, size=64), jnp.float32)
+    l0, g = M.mlp_loss_grad(layout, sizes, theta, X, y, 0.0)
+    for _ in range(20):
+        l, g = M.mlp_loss_grad(layout, sizes, theta, X, y, 0.0)
+        theta = theta - 0.5 * g
+    l_end, _ = M.mlp_loss_grad(layout, sizes, theta, X, y, 0.0)
+    assert float(l_end) < float(l0)
+
+
+# ---------------------------------------------------------------- LM
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = M.LmConfig(vocab=32, n_layers=2, d_model=32, n_heads=2, d_ff=64, seq_len=16)
+    layout = M.lm_layout(cfg)
+    r = _rng(4)
+    theta = jnp.asarray(r.normal(size=layout.total) * 0.05, jnp.float32)
+    return cfg, layout, theta
+
+
+def test_lm_forward_shapes(tiny_lm):
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(5).integers(0, 32, size=(3, 16)), jnp.float32)
+    logits = M.lm_forward(cfg, layout, theta, toks)
+    assert logits.shape == (3, 16, 32)
+
+
+def test_lm_causality(tiny_lm):
+    """Changing a future token must not change past logits."""
+    cfg, layout, theta = tiny_lm
+    r = _rng(6)
+    toks = np.asarray(r.integers(0, 32, size=(1, 16)), np.float32)
+    logits_a = np.asarray(M.lm_forward(cfg, layout, theta, jnp.asarray(toks)))
+    toks_b = toks.copy()
+    toks_b[0, 10] = (toks_b[0, 10] + 1) % 32
+    logits_b = np.asarray(M.lm_forward(cfg, layout, theta, jnp.asarray(toks_b)))
+    np.testing.assert_allclose(logits_a[0, :10], logits_b[0, :10], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(logits_a[0, 10:], logits_b[0, 10:])
+
+
+def test_lm_loss_at_init_near_uniform(tiny_lm):
+    cfg, layout, _ = tiny_lm
+    theta = jnp.asarray(_rng(7).normal(size=layout.total) * 0.002, jnp.float32)
+    toks = jnp.asarray(_rng(8).integers(0, 32, size=(4, 16)), jnp.float32)
+    loss = float(M.lm_loss(cfg, layout, theta, toks))
+    assert abs(loss - np.log(32)) < 0.2
+
+
+def test_lm_grad_finite_and_nonzero(tiny_lm):
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(9).integers(0, 32, size=(2, 16)), jnp.float32)
+    loss, g = M.lm_loss_grad(cfg, layout, theta, toks)
+    g = np.asarray(g)
+    assert np.all(np.isfinite(g))
+    assert np.linalg.norm(g) > 0
+
+
+def test_lm_grad_matches_finite_diff(tiny_lm):
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(10).integers(0, 32, size=(2, 16)), jnp.float32)
+    _, g = M.lm_loss_grad(cfg, layout, theta, toks)
+    th = np.asarray(theta).copy()
+    eps = 1e-2
+    r = _rng(11)
+    for j in r.integers(0, layout.total, size=4):
+        tp, tm = th.copy(), th.copy()
+        tp[j] += eps
+        tm[j] -= eps
+        lp = float(M.lm_loss(cfg, layout, jnp.asarray(tp), toks))
+        lm = float(M.lm_loss(cfg, layout, jnp.asarray(tm), toks))
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g[j]), fd, rtol=0.1, atol=2e-3)
+
+
+def test_lm_eval_nll_consistent_with_loss(tiny_lm):
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(12).integers(0, 32, size=(4, 16)), jnp.float32)
+    mean_loss = float(M.lm_loss(cfg, layout, theta, toks))
+    nll_sum = float(M.lm_eval_nll(cfg, layout, theta, toks))
+    n_pos = 4 * 15
+    np.testing.assert_allclose(nll_sum / n_pos, mean_loss, rtol=1e-5)
+
+
+def test_lm_calib_matches_manual(tiny_lm):
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(13).integers(0, 32, size=(2, 16)), jnp.float32)
+    vec = np.asarray(M.lm_calib(cfg, layout, theta, toks))
+    names, entries, total = M.lm_calib_layout(cfg, layout)
+    assert vec.shape == (total,)
+    assert np.all(vec >= 0)
+    # spot-check head input norms == final-LN output squared sums
+    _, acts = M.lm_forward(cfg, layout, theta, toks, collect_acts=True)
+    ce = entries[names.index("head")]
+    np.testing.assert_allclose(
+        vec[ce["in_offset"]:ce["in_offset"] + ce["in_size"]],
+        np.asarray(acts["head"][0]), rtol=1e-5)
+
+
+def test_lm_overfits_tiny_batch(tiny_lm):
+    """e2e sanity: a few Adam-free GD steps reduce loss on a fixed batch."""
+    cfg, layout, theta = tiny_lm
+    toks = jnp.asarray(_rng(14).integers(0, 32, size=(2, 16)), jnp.float32)
+    l0, _ = M.lm_loss_grad(cfg, layout, theta, toks)
+    t = theta
+    for _ in range(30):
+        _, g = M.lm_loss_grad(cfg, layout, t, toks)
+        t = t - 1.0 * g
+    l_end, _ = M.lm_loss_grad(cfg, layout, t, toks)
+    assert float(l_end) < float(l0) * 0.9

@@ -1,0 +1,233 @@
+//! EF-BV (Algorithm 1, Ch. 2): error feedback with bias-variance
+//! decomposition — the unified compressed-gradient method that recovers
+//! EF21 (nu = lambda, contractive compressors) and DIANA (nu = 1, unbiased
+//! compressors) as particular cases.
+//!
+//! Per round t, every client i compresses the control-variate residual:
+//!   d_i = C_i(grad f_i(x) - h_i),   h_i <- h_i + lambda d_i
+//! and the master aggregates:
+//!   d = avg_i d_i,  g = h + nu d,  h <- h + lambda d,
+//!   x <- x - gamma g.
+//!
+//! Stepsize from Theorem 2.4.1:
+//!   gamma = 1 / (L + L~ sqrt(r_av / r) / s*),
+//!   r    = (1 - lambda + lambda eta)^2 + lambda^2 omega
+//!   r_av = (1 - nu + nu eta)^2 + nu^2 omega_ran
+//!   s*   = sqrt((1 + r) / (2 r)) - 1.
+
+use anyhow::Result;
+
+use super::{record_eval, RunOptions};
+use crate::compress::Compressor;
+use crate::metrics::RunRecord;
+use crate::oracle::Oracle;
+use crate::vecmath as vm;
+
+/// Which (lambda, nu) preset to use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Variant {
+    /// lambda = lambda*, nu = nu* (EF-BV proper).
+    EfBv,
+    /// nu = lambda = lambda* (EF21 with pre-scaled compressors).
+    Ef21,
+    /// lambda = 1/(1+omega), nu = 1 (DIANA).
+    Diana,
+}
+
+pub struct EfBv<'a> {
+    pub compressor: &'a dyn Compressor,
+    pub variant: Variant,
+    /// Support-overlap group size xi for shared compressor randomness
+    /// (Fig. 2.2): clients within a group of xi share the per-round seed.
+    pub xi: usize,
+    /// Multiplier on the theoretical stepsize (1.0 = theory).
+    pub gamma_mult: f32,
+}
+
+impl<'a> EfBv<'a> {
+    pub fn new(compressor: &'a dyn Compressor) -> Self {
+        Self { compressor, variant: Variant::EfBv, xi: 1, gamma_mult: 1.0 }
+    }
+
+    pub fn ef21(compressor: &'a dyn Compressor) -> Self {
+        Self { compressor, variant: Variant::Ef21, xi: 1, gamma_mult: 1.0 }
+    }
+
+    pub fn diana(compressor: &'a dyn Compressor) -> Self {
+        Self { compressor, variant: Variant::Diana, xi: 1, gamma_mult: 1.0 }
+    }
+
+    /// (lambda, nu, r, r_av) for dimension d and n workers.
+    pub fn scalings(&self, d: usize, n: usize) -> (f32, f32, f32, f32) {
+        let p = self.compressor.params(d);
+        let omega_ran = self.compressor.omega_ran(d, n, self.xi);
+        let p_av = crate::compress::Params { eta: p.eta, omega: omega_ran };
+        let (lambda, nu) = match self.variant {
+            Variant::EfBv => (p.lambda_star(), p_av.lambda_star()),
+            Variant::Ef21 => (p.lambda_star(), p.lambda_star()),
+            Variant::Diana => (1.0 / (1.0 + p.omega), 1.0),
+        };
+        let r = p.r(lambda);
+        let r_av = p_av.r(nu);
+        (lambda, nu, r, r_av)
+    }
+
+    /// Theoretical stepsize (Theorem 2.4.1) given smoothness constants.
+    pub fn gamma(&self, d: usize, n: usize, l: f32, l_tilde: f32) -> f32 {
+        let (_, _, r, r_av) = self.scalings(d, n);
+        if r < 1e-9 {
+            // no compression error (e.g. identity): plain GD stepsize
+            return self.gamma_mult / l;
+        }
+        let r = r.min(0.999_999);
+        let s_star = ((1.0 + r) / (2.0 * r)).sqrt() - 1.0;
+        self.gamma_mult / (l + l_tilde * (r_av / r).sqrt() / s_star.max(1e-9))
+    }
+
+    pub fn label(&self) -> String {
+        let v = match self.variant {
+            Variant::EfBv => "EF-BV",
+            Variant::Ef21 => "EF21",
+            Variant::Diana => "DIANA",
+        };
+        format!("{v}[{},xi={}]", self.compressor.name(), self.xi)
+    }
+
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let (lambda, nu, _, _) = self.scalings(d, n);
+        let l_tilde = {
+            let s: f32 = (0..n).map(|i| oracle.smoothness(i).powi(2)).sum();
+            (s / n as f32).sqrt()
+        };
+        // L <= L~; using L~ as the global smoothness proxy is safe.
+        let gamma = self.gamma(d, n, l_tilde, l_tilde);
+
+        let mut x = x0.to_vec();
+        let mut h_i = vec![vec![0.0f32; d]; n];
+        let mut h = vec![0.0f32; d];
+        let mut g_est = vec![0.0f32; d];
+        let mut grad = vec![0.0f32; d];
+        let mut resid = vec![0.0f32; d];
+        let mut di = vec![0.0f32; d];
+        let mut dbar = vec![0.0f32; d];
+        let mut bits_up: u64 = 0;
+        let mut rec = RunRecord::new(self.label());
+
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                record_eval(oracle, &x, t, bits_up / n as u64, 0, t as f64, opts, &mut rec)?;
+            }
+            dbar.fill(0.0);
+            // one-dispatch fast path when the oracle supports it (§Perf L2)
+            let batched = oracle.all_loss_grads(&x)?;
+            for i in 0..n {
+                match &batched {
+                    Some((_, grads)) => grad.copy_from_slice(&grads[i * d..(i + 1) * d]),
+                    None => {
+                        oracle.loss_grad(i, &x, &mut grad)?;
+                    }
+                }
+                vm::sub(&grad, &h_i[i], &mut resid);
+                // shared randomness within groups of xi: same (round, group) seed
+                let group = i / self.xi.max(1);
+                let mut crng = crate::Rng::new(
+                    opts.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(t as u64 + 1) ^ ((group as u64) << 32),
+                );
+                bits_up += self.compressor.compress(&resid, &mut di, &mut crng);
+                vm::axpy(lambda, &di, &mut h_i[i]);
+                vm::acc_mean(&di, n as f32, &mut dbar);
+            }
+            // g = h + nu * dbar ; h += lambda * dbar ; x -= gamma g
+            g_est.copy_from_slice(&h);
+            vm::axpy(nu, &dbar, &mut g_est);
+            vm::axpy(lambda, &dbar, &mut h);
+            vm::axpy(-gamma, &g_est, &mut x);
+        }
+        record_eval(oracle, &x, opts.rounds, bits_up / n as u64, 0, opts.rounds as f64, opts, &mut rec)?;
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::randk::RandK;
+    use crate::compress::topk::TopK;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::Oracle as _;
+
+    fn problem() -> (QuadraticOracle, f32, Vec<f32>) {
+        let mut rng = crate::rng(30);
+        let q = QuadraticOracle::random(8, 10, 0.5, 2.0, 1.0, &mut rng);
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        (q, fs, xs)
+    }
+
+    #[test]
+    fn ef21_with_topk_converges() {
+        let (q, fs, _) = problem();
+        let c = TopK::new(3);
+        let alg = EfBv::ef21(&c);
+        let opts = RunOptions { rounds: 600, eval_every: 100, f_star: Some(fs), ..Default::default() };
+        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn diana_with_randk_converges() {
+        let (q, fs, _) = problem();
+        let c = RandK::unbiased(3);
+        let alg = EfBv::diana(&c);
+        let opts = RunOptions { rounds: 800, eval_every: 100, f_star: Some(fs), ..Default::default() };
+        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn efbv_stepsize_at_least_ef21() {
+        // omega_ran <= omega => r_av <= r => gamma_EFBV >= gamma_EF21
+        let c = RandK::unbiased(2);
+        let efbv = EfBv::new(&c);
+        let ef21 = EfBv::ef21(&c);
+        let g_bv = efbv.gamma(16, 8, 1.0, 1.0);
+        let g_21 = ef21.gamma(16, 8, 1.0, 1.0);
+        assert!(g_bv >= g_21, "efbv {g_bv} < ef21 {g_21}");
+    }
+
+    #[test]
+    fn efbv_beats_ef21_in_bits_to_accuracy() {
+        let (q, fs, _) = problem();
+        let c = RandK::unbiased(2);
+        let opts = RunOptions { rounds: 1200, eval_every: 50, f_star: Some(fs), ..Default::default() };
+        let rec_bv = EfBv::new(&c).run(&q, &vec![1.0; 10], &opts).unwrap();
+        let rec_21 = EfBv::ef21(&c).run(&q, &vec![1.0; 10], &opts).unwrap();
+        let eps = 1e-3;
+        let r_bv = rec_bv.rounds_to_gap(eps);
+        let r_21 = rec_21.rounds_to_gap(eps);
+        match (r_bv, r_21) {
+            (Some(a), Some(b)) => assert!(a <= b, "efbv {a} rounds vs ef21 {b}"),
+            (Some(_), None) => {}
+            other => panic!("efbv should reach eps: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn identity_compressor_recovers_gd_rate() {
+        let (q, fs, _) = problem();
+        let c = crate::compress::Identity;
+        let alg = EfBv::new(&c);
+        let opts = RunOptions { rounds: 300, eval_every: 50, f_star: Some(fs), ..Default::default() };
+        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        assert!(rec.last().unwrap().gap.unwrap() < 1e-4);
+    }
+}

@@ -1,0 +1,185 @@
+//! FedAvg / LocalGD / minibatch baselines (chapters 3 and 5).
+//!
+//! One global round: sample a cohort, broadcast x, each client runs
+//! `local_steps` of (stochastic) gradient descent, the server averages the
+//! results. `local_steps = 1` with full-batch gradients is MB-GD; > 1 is
+//! MB-LocalGD / FedAvg.
+
+use anyhow::Result;
+
+use super::{record_eval, RunOptions};
+use crate::metrics::RunRecord;
+use crate::oracle::Oracle;
+use crate::sampling::CohortSampler;
+use crate::vecmath as vm;
+
+pub struct FedAvg<'a> {
+    pub sampler: &'a dyn CohortSampler,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub stochastic: bool,
+    /// Cost per global round in the hierarchical ledger (c1 + c2).
+    pub cost_per_round: f64,
+    /// Failure injection: probability a sampled client drops out of the
+    /// round before reporting (cross-device reality, Sect. 5.2.1). The
+    /// server aggregates over survivors; a fully-dropped cohort is a
+    /// wasted round (cost charged, no update).
+    pub dropout: f32,
+}
+
+impl<'a> FedAvg<'a> {
+    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32) -> Self {
+        Self { sampler, local_steps, lr, stochastic: false, cost_per_round: 1.0, dropout: 0.0 }
+    }
+
+    pub fn label(&self) -> String {
+        if self.local_steps <= 1 {
+            format!("MB-GD(lr={})", self.lr)
+        } else {
+            format!("LocalGD(K={},lr={})", self.local_steps, self.lr)
+        }
+    }
+
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let mut rng = crate::rng(opts.seed);
+        let mut x = x0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut xi = vec![0.0f32; d];
+        let mut next = vec![0.0f32; d];
+        let mut rec = RunRecord::new(self.label());
+        let dense_bits = 32 * d as u64;
+        let mut bits: u64 = 0;
+
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                record_eval(oracle, &x, t, bits, bits, t as f64 * self.cost_per_round, opts, &mut rec)?;
+            }
+            let mut cohort = self.sampler.sample(&mut rng);
+            if self.dropout > 0.0 {
+                cohort.retain(|_| !rng.bernoulli(self.dropout));
+            }
+            if cohort.is_empty() {
+                bits += dense_bits;
+                continue; // wasted round: every sampled client dropped
+            }
+            next.fill(0.0);
+            for &i in &cohort {
+                xi.copy_from_slice(&x);
+                for _ in 0..self.local_steps {
+                    if self.stochastic {
+                        oracle.loss_grad_stoch(i, &xi, &mut g, &mut rng)?;
+                    } else {
+                        oracle.loss_grad(i, &xi, &mut g)?;
+                    }
+                    vm::axpy(-self.lr, &g, &mut xi);
+                }
+                vm::acc_mean(&xi, cohort.len() as f32, &mut next);
+            }
+            x.copy_from_slice(&next);
+            bits += dense_bits;
+        }
+        record_eval(
+            oracle,
+            &x,
+            opts.rounds,
+            bits,
+            bits,
+            opts.rounds as f64 * self.cost_per_round,
+            opts,
+            &mut rec,
+        )?;
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::Oracle as _;
+    use crate::sampling::{FullSampling, NiceSampling};
+
+    #[test]
+    fn full_participation_gd_converges() {
+        let mut rng = crate::rng(32);
+        let q = QuadraticOracle::random(5, 6, 0.5, 2.0, 1.0, &mut rng);
+        let s = FullSampling { n: 5 };
+        let alg = FedAvg::new(&s, 1, 0.4);
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        let opts = RunOptions { rounds: 300, eval_every: 50, f_star: Some(fs), ..Default::default() };
+        let rec = alg.run(&q, &vec![1.0; 6], &opts).unwrap();
+        assert!(rec.last().unwrap().gap.unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn local_steps_reach_neighborhood() {
+        // LocalGD with heterogeneous clients converges to a neighborhood
+        let mut rng = crate::rng(33);
+        let q = QuadraticOracle::random(6, 6, 0.5, 2.0, 2.0, &mut rng);
+        let s = NiceSampling { n: 6, tau: 3 };
+        let alg = FedAvg::new(&s, 5, 0.1);
+        let xs = q.minimizer();
+        let opts = RunOptions {
+            rounds: 400,
+            eval_every: 50,
+            x_star: Some(xs.clone()),
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![3.0; 6], &opts).unwrap();
+        let d0 = rec.rounds.first().unwrap().gap.unwrap();
+        let dend = rec.last().unwrap().gap.unwrap();
+        assert!(dend < d0 * 0.05, "dist {dend} vs initial {d0}");
+    }
+
+    #[test]
+    fn survives_heavy_dropout() {
+        let mut rng = crate::rng(35);
+        let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
+        let s = NiceSampling { n: 6, tau: 3 };
+        let mut alg = FedAvg::new(&s, 2, 0.2);
+        alg.dropout = 0.5;
+        use crate::oracle::Oracle as _;
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        let opts = RunOptions { rounds: 400, eval_every: 100, f_star: Some(fs), seed: 9, ..Default::default() };
+        let rec = alg.run(&q, &vec![2.0; 5], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().gap.unwrap();
+        let last = rec.last().unwrap().gap.unwrap();
+        assert!(last < first * 0.2, "dropout run should still progress: {first} -> {last}");
+    }
+
+    #[test]
+    fn full_dropout_changes_nothing() {
+        let mut rng = crate::rng(36);
+        let q = QuadraticOracle::random(4, 4, 0.5, 2.0, 1.0, &mut rng);
+        let s = FullSampling { n: 4 };
+        let mut alg = FedAvg::new(&s, 1, 0.2);
+        alg.dropout = 1.0;
+        let x0 = vec![1.5f32; 4];
+        let opts = RunOptions { rounds: 30, eval_every: 30, ..Default::default() };
+        let rec = alg.run(&q, &x0, &opts).unwrap();
+        use crate::oracle::Oracle as _;
+        let l0 = q.full_loss(&x0).unwrap();
+        assert_eq!(rec.last().unwrap().loss, l0, "nothing should change when all clients drop");
+    }
+
+    #[test]
+    fn bits_grow_linearly_with_rounds() {
+        let mut rng = crate::rng(34);
+        let q = QuadraticOracle::random(4, 4, 0.5, 2.0, 1.0, &mut rng);
+        let s = FullSampling { n: 4 };
+        let alg = FedAvg::new(&s, 1, 0.2);
+        let opts = RunOptions { rounds: 20, eval_every: 10, ..Default::default() };
+        let rec = alg.run(&q, &vec![0.0; 4], &opts).unwrap();
+        let b10 = rec.rounds[1].bits_up;
+        let b20 = rec.rounds[2].bits_up;
+        assert_eq!(b20, 2 * b10);
+    }
+}

@@ -1,0 +1,204 @@
+//! Distributed gradient descent — the baseline of Fig. 3.1 — and its FLIX
+//! personalization (Gasanov et al. 2022): vanilla GD on
+//!
+//!   f~(x) = (1/n) sum_i f_i(alpha_i x + (1 - alpha_i) x_i*)
+//!
+//! with grad f~(x) = (1/n) sum_i alpha_i grad f_i(x~_i). alpha_i = 1 for
+//! all i recovers plain distributed GD on (ERM).
+
+use anyhow::Result;
+
+use super::{RunOptions, record_eval};
+use crate::metrics::RunRecord;
+use crate::oracle::Oracle;
+use crate::vecmath as vm;
+
+pub struct FlixGd {
+    /// Personalization weights alpha_i in [0, 1].
+    pub alphas: Vec<f32>,
+    /// Local optima x_i* (empty vectors allowed when alpha_i = 1).
+    pub x_stars: Vec<Vec<f32>>,
+    /// Stepsize.
+    pub gamma: f32,
+}
+
+impl FlixGd {
+    /// Plain distributed GD on (ERM).
+    pub fn plain(n: usize, d: usize, gamma: f32) -> Self {
+        Self { alphas: vec![1.0; n], x_stars: vec![vec![0.0; d]; n], gamma }
+    }
+
+    /// FLIX objective value at x.
+    pub fn flix_loss<O: Oracle + ?Sized>(&self, oracle: &O, x: &[f32]) -> Result<f32> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let mut tilde = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            self.personalize(i, x, &mut tilde);
+            acc += oracle.loss_grad(i, &tilde, &mut g)?;
+        }
+        Ok(acc / n as f32)
+    }
+
+    /// tilde_x_i = alpha_i x + (1 - alpha_i) x_i*
+    pub fn personalize(&self, i: usize, x: &[f32], out: &mut [f32]) {
+        let a = self.alphas[i];
+        for j in 0..x.len() {
+            out[j] = a * x[j] + (1.0 - a) * self.x_stars[i][j];
+        }
+    }
+
+    /// FLIX gradient at x; writes into grad, returns f~(x).
+    pub fn flix_loss_grad<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x: &[f32],
+        grad: &mut [f32],
+    ) -> Result<f32> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let mut tilde = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        grad.fill(0.0);
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            self.personalize(i, x, &mut tilde);
+            acc += oracle.loss_grad(i, &tilde, &mut g)?;
+            vm::axpy(self.alphas[i] / n as f32, &g, grad);
+        }
+        Ok(acc / n as f32)
+    }
+
+    /// Run GD; one round = one communication (broadcast + aggregate).
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let mut x = x0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut rec = RunRecord::new(format!("FLIX-GD(gamma={})", self.gamma));
+        let dense_bits = 32 * d as u64;
+        for t in 0..opts.rounds {
+            let loss = self.flix_loss_grad(oracle, &x, &mut g)?;
+            if t % opts.eval_every == 0 {
+                let gap = opts.f_star.map(|fs| loss - fs);
+                rec.push(crate::metrics::RoundStat {
+                    round: t,
+                    bits_up: dense_bits * t as u64,
+                    bits_down: dense_bits * t as u64,
+                    comm_cost: t as f64,
+                    loss,
+                    gap,
+                    grad_norm_sq: Some(vm::norm_sq(&g)),
+                    eval: None,
+                });
+            }
+            vm::axpy(-self.gamma, &g, &mut x);
+        }
+        let _ = record_eval(oracle, &x, opts.rounds, 0, 0, opts.rounds as f64, opts, &mut rec);
+        // fix the final record's loss to the FLIX objective (record_eval used ERM)
+        if let Some(last) = rec.rounds.last_mut() {
+            let loss = self.flix_loss(oracle, &x)?;
+            last.loss = loss;
+            last.gap = opts.f_star.map(|fs| loss - fs);
+        }
+        Ok(rec)
+    }
+
+    /// Solve the FLIX problem to high precision (reference f~* for gaps).
+    pub fn solve_reference<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        iters: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        let d = oracle.dim();
+        let mut x = x0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut gamma = self.gamma;
+        let mut best = f32::INFINITY;
+        for _ in 0..iters {
+            let loss = self.flix_loss_grad(oracle, &x, &mut g)?;
+            if loss.is_nan() || loss > best * 4.0 + 1.0 {
+                gamma *= 0.5;
+                x.copy_from_slice(x0);
+                best = f32::INFINITY;
+                continue;
+            }
+            best = best.min(loss);
+            if vm::norm(&g) < 1e-7 {
+                break;
+            }
+            vm::axpy(-gamma, &g, &mut x);
+        }
+        let loss = self.flix_loss(oracle, &x)?;
+        Ok((x, loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::quadratic::QuadraticOracle;
+
+    #[test]
+    fn plain_gd_converges_linearly() {
+        let mut rng = crate::rng(27);
+        let q = QuadraticOracle::random(4, 6, 0.5, 2.0, 1.0, &mut rng);
+        let gd = FlixGd::plain(4, 6, 0.4);
+        let opts = RunOptions { rounds: 200, eval_every: 20, ..Default::default() };
+        let rec = gd.run(&q, &vec![1.0; 6], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().loss;
+        let last = rec.rounds.last().unwrap().loss;
+        let xs = q.minimizer();
+        let mut g = vec![0.0; 6];
+        let fs = {
+            let mut acc = 0.0;
+            for i in 0..4 {
+                acc += q.loss_grad(i, &xs, &mut g).unwrap();
+            }
+            acc / 4.0
+        };
+        assert!(last - fs < 1e-4, "last {last} f* {fs}");
+        assert!(last < first);
+    }
+
+    #[test]
+    fn alpha_zero_is_fully_personal_zero_grad() {
+        // alpha = 0: f~(x) constant in x -> gradient 0
+        let mut rng = crate::rng(28);
+        let q = QuadraticOracle::random(3, 4, 0.5, 2.0, 1.0, &mut rng);
+        let x_stars: Vec<Vec<f32>> = (0..3).map(|i| {
+            crate::oracle::solve_local(&q, i, &vec![0.0; 4], 0.3, 500, 1e-7).unwrap()
+        }).collect();
+        let gd = FlixGd { alphas: vec![0.0; 3], x_stars, gamma: 0.1 };
+        let mut g = vec![0.0f32; 4];
+        gd.flix_loss_grad(&q, &[5.0, -3.0, 2.0, 0.0], &mut g).unwrap();
+        assert!(crate::vecmath::norm(&g) < 1e-4);
+    }
+
+    #[test]
+    fn smaller_alpha_smaller_initial_gap() {
+        // Psi^0 scales with alpha^2 (Sect. 3.2): smaller alpha -> smaller
+        // initial suboptimality of the FLIX objective.
+        let mut rng = crate::rng(29);
+        let q = QuadraticOracle::random(4, 5, 0.5, 2.0, 2.0, &mut rng);
+        let x_stars: Vec<Vec<f32>> = (0..4).map(|i| {
+            crate::oracle::solve_local(&q, i, &vec![0.0; 5], 0.3, 800, 1e-8).unwrap()
+        }).collect();
+        let x0 = vec![3.0f32; 5];
+        let mut gaps = Vec::new();
+        for &a in &[0.1f32, 0.9] {
+            let gd = FlixGd { alphas: vec![a; 4], x_stars: x_stars.clone(), gamma: 0.2 };
+            let (_, fstar) = gd.solve_reference(&q, &vec![0.0; 5], 3000).unwrap();
+            let f0 = gd.flix_loss(&q, &x0).unwrap();
+            gaps.push(f0 - fstar);
+        }
+        assert!(gaps[0] < gaps[1], "alpha=0.1 gap {} should be < alpha=0.9 gap {}", gaps[0], gaps[1]);
+    }
+}

@@ -1,0 +1,72 @@
+//! The dissertation's algorithms, over a common [`crate::oracle::Oracle`].
+//!
+//! | Chapter | Algorithms |
+//! |---|---|
+//! | 2 | [`efbv::EfBv`] (generalizes [`efbv::EfBv::ef21`] and [`efbv::EfBv::diana`]), [`gd`] |
+//! | 3 | [`scafflix::Scafflix`] (i-Scaffnew when alpha=1), [`gd::FlixGd`], FLIX-SGD |
+//! | 5 | [`sppm::SppmAs`], [`fedavg::FedAvg`] (LocalGD / MB-GD baselines) |
+//!
+//! Every run returns a [`crate::metrics::RunRecord`] with per-round loss /
+//! gap / bit / cost series — the exact x/y axes of the paper's figures.
+
+pub mod efbv;
+pub mod fedavg;
+pub mod gd;
+pub mod scaffold;
+pub mod scafflix;
+pub mod sppm;
+
+use anyhow::Result;
+
+use crate::metrics::{RoundStat, RunRecord};
+use crate::oracle::Oracle;
+
+/// Options shared by algorithm drivers.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub rounds: usize,
+    /// Evaluate full loss / gap every `eval_every` rounds.
+    pub eval_every: usize,
+    /// Known optimal value f* (for gap curves).
+    pub f_star: Option<f32>,
+    /// Known minimizer x* (for distance curves).
+    pub x_star: Option<Vec<f32>>,
+    pub seed: u64,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self { rounds: 100, eval_every: 10, f_star: None, x_star: None, seed: 0 }
+    }
+}
+
+/// Record one evaluated round into `rec`.
+pub(crate) fn record_eval<O: Oracle + ?Sized>(
+    oracle: &O,
+    x: &[f32],
+    round: usize,
+    bits_up: u64,
+    bits_down: u64,
+    comm_cost: f64,
+    opts: &RunOptions,
+    rec: &mut RunRecord,
+) -> Result<()> {
+    let mut g = vec![0.0f32; oracle.dim()];
+    let loss = oracle.full_loss_grad(x, &mut g)?;
+    let gap = match (&opts.f_star, &opts.x_star) {
+        (Some(fs), _) => Some(loss - fs),
+        (None, Some(xs)) => Some(crate::vecmath::dist_sq(x, xs)),
+        _ => None,
+    };
+    rec.push(RoundStat {
+        round,
+        bits_up,
+        bits_down,
+        comm_cost,
+        loss,
+        gap,
+        grad_norm_sq: Some(crate::vecmath::norm_sq(&g)),
+        eval: None,
+    });
+    Ok(())
+}

@@ -1,0 +1,313 @@
+//! Scafflix (Algorithm 4, Ch. 3): explicit personalization (FLIX) +
+//! accelerated local training (i-Scaffnew) = double communication
+//! acceleration.
+//!
+//! Per iteration t, every client i:
+//!   x~_i = alpha_i x_i + (1 - alpha_i) x_i*
+//!   g_i  = stochastic estimate of grad f_i(x~_i)
+//!   x^_i = x_i - (gamma_i / alpha_i) (g_i - h_i)
+//! with probability p the clients communicate:
+//!   xbar = (gamma / n) sum_j (alpha_j^2 / gamma_j) x^_j,
+//!   x_i <- xbar,  h_i <- h_i + (p alpha_i / gamma_i)(xbar - x^_i)
+//! else x_i <- x^_i.
+//!
+//! alpha_i = 1 for all i recovers i-Scaffnew; additionally uniform
+//! gamma_i recovers Scaffnew (Mishchenko et al. 2022).
+
+use anyhow::Result;
+
+use super::RunOptions;
+use crate::metrics::{RoundStat, RunRecord};
+use crate::oracle::Oracle;
+use crate::vecmath as vm;
+
+pub struct Scafflix {
+    pub alphas: Vec<f32>,
+    pub x_stars: Vec<Vec<f32>>,
+    /// Per-client stepsizes gamma_i (i-Scaffnew individualization).
+    pub gammas: Vec<f32>,
+    /// Communication probability p.
+    pub p: f32,
+    /// Use stochastic (minibatch) gradients instead of full gradients.
+    pub stochastic: bool,
+    /// Clients participating per communication round (None = all).
+    pub clients_per_round: Option<usize>,
+}
+
+impl Scafflix {
+    /// Standard configuration: gamma_i = 1/L_i, uniform alpha.
+    pub fn standard<O: Oracle + ?Sized>(oracle: &O, alpha: f32, p: f32, x_stars: Vec<Vec<f32>>) -> Self {
+        let n = oracle.n_clients();
+        let gammas = (0..n).map(|i| 1.0 / oracle.smoothness(i)).collect();
+        Self { alphas: vec![alpha; n], x_stars, gammas, p, stochastic: false, clients_per_round: None }
+    }
+
+    /// i-Scaffnew: no personalization (alpha = 1).
+    pub fn i_scaffnew<O: Oracle + ?Sized>(oracle: &O, p: f32) -> Self {
+        let n = oracle.n_clients();
+        let d = oracle.dim();
+        let gammas = (0..n).map(|i| 1.0 / oracle.smoothness(i)).collect();
+        Self {
+            alphas: vec![1.0; n],
+            x_stars: vec![vec![0.0; d]; n],
+            gammas,
+            p,
+            stochastic: false,
+            clients_per_round: None,
+        }
+    }
+
+    /// FLIX objective evaluator (for loss/gap curves).
+    fn flix(&self) -> crate::algorithms::gd::FlixGd {
+        crate::algorithms::gd::FlixGd {
+            alphas: self.alphas.clone(),
+            x_stars: self.x_stars.clone(),
+            gamma: 0.0,
+        }
+    }
+
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        // server aggregation weight gamma = (avg_i alpha_i^2 / gamma_i)^-1
+        let gamma_srv = 1.0
+            / ((0..n)
+                .map(|i| self.alphas[i] * self.alphas[i] / self.gammas[i])
+                .sum::<f32>()
+                / n as f32);
+
+        let mut rng = crate::rng(opts.seed);
+        let mut x_i = vec![x0.to_vec(); n];
+        let mut h_i = vec![vec![0.0f32; d]; n];
+        let mut hat = vec![vec![0.0f32; d]; n];
+        let mut tilde = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        let mut xbar = vec![0.0f32; d];
+        let flix = self.flix();
+        let mut rec = RunRecord::new(format!("Scafflix(p={},alpha={})", self.p, self.alphas[0]));
+        let dense_bits = 32 * d as u64;
+        let mut bits_up: u64 = 0;
+        let mut comms = 0usize;
+
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                // evaluate at the current server point (average of x_i)
+                xbar.fill(0.0);
+                for xi in &x_i {
+                    vm::acc_mean(xi, n as f32, &mut xbar);
+                }
+                let loss = flix.flix_loss(oracle, &xbar)?;
+                rec.push(RoundStat {
+                    round: t,
+                    bits_up,
+                    bits_down: bits_up,
+                    comm_cost: comms as f64,
+                    loss,
+                    gap: opts.f_star.map(|fs| loss - fs),
+                    grad_norm_sq: {
+                        let mut gg = vec![0.0f32; d];
+                        let _ = flix.flix_loss_grad(oracle, &xbar, &mut gg)?;
+                        Some(vm::norm_sq(&gg))
+                    },
+                    eval: None,
+                });
+            }
+
+            // local SGD step at every client
+            for i in 0..n {
+                flixify(&self.alphas, &self.x_stars, i, &x_i[i], &mut tilde);
+                if self.stochastic {
+                    oracle.loss_grad_stoch(i, &tilde, &mut g, &mut rng)?;
+                } else {
+                    oracle.loss_grad(i, &tilde, &mut g)?;
+                }
+                let step = self.gammas[i] / self.alphas[i].max(1e-8);
+                for j in 0..d {
+                    hat[i][j] = x_i[i][j] - step * (g[j] - h_i[i][j]);
+                }
+            }
+
+            // communicate with probability p
+            if rng.f32_unit() < self.p {
+                comms += 1;
+                let participants: Vec<usize> = match self.clients_per_round {
+                    None => (0..n).collect(),
+                    Some(tau) => {
+                        let mut idx: Vec<usize> = (0..n).collect();
+                        rng.shuffle(&mut idx);
+                        idx.truncate(tau.min(n));
+                        idx
+                    }
+                };
+                // xbar = (gamma_srv / |P|) sum_{j in P} (alpha_j^2/gamma_j) x^_j
+                // (full participation matches Algorithm 4 exactly; partial
+                // participation renormalizes over the cohort)
+                let norm = participants.len() as f32;
+                xbar.fill(0.0);
+                for &jc in &participants {
+                    let w = gamma_srv * self.alphas[jc] * self.alphas[jc] / self.gammas[jc] / norm;
+                    vm::axpy(w, &hat[jc], &mut xbar);
+                }
+                bits_up += dense_bits; // per-node uplink of x^_i
+                for &i in &participants {
+                    let coef = self.p * self.alphas[i] / self.gammas[i];
+                    for j in 0..d {
+                        h_i[i][j] += coef * (xbar[j] - hat[i][j]);
+                    }
+                    x_i[i].copy_from_slice(&xbar);
+                }
+                // non-participants keep their local iterate
+                for i in 0..n {
+                    if !participants.contains(&i) {
+                        x_i[i].copy_from_slice(&hat[i]);
+                    }
+                }
+            } else {
+                for i in 0..n {
+                    x_i[i].copy_from_slice(&hat[i]);
+                }
+            }
+        }
+
+        // final eval
+        xbar.fill(0.0);
+        for xi in &x_i {
+            vm::acc_mean(xi, n as f32, &mut xbar);
+        }
+        let loss = flix.flix_loss(oracle, &xbar)?;
+        rec.push(RoundStat {
+            round: opts.rounds,
+            bits_up,
+            bits_down: bits_up,
+            comm_cost: comms as f64,
+            loss,
+            gap: opts.f_star.map(|fs| loss - fs),
+            grad_norm_sq: None,
+            eval: None,
+        });
+        Ok(rec)
+    }
+}
+
+fn flixify(alphas: &[f32], x_stars: &[Vec<f32>], i: usize, x: &[f32], out: &mut [f32]) {
+    let a = alphas[i];
+    for j in 0..x.len() {
+        out[j] = a * x[j] + (1.0 - a) * x_stars[i][j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::gd::FlixGd;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::solve_local;
+
+    fn problem() -> (QuadraticOracle, Vec<Vec<f32>>) {
+        let mut rng = crate::rng(31);
+        let q = QuadraticOracle::random(6, 8, 0.5, 2.0, 1.0, &mut rng);
+        let x_stars: Vec<Vec<f32>> = (0..6)
+            .map(|i| solve_local(&q, i, &vec![0.0; 8], 0.3, 800, 1e-8).unwrap())
+            .collect();
+        (q, x_stars)
+    }
+
+    #[test]
+    fn i_scaffnew_converges_to_erm_optimum() {
+        let (q, _) = problem();
+        let alg = Scafflix::i_scaffnew(&q, 0.3);
+        use crate::oracle::Oracle as _;
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        let opts = RunOptions {
+            rounds: 800,
+            eval_every: 100,
+            f_star: Some(fs),
+            seed: 1,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn scafflix_converges_on_flix_objective() {
+        let (q, x_stars) = problem();
+        let alg = Scafflix::standard(&q, 0.5, 0.3, x_stars.clone());
+        let flix = FlixGd { alphas: vec![0.5; 6], x_stars, gamma: 0.2 };
+        let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 8], 4000).unwrap();
+        let opts = RunOptions {
+            rounds: 800,
+            eval_every: 100,
+            f_star: Some(fstar),
+            seed: 2,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn scafflix_faster_than_gd_in_comm_rounds() {
+        // the double-acceleration claim of Fig. 3.1, in miniature
+        let (q, x_stars) = problem();
+        let alpha = 0.3f32;
+        let flix = FlixGd { alphas: vec![alpha; 6], x_stars: x_stars.clone(), gamma: 0.3 };
+        let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 8], 4000).unwrap();
+        let x0 = vec![2.0f32; 8];
+
+        let alg = Scafflix::standard(&q, alpha, 0.2, x_stars);
+        let opts = RunOptions {
+            rounds: 1500,
+            eval_every: 25,
+            f_star: Some(fstar),
+            seed: 3,
+            ..Default::default()
+        };
+        let rec_sfx = alg.run(&q, &x0, &opts).unwrap();
+        let rec_gd = flix.run(&q, &x0, &opts).unwrap();
+
+        let eps = 1e-3;
+        // compare communication rounds (comm_cost), not iterations
+        let c_sfx = rec_sfx
+            .rounds
+            .iter()
+            .find(|r| r.gap.map_or(false, |g| g <= eps))
+            .map(|r| r.comm_cost);
+        let c_gd = rec_gd
+            .rounds
+            .iter()
+            .find(|r| r.gap.map_or(false, |g| g <= eps))
+            .map(|r| r.comm_cost);
+        let (Some(c_sfx), Some(c_gd)) = (c_sfx, c_gd) else {
+            panic!("both should converge: scafflix {c_sfx:?} gd {c_gd:?}");
+        };
+        assert!(c_sfx < c_gd, "scafflix used {c_sfx} comms vs gd {c_gd}");
+    }
+
+    #[test]
+    fn partial_participation_still_converges() {
+        let (q, x_stars) = problem();
+        let mut alg = Scafflix::standard(&q, 0.5, 0.5, x_stars.clone());
+        alg.clients_per_round = Some(3);
+        let flix = FlixGd { alphas: vec![0.5; 6], x_stars, gamma: 0.2 };
+        let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 8], 4000).unwrap();
+        let opts = RunOptions {
+            rounds: 2000,
+            eval_every: 200,
+            f_star: Some(fstar),
+            seed: 4,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 5e-2, "gap {gap}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Scaffold (Karimireddy et al. 2020) and FedProx (Li et al. 2020) —
+//! the fourth-generation local-training baselines the dissertation
+//! compares against (Sect. 1.3.2, Sect. 5.2).
+//!
+//! * **Scaffold**: client control variates c_i correct client drift;
+//!   linear convergence to the exact solution but O(kappa log 1/eps)
+//!   communication (no acceleration — the contrast to Scaffnew/Scafflix).
+//! * **FedProx**: each client inexactly minimizes
+//!   f_i(y) + (1/(2 gamma)) ||y - x||^2 with a few local steps — i.e.
+//!   SPPM with a single local communication round (the K = 1 cell of the
+//!   Cohort-Squeeze grid).
+
+use anyhow::Result;
+
+use super::{record_eval, RunOptions};
+use crate::metrics::RunRecord;
+use crate::oracle::Oracle;
+use crate::sampling::CohortSampler;
+use crate::vecmath as vm;
+
+pub struct Scaffold<'a> {
+    pub sampler: &'a dyn CohortSampler,
+    pub local_steps: usize,
+    /// Local stepsize.
+    pub lr: f32,
+    /// Global (server) stepsize, usually 1.0.
+    pub global_lr: f32,
+    pub stochastic: bool,
+}
+
+impl<'a> Scaffold<'a> {
+    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32) -> Self {
+        Self { sampler, local_steps, lr, global_lr: 1.0, stochastic: false }
+    }
+
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let mut rng = crate::rng(opts.seed);
+        let mut x = x0.to_vec();
+        // server and client control variates
+        let mut c = vec![0.0f32; d];
+        let mut c_i = vec![vec![0.0f32; d]; n];
+        let mut g = vec![0.0f32; d];
+        let mut yi = vec![0.0f32; d];
+        let mut dx = vec![0.0f32; d];
+        let mut dc = vec![0.0f32; d];
+        let mut rec = RunRecord::new(format!("Scaffold(K={},lr={})", self.local_steps, self.lr));
+        let dense_bits = 2 * 32 * d as u64; // model + control variate per direction
+        let mut bits: u64 = 0;
+
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                record_eval(oracle, &x, t, bits, bits, t as f64, opts, &mut rec)?;
+            }
+            let cohort = self.sampler.sample(&mut rng);
+            dx.fill(0.0);
+            dc.fill(0.0);
+            let m = cohort.len() as f32;
+            for &i in &cohort {
+                yi.copy_from_slice(&x);
+                for _ in 0..self.local_steps {
+                    if self.stochastic {
+                        oracle.loss_grad_stoch(i, &yi, &mut g, &mut rng)?;
+                    } else {
+                        oracle.loss_grad(i, &yi, &mut g)?;
+                    }
+                    // y <- y - lr (g - c_i + c)
+                    for j in 0..d {
+                        yi[j] -= self.lr * (g[j] - c_i[i][j] + c[j]);
+                    }
+                }
+                // c_i^+ = c_i - c + (x - y)/(K lr)
+                let coef = 1.0 / (self.local_steps as f32 * self.lr);
+                for j in 0..d {
+                    let ci_new = c_i[i][j] - c[j] + (x[j] - yi[j]) * coef;
+                    dc[j] += (ci_new - c_i[i][j]) / m;
+                    dx[j] += (yi[j] - x[j]) / m;
+                    c_i[i][j] = ci_new;
+                }
+            }
+            // x <- x + eta_g dx ; c <- c + |S|/n * dc
+            vm::axpy(self.global_lr, &dx, &mut x);
+            vm::axpy(m / n as f32, &dc, &mut c);
+            bits += dense_bits;
+        }
+        record_eval(oracle, &x, opts.rounds, bits, bits, opts.rounds as f64, opts, &mut rec)?;
+        Ok(rec)
+    }
+}
+
+/// FedProx: one global round = cohort clients approximately solve the
+/// proximal subproblem with `local_steps` of GD, then average.
+pub struct FedProx<'a> {
+    pub sampler: &'a dyn CohortSampler,
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Proximal weight mu_prox (larger = stay closer to the server model).
+    pub mu_prox: f32,
+}
+
+impl<'a> FedProx<'a> {
+    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32, mu_prox: f32) -> Self {
+        Self { sampler, local_steps, lr, mu_prox }
+    }
+
+    pub fn run<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let d = oracle.dim();
+        let mut rng = crate::rng(opts.seed);
+        let mut x = x0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut yi = vec![0.0f32; d];
+        let mut next = vec![0.0f32; d];
+        let mut rec = RunRecord::new(format!(
+            "FedProx(K={},mu={},lr={})",
+            self.local_steps, self.mu_prox, self.lr
+        ));
+        let dense_bits = 32 * d as u64;
+        let mut bits: u64 = 0;
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                record_eval(oracle, &x, t, bits, bits, t as f64, opts, &mut rec)?;
+            }
+            let cohort = self.sampler.sample(&mut rng);
+            next.fill(0.0);
+            for &i in &cohort {
+                yi.copy_from_slice(&x);
+                for _ in 0..self.local_steps {
+                    oracle.loss_grad(i, &yi, &mut g)?;
+                    for j in 0..d {
+                        g[j] += self.mu_prox * (yi[j] - x[j]);
+                    }
+                    vm::axpy(-self.lr, &g, &mut yi);
+                }
+                vm::acc_mean(&yi, cohort.len() as f32, &mut next);
+            }
+            x.copy_from_slice(&next);
+            bits += dense_bits;
+        }
+        record_eval(oracle, &x, opts.rounds, bits, bits, opts.rounds as f64, opts, &mut rec)?;
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::Oracle as _;
+    use crate::sampling::{FullSampling, NiceSampling};
+
+    fn problem() -> (QuadraticOracle, f32) {
+        let mut rng = crate::rng(50);
+        let q = QuadraticOracle::random(8, 6, 0.5, 2.0, 1.5, &mut rng);
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        (q, fs)
+    }
+
+    #[test]
+    fn scaffold_converges_exactly_under_heterogeneity() {
+        // LocalGD stalls at a heterogeneity neighborhood; Scaffold's control
+        // variates remove the drift and reach the exact optimum.
+        let (q, fs) = problem();
+        let s = FullSampling { n: 8 };
+        let alg = Scaffold::new(&s, 5, 0.05);
+        let opts = RunOptions {
+            rounds: 400,
+            eval_every: 50,
+            f_star: Some(fs),
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn scaffold_beats_localgd_final_gap() {
+        let (q, fs) = problem();
+        let s = FullSampling { n: 8 };
+        let opts = RunOptions {
+            rounds: 300,
+            eval_every: 300,
+            f_star: Some(fs),
+            ..Default::default()
+        };
+        let rec_sc = Scaffold::new(&s, 5, 0.05).run(&q, &vec![2.0; 6], &opts).unwrap();
+        let alg_fa = crate::algorithms::fedavg::FedAvg::new(&s, 5, 0.05);
+        let rec_fa = alg_fa.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let g_sc = rec_sc.last().unwrap().gap.unwrap();
+        let g_fa = rec_fa.last().unwrap().gap.unwrap();
+        assert!(g_sc < g_fa, "scaffold {g_sc} vs localgd {g_fa}");
+    }
+
+    #[test]
+    fn scaffold_partial_participation_progresses() {
+        let (q, fs) = problem();
+        let s = NiceSampling { n: 8, tau: 3 };
+        let alg = Scaffold::new(&s, 3, 0.05);
+        let opts = RunOptions {
+            rounds: 600,
+            eval_every: 100,
+            f_star: Some(fs),
+            seed: 1,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().gap.unwrap();
+        let last = rec.last().unwrap().gap.unwrap();
+        assert!(last < 0.05 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn fedprox_reaches_neighborhood() {
+        let (q, _) = problem();
+        let xs = q.minimizer();
+        let s = NiceSampling { n: 8, tau: 4 };
+        let alg = FedProx::new(&s, 10, 0.05, 1.0);
+        let opts = RunOptions {
+            rounds: 300,
+            eval_every: 50,
+            x_star: Some(xs),
+            seed: 2,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().gap.unwrap();
+        let last = rec.last().unwrap().gap.unwrap();
+        assert!(last < 0.05 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn fedprox_mu_anchors_iterates() {
+        // larger mu_prox keeps the aggregated model closer to the server
+        // point after one round (the proximal anchoring effect)
+        let (q, _) = problem();
+        let s = FullSampling { n: 8 };
+        let x0 = vec![1.0f32; 6];
+        let dist_after_one = |mu: f32| {
+            let lr = 0.3 / (2.0 + mu); // 1/(L + mu_prox)-scaled
+            let alg = FedProx::new(&s, 20, lr, mu);
+            let opts = RunOptions { rounds: 1, eval_every: 100, ..Default::default() };
+            let _ = alg.run(&q, &x0, &opts).unwrap();
+            // re-derive the one-round iterate deterministically
+            let mut rng = crate::rng(0);
+            let cohort = s.sample(&mut rng);
+            let mut next = vec![0.0f32; 6];
+            let mut yi = vec![0.0f32; 6];
+            let mut g = vec![0.0f32; 6];
+            for &i in &cohort {
+                yi.copy_from_slice(&x0);
+                for _ in 0..20 {
+                    q.loss_grad(i, &yi, &mut g).unwrap();
+                    for j in 0..6 {
+                        g[j] += mu * (yi[j] - x0[j]);
+                    }
+                    vm::axpy(-lr, &g, &mut yi);
+                }
+                vm::acc_mean(&yi, cohort.len() as f32, &mut next);
+            }
+            crate::vecmath::dist_sq(&next, &x0)
+        };
+        let loose = dist_after_one(0.0);
+        let tight = dist_after_one(50.0);
+        assert!(tight < loose, "mu=50 moved {tight}, mu=0 moved {loose}");
+    }
+}

@@ -1,0 +1,107 @@
+//! comp-(k, k'): composition of top-k and rand-k' (Appendix A.1.2) — the
+//! compressor family of Fig. 2.2.
+//!
+//! C(x) = top_k( rand_{k'}^{unbiased}(x) )
+//!
+//! rand-k' first sparsifies to a random support of size k' (scaled d/k'),
+//! then top-k keeps the k heaviest of those. The result is biased *and*
+//! random — exactly the kind of operator in C(eta, omega) \ (U ∪ B) that
+//! motivates EF-BV. Closed-form (eta, omega) are not tractable; we expose
+//! the paper-style analytical *bounds*
+//!   eta <= sqrt(1 - (k/k') * (k'/d))  = sqrt(1 - k/d)
+//!   omega <= (d/k')^2 * (k/k')  (crude variance envelope)
+//! but default to Monte-Carlo estimates via [`super::estimate_params`]
+//! (cached per dimension), which is what the experiments use for the
+//! lambda*/nu* scaling.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::{randk::sample_support, sparse_bits, topk::topk_into, Compressor, Params};
+use crate::Rng;
+
+pub struct CompKK {
+    pub k_top: usize,
+    pub k_rand: usize,
+    cache: RefCell<HashMap<usize, Params>>,
+}
+
+impl CompKK {
+    pub fn new(k_top: usize, k_rand: usize) -> Self {
+        assert!(k_top >= 1 && k_rand >= k_top);
+        Self { k_top, k_rand, cache: RefCell::new(HashMap::new()) }
+    }
+}
+
+impl Compressor for CompKK {
+    fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64 {
+        let d = x.len();
+        let kr = self.k_rand.min(d);
+        let kt = self.k_top.min(kr);
+        let mut support = Vec::with_capacity(kr);
+        sample_support(kr, d, &mut support, rng);
+        // rand-k' (unbiased): scaled selection
+        let scale = d as f32 / kr as f32;
+        let mut tmp = vec![0.0f32; d];
+        for &i in &support {
+            tmp[i as usize] = scale * x[i as usize];
+        }
+        let mut scratch = Vec::with_capacity(d);
+        topk_into(kt, &tmp, out, &mut scratch);
+        // wire: k values + k indices (the rand support is known from a
+        // shared seed in the overlapping-xi protocol, so only top-k entries
+        // are sent)
+        sparse_bits(kt, d)
+    }
+
+    fn params(&self, d: usize) -> Params {
+        if let Some(p) = self.cache.borrow().get(&d) {
+            return *p;
+        }
+        // Deterministic Monte-Carlo estimate (seeded), cached per d.
+        let mut rng = crate::rng(0xC0FFEE ^ (d as u64) ^ ((self.k_top as u64) << 20) ^ ((self.k_rand as u64) << 40));
+        let p = super::estimate_params(self, d, 8, 600, &mut rng);
+        // guard: keep eta strictly < 1 so scaling stays well-defined
+        let p = Params { eta: p.eta.min(0.999), omega: p.omega };
+        self.cache.borrow_mut().insert(d, p);
+        p
+    }
+
+    fn name(&self) -> String {
+        format!("comp-({},{})", self.k_top, self.k_rand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_has_at_most_k_nonzeros() {
+        let c = CompKK::new(2, 6);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) - 6.0).collect();
+        let mut out = vec![0.0; 12];
+        c.compress(&x, &mut out, &mut crate::rng(7));
+        assert!(out.iter().filter(|&&v| v != 0.0).count() <= 2);
+    }
+
+    #[test]
+    fn estimated_params_scalable() {
+        let c = CompKK::new(1, 8);
+        let p = c.params(16);
+        assert!(p.eta < 1.0);
+        assert!(p.omega > 0.0);
+        // scaling by lambda* must land in B(alpha): r(lambda*) < 1
+        assert!(p.r(p.lambda_star()) < 1.0);
+    }
+
+    #[test]
+    fn params_cached_and_deterministic() {
+        let c = CompKK::new(2, 8);
+        let p1 = c.params(32);
+        let p2 = c.params(32);
+        assert_eq!(p1, p2);
+        let c2 = CompKK::new(2, 8);
+        assert_eq!(c2.params(32), p1);
+    }
+}

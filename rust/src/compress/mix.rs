@@ -1,0 +1,88 @@
+//! mix-(k, k'): mixture of top-k and rand-k' (Appendix A.1.1).
+//!
+//! C(x) = top_k(x) + rand_{k'}^{unbiased}(x - top_k(x))
+//!
+//! The deterministic part keeps the k heaviest coordinates exactly; the
+//! unbiased rand-k' term covers the residual, making the whole operator
+//! *unbiased* (eta = 0) with variance
+//!   omega = (d/k' - 1) * (1 - k/d)
+//! (the rand-k' variance applied to a residual that top-k has already
+//! contracted by (1 - k/d)).
+
+use super::{randk::sample_support, sparse_bits, topk::topk_into, Compressor, Params};
+use crate::Rng;
+
+pub struct MixKK {
+    pub k_top: usize,
+    pub k_rand: usize,
+}
+
+impl MixKK {
+    pub fn new(k_top: usize, k_rand: usize) -> Self {
+        assert!(k_top >= 1 && k_rand >= 1);
+        Self { k_top, k_rand }
+    }
+}
+
+impl Compressor for MixKK {
+    fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64 {
+        let d = x.len();
+        let mut scratch = Vec::with_capacity(d);
+        topk_into(self.k_top, x, out, &mut scratch);
+        // residual support sampled over all of [0, d); entries already kept
+        // by top-k have zero residual so they contribute nothing.
+        let k = self.k_rand.min(d);
+        let mut support = Vec::with_capacity(k);
+        sample_support(k, d, &mut support, rng);
+        let scale = d as f32 / k as f32;
+        for &i in &support {
+            let i = i as usize;
+            let r = x[i] - out[i];
+            out[i] += scale * r;
+        }
+        sparse_bits(self.k_top.min(d), d) + sparse_bits(k, d)
+    }
+
+    fn params(&self, d: usize) -> Params {
+        let df = d as f32;
+        let kt = self.k_top.min(d) as f32;
+        let kr = self.k_rand.min(d) as f32;
+        Params { eta: 0.0, omega: (df / kr - 1.0) * (1.0 - kt / df) }
+    }
+
+    fn name(&self) -> String {
+        format!("mix-({},{})", self.k_top, self.k_rand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::estimate_params;
+
+    #[test]
+    fn unbiased_and_within_variance_bound() {
+        let c = MixKK::new(2, 4);
+        let p = estimate_params(&c, 16, 5, 4000, &mut crate::rng(5));
+        assert!(p.eta < 0.08, "bias {} should be ~0", p.eta);
+        let bound = c.params(16).omega;
+        assert!(p.omega <= bound * 1.15, "omega {} > bound {}", p.omega, bound);
+    }
+
+    #[test]
+    fn exact_when_k_top_covers_all() {
+        let c = MixKK::new(8, 2);
+        let x = vec![1.0, -2.0, 3.0, 0.5, 0.1, -0.7, 2.2, -1.1];
+        let mut out = vec![0.0; 8];
+        c.compress(&x, &mut out, &mut crate::rng(6));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn variance_decreases_with_k_top() {
+        let d = 32;
+        let small = MixKK::new(1, 4).params(d).omega;
+        let large = MixKK::new(16, 4).params(d).omega;
+        assert!(large < small);
+    }
+}

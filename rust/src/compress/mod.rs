@@ -1,0 +1,161 @@
+//! Compression operators — the `U(omega)`, `B(alpha)` and unified
+//! `C(eta, omega)` classes of Chapter 2, with exact bit accounting.
+//!
+//! A [`Compressor`] maps `x -> C(x)`; algorithms receive the *decompressed*
+//! value (written into a caller-provided buffer, allocation-free) plus the
+//! number of bits the message would occupy on the wire. The (eta, omega)
+//! parameters drive the optimal scaling factors
+//! `lambda* = min((1-eta)/((1-eta)^2 + omega), 1)` and
+//! `nu* = min((1-eta)/((1-eta)^2 + omega_ran), 1)` (Prop. 2.2.2 and
+//! Sect. 2.2.3), which in turn set the EF-BV stepsize.
+
+pub mod comp;
+pub mod mix;
+pub mod permk;
+pub mod quantize;
+pub mod randk;
+pub mod topk;
+
+use crate::Rng;
+
+/// Relative bias / variance of a compressor in the class `C(eta, omega)`:
+///   ||E[C(x)] - x||      <= eta   * ||x||
+///   E||C(x) - E[C(x)]||^2 <= omega * ||x||^2
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Params {
+    pub eta: f32,
+    pub omega: f32,
+}
+
+impl Params {
+    /// Contraction factor when used unscaled: 1 - alpha = eta^2 + omega
+    /// (valid iff < 1, i.e. the compressor is in B(alpha)).
+    pub fn one_minus_alpha(&self) -> f32 {
+        self.eta * self.eta + self.omega
+    }
+
+    /// Optimal scaling `lambda*` (Prop. 2.2.2).
+    pub fn lambda_star(&self) -> f32 {
+        let e = self.eta;
+        ((1.0 - e) / ((1.0 - e).powi(2) + self.omega)).min(1.0)
+    }
+
+    /// `r = (1 - lambda + lambda*eta)^2 + lambda^2 * omega` for a given
+    /// scaling lambda (Sect. 2.4).
+    pub fn r(&self, lambda: f32) -> f32 {
+        (1.0 - lambda + lambda * self.eta).powi(2) + lambda * lambda * self.omega
+    }
+}
+
+pub trait Compressor {
+    /// Write the decompressed `C(x)` into `out`; return message bits.
+    fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64;
+
+    /// Class parameters for input dimension `d`.
+    fn params(&self, d: usize) -> Params;
+
+    fn name(&self) -> String;
+
+    /// Average relative variance after aggregating `n` parallel compressors
+    /// (eq. 2.4). `xi` is the support-overlap group size of the comp-(k,k')
+    /// experiments: clients within a group of `xi` share randomness, so only
+    /// `n/xi` streams are independent. Default: fully independent.
+    fn omega_ran(&self, d: usize, n: usize, xi: usize) -> f32 {
+        let groups = (n / xi.max(1)).max(1) as f32;
+        self.params(d).omega / groups
+    }
+}
+
+/// Monte-Carlo estimate of (eta, omega) for compressors without tractable
+/// closed forms (e.g. comp-(k,k')). Samples isotropic gaussian inputs and
+/// takes the worst-case ratio over trials; used by tests and by callers who
+/// want empirical parameters (documented as such).
+pub fn estimate_params<C: Compressor + ?Sized>(
+    c: &C,
+    d: usize,
+    trials: usize,
+    reps: usize,
+    rng: &mut Rng,
+) -> Params {
+        let mut eta: f32 = 0.0;
+    let mut omega: f32 = 0.0;
+    let mut out = vec![0.0f32; d];
+    let mut mean = vec![0.0f32; d];
+    let mut sq = 0.0f32;
+    for _ in 0..trials {
+        let x: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let nx2 = crate::vecmath::norm_sq(&x).max(1e-12);
+        mean.fill(0.0);
+        sq = 0.0;
+        for _ in 0..reps {
+            c.compress(&x, &mut out, rng);
+            crate::vecmath::axpy(1.0 / reps as f32, &out, &mut mean);
+            sq += crate::vecmath::norm_sq(&out) / reps as f32;
+        }
+        let bias2 = crate::vecmath::dist_sq(&mean, &x);
+        let var = (sq - crate::vecmath::norm_sq(&mean)).max(0.0);
+        eta = eta.max((bias2 / nx2).sqrt());
+        omega = omega.max(var / nx2);
+    }
+    let _ = sq;
+    Params { eta, omega }
+}
+
+/// Identity "compressor" (no compression; dense f32 message).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&self, x: &[f32], out: &mut [f32], _rng: &mut Rng) -> u64 {
+        out.copy_from_slice(x);
+        32 * x.len() as u64
+    }
+    fn params(&self, _d: usize) -> Params {
+        Params { eta: 0.0, omega: 0.0 }
+    }
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+/// Bits for a sparse message of k (index, f32) pairs in dimension d.
+pub fn sparse_bits(k: usize, d: usize) -> u64 {
+    let idx_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
+    k as u64 * (32 + idx_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_lossless_and_param_free() {
+        let x = vec![1.0, -2.0, 3.0];
+        let mut out = vec![0.0; 3];
+        let bits = Identity.compress(&x, &mut out, &mut crate::rng(0));
+        assert_eq!(out, x);
+        assert_eq!(bits, 96);
+        assert_eq!(Identity.params(3), Params { eta: 0.0, omega: 0.0 });
+    }
+
+    #[test]
+    fn lambda_star_matches_diana_for_unbiased() {
+        // For C in U(omega), lambda* = 1/(1+omega) (Lemma 8 of EF21 paper).
+        let p = Params { eta: 0.0, omega: 3.0 };
+        assert!((p.lambda_star() - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn r_at_lambda_star_below_one() {
+        for &(eta, omega) in &[(0.0f32, 3.0f32), (0.5, 1.0), (0.9, 10.0)] {
+            let p = Params { eta, omega };
+            let r = p.r(p.lambda_star());
+            assert!(r < 1.0, "eta={eta} omega={omega} r={r}");
+        }
+    }
+
+    #[test]
+    fn sparse_bits_scales_with_log_d() {
+        assert_eq!(sparse_bits(1, 2), 32 + 1);
+        assert_eq!(sparse_bits(2, 1024), 2 * (32 + 10));
+    }
+}

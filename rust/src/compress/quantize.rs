@@ -1,0 +1,93 @@
+//! Stochastic s-level quantization (QSGD-style), an unbiased compressor.
+//!
+//! Each entry is encoded as sign * ||x|| * (l/s or (l+1)/s) with stochastic
+//! rounding between adjacent levels; unbiased with
+//!   omega = min(d/s^2, sqrt(d)/s)
+//! (Alistarh et al. 2017). Wire cost: 32 bits for the norm plus
+//! ceil(log2(2s+1)) bits per entry (sign + level).
+
+
+use super::{Compressor, Params};
+use crate::Rng;
+
+pub struct Qsgd {
+    pub levels: u32,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1);
+        Self { levels }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64 {
+        let s = self.levels as f32;
+        let nx = crate::vecmath::norm(x);
+        if nx == 0.0 {
+            out.fill(0.0);
+        } else {
+            for (o, &v) in out.iter_mut().zip(x) {
+                let u = v.abs() / nx * s; // in [0, s]
+                let l = u.floor();
+                let p = u - l;
+                let level = if rng.f32_unit() < p { l + 1.0 } else { l };
+                *o = v.signum() * nx * level / s;
+            }
+        }
+        let per_entry = 32 - (2 * self.levels).leading_zeros().min(31);
+        32 + x.len() as u64 * per_entry.max(1) as u64
+    }
+
+    fn params(&self, d: usize) -> Params {
+        let s = self.levels as f32;
+        let df = d as f32;
+        Params { eta: 0.0, omega: (df / (s * s)).min(df.sqrt() / s) }
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd-{}", self.levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::estimate_params;
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let q = Qsgd::new(4);
+        let x = vec![0.0; 8];
+        let mut out = vec![1.0; 8];
+        q.compress(&x, &mut out, &mut crate::rng(8));
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn unbiased_empirically() {
+        let q = Qsgd::new(4);
+        let p = estimate_params(&q, 16, 5, 4000, &mut crate::rng(9));
+        assert!(p.eta < 0.05, "bias {}", p.eta);
+        assert!(p.omega <= q.params(16).omega * 1.2 + 0.05);
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let q = Qsgd::new(2);
+        let x = vec![0.3, -0.4, 0.5, 0.1];
+        let mut out = vec![0.0; 4];
+        q.compress(&x, &mut out, &mut crate::rng(10));
+        let nx = crate::vecmath::norm(&x);
+        for &v in &out {
+            let lvl = (v.abs() / nx * 2.0).round();
+            assert!((v.abs() - nx * lvl / 2.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn more_levels_less_variance() {
+        assert!(Qsgd::new(16).params(64).omega < Qsgd::new(2).params(64).omega);
+    }
+}

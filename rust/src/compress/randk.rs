@@ -1,0 +1,125 @@
+//! rand-k: uniform random sparsification.
+//!
+//! * Unbiased variant (Def. 1.5.3): keeps k coordinates chosen uniformly at
+//!   random, scaled by d/k. In U(omega) with omega = d/k - 1.
+//! * Scaled (biased) variant: same selection, no d/k scaling — this is the
+//!   unbiased compressor pre-scaled by lambda = k/d (Sect. 2.2.3), landing
+//!   in B(k/d) with eta = 1 - k/d, omega = (k/d)(1 - k/d).
+
+
+use super::{sparse_bits, Compressor, Params};
+use crate::Rng;
+
+pub struct RandK {
+    pub k: usize,
+    /// If true, multiply kept entries by d/k (unbiased).
+    pub unbiased: bool,
+}
+
+impl RandK {
+    pub fn unbiased(k: usize) -> Self {
+        Self { k, unbiased: true }
+    }
+    pub fn scaled(k: usize) -> Self {
+        Self { k, unbiased: false }
+    }
+}
+
+/// Sample k distinct indices in [0, d) into `support` (Floyd's algorithm;
+/// allocation-free given a reusable buffer).
+pub fn sample_support(k: usize, d: usize, support: &mut Vec<u32>, rng: &mut Rng) {
+    support.clear();
+    if k >= d {
+        support.extend(0..d as u32);
+        return;
+    }
+    for j in (d - k)..d {
+        let t = rng.u32_inclusive(j as u32);
+        if support.contains(&t) {
+            support.push(j as u32);
+        } else {
+            support.push(t);
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64 {
+        let d = x.len();
+        let k = self.k.min(d);
+        let mut support = Vec::with_capacity(k);
+        sample_support(k, d, &mut support, rng);
+        out.fill(0.0);
+        let scale = if self.unbiased { d as f32 / k as f32 } else { 1.0 };
+        for &i in &support {
+            out[i as usize] = scale * x[i as usize];
+        }
+        sparse_bits(k, d)
+    }
+
+    fn params(&self, d: usize) -> Params {
+        let kf = self.k.min(d) as f32;
+        let df = d as f32;
+        if self.unbiased {
+            Params { eta: 0.0, omega: df / kf - 1.0 }
+        } else {
+            let q = kf / df;
+            Params { eta: 1.0 - q, omega: q * (1.0 - q) }
+        }
+    }
+
+    fn name(&self) -> String {
+        if self.unbiased {
+            format!("rand-{}", self.k)
+        } else {
+            format!("srand-{}", self.k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::estimate_params;
+
+    #[test]
+    fn support_is_distinct_and_sized() {
+        let mut rng = crate::rng(2);
+        let mut s = Vec::new();
+        for _ in 0..50 {
+            sample_support(5, 20, &mut s, &mut rng);
+            assert_eq!(s.len(), 5);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 5);
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let c = RandK::unbiased(3);
+        let p = estimate_params(&c, 12, 5, 4000, &mut crate::rng(3));
+        assert!(p.eta < 0.06, "empirical bias {} should be ~0", p.eta);
+        let bound = c.params(12).omega;
+        assert!(p.omega <= bound * 1.1, "omega {} > bound {}", p.omega, bound);
+    }
+
+    #[test]
+    fn scaled_params_match_theory() {
+        let p = RandK::scaled(4).params(16);
+        assert!((p.eta - 0.75).abs() < 1e-6);
+        assert!((p.omega - 0.25 * 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scaled_keeps_values_unscaled() {
+        let x = vec![2.0; 8];
+        let mut out = vec![0.0; 8];
+        RandK::scaled(3).compress(&x, &mut out, &mut crate::rng(4));
+        for &v in &out {
+            assert!(v == 0.0 || v == 2.0);
+        }
+        assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 3);
+    }
+}

@@ -1,0 +1,98 @@
+//! top-k: the canonical biased contractive compressor (Def. 1.5.4).
+//!
+//! Keeps the k entries of largest magnitude, zeroes the rest. Deterministic;
+//! in B(alpha) with alpha = k/d, i.e. C(eta=sqrt(1-k/d), omega=0).
+
+use super::{sparse_bits, Compressor, Params};
+use crate::Rng;
+
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self { k }
+    }
+}
+
+/// Write top-k of `x` into `out` using `scratch` for selection
+/// (allocation-free when scratch is reused across calls).
+pub fn topk_into(k: usize, x: &[f32], out: &mut [f32], scratch: &mut Vec<u32>) {
+    let d = x.len();
+    out.fill(0.0);
+    if k >= d {
+        out.copy_from_slice(x);
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..d as u32);
+    // partial selection of the k largest |x_i|
+    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for &i in scratch[..k].iter() {
+        out[i as usize] = x[i as usize];
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, x: &[f32], out: &mut [f32], _rng: &mut Rng) -> u64 {
+        let mut scratch = Vec::with_capacity(x.len());
+        topk_into(self.k, x, out, &mut scratch);
+        sparse_bits(self.k.min(x.len()), x.len())
+    }
+
+    fn params(&self, d: usize) -> Params {
+        let a = (self.k.min(d)) as f32 / d as f32;
+        Params { eta: (1.0 - a).max(0.0).sqrt(), omega: 0.0 }
+    }
+
+    fn name(&self) -> String {
+        format!("top-{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::estimate_params;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let x = vec![0.1, -5.0, 3.0, 0.2, -0.3];
+        let mut out = vec![0.0; 5];
+        TopK::new(2).compress(&x, &mut out, &mut crate::rng(0));
+        assert_eq!(out, vec![0.0, -5.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn k_ge_d_is_identity() {
+        let x = vec![1.0, 2.0];
+        let mut out = vec![0.0; 2];
+        TopK::new(5).compress(&x, &mut out, &mut crate::rng(0));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn contraction_bound_holds_empirically() {
+        // ||top_k(x) - x||^2 <= (1 - k/d) ||x||^2 for all x
+        let c = TopK::new(3);
+        let p = estimate_params(&c, 16, 50, 1, &mut crate::rng(1));
+        let bound = c.params(16);
+        assert!(p.eta <= bound.eta + 1e-4, "estimated {} > bound {}", p.eta, bound.eta);
+        assert!(p.omega < 1e-6);
+    }
+
+    #[test]
+    fn ties_keep_exactly_k() {
+        let x = vec![1.0; 6];
+        let mut out = vec![0.0; 6];
+        TopK::new(2).compress(&x, &mut out, &mut crate::rng(0));
+        assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+}

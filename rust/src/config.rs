@@ -1,0 +1,293 @@
+//! TOML experiment configuration for the `fedeff` CLI.
+//!
+//! Parsed with an in-tree minimal-TOML parser (no external `toml` crate
+//! offline): sections (`[experiment]`), `key = value` lines with string,
+//! number and boolean values, and `#` comments — the subset the specs use.
+//!
+//! ```toml
+//! [experiment]
+//! name = "my-run"
+//! seed = 1
+//! rounds = 500
+//! eval_every = 25
+//!
+//! [dataset]
+//! kind = "logreg"          # logreg | mlp | lm
+//! profile = "mushrooms"
+//! clients = 10
+//! heterogeneity = "feature" # iid | feature | class
+//!
+//! [algorithm]
+//! kind = "scafflix"        # gd | efbv | ef21 | diana | scafflix | fedavg | sppm
+//! alpha = 0.5
+//! p = 0.2
+//! gamma = 1.0
+//! k_local = 5
+//! compressor = "top-k"     # top-k | rand-k | comp | mix | qsgd
+//! k = 1
+//! sampler = "nice"         # full | nice | block | stratified
+//! tau = 10
+//! solver = "bfgs"          # gd | cg | bfgs | adam
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed TOML document: section -> key -> raw value.
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    pub sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // avoid cutting '#' inside quotes (good enough for our specs)
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                    &raw[..i]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let mut val = v.trim().to_string();
+                if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                doc.sections.entry(section.clone()).or_default().insert(key, val);
+            } else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f32(&self, section: &str, key: &str) -> Option<f32> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.parse().ok()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub seed: u64,
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub outdir: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub kind: String,
+    pub profile: String,
+    pub clients: usize,
+    pub heterogeneity: Option<String>,
+    pub reg: f32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AlgorithmSpec {
+    pub kind: String,
+    pub alpha: Option<f32>,
+    pub p: Option<f32>,
+    pub gamma: Option<f32>,
+    pub lr: Option<f32>,
+    pub k_local: Option<usize>,
+    pub local_steps: Option<usize>,
+    pub compressor: Option<String>,
+    pub k: Option<usize>,
+    pub k_prime: Option<usize>,
+    pub sampler: Option<String>,
+    pub tau: Option<usize>,
+    pub solver: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub experiment: ExperimentSpec,
+    pub dataset: DatasetSpec,
+    pub algorithm: AlgorithmSpec,
+}
+
+impl Spec {
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let t = Toml::parse(text)?;
+        let experiment = ExperimentSpec {
+            name: t
+                .get("experiment", "name")
+                .context("[experiment] name is required")?
+                .to_string(),
+            seed: t.get_u64("experiment", "seed").unwrap_or(0),
+            rounds: t.get_usize("experiment", "rounds").unwrap_or(200),
+            eval_every: t.get_usize("experiment", "eval_every").unwrap_or(10),
+            outdir: t.get("experiment", "outdir").unwrap_or("results").to_string(),
+        };
+        let dataset = DatasetSpec {
+            kind: t.get("dataset", "kind").unwrap_or("logreg").to_string(),
+            profile: t.get("dataset", "profile").unwrap_or("mushrooms").to_string(),
+            clients: t.get_usize("dataset", "clients").unwrap_or(10),
+            heterogeneity: t.get("dataset", "heterogeneity").map(|s| s.to_string()),
+            reg: t.get_f32("dataset", "reg").unwrap_or(0.1),
+        };
+        let algorithm = AlgorithmSpec {
+            kind: t.get("algorithm", "kind").context("[algorithm] kind is required")?.to_string(),
+            alpha: t.get_f32("algorithm", "alpha"),
+            p: t.get_f32("algorithm", "p"),
+            gamma: t.get_f32("algorithm", "gamma"),
+            lr: t.get_f32("algorithm", "lr"),
+            k_local: t.get_usize("algorithm", "k_local"),
+            local_steps: t.get_usize("algorithm", "local_steps"),
+            compressor: t.get("algorithm", "compressor").map(|s| s.to_string()),
+            k: t.get_usize("algorithm", "k"),
+            k_prime: t.get_usize("algorithm", "k_prime"),
+            sampler: t.get("algorithm", "sampler").map(|s| s.to_string()),
+            tau: t.get_usize("algorithm", "tau"),
+            solver: t.get("algorithm", "solver").map(|s| s.to_string()),
+        };
+        Ok(Spec { experiment, dataset, algorithm })
+    }
+}
+
+/// Build a compressor from the spec.
+pub fn build_compressor(
+    a: &AlgorithmSpec,
+    _d: usize,
+) -> Result<Box<dyn crate::compress::Compressor>> {
+    let k = a.k.unwrap_or(1);
+    let kp = a.k_prime.unwrap_or(8);
+    Ok(match a.compressor.as_deref().unwrap_or("top-k") {
+        "top-k" => Box::new(crate::compress::topk::TopK::new(k)),
+        "rand-k" => Box::new(crate::compress::randk::RandK::unbiased(k)),
+        "srand-k" => Box::new(crate::compress::randk::RandK::scaled(k)),
+        "comp" => Box::new(crate::compress::comp::CompKK::new(k, kp)),
+        "mix" => Box::new(crate::compress::mix::MixKK::new(k, kp)),
+        "qsgd" => Box::new(crate::compress::quantize::Qsgd::new(k as u32)),
+        "identity" => Box::new(crate::compress::Identity),
+        other => anyhow::bail!("unknown compressor {other}"),
+    })
+}
+
+/// Build a cohort sampler from the spec.
+pub fn build_sampler(
+    a: &AlgorithmSpec,
+    n: usize,
+) -> Result<Box<dyn crate::sampling::CohortSampler>> {
+    let tau = a.tau.unwrap_or(10.min(n));
+    Ok(match a.sampler.as_deref().unwrap_or("nice") {
+        "full" => Box::new(crate::sampling::FullSampling { n }),
+        "nice" => Box::new(crate::sampling::NiceSampling { n, tau }),
+        "block" => Box::new(crate::sampling::BlockSampling::new(
+            crate::sampling::contiguous_blocks(n, tau.max(1)),
+            None,
+        )),
+        "stratified" => Box::new(crate::sampling::StratifiedSampling::new(
+            crate::sampling::contiguous_blocks(n, tau.max(1)),
+        )),
+        other => anyhow::bail!("unknown sampler {other}"),
+    })
+}
+
+/// Build a prox solver from the spec.
+pub fn build_solver(a: &AlgorithmSpec) -> Result<Box<dyn crate::prox::ProxSolver>> {
+    Ok(match a.solver.as_deref().unwrap_or("bfgs") {
+        "gd" => Box::new(crate::prox::LocalGdSolver),
+        "cg" => Box::new(crate::prox::CgSolver),
+        "bfgs" => Box::new(crate::prox::LbfgsSolver::default()),
+        "adam" => Box::new(crate::prox::AdamSolver::default()),
+        other => anyhow::bail!("unknown solver {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[experiment]
+name = "demo"   # inline comment
+seed = 3
+rounds = 50
+
+[dataset]
+kind = "logreg"
+profile = "a6a"
+clients = 10
+
+[algorithm]
+kind = "sppm"
+gamma = 100.0
+k_local = 10
+sampler = "stratified"
+tau = 5
+solver = "cg"
+"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let s = Spec::parse(SAMPLE).unwrap();
+        assert_eq!(s.experiment.name, "demo");
+        assert_eq!(s.experiment.rounds, 50);
+        assert_eq!(s.experiment.eval_every, 10); // default
+        assert_eq!(s.dataset.profile, "a6a");
+        assert_eq!(s.algorithm.kind, "sppm");
+        assert_eq!(s.algorithm.k_local, Some(10));
+        assert_eq!(s.algorithm.gamma, Some(100.0));
+    }
+
+    #[test]
+    fn builders_produce_requested_kinds() {
+        let s = Spec::parse(SAMPLE).unwrap();
+        let samp = build_sampler(&s.algorithm, 10).unwrap();
+        assert!(samp.name().starts_with("SS"));
+        let solver = build_solver(&s.algorithm).unwrap();
+        assert_eq!(solver.name(), "CG");
+        let comp = build_compressor(&s.algorithm, 100).unwrap();
+        assert_eq!(comp.name(), "top-1");
+    }
+
+    #[test]
+    fn rejects_unknown_kinds_and_bad_lines() {
+        let mut s = Spec::parse(SAMPLE).unwrap();
+        s.algorithm.solver = Some("newton-raphson".into());
+        assert!(build_solver(&s.algorithm).is_err());
+        assert!(Toml::parse("not a kv line").is_err());
+        assert!(Toml::parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn missing_required_keys_error() {
+        assert!(Spec::parse("[experiment]\nseed = 1\n[algorithm]\nkind = \"gd\"").is_err());
+        assert!(Spec::parse("[experiment]\nname = \"x\"").is_err());
+    }
+}

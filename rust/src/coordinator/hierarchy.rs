@@ -1,0 +1,85 @@
+//! Server–hub–client hierarchical FL (Sect. 5.4.5, Fig. 5.5).
+//!
+//! Clients talk only to their regional hub (cost `c1` per local round);
+//! hubs talk to the central server (cost `c2` per global round). Under
+//! SPPM-AS a global iteration with K local communication rounds costs
+//! `c1 * K + c2`; under LocalGD every global round costs `c1 + c2`.
+
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    /// Clients served by each hub.
+    pub hubs: Vec<Vec<usize>>,
+    /// Client -> hub cost per local communication round.
+    pub c1: f64,
+    /// Hub -> server cost per global round.
+    pub c2: f64,
+}
+
+impl Hierarchy {
+    /// Evenly assign n clients to m hubs.
+    pub fn even(n: usize, m: usize, c1: f64, c2: f64) -> Self {
+        let mut hubs = vec![Vec::new(); m];
+        for i in 0..n {
+            hubs[i * m / n].push(i);
+        }
+        Self { hubs, c1, c2 }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.hubs.iter().map(|h| h.len()).sum()
+    }
+
+    /// Cost of one SPPM-AS global iteration with K local rounds.
+    pub fn sppm_round_cost(&self, k_local: usize) -> f64 {
+        self.c1 * k_local as f64 + self.c2
+    }
+
+    /// Cost of one LocalGD/FedAvg global round.
+    pub fn localgd_round_cost(&self) -> f64 {
+        self.c1 + self.c2
+    }
+
+    /// Total cost for T global iterations of SPPM-AS.
+    pub fn sppm_total(&self, t: usize, k_local: usize) -> f64 {
+        t as f64 * self.sppm_round_cost(k_local)
+    }
+
+    pub fn hub_of(&self, client: usize) -> Option<usize> {
+        self.hubs.iter().position(|h| h.contains(&client))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_assignment_partitions() {
+        let h = Hierarchy::even(10, 3, 0.05, 1.0);
+        assert_eq!(h.n_clients(), 10);
+        assert_eq!(h.hubs.len(), 3);
+        for i in 0..10 {
+            assert!(h.hub_of(i).is_some());
+        }
+    }
+
+    #[test]
+    fn cost_model_matches_paper() {
+        // flat setting: c1=1, c2=0 -> TK
+        let flat = Hierarchy::even(10, 1, 1.0, 0.0);
+        assert_eq!(flat.sppm_total(5, 7), 35.0);
+        // hierarchical: local rounds much cheaper than global
+        let h = Hierarchy::even(100, 10, 0.05, 1.0);
+        assert_eq!(h.sppm_round_cost(10), 1.5);
+        assert_eq!(h.localgd_round_cost(), 1.05);
+    }
+
+    #[test]
+    fn sppm_wins_when_it_needs_fewer_globals() {
+        // if SPPM needs 10x fewer global rounds, hierarchical costs favor it
+        let h = Hierarchy::even(100, 10, 0.05, 1.0);
+        let sppm = h.sppm_total(10, 10); // 10 globals, 10 local rounds each
+        let localgd = 100.0 * h.localgd_round_cost(); // 100 globals
+        assert!(sppm < localgd);
+    }
+}

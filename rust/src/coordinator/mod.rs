@@ -1,0 +1,126 @@
+//! The L3 coordinator: round orchestration, communication ledger,
+//! topologies, and the threaded client pump used by the CLI launcher.
+//!
+//! The algorithm modules own their mathematical loops; the coordinator
+//! owns *everything around them*: who talks to whom at what cost
+//! ([`hierarchy::Hierarchy`]), how bits are accounted ([`CommLedger`]),
+//! and how a fleet of clients executes concurrently
+//! ([`run_cohort_parallel`], for the `Send + Sync` pure-Rust oracles; the
+//! PJRT-backed oracles run on the driver thread because the FFI handles
+//! are not `Send`).
+
+pub mod hierarchy;
+
+use anyhow::Result;
+
+use crate::oracle::Oracle;
+
+/// Exact communication accounting (bits + abstract cost units).
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    pub bits_up: u64,
+    pub bits_down: u64,
+    pub cost: f64,
+    /// Per-round log: (round, bits_up, bits_down, cost).
+    pub history: Vec<(usize, u64, u64, f64)>,
+}
+
+impl CommLedger {
+    pub fn up(&mut self, bits: u64) {
+        self.bits_up += bits;
+    }
+    pub fn down(&mut self, bits: u64) {
+        self.bits_down += bits;
+    }
+    pub fn charge(&mut self, cost: f64) {
+        self.cost += cost;
+    }
+    pub fn snapshot(&mut self, round: usize) {
+        self.history.push((round, self.bits_up, self.bits_down, self.cost));
+    }
+}
+
+/// One concurrent cohort evaluation: every client computes its gradient at
+/// `x` on its own OS thread (scoped; no external runtime needed). Requires
+/// a `Send + Sync` oracle — i.e. the pure-Rust ones.
+pub fn run_cohort_parallel<O>(
+    oracle: &O,
+    cohort: &[usize],
+    x: &[f32],
+) -> Result<Vec<(usize, f32, Vec<f32>)>>
+where
+    O: Oracle + Send + Sync,
+{
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = cohort.len().div_ceil(n_threads.max(1)).max(1);
+    let mut out: Vec<(usize, f32, Vec<f32>)> = Vec::with_capacity(cohort.len());
+    let results = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for ids in cohort.chunks(chunk) {
+            handles.push(scope.spawn(move || {
+                let mut part = Vec::with_capacity(ids.len());
+                for &i in ids {
+                    let mut g = vec![0.0f32; oracle.dim()];
+                    let loss = oracle.loss_grad(i, x, &mut g)?;
+                    part.push((i, loss, g));
+                }
+                Ok::<_, anyhow::Error>(part)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("cohort worker panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    for part in results {
+        out.extend(part);
+    }
+    out.sort_by_key(|(i, _, _)| *i);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::quadratic::QuadraticOracle;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CommLedger::default();
+        l.up(100);
+        l.down(50);
+        l.charge(2.5);
+        l.snapshot(1);
+        l.up(100);
+        l.snapshot(2);
+        assert_eq!(l.history, vec![(1, 100, 50, 2.5), (2, 200, 50, 2.5)]);
+    }
+
+    #[test]
+    fn parallel_cohort_matches_serial() {
+        let mut rng = crate::rng(42);
+        let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.7f32; 5];
+        let cohort = vec![0, 2, 4];
+        let par = run_cohort_parallel(&q, &cohort, &x).unwrap();
+        assert_eq!(par.len(), 3);
+        for (i, loss, g) in par {
+            let mut g2 = vec![0.0f32; 5];
+            let l2 = q.loss_grad(i, &x, &mut g2).unwrap();
+            assert_eq!(loss, l2);
+            assert_eq!(g, g2);
+        }
+    }
+
+    #[test]
+    fn parallel_cohort_full_fleet() {
+        let mut rng = crate::rng(43);
+        let q = QuadraticOracle::random(32, 5, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.3f32; 5];
+        let cohort: Vec<usize> = (0..32).collect();
+        let out = run_cohort_parallel(&q, &cohort, &x).unwrap();
+        assert_eq!(out.len(), 32);
+        // sorted by client id
+        assert!(out.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

@@ -1,0 +1,162 @@
+//! Character corpus + tokenizer for the LM experiments (Ch. 6 + e2e).
+//!
+//! The paper evaluates on Wikitext-2 with LLaMA-class models; the
+//! substitution (DESIGN.md) is a deterministic synthetic English-like
+//! corpus: words drawn from a Zipf-weighted lexicon, sentences with
+//! punctuation and structure. This gives the LM real statistical signal
+//! (frequent words, local n-gram regularities) so the loss curve and the
+//! perplexity ordering of pruning methods behave like they do on text.
+//!
+//! Tokenizer: printable ASCII 32..=126 -> ids 0..=94, '\n' -> 95
+//! (vocab 96, matching `LmConfig.vocab`).
+
+
+use super::FedTokenDataset;
+use crate::Rng;
+
+pub const VOCAB: usize = 96;
+
+/// Encode a char to its token id.
+pub fn encode_char(c: char) -> Option<u8> {
+    match c {
+        ' '..='~' => Some(c as u8 - 32),
+        '\n' => Some(95),
+        _ => None,
+    }
+}
+
+pub fn encode(text: &str) -> Vec<f32> {
+    text.chars().filter_map(encode_char).map(|t| t as f32).collect()
+}
+
+pub fn decode(tokens: &[f32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let t = t as u8;
+            if t == 95 {
+                '\n'
+            } else {
+                (t + 32) as char
+            }
+        })
+        .collect()
+}
+
+const LEXICON: &[&str] = &[
+    "the", "of", "and", "to", "a", "in", "is", "was", "for", "with", "that", "on", "as",
+    "by", "at", "from", "it", "his", "her", "this", "are", "were", "which", "be", "or",
+    "model", "client", "server", "learning", "federated", "communication", "gradient",
+    "compression", "training", "local", "round", "data", "network", "system", "method",
+    "sparse", "dense", "weight", "update", "cost", "rate", "error", "bound", "proof",
+    "theorem", "lemma", "convex", "smooth", "optimal", "linear", "random", "sampling",
+    "pruning", "personalization", "acceleration", "convergence", "variance", "reduction",
+];
+
+/// Generate a deterministic synthetic corpus of roughly `n_chars` chars.
+pub fn synth_corpus(n_chars: usize, rng: &mut Rng) -> String {
+    // Zipf-ish weights: w_k ∝ 1/(k+1)
+    let weights: Vec<f32> = (0..LEXICON.len()).map(|k| 1.0 / (k as f32 + 1.0)).collect();
+    let total: f32 = weights.iter().sum();
+    let mut out = String::with_capacity(n_chars + 64);
+    let mut words_in_sentence = 0;
+    while out.len() < n_chars {
+        let mut r = rng.f32_range(0.0, total);
+        let mut idx = 0;
+        for (k, w) in weights.iter().enumerate() {
+            if r < *w {
+                idx = k;
+                break;
+            }
+            r -= w;
+        }
+        if words_in_sentence == 0 {
+            // capitalize sentence starts
+            let w = LEXICON[idx];
+            let mut cs = w.chars();
+            if let Some(f) = cs.next() {
+                out.push(f.to_ascii_uppercase());
+                out.push_str(cs.as_str());
+            }
+        } else {
+            out.push_str(LEXICON[idx]);
+        }
+        words_in_sentence += 1;
+        if words_in_sentence >= 6 + (rng.below(8)) {
+            out.push('.');
+            out.push(if rng.below(4) == 0 { '\n' } else { ' ' });
+            words_in_sentence = 0;
+        } else {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+/// Slice a token stream into non-overlapping sequences of `seq_len`.
+pub fn to_sequences(tokens: &[f32], seq_len: usize) -> Vec<Vec<f32>> {
+    tokens.chunks_exact(seq_len).map(|c| c.to_vec()).collect()
+}
+
+/// Build a federated token dataset: a synthetic corpus split contiguously
+/// across clients (each client gets a different region — the natural
+/// heterogeneity of the Shakespeare-style split), plus a held-out eval set.
+pub fn fed_token_dataset(
+    n_clients: usize,
+    seqs_per_client: usize,
+    eval_seqs: usize,
+    seq_len: usize,
+    rng: &mut Rng,
+) -> FedTokenDataset {
+    let need = (n_clients * seqs_per_client + eval_seqs) * seq_len + seq_len;
+    let text = synth_corpus(need * 2, rng);
+    let tokens = encode(&text);
+    let seqs = to_sequences(&tokens, seq_len);
+    assert!(
+        seqs.len() >= n_clients * seqs_per_client + eval_seqs,
+        "corpus too small: {} seqs",
+        seqs.len()
+    );
+    let mut it = seqs.into_iter();
+    let clients: Vec<Vec<Vec<f32>>> = (0..n_clients)
+        .map(|_| (0..seqs_per_client).map(|_| it.next().unwrap()).collect())
+        .collect();
+    let eval: Vec<Vec<f32>> = (0..eval_seqs).map(|_| it.next().unwrap()).collect();
+    FedTokenDataset { clients, eval, seq_len, vocab: VOCAB }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let s = "Hello, federated world!\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut rng = crate::rng(8);
+        let text = synth_corpus(2000, &mut rng);
+        let toks = encode(&text);
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB));
+        assert!(toks.len() >= 2000 - 32);
+    }
+
+    #[test]
+    fn fed_dataset_shapes() {
+        let mut rng = crate::rng(9);
+        let ds = fed_token_dataset(3, 4, 2, 32, &mut rng);
+        assert_eq!(ds.clients.len(), 3);
+        assert!(ds.clients.iter().all(|c| c.len() == 4 && c[0].len() == 32));
+        assert_eq!(ds.eval.len(), 2);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = synth_corpus(500, &mut crate::rng(10));
+        let b = synth_corpus(500, &mut crate::rng(10));
+        assert_eq!(a, b);
+    }
+}

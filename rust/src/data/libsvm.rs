@@ -1,0 +1,127 @@
+//! LibSVM-format parser.
+//!
+//! When real dataset files (mushrooms, a6a, w6a, ...) are placed under
+//! `data/`, experiments use them directly; otherwise the synthetic
+//! profiles from [`super::synth`] stand in (DESIGN.md §Substitutions).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{BinShard, FedBinDataset};
+
+/// Parse a LibSVM file into a dense shard. Labels are mapped to ±1
+/// (any label <= 0 or == 2 becomes -1, matching the common encodings).
+pub fn parse(path: impl AsRef<Path>, d_hint: Option<usize>) -> Result<BinShard> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    parse_str(&text, d_hint)
+}
+
+pub fn parse_str(text: &str, d_hint: Option<usize>) -> Result<BinShard> {
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut d = d_hint.unwrap_or(0);
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let label: f32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: empty"))?
+            .parse()
+            .with_context(|| format!("line {lineno}: bad label"))?;
+        let label = if label > 0.0 && label != 2.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        for tok in it {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad feature {tok}"))?;
+            let idx: usize = idx.parse().with_context(|| format!("line {lineno}"))?;
+            let val: f32 = val.parse().with_context(|| format!("line {lineno}"))?;
+            anyhow::ensure!(idx >= 1, "line {lineno}: LibSVM indices are 1-based");
+            d = d.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push((label, feats));
+    }
+    let m = rows.len();
+    let mut x = vec![0.0f32; m * d];
+    let mut y = Vec::with_capacity(m);
+    for (i, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(label);
+        for (j, v) in feats {
+            x[i * d + j] = v;
+        }
+    }
+    Ok(BinShard { x, y, m, d })
+}
+
+/// Split a monolithic shard into `n_clients` federated shards of exactly
+/// `m_per` rows (truncating the remainder), preserving row order — the
+/// "uniform split" used by the paper's logreg experiments. Feature-wise
+/// non-iid is achieved by sorting rows by a feature projection first.
+pub fn to_federated(shard: &BinShard, n_clients: usize, m_per: usize, feature_sort: bool) -> FedBinDataset {
+    let d = shard.d;
+    let mut order: Vec<usize> = (0..shard.m).collect();
+    if feature_sort {
+        // project rows onto their mean feature value; sorting by it groups
+        // similar rows -> heterogeneous shards (feature-wise non-iid)
+        let key: Vec<f32> = (0..shard.m)
+            .map(|i| shard.row(i).iter().sum::<f32>() / d as f32)
+            .collect();
+        order.sort_by(|&a, &b| key[a].partial_cmp(&key[b]).unwrap());
+    }
+    let mut clients = Vec::with_capacity(n_clients);
+    for c in 0..n_clients {
+        let mut x = Vec::with_capacity(m_per * d);
+        let mut y = Vec::with_capacity(m_per);
+        for k in 0..m_per {
+            let i = order[(c * m_per + k) % shard.m];
+            x.extend_from_slice(shard.row(i));
+            y.push(shard.y[i]);
+        }
+        clients.push(BinShard { x, y, m: m_per, d });
+    }
+    FedBinDataset { clients, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.0
+-1 2:2.0
++1 1:1.5 2:0.5 3:0.25
+";
+
+    #[test]
+    fn parse_dense() {
+        let s = parse_str(SAMPLE, None).unwrap();
+        assert_eq!((s.m, s.d), (3, 3));
+        assert_eq!(s.row(0), &[0.5, 0.0, 1.0]);
+        assert_eq!(s.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(s.y, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn label_two_is_negative() {
+        let s = parse_str("2 1:1.0\n1 1:2.0\n", None).unwrap();
+        assert_eq!(s.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn federated_split_shapes() {
+        let s = parse_str(SAMPLE, Some(4)).unwrap();
+        let fed = to_federated(&s, 2, 2, true);
+        assert_eq!(fed.clients.len(), 2);
+        assert!(fed.clients.iter().all(|c| c.m == 2 && c.d == 4));
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_str("+1 0:1.0\n", None).is_err());
+    }
+}

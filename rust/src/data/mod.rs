@@ -1,0 +1,79 @@
+//! Datasets and federated partitioning.
+//!
+//! The dissertation's experiments run on LibSVM datasets (mushrooms, a6a,
+//! w6a, a9a, ijcnn1), FEMNIST/Shakespeare, CIFAR10/100, EMNIST-L and
+//! FashionMNIST. This module provides:
+//!
+//! * a LibSVM-format parser ([`libsvm`]) used when the real files are
+//!   present under `data/`;
+//! * deterministic synthetic generators ([`synth`]) matched to each
+//!   profile's dimensionality and heterogeneity structure — the
+//!   substitution documented in DESIGN.md;
+//! * non-iid partitioners ([`partition`]): class-wise, Dirichlet,
+//!   feature-wise;
+//! * a character corpus + tokenizer ([`corpus`]) for the LM experiments.
+
+pub mod corpus;
+pub mod libsvm;
+pub mod partition;
+pub mod synth;
+
+/// A binary-classification shard: rows of features with ±1 labels.
+#[derive(Debug, Clone)]
+pub struct BinShard {
+    /// Row-major [m, d].
+    pub x: Vec<f32>,
+    /// Labels in {-1, +1}, length m.
+    pub y: Vec<f32>,
+    pub m: usize,
+    pub d: usize,
+}
+
+impl BinShard {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// A multiclass shard: rows of features with integer labels (stored f32 so
+/// they can feed the f32-only artifact inputs directly).
+#[derive(Debug, Clone)]
+pub struct ClassShard {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub m: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+/// A federated binary dataset: one shard per client.
+#[derive(Debug, Clone)]
+pub struct FedBinDataset {
+    pub clients: Vec<BinShard>,
+    pub d: usize,
+}
+
+impl FedBinDataset {
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+/// A federated multiclass dataset with a held-out test shard.
+#[derive(Debug, Clone)]
+pub struct FedClassDataset {
+    pub clients: Vec<ClassShard>,
+    pub test: ClassShard,
+    pub d: usize,
+    pub classes: usize,
+}
+
+/// A federated token dataset: per-client sequences + a held-out eval set.
+#[derive(Debug, Clone)]
+pub struct FedTokenDataset {
+    /// Per client: sequences, each of length `seq_len`, stored f32.
+    pub clients: Vec<Vec<Vec<f32>>>,
+    pub eval: Vec<Vec<f32>>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}

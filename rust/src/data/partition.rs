@@ -1,0 +1,218 @@
+//! Non-iid federated partitioners (class-wise "S1", Dirichlet "S2",
+//! feature-wise) — the splitting techniques of chapters 3–5.
+
+
+use super::ClassShard;
+use crate::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Split {
+    /// Uniform iid split.
+    Iid,
+    /// Class-wise non-iid (the paper's "S1"): each client holds samples
+    /// from `classes_per_client` classes only.
+    ClassWise { classes_per_client: usize },
+    /// Dirichlet non-iid (the paper's "S2") with concentration `alpha`:
+    /// smaller alpha = more skew.
+    Dirichlet { alpha: f32 },
+}
+
+fn gamma_sample(shape: f32, rng: &mut Rng) -> f32 {
+    // Marsaglia–Tsang for shape >= 1; boost for shape < 1.
+    if shape < 1.0 {
+        let u: f32 = rng.f32_range(1e-6, 1.0);
+        return gamma_sample(shape + 1.0, rng) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x: f32 = {
+            let s: f32 = (0..6).map(|_| rng.f32_range(-1.0, 1.0)).sum();
+            s / (6.0f32 / 3.0).sqrt()
+        };
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f32 = rng.f32_range(1e-9, 1.0);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// Sample a Dirichlet(alpha, k) probability vector.
+pub fn dirichlet(alpha: f32, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut g: Vec<f32> = (0..k).map(|_| gamma_sample(alpha, rng)).collect();
+    let s: f32 = g.iter().sum::<f32>().max(1e-12);
+    for v in g.iter_mut() {
+        *v /= s;
+    }
+    g
+}
+
+/// Split a sample pool into `n_clients` shards of `per_client` rows each
+/// plus a test shard, honoring the requested non-iid structure.
+pub fn partition_pool(
+    pool: &ClassShard,
+    n_clients: usize,
+    per_client: usize,
+    test_size: usize,
+    split: Split,
+    rng: &mut Rng,
+) -> (Vec<ClassShard>, ClassShard) {
+    let d = pool.d;
+    let classes = pool.classes;
+    // index pool by class
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for i in 0..pool.m {
+        by_class[pool.y[i] as usize].push(i);
+    }
+    for v in by_class.iter_mut() {
+        rng.shuffle(v);
+    }
+    // carve the test shard round-robin across classes first
+    let mut test_idx = Vec::with_capacity(test_size);
+    'outer: loop {
+        for c in 0..classes {
+            if test_idx.len() >= test_size {
+                break 'outer;
+            }
+            if let Some(i) = by_class[c].pop() {
+                test_idx.push(i);
+            }
+        }
+    }
+
+    let take = |by_class: &mut Vec<Vec<usize>>, c: usize, rng: &mut Rng| -> usize {
+        if let Some(i) = by_class[c].pop() {
+            return i;
+        }
+        // fall back to any non-empty class
+        let order: Vec<usize> = {
+            let mut o: Vec<usize> = (0..classes).collect();
+            rng.shuffle(&mut o);
+            o
+        };
+        for cc in order {
+            if let Some(i) = by_class[cc].pop() {
+                return i;
+            }
+        }
+        panic!("sample pool exhausted; increase n_samples");
+    };
+
+    let mut clients = Vec::with_capacity(n_clients);
+    for ci in 0..n_clients {
+        let mut idx = Vec::with_capacity(per_client);
+        match split {
+            Split::Iid => {
+                for k in 0..per_client {
+                    let c = (ci * per_client + k) % classes;
+                    idx.push(take(&mut by_class, c, rng));
+                }
+            }
+            Split::ClassWise { classes_per_client } => {
+                let own: Vec<usize> =
+                    (0..classes_per_client).map(|j| (ci + j * 7) % classes).collect();
+                for k in 0..per_client {
+                    let c = own[k % own.len()];
+                    idx.push(take(&mut by_class, c, rng));
+                }
+            }
+            Split::Dirichlet { alpha } => {
+                let probs = dirichlet(alpha, classes, rng);
+                for _ in 0..per_client {
+                    let r: f32 = rng.f32_unit();
+                    let mut acc = 0.0;
+                    let mut c = classes - 1;
+                    for (j, p) in probs.iter().enumerate() {
+                        acc += p;
+                        if r < acc {
+                            c = j;
+                            break;
+                        }
+                    }
+                    idx.push(take(&mut by_class, c, rng));
+                }
+            }
+        }
+        let mut x = Vec::with_capacity(per_client * d);
+        let mut y = Vec::with_capacity(per_client);
+        for &i in &idx {
+            x.extend_from_slice(&pool.x[i * d..(i + 1) * d]);
+            y.push(pool.y[i]);
+        }
+        clients.push(ClassShard { x, y, m: per_client, d, classes });
+    }
+
+    let mut tx = Vec::with_capacity(test_idx.len() * d);
+    let mut ty = Vec::with_capacity(test_idx.len());
+    for &i in &test_idx {
+        tx.extend_from_slice(&pool.x[i * d..(i + 1) * d]);
+        ty.push(pool.y[i]);
+    }
+    let test = ClassShard { x: tx, y: ty, m: test_idx.len(), d, classes };
+    (clients, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = crate::rng(4);
+        for &a in &[0.1f32, 0.5, 1.0, 10.0] {
+            let p = dirichlet(a, 8, &mut rng);
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "alpha={a} sum={s}");
+            assert!(p.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn classwise_split_limits_classes() {
+        let mut rng = crate::rng(5);
+        let pool = synth::class_pool(8, 10, 2000, 0.3, &mut rng);
+        let (clients, _) =
+            partition_pool(&pool, 10, 50, 100, Split::ClassWise { classes_per_client: 2 }, &mut rng);
+        for c in &clients {
+            let mut seen: Vec<usize> = c.y.iter().map(|&v| v as usize).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert!(seen.len() <= 3, "client has too many classes: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn shards_have_requested_sizes() {
+        let mut rng = crate::rng(6);
+        let pool = synth::class_pool(4, 5, 1500, 0.3, &mut rng);
+        let (clients, test) = partition_pool(&pool, 7, 100, 200, Split::Iid, &mut rng);
+        assert_eq!(clients.len(), 7);
+        assert!(clients.iter().all(|c| c.m == 100));
+        assert_eq!(test.m, 200);
+    }
+
+    #[test]
+    fn dirichlet_split_skews_labels() {
+        let mut rng = crate::rng(7);
+        let pool = synth::class_pool(4, 10, 4000, 0.3, &mut rng);
+        let (clients, _) =
+            partition_pool(&pool, 5, 200, 100, Split::Dirichlet { alpha: 0.1 }, &mut rng);
+        // at least one client should be heavily skewed to a single class
+        let max_frac = clients
+            .iter()
+            .map(|c| {
+                let mut counts = vec![0usize; 10];
+                for &v in &c.y {
+                    counts[v as usize] += 1;
+                }
+                *counts.iter().max().unwrap() as f32 / c.m as f32
+            })
+            .fold(0.0f32, f32::max);
+        assert!(max_frac > 0.5, "expected skew, max class fraction {max_frac}");
+    }
+}

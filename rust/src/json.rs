@@ -1,0 +1,268 @@
+//! Minimal JSON parser (in-tree; no serde available offline).
+//!
+//! Parses the machine-generated `artifacts/manifest.json` and any other
+//! JSON the framework consumes. Supports the full JSON grammar except
+//! exotic number forms; numbers are f64.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(HashMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(v) => v.get(i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&Vec<Value>> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&HashMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+    /// [1, 2, 3] -> Vec<usize>
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Result<Value> {
+    skip_ws(b, p);
+    if *p >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*p] {
+        b'{' => parse_obj(b, p),
+        b'[' => parse_arr(b, p),
+        b'"' => Ok(Value::Str(parse_string(b, p)?)),
+        b't' => lit(b, p, "true", Value::Bool(true)),
+        b'f' => lit(b, p, "false", Value::Bool(false)),
+        b'n' => lit(b, p, "null", Value::Null),
+        _ => parse_num(b, p),
+    }
+}
+
+fn lit(b: &[u8], p: &mut usize, s: &str, v: Value) -> Result<Value> {
+    if b[*p..].starts_with(s.as_bytes()) {
+        *p += s.len();
+        Ok(v)
+    } else {
+        bail!("invalid literal at byte {p}");
+    }
+}
+
+fn parse_obj(b: &[u8], p: &mut usize) -> Result<Value> {
+    *p += 1; // {
+    let mut m = HashMap::new();
+    skip_ws(b, p);
+    if *p < b.len() && b[*p] == b'}' {
+        *p += 1;
+        return Ok(Value::Obj(m));
+    }
+    loop {
+        skip_ws(b, p);
+        let key = parse_string(b, p)?;
+        skip_ws(b, p);
+        if *p >= b.len() || b[*p] != b':' {
+            bail!("expected ':' at byte {p}");
+        }
+        *p += 1;
+        let v = parse_value(b, p)?;
+        m.insert(key, v);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b'}') => {
+                *p += 1;
+                return Ok(Value::Obj(m));
+            }
+            _ => bail!("expected ',' or '}}' at byte {p}"),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], p: &mut usize) -> Result<Value> {
+    *p += 1; // [
+    let mut v = Vec::new();
+    skip_ws(b, p);
+    if *p < b.len() && b[*p] == b']' {
+        *p += 1;
+        return Ok(Value::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, p)?);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b']') => {
+                *p += 1;
+                return Ok(Value::Arr(v));
+            }
+            _ => bail!("expected ',' or ']' at byte {p}"),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], p: &mut usize) -> Result<String> {
+    if b.get(*p) != Some(&b'"') {
+        bail!("expected string at byte {p}");
+    }
+    *p += 1;
+    let mut s = String::new();
+    while *p < b.len() {
+        match b[*p] {
+            b'"' => {
+                *p += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *p += 1;
+                match b.get(*p) {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{0008}'),
+                    Some(b'f') => s.push('\u{000C}'),
+                    Some(b'u') => {
+                        let hex = std::str::from_utf8(&b[*p + 1..*p + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *p += 4;
+                    }
+                    _ => bail!("bad escape at byte {p}"),
+                }
+                *p += 1;
+            }
+            c => {
+                // copy UTF-8 sequences verbatim
+                let len = utf8_len(c);
+                s.push_str(std::str::from_utf8(&b[*p..*p + len])?);
+                *p += len;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_num(b: &[u8], p: &mut usize) -> Result<Value> {
+    let start = *p;
+    while *p < b.len()
+        && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *p += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*p])?;
+    Ok(Value::Num(s.parse()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_structure() {
+        let text = r#"{
+ "version": 1,
+ "profiles": {"mushrooms": {"d": 112, "m": 256}},
+ "artifacts": {"a": {"file": "a.hlo.txt", "inputs": [["X", [256, 112]], ["mu", [1]]]}},
+ "flag": true, "none": null, "neg": -2.5e3
+}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            v.get("profiles").unwrap().get("mushrooms").unwrap().get("d").unwrap().as_usize(),
+            Some(112)
+        );
+        let inputs = v.get("artifacts").unwrap().get("a").unwrap().get("inputs").unwrap();
+        assert_eq!(inputs.idx(0).unwrap().idx(0).unwrap().as_str(), Some("X"));
+        assert_eq!(inputs.idx(0).unwrap().idx(1).unwrap().as_usize_vec(), Some(vec![256, 112]));
+        assert_eq!(v.get("flag").unwrap(), &Value::Bool(true));
+        assert_eq!(v.get("neg").unwrap().as_f64(), Some(-2500.0));
+    }
+
+    #[test]
+    fn parses_strings_with_escapes() {
+        let v = parse(r#"{"s": "a\"b\\c\nd"}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+        assert!(matches!(parse("{}").unwrap(), Value::Obj(m) if m.is_empty()));
+    }
+}

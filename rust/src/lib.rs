@@ -1,0 +1,58 @@
+//! # fedeff — communication-efficient distributed & federated learning
+//!
+//! A Rust + JAX + Pallas reproduction of *"Strategies for Improving
+//! Communication Efficiency in Distributed and Federated Learning:
+//! Compression, Local Training, and Personalization"* (Kai Yi, KAUST 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of the three-layer architecture
+//! described in `DESIGN.md`:
+//!
+//! * [`runtime`] loads AOT-compiled HLO artifacts (lowered from the JAX /
+//!   Pallas layers at build time) and executes them on the PJRT CPU client —
+//!   Python is never on the round path.
+//! * [`compress`] implements the dissertation's compressor classes
+//!   `U(omega)`, `B(alpha)` and the unified `C(eta, omega)` (Ch. 2), with
+//!   exact per-message bit accounting.
+//! * [`algorithms`] implements GD, DIANA, EF21, EF-BV (Ch. 2), Scaffnew /
+//!   i-Scaffnew / Scafflix / FLIX (Ch. 3), FedAvg / LocalGD and SPPM-AS
+//!   (Ch. 5) over a common [`oracle::Oracle`] abstraction.
+//! * [`pruning`] implements FedP3 (Ch. 4) and the post-training pruning
+//!   family: magnitude, Wanda, RIA, stochRIA, SymWanda, and the
+//!   training-free R²-DSnoT fine-tuner (Ch. 6).
+//! * [`sampling`] implements arbitrary cohort sampling (full, nonuniform,
+//!   nice, block, stratified + k-means clustering) for SPPM-AS.
+//! * [`coordinator`] orchestrates rounds, topologies (flat & hierarchical)
+//!   and the communication-cost ledger; [`metrics`] records every curve the
+//!   paper plots.
+//!
+//! See `examples/quickstart.rs` for a minimal end-to-end run.
+
+pub mod algorithms;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod oracle;
+pub mod plot;
+pub mod privacy;
+pub mod prox;
+pub mod pruning;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod vecmath;
+
+pub use anyhow::Result;
+
+/// Deterministic RNG used across the crate (seedable, stream-splittable).
+pub use rng::Rng;
+
+/// Construct the crate RNG from a seed.
+pub fn rng(seed: u64) -> Rng {
+    Rng::new(seed)
+}

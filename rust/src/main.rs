@@ -1,0 +1,222 @@
+//! `fedeff` — CLI launcher for the communication-efficient FL framework.
+//!
+//! Subcommands (hand-rolled arg parsing; fully offline build):
+//!   * `repro <id>|all [--fast] [--outdir DIR]` — regenerate a paper
+//!     table/figure (see DESIGN.md per-experiment index).
+//!   * `run <config.toml>` — run a custom experiment spec.
+//!   * `list`              — list experiments and compiled artifacts.
+//!   * `serve [--clients N] [--rounds R]` — threaded coordinator demo
+//!     streaming JSON round metrics.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use fedeff::algorithms::RunOptions;
+use fedeff::data::synth::Heterogeneity;
+use fedeff::metrics::write_runs;
+
+const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
+              | run <config.toml>
+              | list
+              | serve [--clients N] [--rounds R]>";
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("repro") => {
+            let id = args.get(1).cloned().unwrap_or_else(|| "all".into());
+            let fast = flag(&args, "--fast");
+            let outdir =
+                PathBuf::from(opt_val(&args, "--outdir").unwrap_or_else(|| "results".into()));
+            let ids: Vec<String> = if id == "all" || id.starts_with("--") {
+                fedeff::repro::EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+            } else {
+                vec![id]
+            };
+            for id in &ids {
+                eprintln!("[fedeff] running {id} (fast={fast})");
+                match fedeff::repro::run(id, fast, &outdir) {
+                    Ok(tables) => {
+                        for t in tables {
+                            println!("{}", t.render());
+                        }
+                    }
+                    Err(e) => eprintln!("[fedeff] {id} failed: {e:#}"),
+                }
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let config = args.get(1).ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            run_spec(config)
+        }
+        Some("list") => {
+            println!("experiments:");
+            for e in fedeff::repro::EXPERIMENTS {
+                println!("  {e}");
+            }
+            if let Ok(man) = fedeff::manifest::Manifest::load_default() {
+                println!("artifacts ({}):", man.artifacts.len());
+                let mut names: Vec<&String> = man.artifacts.keys().collect();
+                names.sort();
+                for n in names {
+                    println!("  {n}");
+                }
+            } else {
+                println!("artifacts: none (run `make artifacts`)");
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            let clients = opt_val(&args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(10);
+            let rounds = opt_val(&args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100);
+            serve(clients, rounds)
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Run a TOML experiment spec against the logreg substrate.
+fn run_spec(path: &str) -> Result<()> {
+    let spec = fedeff::config::Spec::load(path)?;
+    let ex = &spec.experiment;
+    let ds = &spec.dataset;
+    let al = &spec.algorithm;
+    anyhow::ensure!(
+        ds.kind == "logreg",
+        "CLI `run` currently drives the logreg substrate; use `repro` for mlp/lm experiments"
+    );
+
+    let het = match ds.heterogeneity.as_deref() {
+        Some("iid") => Heterogeneity::Iid,
+        Some("class") => Heterogeneity::ClassSkew(0.85),
+        _ => Heterogeneity::FeatureShift(0.5),
+    };
+    let rt = fedeff::repro::util::try_runtime();
+    let oracle = fedeff::repro::util::logreg_oracle(
+        rt.as_ref(),
+        &ds.profile,
+        ds.clients,
+        het,
+        ds.reg,
+        ex.seed,
+    )?;
+    let d = oracle.dim();
+    let x0 = vec![0.5f32; d];
+    let opts = RunOptions {
+        rounds: ex.rounds,
+        eval_every: ex.eval_every,
+        seed: ex.seed,
+        ..Default::default()
+    };
+
+    let rec = match al.kind.as_str() {
+        "gd" => {
+            let gd = fedeff::algorithms::gd::FlixGd::plain(
+                ds.clients,
+                d,
+                al.gamma.unwrap_or(0.5) / oracle.smoothness(0),
+            );
+            gd.run(oracle.as_ref(), &x0, &opts)?
+        }
+        "efbv" | "ef21" | "diana" => {
+            let comp = fedeff::config::build_compressor(al, d)?;
+            let mut alg = fedeff::algorithms::efbv::EfBv::new(comp.as_ref());
+            alg.variant = match al.kind.as_str() {
+                "ef21" => fedeff::algorithms::efbv::Variant::Ef21,
+                "diana" => fedeff::algorithms::efbv::Variant::Diana,
+                _ => fedeff::algorithms::efbv::Variant::EfBv,
+            };
+            alg.run(oracle.as_ref(), &x0, &opts)?
+        }
+        "scafflix" => {
+            let x_stars: Vec<Vec<f32>> = (0..ds.clients)
+                .map(|i| fedeff::oracle::solve_local(oracle.as_ref(), i, &x0, 0.5, 2000, 1e-6))
+                .collect::<Result<_>>()?;
+            let alg = fedeff::algorithms::scafflix::Scafflix::standard(
+                oracle.as_ref(),
+                al.alpha.unwrap_or(0.5),
+                al.p.unwrap_or(0.2),
+                x_stars,
+            );
+            alg.run(oracle.as_ref(), &x0, &opts)?
+        }
+        "fedavg" => {
+            let sampler = fedeff::config::build_sampler(al, ds.clients)?;
+            let alg = fedeff::algorithms::fedavg::FedAvg::new(
+                sampler.as_ref(),
+                al.local_steps.unwrap_or(5),
+                al.lr.unwrap_or(0.1),
+            );
+            alg.run(oracle.as_ref(), &x0, &opts)?
+        }
+        "sppm" => {
+            let sampler = fedeff::config::build_sampler(al, ds.clients)?;
+            let solver = fedeff::config::build_solver(al)?;
+            let alg = fedeff::algorithms::sppm::SppmAs::new(
+                sampler.as_ref(),
+                solver.as_ref(),
+                al.gamma.unwrap_or(100.0),
+                al.k_local.unwrap_or(5),
+            );
+            alg.run(oracle.as_ref(), &x0, &opts)?
+        }
+        other => anyhow::bail!("unknown algorithm kind {other}"),
+    };
+
+    let outdir = PathBuf::from(&ex.outdir).join(&ex.name);
+    write_runs(&outdir, std::slice::from_ref(&rec))?;
+    println!(
+        "{}: final loss {:.6} after {} rounds; curves -> {}",
+        rec.label,
+        rec.last().map(|r| r.loss).unwrap_or(f32::NAN),
+        ex.rounds,
+        outdir.display()
+    );
+    Ok(())
+}
+
+/// Threaded coordinator demo over the pure-Rust logreg fleet: every round
+/// fans the cohort out across OS threads and streams JSON metrics.
+fn serve(clients: usize, rounds: usize) -> Result<()> {
+    let mut rng = fedeff::rng(0);
+    let data = fedeff::data::synth::logreg_dataset(
+        112,
+        256,
+        clients,
+        Heterogeneity::FeatureShift(0.5),
+        0.3,
+        &mut rng,
+    );
+    let oracle = fedeff::oracle::logreg_rs::RustLogReg::new(data, 0.1);
+    let d = 112;
+    let mut x = vec![0.0f32; d];
+    let lr = 0.5 / fedeff::oracle::Oracle::smoothness(&oracle, 0);
+    let cohort: Vec<usize> = (0..clients).collect();
+    for t in 0..rounds {
+        let results = fedeff::coordinator::run_cohort_parallel(&oracle, &cohort, &x)?;
+        let mut g = vec![0.0f32; d];
+        let mut loss = 0.0f32;
+        for (_, l, gi) in &results {
+            loss += l / clients as f32;
+            fedeff::vecmath::acc_mean(gi, clients as f32, &mut g);
+        }
+        fedeff::vecmath::axpy(-lr, &g, &mut x);
+        if t % 10 == 0 {
+            println!("{{\"round\":{t},\"loss\":{loss:.6}}}");
+        }
+    }
+    Ok(())
+}

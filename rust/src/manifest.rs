@@ -1,0 +1,356 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT path and
+//! the Rust runtime.
+//!
+//! Emitted by `python/compile/aot.py`; records, for every artifact, its
+//! input/output shapes, and for every model the flat-parameter layout
+//! (name / shape / offset / init scale) plus the calibration-vector layout.
+//! With this, the Rust side can initialize, slice, prune and aggregate
+//! parameters without ever importing Python. Parsed with the in-tree JSON
+//! parser ([`crate::json`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    /// (name, shape) pairs, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "linear" | "bias" | "ln" | "embedding"
+    pub kind: String,
+    pub init_scale: f64,
+}
+
+impl LayoutEntry {
+    pub fn is_prunable(&self) -> bool {
+        self.kind == "linear"
+    }
+    /// (out, in) for 2-D linear entries.
+    pub fn matrix_dims(&self) -> Option<(usize, usize)> {
+        if self.shape.len() == 2 {
+            Some((self.shape[0], self.shape[1]))
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibEntry {
+    pub name: String,
+    pub in_offset: usize,
+    pub in_size: usize,
+    pub out_offset: usize,
+    pub out_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibLayout {
+    pub entries: Vec<CalibEntry>,
+    pub total: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LogregProfile {
+    pub d: usize,
+    pub m: usize,
+    pub mb: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MlpProfile {
+    pub sizes: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LmProfile {
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub logreg_profiles: HashMap<String, LogregProfile>,
+    pub logreg_batch_n: usize,
+    pub mlp_profiles: HashMap<String, MlpProfile>,
+    pub lm_configs: HashMap<String, LmProfile>,
+    pub layouts: HashMap<String, Vec<LayoutEntry>>,
+    pub calib_layouts: HashMap<String, CalibLayout>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key {key}"))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    req(v, key)?.as_usize().ok_or_else(|| anyhow!("{key} is not a number"))
+}
+
+fn io_pairs(v: &Value) -> Result<Vec<(String, Vec<usize>)>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|pair| {
+            let name = pair
+                .idx(0)
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("bad io name"))?
+                .to_string();
+            let shape =
+                pair.idx(1).and_then(|s| s.as_usize_vec()).ok_or_else(|| anyhow!("bad io shape"))?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = crate::json::parse(&text).context("parsing manifest.json")?;
+
+        let mut logreg_profiles = HashMap::new();
+        for (name, p) in req(&root, "logreg_profiles")?.as_obj().unwrap() {
+            logreg_profiles.insert(
+                name.clone(),
+                LogregProfile {
+                    d: req_usize(p, "d")?,
+                    m: req_usize(p, "m")?,
+                    mb: req_usize(p, "mb")?,
+                },
+            );
+        }
+
+        let mut mlp_profiles = HashMap::new();
+        for (name, p) in req(&root, "mlp_profiles")?.as_obj().unwrap() {
+            mlp_profiles.insert(
+                name.clone(),
+                MlpProfile {
+                    sizes: req(p, "sizes")?.as_usize_vec().ok_or_else(|| anyhow!("bad sizes"))?,
+                    batch: req_usize(p, "batch")?,
+                    eval_batch: req_usize(p, "eval_batch")?,
+                },
+            );
+        }
+
+        let mut lm_configs = HashMap::new();
+        for (name, p) in req(&root, "lm_configs")?.as_obj().unwrap() {
+            lm_configs.insert(
+                name.clone(),
+                LmProfile {
+                    vocab: req_usize(p, "vocab")?,
+                    n_layers: req_usize(p, "n_layers")?,
+                    d_model: req_usize(p, "d_model")?,
+                    n_heads: req_usize(p, "n_heads")?,
+                    d_ff: req_usize(p, "d_ff")?,
+                    seq_len: req_usize(p, "seq_len")?,
+                    batch: req_usize(p, "batch")?,
+                    eval_batch: req_usize(p, "eval_batch")?,
+                    n_params: req_usize(p, "n_params")?,
+                },
+            );
+        }
+
+        let mut layouts = HashMap::new();
+        for (name, entries) in req(&root, "layouts")?.as_obj().unwrap() {
+            let list = entries
+                .as_arr()
+                .ok_or_else(|| anyhow!("layout {name} not an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(LayoutEntry {
+                        name: req(e, "name")?.as_str().unwrap_or("").to_string(),
+                        shape: req(e, "shape")?
+                            .as_usize_vec()
+                            .ok_or_else(|| anyhow!("bad shape"))?,
+                        offset: req_usize(e, "offset")?,
+                        size: req_usize(e, "size")?,
+                        kind: req(e, "kind")?.as_str().unwrap_or("").to_string(),
+                        init_scale: req(e, "init_scale")?.as_f64().unwrap_or(0.0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            layouts.insert(name.clone(), list);
+        }
+
+        let mut calib_layouts = HashMap::new();
+        for (name, c) in req(&root, "calib_layouts")?.as_obj().unwrap() {
+            let entries = req(c, "entries")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|e| {
+                    Ok(CalibEntry {
+                        name: req(e, "name")?.as_str().unwrap_or("").to_string(),
+                        in_offset: req_usize(e, "in_offset")?,
+                        in_size: req_usize(e, "in_size")?,
+                        out_offset: req_usize(e, "out_offset")?,
+                        out_size: req_usize(e, "out_size")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            calib_layouts
+                .insert(name.clone(), CalibLayout { entries, total: req_usize(c, "total")? });
+        }
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in req(&root, "artifacts")?.as_obj().unwrap() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: req(a, "file")?.as_str().unwrap_or("").to_string(),
+                    inputs: io_pairs(req(a, "inputs")?)?,
+                    outputs: io_pairs(req(a, "outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            version: req_usize(&root, "version")? as u32,
+            logreg_profiles,
+            logreg_batch_n: req_usize(&root, "logreg_batch_n")?,
+            mlp_profiles,
+            lm_configs,
+            layouts,
+            calib_layouts,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Default artifacts directory: `$FEDEFF_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("FEDEFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let meta = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        Ok(self.dir.join(&meta.file))
+    }
+
+    pub fn layout(&self, name: &str) -> Result<&Vec<LayoutEntry>> {
+        self.layouts.get(name).ok_or_else(|| anyhow!("layout {name} not in manifest"))
+    }
+
+    pub fn layout_total(&self, name: &str) -> Result<usize> {
+        Ok(self.layout(name)?.iter().map(|e| e.size).sum())
+    }
+}
+
+/// Initialize a flat parameter vector from a layout: `linear`/`embedding`
+/// entries get ~N(0, init_scale^2) noise; `ln` entries get the constant
+/// `init_scale` (gain 1 / bias 0); `bias` entries get zero.
+pub fn init_flat(layout: &[LayoutEntry], rng: &mut crate::Rng) -> Vec<f32> {
+    let total: usize = layout.iter().map(|e| e.size).sum();
+    let mut theta = vec![0.0f32; total];
+    for e in layout {
+        let seg = &mut theta[e.offset..e.offset + e.size];
+        match e.kind.as_str() {
+            "linear" | "embedding" => {
+                let s = e.init_scale as f32;
+                for v in seg.iter_mut() {
+                    *v = s * rng.normal();
+                }
+            }
+            "ln" => seg.fill(e.init_scale as f32),
+            _ => seg.fill(0.0),
+        }
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn entry(
+        name: &str,
+        shape: Vec<usize>,
+        offset: usize,
+        kind: &str,
+        scale: f64,
+    ) -> LayoutEntry {
+        let size = shape.iter().product();
+        LayoutEntry { name: name.into(), shape, offset, size, kind: kind.into(), init_scale: scale }
+    }
+
+    #[test]
+    fn init_flat_kinds() {
+        let layout = vec![
+            entry("w", vec![4, 3], 0, "linear", 0.1),
+            entry("b", vec![4], 12, "bias", 0.0),
+            entry("g", vec![4], 16, "ln", 1.0),
+        ];
+        let mut rng = crate::rng(0);
+        let theta = init_flat(&layout, &mut rng);
+        assert_eq!(theta.len(), 20);
+        assert!(theta[0..12].iter().any(|&v| v != 0.0));
+        assert!(theta[12..16].iter().all(|&v| v == 0.0));
+        assert!(theta[16..20].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn prunable_and_dims() {
+        let e = entry("w", vec![4, 3], 0, "linear", 0.1);
+        assert!(e.is_prunable());
+        assert_eq!(e.matrix_dims(), Some((4, 3)));
+        let b = entry("b", vec![4], 0, "bias", 0.0);
+        assert!(!b.is_prunable());
+        assert_eq!(b.matrix_dims(), None);
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("fedeff_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+ "version": 1,
+ "logreg_profiles": {"p": {"d": 4, "m": 8, "mb": 2}},
+ "logreg_batch_n": 10,
+ "mlp_profiles": {},
+ "lm_configs": {},
+ "layouts": {"l": [{"name": "w", "shape": [2, 2], "offset": 0, "size": 4, "kind": "linear", "init_scale": 0.1}]},
+ "calib_layouts": {},
+ "artifacts": {"a": {"file": "a.hlo.txt", "inputs": [["X", [8, 4]]], "outputs": [["loss", []]]}}
+}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.logreg_profiles["p"].d, 4);
+        assert_eq!(m.layout_total("l").unwrap(), 4);
+        assert_eq!(m.artifacts["a"].inputs[0].1, vec![8, 4]);
+    }
+}

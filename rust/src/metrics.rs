@@ -1,0 +1,193 @@
+//! Metrics recorder: every curve / table the paper plots.
+//!
+//! Algorithms append [`RoundStat`]s to a [`RunRecord`]; the repro driver
+//! assembles records into [`Table`]s (printed like the paper's tables) and
+//! CSV files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Per-round statistics of one algorithm run.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStat {
+    pub round: usize,
+    /// Cumulative bits sent per node (uplink).
+    pub bits_up: u64,
+    /// Cumulative bits received per node (downlink).
+    pub bits_down: u64,
+    /// Cumulative abstract communication cost (hierarchical c1/c2 ledger).
+    pub comm_cost: f64,
+    /// Objective value f(x^t) (or train loss).
+    pub loss: f32,
+    /// f(x^t) - f* when f* is known.
+    pub gap: Option<f32>,
+    /// ||grad f(x^t)||^2.
+    pub grad_norm_sq: Option<f32>,
+    /// Eval metric (test accuracy / perplexity) when measured.
+    pub eval: Option<f32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub rounds: Vec<RoundStat>,
+}
+
+impl RunRecord {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, stat: RoundStat) {
+        self.rounds.push(stat);
+    }
+
+    pub fn last(&self) -> Option<&RoundStat> {
+        self.rounds.last()
+    }
+
+    /// First round index whose gap <= eps (communication-to-accuracy).
+    pub fn rounds_to_gap(&self, eps: f32) -> Option<usize> {
+        self.rounds.iter().find(|r| r.gap.map_or(false, |g| g <= eps)).map(|r| r.round)
+    }
+
+    /// Cumulative comm cost when gap first <= eps.
+    pub fn cost_to_gap(&self, eps: f32) -> Option<f64> {
+        self.rounds.iter().find(|r| r.gap.map_or(false, |g| g <= eps)).map(|r| r.comm_cost)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,bits_up,bits_down,comm_cost,loss,gap,grad_norm_sq,eval\n");
+        for r in &self.rounds {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{}",
+                r.round,
+                r.bits_up,
+                r.bits_down,
+                r.comm_cost,
+                r.loss,
+                r.gap.map_or(String::new(), |v| v.to_string()),
+                r.grad_norm_sq.map_or(String::new(), |v| v.to_string()),
+                r.eval.map_or(String::new(), |v| v.to_string()),
+            );
+        }
+        s
+    }
+}
+
+/// Write a set of runs as CSVs under `dir` (one file per run label).
+pub fn write_runs(dir: impl AsRef<Path>, runs: &[RunRecord]) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    for run in runs {
+        let safe: String = run
+            .label
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        std::fs::write(dir.join(format!("{safe}.csv")), run.to_csv())?;
+    }
+    Ok(())
+}
+
+/// A printable paper-style table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line = |s: &mut String, cells: &[String]| {
+            let mut parts = Vec::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                parts.push(format!("{:<w$}", c, w = widths[i]));
+            }
+            let _ = writeln!(s, "| {} |", parts.join(" | "));
+        };
+        line(&mut s, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let _ = writeln!(s, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut s, row);
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_csv(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        std::fs::write(dir.as_ref().join(format!("{name}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_to_gap_finds_first() {
+        let mut r = RunRecord::new("x");
+        for (i, g) in [0.5f32, 0.2, 0.05, 0.01].iter().enumerate() {
+            r.push(RoundStat { round: i, gap: Some(*g), ..Default::default() });
+        }
+        assert_eq!(r.rounds_to_gap(0.1), Some(2));
+        assert_eq!(r.rounds_to_gap(1e-5), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = RunRecord::new("x");
+        r.push(RoundStat { round: 0, loss: 1.0, ..Default::default() });
+        let csv = r.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ppl"]);
+        t.row(vec!["wanda".into(), "12.3".into()]);
+        t.row(vec!["magnitude".into(), "15.0".into()]);
+        let out = t.render();
+        assert!(out.contains("demo"));
+        assert!(out.contains("wanda"));
+        assert_eq!(t.to_csv().lines().count(), 3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Flat-parameter model views.
+//!
+//! The Rust side treats any model as `theta in R^d` (the object the
+//! paper's algorithms manipulate) but layer-aware operations (FedP3 layer
+//! selection, per-matrix pruning) need structured views. [`LayerView`]
+//! ties a [`crate::manifest::LayoutEntry`] to a slice of the flat vector.
+
+use crate::manifest::LayoutEntry;
+
+/// A read-only view of one named tensor inside a flat parameter vector.
+pub struct LayerView<'a> {
+    pub entry: &'a LayoutEntry,
+    pub data: &'a [f32],
+}
+
+/// A mutable view.
+pub struct LayerViewMut<'a> {
+    pub entry: &'a LayoutEntry,
+    pub data: &'a mut [f32],
+}
+
+pub fn view<'a>(layout: &'a [LayoutEntry], theta: &'a [f32], name: &str) -> Option<LayerView<'a>> {
+    let e = layout.iter().find(|e| e.name == name)?;
+    Some(LayerView { entry: e, data: &theta[e.offset..e.offset + e.size] })
+}
+
+pub fn view_mut<'a>(
+    layout: &'a [LayoutEntry],
+    theta: &'a mut [f32],
+    name: &str,
+) -> Option<LayerViewMut<'a>> {
+    let e = layout.iter().find(|e| e.name == name)?;
+    Some(LayerViewMut { entry: e, data: &mut theta[e.offset..e.offset + e.size] })
+}
+
+/// Iterate prunable (linear) entries of a layout.
+pub fn prunable(layout: &[LayoutEntry]) -> impl Iterator<Item = &LayoutEntry> {
+    layout.iter().filter(|e| e.is_prunable())
+}
+
+/// Group layout entries into logical "layers" by name prefix (the part
+/// before the last '.'), preserving order. FedP3's layer selection
+/// operates on these groups (e.g. "blk0", "fc1").
+pub fn layer_groups(layout: &[LayoutEntry]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, e) in layout.iter().enumerate() {
+        let prefix = match e.name.split('.').next() {
+            Some(p) => p.to_string(),
+            None => e.name.clone(),
+        };
+        match groups.last_mut() {
+            Some((name, idxs)) if *name == prefix => idxs.push(i),
+            _ => groups.push((prefix, vec![i])),
+        }
+    }
+    groups
+}
+
+/// Fraction of nonzero entries in a slice.
+pub fn density(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().filter(|&&v| v != 0.0).count() as f32 / x.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Vec<LayoutEntry> {
+        let mk = |name: &str, shape: Vec<usize>, offset: usize, kind: &str| LayoutEntry {
+            name: name.into(),
+            size: shape.iter().product(),
+            shape,
+            offset,
+            kind: kind.into(),
+            init_scale: 0.1,
+        };
+        vec![
+            mk("fc0.w", vec![4, 3], 0, "linear"),
+            mk("fc0.b", vec![4], 12, "bias"),
+            mk("fc1.w", vec![2, 4], 16, "linear"),
+            mk("fc1.b", vec![2], 24, "bias"),
+        ]
+    }
+
+    #[test]
+    fn views_slice_correctly() {
+        let l = layout();
+        let theta: Vec<f32> = (0..26).map(|i| i as f32).collect();
+        let v = view(&l, &theta, "fc1.w").unwrap();
+        assert_eq!(v.data, &theta[16..24]);
+        assert_eq!(v.entry.matrix_dims(), Some((2, 4)));
+    }
+
+    #[test]
+    fn groups_by_prefix() {
+        let l = layout();
+        let g = layer_groups(&l);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].0, "fc0");
+        assert_eq!(g[0].1, vec![0, 1]);
+        assert_eq!(g[1].1, vec![2, 3]);
+    }
+
+    #[test]
+    fn prunable_filters_linears() {
+        let l = layout();
+        let names: Vec<&str> = prunable(&l).map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["fc0.w", "fc1.w"]);
+    }
+
+    #[test]
+    fn density_counts() {
+        assert_eq!(density(&[0.0, 1.0, 2.0, 0.0]), 0.5);
+    }
+}

@@ -1,0 +1,426 @@
+//! HLO-backed oracles: the production compute path.
+//!
+//! Gradients/losses/evals are produced by executing the AOT artifacts
+//! (lowered from JAX + Pallas by `python/compile/aot.py`) on the PJRT CPU
+//! client. Client data shards are staged on device once (`Runtime::stage`)
+//! and reused every round — see DESIGN.md §Perf.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::Oracle;
+use crate::data::{FedBinDataset, FedClassDataset, FedTokenDataset};
+use crate::runtime::{Input, Runtime, Staged};
+use crate::Rng;
+
+// ---------------------------------------------------------------- logreg
+
+/// Logistic-regression oracle over per-client HLO artifacts.
+pub struct HloLogReg {
+    rt: Rc<Runtime>,
+    pub profile: String,
+    pub data: FedBinDataset,
+    pub mu: f32,
+    staged: Vec<(Staged, Staged)>, // (X, y) per client
+    /// Concatenated (Xs, ys) staged once for the batched artifact
+    /// (§Perf iteration 2: the batched path initially re-uploaded ~1 MB
+    /// of shard data per call, making it slower than 10 per-client calls).
+    batch_staged: RefCell<Option<(Staged, Staged)>>,
+    mu_buf: [f32; 1],
+    m: usize,
+    mb: usize,
+}
+
+impl HloLogReg {
+    pub fn new(rt: Rc<Runtime>, profile: &str, data: FedBinDataset, mu: f32) -> Result<Self> {
+        let prof = rt
+            .manifest()
+            .logreg_profiles
+            .get(profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown logreg profile {profile}"))?
+            .clone();
+        anyhow::ensure!(data.d == prof.d, "profile d={} but data d={}", prof.d, data.d);
+        let mut staged = Vec::with_capacity(data.clients.len());
+        for c in &data.clients {
+            anyhow::ensure!(c.m == prof.m, "profile m={} but shard m={}", prof.m, c.m);
+            let x = rt.stage(&c.x, &[c.m, c.d])?;
+            let y = rt.stage(&c.y, &[c.m])?;
+            staged.push((x, y));
+        }
+        Ok(Self {
+            rt,
+            profile: profile.to_string(),
+            data,
+            mu,
+            staged,
+            batch_staged: RefCell::new(None),
+            mu_buf: [mu],
+            m: prof.m,
+            mb: prof.mb,
+        })
+    }
+
+    /// Batched all-clients gradient (one PJRT dispatch for the full cohort
+    /// of `logreg_batch_n` clients). `ws` is [n][d]; outputs (losses, grads).
+    pub fn batch_loss_grad(&self, ws: &[f32], n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let man = self.rt.manifest();
+        anyhow::ensure!(n == man.logreg_batch_n, "batched artifact fixed at n={}", man.logreg_batch_n);
+        let exe = self.rt.load(&format!("logreg_batch_grad_{}", self.profile))?;
+        let d = self.data.d;
+        if self.batch_staged.borrow().is_none() {
+            let mut xs = Vec::with_capacity(n * self.m * d);
+            let mut ys = Vec::with_capacity(n * self.m);
+            for c in &self.data.clients[..n] {
+                xs.extend_from_slice(&c.x);
+                ys.extend_from_slice(&c.y);
+            }
+            let sx = self.rt.stage(&xs, &[n, self.m, d])?;
+            let sy = self.rt.stage(&ys, &[n, self.m])?;
+            *self.batch_staged.borrow_mut() = Some((sx, sy));
+        }
+        let guard = self.batch_staged.borrow();
+        let (sx, sy) = guard.as_ref().unwrap();
+        let out = exe.run_mixed(&[
+            Input::Staged(sx),
+            Input::Staged(sy),
+            Input::Host(ws),
+            Input::Host(&self.mu_buf),
+        ])?;
+        Ok((out[0].clone(), out[1].clone()))
+    }
+}
+
+impl Oracle for HloLogReg {
+    fn dim(&self) -> usize {
+        self.data.d
+    }
+    fn n_clients(&self) -> usize {
+        self.data.clients.len()
+    }
+
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let exe = self.rt.load(&format!("logreg_grad_{}", self.profile))?;
+        let (x, y) = &self.staged[client];
+        let out = exe.run_mixed(&[
+            Input::Staged(x),
+            Input::Staged(y),
+            Input::Host(w),
+            Input::Host(&self.mu_buf),
+        ])?;
+        grad.copy_from_slice(&out[1]);
+        Ok(out[0][0])
+    }
+
+    fn loss_grad_stoch(
+        &self,
+        client: usize,
+        w: &[f32],
+        grad: &mut [f32],
+        rng: &mut Rng,
+    ) -> Result<f32> {
+        let exe = self.rt.load(&format!("logreg_grad_mb_{}", self.profile))?;
+        let shard = &self.data.clients[client];
+        let d = shard.d;
+        let mut xb = Vec::with_capacity(self.mb * d);
+        let mut yb = Vec::with_capacity(self.mb);
+        for _ in 0..self.mb {
+            let i = rng.below(shard.m);
+            xb.extend_from_slice(shard.row(i));
+            yb.push(shard.y[i]);
+        }
+        let out = exe.run(&[&xb, &yb, w, &self.mu_buf])?;
+        grad.copy_from_slice(&out[1]);
+        Ok(out[0][0])
+    }
+
+    fn all_loss_grads(&self, w: &[f32]) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let n = self.rt.manifest().logreg_batch_n;
+        if self.data.clients.len() != n {
+            return Ok(None);
+        }
+        // replicate w per client (the batched artifact takes Ws[n, d])
+        let mut ws = Vec::with_capacity(n * w.len());
+        for _ in 0..n {
+            ws.extend_from_slice(w);
+        }
+        let (losses, grads) = self.batch_loss_grad(&ws, n)?;
+        Ok(Some((losses, grads)))
+    }
+
+    fn smoothness(&self, client: usize) -> f32 {
+        let shard = &self.data.clients[client];
+        let sum: f32 = (0..shard.m).map(|i| crate::vecmath::norm_sq(shard.row(i))).sum();
+        sum / (4.0 * shard.m as f32) + self.mu
+    }
+
+    fn mu(&self, _client: usize) -> f32 {
+        self.mu
+    }
+}
+
+// ---------------------------------------------------------------- MLP
+
+/// MLP classifier oracle (FedP3 / Scafflix NN experiments).
+pub struct HloMlp {
+    rt: Rc<Runtime>,
+    pub profile: String,
+    pub data: FedClassDataset,
+    pub l2: f32,
+    l2_buf: [f32; 1],
+    pub n_params: usize,
+    batch: usize,
+    eval_batch: usize,
+    din: usize,
+}
+
+impl HloMlp {
+    pub fn new(rt: Rc<Runtime>, profile: &str, data: FedClassDataset, l2: f32) -> Result<Self> {
+        let prof = rt
+            .manifest()
+            .mlp_profiles
+            .get(profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown mlp profile {profile}"))?
+            .clone();
+        let n_params = rt.manifest().layout_total(&format!("mlp_{profile}"))?;
+        anyhow::ensure!(data.d == prof.sizes[0], "profile d_in={} data d={}", prof.sizes[0], data.d);
+        Ok(Self {
+            rt,
+            profile: profile.to_string(),
+            data,
+            l2,
+            l2_buf: [l2],
+            n_params,
+            batch: prof.batch,
+            eval_batch: prof.eval_batch,
+            din: prof.sizes[0],
+        })
+    }
+
+    fn batch_grad(&self, theta: &[f32], xb: &[f32], yb: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let exe = self.rt.load(&format!("mlp_grad_{}", self.profile))?;
+        let out = exe.run(&[theta, xb, yb, &self.l2_buf])?;
+        grad.copy_from_slice(&out[1]);
+        Ok(out[0][0])
+    }
+
+    /// Top-1 accuracy on the held-out test shard.
+    pub fn test_accuracy(&self, theta: &[f32]) -> Result<f32> {
+        let exe = self.rt.load(&format!("mlp_eval_{}", self.profile))?;
+        let test = &self.data.test;
+        let eb = self.eval_batch;
+        let mut correct = 0.0f32;
+        let mut counted = 0usize;
+        let mut xb = vec![0.0f32; eb * self.din];
+        let mut yb = vec![0.0f32; eb];
+        let full_batches = test.m / eb;
+        for bi in 0..full_batches.max(1) {
+            for r in 0..eb {
+                let i = (bi * eb + r) % test.m;
+                xb[r * self.din..(r + 1) * self.din]
+                    .copy_from_slice(&test.x[i * self.din..(i + 1) * self.din]);
+                yb[r] = test.y[i];
+            }
+            let out = exe.run(&[theta, &xb, &yb])?;
+            correct += out[0][0];
+            counted += eb;
+        }
+        Ok(correct / counted as f32)
+    }
+}
+
+impl Oracle for HloMlp {
+    fn dim(&self) -> usize {
+        self.n_params
+    }
+    fn n_clients(&self) -> usize {
+        self.data.clients.len()
+    }
+
+    /// Full-shard gradient: average over the shard's full batches.
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let shard = &self.data.clients[client];
+        let b = self.batch;
+        let n_batches = (shard.m + b - 1) / b;
+        let mut xb = vec![0.0f32; b * self.din];
+        let mut yb = vec![0.0f32; b];
+        let mut g = vec![0.0f32; self.n_params];
+        grad.fill(0.0);
+        let mut loss = 0.0f32;
+        for bi in 0..n_batches {
+            for r in 0..b {
+                let i = (bi * b + r) % shard.m;
+                xb[r * self.din..(r + 1) * self.din]
+                    .copy_from_slice(&shard.x[i * self.din..(i + 1) * self.din]);
+                yb[r] = shard.y[i];
+            }
+            loss += self.batch_grad(w, &xb, &yb, &mut g)? / n_batches as f32;
+            crate::vecmath::axpy(1.0 / n_batches as f32, &g, grad);
+        }
+        Ok(loss)
+    }
+
+    fn loss_grad_stoch(
+        &self,
+        client: usize,
+        w: &[f32],
+        grad: &mut [f32],
+        rng: &mut Rng,
+    ) -> Result<f32> {
+        let shard = &self.data.clients[client];
+        let b = self.batch;
+        let mut xb = vec![0.0f32; b * self.din];
+        let mut yb = vec![0.0f32; b];
+        for r in 0..b {
+            let i = rng.below(shard.m);
+            xb[r * self.din..(r + 1) * self.din]
+                .copy_from_slice(&shard.x[i * self.din..(i + 1) * self.din]);
+            yb[r] = shard.y[i];
+        }
+        self.batch_grad(w, &xb, &yb, grad)
+    }
+
+    fn mu(&self, _client: usize) -> f32 {
+        self.l2.max(1e-4)
+    }
+    fn smoothness(&self, _client: usize) -> f32 {
+        1.0
+    }
+}
+
+// ---------------------------------------------------------------- LM
+
+/// Transformer-LM oracle (Ch. 6 pruning + e2e federated pretraining).
+pub struct HloLm {
+    rt: Rc<Runtime>,
+    pub cfg_name: String,
+    pub data: FedTokenDataset,
+    pub n_params: usize,
+    batch: usize,
+    eval_batch: usize,
+    seq_len: usize,
+}
+
+impl HloLm {
+    pub fn new(rt: Rc<Runtime>, cfg_name: &str, data: FedTokenDataset) -> Result<Self> {
+        let prof = rt
+            .manifest()
+            .lm_configs
+            .get(cfg_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown lm config {cfg_name}"))?
+            .clone();
+        anyhow::ensure!(data.seq_len == prof.seq_len, "seq_len mismatch");
+        Ok(Self {
+            rt,
+            cfg_name: cfg_name.to_string(),
+            data,
+            n_params: prof.n_params,
+            batch: prof.batch,
+            eval_batch: prof.eval_batch,
+            seq_len: prof.seq_len,
+        })
+    }
+
+    fn pack<'a>(
+        &self,
+        seqs: impl Iterator<Item = &'a Vec<f32>>,
+        count: usize,
+        buf: &mut Vec<f32>,
+    ) {
+        buf.clear();
+        let mut taken = 0;
+        for s in seqs {
+            buf.extend_from_slice(s);
+            taken += 1;
+            if taken == count {
+                break;
+            }
+        }
+        // wrap-pad by repeating from the start of the buffer
+        while taken < count {
+            let copy: Vec<f32> = buf[..self.seq_len].to_vec();
+            buf.extend_from_slice(&copy);
+            taken += 1;
+        }
+    }
+
+    /// Held-out perplexity: exp(mean NLL over eval sequences).
+    pub fn eval_perplexity(&self, theta: &[f32]) -> Result<f32> {
+        let exe = self.rt.load(&format!("lm_eval_{}", self.cfg_name))?;
+        let eb = self.eval_batch;
+        let mut buf = Vec::with_capacity(eb * self.seq_len);
+        let mut nll = 0.0f64;
+        let mut tokens = 0.0f64;
+        let n_batches = (self.data.eval.len() / eb).max(1);
+        for bi in 0..n_batches {
+            let start = bi * eb;
+            self.pack(self.data.eval.iter().cycle().skip(start), eb, &mut buf);
+            let out = exe.run(&[theta, &buf])?;
+            nll += out[0][0] as f64;
+            tokens += (eb * (self.seq_len - 1)) as f64;
+        }
+        Ok(((nll / tokens).exp()) as f32)
+    }
+
+    /// Accumulate calibration activation norms over `n_batches` eval
+    /// batches; returns the per-position l2 norms (sqrt of summed squares).
+    pub fn calibrate(&self, theta: &[f32], n_batches: usize) -> Result<Vec<f32>> {
+        let exe = self.rt.load(&format!("lm_calib_{}", self.cfg_name))?;
+        let eb = self.eval_batch;
+        let mut buf = Vec::with_capacity(eb * self.seq_len);
+        let mut acc: Option<Vec<f32>> = None;
+        for bi in 0..n_batches {
+            self.pack(self.data.eval.iter().cycle().skip(bi * eb), eb, &mut buf);
+            let out = exe.run(&[theta, &buf])?;
+            match &mut acc {
+                None => acc = Some(out[0].clone()),
+                Some(a) => crate::vecmath::axpy(1.0, &out[0], a),
+            }
+        }
+        let mut a = acc.ok_or_else(|| anyhow::anyhow!("n_batches must be >= 1"))?;
+        for v in a.iter_mut() {
+            *v = v.sqrt();
+        }
+        Ok(a)
+    }
+}
+
+impl Oracle for HloLm {
+    fn dim(&self) -> usize {
+        self.n_params
+    }
+    fn n_clients(&self) -> usize {
+        self.data.clients.len()
+    }
+
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let exe = self.rt.load(&format!("lm_grad_{}", self.cfg_name))?;
+        let seqs = &self.data.clients[client];
+        let mut buf = Vec::with_capacity(self.batch * self.seq_len);
+        self.pack(seqs.iter(), self.batch, &mut buf);
+        let out = exe.run(&[w, &buf])?;
+        grad.copy_from_slice(&out[1]);
+        Ok(out[0][0])
+    }
+
+    fn loss_grad_stoch(
+        &self,
+        client: usize,
+        w: &[f32],
+        grad: &mut [f32],
+        rng: &mut Rng,
+    ) -> Result<f32> {
+        let exe = self.rt.load(&format!("lm_grad_{}", self.cfg_name))?;
+        let seqs = &self.data.clients[client];
+        let mut buf = Vec::with_capacity(self.batch * self.seq_len);
+        buf.clear();
+        for _ in 0..self.batch {
+            let i = rng.below(seqs.len());
+            buf.extend_from_slice(&seqs[i]);
+        }
+        let out = exe.run(&[w, &buf])?;
+        grad.copy_from_slice(&out[1]);
+        Ok(out[0][0])
+    }
+}

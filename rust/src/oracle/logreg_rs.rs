@@ -1,0 +1,157 @@
+//! Pure-Rust logistic-regression oracle.
+//!
+//! Independent reference implementation of the same math as the L1 Pallas
+//! kernel (`python/compile/kernels/logreg.py`). Used to cross-validate the
+//! HLO artifacts (integration tests) and as a fast fallback for
+//! experiments whose shard shapes don't match a compiled artifact.
+
+use anyhow::Result;
+
+use super::Oracle;
+use crate::data::FedBinDataset;
+use crate::Rng;
+
+pub struct RustLogReg {
+    pub data: FedBinDataset,
+    pub mu: f32,
+    pub batch: usize,
+}
+
+impl RustLogReg {
+    pub fn new(data: FedBinDataset, mu: f32) -> Self {
+        Self { data, mu, batch: 32 }
+    }
+
+    fn grad_rows(&self, client: usize, rows: &[usize], w: &[f32], grad: &mut [f32]) -> f32 {
+        let shard = &self.data.clients[client];
+        let _d = shard.d;
+        let m = rows.len() as f32;
+        grad.fill(0.0);
+        let mut loss = 0.0f32;
+        for &i in rows {
+            let xi = shard.row(i);
+            let margin = crate::vecmath::dot(xi, w) * shard.y[i];
+            // stable log(1 + exp(-t))
+            loss += if margin > 0.0 {
+                (-margin).exp().ln_1p()
+            } else {
+                -margin + margin.exp().ln_1p()
+            };
+            // -sigmoid(-t) * y
+            let sig = 1.0 / (1.0 + margin.exp());
+            let coeff = -sig * shard.y[i] / m;
+            crate::vecmath::axpy(coeff, xi, grad);
+        }
+        loss /= m;
+        loss += 0.5 * self.mu * crate::vecmath::norm_sq(w);
+        crate::vecmath::axpy(self.mu, w, grad);
+        loss
+    }
+}
+
+impl Oracle for RustLogReg {
+    fn dim(&self) -> usize {
+        self.data.d
+    }
+    fn n_clients(&self) -> usize {
+        self.data.clients.len()
+    }
+
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let m = self.data.clients[client].m;
+        let rows: Vec<usize> = (0..m).collect();
+        Ok(self.grad_rows(client, &rows, w, grad))
+    }
+
+    fn loss_grad_stoch(
+        &self,
+        client: usize,
+        w: &[f32],
+        grad: &mut [f32],
+        rng: &mut Rng,
+    ) -> Result<f32> {
+        let m = self.data.clients[client].m;
+        let b = self.batch.min(m);
+        let rows: Vec<usize> = (0..b).map(|_| rng.below(m)).collect();
+        Ok(self.grad_rows(client, &rows, w, grad))
+    }
+
+    /// L_i = (1/(4 m_i)) sum_j ||a_{ij}||^2 + mu (paper's formula, Sect. 3.3.1).
+    fn smoothness(&self, client: usize) -> f32 {
+        let shard = &self.data.clients[client];
+        let sum: f32 = (0..shard.m).map(|i| crate::vecmath::norm_sq(shard.row(i))).sum();
+        sum / (4.0 * shard.m as f32) + self.mu
+    }
+
+    fn mu(&self, _client: usize) -> f32 {
+        self.mu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{logreg_dataset, Heterogeneity};
+
+    fn oracle() -> RustLogReg {
+        let mut rng = crate::rng(21);
+        let ds = logreg_dataset(12, 40, 3, Heterogeneity::FeatureShift(0.3), 0.2, &mut rng);
+        RustLogReg::new(ds, 0.1)
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let o = oracle();
+        let mut rng = crate::rng(22);
+                let w: Vec<f32> = (0..12).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let mut g = vec![0.0f32; 12];
+        o.loss_grad(1, &w, &mut g).unwrap();
+        let eps = 1e-3f32;
+        for j in [0usize, 5, 11] {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[j] += eps;
+            wm[j] -= eps;
+            let mut tmp = vec![0.0f32; 12];
+            let lp = o.loss_grad(1, &wp, &mut tmp).unwrap();
+            let lm = o.loss_grad(1, &wm, &mut tmp).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((g[j] - fd).abs() < 2e-3, "j={j} g={} fd={fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn loss_is_strongly_convex_bounded_below() {
+        let o = oracle();
+        let w = vec![0.0f32; 12];
+        let mut g = vec![0.0f32; 12];
+        let l0 = o.loss_grad(0, &w, &mut g).unwrap();
+        assert!(l0 > 0.0 && l0.is_finite());
+    }
+
+    #[test]
+    fn stochastic_grad_unbiased_roughly() {
+        let o = oracle();
+        let w = vec![0.1f32; 12];
+        let mut full = vec![0.0f32; 12];
+        o.loss_grad(0, &w, &mut full).unwrap();
+        let mut mean = vec![0.0f32; 12];
+        let mut g = vec![0.0f32; 12];
+        let mut rng = crate::rng(23);
+        let reps = 600;
+        for _ in 0..reps {
+            o.loss_grad_stoch(0, &w, &mut g, &mut rng).unwrap();
+            crate::vecmath::axpy(1.0 / reps as f32, &g, &mut mean);
+        }
+        let err = crate::vecmath::dist_sq(&mean, &full).sqrt();
+        assert!(err < 0.1 * crate::vecmath::norm(&full) + 0.02, "err {err}");
+    }
+
+    #[test]
+    fn smoothness_positive_and_above_mu() {
+        let o = oracle();
+        for i in 0..3 {
+            assert!(o.smoothness(i) > o.mu(i));
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Oracles: the compute interface every algorithm runs against.
+//!
+//! An [`Oracle`] provides per-client loss/gradient evaluations over the
+//! model vector `x in R^d`. The production oracles ([`hlo`]) execute the
+//! AOT-compiled HLO artifacts through the PJRT runtime (the L2/L1 layers);
+//! the pure-Rust oracles ([`quadratic`], [`logreg_rs`]) exist to
+//! (a) unit/property-test the algorithms without PJRT, and
+//! (b) cross-validate artifact numerics against an independent
+//! implementation (integration test `rust/tests/hlo_numerics.rs`).
+
+pub mod hlo;
+pub mod logreg_rs;
+pub mod quadratic;
+
+use anyhow::Result;
+
+use crate::Rng;
+
+pub trait Oracle {
+    /// Model dimension d.
+    fn dim(&self) -> usize;
+    /// Number of clients n.
+    fn n_clients(&self) -> usize;
+
+    /// Full-shard loss + gradient of f_i at w. Writes into `grad`.
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32>;
+
+    /// Stochastic (minibatch) gradient estimate. Default: full gradient.
+    fn loss_grad_stoch(
+        &self,
+        client: usize,
+        w: &[f32],
+        grad: &mut [f32],
+        _rng: &mut Rng,
+    ) -> Result<f32> {
+        self.loss_grad(client, w, grad)
+    }
+
+    /// Global objective f(w) = (1/n) sum_i f_i(w).
+    fn full_loss(&self, w: &[f32]) -> Result<f32> {
+        let mut g = vec![0.0f32; self.dim()];
+        let mut acc = 0.0f32;
+        for i in 0..self.n_clients() {
+            acc += self.loss_grad(i, w, &mut g)?;
+        }
+        Ok(acc / self.n_clients() as f32)
+    }
+
+    /// Global gradient; writes into `grad`, returns f(w).
+    fn full_loss_grad(&self, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let n = self.n_clients();
+        let mut g = vec![0.0f32; self.dim()];
+        grad.fill(0.0);
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += self.loss_grad(i, w, &mut g)?;
+            crate::vecmath::axpy(1.0 / n as f32, &g, grad);
+        }
+        Ok(acc / n as f32)
+    }
+
+    /// Optional vectorized fast path: losses and gradients of *all*
+    /// clients at the same point w, in one dispatch (the batched HLO
+    /// artifact; see DESIGN.md §Perf L2). Returns None when unsupported;
+    /// callers fall back to per-client calls. On success returns
+    /// (losses[n], grads[n*d] row-major).
+    fn all_loss_grads(&self, _w: &[f32]) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(None)
+    }
+
+    /// Per-client strong-convexity estimates mu_i (used by Scafflix
+    /// stepsizes and the SPPM-AS theory constants). Default: uniform 1.
+    fn mu(&self, _client: usize) -> f32 {
+        1.0
+    }
+
+    /// Per-client smoothness estimates L_i. Default: uniform 1.
+    fn smoothness(&self, _client: usize) -> f32 {
+        1.0
+    }
+}
+
+/// Solve min_x f(x) to high accuracy with gradient descent + adaptive
+/// stepsize (backtracking on divergence). Utility for computing reference
+/// optima x* for gap curves.
+pub fn solve_reference<O: Oracle + ?Sized>(
+    oracle: &O,
+    x0: &[f32],
+    mut gamma: f32,
+    iters: usize,
+    tol: f32,
+) -> Result<(Vec<f32>, f32)> {
+    let d = oracle.dim();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut best = f32::INFINITY;
+    for _ in 0..iters {
+        let loss = oracle.full_loss_grad(&x, &mut g)?;
+        if loss.is_nan() || loss > best * 4.0 + 1.0 {
+            // diverged: halve the stepsize and restart from x0
+            gamma *= 0.5;
+            x.copy_from_slice(x0);
+            best = f32::INFINITY;
+            continue;
+        }
+        best = best.min(loss);
+        let gn = crate::vecmath::norm(&g);
+        if gn < tol {
+            break;
+        }
+        crate::vecmath::axpy(-gamma, &g, &mut x);
+    }
+    let loss = oracle.full_loss(&x)?;
+    Ok((x, loss))
+}
+
+/// Solve min_x f_i(x) for one client (local optimum x_i* for FLIX/Scafflix).
+pub fn solve_local<O: Oracle + ?Sized>(
+    oracle: &O,
+    client: usize,
+    x0: &[f32],
+    mut gamma: f32,
+    iters: usize,
+    tol: f32,
+) -> Result<Vec<f32>> {
+    let d = oracle.dim();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut best = f32::INFINITY;
+    for _ in 0..iters {
+        let loss = oracle.loss_grad(client, &x, &mut g)?;
+        if loss.is_nan() || loss > best * 4.0 + 1.0 {
+            gamma *= 0.5;
+            x.copy_from_slice(x0);
+            best = f32::INFINITY;
+            continue;
+        }
+        best = best.min(loss);
+        if crate::vecmath::norm(&g) < tol {
+            break;
+        }
+        crate::vecmath::axpy(-gamma, &g, &mut x);
+    }
+    Ok(x)
+}

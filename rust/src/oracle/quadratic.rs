@@ -1,0 +1,147 @@
+//! Quadratic oracle: f_i(x) = 0.5 (x - b_i)' A_i (x - b_i), A_i diagonal.
+//!
+//! Everything is closed-form (global optimum, per-client prox, mu_i, L_i),
+//! which makes this the workhorse for unit and property tests of the
+//! algorithms: linear-rate checks, prox-solver accuracy, SPPM fixed points.
+
+use anyhow::Result;
+
+use super::Oracle;
+
+#[derive(Debug, Clone)]
+pub struct QuadraticOracle {
+    /// Per client: diagonal of A_i (positive), length d.
+    pub a: Vec<Vec<f32>>,
+    /// Per client: minimizer b_i, length d.
+    pub b: Vec<Vec<f32>>,
+}
+
+impl QuadraticOracle {
+    pub fn new(a: Vec<Vec<f32>>, b: Vec<Vec<f32>>) -> Self {
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().all(|ai| ai.iter().all(|&v| v > 0.0)));
+        Self { a, b }
+    }
+
+    /// Random heterogeneous instance: eigenvalues in [mu, l], minimizers
+    /// spread with the given radius.
+    pub fn random(n: usize, d: usize, mu: f32, l: f32, radius: f32, rng: &mut crate::Rng) -> Self {
+                let a = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32_range(mu, l.max(mu + 1e-6))).collect())
+            .collect();
+        let b = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32_range(-radius, radius)).collect())
+            .collect();
+        Self { a, b }
+    }
+
+    /// Global minimizer: x* = (sum A_i)^{-1} (sum A_i b_i) (diagonal).
+    pub fn minimizer(&self) -> Vec<f32> {
+        let d = self.a[0].len();
+        let mut num = vec![0.0f32; d];
+        let mut den = vec![0.0f32; d];
+        for (ai, bi) in self.a.iter().zip(&self.b) {
+            for j in 0..d {
+                num[j] += ai[j] * bi[j];
+                den[j] += ai[j];
+            }
+        }
+        (0..d).map(|j| num[j] / den[j]).collect()
+    }
+
+    /// Exact prox of the reweighted cohort objective
+    /// f_C = sum_{i in C} f_i / (n p_i):
+    /// prox_{gamma f_C}(x) = (I + gamma sum w_i A_i)^{-1} (x + gamma sum w_i A_i b_i).
+    pub fn prox_cohort(&self, cohort: &[(usize, f32)], x: &[f32], gamma: f32) -> Vec<f32> {
+        let d = x.len();
+        let mut num = x.to_vec();
+        let mut den = vec![1.0f32; d];
+        for &(i, w) in cohort {
+            for j in 0..d {
+                num[j] += gamma * w * self.a[i][j] * self.b[i][j];
+                den[j] += gamma * w * self.a[i][j];
+            }
+        }
+        (0..d).map(|j| num[j] / den[j]).collect()
+    }
+}
+
+impl Oracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.a[0].len()
+    }
+    fn n_clients(&self) -> usize {
+        self.a.len()
+    }
+
+    fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
+        let (a, b) = (&self.a[client], &self.b[client]);
+        let mut loss = 0.0f32;
+        for j in 0..w.len() {
+            let r = w[j] - b[j];
+            grad[j] = a[j] * r;
+            loss += 0.5 * a[j] * r * r;
+        }
+        Ok(loss)
+    }
+
+    fn mu(&self, client: usize) -> f32 {
+        self.a[client].iter().cloned().fold(f32::INFINITY, f32::min)
+    }
+
+    fn smoothness(&self, client: usize) -> f32 {
+        self.a[client].iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_zero_at_minimizer() {
+        let mut rng = crate::rng(18);
+        let q = QuadraticOracle::random(5, 8, 0.5, 3.0, 2.0, &mut rng);
+        let xs = q.minimizer();
+        let mut g = vec![0.0f32; 8];
+        q.full_loss_grad(&xs, &mut g).unwrap();
+        assert!(crate::vecmath::norm(&g) < 1e-4, "grad {}", crate::vecmath::norm(&g));
+    }
+
+    #[test]
+    fn prox_optimality_condition() {
+        // y = prox_{gamma f_C}(x)  <=>  y - x + gamma grad f_C(y) = 0
+        let mut rng = crate::rng(19);
+        let q = QuadraticOracle::random(4, 6, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.3f32; 6];
+        let cohort = vec![(0usize, 1.0f32), (2, 2.0)];
+        let gamma = 0.7;
+        let y = q.prox_cohort(&cohort, &x, gamma);
+        let mut g = vec![0.0f32; 6];
+        let mut total = vec![0.0f32; 6];
+        for &(i, w) in &cohort {
+            q.loss_grad(i, &y, &mut g).unwrap();
+            crate::vecmath::axpy(w, &g, &mut total);
+        }
+        for j in 0..6 {
+            let resid = y[j] - x[j] + gamma * total[j];
+            assert!(resid.abs() < 1e-5, "resid {resid}");
+        }
+    }
+
+    #[test]
+    fn solve_reference_finds_minimizer() {
+        let mut rng = crate::rng(20);
+        let q = QuadraticOracle::random(3, 5, 0.5, 2.0, 1.0, &mut rng);
+        let (x, _) = super::super::solve_reference(&q, &vec![0.0; 5], 0.3, 2000, 1e-7).unwrap();
+        let xs = q.minimizer();
+        assert!(crate::vecmath::dist_sq(&x, &xs) < 1e-6);
+    }
+
+    #[test]
+    fn mu_and_l_are_diag_extremes() {
+        let q = QuadraticOracle::new(vec![vec![0.5, 2.0, 1.0]], vec![vec![0.0; 3]]);
+        assert_eq!(q.mu(0), 0.5);
+        assert_eq!(q.smoothness(0), 2.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Tiny SVG line-plot writer (in-tree; no plotting crates offline).
+//!
+//! Renders the paper's curve figures (gap vs bits / rounds / cost) from
+//! [`crate::metrics::RunRecord`]s with optional log-y, legends and axis
+//! labels. Written next to each experiment's CSVs by the repro drivers.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::RunRecord;
+
+const PALETTE: &[&str] = &[
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum XAxis {
+    Round,
+    BitsUp,
+    CommCost,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum YAxis {
+    Loss,
+    Gap,
+    GradNormSq,
+    Eval,
+}
+
+pub struct PlotSpec<'a> {
+    pub title: &'a str,
+    pub x: XAxis,
+    pub y: YAxis,
+    pub log_y: bool,
+    pub width: f64,
+    pub height: f64,
+}
+
+impl Default for PlotSpec<'_> {
+    fn default() -> Self {
+        Self { title: "", x: XAxis::Round, y: YAxis::Gap, log_y: true, width: 640.0, height: 420.0 }
+    }
+}
+
+fn extract(run: &RunRecord, x: XAxis, y: YAxis) -> Vec<(f64, f64)> {
+    run.rounds
+        .iter()
+        .filter_map(|r| {
+            let xv = match x {
+                XAxis::Round => r.round as f64,
+                XAxis::BitsUp => r.bits_up as f64,
+                XAxis::CommCost => r.comm_cost,
+            };
+            let yv = match y {
+                YAxis::Loss => Some(r.loss as f64),
+                YAxis::Gap => r.gap.map(|v| v as f64),
+                YAxis::GradNormSq => r.grad_norm_sq.map(|v| v as f64),
+                YAxis::Eval => r.eval.map(|v| v as f64),
+            }?;
+            Some((xv, yv))
+        })
+        .collect()
+}
+
+/// Render a set of runs as one SVG chart.
+pub fn render(runs: &[RunRecord], spec: &PlotSpec) -> String {
+    let (w, h) = (spec.width, spec.height);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 50.0);
+    let series: Vec<(String, Vec<(f64, f64)>)> = runs
+        .iter()
+        .map(|r| {
+            let mut pts = extract(r, spec.x, spec.y);
+            if spec.log_y {
+                pts.retain(|&(_, y)| y > 0.0);
+                for p in pts.iter_mut() {
+                    p.1 = p.1.log10();
+                }
+            }
+            (r.label.clone(), pts)
+        })
+        .collect();
+
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if all.is_empty() {
+        x0 = 0.0;
+        x1 = 1.0;
+        y0 = 0.0;
+        y1 = 1.0;
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let sx = |x: f64| ml + (x - x0) / (x1 - x0) * (w - ml - mr);
+    let sy = |y: f64| h - mb - (y - y0) / (y1 - y0) * (h - mt - mb);
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"#
+    );
+    let _ = write!(s, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+    let _ = write!(
+        s,
+        r#"<text x="{}" y="24" font-family="sans-serif" font-size="15" text-anchor="middle">{}</text>"#,
+        w / 2.0,
+        xml_escape(spec.title)
+    );
+    // axes
+    let _ = write!(
+        s,
+        r#"<line x1="{ml}" y1="{}" x2="{}" y2="{}" stroke="black"/><line x1="{ml}" y1="{mt}" x2="{ml}" y2="{}" stroke="black"/>"#,
+        h - mb,
+        w - mr,
+        h - mb,
+        h - mb
+    );
+    // ticks (5 per axis)
+    for i in 0..=4 {
+        let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+        let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="{}" font-family="sans-serif" font-size="10" text-anchor="middle">{}</text>"#,
+            sx(fx),
+            h - mb + 16.0,
+            fmt_tick(fx, false)
+        );
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="{}" font-family="sans-serif" font-size="10" text-anchor="end">{}</text>"#,
+            ml - 6.0,
+            sy(fy) + 3.0,
+            fmt_tick(fy, spec.log_y)
+        );
+        let _ = write!(
+            s,
+            r#"<line x1="{ml}" y1="{}" x2="{}" y2="{}" stroke="lightgray"/>"#,
+            sy(fy),
+            w - mr,
+            sy(fy)
+        );
+    }
+    // axis labels
+    let xlabel = match spec.x {
+        XAxis::Round => "communication rounds",
+        XAxis::BitsUp => "bits sent per node",
+        XAxis::CommCost => "total communication cost",
+    };
+    let ylabel = match (spec.y, spec.log_y) {
+        (YAxis::Gap, true) => "log10 gap",
+        (YAxis::Gap, false) => "gap",
+        (YAxis::Loss, _) => "loss",
+        (YAxis::GradNormSq, _) => "||grad||^2",
+        (YAxis::Eval, _) => "eval metric",
+    };
+    let _ = write!(
+        s,
+        r#"<text x="{}" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle">{xlabel}</text>"#,
+        w / 2.0,
+        h - 12.0
+    );
+    let _ = write!(
+        s,
+        r#"<text x="16" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle" transform="rotate(-90 16 {})">{ylabel}</text>"#,
+        h / 2.0,
+        h / 2.0
+    );
+    // series
+    for (si, (label, pts)) in series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        if pts.len() >= 2 {
+            let path: Vec<String> =
+                pts.iter().map(|&(x, y)| format!("{:.1},{:.1}", sx(x), sy(y))).collect();
+            let _ = write!(
+                s,
+                r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="1.8"/>"#,
+                path.join(" ")
+            );
+        }
+        // legend
+        let ly = mt + 16.0 * si as f64;
+        let _ = write!(
+            s,
+            r#"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="2"/><text x="{}" y="{}" font-family="sans-serif" font-size="10">{}</text>"#,
+            w - mr - 150.0,
+            w - mr - 130.0,
+            w - mr - 125.0,
+            ly + 3.0,
+            xml_escape(label)
+        );
+    }
+    s.push_str("</svg>");
+    s
+}
+
+fn fmt_tick(v: f64, log: bool) -> String {
+    if log {
+        format!("1e{v:.1}")
+    } else if v.abs() >= 10_000.0 {
+        format!("{:.1e}", v)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Write runs as an SVG file.
+pub fn write_svg(path: impl AsRef<Path>, runs: &[RunRecord], spec: &PlotSpec) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, render(runs, spec))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundStat;
+
+    fn run() -> RunRecord {
+        let mut r = RunRecord::new("demo-run");
+        for i in 0..20 {
+            r.push(RoundStat {
+                round: i,
+                bits_up: (i * 100) as u64,
+                comm_cost: i as f64,
+                loss: 1.0 / (i + 1) as f32,
+                gap: Some(10.0f32.powi(-(i as i32) / 4)),
+                ..Default::default()
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn renders_valid_svg_with_series_and_legend() {
+        let svg = render(&[run()], &PlotSpec { title: "t", ..Default::default() });
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert!(svg.contains("polyline"));
+        assert!(svg.contains("demo-run"));
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let mut r = run();
+        r.rounds[3].gap = Some(0.0); // must be filtered in log mode
+        let svg = render(&[r], &PlotSpec::default());
+        assert!(svg.contains("polyline"));
+    }
+
+    #[test]
+    fn empty_runs_render_without_panic() {
+        let r = RunRecord::new("empty");
+        let svg = render(&[r], &PlotSpec::default());
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn escapes_labels() {
+        let mut r = run();
+        r.label = "a<b&c".into();
+        let svg = render(&[r], &PlotSpec::default());
+        assert!(svg.contains("a&lt;b&amp;c"));
+    }
+}

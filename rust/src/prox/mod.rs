@@ -1,0 +1,324 @@
+//! Local solvers 𝒜 for the SPPM-AS proximal subproblem (Sect. 5.4.3).
+//!
+//! SPPM-AS iterates x_{t+1} = prox_{gamma f_C}(x_t), where the prox is
+//! computed *inexactly* by K "local communication rounds" within the
+//! cohort: every evaluation of grad f_C requires each cohort client to
+//! send its local gradient to the hub — that is exactly one local
+//! communication round, so K = number of gradient evaluations.
+//!
+//! phi(y) = f_C(y) + 1/(2 gamma) ||y - x_center||^2
+//!
+//! Solvers: LocalGD (first-order), nonlinear CG (Polak–Ribière), L-BFGS
+//! (two-loop recursion), Adam — the table 5.2 lineup.
+
+use anyhow::Result;
+
+use crate::vecmath as vm;
+
+/// Cohort objective evaluator: writes grad f_C(y) into `grad`, returns
+/// f_C(y). One call == one local communication round.
+pub type CohortObj<'a> = dyn FnMut(&[f32], &mut [f32]) -> Result<f32> + 'a;
+
+pub trait ProxSolver {
+    /// Approximately minimize phi(y) starting at `y0`, spending exactly
+    /// `k_rounds` objective evaluations. Returns the final iterate.
+    fn solve(
+        &self,
+        obj: &mut CohortObj<'_>,
+        x_center: &[f32],
+        gamma: f32,
+        k_rounds: usize,
+        y0: &[f32],
+        lipschitz: f32,
+    ) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Adds the prox-term gradient: grad += (y - x_center)/gamma;
+/// returns the prox-term value.
+fn prox_term(y: &[f32], x_center: &[f32], gamma: f32, grad: &mut [f32]) -> f32 {
+    let mut val = 0.0f32;
+    for j in 0..y.len() {
+        let r = y[j] - x_center[j];
+        grad[j] += r / gamma;
+        val += r * r;
+    }
+    val / (2.0 * gamma)
+}
+
+/// Plain gradient descent on phi with stepsize 1/(L + 1/gamma).
+pub struct LocalGdSolver;
+
+impl ProxSolver for LocalGdSolver {
+    fn solve(
+        &self,
+        obj: &mut CohortObj<'_>,
+        x_center: &[f32],
+        gamma: f32,
+        k_rounds: usize,
+        y0: &[f32],
+        lipschitz: f32,
+    ) -> Result<Vec<f32>> {
+        let d = y0.len();
+        let mut y = y0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let eta = 1.0 / (lipschitz + 1.0 / gamma);
+        for _ in 0..k_rounds {
+            let _ = obj(&y, &mut g)?;
+            prox_term(&y, x_center, gamma, &mut g);
+            vm::axpy(-eta, &g, &mut y);
+        }
+        Ok(y)
+    }
+    fn name(&self) -> &'static str {
+        "LocalGD"
+    }
+}
+
+/// Nonlinear conjugate gradient (Polak–Ribière+ with automatic restart).
+pub struct CgSolver;
+
+impl ProxSolver for CgSolver {
+    fn solve(
+        &self,
+        obj: &mut CohortObj<'_>,
+        x_center: &[f32],
+        gamma: f32,
+        k_rounds: usize,
+        y0: &[f32],
+        lipschitz: f32,
+    ) -> Result<Vec<f32>> {
+        let d = y0.len();
+        let mut y = y0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut g_prev = vec![0.0f32; d];
+        let mut dir = vec![0.0f32; d];
+        let eta = 1.0 / (lipschitz + 1.0 / gamma);
+        for k in 0..k_rounds {
+            let _ = obj(&y, &mut g)?;
+            prox_term(&y, x_center, gamma, &mut g);
+            if k == 0 {
+                dir.copy_from_slice(&g);
+                vm::scale(-1.0, &mut dir);
+            } else {
+                // beta_PR+ = max(0, <g, g - g_prev> / ||g_prev||^2)
+                let mut num = 0.0f32;
+                for j in 0..d {
+                    num += g[j] * (g[j] - g_prev[j]);
+                }
+                let den = vm::norm_sq(&g_prev).max(1e-20);
+                let beta = (num / den).max(0.0);
+                for j in 0..d {
+                    dir[j] = -g[j] + beta * dir[j];
+                }
+                // restart if not a descent direction
+                if vm::dot(&dir, &g) > 0.0 {
+                    dir.copy_from_slice(&g);
+                    vm::scale(-1.0, &mut dir);
+                }
+            }
+            vm::axpy(eta, &dir, &mut y);
+            g_prev.copy_from_slice(&g);
+        }
+        Ok(y)
+    }
+    fn name(&self) -> &'static str {
+        "CG"
+    }
+}
+
+/// L-BFGS with two-loop recursion (memory 5), unit step damped by the
+/// prox-smoothed curvature.
+pub struct LbfgsSolver {
+    pub memory: usize,
+}
+
+impl Default for LbfgsSolver {
+    fn default() -> Self {
+        Self { memory: 5 }
+    }
+}
+
+impl ProxSolver for LbfgsSolver {
+    fn solve(
+        &self,
+        obj: &mut CohortObj<'_>,
+        x_center: &[f32],
+        gamma: f32,
+        k_rounds: usize,
+        y0: &[f32],
+        lipschitz: f32,
+    ) -> Result<Vec<f32>> {
+        let d = y0.len();
+        let m = self.memory;
+        let mut y = y0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut s_hist: Vec<Vec<f32>> = Vec::new();
+        let mut y_hist: Vec<Vec<f32>> = Vec::new();
+        let mut g_prev = vec![0.0f32; d];
+        let mut y_prev = vec![0.0f32; d];
+        let eta0 = 1.0 / (lipschitz + 1.0 / gamma);
+        for k in 0..k_rounds {
+            let _ = obj(&y, &mut g)?;
+            prox_term(&y, x_center, gamma, &mut g);
+            if k > 0 {
+                let mut s = vec![0.0f32; d];
+                let mut yv = vec![0.0f32; d];
+                vm::sub(&y, &y_prev, &mut s);
+                vm::sub(&g, &g_prev, &mut yv);
+                if vm::dot(&s, &yv) > 1e-12 {
+                    s_hist.push(s);
+                    y_hist.push(yv);
+                    if s_hist.len() > m {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                    }
+                }
+            }
+            y_prev.copy_from_slice(&y);
+            g_prev.copy_from_slice(&g);
+
+            // two-loop recursion
+            let mut q = g.clone();
+            let h = s_hist.len();
+            let mut alphas = vec![0.0f32; h];
+            for i in (0..h).rev() {
+                let rho = 1.0 / vm::dot(&y_hist[i], &s_hist[i]).max(1e-20);
+                alphas[i] = rho * vm::dot(&s_hist[i], &q);
+                vm::axpy(-alphas[i], &y_hist[i], &mut q);
+            }
+            let h0 = if h > 0 {
+                let i = h - 1;
+                vm::dot(&s_hist[i], &y_hist[i]) / vm::norm_sq(&y_hist[i]).max(1e-20)
+            } else {
+                eta0
+            };
+            vm::scale(h0, &mut q);
+            for i in 0..h {
+                let rho = 1.0 / vm::dot(&y_hist[i], &s_hist[i]).max(1e-20);
+                let beta = rho * vm::dot(&y_hist[i], &q);
+                vm::axpy(alphas[i] - beta, &s_hist[i], &mut q);
+            }
+            vm::axpy(-1.0, &q, &mut y);
+        }
+        Ok(y)
+    }
+    fn name(&self) -> &'static str {
+        "BFGS"
+    }
+}
+
+/// Adam on phi (the non-convex / neural-network prox solver, Sect. 5.4.6).
+pub struct AdamSolver {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamSolver {
+    fn default() -> Self {
+        Self { lr: 0.05, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl ProxSolver for AdamSolver {
+    fn solve(
+        &self,
+        obj: &mut CohortObj<'_>,
+        x_center: &[f32],
+        gamma: f32,
+        k_rounds: usize,
+        y0: &[f32],
+        _lipschitz: f32,
+    ) -> Result<Vec<f32>> {
+        let d = y0.len();
+        let mut y = y0.to_vec();
+        let mut g = vec![0.0f32; d];
+        let mut m1 = vec![0.0f32; d];
+        let mut m2 = vec![0.0f32; d];
+        for k in 0..k_rounds {
+            let _ = obj(&y, &mut g)?;
+            prox_term(&y, x_center, gamma, &mut g);
+            let t = (k + 1) as f32;
+            let bc1 = 1.0 - self.beta1.powf(t);
+            let bc2 = 1.0 - self.beta2.powf(t);
+            for j in 0..d {
+                m1[j] = self.beta1 * m1[j] + (1.0 - self.beta1) * g[j];
+                m2[j] = self.beta2 * m2[j] + (1.0 - self.beta2) * g[j] * g[j];
+                y[j] -= self.lr * (m1[j] / bc1) / ((m2[j] / bc2).sqrt() + self.eps);
+            }
+        }
+        Ok(y)
+    }
+    fn name(&self) -> &'static str {
+        "Adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::Oracle;
+
+    /// phi for a quadratic cohort has a closed-form prox; all solvers must
+    /// approach it, and more rounds must not hurt.
+    fn setup() -> (QuadraticOracle, Vec<(usize, f32)>, Vec<f32>, f32) {
+        let mut rng = crate::rng(24);
+        let q = QuadraticOracle::random(6, 8, 0.5, 3.0, 2.0, &mut rng);
+        let cohort: Vec<(usize, f32)> = vec![(0, 1.0), (3, 1.0), (5, 1.0)];
+        let x = vec![0.25f32; 8];
+        (q, cohort, x, 0.8)
+    }
+
+    fn run(solver: &dyn ProxSolver, k: usize) -> f32 {
+        let (q, cohort, x, gamma) = setup();
+        let exact = q.prox_cohort(&cohort, &x, gamma);
+        let mut obj = |y: &[f32], g: &mut [f32]| -> anyhow::Result<f32> {
+            let mut tmp = vec![0.0f32; y.len()];
+            g.fill(0.0);
+            let mut loss = 0.0;
+            for &(i, w) in &cohort {
+                loss += w * q.loss_grad(i, y, &mut tmp)?;
+                vm::axpy(w, &tmp, g);
+            }
+            Ok(loss)
+        };
+        let lip: f32 = cohort.iter().map(|&(i, w)| w * q.smoothness(i)).sum();
+        let y = solver.solve(&mut obj, &x, gamma, k, &x, lip).unwrap();
+        vm::dist_sq(&y, &exact).sqrt()
+    }
+
+    #[test]
+    fn localgd_converges_to_exact_prox() {
+        assert!(run(&LocalGdSolver, 300) < 1e-3);
+    }
+
+    #[test]
+    fn cg_converges_faster_than_gd() {
+        let e_cg = run(&CgSolver, 25);
+        let e_gd = run(&LocalGdSolver, 25);
+        assert!(e_cg < e_gd, "cg {e_cg} vs gd {e_gd}");
+    }
+
+    #[test]
+    fn lbfgs_high_accuracy() {
+        assert!(run(&LbfgsSolver::default(), 40) < 1e-4);
+    }
+
+    #[test]
+    fn adam_reduces_error() {
+        let far = run(&AdamSolver::default(), 1);
+        let near = run(&AdamSolver::default(), 200);
+        assert!(near < far);
+    }
+
+    #[test]
+    fn more_rounds_never_worse_for_gd() {
+        let e5 = run(&LocalGdSolver, 5);
+        let e50 = run(&LocalGdSolver, 50);
+        assert!(e50 <= e5 + 1e-6);
+    }
+}

@@ -1,0 +1,199 @@
+//! Training-free fine-tuning: DSnoT and R²-DSnoT (Sect. 6.3.6).
+//!
+//! After an initial mask is chosen, iterate a prune-and-grow sweep per
+//! output row *without any backprop*: grow the pruned weight whose revival
+//! most reduces the row's reconstruction error, prune the kept weight that
+//! contributes least, and swap when the exchange is profitable.
+//!
+//! DSnoT uses the Wanda importance |W| * a_in for both decisions.
+//! R²-DSnoT (the paper's contribution) replaces the grow criterion with
+//! *relative* weight importance (the RIA score) and regularizes the
+//! decision boundary: a swap happens only when
+//!   grow_score > (1 + reg) * prune_score,
+//! which suppresses oscillating swaps near the boundary.
+
+use crate::manifest::{CalibLayout, LayoutEntry};
+use crate::pruning::{calib_slices, score, Method};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DsnotConfig {
+    /// Max prune-and-grow sweeps per layer.
+    pub iters: usize,
+    /// Decision-boundary regularizer (0 = vanilla DSnoT boundary).
+    pub reg: f32,
+    /// Use RIA-based relative importance for the grow side (R²-DSnoT).
+    pub relative_grow: bool,
+    /// RIA symmetric blend for the grow score.
+    pub alpha: f32,
+}
+
+impl Default for DsnotConfig {
+    fn default() -> Self {
+        Self { iters: 3, reg: 0.1, relative_grow: true, alpha: 0.5 }
+    }
+}
+
+/// One layer's prune-and-grow. `w` row-major [o, i]; `mask[j]` true = kept.
+/// Returns number of swaps performed.
+pub fn prune_and_grow_layer(
+    w: &mut [f32],
+    mask: &mut [bool],
+    o: usize,
+    i: usize,
+    a_in: &[f32],
+    a_out: &[f32],
+    cfg: &DsnotConfig,
+) -> usize {
+    // importance for the prune side: Wanda (what keeping this weight buys)
+    let keep_score = score(Method::Wanda, w, o, i, a_in, a_out);
+    // importance for the grow side
+    let grow_score = if cfg.relative_grow {
+        score(Method::Ria { alpha: cfg.alpha, p: 0.5 }, w, o, i, a_in, a_out)
+    } else {
+        keep_score.clone()
+    };
+    // normalize both sides to comparable scale (per row) so the decision
+    // boundary (1 + reg) is meaningful across criteria
+    let mut swaps = 0;
+    for _ in 0..cfg.iters {
+        let mut changed = false;
+        for r in 0..o {
+            let row = r * i;
+            // candidate to grow: pruned index with max grow_score
+            let mut g_best: Option<(usize, f32)> = None;
+            // candidate to prune: kept index with min keep_score
+            let mut p_best: Option<(usize, f32)> = None;
+            for c in 0..i {
+                let j = row + c;
+                if mask[j] {
+                    if p_best.map_or(true, |(_, s)| keep_score[j] < s) {
+                        p_best = Some((j, keep_score[j]));
+                    }
+                } else if g_best.map_or(true, |(_, s)| grow_score[j] > s) {
+                    g_best = Some((j, grow_score[j]));
+                }
+            }
+            if let (Some((gj, gs)), Some((pj, ps))) = (g_best, p_best) {
+                // scale-free comparison via per-row normalization
+                let row_keep_max = (0..i)
+                    .map(|c| keep_score[row + c])
+                    .fold(0.0f32, f32::max)
+                    .max(1e-12);
+                let row_grow_max = (0..i)
+                    .map(|c| grow_score[row + c])
+                    .fold(0.0f32, f32::max)
+                    .max(1e-12);
+                let gs_n = gs / row_grow_max;
+                let ps_n = ps / row_keep_max;
+                if gs_n > (1.0 + cfg.reg) * ps_n {
+                    mask[gj] = true;
+                    mask[pj] = false;
+                    swaps += 1;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // re-apply the mask to the weights
+    for (v, &k) in w.iter_mut().zip(mask.iter()) {
+        if !k {
+            *v = 0.0;
+        }
+    }
+    swaps
+}
+
+/// Model-level DSnoT pass over all prunable layers. The masks are the
+/// current zero-patterns of `theta` (a weight is "kept" iff nonzero), so
+/// this composes with any initial pruning method. To let grow candidates
+/// recover their original values, pass the dense pre-pruning parameters in
+/// `theta_dense`.
+pub fn finetune_model(
+    layout: &[LayoutEntry],
+    calib_layout: &CalibLayout,
+    theta: &mut [f32],
+    theta_dense: &[f32],
+    calib: &[f32],
+    cfg: &DsnotConfig,
+) -> usize {
+    let mut total_swaps = 0;
+    for e in layout.iter().filter(|e| e.is_prunable()) {
+        let Some((o, i)) = e.matrix_dims() else { continue };
+        let Some((a_in, a_out)) = calib_slices(calib_layout, calib, &e.name) else { continue };
+        let dense = &theta_dense[e.offset..e.offset + e.size];
+        let sparse = &mut theta[e.offset..e.offset + e.size];
+        let mut mask: Vec<bool> = sparse.iter().map(|&v| v != 0.0).collect();
+        // operate on the dense weights so grown entries get real values
+        let mut w = dense.to_vec();
+        for (v, &k) in w.iter_mut().zip(&mask) {
+            if !k {
+                // keep dense value available for the grow criterion; the
+                // final re-application zeroes non-kept entries
+            }
+            let _ = v;
+        }
+        total_swaps += prune_and_grow_layer(&mut w, &mut mask, o, i, a_in, a_out, cfg);
+        sparse.copy_from_slice(&w);
+    }
+    total_swaps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swaps_recover_high_activation_weight() {
+        // column 2 has huge activation; magnitude pruning killed it.
+        let o = 1;
+        let i = 4;
+        let mut w = vec![1.0, 0.9, 0.8, 0.0]; // w[3] pruned (dense value 0.8 below)
+        let dense = [1.0, 0.9, 0.8, 0.85];
+        let mut mask = vec![true, true, true, false];
+        let a_in = vec![0.1, 0.1, 0.1, 10.0];
+        let a_out = vec![1.0];
+        // use dense values for the sweep
+        w.copy_from_slice(&dense);
+        let cfg = DsnotConfig { iters: 2, reg: 0.0, relative_grow: false, alpha: 1.0 };
+        let swaps = prune_and_grow_layer(&mut w, &mut mask, o, i, &a_in, &a_out, &cfg);
+        assert!(swaps >= 1);
+        assert!(mask[3], "high-activation weight should be grown back");
+        assert_eq!(mask.iter().filter(|&&k| k).count(), 3, "sparsity preserved");
+    }
+
+    #[test]
+    fn sparsity_is_invariant() {
+        let mut rng = crate::rng(37);
+                let (o, i) = (8, 16);
+        let mut w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.1, 3.0)).collect();
+        let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.1, 3.0)).collect();
+        let s = crate::pruning::score(Method::Magnitude, &w, o, i, &a_in, &a_out);
+        let mut mask = crate::pruning::select_mask(&s, o, i, 0.5, crate::pruning::Scope::PerRow);
+        let before = mask.iter().filter(|&&k| k).count();
+        prune_and_grow_layer(&mut w, &mut mask, o, i, &a_in, &a_out, &DsnotConfig::default());
+        let after = mask.iter().filter(|&&k| k).count();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn regularizer_suppresses_marginal_swaps() {
+        let mut rng = crate::rng(38);
+                let (o, i) = (6, 12);
+        let w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.5, 1.5)).collect();
+        let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.5, 1.5)).collect();
+        let s = crate::pruning::score(Method::Wanda, &w, o, i, &a_in, &a_out);
+        let mask0 = crate::pruning::select_mask(&s, o, i, 0.5, crate::pruning::Scope::PerRow);
+        let run = |reg: f32| {
+            let mut wc = w.clone();
+            let mut m = mask0.clone();
+            let cfg = DsnotConfig { iters: 5, reg, relative_grow: true, alpha: 0.5 };
+            prune_and_grow_layer(&mut wc, &mut m, o, i, &a_in, &a_out, &cfg)
+        };
+        assert!(run(10.0) <= run(0.0), "large reg should not increase swaps");
+    }
+}

@@ -1,0 +1,407 @@
+//! FedP3 (Algorithm 5, Ch. 4): federated personalized privacy-friendly
+//! network pruning.
+//!
+//! Per round: the server samples a cohort; each client i receives only its
+//! assigned layer subset L_i dense plus the *globally pruned* remaining
+//! layers (mask P_i at ratio `global_ratio`); the client runs K local
+//! steps (with an optional *local* pruning schedule Q_i) and uploads only
+//! the L_i layers; the server aggregates layer-wise (simple or weighted).
+//! The privacy-friendliness is structural: no client ever uploads the full
+//! network, and LDP-FedP3 additionally clips + noises uploads.
+
+use anyhow::Result;
+
+use crate::manifest::LayoutEntry;
+use crate::metrics::{RoundStat, RunRecord};
+use crate::model::layer_groups;
+use crate::oracle::Oracle;
+use crate::privacy::LdpConfig;
+use crate::Rng;
+
+/// Which layer groups each client trains (the OPU strategies of Fig. 4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerAssignment {
+    /// Train all layers (FedAvg-like upper bound).
+    All,
+    /// Uniformly choose `k` layer groups per client (+ always the final
+    /// group, the paper's FFC).
+    Opu(usize),
+    /// One random group only (+ final) — the paper's LowerB.
+    LowerB,
+}
+
+/// Local pruning schedule Q_i (Table 4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LocalPruning {
+    /// No additional pruning during local steps.
+    Fixed,
+    /// Fresh uniform mask with keep-prob q each local step.
+    Uniform { q: f32 },
+    /// Ordered dropout: keep the first q-fraction of each dimension.
+    OrderedDropout { q: f32 },
+}
+
+/// Layer-wise aggregation rule (Algorithm 7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    Simple,
+    /// Weight client contributions by |L_i| / sum_j |L_j|.
+    Weighted,
+}
+
+pub struct FedP3 {
+    pub assignment: LayerAssignment,
+    pub local_pruning: LocalPruning,
+    pub aggregation: Aggregation,
+    /// Server->client global pruning keep-ratio (1.0 = dense).
+    pub global_ratio: f32,
+    pub cohort: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Optional local differential privacy on uploads (LDP-FedP3).
+    pub ldp: Option<LdpConfig>,
+}
+
+impl Default for FedP3 {
+    fn default() -> Self {
+        Self {
+            assignment: LayerAssignment::Opu(3),
+            local_pruning: LocalPruning::Fixed,
+            aggregation: Aggregation::Weighted,
+            global_ratio: 0.9,
+            cohort: 10,
+            local_steps: 2,
+            lr: 0.1,
+            ldp: None,
+        }
+    }
+}
+
+pub struct FedP3Outcome {
+    pub record: RunRecord,
+    pub theta: Vec<f32>,
+    /// Average fraction of parameters uploaded per client per round.
+    pub upload_fraction: f64,
+}
+
+impl FedP3 {
+    fn assign_groups(&self, n_groups: usize, rng: &mut Rng) -> Vec<usize> {
+        let last = n_groups - 1; // final group (output layer) always trained
+        let mut groups: Vec<usize> = match self.assignment {
+            LayerAssignment::All => (0..n_groups).collect(),
+            LayerAssignment::Opu(k) => {
+                let mut pool: Vec<usize> = (0..last).collect();
+                rng.shuffle(&mut pool);
+                let mut g: Vec<usize> = pool.into_iter().take(k.saturating_sub(1).max(1)).collect();
+                g.push(last);
+                g
+            }
+            LayerAssignment::LowerB => {
+                vec![rng.below(last), last]
+            }
+        };
+        groups.sort_unstable();
+        groups.dedup();
+        groups
+    }
+
+    /// Run FedP3 with a per-round test-accuracy probe.
+    pub fn run<O, F>(
+        &self,
+        oracle: &O,
+        layout: &[LayoutEntry],
+        theta0: &[f32],
+        rounds: usize,
+        eval_every: usize,
+        seed: u64,
+        mut eval: F,
+    ) -> Result<FedP3Outcome>
+    where
+        O: Oracle + ?Sized,
+        F: FnMut(&[f32]) -> Result<f32>,
+    {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let groups = layer_groups(layout);
+        let n_groups = groups.len();
+        anyhow::ensure!(n_groups >= 2, "FedP3 needs >= 2 layer groups");
+        let mut rng = crate::rng(seed);
+        let mut theta = theta0.to_vec();
+        let mut rec = RunRecord::new(format!(
+            "FedP3[{:?},{:?},{:?},r={}]",
+            self.assignment, self.local_pruning, self.aggregation, self.global_ratio
+        ));
+        let mut uploaded_params = 0u64;
+        let mut bits_up = 0u64;
+        let mut g = vec![0.0f32; d];
+        let mut agg = vec![0.0f32; d];
+        let mut agg_w = vec![0.0f32; d];
+
+        for t in 0..rounds {
+            if t % eval_every == 0 {
+                let acc = eval(&theta)?;
+                rec.push(RoundStat {
+                    round: t,
+                    bits_up,
+                    bits_down: bits_up,
+                    comm_cost: t as f64,
+                    loss: 0.0,
+                    gap: None,
+                    grad_norm_sq: None,
+                    eval: Some(acc),
+                });
+            }
+            // sample cohort
+            let mut clients: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut clients);
+            clients.truncate(self.cohort.min(n));
+
+            agg.fill(0.0);
+            agg_w.fill(0.0);
+            for &ci in &clients {
+                let l_i = self.assign_groups(n_groups, &mut rng);
+                // entry indices trained by this client
+                let mut trained = vec![false; layout.len()];
+                for &gi in &l_i {
+                    for &ei in &groups[gi].1 {
+                        trained[ei] = true;
+                    }
+                }
+                // local model: dense on trained layers, globally pruned elsewhere
+                let mut local = theta.clone();
+                let mut frozen_mask = vec![true; d];
+                for (ei, e) in layout.iter().enumerate() {
+                    if !trained[ei] && self.global_ratio < 1.0 {
+                        for j in e.offset..e.offset + e.size {
+                            if rng.f32_unit() > self.global_ratio {
+                                local[j] = 0.0;
+                                frozen_mask[j] = false;
+                            }
+                        }
+                    }
+                }
+                // K local steps (SGD on the local model; untrained layers
+                // stay fixed, pruned entries stay zero)
+                for k in 0..self.local_steps {
+                    oracle.loss_grad_stoch(ci, &local, &mut g, &mut rng)?;
+                    // local pruning schedule on top of the global mask
+                    let q = match self.local_pruning {
+                        LocalPruning::Fixed => 1.0,
+                        LocalPruning::Uniform { q } | LocalPruning::OrderedDropout { q } => q,
+                    };
+                    for (ei, e) in layout.iter().enumerate() {
+                        if !trained[ei] {
+                            continue; // frozen
+                        }
+                        for (jrel, j) in (e.offset..e.offset + e.size).enumerate() {
+                            let keep = match self.local_pruning {
+                                LocalPruning::Fixed => true,
+                                LocalPruning::Uniform { .. } => {
+                                    rng.f32_unit() < q
+                                }
+                                LocalPruning::OrderedDropout { .. } => {
+                                    (jrel as f32) < q * e.size as f32
+                                }
+                            };
+                            if keep {
+                                local[j] -= self.lr * g[j];
+                            }
+                        }
+                    }
+                    let _ = k;
+                }
+                // upload only the trained layers (optionally privatized)
+                let weight = match self.aggregation {
+                    Aggregation::Simple => 1.0f32,
+                    Aggregation::Weighted => l_i.len() as f32,
+                };
+                for (ei, e) in layout.iter().enumerate() {
+                    if !trained[ei] {
+                        continue;
+                    }
+                    let seg = e.offset..e.offset + e.size;
+                    let mut upload: Vec<f32> = local[seg.clone()].to_vec();
+                    if let Some(ldp) = &self.ldp {
+                        // privatize the *delta* from the server model
+                        let mut delta: Vec<f32> = upload
+                            .iter()
+                            .zip(&theta[seg.clone()])
+                            .map(|(a, b)| a - b)
+                            .collect();
+                        crate::privacy::privatize(&mut delta, ldp, &mut rng);
+                        for (u, (dl, base)) in
+                            upload.iter_mut().zip(delta.iter().zip(&theta[seg.clone()]))
+                        {
+                            *u = base + dl;
+                        }
+                    }
+                    for (jrel, j) in seg.enumerate() {
+                        agg[j] += weight * upload[jrel];
+                        agg_w[j] += weight;
+                    }
+                    uploaded_params += e.size as u64;
+                    bits_up += 32 * e.size as u64;
+                }
+            }
+            // layer-wise aggregation; entries nobody trained keep old value
+            for j in 0..d {
+                if agg_w[j] > 0.0 {
+                    theta[j] = agg[j] / agg_w[j];
+                }
+            }
+        }
+        let acc = eval(&theta)?;
+        rec.push(RoundStat {
+            round: rounds,
+            bits_up,
+            bits_down: bits_up,
+            comm_cost: rounds as f64,
+            loss: 0.0,
+            gap: None,
+            grad_norm_sq: None,
+            eval: Some(acc),
+        });
+        let denom = (rounds.max(1) * self.cohort.min(n)) as f64 * d as f64;
+        Ok(FedP3Outcome {
+            record: rec,
+            theta,
+            upload_fraction: uploaded_params as f64 / denom,
+        })
+    }
+
+    /// Expected fraction of parameters uploaded per client per round under
+    /// the given assignment (the communication-saving headline of Fig 4.2).
+    pub fn expected_upload_fraction(&self, layout: &[LayoutEntry]) -> f64 {
+        let groups = layer_groups(layout);
+        let n_groups = groups.len();
+        let total: usize = layout.iter().map(|e| e.size).sum();
+        let gsize =
+            |gi: usize| -> usize { groups[gi].1.iter().map(|&ei| layout[ei].size).sum() };
+        match self.assignment {
+            LayerAssignment::All => 1.0,
+            LayerAssignment::Opu(k) => {
+                let k_inner = k.saturating_sub(1).max(1).min(n_groups - 1);
+                let inner: usize = (0..n_groups - 1).map(gsize).sum();
+                let avg_inner = inner as f64 * k_inner as f64 / (n_groups - 1) as f64;
+                (avg_inner + gsize(n_groups - 1) as f64) / total as f64
+            }
+            LayerAssignment::LowerB => {
+                let inner: usize = (0..n_groups - 1).map(gsize).sum();
+                let avg_inner = inner as f64 / (n_groups - 1) as f64;
+                (avg_inner + gsize(n_groups - 1) as f64) / total as f64
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::LayoutEntry;
+    use crate::oracle::quadratic::QuadraticOracle;
+
+    fn toy_layout(d: usize) -> Vec<LayoutEntry> {
+        // three "layers" over a flat quadratic's coordinates
+        let mk = |name: &str, offset: usize, size: usize| LayoutEntry {
+            name: name.into(),
+            shape: vec![size],
+            offset,
+            size,
+            kind: "linear".into(),
+            init_scale: 0.1,
+        };
+        let third = d / 3;
+        vec![
+            mk("fc0.w", 0, third),
+            mk("fc1.w", third, third),
+            mk("fc2.w", 2 * third, d - 2 * third),
+        ]
+    }
+
+    #[test]
+    fn improves_objective_over_rounds() {
+        let mut rng = crate::rng(39);
+        let q = QuadraticOracle::random(8, 9, 0.5, 2.0, 1.0, &mut rng);
+        let layout = toy_layout(9);
+        let alg = FedP3 {
+            assignment: LayerAssignment::Opu(2),
+            cohort: 4,
+            local_steps: 3,
+            lr: 0.2,
+            global_ratio: 0.9,
+            ..Default::default()
+        };
+        let mut losses = Vec::new();
+        let out = alg
+            .run(&q, &layout, &vec![2.0; 9], 40, 10, 0, |theta| {
+                let l = crate::oracle::Oracle::full_loss(&q, theta)?;
+                losses.push(l);
+                Ok(-l) // eval = negative loss so "higher is better"
+            })
+            .unwrap();
+        assert!(losses.last().unwrap() < &losses[0], "{losses:?}");
+        assert!(out.upload_fraction < 1.0);
+    }
+
+    #[test]
+    fn upload_fraction_matches_expectation() {
+        let mut rng = crate::rng(40);
+        let q = QuadraticOracle::random(6, 9, 0.5, 2.0, 1.0, &mut rng);
+        let layout = toy_layout(9);
+        let alg = FedP3 { assignment: LayerAssignment::Opu(2), cohort: 6, ..Default::default() };
+        let expect = alg.expected_upload_fraction(&layout);
+        let out = alg
+            .run(&q, &layout, &vec![0.5; 9], 60, 60, 1, |_| Ok(0.0))
+            .unwrap();
+        assert!(
+            (out.upload_fraction - expect).abs() < 0.15,
+            "measured {} vs expected {expect}",
+            out.upload_fraction
+        );
+    }
+
+    #[test]
+    fn lowerb_uploads_less_than_opu3_less_than_all() {
+        let layout = toy_layout(9);
+        let f = |a: LayerAssignment| {
+            FedP3 { assignment: a, ..Default::default() }.expected_upload_fraction(&layout)
+        };
+        let lower = f(LayerAssignment::LowerB);
+        let opu = f(LayerAssignment::Opu(3));
+        let all = f(LayerAssignment::All);
+        assert!(lower <= opu && opu <= all, "{lower} {opu} {all}");
+    }
+
+    #[test]
+    fn ldp_variant_still_trains() {
+        let mut rng = crate::rng(41);
+        let q = QuadraticOracle::random(6, 9, 0.5, 2.0, 1.0, &mut rng);
+        let layout = toy_layout(9);
+        let alg = FedP3 {
+            ldp: Some(crate::privacy::LdpConfig {
+                epsilon: 8.0,
+                delta: 1e-5,
+                clip: 1.0,
+                q: 0.5,
+                steps: 100,
+            }),
+            cohort: 6,
+            local_steps: 3,
+            lr: 0.2,
+            ..Default::default()
+        };
+        let mut first = None;
+        let mut last = 0.0f32;
+        alg.run(&q, &layout, &vec![2.0; 9], 50, 10, 2, |theta| {
+            let l = crate::oracle::Oracle::full_loss(&q, theta)?;
+            if first.is_none() {
+                first = Some(l);
+            }
+            last = l;
+            Ok(-l)
+        })
+        .unwrap();
+        assert!(last < first.unwrap(), "ldp run should still make progress");
+    }
+}

@@ -1,0 +1,360 @@
+//! Post-training pruning (Ch. 6): magnitude, Wanda, RIA, stochRIA,
+//! SymWanda, lp re-weighting — plus mask selection scopes and model-level
+//! application driven by the manifest layout.
+//!
+//! Scores are computed natively here (cross-tested against the L1 Pallas
+//! kernels via the `wanda_score_*` artifacts in integration tests); the
+//! [`dsnot`] module implements the training-free fine-tuning (R²-DSnoT)
+//! and [`fedp3`] the federated personalized pruning of Ch. 4.
+
+pub mod dsnot;
+pub mod fedp3;
+
+
+use crate::manifest::{CalibLayout, LayoutEntry};
+use crate::Rng;
+
+/// Pruning-score method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Magnitude,
+    /// Wanda: |W_ij| * a_in_j.
+    Wanda,
+    /// SymWanda: alpha * |W| a_in + (1 - alpha) * |W| a_out.
+    SymWanda { alpha: f32 },
+    /// RIA with activation exponent p and symmetric blend alpha.
+    Ria { alpha: f32, p: f32 },
+    /// stochRIA: RIA with row/col sums estimated on a `ratio` subsample.
+    StochRia { alpha: f32, p: f32, ratio: f32, seed: u64 },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Magnitude => "magnitude".into(),
+            Method::Wanda => "wanda".into(),
+            Method::SymWanda { alpha } => format!("symwanda(a={alpha})"),
+            Method::Ria { alpha, p } => format!("ria(a={alpha},p={p})"),
+            Method::StochRia { ratio, .. } => format!("stochria(r={ratio})"),
+        }
+    }
+}
+
+/// Mask-selection scope.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scope {
+    /// Keep the top (1 - sparsity) fraction per output row (Wanda's
+    /// comparison group).
+    PerRow,
+    /// Keep the top fraction over the whole matrix.
+    PerMatrix,
+    /// N:M semi-structured sparsity (keep n of every m consecutive input
+    /// weights per row) — the hardware-friendly pattern of Tab. 6.6
+    /// (2:4 / 4:8). Ignores the `sparsity` argument.
+    StructuredNm { n: usize, m: usize },
+}
+
+/// Compute the pruning score matrix for one linear layer.
+/// `w` is row-major [o, i]; `a_in` length i; `a_out` length o.
+pub fn score(method: Method, w: &[f32], o: usize, i: usize, a_in: &[f32], a_out: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len(), o * i);
+    match method {
+        Method::Magnitude => w.iter().map(|v| v.abs()).collect(),
+        Method::Wanda => score(Method::SymWanda { alpha: 1.0 }, w, o, i, a_in, a_out),
+        Method::SymWanda { alpha } => {
+            let mut s = vec![0.0f32; o * i];
+            for r in 0..o {
+                for c in 0..i {
+                    let aw = w[r * i + c].abs();
+                    s[r * i + c] = alpha * aw * a_in[c] + (1.0 - alpha) * aw * a_out[r];
+                }
+            }
+            s
+        }
+        Method::Ria { alpha, p } => ria_score(w, o, i, a_in, a_out, alpha, p, None),
+        Method::StochRia { alpha, p, ratio, seed } => {
+            ria_score(w, o, i, a_in, a_out, alpha, p, Some((ratio, seed)))
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ria_score(
+    w: &[f32],
+    o: usize,
+    i: usize,
+    a_in: &[f32],
+    a_out: &[f32],
+    alpha: f32,
+    p: f32,
+    stoch: Option<(f32, u64)>,
+) -> Vec<f32> {
+    // row / column |W| sums, optionally estimated from a subsample
+    let mut rows = vec![0.0f32; o];
+    let mut cols = vec![0.0f32; i];
+    match stoch {
+        None => {
+            for r in 0..o {
+                for c in 0..i {
+                    let aw = w[r * i + c].abs();
+                    rows[r] += aw;
+                    cols[c] += aw;
+                }
+            }
+        }
+        Some((ratio, seed)) => {
+            let mut rng = crate::rng(seed);
+            let keep = |rng: &mut Rng| rng.f32_unit() < ratio;
+            let scale = 1.0 / ratio.max(1e-6);
+            for r in 0..o {
+                for c in 0..i {
+                    if keep(&mut rng) {
+                        let aw = w[r * i + c].abs() * scale;
+                        rows[r] += aw;
+                        cols[c] += aw;
+                    }
+                }
+            }
+        }
+    }
+    let mut s = vec![0.0f32; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let aw = w[r * i + c].abs();
+            let ri = aw / cols[c].max(1e-12) + aw / rows[r].max(1e-12);
+            let act = alpha * a_in[c].powf(p) + (1.0 - alpha) * a_out[r].powf(p);
+            s[r * i + c] = ri * act;
+        }
+    }
+    s
+}
+
+/// Build a keep-mask (true = keep) at the given sparsity from scores.
+pub fn select_mask(scores: &[f32], o: usize, i: usize, sparsity: f32, scope: Scope) -> Vec<bool> {
+    assert_eq!(scores.len(), o * i);
+    let mut mask = vec![false; o * i];
+    match scope {
+        Scope::PerRow => {
+            let keep = (((1.0 - sparsity) * i as f32).round() as usize).min(i);
+            let mut idx: Vec<usize> = Vec::with_capacity(i);
+            for r in 0..o {
+                idx.clear();
+                idx.extend(0..i);
+                let row = &scores[r * i..(r + 1) * i];
+                if keep > 0 && keep < i {
+                    idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+                        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                }
+                let kept = if keep >= i { &idx[..] } else { &idx[..keep] };
+                for &c in kept {
+                    mask[r * i + c] = true;
+                }
+            }
+        }
+        Scope::StructuredNm { n, m } => {
+            assert!(n <= m && m >= 1);
+            for r in 0..o {
+                let row = &scores[r * i..(r + 1) * i];
+                for (ci, chunk) in row.chunks(m).enumerate() {
+                    let base = r * i + ci * m;
+                    let mut idx: Vec<usize> = (0..chunk.len()).collect();
+                    idx.sort_by(|&a, &b| {
+                        chunk[b].partial_cmp(&chunk[a]).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &c in idx.iter().take(n.min(chunk.len())) {
+                        mask[base + c] = true;
+                    }
+                }
+            }
+        }
+        Scope::PerMatrix => {
+            let total = o * i;
+            let keep = (((1.0 - sparsity) * total as f32).round() as usize).min(total);
+            let mut idx: Vec<usize> = (0..total).collect();
+            if keep > 0 && keep < total {
+                idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+                    scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+            }
+            for &j in &idx[..keep] {
+                mask[j] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// Apply a keep-mask to a weight slice in place; returns #zeroed.
+pub fn apply_mask(w: &mut [f32], mask: &[bool]) -> usize {
+    let mut zeroed = 0;
+    for (v, &keep) in w.iter_mut().zip(mask) {
+        if !keep && *v != 0.0 {
+            *v = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Calibration norms (a_in, a_out) for a named layer, sliced out of the
+/// flat calibration vector per the manifest's calib layout.
+pub fn calib_slices<'a>(
+    calib_layout: &CalibLayout,
+    calib: &'a [f32],
+    name: &str,
+) -> Option<(&'a [f32], &'a [f32])> {
+    let e = calib_layout.entries.iter().find(|e| e.name == name)?;
+    Some((
+        &calib[e.in_offset..e.in_offset + e.in_size],
+        &calib[e.out_offset..e.out_offset + e.out_size],
+    ))
+}
+
+/// Prune every linear layer of a flat-parameter model in place.
+/// Returns (zeroed, total prunable) counts.
+pub fn prune_model(
+    layout: &[LayoutEntry],
+    calib_layout: &CalibLayout,
+    theta: &mut [f32],
+    calib: &[f32],
+    method: Method,
+    sparsity: f32,
+    scope: Scope,
+) -> (usize, usize) {
+    let mut zeroed = 0;
+    let mut total = 0;
+    for e in layout.iter().filter(|e| e.is_prunable()) {
+        let Some((o, i)) = e.matrix_dims() else { continue };
+        let Some((a_in, a_out)) = calib_slices(calib_layout, calib, &e.name) else { continue };
+        let w = &mut theta[e.offset..e.offset + e.size];
+        let s = score(method, w, o, i, a_in, a_out);
+        let mask = select_mask(&s, o, i, sparsity, scope);
+        zeroed += apply_mask(w, &mask);
+        total += e.size;
+    }
+    (zeroed, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        // 2x3 weights; a_in favors column 2, a_out favors row 0
+        let w = vec![1.0, -2.0, 0.5, 3.0, 0.1, -0.2];
+        let a_in = vec![1.0, 1.0, 10.0];
+        let a_out = vec![5.0, 1.0];
+        (w, a_in, a_out)
+    }
+
+    #[test]
+    fn wanda_prefers_high_activation_columns() {
+        let (w, a_in, a_out) = toy();
+        let s = score(Method::Wanda, &w, 2, 3, &a_in, &a_out);
+        // row 0: |0.5|*10 = 5 > |1|*1, |−2|*1
+        assert!(s[2] > s[0] && s[2] > s[1]);
+    }
+
+    #[test]
+    fn symwanda_alpha_zero_uses_output_norms() {
+        let (w, a_in, a_out) = toy();
+        let s = score(Method::SymWanda { alpha: 0.0 }, &w, 2, 3, &a_in, &a_out);
+        assert_eq!(s[0], 1.0 * 5.0);
+        assert_eq!(s[3], 3.0 * 1.0);
+    }
+
+    #[test]
+    fn per_row_mask_keeps_exact_fraction() {
+        let (w, a_in, a_out) = toy();
+        let s = score(Method::Magnitude, &w, 2, 3, &a_in, &a_out);
+        let mask = select_mask(&s, 2, 3, 1.0 / 3.0, Scope::PerRow);
+        for r in 0..2 {
+            let kept = mask[r * 3..(r + 1) * 3].iter().filter(|&&k| k).count();
+            assert_eq!(kept, 2);
+        }
+        let _ = w;
+    }
+
+    #[test]
+    fn per_matrix_mask_keeps_global_top() {
+        let s = vec![1.0, 5.0, 3.0, 2.0, 4.0, 0.5];
+        let mask = select_mask(&s, 2, 3, 0.5, Scope::PerMatrix);
+        assert_eq!(mask.iter().filter(|&&k| k).count(), 3);
+        assert!(mask[1] && mask[4] && mask[2]);
+    }
+
+    #[test]
+    fn apply_mask_zeroes_and_counts() {
+        let mut w = vec![1.0, 2.0, 0.0, 3.0];
+        let n = apply_mask(&mut w, &[true, false, false, true]);
+        assert_eq!(n, 1); // the 0.0 entry doesn't count
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn structured_24_keeps_2_of_4() {
+        let scores: Vec<f32> = (0..16).map(|i| ((i * 7) % 16) as f32).collect();
+        let mask = select_mask(&scores, 2, 8, 0.5, Scope::StructuredNm { n: 2, m: 4 });
+        for r in 0..2 {
+            for c4 in 0..2 {
+                let kept = (0..4).filter(|&j| mask[r * 8 + c4 * 4 + j]).count();
+                assert_eq!(kept, 2, "row {r} block {c4}");
+            }
+        }
+    }
+
+    #[test]
+    fn structured_handles_ragged_rows() {
+        let scores = vec![1.0f32; 10]; // i=5 not divisible by 4
+        let mask = select_mask(&scores, 2, 5, 0.5, Scope::StructuredNm { n: 2, m: 4 });
+        // ragged final chunk of 1 keeps min(n, len)=1
+        for r in 0..2 {
+            let kept = (0..5).filter(|&j| mask[r * 5 + j]).count();
+            assert_eq!(kept, 3);
+        }
+    }
+
+    #[test]
+    fn ria_rewards_relative_importance() {
+        // a row with small total mass should boost its surviving entry
+        let w = vec![10.0, 10.0, 0.0, 0.1, 0.0, 0.0];
+        let a_in = vec![1.0; 3];
+        let a_out = vec![1.0; 2];
+        let s = score(Method::Ria { alpha: 1.0, p: 0.0 }, &w, 2, 3, &a_in, &a_out);
+        // w[3] = 0.1 is 100% of its row's mass: its *per-magnitude* score
+        // (RI / |w|) must dwarf that of an element in a heavy row.
+        assert!(s[3] / 0.1 > 10.0 * (s[0] / 10.0), "relative importance: {s:?}");
+        // and magnitude scoring would order them the other way around
+        let sm = score(Method::Magnitude, &w, 2, 3, &a_in, &a_out);
+        assert!(sm[3] < sm[0]);
+    }
+
+    #[test]
+    fn stoch_ria_approximates_ria() {
+        let mut rng = crate::rng(36);
+                let (o, i) = (20, 30);
+        let w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.1, 2.0)).collect();
+        let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.1, 2.0)).collect();
+        let exact = score(Method::Ria { alpha: 0.5, p: 0.5 }, &w, o, i, &a_in, &a_out);
+        let stoch = score(
+            Method::StochRia { alpha: 0.5, p: 0.5, ratio: 0.8, seed: 7 },
+            &w,
+            o,
+            i,
+            &a_in,
+            &a_out,
+        );
+        // rank correlation proxy: top-10% overlap
+        let top = |s: &[f32]| {
+            let mut idx: Vec<usize> = (0..s.len()).collect();
+            idx.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+            idx[..s.len() / 10].to_vec()
+        };
+        let te = top(&exact);
+        let ts = top(&stoch);
+        let overlap = te.iter().filter(|x| ts.contains(x)).count() as f32 / te.len() as f32;
+        assert!(overlap > 0.6, "overlap {overlap}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Chapter 4 (FedP3) reproductions: MLP substitution profiles for the
+//! paper's CIFAR10/100, EMNIST-L and FashionMNIST workloads
+//! (DESIGN.md §Substitutions), class-wise ("S1") and Dirichlet ("S2")
+//! non-iid splits.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::partition::Split;
+use crate::metrics::Table;
+use crate::oracle::hlo::HloMlp;
+use crate::pruning::fedp3::{Aggregation, FedP3, LayerAssignment, LocalPruning};
+use crate::runtime::Runtime;
+
+fn runtime() -> Result<Rc<Runtime>> {
+    super::util::try_runtime().ok_or_else(|| anyhow::anyhow!("chapter-4 repros need `make artifacts`"))
+}
+
+fn oracle_for(
+    rt: &Rc<Runtime>,
+    profile: &str,
+    split: Split,
+    n_clients: usize,
+    seed: u64,
+) -> Result<HloMlp> {
+    let prof = rt.manifest().mlp_profiles[profile].clone();
+    let classes = *prof.sizes.last().unwrap();
+    let mut rng = crate::rng(seed);
+    let data = crate::data::synth::fed_class_dataset(
+        prof.sizes[0],
+        classes,
+        n_clients,
+        96,
+        512,
+        split,
+        0.3,
+        &mut rng,
+    );
+    HloMlp::new(rt.clone(), profile, data, 1e-4)
+}
+
+fn train(
+    rt: &Rc<Runtime>,
+    profile: &str,
+    split: Split,
+    alg: &FedP3,
+    rounds: usize,
+    n_clients: usize,
+    seed: u64,
+) -> Result<(f32, f64)> {
+    let oracle = oracle_for(rt, profile, split, n_clients, seed)?;
+    let layout = rt.manifest().layout(&format!("mlp_{profile}"))?.clone();
+    let mut rng = crate::rng(seed + 1);
+    let theta0 = crate::manifest::init_flat(&layout, &mut rng);
+    let out = alg.run(&oracle, &layout, &theta0, rounds, rounds.max(1), seed, |theta| {
+        oracle.test_accuracy(theta)
+    })?;
+    let acc = out.record.last().unwrap().eval.unwrap();
+    Ok((acc, out.upload_fraction))
+}
+
+const S1: Split = Split::ClassWise { classes_per_client: 3 };
+const S2: Split = Split::Dirichlet { alpha: 0.3 };
+
+/// Fig 4.2: layer-overlap strategies (LowerB / OPU2 / OPU3 / FedAvg)
+/// across datasets and splits; accuracy + upload fraction.
+pub fn fig4_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let rt = runtime()?;
+    let datasets: &[&str] =
+        if fast { &["emnistl"] } else { &["cifar10", "cifar100", "emnistl", "fashion"] };
+    let rounds = if fast { 50 } else { 150 };
+    let n_clients = if fast { 12 } else { 40 };
+
+    let mut table = Table::new(
+        "Fig 4.2: layer-overlap strategies (accuracy / upload fraction)",
+        &["dataset", "split", "strategy", "test acc", "upload frac"],
+    );
+    for ds in datasets {
+        for (sname, split) in [("S1", S1), ("S2", S2)] {
+            for (name, assignment) in [
+                ("FedAvg", LayerAssignment::All),
+                ("OPU3", LayerAssignment::Opu(3)),
+                ("OPU2", LayerAssignment::Opu(2)),
+                ("LowerB", LayerAssignment::LowerB),
+            ] {
+                let alg = FedP3 {
+                    assignment,
+                    global_ratio: 1.0,
+                    cohort: if fast { 6 } else { 10 },
+                    local_steps: 2,
+                    lr: 0.3,
+                    ..Default::default()
+                };
+                let (acc, frac) = train(&rt, ds, split, &alg, rounds, n_clients, 50)?;
+                table.row(vec![
+                    ds.to_string(),
+                    sname.into(),
+                    name.into(),
+                    format!("{acc:.4}"),
+                    format!("{frac:.3}"),
+                ]);
+            }
+        }
+    }
+    table.write_csv(outdir, "fig4_2")?;
+    Ok(vec![table])
+}
+
+/// Tab 4.1: deep-network block ablation (the ResNet18 substitution: the
+/// 5-layer cifar MLP profile, dropping middle layer-groups from training).
+pub fn tab4_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let rt = runtime()?;
+    let rounds = if fast { 50 } else { 150 };
+    let n_clients = if fast { 12 } else { 40 };
+    let datasets: &[&str] = if fast { &["cifar10"] } else { &["cifar10", "cifar100"] };
+
+    let mut table = Table::new(
+        "Tab 4.1: block ablation under class-wise non-iid (global ratio 0.9)",
+        &["variant", "dataset", "test acc"],
+    );
+    // Variants map the paper's -B2/-B3 to middle layer-groups trained by
+    // nobody (globally pruned only): Full, -B1-B2(full), -B1(part), -B2(part).
+    for ds in datasets {
+        for (name, assignment, ratio) in [
+            ("Full", LayerAssignment::All, 0.9f32),
+            ("-B2-B3 (full)", LayerAssignment::LowerB, 0.9),
+            ("-B2 (part)", LayerAssignment::Opu(3), 0.9),
+            ("-B3 (part)", LayerAssignment::Opu(4), 0.9),
+        ] {
+            let alg = FedP3 {
+                assignment,
+                global_ratio: ratio,
+                cohort: if fast { 6 } else { 10 },
+                local_steps: 2,
+                lr: 0.3,
+                ..Default::default()
+            };
+            let (acc, _) = train(&rt, ds, S1, &alg, rounds, n_clients, 51)?;
+            table.row(vec![name.into(), ds.to_string(), format!("{acc:.4}")]);
+        }
+    }
+    table.write_csv(outdir, "tab4_1")?;
+    Ok(vec![table])
+}
+
+/// Tab 4.2: local pruning strategies (Fixed / Uniform / OrderedDropout).
+pub fn tab4_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let rt = runtime()?;
+    let rounds = if fast { 50 } else { 150 };
+    let n_clients = if fast { 12 } else { 40 };
+    let datasets: &[&str] =
+        if fast { &["emnistl"] } else { &["cifar10", "cifar100", "emnistl", "fashion"] };
+
+    let mut table = Table::new(
+        "Tab 4.2: local pruning strategies (global ratio 0.9); acc S1 / S2",
+        &["strategy", "dataset", "acc S1", "acc S2"],
+    );
+    for ds in datasets {
+        for (name, lp) in [
+            ("Fixed", LocalPruning::Fixed),
+            ("Uniform (q=0.9)", LocalPruning::Uniform { q: 0.9 }),
+            ("OrderedDropout (q=0.9)", LocalPruning::OrderedDropout { q: 0.9 }),
+            ("Uniform (q=0.7)", LocalPruning::Uniform { q: 0.7 }),
+            ("OrderedDropout (q=0.7)", LocalPruning::OrderedDropout { q: 0.7 }),
+        ] {
+            let alg = FedP3 {
+                local_pruning: lp,
+                global_ratio: 0.9,
+                cohort: if fast { 6 } else { 10 },
+                local_steps: 2,
+                lr: 0.3,
+                ..Default::default()
+            };
+            let (acc1, _) = train(&rt, ds, S1, &alg, rounds, n_clients, 52)?;
+            let (acc2, _) = train(&rt, ds, S2, &alg, rounds, n_clients, 53)?;
+            table.row(vec![
+                name.into(),
+                ds.to_string(),
+                format!("{acc1:.4}"),
+                format!("{acc2:.4}"),
+            ]);
+        }
+    }
+    table.write_csv(outdir, "tab4_2")?;
+    Ok(vec![table])
+}
+
+/// Fig 4.4: server->client global pruning ratio sweep + size/accuracy
+/// trade-off.
+pub fn fig4_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let rt = runtime()?;
+    let rounds = if fast { 50 } else { 150 };
+    let n_clients = if fast { 12 } else { 40 };
+    let datasets: &[&str] = if fast { &["emnistl"] } else { &["cifar10", "emnistl", "fashion"] };
+
+    let mut table = Table::new(
+        "Fig 4.4: global pruning ratio sweep (accuracy; local size = ratio)",
+        &["dataset", "split", "ratio", "test acc"],
+    );
+    for ds in datasets {
+        for (sname, split) in [("S1", S1), ("S2", S2)] {
+            for &ratio in &[1.0f32, 0.9, 0.7, 0.5] {
+                // Opu(2): some layers are received *pruned* every round, so
+                // the ratio actually bites (with All, no layer is pruned)
+                let alg = FedP3 {
+                    assignment: LayerAssignment::Opu(2),
+                    global_ratio: ratio,
+                    cohort: if fast { 6 } else { 10 },
+                    local_steps: 2,
+                    lr: 0.3,
+                    ..Default::default()
+                };
+                let (acc, _) = train(&rt, ds, split, &alg, rounds, n_clients, 54)?;
+                table.row(vec![
+                    ds.to_string(),
+                    sname.into(),
+                    format!("{ratio}"),
+                    format!("{acc:.4}"),
+                ]);
+            }
+        }
+    }
+    table.write_csv(outdir, "fig4_4")?;
+    Ok(vec![table])
+}
+
+/// Fig 4.5: aggregation strategies (simple vs weighted) x OPU sets.
+pub fn fig4_5(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let rt = runtime()?;
+    let rounds = if fast { 50 } else { 150 };
+    let n_clients = if fast { 12 } else { 40 };
+    let datasets: &[&str] = if fast { &["cifar10"] } else { &["cifar10", "cifar100"] };
+
+    let mut table = Table::new(
+        "Fig 4.5: aggregation strategies (p=0.9)",
+        &["dataset", "split", "config", "test acc"],
+    );
+    for ds in datasets {
+        for (sname, split) in [("S1", S1), ("S2", S2)] {
+            for (cname, assignment, aggregation) in [
+                ("S123 (OPU1-2-3, simple)", LayerAssignment::Opu(2), Aggregation::Simple),
+                ("W123 (OPU1-2-3, weighted)", LayerAssignment::Opu(2), Aggregation::Weighted),
+                ("S23 (OPU2-3, simple)", LayerAssignment::Opu(3), Aggregation::Simple),
+                ("W23 (OPU2-3, weighted)", LayerAssignment::Opu(3), Aggregation::Weighted),
+            ] {
+                let alg = FedP3 {
+                    assignment,
+                    aggregation,
+                    global_ratio: 0.9,
+                    cohort: if fast { 6 } else { 10 },
+                    local_steps: 2,
+                    lr: 0.3,
+                    ..Default::default()
+                };
+                let (acc, _) = train(&rt, ds, split, &alg, rounds, n_clients, 55)?;
+                table.row(vec![ds.to_string(), sname.into(), cname.into(), format!("{acc:.4}")]);
+            }
+        }
+    }
+    table.write_csv(outdir, "fig4_5")?;
+    Ok(vec![table])
+}

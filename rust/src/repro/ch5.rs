@@ -1,0 +1,377 @@
+//! Chapter 5 (SPPM-AS / Cohort Squeeze) reproductions.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::util::{fmt_cost, try_runtime};
+use crate::algorithms::fedavg::FedAvg;
+use crate::algorithms::sppm::SppmAs;
+use crate::algorithms::RunOptions;
+use crate::coordinator::hierarchy::Hierarchy;
+use crate::data::synth::Heterogeneity;
+use crate::plot;
+use crate::metrics::{write_runs, Table};
+use crate::oracle::{solve_reference, Oracle};
+use crate::prox::{CgSolver, LbfgsSolver, LocalGdSolver, ProxSolver};
+use crate::sampling::{BlockSampling, CohortSampler, NiceSampling, StratifiedSampling};
+
+struct Setup {
+    oracle: Box<dyn Oracle>,
+    x_star: Vec<f32>,
+    x0: Vec<f32>,
+    /// k-means strata over client feature means (Sect. 5.4.1).
+    blocks: Vec<Vec<usize>>,
+}
+
+fn setup(profile: &str, n: usize, seed: u64) -> Result<Setup> {
+    setup_b(profile, n, 5, seed)
+}
+
+fn setup_b(profile: &str, n: usize, b: usize, seed: u64) -> Result<Setup> {
+    let rt = try_runtime();
+    let (d_prof, m) = crate::data::synth::logreg_profile(profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {profile}"))?;
+    let mut rng = crate::rng(seed);
+    // clusterable heterogeneity: b latent client groups (the structure the
+    // paper's k-means clustering recovers before stratified sampling)
+    let data = crate::data::synth::logreg_dataset(
+        d_prof,
+        m,
+        n,
+        Heterogeneity::ClusteredShift { groups: b, scale: 1.0 },
+        0.3,
+        &mut rng,
+    );
+    let embed = crate::sampling::kmeans::shard_means(&data.clients);
+    let blocks = crate::sampling::kmeans::kmeans(&embed, b, 15, &mut rng);
+    let oracle = super::util::build_logreg(rt.as_ref(), profile, data, 0.1)?;
+    let d = oracle.dim();
+    let (x_star, _) = solve_reference(oracle.as_ref(), &vec![0.0; d], 0.5, 6000, 1e-9)?;
+    Ok(Setup { oracle, x_star, x0: vec![1.0f32; d], blocks })
+}
+
+/// Total cost TK for SPPM to reach ||x - x*||^2 <= eps, for a given gamma
+/// and K (flat cost model). None if not reached.
+fn sppm_cost_to_eps(
+    s: &Setup,
+    sampler: &dyn CohortSampler,
+    solver: &dyn ProxSolver,
+    gamma: f32,
+    k: usize,
+    eps: f32,
+    max_globals: usize,
+    hier: Option<&Hierarchy>,
+) -> Result<Option<f64>> {
+    let mut alg = SppmAs::new(sampler, solver, gamma, k);
+    if let Some(h) = hier {
+        alg.c1 = h.c1;
+        alg.c2 = h.c2;
+    }
+    let opts = RunOptions {
+        rounds: max_globals,
+        eval_every: 1,
+        x_star: Some(s.x_star.clone()),
+        seed: 3,
+        ..Default::default()
+    };
+    let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+    Ok(rec.cost_to_gap(eps))
+}
+
+/// Fig 5.1 (+ Tab 5.1): total communication cost TK vs local rounds K for
+/// several learning rates, vs the FedAvg/LocalGD baseline.
+pub fn fig5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let profiles: &[&str] = if fast { &["a6a"] } else { &["a6a", "mushrooms"] };
+    let gammas: &[f32] = &[0.1, 1.0, 100.0, 1000.0];
+    let ks: &[usize] = if fast { &[1, 2, 4, 8, 16] } else { &[1, 2, 3, 4, 6, 8, 10, 12, 16] };
+    let eps = 5e-3f32;
+    let max_globals = if fast { 120 } else { 400 };
+    let n = 20;
+
+    let mut table = Table::new(
+        "Fig 5.1: total comm cost TK to reach eps (SPPM-SS vs LocalGD)",
+        &["dataset", "gamma", "best K", "best TK", "LocalGD cost"],
+    );
+    for profile in profiles {
+        let s = setup(profile, n, 60)?;
+        let sampler = StratifiedSampling::new(s.blocks.clone());
+        let solver = LbfgsSolver::default();
+
+        // LocalGD baseline: each global round costs 1; tune local steps
+        let mut best_lgd: Option<f64> = None;
+        for &steps in &[1usize, 2, 4, 8] {
+            let fa_sampler = NiceSampling { n, tau: 5 };
+            let alg = FedAvg::new(&fa_sampler, steps, 0.5 / s.oracle.smoothness(0));
+            let opts = RunOptions {
+                rounds: max_globals * 4,
+                eval_every: 1,
+                x_star: Some(s.x_star.clone()),
+                seed: 3,
+                ..Default::default()
+            };
+            let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+            if let Some(c) = rec.cost_to_gap(eps) {
+                best_lgd = Some(best_lgd.map_or(c, |b: f64| b.min(c)));
+            }
+        }
+
+        for &gamma in gammas {
+            let mut best: Option<(usize, f64)> = None;
+            for &k in ks {
+                if let Some(cost) =
+                    sppm_cost_to_eps(&s, &sampler, &solver, gamma, k, eps, max_globals, None)?
+                {
+                    if best.map_or(true, |(_, b)| cost < b) {
+                        best = Some((k, cost));
+                    }
+                }
+            }
+            table.row(vec![
+                profile.to_string(),
+                format!("{gamma}"),
+                best.map_or("-".into(), |(k, _)| k.to_string()),
+                fmt_cost(best.map(|(_, c)| c)),
+                fmt_cost(best_lgd),
+            ]);
+        }
+    }
+    table.write_csv(outdir, "fig5_1")?;
+    Ok(vec![table])
+}
+
+/// Fig 5.2: cost vs K across prox solvers (BFGS vs CG) and eps values,
+/// plus the hierarchical variant (c1=0.1, c2=1).
+pub fn fig5_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let n = 20;
+    let s = setup("a6a", n, 61)?;
+    let sampler = StratifiedSampling::new(s.blocks.clone());
+    let ks: &[usize] = if fast { &[1, 2, 4, 8, 16] } else { &[1, 2, 3, 4, 6, 8, 10, 12, 16] };
+    let max_globals = if fast { 120 } else { 400 };
+    let gamma = 100.0f32;
+
+    let mut table = Table::new(
+        "Fig 5.2: best (K, TK) across solvers / eps / topology (gamma=100)",
+        &["variant", "best K", "best cost"],
+    );
+    let bfgs = LbfgsSolver::default();
+    let cg = CgSolver;
+    let hier = Hierarchy::even(n, 4, 0.1, 1.0);
+    let cases: Vec<(&str, &dyn ProxSolver, f32, Option<&Hierarchy>)> = vec![
+        ("BFGS eps=5e-3 flat", &bfgs, 5e-3, None),
+        ("CG eps=5e-3 flat", &cg, 5e-3, None),
+        ("BFGS eps=1e-2 flat", &bfgs, 1e-2, None),
+        ("BFGS eps=5e-3 hier(c1=0.1,c2=1)", &bfgs, 5e-3, Some(&hier)),
+    ];
+    for (name, solver, eps, h) in cases {
+        let mut best: Option<(usize, f64)> = None;
+        for &k in ks {
+            if let Some(cost) = sppm_cost_to_eps(&s, &sampler, solver, gamma, k, eps, max_globals, h)? {
+                if best.map_or(true, |(_, b)| cost < b) {
+                    best = Some((k, cost));
+                }
+            }
+        }
+        table.row(vec![
+            name.into(),
+            best.map_or("-".into(), |(k, _)| k.to_string()),
+            fmt_cost(best.map(|(_, c)| c)),
+        ]);
+    }
+    table.write_csv(outdir, "fig5_2")?;
+    Ok(vec![table])
+}
+
+/// Fig 5.3: sampling strategy comparison (SS vs BS vs NICE).
+pub fn fig5_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let n = 20;
+    let s = setup("mushrooms", n, 62)?;
+    let rounds = if fast { 40 } else { 150 };
+    let solver = LbfgsSolver::default();
+    let gamma = 10.0;
+    let k = 8;
+
+    let ss = StratifiedSampling::new(s.blocks.clone());
+    let bs = BlockSampling::new(s.blocks.clone(), None);
+    let nice = NiceSampling { n, tau: 5 };
+
+    let mut table = Table::new(
+        "Fig 5.3: sampling comparison (final ||x - x*||^2)",
+        &["sampler", "final dist^2"],
+    );
+    let mut runs = Vec::new();
+    let samplers: Vec<&dyn CohortSampler> = vec![&ss, &bs, &nice];
+    for sampler in samplers {
+        let alg = SppmAs::new(sampler, &solver, gamma, k);
+        let opts = RunOptions {
+            rounds,
+            eval_every: (rounds / 20).max(1),
+            x_star: Some(s.x_star.clone()),
+            seed: 4,
+            ..Default::default()
+        };
+        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        rec.label = format!("fig5_3-{}", sampler.name());
+        table.row(vec![
+            sampler.name(),
+            format!("{:.3e}", rec.last().unwrap().gap.unwrap()),
+        ]);
+        runs.push(rec);
+    }
+    write_runs(outdir.join("fig5_3"), &runs)?;
+    plot::write_svg(
+        outdir.join("fig5_3/fig5_3.svg"),
+        &runs,
+        &plot::PlotSpec { title: "Fig 5.3: sampling comparison", x: plot::XAxis::CommCost, ..Default::default() },
+    )?;
+    table.write_csv(outdir, "fig5_3")?;
+    Ok(vec![table])
+}
+
+/// Fig 5.4: convergence vs MB-GD / MB-LocalGD baselines (gamma = 1.0).
+pub fn fig5_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let n = 20;
+    let s = setup_b("a9a", n, 10, 63)?;
+    let rounds = if fast { 50 } else { 200 };
+    let solver = LbfgsSolver::default();
+
+    let ss = StratifiedSampling::new(s.blocks.clone());
+    let nice = NiceSampling { n, tau: 10 };
+
+    let mut table = Table::new(
+        "Fig 5.4: SPPM-SS vs minibatch baselines (final ||x-x*||^2, cohort 10)",
+        &["method", "final dist^2"],
+    );
+    let mut runs = Vec::new();
+    {
+        let alg = SppmAs::new(&ss, &solver, 1.0, 8);
+        let opts = RunOptions {
+            rounds,
+            eval_every: (rounds / 20).max(1),
+            x_star: Some(s.x_star.clone()),
+            seed: 5,
+            ..Default::default()
+        };
+        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        rec.label = "fig5_4-SPPM-SS".into();
+        table.row(vec!["SPPM-SS".into(), format!("{:.3e}", rec.last().unwrap().gap.unwrap())]);
+        runs.push(rec);
+    }
+    let lr = 0.5 / s.oracle.smoothness(0);
+    for (name, steps) in [("MB-GD", 1usize), ("MB-LocalGD (5 steps)", 5)] {
+        let alg = FedAvg::new(&nice, steps, lr);
+        let opts = RunOptions {
+            rounds,
+            eval_every: (rounds / 20).max(1),
+            x_star: Some(s.x_star.clone()),
+            seed: 5,
+            ..Default::default()
+        };
+        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        rec.label = format!("fig5_4-{name}");
+        table.row(vec![name.into(), format!("{:.3e}", rec.last().unwrap().gap.unwrap())]);
+        runs.push(rec);
+    }
+    write_runs(outdir.join("fig5_4"), &runs)?;
+    plot::write_svg(
+        outdir.join("fig5_4/fig5_4.svg"),
+        &runs,
+        &plot::PlotSpec { title: "Fig 5.4: SPPM-SS vs minibatch baselines", ..Default::default() },
+    )?;
+    table.write_csv(outdir, "fig5_4")?;
+    Ok(vec![table])
+}
+
+/// Fig 5.6/5.7: hierarchical FL (c1 = 0.05, c2 = 1) — communication cost
+/// to target accuracy, SPPM-AS vs LocalGD.
+pub fn fig5_6(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let n = 20;
+    let s = setup("ijcnn1", n, 64)?;
+    let eps = 5e-2f32;
+    let max_globals = if fast { 120 } else { 400 };
+    let hier = Hierarchy::even(n, 4, 0.05, 1.0);
+    let sampler = StratifiedSampling::new(s.blocks.clone());
+    let solver = LbfgsSolver::default();
+
+    let mut table = Table::new(
+        "Fig 5.6: hierarchical FL cost to eps (c1=0.05, c2=1)",
+        &["method", "best K", "cost", "reduction vs LocalGD"],
+    );
+    // LocalGD baseline: cost (c1+c2) per global round
+    let mut lgd_cost: Option<f64> = None;
+    for &steps in &[1usize, 2, 4, 8] {
+        let fa_sampler = NiceSampling { n, tau: 5 };
+        let mut alg = FedAvg::new(&fa_sampler, steps, 0.5 / s.oracle.smoothness(0));
+        alg.cost_per_round = hier.localgd_round_cost();
+        let opts = RunOptions {
+            rounds: max_globals * 4,
+            eval_every: 1,
+            x_star: Some(s.x_star.clone()),
+            seed: 6,
+            ..Default::default()
+        };
+        let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        if let Some(c) = rec.cost_to_gap(eps) {
+            lgd_cost = Some(lgd_cost.map_or(c, |b: f64| b.min(c)));
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for &k in &[1usize, 2, 4, 8, 12, 16] {
+        if let Some(cost) =
+            sppm_cost_to_eps(&s, &sampler, &solver, 100.0, k, eps, max_globals, Some(&hier))?
+        {
+            if best.map_or(true, |(_, b)| cost < b) {
+                best = Some((k, cost));
+            }
+        }
+    }
+    let reduction = match (best, lgd_cost) {
+        (Some((_, c)), Some(l)) if l > 0.0 => format!("{:.1}%", 100.0 * (1.0 - c / l)),
+        _ => "-".into(),
+    };
+    table.row(vec![
+        "SPPM-SS".into(),
+        best.map_or("-".into(), |(k, _)| k.to_string()),
+        fmt_cost(best.map(|(_, c)| c)),
+        reduction,
+    ]);
+    table.row(vec!["LocalGD".into(), "-".into(), fmt_cost(lgd_cost), "0%".into()]);
+    table.write_csv(outdir, "fig5_6")?;
+    Ok(vec![table])
+}
+
+/// Tab 5.1: the KT(eps, S, gamma, A(K)) control summary, assembled from a
+/// gamma x K sweep.
+pub fn tab5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let n = 20;
+    let s = setup("a6a", n, 65)?;
+    let sampler = StratifiedSampling::new(s.blocks.clone());
+    let eps = 5e-3f32;
+    let max_globals = if fast { 100 } else { 300 };
+    let ks: &[usize] = if fast { &[1, 4, 16] } else { &[1, 2, 4, 8, 16] };
+
+    let mut table = Table::new(
+        "Tab 5.1: KT summary — gamma x K x solver",
+        &["gamma", "K", "solver", "TK to eps"],
+    );
+    let bfgs = LbfgsSolver::default();
+    let cg = CgSolver;
+    let gd = LocalGdSolver;
+    let solvers: Vec<&dyn ProxSolver> = vec![&bfgs, &cg, &gd];
+    for &gamma in &[1.0f32, 100.0] {
+        for &k in ks {
+            for solver in &solvers {
+                let cost =
+                    sppm_cost_to_eps(&s, &sampler, *solver, gamma, k, eps, max_globals, None)?;
+                table.row(vec![
+                    format!("{gamma}"),
+                    format!("{k}"),
+                    solver.name().into(),
+                    fmt_cost(cost),
+                ]);
+            }
+        }
+    }
+    table.write_csv(outdir, "tab5_1")?;
+    Ok(vec![table])
+}

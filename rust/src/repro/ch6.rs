@@ -1,0 +1,350 @@
+//! Chapter 6 (SymWanda) reproductions: post-training pruning of the
+//! in-framework transformer LM (the LLaMA/Wikitext-2 substitution,
+//! DESIGN.md §Substitutions). Perplexity on the held-out split.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::manifest::{CalibLayout, LayoutEntry};
+use crate::metrics::Table;
+use crate::oracle::hlo::HloLm;
+use crate::oracle::Oracle;
+use crate::pruning::dsnot::{finetune_model, DsnotConfig};
+use crate::pruning::{prune_model, Method, Scope};
+use crate::runtime::Runtime;
+
+pub struct LmSetup {
+    pub rt: Rc<Runtime>,
+    pub oracle: HloLm,
+    pub theta: Vec<f32>,
+    pub layout: Vec<LayoutEntry>,
+    pub calib_layout: CalibLayout,
+    pub calib: Vec<f32>,
+    pub cfg_name: String,
+}
+
+fn cache_path(cfg: &str, steps: usize) -> PathBuf {
+    PathBuf::from("results/cache").join(format!("{cfg}_{steps}.f32"))
+}
+
+fn save_theta(path: &Path, theta: &[f32]) -> Result<()> {
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let bytes: Vec<u8> = theta.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn load_theta(path: &Path, expect: usize) -> Option<Vec<f32>> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() != expect * 4 {
+        return None;
+    }
+    Some(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Pretrain (or load from cache) the LM used by all chapter-6 tables:
+/// federated FedAvg over the synthetic corpus, a few hundred steps.
+pub fn pretrained_lm(fast: bool) -> Result<LmSetup> {
+    let rt = super::util::try_runtime()
+        .ok_or_else(|| anyhow::anyhow!("chapter-6 repros need `make artifacts`"))?;
+    let cfg_name = if fast { "lm_tiny" } else { "lm_small" };
+    let prof = rt.manifest().lm_configs[cfg_name].clone();
+    let steps = if fast { 60 } else { 300 };
+
+    let mut rng = crate::rng(70);
+    let n_clients = 8;
+    let data = crate::data::corpus::fed_token_dataset(
+        n_clients,
+        if fast { 8 } else { 24 },
+        32,
+        prof.seq_len,
+        &mut rng,
+    );
+    let oracle = HloLm::new(rt.clone(), cfg_name, data)?;
+    let layout = rt.manifest().layout(cfg_name)?.clone();
+    let calib_layout = rt.manifest().calib_layouts[cfg_name].clone();
+
+    let cpath = cache_path(cfg_name, steps);
+    let theta = match load_theta(&cpath, prof.n_params) {
+        Some(t) => t,
+        None => {
+            eprintln!("[ch6] pretraining {cfg_name} for {steps} federated steps...");
+            let mut theta = crate::manifest::init_flat(&layout, &mut rng);
+            let mut g = vec![0.0f32; theta.len()];
+            let mut m1 = vec![0.0f32; theta.len()];
+            let mut m2 = vec![0.0f32; theta.len()];
+            let (b1, b2, lr, eps) = (0.9f32, 0.999f32, 3e-3f32, 1e-8f32);
+            // server-side Adam on averaged client gradients (FedAdam)
+            let mut agg = vec![0.0f32; theta.len()];
+            for t in 0..steps {
+                agg.fill(0.0);
+                let cohort = 4.min(n_clients);
+                for c in 0..cohort {
+                    let i = (t * cohort + c) % n_clients;
+                    oracle.loss_grad_stoch(i, &theta, &mut g, &mut rng)?;
+                    crate::vecmath::acc_mean(&g, cohort as f32, &mut agg);
+                }
+                let bc1 = 1.0 - b1.powi(t as i32 + 1);
+                let bc2 = 1.0 - b2.powi(t as i32 + 1);
+                for j in 0..theta.len() {
+                    m1[j] = b1 * m1[j] + (1.0 - b1) * agg[j];
+                    m2[j] = b2 * m2[j] + (1.0 - b2) * agg[j] * agg[j];
+                    theta[j] -= lr * (m1[j] / bc1) / ((m2[j] / bc2).sqrt() + eps);
+                }
+            }
+            save_theta(&cpath, &theta)?;
+            theta
+        }
+    };
+
+    let calib = oracle.calibrate(&theta, 2)?;
+    Ok(LmSetup {
+        rt,
+        oracle,
+        theta,
+        layout,
+        calib_layout,
+        calib,
+        cfg_name: cfg_name.into(),
+    })
+}
+
+fn ppl_for(setup: &LmSetup, method: Method, sparsity: f32) -> Result<f32> {
+    let mut theta = setup.theta.clone();
+    prune_model(
+        &setup.layout,
+        &setup.calib_layout,
+        &mut theta,
+        &setup.calib,
+        method,
+        sparsity,
+        Scope::PerRow,
+    );
+    setup.oracle.eval_perplexity(&theta)
+}
+
+/// Tab 6.2: perplexity comparison of pruning methods at 50% sparsity.
+pub fn tab6_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+    let dense = setup.oracle.eval_perplexity(&setup.theta)?;
+    let mut table = Table::new(
+        format!("Tab 6.2: perplexity at 50% sparsity ({}, dense={dense:.3})", setup.cfg_name),
+        &["method", "perplexity"],
+    );
+    table.row(vec!["dense".into(), format!("{dense:.3}")]);
+    for (name, m) in [
+        ("magnitude", Method::Magnitude),
+        ("wanda", Method::Wanda),
+        ("RIA (a=1,p=0.5)", Method::Ria { alpha: 1.0, p: 0.5 }),
+        ("symwanda (a=0.5)", Method::SymWanda { alpha: 0.5 }),
+        ("symwanda (a=0)", Method::SymWanda { alpha: 0.0 }),
+        ("sym-RIA (a=0.5,p=0.5)", Method::Ria { alpha: 0.5, p: 0.5 }),
+    ] {
+        let ppl = ppl_for(&setup, m, 0.5)?;
+        table.row(vec![name.into(), format!("{ppl:.3}")]);
+    }
+    table.write_csv(outdir, "tab6_2")?;
+    Ok(vec![table])
+}
+
+/// Tab 6.3: from RI to RIA — activation exponents and row/col sensitivity.
+pub fn tab6_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+    let mut table = Table::new(
+        "Tab 6.3: RI -> RIA variants at 50% sparsity",
+        &["variant", "perplexity"],
+    );
+    for (name, m) in [
+        ("RI only (p=0)", Method::Ria { alpha: 1.0, p: 0.0 }),
+        ("RIA p=0.25", Method::Ria { alpha: 1.0, p: 0.25 }),
+        ("RIA p=0.5", Method::Ria { alpha: 1.0, p: 0.5 }),
+        ("RIA p=1.0", Method::Ria { alpha: 1.0, p: 1.0 }),
+        ("sym-RIA p=0.5 a=0.5", Method::Ria { alpha: 0.5, p: 0.5 }),
+    ] {
+        let ppl = ppl_for(&setup, m, 0.5)?;
+        table.row(vec![name.into(), format!("{ppl:.3}")]);
+    }
+    table.write_csv(outdir, "tab6_3")?;
+    Ok(vec![table])
+}
+
+/// Tab 6.4: sparsity sweep (alpha = 1.0).
+pub fn tab6_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+    let sparsities: &[f32] =
+        if fast { &[0.25, 0.5, 0.7] } else { &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8] };
+    let mut table = Table::new(
+        "Tab 6.4: perplexity vs sparsity (alpha=1.0)",
+        &["sparsity", "wanda", "RIA", "magnitude"],
+    );
+    for &s in sparsities {
+        let w = ppl_for(&setup, Method::Wanda, s)?;
+        let r = ppl_for(&setup, Method::Ria { alpha: 1.0, p: 0.5 }, s)?;
+        let m = ppl_for(&setup, Method::Magnitude, s)?;
+        table.row(vec![
+            format!("{s}"),
+            format!("{w:.3}"),
+            format!("{r:.3}"),
+            format!("{m:.3}"),
+        ]);
+    }
+    table.write_csv(outdir, "tab6_4")?;
+    Ok(vec![table])
+}
+
+/// Tab 6.5: training-free fine-tuning — DSnoT vs R²-DSnoT at 60% sparsity.
+pub fn tab6_5(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+    let sparsity = 0.6f32;
+    let mut table = Table::new(
+        "Tab 6.5: training-free fine-tuning at 60% sparsity (alpha=0.5)",
+        &["initial method", "no FT", "DSnoT", "R2-DSnoT"],
+    );
+    for (name, m) in [
+        ("wanda", Method::Wanda),
+        ("symwanda (a=0.5)", Method::SymWanda { alpha: 0.5 }),
+        ("RIA", Method::Ria { alpha: 1.0, p: 0.5 }),
+    ] {
+        let mut theta = setup.theta.clone();
+        prune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut theta,
+            &setup.calib,
+            m,
+            sparsity,
+            Scope::PerRow,
+        );
+        let base = setup.oracle.eval_perplexity(&theta)?;
+
+        let mut th_dsnot = theta.clone();
+        finetune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut th_dsnot,
+            &setup.theta,
+            &setup.calib,
+            &DsnotConfig { iters: 3, reg: 0.0, relative_grow: false, alpha: 0.5 },
+        );
+        let p_dsnot = setup.oracle.eval_perplexity(&th_dsnot)?;
+
+        let mut th_r2 = theta.clone();
+        finetune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut th_r2,
+            &setup.theta,
+            &setup.calib,
+            &DsnotConfig { iters: 3, reg: 0.1, relative_grow: true, alpha: 0.5 },
+        );
+        let p_r2 = setup.oracle.eval_perplexity(&th_r2)?;
+
+        table.row(vec![
+            name.into(),
+            format!("{base:.3}"),
+            format!("{p_dsnot:.3}"),
+            format!("{p_r2:.3}"),
+        ]);
+    }
+    table.write_csv(outdir, "tab6_5")?;
+    Ok(vec![table])
+}
+
+/// Tab 6.6: downstream robustness probe — perplexity on a *shifted*
+/// held-out corpus (fresh seed => different word mixture), the zero-shot
+/// substitution documented in DESIGN.md.
+pub fn tab6_6(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+    let prof = setup.rt.manifest().lm_configs[&setup.cfg_name].clone();
+    // shifted eval set
+    let mut rng = crate::rng(99);
+    let shifted = crate::data::corpus::fed_token_dataset(1, 4, 32, prof.seq_len, &mut rng);
+    let oracle_shift = HloLm::new(setup.rt.clone(), &setup.cfg_name, shifted)?;
+
+    let mut table = Table::new(
+        "Tab 6.6: shifted-domain perplexity at 50% sparsity",
+        &["method", "in-domain ppl", "shifted ppl"],
+    );
+    for (name, m) in [
+        ("wanda", Method::Wanda),
+        ("symwanda (a=0.5)", Method::SymWanda { alpha: 0.5 }),
+        ("RIA", Method::Ria { alpha: 1.0, p: 0.5 }),
+        ("magnitude", Method::Magnitude),
+    ] {
+        let mut theta = setup.theta.clone();
+        prune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut theta,
+            &setup.calib,
+            m,
+            0.5,
+            Scope::PerRow,
+        );
+        let in_dom = setup.oracle.eval_perplexity(&theta)?;
+        let out_dom = oracle_shift.eval_perplexity(&theta)?;
+        table.row(vec![name.into(), format!("{in_dom:.3}"), format!("{out_dom:.3}")]);
+    }
+    table.write_csv(outdir, "tab6_6")?;
+    Ok(vec![table])
+}
+
+/// Appendix E tables: lp exponent sweep, stochRIA sampling ratios, and
+/// R²-DSnoT hyperparameter ablations.
+pub fn tab_e(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    let setup = pretrained_lm(fast)?;
+
+    let mut t_lp = Table::new("Tab E.1: lp exponent sweep (RIA, 50%)", &["p", "perplexity"]);
+    for &p in &[0.1f32, 0.25, 0.5, 1.0, 2.0] {
+        let ppl = ppl_for(&setup, Method::Ria { alpha: 1.0, p }, 0.5)?;
+        t_lp.row(vec![format!("{p}"), format!("{ppl:.3}")]);
+    }
+
+    let mut t_stoch = Table::new(
+        "Tab E.3: stochRIA sampling ratios (50%, alpha=1)",
+        &["ratio", "perplexity"],
+    );
+    for &ratio in &[1.0f32, 0.8, 0.5, 0.2, 0.05] {
+        let m = if ratio >= 1.0 {
+            Method::Ria { alpha: 1.0, p: 0.5 }
+        } else {
+            Method::StochRia { alpha: 1.0, p: 0.5, ratio, seed: 123 }
+        };
+        let ppl = ppl_for(&setup, m, 0.5)?;
+        t_stoch.row(vec![format!("{ratio}"), format!("{ppl:.3}")]);
+    }
+
+    let mut t_hp = Table::new(
+        "Tab E.4: R2-DSnoT hyperparameters (60%, wanda init)",
+        &["reg", "iters", "perplexity"],
+    );
+    for &(reg, iters) in &[(0.0f32, 3usize), (0.1, 3), (0.3, 3), (0.1, 1), (0.1, 6)] {
+        let mut theta = setup.theta.clone();
+        prune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut theta,
+            &setup.calib,
+            Method::Wanda,
+            0.6,
+            Scope::PerRow,
+        );
+        finetune_model(
+            &setup.layout,
+            &setup.calib_layout,
+            &mut theta,
+            &setup.theta,
+            &setup.calib,
+            &DsnotConfig { iters, reg, relative_grow: true, alpha: 0.5 },
+        );
+        let ppl = setup.oracle.eval_perplexity(&theta)?;
+        t_hp.row(vec![format!("{reg}"), format!("{iters}"), format!("{ppl:.3}")]);
+    }
+
+    t_lp.write_csv(outdir, "tabE_1")?;
+    t_stoch.write_csv(outdir, "tabE_3")?;
+    t_hp.write_csv(outdir, "tabE_4")?;
+    Ok(vec![t_lp, t_stoch, t_hp])
+}

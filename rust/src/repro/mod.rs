@@ -1,0 +1,61 @@
+//! Paper-reproduction drivers: one function per table/figure.
+//!
+//! Each driver regenerates the rows/series the dissertation reports and
+//! returns printable [`Table`]s (also written as CSV under `results/`).
+//! `fast: true` shrinks rounds/sizes for CI; the shapes of the comparisons
+//! (who wins, crossovers) are preserved. See DESIGN.md per-experiment
+//! index for the mapping.
+
+mod ch2;
+mod ch3;
+mod ch4;
+mod ch5;
+mod ch6;
+pub mod util;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+
+pub const EXPERIMENTS: &[&str] = &[
+    "fig2_2", "figA_1", // Ch. 2 EF-BV
+    "fig3_1", "fig3_2", "fig3_3", "fig3_4", "fig3_5", // Ch. 3 Scafflix
+    "fig4_2", "fig4_4", "fig4_5", "tab4_1", "tab4_2", // Ch. 4 FedP3
+    "fig5_1", "fig5_2", "fig5_3", "fig5_4", "fig5_6", "tab5_1", // Ch. 5 SPPM-AS
+    "tab6_2", "tab6_3", "tab6_4", "tab6_5", "tab6_6", "tabE", // Ch. 6 SymWanda
+];
+
+/// Run one experiment by id. Writes CSVs under `outdir` and returns the
+/// paper-style tables.
+pub fn run(id: &str, fast: bool, outdir: &Path) -> Result<Vec<Table>> {
+    std::fs::create_dir_all(outdir)?;
+    match id {
+        "fig2_2" => ch2::fig2_2(fast, outdir),
+        "figA_1" => ch2::fig_a1(fast, outdir),
+        "fig3_1" => ch3::fig3_1(fast, outdir),
+        "fig3_2" => ch3::fig3_2(fast, outdir),
+        "fig3_3" => ch3::fig3_3(fast, outdir),
+        "fig3_4" => ch3::fig3_4(fast, outdir),
+        "fig3_5" => ch3::fig3_5(fast, outdir),
+        "fig4_2" => ch4::fig4_2(fast, outdir),
+        "fig4_4" => ch4::fig4_4(fast, outdir),
+        "fig4_5" => ch4::fig4_5(fast, outdir),
+        "tab4_1" => ch4::tab4_1(fast, outdir),
+        "tab4_2" => ch4::tab4_2(fast, outdir),
+        "fig5_1" => ch5::fig5_1(fast, outdir),
+        "fig5_2" => ch5::fig5_2(fast, outdir),
+        "fig5_3" => ch5::fig5_3(fast, outdir),
+        "fig5_4" => ch5::fig5_4(fast, outdir),
+        "fig5_6" => ch5::fig5_6(fast, outdir),
+        "tab5_1" => ch5::tab5_1(fast, outdir),
+        "tab6_2" => ch6::tab6_2(fast, outdir),
+        "tab6_3" => ch6::tab6_3(fast, outdir),
+        "tab6_4" => ch6::tab6_4(fast, outdir),
+        "tab6_5" => ch6::tab6_5(fast, outdir),
+        "tab6_6" => ch6::tab6_6(fast, outdir),
+        "tabE" => ch6::tab_e(fast, outdir),
+        other => anyhow::bail!("unknown experiment {other}; see `fedeff repro --list`"),
+    }
+}

@@ -1,0 +1,65 @@
+//! Shared helpers for the reproduction drivers.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::synth::{logreg_dataset, Heterogeneity};
+use crate::data::FedBinDataset;
+use crate::oracle::hlo::HloLogReg;
+use crate::oracle::logreg_rs::RustLogReg;
+use crate::oracle::Oracle;
+use crate::runtime::Runtime;
+
+/// A logreg oracle for a named profile: HLO-backed when artifacts are
+/// available, pure-Rust otherwise (numerics are identical; cross-checked
+/// by `rust/tests/hlo_numerics.rs`).
+pub fn logreg_oracle(
+    rt: Option<&Rc<Runtime>>,
+    profile: &str,
+    n_clients: usize,
+    het: Heterogeneity,
+    mu: f32,
+    seed: u64,
+) -> Result<Box<dyn Oracle>> {
+    let (d, m) = crate::data::synth::logreg_profile(profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown logreg profile {profile}"))?;
+    let mut rng = crate::rng(seed);
+    let data = logreg_dataset(d, m, n_clients, het, 0.3, &mut rng);
+    build_logreg(rt, profile, data, mu)
+}
+
+pub fn build_logreg(
+    rt: Option<&Rc<Runtime>>,
+    profile: &str,
+    data: FedBinDataset,
+    mu: f32,
+) -> Result<Box<dyn Oracle>> {
+    if let Some(rt) = rt {
+        match HloLogReg::new(rt.clone(), profile, data.clone(), mu) {
+            Ok(o) => return Ok(Box::new(o)),
+            Err(e) => eprintln!("[repro] HLO oracle unavailable ({e}); using pure-Rust fallback"),
+        }
+    }
+    Ok(Box::new(RustLogReg::new(data, mu)))
+}
+
+/// Try to create the PJRT runtime; None when artifacts are missing.
+pub fn try_runtime() -> Option<Rc<Runtime>> {
+    match Runtime::from_default_manifest() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("[repro] PJRT runtime unavailable ({e}); pure-Rust oracles only");
+            None
+        }
+    }
+}
+
+/// Format an Option<f32> for table cells.
+pub fn fmt_opt(v: Option<f32>) -> String {
+    v.map_or("-".into(), |x| format!("{x:.4}"))
+}
+
+pub fn fmt_cost(v: Option<f64>) -> String {
+    v.map_or("n/a".into(), |x| format!("{x:.1}"))
+}

@@ -1,0 +1,182 @@
+//! Deterministic, splittable RNG — xoshiro256** seeded via SplitMix64.
+//!
+//! Built in-tree (no external `rand`): every experiment in the paper
+//! depends on reproducible client sampling, compressor randomness and
+//! synthetic data; a single self-owned generator keeps runs bit-identical
+//! across machines and releases.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (for per-client / per-round seeding).
+    pub fn split(&self, stream: u64) -> Self {
+        Self::new(self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.s;
+        let result = s1.wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s1 << 17;
+        let mut s2n = s2 ^ s0;
+        let s3n = s3 ^ s1;
+        let s1n = s1 ^ s2n;
+        let s0n = s0 ^ s3n;
+        s2n ^= t;
+        self.s = [s0n, s1n, s2n, s3n.rotate_left(45)];
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32_unit(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32_unit()
+    }
+
+    /// Uniform usize in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style bounded sampling (bias negligible for our n)
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform u32 in [0, hi] inclusive.
+    #[inline]
+    pub fn u32_inclusive(&mut self, hi: u32) -> u32 {
+        (self.next_u64() % (hi as u64 + 1)) as u32
+    }
+
+    /// Standard normal via Irwin–Hall(12) (exact enough for data synthesis
+    /// and DP noise; tails clipped at ±6 sigma by construction).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.f32_unit();
+        }
+        s - 6.0
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.f32_unit() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn unit_floats_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = r.f32_unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_covers_support_uniformly() {
+        let mut r = Rng::new(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let mut mean = 0.0f64;
+        let mut var = 0.0f64;
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            mean += v;
+            var += v * v;
+        }
+        mean /= n as f64;
+        var = var / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let base = Rng::new(5);
+        let mut a = base.split(1);
+        let mut b = base.split(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

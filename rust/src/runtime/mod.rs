@@ -1,0 +1,169 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place in the crate that touches the `xla` FFI. The
+//! pattern (per /opt/xla-example/load_hlo) is:
+//!
+//! ```text
+//! PjRtClient::cpu() -> HloModuleProto::from_text_file -> XlaComputation
+//!   -> client.compile -> executable.execute(...)
+//! ```
+//!
+//! Artifacts were lowered by `python/compile/aot.py` with
+//! `return_tuple=True`, so outputs always arrive as one tuple literal.
+//!
+//! Perf notes (DESIGN.md §Perf / EXPERIMENTS.md §Perf):
+//! * executables are compiled once and cached by artifact name;
+//! * immutable per-client inputs (data shards) can be staged once as
+//!   device-resident [`xla::PjRtBuffer`]s via [`Runtime::stage`] and reused
+//!   across rounds with `execute_b`, eliminating the host->device copy of
+//!   the shard on every oracle call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::manifest::Manifest;
+
+/// A device-resident input (staged once, reused every call).
+pub struct Staged(xla::PjRtBuffer);
+
+/// One compiled artifact.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected input shapes (from the manifest).
+    in_shapes: Vec<Vec<usize>>,
+    /// Cached products of `in_shapes`.
+    in_counts: Vec<usize>,
+}
+
+impl Executable {
+    /// Execute with host-side f32 slices; returns one `Vec<f32>` per output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.check_arity(inputs.len())?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                data.len() == self.in_counts[i],
+                "artifact {}: input {i} has {} elements, expected {}",
+                self.name, data.len(), self.in_counts[i]
+            );
+            let dims: Vec<i64> = self.in_shapes[i].iter().map(|&v| v as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let bufs = self.exe.execute::<xla::Literal>(&literals)?;
+        Self::collect(&self.name, bufs)
+    }
+
+    /// Execute with a mix of staged device buffers and fresh host slices.
+    /// `inputs[i]` selects either `Staged` (device-resident) or a host slice.
+    pub fn run_mixed(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.check_arity(inputs.len())?;
+        // `execute_b` requires all-buffer inputs; stage host slices ad hoc.
+        let client = self.exe.client();
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        // Two passes to keep borrows simple: create owned buffers first.
+        for (i, inp) in inputs.iter().enumerate() {
+            if let Input::Host(data) = inp {
+                anyhow::ensure!(
+                    data.len() == self.in_counts[i],
+                    "artifact {}: input {i} has {} elements, expected {}",
+                    self.name, data.len(), self.in_counts[i]
+                );
+                owned.push(client.buffer_from_host_buffer(data, &self.in_shapes[i], None)?);
+            }
+        }
+        let mut owned_it = owned.iter();
+        for inp in inputs {
+            match inp {
+                Input::Staged(s) => bufs.push(&s.0),
+                Input::Host(_) => bufs.push(owned_it.next().unwrap()),
+            }
+        }
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        Self::collect(&self.name, out)
+    }
+
+    fn check_arity(&self, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n == self.in_counts.len(),
+            "artifact {}: got {} inputs, expected {}",
+            self.name, n, self.in_counts.len()
+        );
+        Ok(())
+    }
+
+    fn collect(name: &str, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("artifact {name}: fetching result"))?;
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Input to [`Executable::run_mixed`].
+pub enum Input<'a> {
+    Staged(&'a Staged),
+    Host(&'a [f32]),
+}
+
+/// The PJRT runtime: one CPU client + an executable cache.
+///
+/// Not `Send`/`Sync` by design (the underlying FFI handles are raw
+/// pointers); the coordinator owns one `Runtime` on its driver thread and
+/// parallelism lives in the pure-Rust compression/aggregation layer.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn from_default_manifest() -> Result<Self> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let meta = &self.manifest.artifacts[name];
+        let in_shapes: Vec<Vec<usize>> = meta.inputs.iter().map(|(_, s)| s.clone()).collect();
+        let in_counts = in_shapes.iter().map(|s| s.iter().product()).collect();
+        let e = Rc::new(Executable { name: name.to_string(), exe, in_shapes, in_counts });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Stage an immutable input on device for reuse across calls. `dims`
+    /// must match the artifact parameter shape the buffer will feed.
+    pub fn stage(&self, data: &[f32], dims: &[usize]) -> Result<Staged> {
+        Ok(Staged(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+}

@@ -1,0 +1,119 @@
+//! k-means clustering of clients for stratified sampling (Sect. 5.4.1).
+//!
+//! The paper clusters clients by feature statistics so that strata are
+//! homogeneous (Lemma 5.3.3: within-cluster gradient spread sigma_j^2
+//! bounds the SS variance). We cluster on per-client feature-mean vectors
+//! or on gradients at x0 — any embedding the caller provides.
+
+
+use crate::Rng;
+
+/// Lloyd's algorithm. `points` is row-major [n, d]. Returns cluster
+/// assignment per point and the blocks (indices per cluster, all
+/// non-empty).
+pub fn kmeans(points: &[Vec<f32>], k: usize, iters: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let n = points.len();
+    assert!(n >= k && k >= 1);
+    // k-means++ style seeding: first uniform, then farthest-ish
+    let mut centers: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centers.push(points[rng.below(n)].clone());
+    while centers.len() < k {
+        let mut best = (0usize, -1.0f32);
+        for (i, p) in points.iter().enumerate() {
+            let dmin = centers
+                .iter()
+                .map(|c| crate::vecmath::dist_sq(p, c))
+                .fold(f32::INFINITY, f32::min);
+            if dmin > best.1 {
+                best = (i, dmin);
+            }
+        }
+        centers.push(points[best.0].clone());
+    }
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // assignment step
+        for (i, p) in points.iter().enumerate() {
+            let mut best = (0usize, f32::INFINITY);
+            for (j, c) in centers.iter().enumerate() {
+                let dist = crate::vecmath::dist_sq(p, c);
+                if dist < best.1 {
+                    best = (j, dist);
+                }
+            }
+            assign[i] = best.0;
+        }
+        // update step
+        for (j, c) in centers.iter_mut().enumerate() {
+            let members: Vec<usize> = (0..n).filter(|&i| assign[i] == j).collect();
+            if members.is_empty() {
+                continue;
+            }
+            c.fill(0.0);
+            for &i in &members {
+                crate::vecmath::axpy(1.0 / members.len() as f32, &points[i], c);
+            }
+        }
+    }
+
+    // build blocks; repair empties by stealing from the largest block
+    let mut blocks: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &j) in assign.iter().enumerate() {
+        blocks[j].push(i);
+    }
+    loop {
+        let empty = blocks.iter().position(|b| b.is_empty());
+        let Some(e) = empty else { break };
+        let largest = (0..k).max_by_key(|&j| blocks[j].len()).unwrap();
+        let moved = blocks[largest].pop().unwrap();
+        blocks[e].push(moved);
+    }
+    blocks
+}
+
+/// Per-client embedding: mean feature vector of the shard.
+pub fn shard_means(shards: &[crate::data::BinShard]) -> Vec<Vec<f32>> {
+    shards
+        .iter()
+        .map(|s| {
+            let mut mean = vec![0.0f32; s.d];
+            for i in 0..s.m {
+                crate::vecmath::axpy(1.0 / s.m as f32, s.row(i), &mut mean);
+            }
+            mean
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_obvious_clusters() {
+        let mut points = Vec::new();
+        for i in 0..10 {
+            let v = if i < 5 { 10.0 } else { -10.0 };
+            points.push(vec![v, v]);
+        }
+        let blocks = kmeans(&points, 2, 10, &mut crate::rng(16));
+        assert_eq!(blocks.len(), 2);
+        for blk in &blocks {
+            let all_low = blk.iter().all(|&i| i < 5);
+            let all_high = blk.iter().all(|&i| i >= 5);
+            assert!(all_low || all_high, "mixed block {blk:?}");
+        }
+    }
+
+    #[test]
+    fn all_blocks_nonempty_and_partition() {
+        let points: Vec<Vec<f32>> = (0..20).map(|i| vec![i as f32]).collect();
+        let blocks = kmeans(&points, 5, 8, &mut crate::rng(17));
+        assert_eq!(blocks.len(), 5);
+        assert!(blocks.iter().all(|b| !b.is_empty()));
+        let mut all: Vec<usize> = blocks.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,299 @@
+//! Arbitrary cohort sampling for SPPM-AS (Sect. 5.3), plus k-means
+//! clustering for stratified sampling.
+//!
+//! Every sampler exposes the inclusion probabilities `p_i` that define the
+//! reweighted cohort objective
+//!   f_C(x) = sum_{i in C} f_i(x) / (n p_i)
+//! and the theory constants mu_AS / sigma*^2_AS estimators used by the
+//! fig 5.3 comparisons.
+
+pub mod kmeans;
+
+
+use crate::Rng;
+
+pub trait CohortSampler {
+    /// Sample a cohort of client indices.
+    fn sample(&self, rng: &mut Rng) -> Vec<usize>;
+    /// Inclusion probability p_i = Prob(i in S).
+    fn p(&self, i: usize) -> f64;
+    fn n_clients(&self) -> usize;
+    fn name(&self) -> String;
+}
+
+/// Full participation: S = [n] always.
+pub struct FullSampling {
+    pub n: usize,
+}
+
+impl CohortSampler for FullSampling {
+    fn sample(&self, _rng: &mut Rng) -> Vec<usize> {
+        (0..self.n).collect()
+    }
+    fn p(&self, _i: usize) -> f64 {
+        1.0
+    }
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        "FS".into()
+    }
+}
+
+/// tau-nice sampling: uniform subsets of fixed size tau; p_i = tau/n.
+pub struct NiceSampling {
+    pub n: usize,
+    pub tau: usize,
+}
+
+impl CohortSampler for NiceSampling {
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(self.tau.min(self.n));
+        idx.sort_unstable();
+        idx
+    }
+    fn p(&self, _i: usize) -> f64 {
+        self.tau.min(self.n) as f64 / self.n as f64
+    }
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        format!("NICE-{}", self.tau)
+    }
+}
+
+/// Nonuniform single-client sampling with probabilities q_i.
+pub struct NonuniformSampling {
+    pub q: Vec<f64>,
+}
+
+impl CohortSampler for NonuniformSampling {
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        let r: f64 = rng.f64_unit();
+        let mut acc = 0.0;
+        for (i, &qi) in self.q.iter().enumerate() {
+            acc += qi;
+            if r < acc {
+                return vec![i];
+            }
+        }
+        vec![self.q.len() - 1]
+    }
+    fn p(&self, i: usize) -> f64 {
+        self.q[i]
+    }
+    fn n_clients(&self) -> usize {
+        self.q.len()
+    }
+    fn name(&self) -> String {
+        "NS".into()
+    }
+}
+
+/// Block sampling: a partition C_1..C_b; S = C_j with probability q_j.
+pub struct BlockSampling {
+    pub blocks: Vec<Vec<usize>>,
+    pub q: Vec<f64>,
+    n: usize,
+}
+
+impl BlockSampling {
+    pub fn new(blocks: Vec<Vec<usize>>, q: Option<Vec<f64>>) -> Self {
+        let n = blocks.iter().map(|b| b.len()).sum();
+        let b = blocks.len();
+        let q = q.unwrap_or_else(|| vec![1.0 / b as f64; b]);
+        assert_eq!(q.len(), b);
+        Self { blocks, q, n }
+    }
+}
+
+impl CohortSampler for BlockSampling {
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        let r: f64 = rng.f64_unit();
+        let mut acc = 0.0;
+        for (j, &qj) in self.q.iter().enumerate() {
+            acc += qj;
+            if r < acc {
+                return self.blocks[j].clone();
+            }
+        }
+        self.blocks.last().unwrap().clone()
+    }
+    fn p(&self, i: usize) -> f64 {
+        for (j, blk) in self.blocks.iter().enumerate() {
+            if blk.contains(&i) {
+                return self.q[j];
+            }
+        }
+        0.0
+    }
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        format!("BS-{}", self.blocks.len())
+    }
+}
+
+/// Stratified sampling: partition C_1..C_b; pick one client uniformly from
+/// *each* block; p_i = 1/|C_{B(i)}|.
+pub struct StratifiedSampling {
+    pub blocks: Vec<Vec<usize>>,
+    n: usize,
+}
+
+impl StratifiedSampling {
+    pub fn new(blocks: Vec<Vec<usize>>) -> Self {
+        let n = blocks.iter().map(|b| b.len()).sum();
+        assert!(blocks.iter().all(|b| !b.is_empty()));
+        Self { blocks, n }
+    }
+}
+
+impl CohortSampler for StratifiedSampling {
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut cohort: Vec<usize> = self
+            .blocks
+            .iter()
+            .map(|blk| blk[rng.below(blk.len())])
+            .collect();
+        cohort.sort_unstable();
+        cohort
+    }
+    fn p(&self, i: usize) -> f64 {
+        for blk in &self.blocks {
+            if blk.contains(&i) {
+                return 1.0 / blk.len() as f64;
+            }
+        }
+        0.0
+    }
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        format!("SS-{}", self.blocks.len())
+    }
+}
+
+/// Partition [n] into b contiguous blocks of (near) equal size.
+pub fn contiguous_blocks(n: usize, b: usize) -> Vec<Vec<usize>> {
+    let mut blocks = vec![Vec::new(); b];
+    for i in 0..n {
+        blocks[i * b / n].push(i);
+    }
+    blocks
+}
+
+/// Empirical sigma*^2_AS (eq. 5.4): average over sampled cohorts of
+/// ||grad f_C(x*)||^2, given per-client gradients at x*.
+pub fn sigma_star_sq<S: CohortSampler + ?Sized>(
+    sampler: &S,
+    grads_at_star: &[Vec<f32>],
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = grads_at_star.len();
+    let d = grads_at_star[0].len();
+    let mut acc = 0.0f64;
+    let mut g = vec![0.0f32; d];
+    for _ in 0..trials {
+        let cohort = sampler.sample(rng);
+        g.fill(0.0);
+        for &i in &cohort {
+            let w = 1.0 / (n as f64 * sampler.p(i)) as f32;
+            crate::vecmath::axpy(w, &grads_at_star[i], &mut g);
+        }
+        acc += crate::vecmath::norm_sq(&g) as f64;
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nice_inclusion_frequency_matches_p() {
+        let s = NiceSampling { n: 10, tau: 3 };
+        let mut rng = crate::rng(11);
+        let mut counts = vec![0usize; 10];
+        let trials = 4000;
+        for _ in 0..trials {
+            for i in s.sample(&mut rng) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let f = c as f64 / trials as f64;
+            assert!((f - 0.3).abs() < 0.05, "freq {f}");
+        }
+    }
+
+    #[test]
+    fn stratified_takes_one_per_block() {
+        let blocks = contiguous_blocks(9, 3);
+        let s = StratifiedSampling::new(blocks.clone());
+        let mut rng = crate::rng(12);
+        for _ in 0..100 {
+            let c = s.sample(&mut rng);
+            assert_eq!(c.len(), 3);
+            for (j, blk) in blocks.iter().enumerate() {
+                assert_eq!(c.iter().filter(|i| blk.contains(i)).count(), 1, "block {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_sampling_returns_whole_blocks() {
+        let blocks = contiguous_blocks(8, 4);
+        let s = BlockSampling::new(blocks.clone(), None);
+        let mut rng = crate::rng(13);
+        for _ in 0..50 {
+            let c = s.sample(&mut rng);
+            assert!(blocks.contains(&c));
+        }
+    }
+
+    #[test]
+    fn contiguous_blocks_partition() {
+        let blocks = contiguous_blocks(10, 3);
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 10);
+        let mut all: Vec<usize> = blocks.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sigma_star_zero_in_interpolation_regime() {
+        // all client gradients zero at x* -> sigma*^2 = 0
+        let grads = vec![vec![0.0f32; 4]; 6];
+        let s = NiceSampling { n: 6, tau: 2 };
+        let v = sigma_star_sq(&s, &grads, 50, &mut crate::rng(14));
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn stratified_beats_nice_on_clustered_grads() {
+        // two homogeneous clusters with opposite gradients: stratified
+        // sampling (one per cluster) cancels them; nice sampling does not.
+        let mut grads = Vec::new();
+        for i in 0..8 {
+            let v = if i < 4 { 1.0 } else { -1.0 };
+            grads.push(vec![v; 3]);
+        }
+        let blocks = vec![(0..4).collect::<Vec<_>>(), (4..8).collect::<Vec<_>>()];
+        let ss = StratifiedSampling::new(blocks);
+        let nice = NiceSampling { n: 8, tau: 2 };
+        let mut rng = crate::rng(15);
+        let v_ss = sigma_star_sq(&ss, &grads, 400, &mut rng);
+        let v_nice = sigma_star_sq(&nice, &grads, 400, &mut rng);
+        assert!(v_ss < 1e-9, "stratified variance {v_ss}");
+        assert!(v_nice > 0.1, "nice variance {v_nice}");
+    }
+}

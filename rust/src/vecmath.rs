@@ -1,0 +1,113 @@
+//! Small dense f32 vector kernels used by every algorithm's hot loop.
+//!
+//! These are deliberately allocation-free: callers pass output buffers.
+//! The compressor/aggregation path (the paper's L3 contribution) must not
+//! allocate per round — see DESIGN.md §Perf.
+
+/// y += a * x
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = x
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= a
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// <x, y>
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// ||x||^2
+pub fn norm_sq(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// ||x||
+pub fn norm(x: &[f32]) -> f32 {
+    norm_sq(x).sqrt()
+}
+
+/// ||x - y||^2
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+/// out = x - y
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a - b;
+    }
+}
+
+/// out = x + y
+pub fn add(x: &[f32], y: &[f32], out: &mut [f32]) {
+    for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+        *o = a + b;
+    }
+}
+
+/// x = 0
+pub fn zero(x: &mut [f32]) {
+    x.fill(0.0);
+}
+
+/// Running mean accumulation: acc += x / n
+pub fn acc_mean(x: &[f32], n: f32, acc: &mut [f32]) {
+    axpy(1.0 / n, x, acc);
+}
+
+/// In-place convex combination: x = a*x + (1-a)*y
+pub fn lerp(a: f32, x: &mut [f32], y: &[f32]) {
+    for (xi, yi) in x.iter_mut().zip(y) {
+        *xi = a * *xi + (1.0 - a) * yi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm(&x) - 14.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sub_add_dist() {
+        let x = vec![3.0, 4.0];
+        let y = vec![1.0, 1.0];
+        let mut o = vec![0.0; 2];
+        sub(&x, &y, &mut o);
+        assert_eq!(o, vec![2.0, 3.0]);
+        add(&x, &y, &mut o);
+        assert_eq!(o, vec![4.0, 5.0]);
+        assert_eq!(dist_sq(&x, &y), 13.0);
+    }
+
+    #[test]
+    fn lerp_endpoint() {
+        let mut x = vec![2.0, 4.0];
+        let y = vec![0.0, 0.0];
+        lerp(0.5, &mut x, &y);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+}

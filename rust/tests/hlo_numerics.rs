@@ -1,0 +1,301 @@
+//! Integration: the HLO artifacts (lowered from JAX + Pallas) must agree
+//! numerically with the independent pure-Rust reference implementations.
+//! This is the end-to-end correctness bridge between the three layers.
+//!
+//! Skipped gracefully (with a loud message) when `artifacts/` is missing.
+
+use std::rc::Rc;
+
+use fedeff::data::synth::{logreg_dataset, Heterogeneity};
+use fedeff::oracle::hlo::{HloLm, HloLogReg, HloMlp};
+use fedeff::oracle::logreg_rs::RustLogReg;
+use fedeff::oracle::Oracle;
+use fedeff::runtime::Runtime;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::from_default_manifest() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts: {e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn logreg_hlo_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = fedeff::rng(100);
+    let data = logreg_dataset(112, 256, 4, Heterogeneity::FeatureShift(0.5), 0.3, &mut rng);
+    let hlo = HloLogReg::new(rt, "mushrooms", data.clone(), 0.1).unwrap();
+    let rust = RustLogReg::new(data, 0.1);
+
+    let mut w = vec![0.0f32; 112];
+    for (j, v) in w.iter_mut().enumerate() {
+        *v = ((j as f32) * 0.37).sin() * 0.5;
+    }
+    let mut g_h = vec![0.0f32; 112];
+    let mut g_r = vec![0.0f32; 112];
+    for client in 0..4 {
+        let l_h = hlo.loss_grad(client, &w, &mut g_h).unwrap();
+        let l_r = rust.loss_grad(client, &w, &mut g_r).unwrap();
+        assert!((l_h - l_r).abs() < 1e-4, "client {client}: loss {l_h} vs {l_r}");
+        let max_diff = g_h
+            .iter()
+            .zip(&g_r)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "client {client}: grad max diff {max_diff}");
+    }
+}
+
+#[test]
+fn logreg_batched_artifact_matches_per_client() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().logreg_batch_n;
+    let mut rng = fedeff::rng(101);
+    let data = logreg_dataset(112, 256, n, Heterogeneity::Iid, 0.3, &mut rng);
+    let hlo = HloLogReg::new(rt, "mushrooms", data, 0.1).unwrap();
+
+    let w = vec![0.05f32; 112];
+    let ws: Vec<f32> = (0..n).flat_map(|_| w.clone()).collect();
+    let (losses, grads) = hlo.batch_loss_grad(&ws, n).unwrap();
+    assert_eq!(losses.len(), n);
+    assert_eq!(grads.len(), n * 112);
+
+    let mut g = vec![0.0f32; 112];
+    for c in 0..n {
+        let l = hlo.loss_grad(c, &w, &mut g).unwrap();
+        assert!((losses[c] - l).abs() < 1e-4, "client {c} loss {l} vs batched {}", losses[c]);
+        let gd = &grads[c * 112..(c + 1) * 112];
+        let max_diff =
+            gd.iter().zip(&g).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "client {c} grad max diff {max_diff}");
+    }
+}
+
+#[test]
+fn logreg_stochastic_grad_estimates_full() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = fedeff::rng(102);
+    let data = logreg_dataset(112, 256, 2, Heterogeneity::Iid, 0.3, &mut rng);
+    let hlo = HloLogReg::new(rt, "mushrooms", data, 0.1).unwrap();
+    let w = vec![0.1f32; 112];
+    let mut full = vec![0.0f32; 112];
+    hlo.loss_grad(0, &w, &mut full).unwrap();
+    let mut mean = vec![0.0f32; 112];
+    let mut g = vec![0.0f32; 112];
+    let reps = 200;
+    for _ in 0..reps {
+        hlo.loss_grad_stoch(0, &w, &mut g, &mut rng).unwrap();
+        fedeff::vecmath::acc_mean(&g, reps as f32, &mut mean);
+    }
+    let rel = fedeff::vecmath::dist_sq(&mean, &full).sqrt() / fedeff::vecmath::norm(&full);
+    assert!(rel < 0.25, "stochastic grad bias too large: rel {rel}");
+}
+
+#[test]
+fn mlp_grad_matches_finite_difference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = fedeff::rng(103);
+    let data = fedeff::data::synth::fed_class_dataset(
+        784,
+        10,
+        2,
+        64,
+        128,
+        fedeff::data::partition::Split::Iid,
+        0.5,
+        &mut rng,
+    );
+    let hlo = HloMlp::new(rt.clone(), "emnistl", data, 1e-4).unwrap();
+    let layout = rt.manifest().layout("mlp_emnistl").unwrap().clone();
+    let theta = fedeff::manifest::init_flat(&layout, &mut rng);
+    let d = theta.len();
+    let mut g = vec![0.0f32; d];
+    let l0 = hlo.loss_grad(0, &theta, &mut g).unwrap();
+    assert!(l0.is_finite() && l0 > 0.0);
+    // central differences on a few random coordinates
+    let eps = 2e-2f32;
+    let mut tmp = vec![0.0f32; d];
+    for t in 0..4 {
+        let j = (t * 7919 + 13) % d;
+        let mut tp = theta.clone();
+        let mut tm = theta.clone();
+        tp[j] += eps;
+        tm[j] -= eps;
+        let lp = hlo.loss_grad(0, &tp, &mut tmp).unwrap();
+        let lm = hlo.loss_grad(0, &tm, &mut tmp).unwrap();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (g[j] - fd).abs() < 0.05 * g[j].abs().max(0.05),
+            "coord {j}: grad {} vs fd {fd}",
+            g[j]
+        );
+    }
+}
+
+#[test]
+fn mlp_eval_accuracy_in_unit_range() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = fedeff::rng(104);
+    let data = fedeff::data::synth::fed_class_dataset(
+        784,
+        10,
+        2,
+        64,
+        256,
+        fedeff::data::partition::Split::Iid,
+        0.5,
+        &mut rng,
+    );
+    let hlo = HloMlp::new(rt.clone(), "emnistl", data, 1e-4).unwrap();
+    let layout = rt.manifest().layout("mlp_emnistl").unwrap().clone();
+    let theta = fedeff::manifest::init_flat(&layout, &mut rng);
+    let acc = hlo.test_accuracy(&theta).unwrap();
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+}
+
+#[test]
+fn lm_grad_loss_and_eval_consistent() {
+    let Some(rt) = runtime() else { return };
+    let prof = rt.manifest().lm_configs["lm_tiny"].clone();
+    let mut rng = fedeff::rng(105);
+    let data = fedeff::data::corpus::fed_token_dataset(2, 8, 16, prof.seq_len, &mut rng);
+    let hlo = HloLm::new(rt.clone(), "lm_tiny", data).unwrap();
+    let layout = rt.manifest().layout("lm_tiny").unwrap().clone();
+    let theta = fedeff::manifest::init_flat(&layout, &mut rng);
+
+    let mut g = vec![0.0f32; theta.len()];
+    let loss = hlo.loss_grad(0, &theta, &mut g).unwrap();
+    // near-uniform init -> loss near ln(96)
+    assert!((loss - (96f32).ln()).abs() < 1.0, "loss {loss}");
+    assert!(g.iter().all(|v| v.is_finite()));
+    assert!(fedeff::vecmath::norm(&g) > 0.0);
+
+    let ppl = hlo.eval_perplexity(&theta).unwrap();
+    assert!(ppl > 1.0 && ppl < 300.0, "ppl {ppl}");
+
+    // a few conservative GD steps on one client must reduce its loss
+    let mut th = theta.clone();
+    let mut l_last = loss;
+    for _ in 0..12 {
+        l_last = hlo.loss_grad(0, &th, &mut g).unwrap();
+        let gn = fedeff::vecmath::norm(&g).max(1e-6);
+        fedeff::vecmath::axpy(-(0.1 / gn).min(0.5), &g, &mut th);
+    }
+    assert!(l_last < loss, "{l_last} !< {loss}");
+}
+
+#[test]
+fn lm_calibration_matches_layout_and_is_nonnegative() {
+    let Some(rt) = runtime() else { return };
+    let prof = rt.manifest().lm_configs["lm_tiny"].clone();
+    let mut rng = fedeff::rng(106);
+    let data = fedeff::data::corpus::fed_token_dataset(1, 4, 16, prof.seq_len, &mut rng);
+    let hlo = HloLm::new(rt.clone(), "lm_tiny", data).unwrap();
+    let layout = rt.manifest().layout("lm_tiny").unwrap().clone();
+    let calib_layout = rt.manifest().calib_layouts["lm_tiny"].clone();
+    let theta = fedeff::manifest::init_flat(&layout, &mut rng);
+
+    let calib = hlo.calibrate(&theta, 2).unwrap();
+    assert_eq!(calib.len(), calib_layout.total);
+    assert!(calib.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    // every prunable linear layer has matching calib slice dims
+    for e in layout.iter().filter(|e| e.is_prunable()) {
+        let (o, i) = e.matrix_dims().unwrap();
+        let (a_in, a_out) =
+            fedeff::pruning::calib_slices(&calib_layout, &calib, &e.name).unwrap();
+        assert_eq!(a_in.len(), i, "{}", e.name);
+        assert_eq!(a_out.len(), o, "{}", e.name);
+    }
+}
+
+#[test]
+fn wanda_kernel_artifact_matches_rust_score() {
+    let Some(rt) = runtime() else { return };
+    // lm_small's (128, 128) linear shape has a compiled Pallas kernel
+    let exe = match rt.load("wanda_score_128x128") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP wanda kernel: {e}");
+            return;
+        }
+    };
+    let (o, i) = (128usize, 128usize);
+    let mut rng = fedeff::rng(107);
+    let w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.01, 2.0)).collect();
+    let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.01, 2.0)).collect();
+    let alpha = [0.7f32];
+    let out = exe.run(&[&w, &a_in, &a_out, &alpha]).unwrap();
+    let rust = fedeff::pruning::score(
+        fedeff::pruning::Method::SymWanda { alpha: 0.7 },
+        &w,
+        o,
+        i,
+        &a_in,
+        &a_out,
+    );
+    let max_diff =
+        out[0].iter().zip(&rust).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "pallas-vs-rust wanda score diff {max_diff}");
+}
+
+#[test]
+fn ria_kernel_artifact_matches_rust_score() {
+    let Some(rt) = runtime() else { return };
+    let exe = match rt.load("ria_score_384x128") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP ria kernel: {e}");
+            return;
+        }
+    };
+    let (o, i) = (384usize, 128usize);
+    let mut rng = fedeff::rng(108);
+    let w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.01, 2.0)).collect();
+    let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.01, 2.0)).collect();
+    let out = exe.run(&[&w, &a_in, &a_out, &[0.5f32], &[0.5f32]]).unwrap();
+    let rust = fedeff::pruning::score(
+        fedeff::pruning::Method::Ria { alpha: 0.5, p: 0.5 },
+        &w,
+        o,
+        i,
+        &a_in,
+        &a_out,
+    );
+    let max_rel = out[0]
+        .iter()
+        .zip(&rust)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1e-6))
+        .fold(0.0f32, f32::max);
+    assert!(max_rel < 1e-3, "pallas-vs-rust ria score rel diff {max_rel}");
+}
+
+#[test]
+fn staged_buffers_match_fresh_literals() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = fedeff::rng(109);
+    let data = logreg_dataset(112, 256, 1, Heterogeneity::Iid, 0.3, &mut rng);
+    let exe = rt.load("logreg_grad_mushrooms").unwrap();
+    let shard = &data.clients[0];
+    let w = vec![0.02f32; 112];
+    let mu = [0.1f32];
+    // path A: all host literals
+    let a = exe.run(&[&shard.x, &shard.y, &w, &mu]).unwrap();
+    // path B: staged device buffers for X, y
+    let sx = rt.stage(&shard.x, &[256, 112]).unwrap();
+    let sy = rt.stage(&shard.y, &[256]).unwrap();
+    let b = exe
+        .run_mixed(&[
+            fedeff::runtime::Input::Staged(&sx),
+            fedeff::runtime::Input::Staged(&sy),
+            fedeff::runtime::Input::Host(&w),
+            fedeff::runtime::Input::Host(&mu),
+        ])
+        .unwrap();
+    assert_eq!(a[0], b[0]);
+    assert_eq!(a[1], b[1]);
+}

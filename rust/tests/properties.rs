@@ -1,0 +1,277 @@
+//! Property-based tests (hand-rolled generator loops over the in-tree
+//! deterministic RNG — no external proptest offline) for the coordinator
+//! substrates: compressor class bounds, mask invariants, sampling
+//! invariants, prox optimality, ledger monotonicity.
+
+use fedeff::compress::comp::CompKK;
+use fedeff::compress::mix::MixKK;
+use fedeff::compress::quantize::Qsgd;
+use fedeff::compress::randk::RandK;
+use fedeff::compress::topk::TopK;
+use fedeff::compress::{Compressor, Identity};
+use fedeff::Rng;
+
+fn rand_vec(rng: &mut Rng, d: usize, scale: f32) -> Vec<f32> {
+    (0..d).map(|_| rng.f32_range(-scale, scale)).collect()
+}
+
+/// Property: for every compressor C in B(alpha) (after lambda* scaling),
+/// E||lambda C(x) - x||^2 <= (1 - alpha + tol) ||x||^2 on random inputs.
+#[test]
+fn prop_scaled_compressors_are_contractive() {
+    let mut rng = fedeff::rng(300);
+    for trial in 0..40 {
+        let d = 8 + rng.below(56);
+        let k = 1 + rng.below(d.min(8));
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(k)),
+            Box::new(RandK::unbiased(k)),
+            Box::new(RandK::scaled(k)),
+            Box::new(MixKK::new(k, (2 * k).min(d))),
+            Box::new(Qsgd::new(4)),
+            Box::new(Identity),
+        ];
+        let x = rand_vec(&mut rng, d, 2.0);
+        let nx2 = fedeff::vecmath::norm_sq(&x).max(1e-9);
+        for c in &comps {
+            let p = c.params(d);
+            let lambda = p.lambda_star();
+            let r = p.r(lambda);
+            assert!(r <= 1.0 + 1e-5, "{} r={r}", c.name());
+            // empirical contraction with the scaled compressor
+            let reps = 300;
+            let mut acc = 0.0f64;
+            let mut out = vec![0.0f32; d];
+            for _ in 0..reps {
+                c.compress(&x, &mut out, &mut rng);
+                fedeff::vecmath::scale(lambda, &mut out);
+                acc += fedeff::vecmath::dist_sq(&out, &x) as f64 / reps as f64;
+            }
+            let ratio = acc / nx2 as f64;
+            assert!(
+                ratio <= r as f64 * 1.25 + 0.05,
+                "trial {trial} {}: empirical {ratio} > bound {r}",
+                c.name()
+            );
+        }
+    }
+}
+
+/// Property: compressed output of sparsifiers has at most k nonzeros, and
+/// bit accounting is positive and bounded by the dense message.
+#[test]
+fn prop_sparsifier_support_and_bits() {
+    let mut rng = fedeff::rng(301);
+    for _ in 0..60 {
+        let d = 4 + rng.below(124);
+        let k = 1 + rng.below(d);
+        let x = rand_vec(&mut rng, d, 1.0);
+        let mut out = vec![0.0f32; d];
+        for c in [&TopK::new(k) as &dyn Compressor, &RandK::unbiased(k)] {
+            let bits = c.compress(&x, &mut out, &mut rng);
+            let nnz = out.iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= k, "{}: {nnz} > {k}", c.name());
+            assert!(bits > 0);
+        }
+    }
+}
+
+/// Property: select_mask keeps exactly the requested fraction per row and
+/// apply_mask never increases density.
+#[test]
+fn prop_mask_sparsity_exact() {
+    let mut rng = fedeff::rng(302);
+    for _ in 0..50 {
+        let o = 1 + rng.below(12);
+        let i = 2 + rng.below(40);
+        let sparsity = rng.f32_range(0.1, 0.9);
+        let scores: Vec<f32> = (0..o * i).map(|_| rng.f32_unit()).collect();
+        let mask =
+            fedeff::pruning::select_mask(&scores, o, i, sparsity, fedeff::pruning::Scope::PerRow);
+        let keep = (((1.0 - sparsity) * i as f32).round() as usize).min(i);
+        for r in 0..o {
+            let kept = mask[r * i..(r + 1) * i].iter().filter(|&&k| k).count();
+            assert_eq!(kept, keep, "row {r}: kept {kept} expected {keep}");
+        }
+        let mut w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        fedeff::pruning::apply_mask(&mut w, &mask);
+        let nnz = w.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= keep * o);
+    }
+}
+
+/// Property: every sampler yields cohorts within [0, n), nonempty, with
+/// inclusion frequencies matching p_i within statistical tolerance.
+#[test]
+fn prop_sampler_inclusion_matches_p() {
+    use fedeff::sampling::*;
+    let mut rng = fedeff::rng(303);
+    for trial in 0..8 {
+        let n = 6 + rng.below(18);
+        let b = 2 + rng.below(4.min(n - 1));
+        let samplers: Vec<Box<dyn CohortSampler>> = vec![
+            Box::new(FullSampling { n }),
+            Box::new(NiceSampling { n, tau: 1 + rng.below(n) }),
+            Box::new(BlockSampling::new(contiguous_blocks(n, b), None)),
+            Box::new(StratifiedSampling::new(contiguous_blocks(n, b))),
+        ];
+        for s in &samplers {
+            let trials = 3000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                let c = s.sample(&mut rng);
+                assert!(!c.is_empty(), "{}", s.name());
+                for i in c {
+                    assert!(i < n);
+                    counts[i] += 1;
+                }
+            }
+            for i in 0..n {
+                let freq = counts[i] as f64 / trials as f64;
+                let p = s.p(i);
+                assert!(
+                    (freq - p).abs() < 0.06 + 0.15 * p,
+                    "trial {trial} {} client {i}: freq {freq} vs p {p}",
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+/// Property: prox solvers converge to the closed-form prox on random
+/// quadratic cohorts; error decreases with more local rounds.
+#[test]
+fn prop_prox_solvers_approach_exact() {
+    use fedeff::oracle::quadratic::QuadraticOracle;
+    use fedeff::oracle::Oracle;
+    use fedeff::prox::*;
+    let mut rng = fedeff::rng(304);
+    for trial in 0..10 {
+        let n = 4 + rng.below(6);
+        let d = 3 + rng.below(10);
+        let q = QuadraticOracle::random(n, d, 0.4, 3.0, 2.0, &mut rng);
+        let gamma = rng.f32_range(0.2, 5.0);
+        let cohort: Vec<(usize, f32)> = (0..n).filter(|i| i % 2 == 0).map(|i| (i, 1.0)).collect();
+        let x = rand_vec(&mut rng, d, 1.5);
+        let exact = q.prox_cohort(&cohort, &x, gamma);
+        let lip: f32 = cohort.iter().map(|&(i, w)| w * q.smoothness(i)).sum();
+
+        for solver in [&LbfgsSolver::default() as &dyn ProxSolver, &CgSolver] {
+            let mut tmp = vec![0.0f32; d];
+            let mut obj = |y: &[f32], g: &mut [f32]| -> anyhow::Result<f32> {
+                g.fill(0.0);
+                let mut loss = 0.0;
+                for &(i, w) in &cohort {
+                    loss += w * q.loss_grad(i, y, &mut tmp)?;
+                    fedeff::vecmath::axpy(w, &tmp, g);
+                }
+                Ok(loss)
+            };
+            let y = solver.solve(&mut obj, &x, gamma, 60, &x, lip).unwrap();
+            let err = fedeff::vecmath::dist_sq(&y, &exact).sqrt();
+            let scale = fedeff::vecmath::norm(&exact).max(1.0);
+            assert!(err < 1e-2 * scale, "trial {trial} {}: err {err}", solver.name());
+        }
+    }
+}
+
+/// Property: DSnoT preserves per-row sparsity for random inits and never
+/// panics across shapes.
+#[test]
+fn prop_dsnot_preserves_sparsity() {
+    use fedeff::pruning::dsnot::*;
+    let mut rng = fedeff::rng(305);
+    for _ in 0..30 {
+        let o = 1 + rng.below(10);
+        let i = 4 + rng.below(30);
+        let mut w: Vec<f32> = (0..o * i).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let a_in: Vec<f32> = (0..i).map(|_| rng.f32_range(0.05, 3.0)).collect();
+        let a_out: Vec<f32> = (0..o).map(|_| rng.f32_range(0.05, 3.0)).collect();
+        let scores = fedeff::pruning::score(
+            fedeff::pruning::Method::Wanda,
+            &w,
+            o,
+            i,
+            &a_in,
+            &a_out,
+        );
+        let sparsity = rng.f32_range(0.2, 0.8);
+        let mut mask =
+            fedeff::pruning::select_mask(&scores, o, i, sparsity, fedeff::pruning::Scope::PerRow);
+        let before: Vec<usize> = (0..o)
+            .map(|r| mask[r * i..(r + 1) * i].iter().filter(|&&k| k).count())
+            .collect();
+        prune_and_grow_layer(
+            &mut w,
+            &mut mask,
+            o,
+            i,
+            &a_in,
+            &a_out,
+            &DsnotConfig { iters: 2, reg: 0.05, relative_grow: true, alpha: 0.5 },
+        );
+        let after: Vec<usize> = (0..o)
+            .map(|r| mask[r * i..(r + 1) * i].iter().filter(|&&k| k).count())
+            .collect();
+        assert_eq!(before, after, "per-row sparsity must be preserved");
+        // weights outside the mask are zero
+        for (j, &keep) in mask.iter().enumerate() {
+            if !keep {
+                assert_eq!(w[j], 0.0);
+            }
+        }
+    }
+}
+
+/// Property: EF-BV state update keeps h_i bounded and converges on random
+/// well-conditioned quadratics for random sparsifiers.
+#[test]
+fn prop_efbv_random_instances_converge() {
+    use fedeff::algorithms::efbv::EfBv;
+    use fedeff::algorithms::RunOptions;
+    use fedeff::oracle::quadratic::QuadraticOracle;
+    use fedeff::oracle::Oracle;
+    let mut rng = fedeff::rng(306);
+    for trial in 0..5 {
+        let n = 4 + rng.below(6);
+        let d = 6 + rng.below(10);
+        let k = 1 + rng.below(3);
+        let q = QuadraticOracle::random(n, d, 0.5, 2.0, 1.0, &mut rng);
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        let comp = TopK::new(k);
+        let alg = EfBv::ef21(&comp);
+        let opts = RunOptions {
+            rounds: 1500,
+            eval_every: 1500,
+            f_star: Some(fs),
+            seed: trial as u64,
+            ..Default::default()
+        };
+        let rec = alg.run(&q, &vec![1.0; d], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-2, "trial {trial} (n={n},d={d},k={k}): gap {gap}");
+    }
+}
+
+/// Property: the communication ledger is monotone in rounds for every
+/// algorithm's RunRecord.
+#[test]
+fn prop_ledger_monotone() {
+    use fedeff::algorithms::fedavg::FedAvg;
+    use fedeff::algorithms::RunOptions;
+    use fedeff::oracle::quadratic::QuadraticOracle;
+    use fedeff::sampling::NiceSampling;
+    let mut rng = fedeff::rng(307);
+    let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
+    let s = NiceSampling { n: 6, tau: 3 };
+    let alg = FedAvg::new(&s, 3, 0.1);
+    let opts = RunOptions { rounds: 50, eval_every: 5, ..Default::default() };
+    let rec = alg.run(&q, &vec![1.0; 5], &opts).unwrap();
+    for w in rec.rounds.windows(2) {
+        assert!(w[1].bits_up >= w[0].bits_up);
+        assert!(w[1].comm_cost >= w[0].comm_cost);
+        assert!(w[1].round > w[0].round);
+    }
+}
