@@ -1,19 +1,54 @@
 //! Benches of full algorithm rounds on the pure-Rust quadratic oracle
 //! (isolates the L3 algorithm cost from the PJRT compute cost).
 //! Run: `cargo bench --bench algorithms`
+//!
+//! `gd_seed_loop_*` vs `gd_driver_*` measures the coordinator `Driver`'s
+//! overhead against a hand-rolled round loop identical to the pre-driver
+//! implementation (acceptance: <= 5% on this workload).
 
 #[path = "harness.rs"]
 mod harness;
 
 use fedeff::algorithms::efbv::EfBv;
+use fedeff::algorithms::gd::Gd;
 use fedeff::algorithms::scafflix::Scafflix;
 use fedeff::algorithms::sppm::SppmAs;
 use fedeff::algorithms::RunOptions;
 use fedeff::compress::topk::TopK;
+use fedeff::coordinator::driver::Driver;
 use fedeff::oracle::quadratic::QuadraticOracle;
+use fedeff::oracle::Oracle;
 use fedeff::prox::LbfgsSolver;
 use fedeff::sampling::NiceSampling;
+use fedeff::vecmath as vm;
 use harness::{black_box, Bench};
+
+/// The seed repo's hand-rolled distributed-GD loop (pre-`Driver`),
+/// reproduced verbatim as the overhead baseline.
+fn gd_seed_loop(q: &QuadraticOracle, x0: &[f32], gamma: f32, opts: &RunOptions) -> Vec<f32> {
+    let d = q.dim();
+    let n = q.n_clients();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut gi = vec![0.0f32; d];
+    let mut losses = Vec::new();
+    for t in 0..opts.rounds {
+        g.fill(0.0);
+        let mut loss = 0.0f32;
+        for i in 0..n {
+            loss += q.loss_grad(i, &x, &mut gi).unwrap();
+            vm::axpy(1.0 / n as f32, &gi, &mut g);
+        }
+        if t % opts.eval_every == 0 {
+            losses.push(loss / n as f32);
+        }
+        vm::axpy(-gamma, &g, &mut x);
+    }
+    let mut fin = vec![0.0f32; d];
+    let l = q.full_loss_grad(&x, &mut fin).unwrap();
+    losses.push(l);
+    losses
+}
 
 fn main() {
     let b = Bench::new(10);
@@ -21,28 +56,38 @@ fn main() {
     let q = QuadraticOracle::random(16, 256, 0.5, 3.0, 1.0, &mut rng);
     let x0 = vec![1.0f32; 256];
     let opts = RunOptions { rounds: 20, eval_every: 1000, ..Default::default() };
+    let drv = Driver::new();
+
+    // driver overhead: identical math, hand-rolled loop vs Driver
+    b.run("gd_seed_loop_20rounds_n16_d256", || {
+        black_box(gd_seed_loop(black_box(&q), black_box(&x0), 0.2, &opts));
+    });
+    {
+        let mut alg = Gd::plain(16, 256, 0.2);
+        b.run("gd_driver_20rounds_n16_d256", || {
+            black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
+        });
+    }
 
     {
-        let comp = TopK::new(16);
-        let alg = EfBv::new(&comp);
+        let mut alg = EfBv::new(Box::new(TopK::new(16)));
         b.run("efbv_topk_20rounds_n16_d256", || {
-            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+            black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
 
     {
-        let alg = Scafflix::i_scaffnew(&q, 0.3);
+        let mut alg = Scafflix::i_scaffnew(&q, 0.3);
         b.run("scafflix_20rounds_n16_d256", || {
-            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+            black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
 
     {
-        let sampler = NiceSampling { n: 16, tau: 4 };
-        let solver = LbfgsSolver::default();
-        let alg = SppmAs::new(&sampler, &solver, 10.0, 8);
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 10.0, 8);
+        let drv_s = Driver::new().with_sampler(Box::new(NiceSampling { n: 16, tau: 4 }));
         b.run("sppm_bfgs_k8_20rounds", || {
-            black_box(alg.run(black_box(&q), black_box(&x0), &opts).unwrap());
+            black_box(drv_s.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
 }

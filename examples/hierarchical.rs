@@ -2,7 +2,10 @@
 //!
 //! Demonstrates the Cohort-Squeeze headline: with cheap intra-hub local
 //! communication (c1 << c2), squeezing K local rounds out of each cohort
-//! slashes the total communication cost to a target accuracy.
+//! slashes the total communication cost to a target accuracy. Both
+//! methods run through the same coordinator `Driver` — the hierarchy is a
+//! driver topology, so *any* algorithm can be costed over it (here
+//! FedAvg/LocalGD rides the same 2-level topology as SPPM-AS).
 //!
 //! ```bash
 //! cargo run --release --example hierarchical
@@ -12,6 +15,7 @@ use anyhow::Result;
 use fedeff::algorithms::fedavg::FedAvg;
 use fedeff::algorithms::sppm::SppmAs;
 use fedeff::algorithms::RunOptions;
+use fedeff::coordinator::driver::{Driver, Topology};
 use fedeff::coordinator::hierarchy::Hierarchy;
 use fedeff::data::synth::Heterogeneity;
 use fedeff::oracle::{solve_reference, Oracle};
@@ -39,13 +43,12 @@ fn main() -> Result<()> {
     println!("topology: {} clients, {} hubs, c1={}, c2={}", n, hier.hubs.len(), hier.c1, hier.c2);
 
     // SPPM-AS with stratified sampling + BFGS prox solver
-    let solver = LbfgsSolver::default();
-    let sampler = StratifiedSampling::new(contiguous_blocks(n, 5));
     let mut best: Option<(usize, f64)> = None;
     for k in [1usize, 2, 4, 8, 12, 16] {
-        let mut alg = SppmAs::new(&sampler, &solver, 100.0, k);
-        alg.c1 = hier.c1;
-        alg.c2 = hier.c2;
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 100.0, k);
+        let drv = Driver::new()
+            .with_sampler(Box::new(StratifiedSampling::new(contiguous_blocks(n, 5))))
+            .with_topology(Topology::Hier(hier.clone()));
         let opts = RunOptions {
             rounds: 200,
             eval_every: 1,
@@ -53,7 +56,7 @@ fn main() -> Result<()> {
             seed: 2,
             ..Default::default()
         };
-        let rec = alg.run(oracle.as_ref(), &x0, &opts)?;
+        let rec = drv.run(&mut alg, oracle.as_ref(), &x0, &opts)?;
         if let Some(cost) = rec.cost_to_gap(eps) {
             println!("SPPM-AS K={k:>2}: cost to eps = {cost:.2}");
             if best.map_or(true, |(_, b)| cost < b) {
@@ -64,12 +67,13 @@ fn main() -> Result<()> {
         }
     }
 
-    // LocalGD baseline
-    let fa_sampler = NiceSampling { n, tau: 5 };
+    // LocalGD baseline over the *same* hierarchy (cost c1 + c2 per round)
     let mut lgd_best: Option<f64> = None;
     for steps in [1usize, 2, 4, 8] {
-        let mut alg = FedAvg::new(&fa_sampler, steps, 0.5 / oracle.smoothness(0));
-        alg.cost_per_round = hier.localgd_round_cost();
+        let mut alg = FedAvg::new(steps, 0.5 / oracle.smoothness(0));
+        let drv = Driver::new()
+            .with_sampler(Box::new(NiceSampling { n, tau: 5 }))
+            .with_topology(Topology::Hier(hier.clone()));
         let opts = RunOptions {
             rounds: 2000,
             eval_every: 1,
@@ -77,7 +81,7 @@ fn main() -> Result<()> {
             seed: 2,
             ..Default::default()
         };
-        let rec = alg.run(oracle.as_ref(), &x0, &opts)?;
+        let rec = drv.run(&mut alg, oracle.as_ref(), &x0, &opts)?;
         if let Some(cost) = rec.cost_to_gap(eps) {
             println!("LocalGD steps={steps}: cost to eps = {cost:.2}");
             lgd_best = Some(lgd_best.map_or(cost, |b: f64| b.min(cost)));

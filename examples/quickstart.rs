@@ -6,13 +6,15 @@
 //! ```
 //!
 //! Builds a 10-client non-iid federated dataset, runs GD and Scafflix on
-//! the personalized FLIX objective, and prints rounds-to-accuracy for
-//! both — the double-acceleration effect of Ch. 3 in miniature.
+//! the personalized FLIX objective through the coordinator `Driver`, and
+//! prints rounds-to-accuracy for both — the double-acceleration effect of
+//! Ch. 3 in miniature.
 
 use anyhow::Result;
-use fedeff::algorithms::gd::FlixGd;
+use fedeff::algorithms::gd::{FlixGd, Gd};
 use fedeff::algorithms::scafflix::Scafflix;
 use fedeff::algorithms::RunOptions;
+use fedeff::coordinator::driver::Driver;
 use fedeff::data::synth::Heterogeneity;
 use fedeff::oracle::{solve_local, Oracle};
 
@@ -40,7 +42,7 @@ fn main() -> Result<()> {
     let flix = FlixGd { alphas: vec![alpha; 10], x_stars: x_stars.clone(), gamma: 0.3 };
     let (_, f_star) = flix.solve_reference(oracle.as_ref(), &vec![0.0; d], 8000)?;
 
-    // 4. Run GD vs Scafflix; compare communication rounds to 1e-4 gap.
+    // 4. Run GD vs Scafflix through one driver; compare comms to 1e-4 gap.
     let opts = RunOptions {
         rounds: 3000,
         eval_every: 25,
@@ -49,9 +51,11 @@ fn main() -> Result<()> {
         ..Default::default()
     };
     let x0 = vec![0.5f32; d];
-    let rec_gd = flix.run(oracle.as_ref(), &x0, &opts)?;
-    let scafflix = Scafflix::standard(oracle.as_ref(), alpha, 0.15, x_stars);
-    let rec_sfx = scafflix.run(oracle.as_ref(), &x0, &opts)?;
+    let driver = Driver::new();
+    let mut gd = Gd::new(flix);
+    let rec_gd = driver.run(&mut gd, oracle.as_ref(), &x0, &opts)?;
+    let mut scafflix = Scafflix::standard(oracle.as_ref(), alpha, 0.15, x_stars);
+    let rec_sfx = driver.run(&mut scafflix, oracle.as_ref(), &x0, &opts)?;
 
     let eps = 1e-4;
     for (name, rec) in [("GD", &rec_gd), ("Scafflix", &rec_sfx)] {

@@ -1,0 +1,374 @@
+//! The unified round API every algorithm implements.
+//!
+//! An [`FlAlgorithm`] owns only the *math* of one federated round,
+//! decomposed into `init / client_step / server_step / eval_point`. The
+//! [`crate::coordinator::driver::Driver`] owns everything around the math:
+//! the round loop, cohort sampling, the communication ledger, optional
+//! up/down link [`Compressor`]s, topology costing and metric recording.
+//!
+//! Communication accounting: algorithms never keep their own bit counters.
+//! Every message goes through the [`RoundCtx`] link helpers:
+//!
+//! * [`RoundCtx::up_compress`] / [`RoundCtx::down_compress`] apply the
+//!   driver's link compressor (dense copy when none is configured) and
+//!   return the on-wire bits of that payload;
+//! * [`RoundCtx::charge_up`] / [`RoundCtx::charge_down`] book one node's
+//!   payload into the round's ledger. The driver records *per-node*
+//!   (average over senders / receivers) cumulative bits, matching the
+//!   paper's "bits per node" x-axes.
+//!
+//! Cost accounting: [`RoundCtx::set_local_rounds`] declares how many local
+//! communication rounds the global round used (SPPM-AS "cohort squeeze");
+//! [`RoundCtx::no_comm`] marks a round with no communication at all
+//! (Scafflix local rounds). The driver turns this into abstract cost via
+//! its [`crate::coordinator::driver::Topology`]: a communicating round
+//! costs `c2 + c1 * local_rounds` (flat: `c1 = 1`, `c2 = 0`).
+//!
+//! Link-compressor support is per-algorithm and honest: FedAvg, FedProx
+//! and Scafflix compress model *deltas* against the last server anchor
+//! (FedCOM-style) on both links; GD and Scaffold compress uplink messages
+//! directly (DCGD-style) and broadcast dense; EF-BV owns its compressor
+//! (it determines the stepsize) and ignores the link slots; SPPM-AS sends
+//! dense by construction.
+
+use anyhow::Result;
+
+use super::RunOptions;
+use crate::compress::Compressor;
+use crate::oracle::Oracle;
+use crate::sampling::CohortSampler;
+use crate::Rng;
+
+/// Bits of a dense f32 message in dimension `d`.
+pub fn dense_bits(d: usize) -> u64 {
+    32 * d as u64
+}
+
+/// A precomputed client gradient handed to [`FlAlgorithm::client_step`]
+/// when the algorithm advertises a shared [`FlAlgorithm::grad_point`]:
+/// grad f_client at that point. Enables the driver's batched-HLO and
+/// parallel dispatch fast paths.
+pub struct ClientMsg<'a> {
+    pub grad: &'a [f32],
+}
+
+/// Per-round context the driver hands to the algorithm: deterministic RNG
+/// stream, sampler access (for inclusion probabilities), link compressors
+/// and the round's communication accounting.
+pub struct RoundCtx<'a> {
+    /// Round index t.
+    pub round: usize,
+    /// The run's base seed (`RunOptions::seed`) for algorithms that derive
+    /// per-round compressor streams (EF-BV shared-randomness groups).
+    pub seed: u64,
+    /// Number of clients participating this round.
+    pub cohort_size: usize,
+    /// The run's main RNG stream (cohort sampling has already consumed its
+    /// draws for this round; algorithms draw next, in client order).
+    pub rng: &'a mut Rng,
+    /// The driver's sampler, when one is configured (inclusion
+    /// probabilities for reweighted cohort objectives).
+    pub sampler: Option<&'a dyn CohortSampler>,
+    pub(crate) up: Option<&'a dyn Compressor>,
+    pub(crate) down: Option<&'a dyn Compressor>,
+    pub(crate) link_rng: Rng,
+    pub(crate) up_bits: u64,
+    pub(crate) up_nodes: u64,
+    pub(crate) down_bits: u64,
+    pub(crate) down_nodes: u64,
+    pub(crate) local_rounds: usize,
+    pub(crate) communicated: bool,
+}
+
+impl<'a> RoundCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        round: usize,
+        seed: u64,
+        cohort_size: usize,
+        rng: &'a mut Rng,
+        sampler: Option<&'a dyn CohortSampler>,
+        up: Option<&'a dyn Compressor>,
+        down: Option<&'a dyn Compressor>,
+    ) -> Self {
+        // deterministic per-round stream for the link compressors; never
+        // touches the main rng (bit-for-bit equivalence with the
+        // compressor-free path)
+        let link_rng = Rng::new(seed ^ 0xC2B2AE3D27D4EB4Fu64.wrapping_mul(round as u64 + 1));
+        Self {
+            round,
+            seed,
+            cohort_size,
+            rng,
+            sampler,
+            up,
+            down,
+            link_rng,
+            up_bits: 0,
+            up_nodes: 0,
+            down_bits: 0,
+            down_nodes: 0,
+            local_rounds: 1,
+            communicated: true,
+        }
+    }
+
+    /// Is an uplink compressor configured on the driver?
+    pub fn has_up(&self) -> bool {
+        self.up.is_some()
+    }
+
+    /// Is a downlink compressor configured on the driver?
+    pub fn has_down(&self) -> bool {
+        self.down.is_some()
+    }
+
+    /// Apply the uplink compressor to `x` (dense copy when none), writing
+    /// the decompressed received value into `out`; returns on-wire bits.
+    /// Does *not* book the bits — combine the payloads of one sender and
+    /// book them with [`RoundCtx::charge_up`].
+    pub fn up_compress(&mut self, x: &[f32], out: &mut [f32]) -> u64 {
+        match self.up {
+            Some(c) => c.compress(x, out, &mut self.link_rng),
+            None => {
+                out.copy_from_slice(x);
+                dense_bits(x.len())
+            }
+        }
+    }
+
+    /// Apply the downlink compressor to `x` (dense copy when none); see
+    /// [`RoundCtx::up_compress`].
+    pub fn down_compress(&mut self, x: &[f32], out: &mut [f32]) -> u64 {
+        match self.down {
+            Some(c) => c.compress(x, out, &mut self.link_rng),
+            None => {
+                out.copy_from_slice(x);
+                dense_bits(x.len())
+            }
+        }
+    }
+
+    /// FedCOM-style model uplink: when an up-compressor is configured,
+    /// send `local` as a compressed delta against `anchor` (a model both
+    /// sides know), write the server-received model into `recv` and
+    /// return `true`; on the dense path just book dense bits and return
+    /// `false` — the received model is `local` itself, bit-exact. Either
+    /// way one sender's payload is booked.
+    pub fn uplink_delta(
+        &mut self,
+        local: &[f32],
+        anchor: &[f32],
+        delta: &mut [f32],
+        recv: &mut [f32],
+    ) -> bool {
+        match self.up {
+            Some(c) => {
+                crate::vecmath::sub(local, anchor, delta);
+                let bits = c.compress(delta, recv, &mut self.link_rng);
+                self.charge_up(bits);
+                crate::vecmath::axpy(1.0, anchor, recv);
+                true
+            }
+            None => {
+                self.charge_up(dense_bits(local.len()));
+                false
+            }
+        }
+    }
+
+    /// FedCOM-style model broadcast: with a down-compressor, send
+    /// `target` as a compressed delta against the clients' current model
+    /// `x` and apply the received delta to `x` in place; dense otherwise
+    /// (straight copy). Books the broadcast either way.
+    pub fn broadcast_delta(
+        &mut self,
+        target: &[f32],
+        x: &mut [f32],
+        delta: &mut [f32],
+        buf: &mut [f32],
+    ) {
+        match self.down {
+            Some(c) => {
+                crate::vecmath::sub(target, x, delta);
+                let bits = c.compress(delta, buf, &mut self.link_rng);
+                self.charge_down(bits);
+                crate::vecmath::axpy(1.0, buf, x);
+            }
+            None => {
+                self.charge_down(dense_bits(x.len()));
+                x.copy_from_slice(target);
+            }
+        }
+    }
+
+    /// Book one sender's uplink payload of `bits`.
+    pub fn charge_up(&mut self, bits: u64) {
+        self.up_bits += bits;
+        self.up_nodes += 1;
+    }
+
+    /// Book one receiver's downlink payload of `bits` (a broadcast is one
+    /// charge: every client receives the same payload).
+    pub fn charge_down(&mut self, bits: u64) {
+        self.down_bits += bits;
+        self.down_nodes += 1;
+    }
+
+    /// Declare that this global round used `k` local communication rounds
+    /// (cost `c2 + c1 * k` under the driver's topology). Default: 1.
+    pub fn set_local_rounds(&mut self, k: usize) {
+        self.local_rounds = k;
+    }
+
+    /// Declare that no communication happened this round (no cost charged).
+    pub fn no_comm(&mut self) {
+        self.communicated = false;
+    }
+}
+
+/// One federated algorithm, decomposed so a single driver loop can run all
+/// of them. The driver calls, per run:
+///
+/// 1. [`FlAlgorithm::init`] once;
+/// 2. per round: cohort sampling, [`FlAlgorithm::filter_cohort`], then
+///    [`FlAlgorithm::client_step`] for every cohort client (with a
+///    precomputed gradient when [`FlAlgorithm::grad_point`] is `Some`),
+///    then [`FlAlgorithm::server_step`];
+/// 3. at eval rounds: [`FlAlgorithm::eval_point`] +
+///    [`FlAlgorithm::eval_loss`].
+pub trait FlAlgorithm {
+    /// Display label for the [`crate::metrics::RunRecord`].
+    fn label(&self) -> String;
+
+    /// Reset all run state for a fresh run from `x0`.
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], opts: &RunOptions) -> Result<()>;
+
+    /// Whether the algorithm tolerates partial cohorts from a driver
+    /// sampler. Algorithms that keep per-client control state for all n
+    /// clients and aggregate over everyone each round (Scafflix, EF-BV)
+    /// return false; the driver refuses to pair them with a sampler
+    /// instead of silently corrupting their updates.
+    fn supports_cohort_sampling(&self) -> bool {
+        true
+    }
+
+    /// Adjust the sampled cohort before the round (e.g. dropout
+    /// injection). Draws, if any, come from `rng` right after the
+    /// sampler's own draws.
+    fn filter_cohort(&mut self, _cohort: &mut Vec<usize>, _rng: &mut Rng) {}
+
+    /// When the algorithm consumes plain per-client gradients at one
+    /// shared point, expose that point: the driver will evaluate the
+    /// cohort there (batched HLO dispatch, or thread-parallel under
+    /// [`crate::coordinator::driver::Driver::run_parallel`]) and pass the
+    /// result to [`FlAlgorithm::client_step`].
+    fn grad_point(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// One client's contribution to the round.
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()>;
+
+    /// Server aggregation + model update after all client steps. Cohort
+    /// algorithms that cannot split per client (SPPM-AS prox solves) do
+    /// all their work here.
+    fn server_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()>;
+
+    /// The point loss/gap curves are evaluated at (e.g. the server model,
+    /// or the average of client iterates for Scafflix).
+    fn eval_point(&self) -> Vec<f32>;
+
+    /// Objective value and squared gradient norm at `x`. Default: the ERM
+    /// objective via [`Oracle::full_loss_grad`]; personalized algorithms
+    /// override with their own objective (FLIX).
+    fn eval_loss(&self, oracle: &dyn Oracle, x: &[f32]) -> Result<(f32, Option<f32>)> {
+        let mut g = vec![0.0f32; oracle.dim()];
+        let loss = oracle.full_loss_grad(x, &mut g)?;
+        Ok((loss, Some(crate::vecmath::norm_sq(&g))))
+    }
+
+    /// Prefer `||x - x*||^2` over `f(x) - f*` for the gap column when both
+    /// references are available (SPPM-AS plots distances).
+    fn prefers_dist_gap(&self) -> bool {
+        false
+    }
+}
+
+/// Names the [`build_algorithm`] registry accepts, in display order.
+/// `ef21` and `diana` are presets of the `efbv` family.
+pub fn registry() -> &'static [&'static str] {
+    &["gd", "efbv", "ef21", "diana", "fedavg", "scaffold", "fedprox", "scafflix", "sppm"]
+}
+
+/// String-keyed factory: build a boxed algorithm from a config spec and an
+/// oracle. This is the single dispatch point for `fedeff run <config>` and
+/// `fedeff serve` — no per-algorithm match arms in the CLI.
+pub fn build_algorithm(
+    spec: &crate::config::AlgorithmSpec,
+    oracle: &dyn Oracle,
+) -> Result<Box<dyn FlAlgorithm>> {
+    let n = oracle.n_clients();
+    let d = oracle.dim();
+    Ok(match spec.kind.as_str() {
+        "gd" => Box::new(super::gd::Gd::plain(
+            n,
+            d,
+            spec.gamma.unwrap_or(0.5) / oracle.smoothness(0),
+        )),
+        "efbv" | "ef21" | "diana" => {
+            let comp = crate::config::build_compressor(spec, d)?;
+            let mut alg = super::efbv::EfBv::new(comp);
+            alg.variant = match spec.kind.as_str() {
+                "ef21" => super::efbv::Variant::Ef21,
+                "diana" => super::efbv::Variant::Diana,
+                _ => super::efbv::Variant::EfBv,
+            };
+            Box::new(alg)
+        }
+        "fedavg" => Box::new(super::fedavg::FedAvg::new(
+            spec.local_steps.unwrap_or(5),
+            spec.lr.unwrap_or(0.1),
+        )),
+        "scaffold" => Box::new(super::scaffold::Scaffold::new(
+            spec.local_steps.unwrap_or(5),
+            spec.lr.unwrap_or(0.05),
+        )),
+        "fedprox" => Box::new(super::scaffold::FedProx::new(
+            spec.local_steps.unwrap_or(5),
+            spec.lr.unwrap_or(0.05),
+            spec.mu_prox.unwrap_or(1.0),
+        )),
+        "scafflix" => {
+            let x_stars: Vec<Vec<f32>> = (0..n)
+                .map(|i| crate::oracle::solve_local(oracle, i, &vec![0.0f32; d], 0.5, 2000, 1e-6))
+                .collect::<Result<_>>()?;
+            Box::new(super::scafflix::Scafflix::standard(
+                oracle,
+                spec.alpha.unwrap_or(0.5),
+                spec.p.unwrap_or(0.2),
+                x_stars,
+            ))
+        }
+        "sppm" => Box::new(super::sppm::SppmAs::new(
+            crate::config::build_solver(spec)?,
+            spec.gamma.unwrap_or(100.0),
+            spec.k_local.unwrap_or(5),
+        )),
+        other => anyhow::bail!(
+            "unknown algorithm kind {other} (known: {})",
+            registry().join(", ")
+        ),
+    })
+}

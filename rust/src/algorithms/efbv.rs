@@ -14,12 +14,17 @@
 //!   r    = (1 - lambda + lambda eta)^2 + lambda^2 omega
 //!   r_av = (1 - nu + nu eta)^2 + nu^2 omega_ran
 //!   s*   = sqrt((1 + r) / (2 r)) - 1.
+//!
+//! EF-BV *owns* its compressor (the (eta, omega) parameters set the
+//! stepsize), so the driver's link-compressor slots are unused; the
+//! algorithm books its compressed uplink bits and the dense model
+//! broadcast on the downlink through the [`RoundCtx`] ledger.
 
 use anyhow::Result;
 
-use super::{record_eval, RunOptions};
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::RunOptions;
 use crate::compress::Compressor;
-use crate::metrics::RunRecord;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -34,27 +39,57 @@ pub enum Variant {
     Diana,
 }
 
-pub struct EfBv<'a> {
-    pub compressor: &'a dyn Compressor,
+pub struct EfBv {
+    pub compressor: Box<dyn Compressor>,
     pub variant: Variant,
     /// Support-overlap group size xi for shared compressor randomness
     /// (Fig. 2.2): clients within a group of xi share the per-round seed.
     pub xi: usize,
     /// Multiplier on the theoretical stepsize (1.0 = theory).
     pub gamma_mult: f32,
+    // run state
+    x: Vec<f32>,
+    h_i: Vec<Vec<f32>>,
+    h: Vec<f32>,
+    g_est: Vec<f32>,
+    resid: Vec<f32>,
+    di: Vec<f32>,
+    dbar: Vec<f32>,
+    lambda: f32,
+    nu: f32,
+    gamma: f32,
 }
 
-impl<'a> EfBv<'a> {
-    pub fn new(compressor: &'a dyn Compressor) -> Self {
-        Self { compressor, variant: Variant::EfBv, xi: 1, gamma_mult: 1.0 }
+impl EfBv {
+    pub fn new(compressor: Box<dyn Compressor>) -> Self {
+        Self {
+            compressor,
+            variant: Variant::EfBv,
+            xi: 1,
+            gamma_mult: 1.0,
+            x: Vec::new(),
+            h_i: Vec::new(),
+            h: Vec::new(),
+            g_est: Vec::new(),
+            resid: Vec::new(),
+            di: Vec::new(),
+            dbar: Vec::new(),
+            lambda: 0.0,
+            nu: 0.0,
+            gamma: 0.0,
+        }
     }
 
-    pub fn ef21(compressor: &'a dyn Compressor) -> Self {
-        Self { compressor, variant: Variant::Ef21, xi: 1, gamma_mult: 1.0 }
+    pub fn ef21(compressor: Box<dyn Compressor>) -> Self {
+        let mut s = Self::new(compressor);
+        s.variant = Variant::Ef21;
+        s
     }
 
-    pub fn diana(compressor: &'a dyn Compressor) -> Self {
-        Self { compressor, variant: Variant::Diana, xi: 1, gamma_mult: 1.0 }
+    pub fn diana(compressor: Box<dyn Compressor>) -> Self {
+        let mut s = Self::new(compressor);
+        s.variant = Variant::Diana;
+        s
     }
 
     /// (lambda, nu, r, r_av) for dimension d and n workers.
@@ -92,13 +127,20 @@ impl<'a> EfBv<'a> {
         };
         format!("{v}[{},xi={}]", self.compressor.name(), self.xi)
     }
+}
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
+impl FlAlgorithm for EfBv {
+    fn label(&self) -> String {
+        EfBv::label(self)
+    }
+
+    fn supports_cohort_sampling(&self) -> bool {
+        // h = mean(h_i) over all n clients is a state invariant; partial
+        // cohorts would break it
+        false
+    }
+
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
         let d = oracle.dim();
         let n = oracle.n_clients();
         let (lambda, nu, _, _) = self.scalings(d, n);
@@ -107,51 +149,69 @@ impl<'a> EfBv<'a> {
             (s / n as f32).sqrt()
         };
         // L <= L~; using L~ as the global smoothness proxy is safe.
-        let gamma = self.gamma(d, n, l_tilde, l_tilde);
+        self.lambda = lambda;
+        self.nu = nu;
+        self.gamma = self.gamma(d, n, l_tilde, l_tilde);
+        self.x = x0.to_vec();
+        self.h_i = vec![vec![0.0f32; d]; n];
+        self.h = vec![0.0f32; d];
+        self.g_est = vec![0.0f32; d];
+        self.resid = vec![0.0f32; d];
+        self.di = vec![0.0f32; d];
+        self.dbar = vec![0.0f32; d];
+        Ok(())
+    }
 
-        let mut x = x0.to_vec();
-        let mut h_i = vec![vec![0.0f32; d]; n];
-        let mut h = vec![0.0f32; d];
-        let mut g_est = vec![0.0f32; d];
-        let mut grad = vec![0.0f32; d];
-        let mut resid = vec![0.0f32; d];
-        let mut di = vec![0.0f32; d];
-        let mut dbar = vec![0.0f32; d];
-        let mut bits_up: u64 = 0;
-        let mut rec = RunRecord::new(self.label());
+    fn grad_point(&self) -> Option<&[f32]> {
+        Some(&self.x)
+    }
 
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                record_eval(oracle, &x, t, bits_up / n as u64, 0, t as f64, opts, &mut rec)?;
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        match pre {
+            Some(msg) => vm::sub(msg.grad, &self.h_i[client], &mut self.resid),
+            None => {
+                oracle.loss_grad(client, &self.x, &mut self.g_est)?;
+                vm::sub(&self.g_est, &self.h_i[client], &mut self.resid);
             }
-            dbar.fill(0.0);
-            // one-dispatch fast path when the oracle supports it (§Perf L2)
-            let batched = oracle.all_loss_grads(&x)?;
-            for i in 0..n {
-                match &batched {
-                    Some((_, grads)) => grad.copy_from_slice(&grads[i * d..(i + 1) * d]),
-                    None => {
-                        oracle.loss_grad(i, &x, &mut grad)?;
-                    }
-                }
-                vm::sub(&grad, &h_i[i], &mut resid);
-                // shared randomness within groups of xi: same (round, group) seed
-                let group = i / self.xi.max(1);
-                let mut crng = crate::Rng::new(
-                    opts.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(t as u64 + 1) ^ ((group as u64) << 32),
-                );
-                bits_up += self.compressor.compress(&resid, &mut di, &mut crng);
-                vm::axpy(lambda, &di, &mut h_i[i]);
-                vm::acc_mean(&di, n as f32, &mut dbar);
-            }
-            // g = h + nu * dbar ; h += lambda * dbar ; x -= gamma g
-            g_est.copy_from_slice(&h);
-            vm::axpy(nu, &dbar, &mut g_est);
-            vm::axpy(lambda, &dbar, &mut h);
-            vm::axpy(-gamma, &g_est, &mut x);
         }
-        record_eval(oracle, &x, opts.rounds, bits_up / n as u64, 0, opts.rounds as f64, opts, &mut rec)?;
-        Ok(rec)
+        // shared randomness within groups of xi: same (round, group) seed
+        let group = client / self.xi.max(1);
+        let mut crng = crate::Rng::new(
+            ctx.seed
+                ^ 0x9E3779B97F4A7C15u64.wrapping_mul(ctx.round as u64 + 1)
+                ^ ((group as u64) << 32),
+        );
+        let bits = self.compressor.compress(&self.resid, &mut self.di, &mut crng);
+        ctx.charge_up(bits);
+        vm::axpy(self.lambda, &self.di, &mut self.h_i[client]);
+        vm::acc_mean(&self.di, ctx.cohort_size as f32, &mut self.dbar);
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // g = h + nu * dbar ; h += lambda * dbar ; x -= gamma g
+        self.g_est.copy_from_slice(&self.h);
+        vm::axpy(self.nu, &self.dbar, &mut self.g_est);
+        vm::axpy(self.lambda, &self.dbar, &mut self.h);
+        vm::axpy(-self.gamma, &self.g_est, &mut self.x);
+        self.dbar.fill(0.0);
+        ctx.charge_down(dense_bits(self.x.len()));
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
     }
 }
 
@@ -160,6 +220,7 @@ mod tests {
     use super::*;
     use crate::compress::randk::RandK;
     use crate::compress::topk::TopK;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::oracle::Oracle as _;
 
@@ -171,13 +232,16 @@ mod tests {
         (q, fs, xs)
     }
 
+    fn run(alg: &mut EfBv, q: &QuadraticOracle, x0: &[f32], opts: &RunOptions) -> crate::metrics::RunRecord {
+        Driver::new().run(alg, q, x0, opts).unwrap()
+    }
+
     #[test]
     fn ef21_with_topk_converges() {
         let (q, fs, _) = problem();
-        let c = TopK::new(3);
-        let alg = EfBv::ef21(&c);
+        let mut alg = EfBv::ef21(Box::new(TopK::new(3)));
         let opts = RunOptions { rounds: 600, eval_every: 100, f_star: Some(fs), ..Default::default() };
-        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        let rec = run(&mut alg, &q, &vec![1.0; 10], &opts);
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-3, "gap {gap}");
     }
@@ -185,10 +249,9 @@ mod tests {
     #[test]
     fn diana_with_randk_converges() {
         let (q, fs, _) = problem();
-        let c = RandK::unbiased(3);
-        let alg = EfBv::diana(&c);
+        let mut alg = EfBv::diana(Box::new(RandK::unbiased(3)));
         let opts = RunOptions { rounds: 800, eval_every: 100, f_star: Some(fs), ..Default::default() };
-        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        let rec = run(&mut alg, &q, &vec![1.0; 10], &opts);
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-2, "gap {gap}");
     }
@@ -196,9 +259,8 @@ mod tests {
     #[test]
     fn efbv_stepsize_at_least_ef21() {
         // omega_ran <= omega => r_av <= r => gamma_EFBV >= gamma_EF21
-        let c = RandK::unbiased(2);
-        let efbv = EfBv::new(&c);
-        let ef21 = EfBv::ef21(&c);
+        let efbv = EfBv::new(Box::new(RandK::unbiased(2)));
+        let ef21 = EfBv::ef21(Box::new(RandK::unbiased(2)));
         let g_bv = efbv.gamma(16, 8, 1.0, 1.0);
         let g_21 = ef21.gamma(16, 8, 1.0, 1.0);
         assert!(g_bv >= g_21, "efbv {g_bv} < ef21 {g_21}");
@@ -207,10 +269,9 @@ mod tests {
     #[test]
     fn efbv_beats_ef21_in_bits_to_accuracy() {
         let (q, fs, _) = problem();
-        let c = RandK::unbiased(2);
         let opts = RunOptions { rounds: 1200, eval_every: 50, f_star: Some(fs), ..Default::default() };
-        let rec_bv = EfBv::new(&c).run(&q, &vec![1.0; 10], &opts).unwrap();
-        let rec_21 = EfBv::ef21(&c).run(&q, &vec![1.0; 10], &opts).unwrap();
+        let rec_bv = run(&mut EfBv::new(Box::new(RandK::unbiased(2))), &q, &vec![1.0; 10], &opts);
+        let rec_21 = run(&mut EfBv::ef21(Box::new(RandK::unbiased(2))), &q, &vec![1.0; 10], &opts);
         let eps = 1e-3;
         let r_bv = rec_bv.rounds_to_gap(eps);
         let r_21 = rec_21.rounds_to_gap(eps);
@@ -224,10 +285,9 @@ mod tests {
     #[test]
     fn identity_compressor_recovers_gd_rate() {
         let (q, fs, _) = problem();
-        let c = crate::compress::Identity;
-        let alg = EfBv::new(&c);
+        let mut alg = EfBv::new(Box::new(crate::compress::Identity));
         let opts = RunOptions { rounds: 300, eval_every: 50, f_star: Some(fs), ..Default::default() };
-        let rec = alg.run(&q, &vec![1.0; 10], &opts).unwrap();
+        let rec = run(&mut alg, &q, &vec![1.0; 10], &opts);
         assert!(rec.last().unwrap().gap.unwrap() < 1e-4);
     }
 }

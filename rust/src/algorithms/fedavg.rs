@@ -1,38 +1,64 @@
 //! FedAvg / LocalGD / minibatch baselines (chapters 3 and 5).
 //!
-//! One global round: sample a cohort, broadcast x, each client runs
-//! `local_steps` of (stochastic) gradient descent, the server averages the
-//! results. `local_steps = 1` with full-batch gradients is MB-GD; > 1 is
+//! One global round: the driver samples a cohort, the server broadcasts x
+//! (downlink), each cohort client runs `local_steps` of (stochastic)
+//! gradient descent and uplinks its local model, the server averages.
+//! `local_steps = 1` with full-batch gradients is MB-GD; > 1 is
 //! MB-LocalGD / FedAvg.
+//!
+//! Link compression (FedCOM-style): with an uplink compressor clients
+//! send the compressed *delta* against the broadcast anchor; with a
+//! downlink compressor the server broadcasts the compressed model delta.
+//! With neither, the messages are dense and bit-for-bit identical to the
+//! classic loop.
 
 use anyhow::Result;
 
-use super::{record_eval, RunOptions};
-use crate::metrics::RunRecord;
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::RunOptions;
 use crate::oracle::Oracle;
-use crate::sampling::CohortSampler;
 use crate::vecmath as vm;
+use crate::Rng;
 
-pub struct FedAvg<'a> {
-    pub sampler: &'a dyn CohortSampler,
+pub struct FedAvg {
     pub local_steps: usize,
     pub lr: f32,
     pub stochastic: bool,
-    /// Cost per global round in the hierarchical ledger (c1 + c2).
-    pub cost_per_round: f64,
     /// Failure injection: probability a sampled client drops out of the
     /// round before reporting (cross-device reality, Sect. 5.2.1). The
     /// server aggregates over survivors; a fully-dropped cohort is a
     /// wasted round (cost charged, no update).
     pub dropout: f32,
+    // run state
+    x: Vec<f32>,
+    next: Vec<f32>,
+    xi: Vec<f32>,
+    g: Vec<f32>,
+    delta: Vec<f32>,
+    buf: Vec<f32>,
+    recv: Vec<f32>,
 }
 
-impl<'a> FedAvg<'a> {
-    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32) -> Self {
-        Self { sampler, local_steps, lr, stochastic: false, cost_per_round: 1.0, dropout: 0.0 }
+impl FedAvg {
+    pub fn new(local_steps: usize, lr: f32) -> Self {
+        Self {
+            local_steps,
+            lr,
+            stochastic: false,
+            dropout: 0.0,
+            x: Vec::new(),
+            next: Vec::new(),
+            xi: Vec::new(),
+            g: Vec::new(),
+            delta: Vec::new(),
+            buf: Vec::new(),
+            recv: Vec::new(),
+        }
     }
+}
 
-    pub fn label(&self) -> String {
+impl FlAlgorithm for FedAvg {
+    fn label(&self) -> String {
         if self.local_steps <= 1 {
             format!("MB-GD(lr={})", self.lr)
         } else {
@@ -40,67 +66,81 @@ impl<'a> FedAvg<'a> {
         }
     }
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
         let d = oracle.dim();
-        let mut rng = crate::rng(opts.seed);
-        let mut x = x0.to_vec();
-        let mut g = vec![0.0f32; d];
-        let mut xi = vec![0.0f32; d];
-        let mut next = vec![0.0f32; d];
-        let mut rec = RunRecord::new(self.label());
-        let dense_bits = 32 * d as u64;
-        let mut bits: u64 = 0;
+        self.x = x0.to_vec();
+        self.next = vec![0.0; d];
+        self.xi = vec![0.0; d];
+        self.g = vec![0.0; d];
+        self.delta = vec![0.0; d];
+        self.buf = vec![0.0; d];
+        self.recv = vec![0.0; d];
+        Ok(())
+    }
 
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                record_eval(oracle, &x, t, bits, bits, t as f64 * self.cost_per_round, opts, &mut rec)?;
-            }
-            let mut cohort = self.sampler.sample(&mut rng);
-            if self.dropout > 0.0 {
-                cohort.retain(|_| !rng.bernoulli(self.dropout));
-            }
-            if cohort.is_empty() {
-                bits += dense_bits;
-                continue; // wasted round: every sampled client dropped
-            }
-            next.fill(0.0);
-            for &i in &cohort {
-                xi.copy_from_slice(&x);
-                for _ in 0..self.local_steps {
-                    if self.stochastic {
-                        oracle.loss_grad_stoch(i, &xi, &mut g, &mut rng)?;
-                    } else {
-                        oracle.loss_grad(i, &xi, &mut g)?;
-                    }
-                    vm::axpy(-self.lr, &g, &mut xi);
-                }
-                vm::acc_mean(&xi, cohort.len() as f32, &mut next);
-            }
-            x.copy_from_slice(&next);
-            bits += dense_bits;
+    fn filter_cohort(&mut self, cohort: &mut Vec<usize>, rng: &mut Rng) {
+        if self.dropout > 0.0 {
+            cohort.retain(|_| !rng.bernoulli(self.dropout));
         }
-        record_eval(
-            oracle,
-            &x,
-            opts.rounds,
-            bits,
-            bits,
-            opts.rounds as f64 * self.cost_per_round,
-            opts,
-            &mut rec,
-        )?;
-        Ok(rec)
+    }
+
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        _pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let m = ctx.cohort_size as f32;
+        self.xi.copy_from_slice(&self.x);
+        for _ in 0..self.local_steps {
+            if self.stochastic {
+                oracle.loss_grad_stoch(client, &self.xi, &mut self.g, ctx.rng)?;
+            } else {
+                oracle.loss_grad(client, &self.xi, &mut self.g)?;
+            }
+            vm::axpy(-self.lr, &self.g, &mut self.xi);
+        }
+        if ctx.uplink_delta(&self.xi, &self.x, &mut self.delta, &mut self.recv) {
+            vm::acc_mean(&self.recv, m, &mut self.next);
+        } else {
+            vm::acc_mean(&self.xi, m, &mut self.next);
+        }
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        _oracle: &dyn Oracle,
+        cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        if cohort.is_empty() {
+            // wasted round: the broadcast (an unchanged model, i.e. a zero
+            // delta when the link is compressed) went out, nobody reported
+            if ctx.has_down() {
+                self.delta.fill(0.0);
+                let bits = ctx.down_compress(&self.delta, &mut self.buf);
+                ctx.charge_down(bits);
+            } else {
+                ctx.charge_down(dense_bits(self.x.len()));
+            }
+            return Ok(());
+        }
+        ctx.broadcast_delta(&self.next, &mut self.x, &mut self.delta, &mut self.buf);
+        self.next.fill(0.0);
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::oracle::Oracle as _;
     use crate::sampling::{FullSampling, NiceSampling};
@@ -109,12 +149,12 @@ mod tests {
     fn full_participation_gd_converges() {
         let mut rng = crate::rng(32);
         let q = QuadraticOracle::random(5, 6, 0.5, 2.0, 1.0, &mut rng);
-        let s = FullSampling { n: 5 };
-        let alg = FedAvg::new(&s, 1, 0.4);
+        let mut alg = FedAvg::new(1, 0.4);
         let xs = q.minimizer();
         let fs = q.full_loss(&xs).unwrap();
         let opts = RunOptions { rounds: 300, eval_every: 50, f_star: Some(fs), ..Default::default() };
-        let rec = alg.run(&q, &vec![1.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 5 }));
+        let rec = drv.run(&mut alg, &q, &vec![1.0; 6], &opts).unwrap();
         assert!(rec.last().unwrap().gap.unwrap() < 1e-4);
     }
 
@@ -123,8 +163,7 @@ mod tests {
         // LocalGD with heterogeneous clients converges to a neighborhood
         let mut rng = crate::rng(33);
         let q = QuadraticOracle::random(6, 6, 0.5, 2.0, 2.0, &mut rng);
-        let s = NiceSampling { n: 6, tau: 3 };
-        let alg = FedAvg::new(&s, 5, 0.1);
+        let mut alg = FedAvg::new(5, 0.1);
         let xs = q.minimizer();
         let opts = RunOptions {
             rounds: 400,
@@ -132,7 +171,8 @@ mod tests {
             x_star: Some(xs.clone()),
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![3.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }));
+        let rec = drv.run(&mut alg, &q, &vec![3.0; 6], &opts).unwrap();
         let d0 = rec.rounds.first().unwrap().gap.unwrap();
         let dend = rec.last().unwrap().gap.unwrap();
         assert!(dend < d0 * 0.05, "dist {dend} vs initial {d0}");
@@ -142,14 +182,13 @@ mod tests {
     fn survives_heavy_dropout() {
         let mut rng = crate::rng(35);
         let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
-        let s = NiceSampling { n: 6, tau: 3 };
-        let mut alg = FedAvg::new(&s, 2, 0.2);
+        let mut alg = FedAvg::new(2, 0.2);
         alg.dropout = 0.5;
-        use crate::oracle::Oracle as _;
         let xs = q.minimizer();
         let fs = q.full_loss(&xs).unwrap();
         let opts = RunOptions { rounds: 400, eval_every: 100, f_star: Some(fs), seed: 9, ..Default::default() };
-        let rec = alg.run(&q, &vec![2.0; 5], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 5], &opts).unwrap();
         let first = rec.rounds.first().unwrap().gap.unwrap();
         let last = rec.last().unwrap().gap.unwrap();
         assert!(last < first * 0.2, "dropout run should still progress: {first} -> {last}");
@@ -159,13 +198,12 @@ mod tests {
     fn full_dropout_changes_nothing() {
         let mut rng = crate::rng(36);
         let q = QuadraticOracle::random(4, 4, 0.5, 2.0, 1.0, &mut rng);
-        let s = FullSampling { n: 4 };
-        let mut alg = FedAvg::new(&s, 1, 0.2);
+        let mut alg = FedAvg::new(1, 0.2);
         alg.dropout = 1.0;
         let x0 = vec![1.5f32; 4];
         let opts = RunOptions { rounds: 30, eval_every: 30, ..Default::default() };
-        let rec = alg.run(&q, &x0, &opts).unwrap();
-        use crate::oracle::Oracle as _;
+        let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 4 }));
+        let rec = drv.run(&mut alg, &q, &x0, &opts).unwrap();
         let l0 = q.full_loss(&x0).unwrap();
         assert_eq!(rec.last().unwrap().loss, l0, "nothing should change when all clients drop");
     }
@@ -174,10 +212,10 @@ mod tests {
     fn bits_grow_linearly_with_rounds() {
         let mut rng = crate::rng(34);
         let q = QuadraticOracle::random(4, 4, 0.5, 2.0, 1.0, &mut rng);
-        let s = FullSampling { n: 4 };
-        let alg = FedAvg::new(&s, 1, 0.2);
+        let mut alg = FedAvg::new(1, 0.2);
         let opts = RunOptions { rounds: 20, eval_every: 10, ..Default::default() };
-        let rec = alg.run(&q, &vec![0.0; 4], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 4 }));
+        let rec = drv.run(&mut alg, &q, &vec![0.0; 4], &opts).unwrap();
         let b10 = rec.rounds[1].bits_up;
         let b20 = rec.rounds[2].bits_up;
         assert_eq!(b20, 2 * b10);

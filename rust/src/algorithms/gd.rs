@@ -5,14 +5,27 @@
 //!
 //! with grad f~(x) = (1/n) sum_i alpha_i grad f_i(x~_i). alpha_i = 1 for
 //! all i recovers plain distributed GD on (ERM).
+//!
+//! [`FlixGd`] holds the objective (weights, local optima, stepsize) and
+//! the reference-solve utilities; [`Gd`] is its [`FlAlgorithm`] adapter
+//! run through the coordinator [`crate::coordinator::driver::Driver`].
 
 use anyhow::Result;
 
-use super::{RunOptions, record_eval};
-use crate::metrics::RunRecord;
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::RunOptions;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
+/// tilde_x_i = alpha_i x + (1 - alpha_i) x_i*
+pub(crate) fn personalize(alphas: &[f32], x_stars: &[Vec<f32>], i: usize, x: &[f32], out: &mut [f32]) {
+    let a = alphas[i];
+    for j in 0..x.len() {
+        out[j] = a * x[j] + (1.0 - a) * x_stars[i][j];
+    }
+}
+
+#[derive(Clone)]
 pub struct FlixGd {
     /// Personalization weights alpha_i in [0, 1].
     pub alphas: Vec<f32>,
@@ -44,10 +57,7 @@ impl FlixGd {
 
     /// tilde_x_i = alpha_i x + (1 - alpha_i) x_i*
     pub fn personalize(&self, i: usize, x: &[f32], out: &mut [f32]) {
-        let a = self.alphas[i];
-        for j in 0..x.len() {
-            out[j] = a * x[j] + (1.0 - a) * self.x_stars[i][j];
-        }
+        personalize(&self.alphas, &self.x_stars, i, x, out);
     }
 
     /// FLIX gradient at x; writes into grad, returns f~(x).
@@ -69,45 +79,6 @@ impl FlixGd {
             vm::axpy(self.alphas[i] / n as f32, &g, grad);
         }
         Ok(acc / n as f32)
-    }
-
-    /// Run GD; one round = one communication (broadcast + aggregate).
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
-        let d = oracle.dim();
-        let mut x = x0.to_vec();
-        let mut g = vec![0.0f32; d];
-        let mut rec = RunRecord::new(format!("FLIX-GD(gamma={})", self.gamma));
-        let dense_bits = 32 * d as u64;
-        for t in 0..opts.rounds {
-            let loss = self.flix_loss_grad(oracle, &x, &mut g)?;
-            if t % opts.eval_every == 0 {
-                let gap = opts.f_star.map(|fs| loss - fs);
-                rec.push(crate::metrics::RoundStat {
-                    round: t,
-                    bits_up: dense_bits * t as u64,
-                    bits_down: dense_bits * t as u64,
-                    comm_cost: t as f64,
-                    loss,
-                    gap,
-                    grad_norm_sq: Some(vm::norm_sq(&g)),
-                    eval: None,
-                });
-            }
-            vm::axpy(-self.gamma, &g, &mut x);
-        }
-        let _ = record_eval(oracle, &x, opts.rounds, 0, 0, opts.rounds as f64, opts, &mut rec);
-        // fix the final record's loss to the FLIX objective (record_eval used ERM)
-        if let Some(last) = rec.rounds.last_mut() {
-            let loss = self.flix_loss(oracle, &x)?;
-            last.loss = loss;
-            last.gap = opts.f_star.map(|fs| loss - fs);
-        }
-        Ok(rec)
     }
 
     /// Solve the FLIX problem to high precision (reference f~* for gaps).
@@ -141,18 +112,129 @@ impl FlixGd {
     }
 }
 
+/// Driver adapter: one round = broadcast x (downlink), every cohort client
+/// uplinks its personalized gradient, the server averages and steps.
+/// An uplink compressor turns this into DCGD-style compressed GD; the
+/// downlink broadcast stays dense (charged as such).
+pub struct Gd {
+    pub flix: FlixGd,
+    x: Vec<f32>,
+    grad: Vec<f32>,
+    tilde: Vec<f32>,
+    gbuf: Vec<f32>,
+    cbuf: Vec<f32>,
+}
+
+impl Gd {
+    pub fn new(flix: FlixGd) -> Self {
+        Self {
+            flix,
+            x: Vec::new(),
+            grad: Vec::new(),
+            tilde: Vec::new(),
+            gbuf: Vec::new(),
+            cbuf: Vec::new(),
+        }
+    }
+
+    /// Plain distributed GD on (ERM).
+    pub fn plain(n: usize, d: usize, gamma: f32) -> Self {
+        Self::new(FlixGd::plain(n, d, gamma))
+    }
+}
+
+impl FlAlgorithm for Gd {
+    fn label(&self) -> String {
+        format!("FLIX-GD(gamma={})", self.flix.gamma)
+    }
+
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
+        let d = oracle.dim();
+        self.x = x0.to_vec();
+        self.grad = vec![0.0; d];
+        self.tilde = vec![0.0; d];
+        self.gbuf = vec![0.0; d];
+        self.cbuf = vec![0.0; d];
+        Ok(())
+    }
+
+    fn grad_point(&self) -> Option<&[f32]> {
+        // alpha_i = 1 for all i: the personalized point is x itself, so
+        // the driver's shared-point fast paths (batched / parallel) apply.
+        if self.flix.alphas.iter().all(|&a| a == 1.0) {
+            Some(&self.x)
+        } else {
+            None
+        }
+    }
+
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // Horvitz–Thompson reweighting 1/(n p_i): unbiased under any
+        // sampler, and exactly alphas[i]/n under full participation.
+        let n = oracle.n_clients() as f32;
+        let p = ctx.sampler.map_or(1.0, |s| s.p(client)) as f32;
+        let w = self.flix.alphas[client] / (n * p);
+        if pre.is_none() {
+            personalize(&self.flix.alphas, &self.flix.x_stars, client, &self.x, &mut self.tilde);
+            oracle.loss_grad(client, &self.tilde, &mut self.gbuf)?;
+        }
+        let g: &[f32] = match &pre {
+            Some(msg) => msg.grad,
+            None => &self.gbuf,
+        };
+        if ctx.has_up() {
+            let bits = ctx.up_compress(g, &mut self.cbuf);
+            ctx.charge_up(bits);
+            vm::axpy(w, &self.cbuf, &mut self.grad);
+        } else {
+            ctx.charge_up(dense_bits(self.x.len()));
+            vm::axpy(w, g, &mut self.grad);
+        }
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        vm::axpy(-self.flix.gamma, &self.grad, &mut self.x);
+        self.grad.fill(0.0);
+        ctx.charge_down(dense_bits(self.x.len()));
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
+    }
+
+    fn eval_loss(&self, oracle: &dyn Oracle, x: &[f32]) -> Result<(f32, Option<f32>)> {
+        let mut g = vec![0.0f32; oracle.dim()];
+        let loss = self.flix.flix_loss_grad(oracle, x, &mut g)?;
+        Ok((loss, Some(vm::norm_sq(&g))))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
 
     #[test]
     fn plain_gd_converges_linearly() {
         let mut rng = crate::rng(27);
         let q = QuadraticOracle::random(4, 6, 0.5, 2.0, 1.0, &mut rng);
-        let gd = FlixGd::plain(4, 6, 0.4);
+        let mut gd = Gd::plain(4, 6, 0.4);
         let opts = RunOptions { rounds: 200, eval_every: 20, ..Default::default() };
-        let rec = gd.run(&q, &vec![1.0; 6], &opts).unwrap();
+        let rec = Driver::new().run(&mut gd, &q, &vec![1.0; 6], &opts).unwrap();
         let first = rec.rounds.first().unwrap().loss;
         let last = rec.rounds.last().unwrap().loss;
         let xs = q.minimizer();
@@ -200,5 +282,26 @@ mod tests {
             gaps.push(f0 - fstar);
         }
         assert!(gaps[0] < gaps[1], "alpha=0.1 gap {} should be < alpha=0.9 gap {}", gaps[0], gaps[1]);
+    }
+
+    #[test]
+    fn personalized_gd_converges_on_flix() {
+        let mut rng = crate::rng(26);
+        let q = QuadraticOracle::random(4, 5, 0.5, 2.0, 1.0, &mut rng);
+        let x_stars: Vec<Vec<f32>> = (0..4).map(|i| {
+            crate::oracle::solve_local(&q, i, &vec![0.0; 5], 0.3, 800, 1e-8).unwrap()
+        }).collect();
+        let flix = FlixGd { alphas: vec![0.5; 4], x_stars, gamma: 0.4 };
+        let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 5], 4000).unwrap();
+        let mut gd = Gd::new(flix);
+        let opts = RunOptions {
+            rounds: 400,
+            eval_every: 50,
+            f_star: Some(fstar),
+            ..Default::default()
+        };
+        let rec = Driver::new().run(&mut gd, &q, &vec![1.0; 5], &opts).unwrap();
+        let gap = rec.last().unwrap().gap.unwrap();
+        assert!(gap < 1e-4, "gap {gap}");
     }
 }

@@ -1,14 +1,24 @@
-//! The dissertation's algorithms, over a common [`crate::oracle::Oracle`].
+//! The dissertation's algorithms, over a common [`crate::oracle::Oracle`],
+//! all implementing the unified round API ([`api::FlAlgorithm`]) and run
+//! by the coordinator's [`crate::coordinator::driver::Driver`].
 //!
-//! | Chapter | Algorithms |
-//! |---|---|
-//! | 2 | [`efbv::EfBv`] (generalizes [`efbv::EfBv::ef21`] and [`efbv::EfBv::diana`]), [`gd`] |
-//! | 3 | [`scafflix::Scafflix`] (i-Scaffnew when alpha=1), [`gd::FlixGd`], FLIX-SGD |
-//! | 5 | [`sppm::SppmAs`], [`fedavg::FedAvg`] (LocalGD / MB-GD baselines) |
+//! | Chapter | Algorithm | Registry name | Cohort sampling | Link compression |
+//! |---|---|---|---|---|
+//! | 2 | [`efbv::EfBv`] (EF-BV / EF21 / DIANA) | `efbv`, `ef21`, `diana` | full | owns its compressor |
+//! | 3 | [`gd::Gd`] (GD / FLIX-GD) | `gd` | any | uplink (DCGD-style) |
+//! | 3 | [`scafflix::Scafflix`] (i-Scaffnew when alpha=1) | `scafflix` | prob.-p rounds | up + down (delta) |
+//! | 5 | [`fedavg::FedAvg`] (LocalGD / MB-GD) | `fedavg` | any | up + down (delta) |
+//! | 5 | [`scaffold::Scaffold`] | `scaffold` | any | uplink (delta pairs) |
+//! | 5 | [`scaffold::FedProx`] | `fedprox` | any | up + down (delta) |
+//! | 5 | [`sppm::SppmAs`] | `sppm` | any (reweighted) | dense by design |
 //!
 //! Every run returns a [`crate::metrics::RunRecord`] with per-round loss /
 //! gap / bit / cost series — the exact x/y axes of the paper's figures.
+//! Bits and costs flow exclusively through the driver's
+//! [`crate::coordinator::CommLedger`]; no algorithm keeps its own
+//! counters.
 
+pub mod api;
 pub mod efbv;
 pub mod fedavg;
 pub mod gd;
@@ -16,10 +26,7 @@ pub mod scaffold;
 pub mod scafflix;
 pub mod sppm;
 
-use anyhow::Result;
-
-use crate::metrics::{RoundStat, RunRecord};
-use crate::oracle::Oracle;
+pub use api::{build_algorithm, dense_bits, registry, ClientMsg, FlAlgorithm, RoundCtx};
 
 /// Options shared by algorithm drivers.
 #[derive(Debug, Clone)]
@@ -38,35 +45,4 @@ impl Default for RunOptions {
     fn default() -> Self {
         Self { rounds: 100, eval_every: 10, f_star: None, x_star: None, seed: 0 }
     }
-}
-
-/// Record one evaluated round into `rec`.
-pub(crate) fn record_eval<O: Oracle + ?Sized>(
-    oracle: &O,
-    x: &[f32],
-    round: usize,
-    bits_up: u64,
-    bits_down: u64,
-    comm_cost: f64,
-    opts: &RunOptions,
-    rec: &mut RunRecord,
-) -> Result<()> {
-    let mut g = vec![0.0f32; oracle.dim()];
-    let loss = oracle.full_loss_grad(x, &mut g)?;
-    let gap = match (&opts.f_star, &opts.x_star) {
-        (Some(fs), _) => Some(loss - fs),
-        (None, Some(xs)) => Some(crate::vecmath::dist_sq(x, xs)),
-        _ => None,
-    };
-    rec.push(RoundStat {
-        round,
-        bits_up,
-        bits_down,
-        comm_cost,
-        loss,
-        gap,
-        grad_norm_sq: Some(crate::vecmath::norm_sq(&g)),
-        eval: None,
-    });
-    Ok(())
 }

@@ -13,11 +13,19 @@
 //!
 //! alpha_i = 1 for all i recovers i-Scaffnew; additionally uniform
 //! gamma_i recovers Scaffnew (Mishchenko et al. 2022).
+//!
+//! Communication (through the driver ledger): on a communication round
+//! every participant uplinks x^_i (compressed FedCOM-style against the
+//! last server anchor when an uplink compressor is configured) and the
+//! server broadcasts xbar back — the downlink is dense unless a downlink
+//! compressor is set, and is accounted explicitly (it is *not* assumed
+//! equal to the uplink).
 
 use anyhow::Result;
 
+use super::api::{ClientMsg, FlAlgorithm, RoundCtx};
+use super::gd::personalize;
 use super::RunOptions;
-use crate::metrics::{RoundStat, RunRecord};
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -32,6 +40,19 @@ pub struct Scafflix {
     pub stochastic: bool,
     /// Clients participating per communication round (None = all).
     pub clients_per_round: Option<usize>,
+    // run state
+    x_i: Vec<Vec<f32>>,
+    h_i: Vec<Vec<f32>>,
+    hat: Vec<Vec<f32>>,
+    tilde: Vec<f32>,
+    g: Vec<f32>,
+    xbar: Vec<f32>,
+    /// The last model the server broadcast (the anchor both link
+    /// compressors delta-compress against; clients know it too).
+    x_srv: Vec<f32>,
+    delta: Vec<f32>,
+    buf: Vec<f32>,
+    gamma_srv: f32,
 }
 
 impl Scafflix {
@@ -39,7 +60,7 @@ impl Scafflix {
     pub fn standard<O: Oracle + ?Sized>(oracle: &O, alpha: f32, p: f32, x_stars: Vec<Vec<f32>>) -> Self {
         let n = oracle.n_clients();
         let gammas = (0..n).map(|i| 1.0 / oracle.smoothness(i)).collect();
-        Self { alphas: vec![alpha; n], x_stars, gammas, p, stochastic: false, clients_per_round: None }
+        Self::with_parts(vec![alpha; n], x_stars, gammas, p)
     }
 
     /// i-Scaffnew: no personalization (alpha = 1).
@@ -47,157 +68,173 @@ impl Scafflix {
         let n = oracle.n_clients();
         let d = oracle.dim();
         let gammas = (0..n).map(|i| 1.0 / oracle.smoothness(i)).collect();
+        Self::with_parts(vec![1.0; n], vec![vec![0.0; d]; n], gammas, p)
+    }
+
+    pub fn with_parts(alphas: Vec<f32>, x_stars: Vec<Vec<f32>>, gammas: Vec<f32>, p: f32) -> Self {
         Self {
-            alphas: vec![1.0; n],
-            x_stars: vec![vec![0.0; d]; n],
+            alphas,
+            x_stars,
             gammas,
             p,
             stochastic: false,
             clients_per_round: None,
+            x_i: Vec::new(),
+            h_i: Vec::new(),
+            hat: Vec::new(),
+            tilde: Vec::new(),
+            g: Vec::new(),
+            xbar: Vec::new(),
+            x_srv: Vec::new(),
+            delta: Vec::new(),
+            buf: Vec::new(),
+            gamma_srv: 0.0,
         }
     }
 
-    /// FLIX objective evaluator (for loss/gap curves).
-    fn flix(&self) -> crate::algorithms::gd::FlixGd {
-        crate::algorithms::gd::FlixGd {
-            alphas: self.alphas.clone(),
-            x_stars: self.x_stars.clone(),
-            gamma: 0.0,
-        }
+}
+
+impl FlAlgorithm for Scafflix {
+    fn label(&self) -> String {
+        format!("Scafflix(p={},alpha={})", self.p, self.alphas[0])
     }
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
+    fn supports_cohort_sampling(&self) -> bool {
+        // communication rounds are sampled via p / clients_per_round;
+        // every client must take the local step each round
+        false
+    }
+
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
         let d = oracle.dim();
         let n = oracle.n_clients();
         // server aggregation weight gamma = (avg_i alpha_i^2 / gamma_i)^-1
-        let gamma_srv = 1.0
+        self.gamma_srv = 1.0
             / ((0..n)
                 .map(|i| self.alphas[i] * self.alphas[i] / self.gammas[i])
                 .sum::<f32>()
                 / n as f32);
+        self.x_i = vec![x0.to_vec(); n];
+        self.h_i = vec![vec![0.0f32; d]; n];
+        self.hat = vec![vec![0.0f32; d]; n];
+        self.tilde = vec![0.0f32; d];
+        self.g = vec![0.0f32; d];
+        self.xbar = vec![0.0f32; d];
+        self.x_srv = x0.to_vec();
+        self.delta = vec![0.0f32; d];
+        self.buf = vec![0.0f32; d];
+        Ok(())
+    }
 
-        let mut rng = crate::rng(opts.seed);
-        let mut x_i = vec![x0.to_vec(); n];
-        let mut h_i = vec![vec![0.0f32; d]; n];
-        let mut hat = vec![vec![0.0f32; d]; n];
-        let mut tilde = vec![0.0f32; d];
-        let mut g = vec![0.0f32; d];
-        let mut xbar = vec![0.0f32; d];
-        let flix = self.flix();
-        let mut rec = RunRecord::new(format!("Scafflix(p={},alpha={})", self.p, self.alphas[0]));
-        let dense_bits = 32 * d as u64;
-        let mut bits_up: u64 = 0;
-        let mut comms = 0usize;
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        _pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let d = self.tilde.len();
+        personalize(&self.alphas, &self.x_stars, client, &self.x_i[client], &mut self.tilde);
+        if self.stochastic {
+            oracle.loss_grad_stoch(client, &self.tilde, &mut self.g, ctx.rng)?;
+        } else {
+            oracle.loss_grad(client, &self.tilde, &mut self.g)?;
+        }
+        let step = self.gammas[client] / self.alphas[client].max(1e-8);
+        for j in 0..d {
+            self.hat[client][j] = self.x_i[client][j] - step * (self.g[j] - self.h_i[client][j]);
+        }
+        Ok(())
+    }
 
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                // evaluate at the current server point (average of x_i)
-                xbar.fill(0.0);
-                for xi in &x_i {
-                    vm::acc_mean(xi, n as f32, &mut xbar);
+    fn server_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        _cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let d = self.tilde.len();
+        let n = oracle.n_clients();
+        // communicate with probability p
+        if ctx.rng.f32_unit() < self.p {
+            let participants: Vec<usize> = match self.clients_per_round {
+                None => (0..n).collect(),
+                Some(tau) => {
+                    let mut idx: Vec<usize> = (0..n).collect();
+                    ctx.rng.shuffle(&mut idx);
+                    idx.truncate(tau.min(n));
+                    idx
                 }
-                let loss = flix.flix_loss(oracle, &xbar)?;
-                rec.push(RoundStat {
-                    round: t,
-                    bits_up,
-                    bits_down: bits_up,
-                    comm_cost: comms as f64,
-                    loss,
-                    gap: opts.f_star.map(|fs| loss - fs),
-                    grad_norm_sq: {
-                        let mut gg = vec![0.0f32; d];
-                        let _ = flix.flix_loss_grad(oracle, &xbar, &mut gg)?;
-                        Some(vm::norm_sq(&gg))
-                    },
-                    eval: None,
-                });
-            }
-
-            // local SGD step at every client
-            for i in 0..n {
-                flixify(&self.alphas, &self.x_stars, i, &x_i[i], &mut tilde);
-                if self.stochastic {
-                    oracle.loss_grad_stoch(i, &tilde, &mut g, &mut rng)?;
+            };
+            // xbar = (gamma_srv / |P|) sum_{j in P} (alpha_j^2/gamma_j) x^_j
+            // (full participation matches Algorithm 4 exactly; partial
+            // participation renormalizes over the cohort)
+            let norm = participants.len() as f32;
+            self.xbar.fill(0.0);
+            for &jc in &participants {
+                let w = self.gamma_srv * self.alphas[jc] * self.alphas[jc] / self.gammas[jc] / norm;
+                // uplink x^_j, FedCOM-delta-compressed against the anchor
+                // when an up-compressor is configured
+                if ctx.uplink_delta(&self.hat[jc], &self.x_srv, &mut self.delta, &mut self.buf) {
+                    vm::axpy(w, &self.buf, &mut self.xbar);
                 } else {
-                    oracle.loss_grad(i, &tilde, &mut g)?;
-                }
-                let step = self.gammas[i] / self.alphas[i].max(1e-8);
-                for j in 0..d {
-                    hat[i][j] = x_i[i][j] - step * (g[j] - h_i[i][j]);
+                    vm::axpy(w, &self.hat[jc], &mut self.xbar);
                 }
             }
-
-            // communicate with probability p
-            if rng.f32_unit() < self.p {
-                comms += 1;
-                let participants: Vec<usize> = match self.clients_per_round {
-                    None => (0..n).collect(),
-                    Some(tau) => {
-                        let mut idx: Vec<usize> = (0..n).collect();
-                        rng.shuffle(&mut idx);
-                        idx.truncate(tau.min(n));
-                        idx
-                    }
-                };
-                // xbar = (gamma_srv / |P|) sum_{j in P} (alpha_j^2/gamma_j) x^_j
-                // (full participation matches Algorithm 4 exactly; partial
-                // participation renormalizes over the cohort)
-                let norm = participants.len() as f32;
-                xbar.fill(0.0);
-                for &jc in &participants {
-                    let w = gamma_srv * self.alphas[jc] * self.alphas[jc] / self.gammas[jc] / norm;
-                    vm::axpy(w, &hat[jc], &mut xbar);
+            // downlink broadcast of xbar: dense unless a down-compressor is
+            // configured — accounted explicitly, never mirrored from the
+            // uplink counter. The anchor becomes what the clients received.
+            ctx.broadcast_delta(&self.xbar, &mut self.x_srv, &mut self.delta, &mut self.buf);
+            self.xbar.copy_from_slice(&self.x_srv);
+            for &i in &participants {
+                let coef = self.p * self.alphas[i] / self.gammas[i];
+                for j in 0..d {
+                    self.h_i[i][j] += coef * (self.xbar[j] - self.hat[i][j]);
                 }
-                bits_up += dense_bits; // per-node uplink of x^_i
-                for &i in &participants {
-                    let coef = self.p * self.alphas[i] / self.gammas[i];
-                    for j in 0..d {
-                        h_i[i][j] += coef * (xbar[j] - hat[i][j]);
-                    }
-                    x_i[i].copy_from_slice(&xbar);
+                self.x_i[i].copy_from_slice(&self.xbar);
+            }
+            // non-participants keep their local iterate
+            for i in 0..n {
+                if !participants.contains(&i) {
+                    self.x_i[i].copy_from_slice(&self.hat[i]);
                 }
-                // non-participants keep their local iterate
-                for i in 0..n {
-                    if !participants.contains(&i) {
-                        x_i[i].copy_from_slice(&hat[i]);
-                    }
-                }
-            } else {
-                for i in 0..n {
-                    x_i[i].copy_from_slice(&hat[i]);
-                }
+            }
+        } else {
+            ctx.no_comm();
+            for i in 0..n {
+                self.x_i[i].copy_from_slice(&self.hat[i]);
             }
         }
+        Ok(())
+    }
 
-        // final eval
-        xbar.fill(0.0);
-        for xi in &x_i {
+    fn eval_point(&self) -> Vec<f32> {
+        // the current server point: average of the client iterates
+        let d = self.tilde.len();
+        let n = self.x_i.len();
+        let mut xbar = vec![0.0f32; d];
+        for xi in &self.x_i {
             vm::acc_mean(xi, n as f32, &mut xbar);
         }
-        let loss = flix.flix_loss(oracle, &xbar)?;
-        rec.push(RoundStat {
-            round: opts.rounds,
-            bits_up,
-            bits_down: bits_up,
-            comm_cost: comms as f64,
-            loss,
-            gap: opts.f_star.map(|fs| loss - fs),
-            grad_norm_sq: None,
-            eval: None,
-        });
-        Ok(rec)
+        xbar
     }
-}
 
-fn flixify(alphas: &[f32], x_stars: &[Vec<f32>], i: usize, x: &[f32], out: &mut [f32]) {
-    let a = alphas[i];
-    for j in 0..x.len() {
-        out[j] = a * x[j] + (1.0 - a) * x_stars[i][j];
+    fn eval_loss(&self, oracle: &dyn Oracle, x: &[f32]) -> Result<(f32, Option<f32>)> {
+        // FLIX objective + gradient in one pass over the clients (same
+        // accumulation order as FlixGd::flix_loss_grad, so the loss is
+        // bit-identical to the seed's flix_loss eval)
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let mut tilde = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        let mut grad = vec![0.0f32; d];
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            personalize(&self.alphas, &self.x_stars, i, x, &mut tilde);
+            acc += oracle.loss_grad(i, &tilde, &mut g)?;
+            vm::axpy(self.alphas[i] / n as f32, &g, &mut grad);
+        }
+        Ok((acc / n as f32, Some(vm::norm_sq(&grad))))
     }
 }
 
@@ -205,6 +242,7 @@ fn flixify(alphas: &[f32], x_stars: &[Vec<f32>], i: usize, x: &[f32], out: &mut 
 mod tests {
     use super::*;
     use crate::algorithms::gd::FlixGd;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::oracle::solve_local;
 
@@ -220,7 +258,7 @@ mod tests {
     #[test]
     fn i_scaffnew_converges_to_erm_optimum() {
         let (q, _) = problem();
-        let alg = Scafflix::i_scaffnew(&q, 0.3);
+        let mut alg = Scafflix::i_scaffnew(&q, 0.3);
         use crate::oracle::Oracle as _;
         let xs = q.minimizer();
         let fs = q.full_loss(&xs).unwrap();
@@ -231,7 +269,7 @@ mod tests {
             seed: 1,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let rec = Driver::new().run(&mut alg, &q, &vec![1.0; 8], &opts).unwrap();
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-3, "gap {gap}");
     }
@@ -239,7 +277,7 @@ mod tests {
     #[test]
     fn scafflix_converges_on_flix_objective() {
         let (q, x_stars) = problem();
-        let alg = Scafflix::standard(&q, 0.5, 0.3, x_stars.clone());
+        let mut alg = Scafflix::standard(&q, 0.5, 0.3, x_stars.clone());
         let flix = FlixGd { alphas: vec![0.5; 6], x_stars, gamma: 0.2 };
         let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 8], 4000).unwrap();
         let opts = RunOptions {
@@ -249,7 +287,7 @@ mod tests {
             seed: 2,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let rec = Driver::new().run(&mut alg, &q, &vec![1.0; 8], &opts).unwrap();
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-3, "gap {gap}");
     }
@@ -263,7 +301,7 @@ mod tests {
         let (_, fstar) = flix.solve_reference(&q, &vec![0.0; 8], 4000).unwrap();
         let x0 = vec![2.0f32; 8];
 
-        let alg = Scafflix::standard(&q, alpha, 0.2, x_stars);
+        let mut alg = Scafflix::standard(&q, alpha, 0.2, x_stars);
         let opts = RunOptions {
             rounds: 1500,
             eval_every: 25,
@@ -271,8 +309,10 @@ mod tests {
             seed: 3,
             ..Default::default()
         };
-        let rec_sfx = alg.run(&q, &x0, &opts).unwrap();
-        let rec_gd = flix.run(&q, &x0, &opts).unwrap();
+        let drv = Driver::new();
+        let rec_sfx = drv.run(&mut alg, &q, &x0, &opts).unwrap();
+        let mut gd = crate::algorithms::gd::Gd::new(flix);
+        let rec_gd = drv.run(&mut gd, &q, &x0, &opts).unwrap();
 
         let eps = 1e-3;
         // compare communication rounds (comm_cost), not iterations
@@ -306,8 +346,28 @@ mod tests {
             seed: 4,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![1.0; 8], &opts).unwrap();
+        let rec = Driver::new().run(&mut alg, &q, &vec![1.0; 8], &opts).unwrap();
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 5e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn downlink_bits_accounted_independently_of_uplink() {
+        // the broadcast is dense; with a compressed uplink the two columns
+        // must differ (the seed implementation mirrored bits_up into
+        // bits_down)
+        let (q, x_stars) = problem();
+        let mut alg = Scafflix::standard(&q, 0.5, 0.5, x_stars);
+        let opts = RunOptions { rounds: 200, eval_every: 200, seed: 5, ..Default::default() };
+        let drv = Driver::new().with_up(Box::new(crate::compress::topk::TopK::new(2)));
+        let rec = drv.run(&mut alg, &q, &vec![1.0; 8], &opts).unwrap();
+        let last = rec.last().unwrap();
+        assert!(last.bits_down > 0);
+        assert!(
+            last.bits_up < last.bits_down,
+            "compressed uplink {} must be below dense downlink {}",
+            last.bits_up,
+            last.bits_down
+        );
     }
 }

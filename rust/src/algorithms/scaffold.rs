@@ -5,159 +5,263 @@
 //! * **Scaffold**: client control variates c_i correct client drift;
 //!   linear convergence to the exact solution but O(kappa log 1/eps)
 //!   communication (no acceleration — the contrast to Scaffnew/Scafflix).
+//!   Uplink = model delta + control delta (2 dense messages per client,
+//!   each compressed individually when an uplink compressor is set);
+//!   downlink = dense (x, c) broadcast.
 //! * **FedProx**: each client inexactly minimizes
 //!   f_i(y) + (1/(2 gamma)) ||y - x||^2 with a few local steps — i.e.
 //!   SPPM with a single local communication round (the K = 1 cell of the
-//!   Cohort-Squeeze grid).
+//!   Cohort-Squeeze grid). Links behave like FedAvg (delta compression
+//!   against the broadcast anchor).
 
 use anyhow::Result;
 
-use super::{record_eval, RunOptions};
-use crate::metrics::RunRecord;
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::RunOptions;
 use crate::oracle::Oracle;
-use crate::sampling::CohortSampler;
 use crate::vecmath as vm;
 
-pub struct Scaffold<'a> {
-    pub sampler: &'a dyn CohortSampler,
+pub struct Scaffold {
     pub local_steps: usize,
     /// Local stepsize.
     pub lr: f32,
     /// Global (server) stepsize, usually 1.0.
     pub global_lr: f32,
     pub stochastic: bool,
+    // run state
+    x: Vec<f32>,
+    c: Vec<f32>,
+    c_i: Vec<Vec<f32>>,
+    g: Vec<f32>,
+    yi: Vec<f32>,
+    cin: Vec<f32>,
+    dx: Vec<f32>,
+    dc: Vec<f32>,
+    ddx: Vec<f32>,
+    buf: Vec<f32>,
 }
 
-impl<'a> Scaffold<'a> {
-    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32) -> Self {
-        Self { sampler, local_steps, lr, global_lr: 1.0, stochastic: false }
+impl Scaffold {
+    pub fn new(local_steps: usize, lr: f32) -> Self {
+        Self {
+            local_steps,
+            lr,
+            global_lr: 1.0,
+            stochastic: false,
+            x: Vec::new(),
+            c: Vec::new(),
+            c_i: Vec::new(),
+            g: Vec::new(),
+            yi: Vec::new(),
+            cin: Vec::new(),
+            dx: Vec::new(),
+            dc: Vec::new(),
+            ddx: Vec::new(),
+            buf: Vec::new(),
+        }
+    }
+}
+
+impl FlAlgorithm for Scaffold {
+    fn label(&self) -> String {
+        format!("Scaffold(K={},lr={})", self.local_steps, self.lr)
     }
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
         let d = oracle.dim();
         let n = oracle.n_clients();
-        let mut rng = crate::rng(opts.seed);
-        let mut x = x0.to_vec();
-        // server and client control variates
-        let mut c = vec![0.0f32; d];
-        let mut c_i = vec![vec![0.0f32; d]; n];
-        let mut g = vec![0.0f32; d];
-        let mut yi = vec![0.0f32; d];
-        let mut dx = vec![0.0f32; d];
-        let mut dc = vec![0.0f32; d];
-        let mut rec = RunRecord::new(format!("Scaffold(K={},lr={})", self.local_steps, self.lr));
-        let dense_bits = 2 * 32 * d as u64; // model + control variate per direction
-        let mut bits: u64 = 0;
+        self.x = x0.to_vec();
+        self.c = vec![0.0; d];
+        self.c_i = vec![vec![0.0; d]; n];
+        self.g = vec![0.0; d];
+        self.yi = vec![0.0; d];
+        self.cin = vec![0.0; d];
+        self.dx = vec![0.0; d];
+        self.dc = vec![0.0; d];
+        self.ddx = vec![0.0; d];
+        self.buf = vec![0.0; d];
+        Ok(())
+    }
 
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                record_eval(oracle, &x, t, bits, bits, t as f64, opts, &mut rec)?;
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        _pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let d = self.x.len();
+        let m = ctx.cohort_size as f32;
+        self.yi.copy_from_slice(&self.x);
+        for _ in 0..self.local_steps {
+            if self.stochastic {
+                oracle.loss_grad_stoch(client, &self.yi, &mut self.g, ctx.rng)?;
+            } else {
+                oracle.loss_grad(client, &self.yi, &mut self.g)?;
             }
-            let cohort = self.sampler.sample(&mut rng);
-            dx.fill(0.0);
-            dc.fill(0.0);
-            let m = cohort.len() as f32;
-            for &i in &cohort {
-                yi.copy_from_slice(&x);
-                for _ in 0..self.local_steps {
-                    if self.stochastic {
-                        oracle.loss_grad_stoch(i, &yi, &mut g, &mut rng)?;
-                    } else {
-                        oracle.loss_grad(i, &yi, &mut g)?;
-                    }
-                    // y <- y - lr (g - c_i + c)
-                    for j in 0..d {
-                        yi[j] -= self.lr * (g[j] - c_i[i][j] + c[j]);
-                    }
-                }
-                // c_i^+ = c_i - c + (x - y)/(K lr)
-                let coef = 1.0 / (self.local_steps as f32 * self.lr);
-                for j in 0..d {
-                    let ci_new = c_i[i][j] - c[j] + (x[j] - yi[j]) * coef;
-                    dc[j] += (ci_new - c_i[i][j]) / m;
-                    dx[j] += (yi[j] - x[j]) / m;
-                    c_i[i][j] = ci_new;
-                }
+            // y <- y - lr (g - c_i + c)
+            for j in 0..d {
+                self.yi[j] -= self.lr * (self.g[j] - self.c_i[client][j] + self.c[j]);
             }
-            // x <- x + eta_g dx ; c <- c + |S|/n * dc
-            vm::axpy(self.global_lr, &dx, &mut x);
-            vm::axpy(m / n as f32, &dc, &mut c);
-            bits += dense_bits;
         }
-        record_eval(oracle, &x, opts.rounds, bits, bits, opts.rounds as f64, opts, &mut rec)?;
-        Ok(rec)
+        // c_i^+ = c_i - c + (x - y)/(K lr)
+        let coef = 1.0 / (self.local_steps as f32 * self.lr);
+        for j in 0..d {
+            self.cin[j] = self.c_i[client][j] - self.c[j] + (self.x[j] - self.yi[j]) * coef;
+        }
+        if ctx.has_up() {
+            // compress the two uplink deltas (model, control) individually
+            vm::sub(&self.yi, &self.x, &mut self.ddx);
+            let mut bits = ctx.up_compress(&self.ddx, &mut self.buf);
+            vm::axpy(1.0 / m, &self.buf, &mut self.dx);
+            vm::sub(&self.cin, &self.c_i[client], &mut self.ddx);
+            bits += ctx.up_compress(&self.ddx, &mut self.buf);
+            vm::axpy(1.0 / m, &self.buf, &mut self.dc);
+            ctx.charge_up(bits);
+        } else {
+            ctx.charge_up(2 * dense_bits(d));
+            for j in 0..d {
+                self.dc[j] += (self.cin[j] - self.c_i[client][j]) / m;
+                self.dx[j] += (self.yi[j] - self.x[j]) / m;
+            }
+        }
+        self.c_i[client].copy_from_slice(&self.cin);
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let n = oracle.n_clients() as f32;
+        let m = cohort.len() as f32;
+        // x <- x + eta_g dx ; c <- c + |S|/n * dc
+        vm::axpy(self.global_lr, &self.dx, &mut self.x);
+        vm::axpy(m / n, &self.dc, &mut self.c);
+        self.dx.fill(0.0);
+        self.dc.fill(0.0);
+        ctx.charge_down(2 * dense_bits(self.x.len()));
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
     }
 }
 
 /// FedProx: one global round = cohort clients approximately solve the
 /// proximal subproblem with `local_steps` of GD, then average.
-pub struct FedProx<'a> {
-    pub sampler: &'a dyn CohortSampler,
+pub struct FedProx {
     pub local_steps: usize,
     pub lr: f32,
     /// Proximal weight mu_prox (larger = stay closer to the server model).
     pub mu_prox: f32,
+    // run state
+    x: Vec<f32>,
+    next: Vec<f32>,
+    yi: Vec<f32>,
+    g: Vec<f32>,
+    delta: Vec<f32>,
+    buf: Vec<f32>,
+    recv: Vec<f32>,
 }
 
-impl<'a> FedProx<'a> {
-    pub fn new(sampler: &'a dyn CohortSampler, local_steps: usize, lr: f32, mu_prox: f32) -> Self {
-        Self { sampler, local_steps, lr, mu_prox }
+impl FedProx {
+    pub fn new(local_steps: usize, lr: f32, mu_prox: f32) -> Self {
+        Self {
+            local_steps,
+            lr,
+            mu_prox,
+            x: Vec::new(),
+            next: Vec::new(),
+            yi: Vec::new(),
+            g: Vec::new(),
+            delta: Vec::new(),
+            buf: Vec::new(),
+            recv: Vec::new(),
+        }
+    }
+}
+
+impl FlAlgorithm for FedProx {
+    fn label(&self) -> String {
+        format!("FedProx(K={},mu={},lr={})", self.local_steps, self.mu_prox, self.lr)
     }
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
+    fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
         let d = oracle.dim();
-        let mut rng = crate::rng(opts.seed);
-        let mut x = x0.to_vec();
-        let mut g = vec![0.0f32; d];
-        let mut yi = vec![0.0f32; d];
-        let mut next = vec![0.0f32; d];
-        let mut rec = RunRecord::new(format!(
-            "FedProx(K={},mu={},lr={})",
-            self.local_steps, self.mu_prox, self.lr
-        ));
-        let dense_bits = 32 * d as u64;
-        let mut bits: u64 = 0;
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                record_eval(oracle, &x, t, bits, bits, t as f64, opts, &mut rec)?;
+        self.x = x0.to_vec();
+        self.next = vec![0.0; d];
+        self.yi = vec![0.0; d];
+        self.g = vec![0.0; d];
+        self.delta = vec![0.0; d];
+        self.buf = vec![0.0; d];
+        self.recv = vec![0.0; d];
+        Ok(())
+    }
+
+    fn client_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        client: usize,
+        _pre: Option<ClientMsg<'_>>,
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let d = self.x.len();
+        let m = ctx.cohort_size as f32;
+        self.yi.copy_from_slice(&self.x);
+        for _ in 0..self.local_steps {
+            oracle.loss_grad(client, &self.yi, &mut self.g)?;
+            for j in 0..d {
+                self.g[j] += self.mu_prox * (self.yi[j] - self.x[j]);
             }
-            let cohort = self.sampler.sample(&mut rng);
-            next.fill(0.0);
-            for &i in &cohort {
-                yi.copy_from_slice(&x);
-                for _ in 0..self.local_steps {
-                    oracle.loss_grad(i, &yi, &mut g)?;
-                    for j in 0..d {
-                        g[j] += self.mu_prox * (yi[j] - x[j]);
-                    }
-                    vm::axpy(-self.lr, &g, &mut yi);
-                }
-                vm::acc_mean(&yi, cohort.len() as f32, &mut next);
-            }
-            x.copy_from_slice(&next);
-            bits += dense_bits;
+            vm::axpy(-self.lr, &self.g, &mut self.yi);
         }
-        record_eval(oracle, &x, opts.rounds, bits, bits, opts.rounds as f64, opts, &mut rec)?;
-        Ok(rec)
+        if ctx.uplink_delta(&self.yi, &self.x, &mut self.delta, &mut self.recv) {
+            vm::acc_mean(&self.recv, m, &mut self.next);
+        } else {
+            vm::acc_mean(&self.yi, m, &mut self.next);
+        }
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        _oracle: &dyn Oracle,
+        cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        if cohort.is_empty() {
+            // wasted round: the broadcast (a zero delta when compressed)
+            // still goes out
+            if ctx.has_down() {
+                self.delta.fill(0.0);
+                let bits = ctx.down_compress(&self.delta, &mut self.buf);
+                ctx.charge_down(bits);
+            } else {
+                ctx.charge_down(dense_bits(self.x.len()));
+            }
+            return Ok(());
+        }
+        ctx.broadcast_delta(&self.next, &mut self.x, &mut self.delta, &mut self.buf);
+        self.next.fill(0.0);
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::oracle::Oracle as _;
-    use crate::sampling::{FullSampling, NiceSampling};
+    use crate::sampling::{CohortSampler, FullSampling, NiceSampling};
 
     fn problem() -> (QuadraticOracle, f32) {
         let mut rng = crate::rng(50);
@@ -172,15 +276,15 @@ mod tests {
         // LocalGD stalls at a heterogeneity neighborhood; Scaffold's control
         // variates remove the drift and reach the exact optimum.
         let (q, fs) = problem();
-        let s = FullSampling { n: 8 };
-        let alg = Scaffold::new(&s, 5, 0.05);
+        let mut alg = Scaffold::new(5, 0.05);
         let opts = RunOptions {
             rounds: 400,
             eval_every: 50,
             f_star: Some(fs),
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 8 }));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 6], &opts).unwrap();
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-3, "gap {gap}");
     }
@@ -188,16 +292,16 @@ mod tests {
     #[test]
     fn scaffold_beats_localgd_final_gap() {
         let (q, fs) = problem();
-        let s = FullSampling { n: 8 };
         let opts = RunOptions {
             rounds: 300,
             eval_every: 300,
             f_star: Some(fs),
             ..Default::default()
         };
-        let rec_sc = Scaffold::new(&s, 5, 0.05).run(&q, &vec![2.0; 6], &opts).unwrap();
-        let alg_fa = crate::algorithms::fedavg::FedAvg::new(&s, 5, 0.05);
-        let rec_fa = alg_fa.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 8 }));
+        let rec_sc = drv.run(&mut Scaffold::new(5, 0.05), &q, &vec![2.0; 6], &opts).unwrap();
+        let mut alg_fa = crate::algorithms::fedavg::FedAvg::new(5, 0.05);
+        let rec_fa = drv.run(&mut alg_fa, &q, &vec![2.0; 6], &opts).unwrap();
         let g_sc = rec_sc.last().unwrap().gap.unwrap();
         let g_fa = rec_fa.last().unwrap().gap.unwrap();
         assert!(g_sc < g_fa, "scaffold {g_sc} vs localgd {g_fa}");
@@ -206,8 +310,7 @@ mod tests {
     #[test]
     fn scaffold_partial_participation_progresses() {
         let (q, fs) = problem();
-        let s = NiceSampling { n: 8, tau: 3 };
-        let alg = Scaffold::new(&s, 3, 0.05);
+        let mut alg = Scaffold::new(3, 0.05);
         let opts = RunOptions {
             rounds: 600,
             eval_every: 100,
@@ -215,7 +318,8 @@ mod tests {
             seed: 1,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 8, tau: 3 }));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 6], &opts).unwrap();
         let first = rec.rounds.first().unwrap().gap.unwrap();
         let last = rec.last().unwrap().gap.unwrap();
         assert!(last < 0.05 * first, "{first} -> {last}");
@@ -225,8 +329,7 @@ mod tests {
     fn fedprox_reaches_neighborhood() {
         let (q, _) = problem();
         let xs = q.minimizer();
-        let s = NiceSampling { n: 8, tau: 4 };
-        let alg = FedProx::new(&s, 10, 0.05, 1.0);
+        let mut alg = FedProx::new(10, 0.05, 1.0);
         let opts = RunOptions {
             rounds: 300,
             eval_every: 50,
@@ -234,7 +337,8 @@ mod tests {
             seed: 2,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![2.0; 6], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 8, tau: 4 }));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 6], &opts).unwrap();
         let first = rec.rounds.first().unwrap().gap.unwrap();
         let last = rec.last().unwrap().gap.unwrap();
         assert!(last < 0.05 * first, "{first} -> {last}");
@@ -249,9 +353,10 @@ mod tests {
         let x0 = vec![1.0f32; 6];
         let dist_after_one = |mu: f32| {
             let lr = 0.3 / (2.0 + mu); // 1/(L + mu_prox)-scaled
-            let alg = FedProx::new(&s, 20, lr, mu);
+            let mut alg = FedProx::new(20, lr, mu);
             let opts = RunOptions { rounds: 1, eval_every: 100, ..Default::default() };
-            let _ = alg.run(&q, &x0, &opts).unwrap();
+            let drv = Driver::new().with_sampler(Box::new(FullSampling { n: 8 }));
+            let _ = drv.run(&mut alg, &q, &x0, &opts).unwrap();
             // re-derive the one-round iterate deterministically
             let mut rng = crate::rng(0);
             let cohort = s.sample(&mut rng);

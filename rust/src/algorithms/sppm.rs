@@ -5,142 +5,133 @@
 //! x_{t+1} = prox_{gamma f_{S_t}}(x_t), with
 //! f_C(x) = sum_{i in C} f_i(x) / (n p_i),
 //! computed inexactly by K local communication rounds of a solver 𝒜
-//! ([`crate::prox`]). Communication ledger: each global iteration costs
-//! `c2 + c1 * K` (flat setting: c1 = 1, c2 = 0 gives the paper's TK).
+//! ([`crate::prox`]). The cohort S_t and the inclusion probabilities p_i
+//! come from the driver's sampler; the cost of a global iteration,
+//! `c2 + c1 * K`, comes from the driver's topology (flat: c1 = 1, c2 = 0
+//! gives the paper's TK). Every local round moves one dense model per
+//! cohort node on each link — booked through the ledger.
 
 use anyhow::Result;
 
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
 use super::RunOptions;
-use crate::metrics::{RoundStat, RunRecord};
 use crate::oracle::Oracle;
 use crate::prox::ProxSolver;
 use crate::sampling::CohortSampler;
 
-pub struct SppmAs<'a> {
-    pub sampler: &'a dyn CohortSampler,
-    pub solver: &'a dyn ProxSolver,
+pub struct SppmAs {
+    pub solver: Box<dyn ProxSolver>,
     /// Prox stepsize gamma (can be arbitrarily large — SPPM's superpower).
     pub gamma: f32,
     /// Local communication rounds per global iteration.
     pub k_local: usize,
-    /// Hierarchical cost model: local round cost c1, global round cost c2.
-    pub c1: f64,
-    pub c2: f64,
+    // run state
+    x: Vec<f32>,
 }
 
-impl<'a> SppmAs<'a> {
-    pub fn new(
-        sampler: &'a dyn CohortSampler,
-        solver: &'a dyn ProxSolver,
-        gamma: f32,
-        k_local: usize,
-    ) -> Self {
-        Self { sampler, solver, gamma, k_local, c1: 1.0, c2: 0.0 }
-    }
-
-    pub fn label(&self) -> String {
-        format!(
-            "SPPM-{}[{},gamma={},K={}]",
-            self.sampler.name(),
-            self.solver.name(),
-            self.gamma,
-            self.k_local
-        )
+impl SppmAs {
+    pub fn new(solver: Box<dyn ProxSolver>, gamma: f32, k_local: usize) -> Self {
+        Self { solver, gamma, k_local, x: Vec::new() }
     }
 
     /// Theory constant mu_AS (eq. 5.4) over sampled cohorts (empirical min).
-    pub fn mu_as<O: Oracle + ?Sized>(&self, oracle: &O, trials: usize, seed: u64) -> f32 {
+    pub fn mu_as<O: Oracle + ?Sized>(
+        &self,
+        oracle: &O,
+        sampler: &dyn CohortSampler,
+        trials: usize,
+        seed: u64,
+    ) -> f32 {
         let n = oracle.n_clients();
         let mut rng = crate::rng(seed);
         let mut mu = f32::INFINITY;
         for _ in 0..trials {
-            let c = self.sampler.sample(&mut rng);
+            let c = sampler.sample(&mut rng);
             let s: f32 = c
                 .iter()
-                .map(|&i| oracle.mu(i) / (n as f32 * self.sampler.p(i) as f32))
+                .map(|&i| oracle.mu(i) / (n as f32 * sampler.p(i) as f32))
                 .sum();
             mu = mu.min(s);
         }
         mu
     }
+}
 
-    pub fn run<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x0: &[f32],
-        opts: &RunOptions,
-    ) -> Result<RunRecord> {
-        let d = oracle.dim();
-        let n = oracle.n_clients();
-        let mut rng = crate::rng(opts.seed);
-        let mut x = x0.to_vec();
-        let mut rec = RunRecord::new(self.label());
-        let mut cost = 0.0f64;
-        let dense_bits = 32 * d as u64;
-        let mut bits: u64 = 0;
-
-        for t in 0..opts.rounds {
-            if t % opts.eval_every == 0 {
-                self.record(oracle, &x, t, bits, cost, opts, &mut rec)?;
-            }
-            let cohort = self.sampler.sample(&mut rng);
-            let weights: Vec<(usize, f32)> = cohort
-                .iter()
-                .map(|&i| (i, 1.0 / (n as f32 * self.sampler.p(i) as f32)))
-                .collect();
-            let lip: f32 = weights.iter().map(|&(i, w)| w * oracle.smoothness(i)).sum();
-            let mut grad_tmp = vec![0.0f32; d];
-            let mut obj = |y: &[f32], g: &mut [f32]| -> Result<f32> {
-                g.fill(0.0);
-                let mut loss = 0.0f32;
-                for &(i, w) in &weights {
-                    loss += w * oracle.loss_grad(i, y, &mut grad_tmp)?;
-                    crate::vecmath::axpy(w, &grad_tmp, g);
-                }
-                Ok(loss)
-            };
-            let y = self.solver.solve(&mut obj, &x, self.gamma, self.k_local, &x, lip)?;
-            x = y;
-            cost += self.c2 + self.c1 * self.k_local as f64;
-            bits += dense_bits * self.k_local as u64;
-        }
-        self.record(oracle, &x, opts.rounds, bits, cost, opts, &mut rec)?;
-        Ok(rec)
+impl FlAlgorithm for SppmAs {
+    fn label(&self) -> String {
+        format!("SPPM[{},gamma={},K={}]", self.solver.name(), self.gamma, self.k_local)
     }
 
-    fn record<O: Oracle + ?Sized>(
-        &self,
-        oracle: &O,
-        x: &[f32],
-        round: usize,
-        bits: u64,
-        cost: f64,
-        opts: &RunOptions,
-        rec: &mut RunRecord,
-    ) -> Result<()> {
-        let loss = oracle.full_loss(x)?;
-        let gap = match (&opts.x_star, &opts.f_star) {
-            (Some(xs), _) => Some(crate::vecmath::dist_sq(x, xs)),
-            (None, Some(fs)) => Some(loss - fs),
-            _ => None,
-        };
-        rec.push(RoundStat {
-            round,
-            bits_up: bits,
-            bits_down: bits,
-            comm_cost: cost,
-            loss,
-            gap,
-            grad_norm_sq: None,
-            eval: None,
-        });
+    fn init(&mut self, _oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {
+        self.x = x0.to_vec();
         Ok(())
+    }
+
+    fn client_step(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _client: usize,
+        _pre: Option<ClientMsg<'_>>,
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // the prox solve interleaves all cohort clients per local round;
+        // the whole global iteration happens in server_step
+        Ok(())
+    }
+
+    fn server_step(
+        &mut self,
+        oracle: &dyn Oracle,
+        cohort: &[usize],
+        ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        let d = oracle.dim();
+        let n = oracle.n_clients();
+        let weights: Vec<(usize, f32)> = cohort
+            .iter()
+            .map(|&i| {
+                let p = ctx.sampler.map_or(1.0, |s| s.p(i));
+                (i, 1.0 / (n as f32 * p as f32))
+            })
+            .collect();
+        let lip: f32 = weights.iter().map(|&(i, w)| w * oracle.smoothness(i)).sum();
+        let mut grad_tmp = vec![0.0f32; d];
+        let mut obj = |y: &[f32], g: &mut [f32]| -> Result<f32> {
+            g.fill(0.0);
+            let mut loss = 0.0f32;
+            for &(i, w) in &weights {
+                loss += w * oracle.loss_grad(i, y, &mut grad_tmp)?;
+                crate::vecmath::axpy(w, &grad_tmp, g);
+            }
+            Ok(loss)
+        };
+        let y = self.solver.solve(&mut obj, &self.x, self.gamma, self.k_local, &self.x, lip)?;
+        self.x = y;
+        // every local round: one dense model up and down per cohort node
+        let bits = dense_bits(d) * self.k_local as u64;
+        ctx.charge_up(bits);
+        ctx.charge_down(bits);
+        ctx.set_local_rounds(self.k_local);
+        Ok(())
+    }
+
+    fn eval_point(&self) -> Vec<f32> {
+        self.x.clone()
+    }
+
+    fn eval_loss(&self, oracle: &dyn Oracle, x: &[f32]) -> Result<(f32, Option<f32>)> {
+        Ok((oracle.full_loss(x)?, None))
+    }
+
+    fn prefers_dist_gap(&self) -> bool {
+        true
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::driver::Driver;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::prox::{CgSolver, LbfgsSolver, LocalGdSolver};
     use crate::sampling::{contiguous_blocks, NiceSampling, StratifiedSampling};
@@ -155,16 +146,15 @@ mod tests {
     #[test]
     fn converges_to_neighborhood_with_large_gamma() {
         let (q, xs) = problem();
-        let s = NiceSampling { n: 10, tau: 4 };
-        let solver = LbfgsSolver::default();
-        let alg = SppmAs::new(&s, &solver, 100.0, 30);
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 100.0, 30);
         let opts = RunOptions {
             rounds: 60,
             eval_every: 10,
             x_star: Some(xs.clone()),
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![5.0; 8], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 10, tau: 4 }));
+        let rec = drv.run(&mut alg, &q, &vec![5.0; 8], &opts).unwrap();
         let d0 = rec.rounds.first().unwrap().gap.unwrap();
         let dend = rec.last().unwrap().gap.unwrap();
         assert!(dend < d0 * 0.02, "dist {dend} from {d0}");
@@ -175,12 +165,11 @@ mod tests {
         // "A single step travels far": with huge gamma, one iteration lands
         // near the neighborhood regardless of x0.
         let (q, xs) = problem();
-        let s = NiceSampling { n: 10, tau: 5 };
-        let solver = LbfgsSolver::default();
-        let alg = SppmAs::new(&s, &solver, 1e6, 50);
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 1e6, 50);
         let opts =
             RunOptions { rounds: 1, eval_every: 1, x_star: Some(xs.clone()), ..Default::default() };
-        let rec = alg.run(&q, &vec![100.0; 8], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 10, tau: 5 }));
+        let rec = drv.run(&mut alg, &q, &vec![100.0; 8], &opts).unwrap();
         let d0 = rec.rounds.first().unwrap().gap.unwrap();
         let d1 = rec.last().unwrap().gap.unwrap();
         assert!(d1 < d0 * 1e-3, "one step: {d0} -> {d1}");
@@ -191,7 +180,6 @@ mod tests {
         let (q, _) = problem();
         let s = NiceSampling { n: 10, tau: 3 };
         let solver = LbfgsSolver::default();
-        let alg = SppmAs::new(&s, &solver, 2.0, 60);
         // one global iteration from a fixed x; compare against closed form
         let x = vec![1.0f32; 8];
         let mut rng = crate::rng(0);
@@ -211,24 +199,28 @@ mod tests {
             Ok(loss)
         };
         let lip: f32 = weights.iter().map(|&(i, w)| w * crate::oracle::Oracle::smoothness(&q, i)).sum();
-        let y = alg.solver.solve(&mut obj, &x, 2.0, 60, &x, lip).unwrap();
+        let y = solver.solve(&mut obj, &x, 2.0, 60, &x, lip).unwrap();
         assert!(crate::vecmath::dist_sq(&y, &exact) < 1e-5);
     }
 
     #[test]
     fn stratified_neighborhood_not_worse_than_nice() {
         let (q, xs) = problem();
-        let solver = CgSolver;
-        let nice = NiceSampling { n: 10, tau: 5 };
-        let ss = StratifiedSampling::new(contiguous_blocks(10, 5));
         let opts = RunOptions {
             rounds: 80,
             eval_every: 80,
             x_star: Some(xs.clone()),
             ..Default::default()
         };
-        let rec_ss = SppmAs::new(&ss, &solver, 10.0, 25).run(&q, &vec![3.0; 8], &opts).unwrap();
-        let rec_nice = SppmAs::new(&nice, &solver, 10.0, 25).run(&q, &vec![3.0; 8], &opts).unwrap();
+        let drv_ss = Driver::new()
+            .with_sampler(Box::new(StratifiedSampling::new(contiguous_blocks(10, 5))));
+        let drv_nice = Driver::new().with_sampler(Box::new(NiceSampling { n: 10, tau: 5 }));
+        let rec_ss = drv_ss
+            .run(&mut SppmAs::new(Box::new(CgSolver), 10.0, 25), &q, &vec![3.0; 8], &opts)
+            .unwrap();
+        let rec_nice = drv_nice
+            .run(&mut SppmAs::new(Box::new(CgSolver), 10.0, 25), &q, &vec![3.0; 8], &opts)
+            .unwrap();
         let g_ss = rec_ss.last().unwrap().gap.unwrap();
         let g_nice = rec_nice.last().unwrap().gap.unwrap();
         // allow generous slack: both land in neighborhoods, SS's should not
@@ -239,11 +231,10 @@ mod tests {
     #[test]
     fn cost_ledger_is_tk() {
         let (q, _) = problem();
-        let s = NiceSampling { n: 10, tau: 2 };
-        let solver = LocalGdSolver;
-        let alg = SppmAs::new(&s, &solver, 1.0, 7);
+        let mut alg = SppmAs::new(Box::new(LocalGdSolver), 1.0, 7);
         let opts = RunOptions { rounds: 5, eval_every: 100, ..Default::default() };
-        let rec = alg.run(&q, &vec![0.0; 8], &opts).unwrap();
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 10, tau: 2 }));
+        let rec = drv.run(&mut alg, &q, &vec![0.0; 8], &opts).unwrap();
         assert_eq!(rec.last().unwrap().comm_cost, 35.0); // T*K = 5*7
     }
 
@@ -251,8 +242,7 @@ mod tests {
     fn mu_as_positive() {
         let (q, _) = problem();
         let s = NiceSampling { n: 10, tau: 4 };
-        let solver = LocalGdSolver;
-        let alg = SppmAs::new(&s, &solver, 1.0, 1);
-        assert!(alg.mu_as(&q, 20, 0) > 0.0);
+        let alg = SppmAs::new(Box::new(LocalGdSolver), 1.0, 1);
+        assert!(alg.mu_as(&q, &s, 20, 0) > 0.0);
     }
 }

@@ -77,16 +77,18 @@ pub fn estimate_params<C: Compressor + ?Sized>(
     reps: usize,
     rng: &mut Rng,
 ) -> Params {
-        let mut eta: f32 = 0.0;
+    let mut eta: f32 = 0.0;
     let mut omega: f32 = 0.0;
+    let mut x = vec![0.0f32; d];
     let mut out = vec![0.0f32; d];
     let mut mean = vec![0.0f32; d];
-    let mut sq = 0.0f32;
     for _ in 0..trials {
-        let x: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        for xj in x.iter_mut() {
+            *xj = rng.f32_range(-1.0, 1.0);
+        }
         let nx2 = crate::vecmath::norm_sq(&x).max(1e-12);
         mean.fill(0.0);
-        sq = 0.0;
+        let mut sq = 0.0f32;
         for _ in 0..reps {
             c.compress(&x, &mut out, rng);
             crate::vecmath::axpy(1.0 / reps as f32, &out, &mut mean);
@@ -97,7 +99,6 @@ pub fn estimate_params<C: Compressor + ?Sized>(
         eta = eta.max((bias2 / nx2).sqrt());
         omega = omega.max(var / nx2);
     }
-    let _ = sq;
     Params { eta, omega }
 }
 

@@ -17,22 +17,46 @@
 //! clients = 10
 //! heterogeneity = "feature" # iid | feature | class
 //!
+//! # The algorithm is looked up by name in the registry
+//! # (`fedeff::algorithms::registry()`): gd | efbv | ef21 | diana |
+//! # fedavg | scaffold | fedprox | scafflix | sppm. The remaining keys
+//! # parameterize whichever algorithm was selected.
 //! [algorithm]
-//! kind = "scafflix"        # gd | efbv | ef21 | diana | scafflix | fedavg | sppm
+//! kind = "scafflix"
 //! alpha = 0.5
 //! p = 0.2
 //! gamma = 1.0
 //! k_local = 5
-//! compressor = "top-k"     # top-k | rand-k | comp | mix | qsgd
+//! mu_prox = 1.0            # fedprox proximal weight
+//! compressor = "top-k"     # EF-BV family's own compressor
 //! k = 1
-//! sampler = "nice"         # full | nice | block | stratified
-//! tau = 10
+//! # cohort sampling (gd | fedavg | scaffold | fedprox | sppm only —
+//! # scafflix and the EF-BV family are full-participation and reject it):
+//! #sampler = "nice"        # full | nice | block | stratified
+//! #tau = 10
 //! solver = "bfgs"          # gd | cg | bfgs | adam
+//!
+//! # Optional link compression on the driver (composes with *any*
+//! # algorithm, e.g. Scafflix + Top-K uplink):
+//! [compressor]
+//! up = "top-k"             # top-k | rand-k | srand-k | comp | mix | qsgd | identity
+//! down = "identity"        # omit a key to leave that link dense
+//! k = 8
+//! k_prime = 16
+//!
+//! # Optional 2-level topology (omit for flat costing, c1=1, c2=0):
+//! [topology]
+//! hubs = 4
+//! c1 = 0.05                # client -> hub cost per local round
+//! c2 = 1.0                 # hub -> server cost per global round
 //! ```
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
+
+use crate::coordinator::driver::{Driver, Topology};
+use crate::coordinator::hierarchy::Hierarchy;
 
 /// One parsed TOML document: section -> key -> raw value.
 #[derive(Debug, Clone, Default)]
@@ -84,6 +108,10 @@ impl Toml {
         self.get(section, key)?.parse().ok()
     }
 
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
     pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
         self.get(section, key)?.parse().ok()
     }
@@ -120,6 +148,7 @@ pub struct AlgorithmSpec {
     pub lr: Option<f32>,
     pub k_local: Option<usize>,
     pub local_steps: Option<usize>,
+    pub mu_prox: Option<f32>,
     pub compressor: Option<String>,
     pub k: Option<usize>,
     pub k_prime: Option<usize>,
@@ -128,11 +157,36 @@ pub struct AlgorithmSpec {
     pub solver: Option<String>,
 }
 
+/// `[compressor]`: optional link compressors on the driver's up/downlink.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    pub up: Option<String>,
+    pub down: Option<String>,
+    pub k: usize,
+    pub k_prime: usize,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        Self { up: None, down: None, k: 8, k_prime: 16 }
+    }
+}
+
+/// `[topology]`: a 2-level server–hub–client hierarchy for cost ledgers.
+#[derive(Debug, Clone)]
+pub struct TopologySpec {
+    pub hubs: usize,
+    pub c1: f64,
+    pub c2: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct Spec {
     pub experiment: ExperimentSpec,
     pub dataset: DatasetSpec,
     pub algorithm: AlgorithmSpec,
+    pub links: LinkSpec,
+    pub topology: Option<TopologySpec>,
 }
 
 impl Spec {
@@ -168,6 +222,7 @@ impl Spec {
             lr: t.get_f32("algorithm", "lr"),
             k_local: t.get_usize("algorithm", "k_local"),
             local_steps: t.get_usize("algorithm", "local_steps"),
+            mu_prox: t.get_f32("algorithm", "mu_prox"),
             compressor: t.get("algorithm", "compressor").map(|s| s.to_string()),
             k: t.get_usize("algorithm", "k"),
             k_prime: t.get_usize("algorithm", "k_prime"),
@@ -175,27 +230,49 @@ impl Spec {
             tau: t.get_usize("algorithm", "tau"),
             solver: t.get("algorithm", "solver").map(|s| s.to_string()),
         };
-        Ok(Spec { experiment, dataset, algorithm })
+        let links = LinkSpec {
+            up: t.get("compressor", "up").map(|s| s.to_string()),
+            down: t.get("compressor", "down").map(|s| s.to_string()),
+            k: t.get_usize("compressor", "k").unwrap_or(8),
+            k_prime: t.get_usize("compressor", "k_prime").unwrap_or(16),
+        };
+        let topology = t.sections.get("topology").map(|_| TopologySpec {
+            hubs: t.get_usize("topology", "hubs").unwrap_or(1),
+            c1: t.get_f64("topology", "c1").unwrap_or(1.0),
+            c2: t.get_f64("topology", "c2").unwrap_or(0.0),
+        });
+        Ok(Spec { experiment, dataset, algorithm, links, topology })
     }
 }
 
-/// Build a compressor from the spec.
-pub fn build_compressor(
-    a: &AlgorithmSpec,
-    _d: usize,
+/// Build a compressor by name.
+pub fn compressor_by_name(
+    name: &str,
+    k: usize,
+    k_prime: usize,
 ) -> Result<Box<dyn crate::compress::Compressor>> {
-    let k = a.k.unwrap_or(1);
-    let kp = a.k_prime.unwrap_or(8);
-    Ok(match a.compressor.as_deref().unwrap_or("top-k") {
+    Ok(match name {
         "top-k" => Box::new(crate::compress::topk::TopK::new(k)),
         "rand-k" => Box::new(crate::compress::randk::RandK::unbiased(k)),
         "srand-k" => Box::new(crate::compress::randk::RandK::scaled(k)),
-        "comp" => Box::new(crate::compress::comp::CompKK::new(k, kp)),
-        "mix" => Box::new(crate::compress::mix::MixKK::new(k, kp)),
+        "comp" => Box::new(crate::compress::comp::CompKK::new(k, k_prime)),
+        "mix" => Box::new(crate::compress::mix::MixKK::new(k, k_prime)),
         "qsgd" => Box::new(crate::compress::quantize::Qsgd::new(k as u32)),
         "identity" => Box::new(crate::compress::Identity),
         other => anyhow::bail!("unknown compressor {other}"),
     })
+}
+
+/// Build the EF-BV family's own compressor from the algorithm spec.
+pub fn build_compressor(
+    a: &AlgorithmSpec,
+    _d: usize,
+) -> Result<Box<dyn crate::compress::Compressor>> {
+    compressor_by_name(
+        a.compressor.as_deref().unwrap_or("top-k"),
+        a.k.unwrap_or(1),
+        a.k_prime.unwrap_or(8),
+    )
 }
 
 /// Build a cohort sampler from the spec.
@@ -218,15 +295,57 @@ pub fn build_sampler(
     })
 }
 
-/// Build a prox solver from the spec.
-pub fn build_solver(a: &AlgorithmSpec) -> Result<Box<dyn crate::prox::ProxSolver>> {
-    Ok(match a.solver.as_deref().unwrap_or("bfgs") {
+/// Build a prox solver by name.
+pub fn solver_by_name(name: &str) -> Result<Box<dyn crate::prox::ProxSolver>> {
+    Ok(match name {
         "gd" => Box::new(crate::prox::LocalGdSolver),
         "cg" => Box::new(crate::prox::CgSolver),
         "bfgs" => Box::new(crate::prox::LbfgsSolver::default()),
         "adam" => Box::new(crate::prox::AdamSolver::default()),
         other => anyhow::bail!("unknown solver {other}"),
     })
+}
+
+/// Build a prox solver from the spec.
+pub fn build_solver(a: &AlgorithmSpec) -> Result<Box<dyn crate::prox::ProxSolver>> {
+    solver_by_name(a.solver.as_deref().unwrap_or("bfgs"))
+}
+
+/// Assemble the coordinator [`Driver`] a spec asks for: cohort sampler
+/// (for the cohort-based algorithms, or whenever `[algorithm] sampler` is
+/// set), optional up/down link compressors, and the cost topology.
+pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
+    let a = &spec.algorithm;
+    let needs_sampler = matches!(a.kind.as_str(), "fedavg" | "scaffold" | "fedprox" | "sppm");
+    // gd degrades gracefully to minibatch GD under a cohort sampler, so it
+    // may opt in; scafflix (which samples *communication* rounds via p and
+    // participants via clients_per_round) and the EF-BV family keep
+    // per-client control state for all n clients and would be silently
+    // corrupted by partial cohorts — reject instead.
+    if a.sampler.is_some() && matches!(a.kind.as_str(), "scafflix" | "efbv" | "ef21" | "diana") {
+        anyhow::bail!(
+            "[algorithm] sampler is not supported for kind {:?}; cohort sampling applies to gd | fedavg | scaffold | fedprox | sppm",
+            a.kind
+        );
+    }
+    let sampler = if needs_sampler || (a.kind == "gd" && a.sampler.is_some()) {
+        Some(build_sampler(a, n)?)
+    } else {
+        None
+    };
+    let up = match spec.links.up.as_deref() {
+        Some(name) => Some(compressor_by_name(name, spec.links.k, spec.links.k_prime)?),
+        None => None,
+    };
+    let down = match spec.links.down.as_deref() {
+        Some(name) => Some(compressor_by_name(name, spec.links.k, spec.links.k_prime)?),
+        None => None,
+    };
+    let topology = match &spec.topology {
+        Some(t) => Topology::Hier(Hierarchy::even(n, t.hubs.max(1), t.c1, t.c2)),
+        None => Topology::Flat,
+    };
+    Ok(Driver { sampler, up, down, topology })
 }
 
 #[cfg(test)]
@@ -253,6 +372,28 @@ tau = 5
 solver = "cg"
 "#;
 
+    const SAMPLE_LINKS: &str = r#"
+[experiment]
+name = "compose"
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "scafflix"
+alpha = 0.5
+p = 0.2
+
+[compressor]
+up = "top-k"
+k = 4
+
+[topology]
+hubs = 2
+c1 = 0.05
+c2 = 1.0
+"#;
+
     #[test]
     fn parses_full_spec() {
         let s = Spec::parse(SAMPLE).unwrap();
@@ -263,6 +404,20 @@ solver = "cg"
         assert_eq!(s.algorithm.kind, "sppm");
         assert_eq!(s.algorithm.k_local, Some(10));
         assert_eq!(s.algorithm.gamma, Some(100.0));
+        assert!(s.links.up.is_none() && s.links.down.is_none());
+        assert!(s.topology.is_none());
+    }
+
+    #[test]
+    fn parses_links_and_topology() {
+        let s = Spec::parse(SAMPLE_LINKS).unwrap();
+        assert_eq!(s.links.up.as_deref(), Some("top-k"));
+        assert_eq!(s.links.k, 4);
+        assert!(s.links.down.is_none());
+        let t = s.topology.as_ref().unwrap();
+        assert_eq!(t.hubs, 2);
+        assert_eq!(t.c1, 0.05);
+        assert_eq!(t.c2, 1.0);
     }
 
     #[test]
@@ -274,6 +429,33 @@ solver = "cg"
         assert_eq!(solver.name(), "CG");
         let comp = build_compressor(&s.algorithm, 100).unwrap();
         assert_eq!(comp.name(), "top-1");
+    }
+
+    #[test]
+    fn build_driver_wires_sampler_links_topology() {
+        let s = Spec::parse(SAMPLE_LINKS).unwrap();
+        let drv = build_driver(&s, 8).unwrap();
+        // scafflix does not need a sampler and none was requested
+        assert!(drv.sampler.is_none());
+        assert!(drv.up.is_some() && drv.down.is_none());
+        assert!(matches!(drv.topology, Topology::Hier(_)));
+        let s2 = Spec::parse(SAMPLE).unwrap();
+        let drv2 = build_driver(&s2, 10).unwrap();
+        assert!(drv2.sampler.is_some());
+        assert!(matches!(drv2.topology, Topology::Flat));
+    }
+
+    #[test]
+    fn build_driver_rejects_sampler_for_full_participation_kinds() {
+        let mut s = Spec::parse(SAMPLE_LINKS).unwrap(); // scafflix
+        s.algorithm.sampler = Some("nice".into());
+        assert!(build_driver(&s, 8).is_err());
+        s.algorithm.kind = "efbv".into();
+        assert!(build_driver(&s, 8).is_err());
+        // gd opts in gracefully (minibatch GD)
+        s.algorithm.kind = "gd".into();
+        let drv = build_driver(&s, 8).unwrap();
+        assert!(drv.sampler.is_some());
     }
 
     #[test]

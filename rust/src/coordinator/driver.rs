@@ -1,0 +1,362 @@
+//! The coordinator-owned round driver: one loop for every algorithm.
+//!
+//! [`Driver::run`] executes any [`FlAlgorithm`] against any
+//! [`Oracle`], owning everything around the math:
+//!
+//! * the round loop and [`RunOptions`] (eval cadence, seeds, references);
+//! * cohort selection through an optional [`CohortSampler`] (none =
+//!   full participation, no RNG consumed);
+//! * per-message bit accounting through [`CommLedger`] — cumulative
+//!   per-node uplink/downlink bits, the paper's x-axes;
+//! * optional link [`Compressor`]s on the uplink and downlink, opening
+//!   compositions the hand-rolled loops could not express (e.g.
+//!   Scafflix with Top-K uplink compression);
+//! * abstract communication cost under a [`Topology`]: flat (`c1 = 1`,
+//!   `c2 = 0`, a communicating round costs its local-round count) or a
+//!   2-level [`Hierarchy`] (`c2 + c1 * local_rounds` per global round);
+//! * optional thread-parallel client execution via
+//!   [`run_cohort_parallel`] ([`Driver::run_parallel`], for `Send + Sync`
+//!   oracles) when the algorithm advertises a shared
+//!   [`FlAlgorithm::grad_point`];
+//! * [`RunRecord`] emission at every eval round plus a final eval.
+
+use anyhow::Result;
+
+use super::hierarchy::Hierarchy;
+use super::{run_cohort_parallel, CommLedger};
+use crate::algorithms::api::{ClientMsg, FlAlgorithm, RoundCtx};
+use crate::algorithms::RunOptions;
+use crate::compress::Compressor;
+use crate::metrics::{RoundStat, RunRecord};
+use crate::oracle::Oracle;
+use crate::sampling::CohortSampler;
+
+/// Who talks to whom at what cost.
+#[derive(Debug, Clone, Default)]
+pub enum Topology {
+    /// Single-level: every local communication round costs 1.
+    #[default]
+    Flat,
+    /// Server–hub–client: client->hub rounds cost `c1`, the hub->server
+    /// exchange costs `c2` per global round.
+    Hier(Hierarchy),
+}
+
+impl Topology {
+    /// (c1, c2) of the cost model `c2 + c1 * local_rounds` per
+    /// communicating global round.
+    pub fn costs(&self) -> (f64, f64) {
+        match self {
+            Topology::Flat => (1.0, 0.0),
+            Topology::Hier(h) => (h.c1, h.c2),
+        }
+    }
+}
+
+type ParEval<'a> = dyn Fn(&[usize], &[f32]) -> Result<Vec<(usize, f32, Vec<f32>)>> + 'a;
+
+/// The coordinator's algorithm runner. Construct with [`Driver::new`] and
+/// the `with_*` builders; one driver can run any number of algorithms.
+#[derive(Default)]
+pub struct Driver {
+    /// Cohort sampler; `None` = full participation (consumes no RNG).
+    pub sampler: Option<Box<dyn CohortSampler>>,
+    /// Optional uplink (client -> server) compressor.
+    pub up: Option<Box<dyn Compressor>>,
+    /// Optional downlink (server -> client) compressor.
+    pub down: Option<Box<dyn Compressor>>,
+    /// Communication-cost topology.
+    pub topology: Topology,
+}
+
+impl Driver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_sampler(mut self, sampler: Box<dyn CohortSampler>) -> Self {
+        self.sampler = Some(sampler);
+        self
+    }
+
+    pub fn with_up(mut self, compressor: Box<dyn Compressor>) -> Self {
+        self.up = Some(compressor);
+        self
+    }
+
+    pub fn with_down(mut self, compressor: Box<dyn Compressor>) -> Self {
+        self.down = Some(compressor);
+        self
+    }
+
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Run `alg` for `opts.rounds` rounds from `x0`; clients execute on
+    /// the driver thread (required for the PJRT-backed oracles, whose FFI
+    /// handles are not `Send`).
+    pub fn run(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        self.run_inner(alg, oracle, None, None, x0, opts)
+    }
+
+    /// Like [`Driver::run`], but when the algorithm advertises a shared
+    /// [`FlAlgorithm::grad_point`] (and the oracle has no batched fast
+    /// path), cohort gradients are evaluated concurrently across OS
+    /// threads via [`run_cohort_parallel`].
+    pub fn run_parallel<O>(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord>
+    where
+        O: Oracle + Send + Sync,
+    {
+        let par = |cohort: &[usize], x: &[f32]| run_cohort_parallel(oracle, cohort, x);
+        self.run_inner(alg, oracle, Some(&par), None, x0, opts)
+    }
+
+    /// [`Driver::run_parallel`] with a live observer: `on_eval` fires at
+    /// every eval round (and the final one) as soon as its [`RoundStat`]
+    /// is recorded — the CLI `serve` demo streams JSON from this.
+    pub fn run_parallel_streaming<O, F>(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &O,
+        x0: &[f32],
+        opts: &RunOptions,
+        mut on_eval: F,
+    ) -> Result<RunRecord>
+    where
+        O: Oracle + Send + Sync,
+        F: FnMut(&RoundStat),
+    {
+        let par = |cohort: &[usize], x: &[f32]| run_cohort_parallel(oracle, cohort, x);
+        self.run_inner(alg, oracle, Some(&par), Some(&mut on_eval), x0, opts)
+    }
+
+    fn run_inner(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        par: Option<&ParEval<'_>>,
+        mut obs: Option<&mut dyn FnMut(&RoundStat)>,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        let n = oracle.n_clients();
+        let d = oracle.dim();
+        if self.sampler.is_some() && !alg.supports_cohort_sampling() {
+            anyhow::bail!(
+                "{} keeps full-fleet per-client state and does not support a cohort sampler",
+                alg.label()
+            );
+        }
+        alg.init(oracle, x0, opts)?;
+        let mut rec = RunRecord::new(alg.label());
+        let mut ledger = CommLedger::default();
+        let (c1, c2) = self.topology.costs();
+        let mut rng = crate::rng(opts.seed);
+        let mut cohort: Vec<usize> = Vec::with_capacity(n);
+        let mut point: Vec<f32> = Vec::new();
+        let mut gbuf = vec![0.0f32; d];
+
+        for t in 0..opts.rounds {
+            if t % opts.eval_every == 0 {
+                record_eval(alg, oracle, t, &ledger, opts, &mut rec)?;
+                if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
+                    cb(stat);
+                }
+            }
+            cohort.clear();
+            match &self.sampler {
+                Some(s) => cohort.extend(s.sample(&mut rng)),
+                None => cohort.extend(0..n),
+            }
+            alg.filter_cohort(&mut cohort, &mut rng);
+            let mut ctx = RoundCtx::new(
+                t,
+                opts.seed,
+                cohort.len(),
+                &mut rng,
+                self.sampler.as_deref(),
+                self.up.as_deref(),
+                self.down.as_deref(),
+            );
+
+            let shared = match alg.grad_point() {
+                Some(p) => {
+                    point.clear();
+                    point.extend_from_slice(p);
+                    true
+                }
+                None => false,
+            };
+            if shared {
+                // one-dispatch fast path when the oracle supports it
+                match oracle.all_loss_grads(&point)? {
+                    Some((_losses, grads)) => {
+                        for &i in &cohort {
+                            let msg = ClientMsg { grad: &grads[i * d..(i + 1) * d] };
+                            alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                        }
+                    }
+                    None => {
+                        if let Some(par) = par {
+                            for (i, _loss, grad) in par(&cohort, &point)? {
+                                let msg = ClientMsg { grad: &grad };
+                                alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                            }
+                        } else {
+                            for &i in &cohort {
+                                oracle.loss_grad(i, &point, &mut gbuf)?;
+                                let msg = ClientMsg { grad: &gbuf };
+                                alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                            }
+                        }
+                    }
+                }
+            } else {
+                for &i in &cohort {
+                    alg.client_step(oracle, i, None, &mut ctx)?;
+                }
+            }
+            alg.server_step(oracle, &cohort, &mut ctx)?;
+
+            // flush the round's accounting into the ledger (per-node avg)
+            if ctx.up_nodes > 0 {
+                ledger.up(ctx.up_bits / ctx.up_nodes);
+            }
+            if ctx.down_nodes > 0 {
+                ledger.down(ctx.down_bits / ctx.down_nodes);
+            }
+            if ctx.communicated {
+                ledger.charge(c2 + c1 * ctx.local_rounds as f64);
+            }
+            ledger.snapshot(t);
+        }
+        record_eval(alg, oracle, opts.rounds, &ledger, opts, &mut rec)?;
+        if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
+            cb(stat);
+        }
+        Ok(rec)
+    }
+}
+
+fn record_eval(
+    alg: &dyn FlAlgorithm,
+    oracle: &dyn Oracle,
+    round: usize,
+    ledger: &CommLedger,
+    opts: &RunOptions,
+    rec: &mut RunRecord,
+) -> Result<()> {
+    let x = alg.eval_point();
+    let (loss, grad_norm_sq) = alg.eval_loss(oracle, &x)?;
+    let gap = if alg.prefers_dist_gap() {
+        match (&opts.x_star, opts.f_star) {
+            (Some(xs), _) => Some(crate::vecmath::dist_sq(&x, xs)),
+            (None, Some(fs)) => Some(loss - fs),
+            _ => None,
+        }
+    } else {
+        match (opts.f_star, &opts.x_star) {
+            (Some(fs), _) => Some(loss - fs),
+            (None, Some(xs)) => Some(crate::vecmath::dist_sq(&x, xs)),
+            _ => None,
+        }
+    };
+    rec.push(RoundStat {
+        round,
+        bits_up: ledger.bits_up,
+        bits_down: ledger.bits_down,
+        comm_cost: ledger.cost,
+        loss,
+        gap,
+        grad_norm_sq,
+        eval: None,
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::gd::Gd;
+    use crate::oracle::quadratic::QuadraticOracle;
+    use crate::oracle::Oracle as _;
+
+    #[test]
+    fn driver_runs_gd_and_records_ledger() {
+        let mut rng = crate::rng(70);
+        let q = QuadraticOracle::random(4, 6, 0.5, 2.0, 1.0, &mut rng);
+        let mut alg = Gd::plain(4, 6, 0.3);
+        let opts = RunOptions { rounds: 40, eval_every: 10, ..Default::default() };
+        let rec = Driver::new().run(&mut alg, &q, &vec![1.0; 6], &opts).unwrap();
+        assert_eq!(rec.rounds.len(), 5);
+        // per-node dense bits on both links, once per round
+        let dense: u64 = 32 * 6;
+        let last = rec.last().unwrap();
+        assert_eq!(last.bits_up, dense * 40);
+        assert_eq!(last.bits_down, dense * 40);
+        assert_eq!(last.comm_cost, 40.0);
+        let first = rec.rounds.first().unwrap().loss;
+        assert!(last.loss < first);
+    }
+
+    #[test]
+    fn hierarchical_topology_prices_rounds() {
+        let mut rng = crate::rng(71);
+        let q = QuadraticOracle::random(6, 4, 0.5, 2.0, 1.0, &mut rng);
+        let mut alg = Gd::plain(6, 4, 0.2);
+        let opts = RunOptions { rounds: 10, eval_every: 10, ..Default::default() };
+        let h = Hierarchy::even(6, 2, 0.05, 1.0);
+        let drv = Driver::new().with_topology(Topology::Hier(h));
+        let rec = drv.run(&mut alg, &q, &vec![0.5; 4], &opts).unwrap();
+        // each round: c2 + c1 * 1 = 1.05
+        let cost = rec.last().unwrap().comm_cost;
+        assert!((cost - 10.5).abs() < 1e-9, "cost {cost}");
+    }
+
+    #[test]
+    fn parallel_run_matches_serial() {
+        let mut rng = crate::rng(72);
+        let q = QuadraticOracle::random(8, 5, 0.5, 2.0, 1.0, &mut rng);
+        let opts = RunOptions { rounds: 30, eval_every: 10, ..Default::default() };
+        let mut a = Gd::plain(8, 5, 0.3);
+        let rec_s = Driver::new().run(&mut a, &q, &vec![1.0; 5], &opts).unwrap();
+        let mut b = Gd::plain(8, 5, 0.3);
+        let rec_p = Driver::new().run_parallel(&mut b, &q, &vec![1.0; 5], &opts).unwrap();
+        for (s, p) in rec_s.rounds.iter().zip(&rec_p.rounds) {
+            assert_eq!(s.loss, p.loss);
+        }
+    }
+
+    #[test]
+    fn full_loss_decreases_under_uplink_compression() {
+        // GD + Top-K uplink = DCGD-style compressed gradient descent
+        let mut rng = crate::rng(73);
+        let q = QuadraticOracle::random(4, 8, 0.5, 2.0, 1.0, &mut rng);
+        let mut alg = Gd::plain(4, 8, 0.1);
+        let opts = RunOptions { rounds: 200, eval_every: 200, ..Default::default() };
+        let drv = Driver::new().with_up(Box::new(crate::compress::topk::TopK::new(4)));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 8], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().loss;
+        let last = rec.last().unwrap().loss;
+        assert!(last < first, "{first} -> {last}");
+        // compressed uplink must book fewer bits than dense
+        assert!(rec.last().unwrap().bits_up < 32u64 * 8 * 200);
+        let xs = q.minimizer();
+        let fs = q.full_loss(&xs).unwrap();
+        assert!(last - fs < 0.5, "neighborhood: {}", last - fs);
+    }
+}

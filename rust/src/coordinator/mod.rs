@@ -1,14 +1,16 @@
-//! The L3 coordinator: round orchestration, communication ledger,
-//! topologies, and the threaded client pump used by the CLI launcher.
+//! The L3 coordinator: the round [`driver::Driver`], communication
+//! ledger, topologies, and the threaded client pump.
 //!
-//! The algorithm modules own their mathematical loops; the coordinator
-//! owns *everything around them*: who talks to whom at what cost
-//! ([`hierarchy::Hierarchy`]), how bits are accounted ([`CommLedger`]),
-//! and how a fleet of clients executes concurrently
-//! ([`run_cohort_parallel`], for the `Send + Sync` pure-Rust oracles; the
-//! PJRT-backed oracles run on the driver thread because the FFI handles
-//! are not `Send`).
+//! The algorithm modules own only the *math* of a round (the
+//! [`crate::algorithms::api::FlAlgorithm`] trait); the coordinator owns
+//! everything around it: the round loop ([`driver::Driver`]), who talks
+//! to whom at what cost ([`hierarchy::Hierarchy`], [`driver::Topology`]),
+//! how bits are accounted ([`CommLedger`]), and how a fleet of clients
+//! executes concurrently ([`run_cohort_parallel`], for the `Send + Sync`
+//! pure-Rust oracles; the PJRT-backed oracles run on the driver thread
+//! because the FFI handles are not `Send`).
 
+pub mod driver;
 pub mod hierarchy;
 
 use anyhow::Result;

@@ -5,7 +5,19 @@
 //! Compression, Local Training, and Personalization"* (Kai Yi, KAUST 2025).
 //!
 //! The crate is the **Layer-3 coordinator** of the three-layer architecture
-//! described in `DESIGN.md`:
+//! described in `DESIGN.md`, organized around one split:
+//!
+//! **Algorithms are math; the coordinator is everything else.** Every
+//! method implements the unified round API
+//! ([`algorithms::api::FlAlgorithm`]: `init / client_step / server_step /
+//! eval_point`) and is executed by the coordinator-owned
+//! [`coordinator::driver::Driver`], which owns the round loop, cohort
+//! sampling, the [`coordinator::CommLedger`] bit/cost accounting, optional
+//! up/down link compressors and flat-vs-hierarchical topology costing.
+//! Because compression, local training, cohort sampling and personalization
+//! are orthogonal driver axes, they compose freely (e.g. Scafflix with a
+//! Top-K uplink, or FedAvg costed over a 2-level hierarchy) — the
+//! dissertation's central "unified framework" claim, in code.
 //!
 //! * [`runtime`] loads AOT-compiled HLO artifacts (lowered from the JAX /
 //!   Pallas layers at build time) and executes them on the PJRT CPU client —
@@ -14,16 +26,19 @@
 //!   `U(omega)`, `B(alpha)` and the unified `C(eta, omega)` (Ch. 2), with
 //!   exact per-message bit accounting.
 //! * [`algorithms`] implements GD, DIANA, EF21, EF-BV (Ch. 2), Scaffnew /
-//!   i-Scaffnew / Scafflix / FLIX (Ch. 3), FedAvg / LocalGD and SPPM-AS
-//!   (Ch. 5) over a common [`oracle::Oracle`] abstraction.
+//!   i-Scaffnew / Scafflix / FLIX (Ch. 3), FedAvg / LocalGD, Scaffold,
+//!   FedProx and SPPM-AS (Ch. 5) over a common [`oracle::Oracle`]
+//!   abstraction, all behind [`algorithms::api::FlAlgorithm`] with a
+//!   string-keyed [`algorithms::api::registry`] for config-driven dispatch.
 //! * [`pruning`] implements FedP3 (Ch. 4) and the post-training pruning
 //!   family: magnitude, Wanda, RIA, stochRIA, SymWanda, and the
 //!   training-free R²-DSnoT fine-tuner (Ch. 6).
 //! * [`sampling`] implements arbitrary cohort sampling (full, nonuniform,
-//!   nice, block, stratified + k-means clustering) for SPPM-AS.
-//! * [`coordinator`] orchestrates rounds, topologies (flat & hierarchical)
-//!   and the communication-cost ledger; [`metrics`] records every curve the
-//!   paper plots.
+//!   nice, block, stratified + k-means clustering), consumed by the driver
+//!   for every algorithm.
+//! * [`coordinator`] owns the round driver, topologies (flat &
+//!   hierarchical), the communication-cost ledger and the threaded client
+//!   pump; [`metrics`] records every curve the paper plots.
 //!
 //! See `examples/quickstart.rs` for a minimal end-to-end run.
 

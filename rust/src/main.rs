@@ -3,23 +3,29 @@
 //! Subcommands (hand-rolled arg parsing; fully offline build):
 //!   * `repro <id>|all [--fast] [--outdir DIR]` — regenerate a paper
 //!     table/figure (see DESIGN.md per-experiment index).
-//!   * `run <config.toml>` — run a custom experiment spec.
-//!   * `list`              — list experiments and compiled artifacts.
-//!   * `serve [--clients N] [--rounds R]` — threaded coordinator demo
-//!     streaming JSON round metrics.
+//!   * `run <config.toml>` — run a custom experiment spec; the algorithm
+//!     is resolved by name through the registry and executed by the
+//!     coordinator `Driver` (so any spec may add `[compressor]` /
+//!     `[topology]` sections).
+//!   * `list`              — list algorithms, experiments and artifacts.
+//!   * `serve [--clients N] [--rounds R] [--algorithm NAME]` — threaded
+//!     coordinator demo: the driver fans cohort gradient evaluation out
+//!     across OS threads and prints JSON round metrics.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use fedeff::algorithms::RunOptions;
+use fedeff::algorithms::{build_algorithm, registry, RunOptions};
+use fedeff::coordinator::driver::Driver;
 use fedeff::data::synth::Heterogeneity;
 use fedeff::metrics::write_runs;
+use fedeff::oracle::Oracle;
 
 const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | run <config.toml>
               | list
-              | serve [--clients N] [--rounds R]>";
+              | serve [--clients N] [--rounds R] [--algorithm NAME]>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -60,6 +66,10 @@ fn main() -> Result<()> {
             run_spec(config)
         }
         Some("list") => {
+            println!("algorithms:");
+            for a in registry() {
+                println!("  {a}");
+            }
             println!("experiments:");
             for e in fedeff::repro::EXPERIMENTS {
                 println!("  {e}");
@@ -79,7 +89,8 @@ fn main() -> Result<()> {
         Some("serve") => {
             let clients = opt_val(&args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(10);
             let rounds = opt_val(&args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100);
-            serve(clients, rounds)
+            let algorithm = opt_val(&args, "--algorithm").unwrap_or_else(|| "gd".into());
+            serve(clients, rounds, &algorithm)
         }
         _ => {
             eprintln!("{USAGE}");
@@ -88,12 +99,13 @@ fn main() -> Result<()> {
     }
 }
 
-/// Run a TOML experiment spec against the logreg substrate.
+/// Run a TOML experiment spec against the logreg substrate. The algorithm
+/// is resolved by name (no per-algorithm match arms) and driven by the
+/// coordinator `Driver` the spec describes.
 fn run_spec(path: &str) -> Result<()> {
     let spec = fedeff::config::Spec::load(path)?;
     let ex = &spec.experiment;
     let ds = &spec.dataset;
-    let al = &spec.algorithm;
     anyhow::ensure!(
         ds.kind == "logreg",
         "CLI `run` currently drives the logreg substrate; use `repro` for mlp/lm experiments"
@@ -122,59 +134,9 @@ fn run_spec(path: &str) -> Result<()> {
         ..Default::default()
     };
 
-    let rec = match al.kind.as_str() {
-        "gd" => {
-            let gd = fedeff::algorithms::gd::FlixGd::plain(
-                ds.clients,
-                d,
-                al.gamma.unwrap_or(0.5) / oracle.smoothness(0),
-            );
-            gd.run(oracle.as_ref(), &x0, &opts)?
-        }
-        "efbv" | "ef21" | "diana" => {
-            let comp = fedeff::config::build_compressor(al, d)?;
-            let mut alg = fedeff::algorithms::efbv::EfBv::new(comp.as_ref());
-            alg.variant = match al.kind.as_str() {
-                "ef21" => fedeff::algorithms::efbv::Variant::Ef21,
-                "diana" => fedeff::algorithms::efbv::Variant::Diana,
-                _ => fedeff::algorithms::efbv::Variant::EfBv,
-            };
-            alg.run(oracle.as_ref(), &x0, &opts)?
-        }
-        "scafflix" => {
-            let x_stars: Vec<Vec<f32>> = (0..ds.clients)
-                .map(|i| fedeff::oracle::solve_local(oracle.as_ref(), i, &x0, 0.5, 2000, 1e-6))
-                .collect::<Result<_>>()?;
-            let alg = fedeff::algorithms::scafflix::Scafflix::standard(
-                oracle.as_ref(),
-                al.alpha.unwrap_or(0.5),
-                al.p.unwrap_or(0.2),
-                x_stars,
-            );
-            alg.run(oracle.as_ref(), &x0, &opts)?
-        }
-        "fedavg" => {
-            let sampler = fedeff::config::build_sampler(al, ds.clients)?;
-            let alg = fedeff::algorithms::fedavg::FedAvg::new(
-                sampler.as_ref(),
-                al.local_steps.unwrap_or(5),
-                al.lr.unwrap_or(0.1),
-            );
-            alg.run(oracle.as_ref(), &x0, &opts)?
-        }
-        "sppm" => {
-            let sampler = fedeff::config::build_sampler(al, ds.clients)?;
-            let solver = fedeff::config::build_solver(al)?;
-            let alg = fedeff::algorithms::sppm::SppmAs::new(
-                sampler.as_ref(),
-                solver.as_ref(),
-                al.gamma.unwrap_or(100.0),
-                al.k_local.unwrap_or(5),
-            );
-            alg.run(oracle.as_ref(), &x0, &opts)?
-        }
-        other => anyhow::bail!("unknown algorithm kind {other}"),
-    };
+    let mut alg = build_algorithm(&spec.algorithm, oracle.as_ref())?;
+    let driver = fedeff::config::build_driver(&spec, ds.clients)?;
+    let rec = driver.run(alg.as_mut(), oracle.as_ref(), &x0, &opts)?;
 
     let outdir = PathBuf::from(&ex.outdir).join(&ex.name);
     write_runs(&outdir, std::slice::from_ref(&rec))?;
@@ -188,9 +150,10 @@ fn run_spec(path: &str) -> Result<()> {
     Ok(())
 }
 
-/// Threaded coordinator demo over the pure-Rust logreg fleet: every round
-/// fans the cohort out across OS threads and streams JSON metrics.
-fn serve(clients: usize, rounds: usize) -> Result<()> {
+/// Threaded coordinator demo over the pure-Rust logreg fleet: the driver
+/// fans each round's cohort out across OS threads (`run_parallel`) and
+/// prints JSON round metrics. Any registry algorithm can be served.
+fn serve(clients: usize, rounds: usize, algorithm: &str) -> Result<()> {
     let mut rng = fedeff::rng(0);
     let data = fedeff::data::synth::logreg_dataset(
         112,
@@ -201,22 +164,21 @@ fn serve(clients: usize, rounds: usize) -> Result<()> {
         &mut rng,
     );
     let oracle = fedeff::oracle::logreg_rs::RustLogReg::new(data, 0.1);
-    let d = 112;
-    let mut x = vec![0.0f32; d];
-    let lr = 0.5 / fedeff::oracle::Oracle::smoothness(&oracle, 0);
-    let cohort: Vec<usize> = (0..clients).collect();
-    for t in 0..rounds {
-        let results = fedeff::coordinator::run_cohort_parallel(&oracle, &cohort, &x)?;
-        let mut g = vec![0.0f32; d];
-        let mut loss = 0.0f32;
-        for (_, l, gi) in &results {
-            loss += l / clients as f32;
-            fedeff::vecmath::acc_mean(gi, clients as f32, &mut g);
-        }
-        fedeff::vecmath::axpy(-lr, &g, &mut x);
-        if t % 10 == 0 {
-            println!("{{\"round\":{t},\"loss\":{loss:.6}}}");
-        }
-    }
+    let d = oracle.dim();
+    let spec = fedeff::config::AlgorithmSpec { kind: algorithm.to_string(), ..Default::default() };
+    let mut alg = build_algorithm(&spec, &oracle)?;
+    let opts = RunOptions { rounds, eval_every: 10, seed: 0, ..Default::default() };
+    let _rec = Driver::new().run_parallel_streaming(
+        alg.as_mut(),
+        &oracle,
+        &vec![0.0f32; d],
+        &opts,
+        |r| {
+            println!(
+                "{{\"round\":{},\"loss\":{:.6},\"bits_up\":{},\"bits_down\":{},\"cost\":{}}}",
+                r.round, r.loss, r.bits_up, r.bits_down, r.comm_cost
+            );
+        },
+    )?;
     Ok(())
 }

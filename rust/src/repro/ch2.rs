@@ -8,6 +8,7 @@ use super::util::{fmt_cost, fmt_opt, logreg_oracle, try_runtime};
 use crate::algorithms::efbv::{EfBv, Variant};
 use crate::algorithms::RunOptions;
 use crate::compress::comp::CompKK;
+use crate::coordinator::driver::Driver;
 use crate::data::synth::Heterogeneity;
 use crate::metrics::{write_runs, Table};
 use crate::oracle::solve_reference;
@@ -40,9 +41,8 @@ pub fn fig2_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             (format!("comp-(2,{}) xi=1", d / 2), 2, d / 2, 1),
         ];
         for (label, k, kp, xi) in configs {
-            let comp = CompKK::new(k, kp);
             for variant in [Variant::EfBv, Variant::Ef21] {
-                let mut alg = EfBv::new(&comp);
+                let mut alg = EfBv::new(Box::new(CompKK::new(k, kp)));
                 alg.variant = variant;
                 alg.xi = xi;
                 // stepsize = 10x theoretical, tuned once and shared by both
@@ -56,7 +56,8 @@ pub fn fig2_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
                     seed: 7,
                     ..Default::default()
                 };
-                let mut rec = alg.run(oracle.as_ref(), &vec![0.0; d], &opts)?;
+                let mut rec =
+                    Driver::new().run(&mut alg, oracle.as_ref(), &vec![0.0; d], &opts)?;
                 rec.label = format!("fig2_2-{ds}-{label}-{}", alg.label());
                 let bits = rec
                     .rounds
@@ -108,9 +109,8 @@ pub fn fig_a1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     for ds in datasets {
         let oracle = logreg_oracle(rt.as_ref(), ds, n, Heterogeneity::FeatureShift(0.5), 0.0, 43)?;
         let d = oracle.dim();
-        let comp = CompKK::new(1, d / 2);
         for variant in [Variant::EfBv, Variant::Ef21] {
-            let mut alg = EfBv::new(&comp);
+            let mut alg = EfBv::new(Box::new(CompKK::new(1, d / 2)));
             alg.variant = variant;
             alg.gamma_mult = 10.0;
             let opts = RunOptions {
@@ -119,7 +119,7 @@ pub fn fig_a1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
                 seed: 11,
                 ..Default::default()
             };
-            let mut rec = alg.run(oracle.as_ref(), &vec![0.0; d], &opts)?;
+            let mut rec = Driver::new().run(&mut alg, oracle.as_ref(), &vec![0.0; d], &opts)?;
             rec.label = format!("figA_1-{ds}-{}", alg.label());
             let last = rec.last().unwrap();
             table.row(vec![

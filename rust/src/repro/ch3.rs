@@ -6,9 +6,10 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use super::util::{fmt_cost, fmt_opt, logreg_oracle, try_runtime};
-use crate::algorithms::gd::FlixGd;
+use crate::algorithms::gd::{FlixGd, Gd};
 use crate::algorithms::scafflix::Scafflix;
 use crate::algorithms::RunOptions;
+use crate::coordinator::driver::Driver;
 use crate::data::partition::Split;
 use crate::data::synth::Heterogeneity;
 use crate::metrics::{write_runs, Table};
@@ -60,10 +61,11 @@ pub fn fig3_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             ..Default::default()
         };
 
-        let sfx = Scafflix::standard(oracle.as_ref(), alpha, 0.1, x_stars.clone());
-        let mut rec_s = sfx.run(oracle.as_ref(), &x0, &opts)?;
+        let drv = Driver::new();
+        let mut sfx = Scafflix::standard(oracle.as_ref(), alpha, 0.1, x_stars.clone());
+        let mut rec_s = drv.run(&mut sfx, oracle.as_ref(), &x0, &opts)?;
         rec_s.label = format!("fig3_1-scafflix-a{alpha}");
-        let mut rec_g = flix.run(oracle.as_ref(), &x0, &opts)?;
+        let mut rec_g = drv.run(&mut Gd::new(flix), oracle.as_ref(), &x0, &opts)?;
         rec_g.label = format!("fig3_1-gd-a{alpha}");
 
         for (name, rec) in [("Scafflix", &rec_s), ("GD", &rec_g)] {
@@ -260,7 +262,7 @@ pub fn fig3_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     for &alpha in &[0.1f32, 0.3, 0.5, 0.7, 0.9] {
         let flix = FlixGd { alphas: vec![alpha; 20], x_stars: x_stars.clone(), gamma: 0.3 };
         let (_, fstar) = flix.solve_reference(oracle.as_ref(), &vec![0.0; d], 10000)?;
-        let alg = Scafflix::standard(oracle.as_ref(), alpha, 0.2, x_stars.clone());
+        let mut alg = Scafflix::standard(oracle.as_ref(), alpha, 0.2, x_stars.clone());
         let opts = RunOptions {
             rounds,
             eval_every: rounds,
@@ -268,7 +270,7 @@ pub fn fig3_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             seed: 9,
             ..Default::default()
         };
-        let rec = alg.run(oracle.as_ref(), &x0, &opts)?;
+        let rec = Driver::new().run(&mut alg, oracle.as_ref(), &x0, &opts)?;
         let last = rec.last().unwrap();
         t_alpha.row(vec![format!("{alpha}"), format!("{:.5}", last.loss), fmt_opt(last.gap)]);
     }
@@ -281,7 +283,7 @@ pub fn fig3_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         let mut alg = Scafflix::standard(oracle.as_ref(), 0.5, 0.2, x_stars.clone());
         alg.clients_per_round = Some(tau);
         let opts = RunOptions { rounds, eval_every: rounds, seed: 10, ..Default::default() };
-        let rec = alg.run(oracle.as_ref(), &x0, &opts)?;
+        let rec = Driver::new().run(&mut alg, oracle.as_ref(), &x0, &opts)?;
         t_tau.row(vec![format!("{tau}"), format!("{:.5}", rec.last().unwrap().loss)]);
     }
 
@@ -290,9 +292,9 @@ pub fn fig3_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         &["p", "final FLIX loss", "comms used"],
     );
     for &p in &[0.1f32, 0.2, 0.5] {
-        let alg = Scafflix::standard(oracle.as_ref(), 0.5, p, x_stars.clone());
+        let mut alg = Scafflix::standard(oracle.as_ref(), 0.5, p, x_stars.clone());
         let opts = RunOptions { rounds, eval_every: rounds, seed: 11, ..Default::default() };
-        let rec = alg.run(oracle.as_ref(), &x0, &opts)?;
+        let rec = Driver::new().run(&mut alg, oracle.as_ref(), &x0, &opts)?;
         let last = rec.last().unwrap();
         t_p.row(vec![
             format!("{p}"),
@@ -322,9 +324,9 @@ pub fn fig3_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     );
     for &(eps, iters) in &[(1e-1f32, 50usize), (1e-3, 500), (1e-6, 5000)] {
         let x_stars = local_optima(oracle.as_ref(), eps, iters)?;
-        let alg = Scafflix::standard(oracle.as_ref(), alpha, 0.2, x_stars);
+        let mut alg = Scafflix::standard(oracle.as_ref(), alpha, 0.2, x_stars);
         let opts = RunOptions { rounds, eval_every: rounds, seed: 12, ..Default::default() };
-        let rec = alg.run(oracle.as_ref(), &vec![0.5; d], &opts)?;
+        let rec = Driver::new().run(&mut alg, oracle.as_ref(), &vec![0.5; d], &opts)?;
         table.row(vec![
             format!("{eps:.0e}"),
             format!("{iters}"),
@@ -361,16 +363,17 @@ pub fn fig3_5(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         &["stepsize scheme", "comms@eps", "final gap"],
     );
     let eps = if fast { 1e-4 } else { 1e-6 };
+    let drv = Driver::new();
     // individual gamma_i = 1/L_i
-    let alg_i = Scafflix::standard(oracle.as_ref(), 0.5, 0.2, x_stars.clone());
-    let rec_i = alg_i.run(oracle.as_ref(), &x0, &opts)?;
+    let mut alg_i = Scafflix::standard(oracle.as_ref(), 0.5, 0.2, x_stars.clone());
+    let rec_i = drv.run(&mut alg_i, oracle.as_ref(), &x0, &opts)?;
     // global gamma = 1/max L_i
     let lmax = (0..10).map(|i| oracle.smoothness(i)).fold(0.0f32, f32::max);
     let mut alg_g = Scafflix::standard(oracle.as_ref(), 0.5, 0.2, x_stars);
     for g in alg_g.gammas.iter_mut() {
         *g = 1.0 / lmax;
     }
-    let rec_g = alg_g.run(oracle.as_ref(), &x0, &opts)?;
+    let rec_g = drv.run(&mut alg_g, oracle.as_ref(), &x0, &opts)?;
 
     for (name, rec) in [("individual 1/L_i", &rec_i), ("global 1/L_max", &rec_g)] {
         let comms = rec

@@ -8,12 +8,14 @@ use super::util::{fmt_cost, try_runtime};
 use crate::algorithms::fedavg::FedAvg;
 use crate::algorithms::sppm::SppmAs;
 use crate::algorithms::RunOptions;
+use crate::config::solver_by_name;
+use crate::coordinator::driver::{Driver, Topology};
 use crate::coordinator::hierarchy::Hierarchy;
 use crate::data::synth::Heterogeneity;
 use crate::plot;
 use crate::metrics::{write_runs, Table};
 use crate::oracle::{solve_reference, Oracle};
-use crate::prox::{CgSolver, LbfgsSolver, LocalGdSolver, ProxSolver};
+use crate::prox::{LbfgsSolver, ProxSolver};
 use crate::sampling::{BlockSampling, CohortSampler, NiceSampling, StratifiedSampling};
 
 struct Setup {
@@ -53,20 +55,21 @@ fn setup_b(profile: &str, n: usize, b: usize, seed: u64) -> Result<Setup> {
 
 /// Total cost TK for SPPM to reach ||x - x*||^2 <= eps, for a given gamma
 /// and K (flat cost model). None if not reached.
+#[allow(clippy::too_many_arguments)]
 fn sppm_cost_to_eps(
     s: &Setup,
-    sampler: &dyn CohortSampler,
-    solver: &dyn ProxSolver,
+    sampler: Box<dyn CohortSampler>,
+    solver: Box<dyn ProxSolver>,
     gamma: f32,
     k: usize,
     eps: f32,
     max_globals: usize,
     hier: Option<&Hierarchy>,
 ) -> Result<Option<f64>> {
-    let mut alg = SppmAs::new(sampler, solver, gamma, k);
+    let mut alg = SppmAs::new(solver, gamma, k);
+    let mut drv = Driver::new().with_sampler(sampler);
     if let Some(h) = hier {
-        alg.c1 = h.c1;
-        alg.c2 = h.c2;
+        drv = drv.with_topology(Topology::Hier(h.clone()));
     }
     let opts = RunOptions {
         rounds: max_globals,
@@ -75,7 +78,7 @@ fn sppm_cost_to_eps(
         seed: 3,
         ..Default::default()
     };
-    let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+    let rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
     Ok(rec.cost_to_gap(eps))
 }
 
@@ -95,14 +98,12 @@ pub fn fig5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     );
     for profile in profiles {
         let s = setup(profile, n, 60)?;
-        let sampler = StratifiedSampling::new(s.blocks.clone());
-        let solver = LbfgsSolver::default();
 
         // LocalGD baseline: each global round costs 1; tune local steps
         let mut best_lgd: Option<f64> = None;
         for &steps in &[1usize, 2, 4, 8] {
-            let fa_sampler = NiceSampling { n, tau: 5 };
-            let alg = FedAvg::new(&fa_sampler, steps, 0.5 / s.oracle.smoothness(0));
+            let mut alg = FedAvg::new(steps, 0.5 / s.oracle.smoothness(0));
+            let drv = Driver::new().with_sampler(Box::new(NiceSampling { n, tau: 5 }));
             let opts = RunOptions {
                 rounds: max_globals * 4,
                 eval_every: 1,
@@ -110,7 +111,7 @@ pub fn fig5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
                 seed: 3,
                 ..Default::default()
             };
-            let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+            let rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
             if let Some(c) = rec.cost_to_gap(eps) {
                 best_lgd = Some(best_lgd.map_or(c, |b: f64| b.min(c)));
             }
@@ -119,9 +120,16 @@ pub fn fig5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         for &gamma in gammas {
             let mut best: Option<(usize, f64)> = None;
             for &k in ks {
-                if let Some(cost) =
-                    sppm_cost_to_eps(&s, &sampler, &solver, gamma, k, eps, max_globals, None)?
-                {
+                if let Some(cost) = sppm_cost_to_eps(
+                    &s,
+                    Box::new(StratifiedSampling::new(s.blocks.clone())),
+                    Box::new(LbfgsSolver::default()),
+                    gamma,
+                    k,
+                    eps,
+                    max_globals,
+                    None,
+                )? {
                     if best.map_or(true, |(_, b)| cost < b) {
                         best = Some((k, cost));
                     }
@@ -145,7 +153,6 @@ pub fn fig5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
 pub fn fig5_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     let n = 20;
     let s = setup("a6a", n, 61)?;
-    let sampler = StratifiedSampling::new(s.blocks.clone());
     let ks: &[usize] = if fast { &[1, 2, 4, 8, 16] } else { &[1, 2, 3, 4, 6, 8, 10, 12, 16] };
     let max_globals = if fast { 120 } else { 400 };
     let gamma = 100.0f32;
@@ -154,19 +161,26 @@ pub fn fig5_2(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         "Fig 5.2: best (K, TK) across solvers / eps / topology (gamma=100)",
         &["variant", "best K", "best cost"],
     );
-    let bfgs = LbfgsSolver::default();
-    let cg = CgSolver;
     let hier = Hierarchy::even(n, 4, 0.1, 1.0);
-    let cases: Vec<(&str, &dyn ProxSolver, f32, Option<&Hierarchy>)> = vec![
-        ("BFGS eps=5e-3 flat", &bfgs, 5e-3, None),
-        ("CG eps=5e-3 flat", &cg, 5e-3, None),
-        ("BFGS eps=1e-2 flat", &bfgs, 1e-2, None),
-        ("BFGS eps=5e-3 hier(c1=0.1,c2=1)", &bfgs, 5e-3, Some(&hier)),
+    let cases: Vec<(&str, &str, f32, Option<&Hierarchy>)> = vec![
+        ("BFGS eps=5e-3 flat", "bfgs", 5e-3, None),
+        ("CG eps=5e-3 flat", "cg", 5e-3, None),
+        ("BFGS eps=1e-2 flat", "bfgs", 1e-2, None),
+        ("BFGS eps=5e-3 hier(c1=0.1,c2=1)", "bfgs", 5e-3, Some(&hier)),
     ];
     for (name, solver, eps, h) in cases {
         let mut best: Option<(usize, f64)> = None;
         for &k in ks {
-            if let Some(cost) = sppm_cost_to_eps(&s, &sampler, solver, gamma, k, eps, max_globals, h)? {
+            if let Some(cost) = sppm_cost_to_eps(
+                &s,
+                Box::new(StratifiedSampling::new(s.blocks.clone())),
+                solver_by_name(solver)?,
+                gamma,
+                k,
+                eps,
+                max_globals,
+                h,
+            )? {
                 if best.map_or(true, |(_, b)| cost < b) {
                     best = Some((k, cost));
                 }
@@ -187,22 +201,23 @@ pub fn fig5_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     let n = 20;
     let s = setup("mushrooms", n, 62)?;
     let rounds = if fast { 40 } else { 150 };
-    let solver = LbfgsSolver::default();
     let gamma = 10.0;
     let k = 8;
-
-    let ss = StratifiedSampling::new(s.blocks.clone());
-    let bs = BlockSampling::new(s.blocks.clone(), None);
-    let nice = NiceSampling { n, tau: 5 };
 
     let mut table = Table::new(
         "Fig 5.3: sampling comparison (final ||x - x*||^2)",
         &["sampler", "final dist^2"],
     );
     let mut runs = Vec::new();
-    let samplers: Vec<&dyn CohortSampler> = vec![&ss, &bs, &nice];
+    let samplers: Vec<Box<dyn CohortSampler>> = vec![
+        Box::new(StratifiedSampling::new(s.blocks.clone())),
+        Box::new(BlockSampling::new(s.blocks.clone(), None)),
+        Box::new(NiceSampling { n, tau: 5 }),
+    ];
     for sampler in samplers {
-        let alg = SppmAs::new(sampler, &solver, gamma, k);
+        let name = sampler.name();
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), gamma, k);
+        let drv = Driver::new().with_sampler(sampler);
         let opts = RunOptions {
             rounds,
             eval_every: (rounds / 20).max(1),
@@ -210,10 +225,10 @@ pub fn fig5_3(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             seed: 4,
             ..Default::default()
         };
-        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
-        rec.label = format!("fig5_3-{}", sampler.name());
+        let mut rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
+        rec.label = format!("fig5_3-{name}");
         table.row(vec![
-            sampler.name(),
+            name,
             format!("{:.3e}", rec.last().unwrap().gap.unwrap()),
         ]);
         runs.push(rec);
@@ -233,10 +248,6 @@ pub fn fig5_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     let n = 20;
     let s = setup_b("a9a", n, 10, 63)?;
     let rounds = if fast { 50 } else { 200 };
-    let solver = LbfgsSolver::default();
-
-    let ss = StratifiedSampling::new(s.blocks.clone());
-    let nice = NiceSampling { n, tau: 10 };
 
     let mut table = Table::new(
         "Fig 5.4: SPPM-SS vs minibatch baselines (final ||x-x*||^2, cohort 10)",
@@ -244,7 +255,9 @@ pub fn fig5_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     );
     let mut runs = Vec::new();
     {
-        let alg = SppmAs::new(&ss, &solver, 1.0, 8);
+        let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 1.0, 8);
+        let drv = Driver::new()
+            .with_sampler(Box::new(StratifiedSampling::new(s.blocks.clone())));
         let opts = RunOptions {
             rounds,
             eval_every: (rounds / 20).max(1),
@@ -252,14 +265,15 @@ pub fn fig5_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             seed: 5,
             ..Default::default()
         };
-        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        let mut rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
         rec.label = "fig5_4-SPPM-SS".into();
         table.row(vec!["SPPM-SS".into(), format!("{:.3e}", rec.last().unwrap().gap.unwrap())]);
         runs.push(rec);
     }
     let lr = 0.5 / s.oracle.smoothness(0);
     for (name, steps) in [("MB-GD", 1usize), ("MB-LocalGD (5 steps)", 5)] {
-        let alg = FedAvg::new(&nice, steps, lr);
+        let mut alg = FedAvg::new(steps, lr);
+        let drv = Driver::new().with_sampler(Box::new(NiceSampling { n, tau: 10 }));
         let opts = RunOptions {
             rounds,
             eval_every: (rounds / 20).max(1),
@@ -267,7 +281,7 @@ pub fn fig5_4(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             seed: 5,
             ..Default::default()
         };
-        let mut rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        let mut rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
         rec.label = format!("fig5_4-{name}");
         table.row(vec![name.into(), format!("{:.3e}", rec.last().unwrap().gap.unwrap())]);
         runs.push(rec);
@@ -290,19 +304,18 @@ pub fn fig5_6(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     let eps = 5e-2f32;
     let max_globals = if fast { 120 } else { 400 };
     let hier = Hierarchy::even(n, 4, 0.05, 1.0);
-    let sampler = StratifiedSampling::new(s.blocks.clone());
-    let solver = LbfgsSolver::default();
 
     let mut table = Table::new(
         "Fig 5.6: hierarchical FL cost to eps (c1=0.05, c2=1)",
         &["method", "best K", "cost", "reduction vs LocalGD"],
     );
-    // LocalGD baseline: cost (c1+c2) per global round
+    // LocalGD baseline: cost (c1+c2) per global round under the hierarchy
     let mut lgd_cost: Option<f64> = None;
     for &steps in &[1usize, 2, 4, 8] {
-        let fa_sampler = NiceSampling { n, tau: 5 };
-        let mut alg = FedAvg::new(&fa_sampler, steps, 0.5 / s.oracle.smoothness(0));
-        alg.cost_per_round = hier.localgd_round_cost();
+        let mut alg = FedAvg::new(steps, 0.5 / s.oracle.smoothness(0));
+        let drv = Driver::new()
+            .with_sampler(Box::new(NiceSampling { n, tau: 5 }))
+            .with_topology(Topology::Hier(hier.clone()));
         let opts = RunOptions {
             rounds: max_globals * 4,
             eval_every: 1,
@@ -310,16 +323,23 @@ pub fn fig5_6(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
             seed: 6,
             ..Default::default()
         };
-        let rec = alg.run(s.oracle.as_ref(), &s.x0, &opts)?;
+        let rec = drv.run(&mut alg, s.oracle.as_ref(), &s.x0, &opts)?;
         if let Some(c) = rec.cost_to_gap(eps) {
             lgd_cost = Some(lgd_cost.map_or(c, |b: f64| b.min(c)));
         }
     }
     let mut best: Option<(usize, f64)> = None;
     for &k in &[1usize, 2, 4, 8, 12, 16] {
-        if let Some(cost) =
-            sppm_cost_to_eps(&s, &sampler, &solver, 100.0, k, eps, max_globals, Some(&hier))?
-        {
+        if let Some(cost) = sppm_cost_to_eps(
+            &s,
+            Box::new(StratifiedSampling::new(s.blocks.clone())),
+            Box::new(LbfgsSolver::default()),
+            100.0,
+            k,
+            eps,
+            max_globals,
+            Some(&hier),
+        )? {
             if best.map_or(true, |(_, b)| cost < b) {
                 best = Some((k, cost));
             }
@@ -345,7 +365,6 @@ pub fn fig5_6(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
 pub fn tab5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
     let n = 20;
     let s = setup("a6a", n, 65)?;
-    let sampler = StratifiedSampling::new(s.blocks.clone());
     let eps = 5e-3f32;
     let max_globals = if fast { 100 } else { 300 };
     let ks: &[usize] = if fast { &[1, 4, 16] } else { &[1, 2, 4, 8, 16] };
@@ -354,19 +373,25 @@ pub fn tab5_1(fast: bool, outdir: &Path) -> Result<Vec<Table>> {
         "Tab 5.1: KT summary — gamma x K x solver",
         &["gamma", "K", "solver", "TK to eps"],
     );
-    let bfgs = LbfgsSolver::default();
-    let cg = CgSolver;
-    let gd = LocalGdSolver;
-    let solvers: Vec<&dyn ProxSolver> = vec![&bfgs, &cg, &gd];
     for &gamma in &[1.0f32, 100.0] {
         for &k in ks {
-            for solver in &solvers {
-                let cost =
-                    sppm_cost_to_eps(&s, &sampler, *solver, gamma, k, eps, max_globals, None)?;
+            for solver_key in ["bfgs", "cg", "gd"] {
+                let solver = solver_by_name(solver_key)?;
+                let solver_label: String = solver.name().into();
+                let cost = sppm_cost_to_eps(
+                    &s,
+                    Box::new(StratifiedSampling::new(s.blocks.clone())),
+                    solver,
+                    gamma,
+                    k,
+                    eps,
+                    max_globals,
+                    None,
+                )?;
                 table.row(vec![
                     format!("{gamma}"),
                     format!("{k}"),
-                    solver.name().into(),
+                    solver_label,
                     fmt_cost(cost),
                 ]);
             }

@@ -8,6 +8,7 @@ use fedeff::algorithms::scafflix::Scafflix;
 use fedeff::algorithms::sppm::SppmAs;
 use fedeff::algorithms::RunOptions;
 use fedeff::compress::topk::TopK;
+use fedeff::coordinator::driver::Driver;
 use fedeff::data::synth::{logreg_dataset, Heterogeneity};
 use fedeff::oracle::hlo::HloLogReg;
 use fedeff::oracle::{solve_local, solve_reference, Oracle};
@@ -33,11 +34,10 @@ fn efbv_on_hlo_oracle_converges() {
     let Some(o) = oracle() else { return };
     let d = o.dim();
     let (_, fs) = solve_reference(&o, &vec![0.0; d], 0.5, 3000, 1e-8).unwrap();
-    let comp = TopK::new(4);
-    let alg = EfBv::new(&comp);
+    let mut alg = EfBv::new(Box::new(TopK::new(4)));
     let opts =
         RunOptions { rounds: 300, eval_every: 50, f_star: Some(fs), seed: 1, ..Default::default() };
-    let rec = alg.run(&o, &vec![0.3; d], &opts).unwrap();
+    let rec = Driver::new().run(&mut alg, &o, &vec![0.3; d], &opts).unwrap();
     let first = rec.rounds.first().unwrap().gap.unwrap();
     let last = rec.last().unwrap().gap.unwrap();
     assert!(last < first * 0.05, "gap {first} -> {last}");
@@ -50,9 +50,9 @@ fn scafflix_on_hlo_oracle_converges() {
     let x_stars: Vec<Vec<f32>> = (0..o.n_clients())
         .map(|i| solve_local(&o, i, &vec![0.0; d], 0.5, 1500, 1e-6).unwrap())
         .collect();
-    let alg = Scafflix::standard(&o, 0.5, 0.3, x_stars);
+    let mut alg = Scafflix::standard(&o, 0.5, 0.3, x_stars);
     let opts = RunOptions { rounds: 400, eval_every: 100, seed: 2, ..Default::default() };
-    let rec = alg.run(&o, &vec![0.5; d], &opts).unwrap();
+    let rec = Driver::new().run(&mut alg, &o, &vec![0.5; d], &opts).unwrap();
     let first = rec.rounds.first().unwrap().loss;
     let last = rec.last().unwrap().loss;
     assert!(last < first, "FLIX loss {first} -> {last}");
@@ -63,12 +63,11 @@ fn sppm_on_hlo_oracle_reaches_neighborhood() {
     let Some(o) = oracle() else { return };
     let d = o.dim();
     let (xs, _) = solve_reference(&o, &vec![0.0; d], 0.5, 3000, 1e-8).unwrap();
-    let sampler = NiceSampling { n: 10, tau: 4 };
-    let solver = LbfgsSolver::default();
-    let alg = SppmAs::new(&sampler, &solver, 50.0, 10);
+    let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 50.0, 10);
+    let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 10, tau: 4 }));
     let opts =
         RunOptions { rounds: 25, eval_every: 5, x_star: Some(xs), seed: 3, ..Default::default() };
-    let rec = alg.run(&o, &vec![1.0; d], &opts).unwrap();
+    let rec = drv.run(&mut alg, &o, &vec![1.0; d], &opts).unwrap();
     let first = rec.rounds.first().unwrap().gap.unwrap();
     let last = rec.last().unwrap().gap.unwrap();
     assert!(last < first * 0.05, "dist^2 {first} -> {last}");

@@ -1,0 +1,420 @@
+//! The redesign's safety net: the `Driver`-based algorithms must
+//! reproduce the seed (pre-driver) hand-rolled loops *bit-for-bit* on the
+//! quadratic oracle at fixed seeds. The reference loops below are verbatim
+//! copies of the seed implementations of GD, FedAvg and Scafflix.
+//!
+//! Also covers the registry (every advertised name constructs and runs)
+//! and the two previously-impossible compositions the redesign opens:
+//! Scafflix with Top-K uplink compression and FedAvg costed over a
+//! 2-level hierarchy — both reachable from a TOML spec.
+
+use fedeff::algorithms::gd::{FlixGd, Gd};
+use fedeff::algorithms::scafflix::Scafflix;
+use fedeff::algorithms::{build_algorithm, registry, RunOptions};
+use fedeff::coordinator::driver::{Driver, Topology};
+use fedeff::coordinator::hierarchy::Hierarchy;
+use fedeff::metrics::RunRecord;
+use fedeff::oracle::quadratic::QuadraticOracle;
+use fedeff::oracle::{solve_local, Oracle};
+use fedeff::sampling::{CohortSampler, NiceSampling};
+use fedeff::vecmath as vm;
+
+type Series = Vec<(f32, Option<f32>)>;
+
+fn series_of(rec: &RunRecord) -> Series {
+    rec.rounds.iter().map(|r| (r.loss, r.gap)).collect()
+}
+
+fn assert_series_eq(driver: &Series, seed: &Series, what: &str) {
+    assert_eq!(driver.len(), seed.len(), "{what}: series lengths differ");
+    for (i, (d, s)) in driver.iter().zip(seed).enumerate() {
+        assert!(
+            d.0 == s.0 && d.1 == s.1,
+            "{what}: entry {i} differs: driver {d:?} vs seed {s:?}"
+        );
+    }
+}
+
+fn erm_eval(q: &QuadraticOracle, x: &[f32], opts: &RunOptions) -> (f32, Option<f32>) {
+    let mut g = vec![0.0f32; q.dim()];
+    let loss = q.full_loss_grad(x, &mut g).unwrap();
+    let gap = match (opts.f_star, &opts.x_star) {
+        (Some(fs), _) => Some(loss - fs),
+        (None, Some(xs)) => Some(vm::dist_sq(x, xs)),
+        _ => None,
+    };
+    (loss, gap)
+}
+
+/// Verbatim copy of the seed `FlixGd::run` loop (loss/gap series only).
+fn seed_gd_series(flix: &FlixGd, q: &QuadraticOracle, x0: &[f32], opts: &RunOptions) -> Series {
+    let d = q.dim();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut out = Vec::new();
+    for t in 0..opts.rounds {
+        let loss = flix.flix_loss_grad(q, &x, &mut g).unwrap();
+        if t % opts.eval_every == 0 {
+            out.push((loss, opts.f_star.map(|fs| loss - fs)));
+        }
+        vm::axpy(-flix.gamma, &g, &mut x);
+    }
+    // seed final record: ERM record_eval, loss/gap then fixed to FLIX
+    let loss = flix.flix_loss(q, &x).unwrap();
+    out.push((loss, opts.f_star.map(|fs| loss - fs)));
+    out
+}
+
+/// Verbatim copy of the seed `FedAvg::run` loop.
+#[allow(clippy::too_many_arguments)]
+fn seed_fedavg_series(
+    q: &QuadraticOracle,
+    sampler: &NiceSampling,
+    local_steps: usize,
+    lr: f32,
+    dropout: f32,
+    x0: &[f32],
+    opts: &RunOptions,
+) -> Series {
+    let d = q.dim();
+    let mut rng = fedeff::rng(opts.seed);
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; d];
+    let mut xi = vec![0.0f32; d];
+    let mut next = vec![0.0f32; d];
+    let mut out = Vec::new();
+    for t in 0..opts.rounds {
+        if t % opts.eval_every == 0 {
+            out.push(erm_eval(q, &x, opts));
+        }
+        let mut cohort = sampler.sample(&mut rng);
+        if dropout > 0.0 {
+            cohort.retain(|_| !rng.bernoulli(dropout));
+        }
+        if cohort.is_empty() {
+            continue; // wasted round: every sampled client dropped
+        }
+        next.fill(0.0);
+        for &i in &cohort {
+            xi.copy_from_slice(&x);
+            for _ in 0..local_steps {
+                q.loss_grad(i, &xi, &mut g).unwrap();
+                vm::axpy(-lr, &g, &mut xi);
+            }
+            vm::acc_mean(&xi, cohort.len() as f32, &mut next);
+        }
+        x.copy_from_slice(&next);
+    }
+    out.push(erm_eval(q, &x, opts));
+    out
+}
+
+/// Verbatim copy of the seed `Scafflix::run` loop.
+#[allow(clippy::too_many_arguments)]
+fn seed_scafflix_series(
+    q: &QuadraticOracle,
+    alphas: &[f32],
+    x_stars: &[Vec<f32>],
+    gammas: &[f32],
+    p: f32,
+    clients_per_round: Option<usize>,
+    x0: &[f32],
+    opts: &RunOptions,
+) -> Series {
+    fn flixify(alphas: &[f32], x_stars: &[Vec<f32>], i: usize, x: &[f32], out: &mut [f32]) {
+        let a = alphas[i];
+        for j in 0..x.len() {
+            out[j] = a * x[j] + (1.0 - a) * x_stars[i][j];
+        }
+    }
+    let d = q.dim();
+    let n = q.n_clients();
+    let flix = FlixGd { alphas: alphas.to_vec(), x_stars: x_stars.to_vec(), gamma: 0.0 };
+    let gamma_srv = 1.0
+        / ((0..n).map(|i| alphas[i] * alphas[i] / gammas[i]).sum::<f32>() / n as f32);
+    let mut rng = fedeff::rng(opts.seed);
+    let mut x_i = vec![x0.to_vec(); n];
+    let mut h_i = vec![vec![0.0f32; d]; n];
+    let mut hat = vec![vec![0.0f32; d]; n];
+    let mut tilde = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    let mut xbar = vec![0.0f32; d];
+    let mut out = Vec::new();
+
+    for t in 0..opts.rounds {
+        if t % opts.eval_every == 0 {
+            xbar.fill(0.0);
+            for xi in &x_i {
+                vm::acc_mean(xi, n as f32, &mut xbar);
+            }
+            let loss = flix.flix_loss(q, &xbar).unwrap();
+            out.push((loss, opts.f_star.map(|fs| loss - fs)));
+        }
+        for i in 0..n {
+            flixify(alphas, x_stars, i, &x_i[i], &mut tilde);
+            q.loss_grad(i, &tilde, &mut g).unwrap();
+            let step = gammas[i] / alphas[i].max(1e-8);
+            for j in 0..d {
+                hat[i][j] = x_i[i][j] - step * (g[j] - h_i[i][j]);
+            }
+        }
+        if rng.f32_unit() < p {
+            let participants: Vec<usize> = match clients_per_round {
+                None => (0..n).collect(),
+                Some(tau) => {
+                    let mut idx: Vec<usize> = (0..n).collect();
+                    rng.shuffle(&mut idx);
+                    idx.truncate(tau.min(n));
+                    idx
+                }
+            };
+            let norm = participants.len() as f32;
+            xbar.fill(0.0);
+            for &jc in &participants {
+                let w = gamma_srv * alphas[jc] * alphas[jc] / gammas[jc] / norm;
+                vm::axpy(w, &hat[jc], &mut xbar);
+            }
+            for &i in &participants {
+                let coef = p * alphas[i] / gammas[i];
+                for j in 0..d {
+                    h_i[i][j] += coef * (xbar[j] - hat[i][j]);
+                }
+                x_i[i].copy_from_slice(&xbar);
+            }
+            for i in 0..n {
+                if !participants.contains(&i) {
+                    x_i[i].copy_from_slice(&hat[i]);
+                }
+            }
+        } else {
+            for i in 0..n {
+                x_i[i].copy_from_slice(&hat[i]);
+            }
+        }
+    }
+    xbar.fill(0.0);
+    for xi in &x_i {
+        vm::acc_mean(xi, n as f32, &mut xbar);
+    }
+    let loss = flix.flix_loss(q, &xbar).unwrap();
+    out.push((loss, opts.f_star.map(|fs| loss - fs)));
+    out
+}
+
+fn quadratic(seed: u64, n: usize, d: usize) -> QuadraticOracle {
+    let mut rng = fedeff::rng(seed);
+    QuadraticOracle::random(n, d, 0.5, 2.0, 1.0, &mut rng)
+}
+
+#[test]
+fn driver_gd_matches_seed_loop_plain() {
+    let q = quadratic(27, 4, 6);
+    let xs = q.minimizer();
+    let fs = q.full_loss(&xs).unwrap();
+    let x0 = vec![1.0f32; 6];
+    let opts =
+        RunOptions { rounds: 120, eval_every: 10, f_star: Some(fs), seed: 7, ..Default::default() };
+    let flix = FlixGd::plain(4, 6, 0.4);
+    let expected = seed_gd_series(&flix, &q, &x0, &opts);
+    let mut alg = Gd::new(flix);
+    let rec = Driver::new().run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "plain GD");
+}
+
+#[test]
+fn driver_gd_matches_seed_loop_personalized() {
+    let q = quadratic(28, 5, 7);
+    let x_stars: Vec<Vec<f32>> = (0..5)
+        .map(|i| solve_local(&q, i, &vec![0.0; 7], 0.3, 600, 1e-7).unwrap())
+        .collect();
+    let flix = FlixGd { alphas: vec![0.5; 5], x_stars, gamma: 0.3 };
+    let x0 = vec![2.0f32; 7];
+    let opts = RunOptions { rounds: 90, eval_every: 15, seed: 11, ..Default::default() };
+    let expected = seed_gd_series(&flix, &q, &x0, &opts);
+    let mut alg = Gd::new(flix.clone());
+    let rec = Driver::new().run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "personalized GD");
+}
+
+#[test]
+fn driver_fedavg_matches_seed_loop() {
+    let q = quadratic(33, 6, 6);
+    let xs = q.minimizer();
+    let x0 = vec![3.0f32; 6];
+    let opts = RunOptions {
+        rounds: 150,
+        eval_every: 10,
+        x_star: Some(xs),
+        seed: 4,
+        ..Default::default()
+    };
+    let sampler = NiceSampling { n: 6, tau: 3 };
+    let expected = seed_fedavg_series(&q, &sampler, 5, 0.1, 0.0, &x0, &opts);
+    let mut alg = fedeff::algorithms::fedavg::FedAvg::new(5, 0.1);
+    let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }));
+    let rec = drv.run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "FedAvg");
+}
+
+#[test]
+fn driver_fedavg_matches_seed_loop_with_dropout() {
+    let q = quadratic(35, 6, 5);
+    let xs = q.minimizer();
+    let fs = q.full_loss(&xs).unwrap();
+    let x0 = vec![2.0f32; 5];
+    let opts = RunOptions {
+        rounds: 200,
+        eval_every: 25,
+        f_star: Some(fs),
+        seed: 9,
+        ..Default::default()
+    };
+    let sampler = NiceSampling { n: 6, tau: 3 };
+    let expected = seed_fedavg_series(&q, &sampler, 2, 0.2, 0.5, &x0, &opts);
+    let mut alg = fedeff::algorithms::fedavg::FedAvg::new(2, 0.2);
+    alg.dropout = 0.5;
+    let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }));
+    let rec = drv.run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "FedAvg+dropout");
+}
+
+#[test]
+fn driver_scafflix_matches_seed_loop() {
+    let q = quadratic(31, 6, 8);
+    let x_stars: Vec<Vec<f32>> = (0..6)
+        .map(|i| solve_local(&q, i, &vec![0.0; 8], 0.3, 800, 1e-8).unwrap())
+        .collect();
+    let gammas: Vec<f32> = (0..6).map(|i| 1.0 / q.smoothness(i)).collect();
+    let alphas = vec![0.5f32; 6];
+    let x0 = vec![1.0f32; 8];
+    let opts = RunOptions { rounds: 200, eval_every: 20, seed: 2, ..Default::default() };
+    let expected =
+        seed_scafflix_series(&q, &alphas, &x_stars, &gammas, 0.3, None, &x0, &opts);
+    let mut alg = Scafflix::standard(&q, 0.5, 0.3, x_stars);
+    let rec = Driver::new().run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "Scafflix");
+}
+
+#[test]
+fn driver_scafflix_matches_seed_loop_partial_participation() {
+    let q = quadratic(32, 6, 8);
+    let x_stars: Vec<Vec<f32>> = (0..6)
+        .map(|i| solve_local(&q, i, &vec![0.0; 8], 0.3, 800, 1e-8).unwrap())
+        .collect();
+    let gammas: Vec<f32> = (0..6).map(|i| 1.0 / q.smoothness(i)).collect();
+    let alphas = vec![0.5f32; 6];
+    let x0 = vec![1.0f32; 8];
+    let opts = RunOptions { rounds: 250, eval_every: 50, seed: 4, ..Default::default() };
+    let expected =
+        seed_scafflix_series(&q, &alphas, &x_stars, &gammas, 0.5, Some(3), &x0, &opts);
+    let mut alg = Scafflix::standard(&q, 0.5, 0.5, x_stars);
+    alg.clients_per_round = Some(3);
+    let rec = Driver::new().run(&mut alg, &q, &x0, &opts).unwrap();
+    assert_series_eq(&series_of(&rec), &expected, "Scafflix partial");
+}
+
+#[test]
+fn registry_every_name_constructs_and_runs() {
+    let q = quadratic(99, 4, 6);
+    for name in registry() {
+        let spec = fedeff::config::AlgorithmSpec {
+            kind: name.to_string(),
+            k: Some(2),
+            ..Default::default()
+        };
+        let mut alg = build_algorithm(&spec, &q)
+            .unwrap_or_else(|e| panic!("registry name {name} failed to build: {e}"));
+        let opts = RunOptions { rounds: 2, eval_every: 1, ..Default::default() };
+        let rec = Driver::new()
+            .run(alg.as_mut(), &q, &vec![1.0; 6], &opts)
+            .unwrap_or_else(|e| panic!("registry name {name} failed to run: {e}"));
+        assert_eq!(rec.rounds.len(), 3, "{name}: expected evals at t=0,1 and final");
+        assert!(rec.last().unwrap().loss.is_finite(), "{name}: non-finite loss");
+    }
+}
+
+#[test]
+fn composition_scafflix_with_topk_uplink() {
+    // previously impossible: the seed Scafflix had no compressor slot
+    let q = quadratic(41, 6, 8);
+    let x_stars: Vec<Vec<f32>> = (0..6)
+        .map(|i| solve_local(&q, i, &vec![0.0; 8], 0.3, 800, 1e-8).unwrap())
+        .collect();
+    let mut alg = Scafflix::standard(&q, 0.5, 0.3, x_stars);
+    let opts = RunOptions { rounds: 400, eval_every: 400, seed: 6, ..Default::default() };
+    let drv = Driver::new().with_up(Box::new(fedeff::compress::topk::TopK::new(4)));
+    let rec = drv.run(&mut alg, &q, &vec![2.0; 8], &opts).unwrap();
+    let first = rec.rounds.first().unwrap().loss;
+    let last = rec.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "compressed Scafflix: {first} -> {last}");
+    // compressed uplink books fewer bits than the dense downlink
+    let r = rec.last().unwrap();
+    assert!(r.bits_up < r.bits_down, "up {} vs down {}", r.bits_up, r.bits_down);
+}
+
+#[test]
+fn composition_fedavg_over_hierarchy() {
+    // previously impossible: the seed FedAvg only had a scalar cost knob,
+    // now any algorithm runs over a 2-level topology via the driver
+    let q = quadratic(42, 6, 5);
+    let mut alg = fedeff::algorithms::fedavg::FedAvg::new(3, 0.1);
+    let opts = RunOptions { rounds: 20, eval_every: 20, ..Default::default() };
+    let drv = Driver::new()
+        .with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }))
+        .with_topology(Topology::Hier(Hierarchy::even(6, 2, 0.05, 1.0)));
+    let rec = drv.run(&mut alg, &q, &vec![1.0; 5], &opts).unwrap();
+    let cost = rec.last().unwrap().comm_cost;
+    assert!((cost - 20.0 * 1.05).abs() < 1e-9, "hierarchical cost {cost}");
+}
+
+#[test]
+fn toml_spec_drives_registry_and_compositions() {
+    // end-to-end: TOML -> Spec -> registry build + driver build -> run
+    let toml = r#"
+[experiment]
+name = "compose-e2e"
+rounds = 4
+
+[dataset]
+clients = 4
+
+[algorithm]
+kind = "scafflix"
+alpha = 0.5
+p = 0.5
+
+[compressor]
+up = "top-k"
+k = 3
+
+[topology]
+hubs = 2
+c1 = 0.05
+c2 = 1.0
+"#;
+    let spec = fedeff::config::Spec::parse(toml).unwrap();
+    let q = quadratic(50, 4, 6);
+    let mut alg = build_algorithm(&spec.algorithm, &q).unwrap();
+    let driver = fedeff::config::build_driver(&spec, 4).unwrap();
+    let opts = RunOptions {
+        rounds: spec.experiment.rounds,
+        eval_every: spec.experiment.eval_every,
+        seed: spec.experiment.seed,
+        ..Default::default()
+    };
+    let rec = driver.run(alg.as_mut(), &q, &vec![1.0; 6], &opts).unwrap();
+    assert!(rec.last().unwrap().loss.is_finite());
+
+    // and a second composition from TOML: fedavg over the same hierarchy
+    let toml2 = toml
+        .replace("kind = \"scafflix\"", "kind = \"fedavg\"")
+        .replace("alpha = 0.5", "local_steps = 2")
+        .replace("p = 0.5", "lr = 0.1");
+    let spec2 = fedeff::config::Spec::parse(&toml2).unwrap();
+    let mut alg2 = build_algorithm(&spec2.algorithm, &q).unwrap();
+    let driver2 = fedeff::config::build_driver(&spec2, 4).unwrap();
+    let rec2 = driver2.run(alg2.as_mut(), &q, &vec![1.0; 6], &opts).unwrap();
+    assert!(rec2.last().unwrap().loss.is_finite());
+    // hierarchy pricing applied: fedavg communicates every round
+    assert!((rec2.last().unwrap().comm_cost - 4.0 * 1.05).abs() < 1e-9);
+}

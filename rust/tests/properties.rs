@@ -230,6 +230,7 @@ fn prop_dsnot_preserves_sparsity() {
 fn prop_efbv_random_instances_converge() {
     use fedeff::algorithms::efbv::EfBv;
     use fedeff::algorithms::RunOptions;
+    use fedeff::coordinator::driver::Driver;
     use fedeff::oracle::quadratic::QuadraticOracle;
     use fedeff::oracle::Oracle;
     let mut rng = fedeff::rng(306);
@@ -240,8 +241,7 @@ fn prop_efbv_random_instances_converge() {
         let q = QuadraticOracle::random(n, d, 0.5, 2.0, 1.0, &mut rng);
         let xs = q.minimizer();
         let fs = q.full_loss(&xs).unwrap();
-        let comp = TopK::new(k);
-        let alg = EfBv::ef21(&comp);
+        let mut alg = EfBv::ef21(Box::new(TopK::new(k)));
         let opts = RunOptions {
             rounds: 1500,
             eval_every: 1500,
@@ -249,7 +249,7 @@ fn prop_efbv_random_instances_converge() {
             seed: trial as u64,
             ..Default::default()
         };
-        let rec = alg.run(&q, &vec![1.0; d], &opts).unwrap();
+        let rec = Driver::new().run(&mut alg, &q, &vec![1.0; d], &opts).unwrap();
         let gap = rec.last().unwrap().gap.unwrap();
         assert!(gap < 1e-2, "trial {trial} (n={n},d={d},k={k}): gap {gap}");
     }
@@ -261,16 +261,18 @@ fn prop_efbv_random_instances_converge() {
 fn prop_ledger_monotone() {
     use fedeff::algorithms::fedavg::FedAvg;
     use fedeff::algorithms::RunOptions;
+    use fedeff::coordinator::driver::Driver;
     use fedeff::oracle::quadratic::QuadraticOracle;
     use fedeff::sampling::NiceSampling;
     let mut rng = fedeff::rng(307);
     let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
-    let s = NiceSampling { n: 6, tau: 3 };
-    let alg = FedAvg::new(&s, 3, 0.1);
+    let mut alg = FedAvg::new(3, 0.1);
     let opts = RunOptions { rounds: 50, eval_every: 5, ..Default::default() };
-    let rec = alg.run(&q, &vec![1.0; 5], &opts).unwrap();
+    let drv = Driver::new().with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }));
+    let rec = drv.run(&mut alg, &q, &vec![1.0; 5], &opts).unwrap();
     for w in rec.rounds.windows(2) {
         assert!(w[1].bits_up >= w[0].bits_up);
+        assert!(w[1].bits_down >= w[0].bits_down);
         assert!(w[1].comm_cost >= w[0].comm_cost);
         assert!(w[1].round > w[0].round);
     }
