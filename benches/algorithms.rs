@@ -1,10 +1,17 @@
-//! Benches of full algorithm rounds on the pure-Rust quadratic oracle
-//! (isolates the L3 algorithm cost from the PJRT compute cost).
-//! Run: `cargo bench --bench algorithms`
+//! Benches of full algorithm rounds on the pure-Rust oracles (isolates
+//! the L3 algorithm cost from the PJRT compute cost).
+//! Run: `cargo bench --bench algorithms` — also rewrites
+//! `BENCH_algorithms.json` with every case's median ns/iter.
 //!
 //! `gd_seed_loop_*` vs `gd_driver_*` measures the coordinator `Driver`'s
 //! overhead against a hand-rolled round loop identical to the pre-driver
 //! implementation (acceptance: <= 5% on this workload).
+//!
+//! The `gd_topk_largeD_*` family measures this PR's claim on a large-d
+//! compressed round (n=64, d=16384, Top-K k=128): `dense_spawn` is the
+//! pre-PR reference (dense O(d) decompress/aggregate + a thread spawn and
+//! a `vec![0.0; d]` per client, every round); `sparse_pool` is the O(k)
+//! sparse message path on the persistent worker pool (acceptance: >= 3x).
 
 #[path = "harness.rs"]
 mod harness;
@@ -15,7 +22,10 @@ use fedeff::algorithms::scafflix::Scafflix;
 use fedeff::algorithms::sppm::SppmAs;
 use fedeff::algorithms::RunOptions;
 use fedeff::compress::topk::TopK;
+use fedeff::compress::Compressor;
 use fedeff::coordinator::driver::Driver;
+use fedeff::data::synth::{logreg_dataset, Heterogeneity};
+use fedeff::oracle::logreg_rs::RustLogReg;
 use fedeff::oracle::quadratic::QuadraticOracle;
 use fedeff::oracle::Oracle;
 use fedeff::prox::LbfgsSolver;
@@ -50,6 +60,63 @@ fn gd_seed_loop(q: &QuadraticOracle, x0: &[f32], gamma: f32, opts: &RunOptions) 
     losses
 }
 
+/// The pre-pool compressed round, reproduced as the "before" reference:
+/// every round spawns a fresh thread scope, every client allocates a
+/// fresh gradient vector, and the Top-K message is densified and
+/// aggregated in O(d). Pays the same eval cadence as the Driver cases
+/// (full-loss eval at rounds divisible by `eval_every` plus a final one)
+/// so before/after measure identical work.
+fn gd_topk_spawn_loop(
+    q: &QuadraticOracle,
+    x0: &[f32],
+    gamma: f32,
+    k: usize,
+    rounds: usize,
+    eval_every: usize,
+) -> Vec<f32> {
+    let d = q.dim();
+    let n = q.n_clients();
+    let comp = TopK::new(k);
+    let mut rng = fedeff::rng(0);
+    let mut x = x0.to_vec();
+    let mut agg = vec![0.0f32; d];
+    let mut cbuf = vec![0.0f32; d];
+    let mut ebuf = vec![0.0f32; d];
+    let mut evals = Vec::new();
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    for t in 0..rounds {
+        if t % eval_every == 0 {
+            evals.push(q.full_loss_grad(&x, &mut ebuf).unwrap());
+        }
+        let chunk = n.div_ceil(threads).max(1);
+        let ids: Vec<usize> = (0..n).collect();
+        let grads: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for part in ids.chunks(chunk) {
+                let xref = &x;
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::with_capacity(part.len());
+                    for &i in part {
+                        let mut g = vec![0.0f32; q.dim()];
+                        q.loss_grad(i, xref, &mut g).unwrap();
+                        out.push((i, g));
+                    }
+                    out
+                }));
+            }
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        agg.fill(0.0);
+        for (_i, g) in &grads {
+            comp.compress(g, &mut cbuf, &mut rng);
+            vm::axpy(1.0 / n as f32, &cbuf, &mut agg);
+        }
+        vm::axpy(-gamma, &agg, &mut x);
+    }
+    evals.push(q.full_loss_grad(&x, &mut ebuf).unwrap());
+    evals
+}
+
 fn main() {
     let b = Bench::new(10);
     let mut rng = fedeff::rng(2);
@@ -59,26 +126,26 @@ fn main() {
     let drv = Driver::new();
 
     // driver overhead: identical math, hand-rolled loop vs Driver
-    b.run("gd_seed_loop_20rounds_n16_d256", || {
+    b.run_case("gd_seed_loop_20rounds_n16_d256", 20, 16, 256, || {
         black_box(gd_seed_loop(black_box(&q), black_box(&x0), 0.2, &opts));
     });
     {
         let mut alg = Gd::plain(16, 256, 0.2);
-        b.run("gd_driver_20rounds_n16_d256", || {
+        b.run_case("gd_driver_20rounds_n16_d256", 20, 16, 256, || {
             black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
 
     {
         let mut alg = EfBv::new(Box::new(TopK::new(16)));
-        b.run("efbv_topk_20rounds_n16_d256", || {
+        b.run_case("efbv_topk_20rounds_n16_d256", 20, 16, 256, || {
             black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
 
     {
         let mut alg = Scafflix::i_scaffnew(&q, 0.3);
-        b.run("scafflix_20rounds_n16_d256", || {
+        b.run_case("scafflix_20rounds_n16_d256", 20, 16, 256, || {
             black_box(drv.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
     }
@@ -86,8 +153,67 @@ fn main() {
     {
         let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 10.0, 8);
         let drv_s = Driver::new().with_sampler(Box::new(NiceSampling { n: 16, tau: 4 }));
-        b.run("sppm_bfgs_k8_20rounds", || {
+        b.run_case("sppm_bfgs_k8_20rounds", 20, 16, 256, || {
             black_box(drv_s.run(&mut alg, black_box(&q), black_box(&x0), &opts).unwrap());
         });
+    }
+
+    // ---- large-d compressed round: the sparse-path + pool speedup -----
+    {
+        let (n, d, k, rounds) = (64usize, 16384usize, 128usize, 5usize);
+        let mut rng2 = fedeff::rng(5);
+        let big = QuadraticOracle::random(n, d, 0.5, 3.0, 1.0, &mut rng2);
+        let bx0 = vec![0.5f32; d];
+        let bopts = RunOptions { rounds, eval_every: 1000, ..Default::default() };
+
+        b.run_case("gd_topk_largeD_dense_spawn_5rounds_n64_d16384", rounds, n, d, || {
+            black_box(gd_topk_spawn_loop(black_box(&big), black_box(&bx0), 0.05, k, rounds, 1000));
+        });
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let dense = Driver::new().with_up(Box::new(TopK::new(k))).with_sparse_links(false);
+            b.run_case("gd_topk_largeD_dense_serial_5rounds_n64_d16384", rounds, n, d, || {
+                black_box(dense.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let sparse = Driver::new().with_up(Box::new(TopK::new(k)));
+            b.run_case("gd_topk_largeD_sparse_serial_5rounds_n64_d16384", rounds, n, d, || {
+                black_box(sparse.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let sparse = Driver::new().with_up(Box::new(TopK::new(k)));
+            b.run_case("gd_topk_largeD_sparse_pool_5rounds_n64_d16384", rounds, n, d, || {
+                let rec = sparse.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+    }
+
+    // ---- batched logreg oracle: per-client calls vs one blocked sweep --
+    {
+        let mut rng3 = fedeff::rng(9);
+        let data = logreg_dataset(256, 200, 16, Heterogeneity::FeatureShift(0.5), 0.3, &mut rng3);
+        let o = RustLogReg::new(data, 0.1);
+        let w = vec![0.05f32; 256];
+        let mut g = vec![0.0f32; 256];
+        b.run_case("logreg_percall_cohort_n16_d256", 1, 16, 256, || {
+            for i in 0..16 {
+                black_box(o.loss_grad(i, &w, &mut g).unwrap());
+            }
+        });
+        let cohort: Vec<usize> = (0..16).collect();
+        let mut losses = Vec::new();
+        let mut grads = Vec::new();
+        b.run_case("logreg_batched_cohort_n16_d256", 1, 16, 256, || {
+            black_box(o.all_loss_grads(&w, &cohort, &mut losses, &mut grads).unwrap());
+        });
+    }
+
+    if let Err(e) = b.write_json("BENCH_algorithms.json") {
+        eprintln!("could not write BENCH_algorithms.json: {e}");
     }
 }

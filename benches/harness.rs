@@ -3,26 +3,55 @@
 //! Warmup + timed iterations with median/mean reporting; each `[[bench]]`
 //! target is `harness = false` and drives this from `main()`. Output is
 //! one line per bench: `bench <name> ... median 1.23ms mean 1.25ms (n=30)`.
+//!
+//! Machine-readable results: every case run through [`Bench::run`] or
+//! [`Bench::run_case`] is recorded, and [`Bench::write_json`] dumps the
+//! batch as JSON (`{"entries": [{"name", "ns_per_iter", "rounds", "n",
+//! "d"}, ...]}`) — `benches/algorithms.rs` writes `BENCH_algorithms.json`
+//! at the repo root so perf regressions are diffable in review. CI builds
+//! the benches (`cargo bench --no-run`) so this harness cannot rot.
 
+use std::cell::RefCell;
+use std::fmt::Write as _;
 use std::time::{Duration, Instant};
+
+/// One recorded case: median ns/iter plus the workload shape.
+// (dead_code: each bench binary includes this module via #[path]; not
+// every binary exercises the JSON reporting surface)
+#[allow(dead_code)]
+pub struct Entry {
+    pub name: String,
+    pub ns_per_iter: u128,
+    pub rounds: usize,
+    pub n: usize,
+    pub d: usize,
+}
 
 pub struct Bench {
     pub samples: usize,
     pub warmup: usize,
+    results: RefCell<Vec<Entry>>,
 }
 
 impl Default for Bench {
     fn default() -> Self {
-        Self { samples: 30, warmup: 3 }
+        Self::new(30)
     }
 }
 
 impl Bench {
     pub fn new(samples: usize) -> Self {
-        Self { samples, warmup: (samples / 10).max(1) }
+        Self { samples, warmup: (samples / 10).max(1), results: RefCell::new(Vec::new()) }
     }
 
-    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) {
+    /// Time `f`, report, and record with an unspecified workload shape.
+    pub fn run<F: FnMut()>(&self, name: &str, f: F) {
+        self.run_case(name, 0, 0, 0, f);
+    }
+
+    /// Time `f` and record it with its workload shape (rounds per iter,
+    /// fleet size n, dimension d) for the JSON report.
+    pub fn run_case<F: FnMut()>(&self, name: &str, rounds: usize, n: usize, d: usize, mut f: F) {
         for _ in 0..self.warmup {
             f();
         }
@@ -41,6 +70,33 @@ impl Bench {
             fmt(mean),
             self.samples
         );
+        self.results.borrow_mut().push(Entry {
+            name: name.to_string(),
+            ns_per_iter: median.as_nanos(),
+            rounds,
+            n,
+            d,
+        });
+    }
+
+    /// Write every recorded case as JSON to `path` (hand-rolled — the
+    /// crate is dependency-free by policy).
+    #[allow(dead_code)]
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let results = self.results.borrow();
+        let mut s = String::from(
+            "{\n  \"note\": \"ns_per_iter medians from the in-tree bench harness\",\n  \"entries\": [\n",
+        );
+        for (i, e) in results.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}}}",
+                e.name, e.ns_per_iter, e.rounds, e.n, e.d
+            );
+            s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)
     }
 }
 

@@ -12,6 +12,14 @@
 //! * [`RoundCtx::up_compress`] / [`RoundCtx::down_compress`] apply the
 //!   driver's link compressor (dense copy when none is configured) and
 //!   return the on-wire bits of that payload;
+//! * [`RoundCtx::up_compress_sparse`] / [`RoundCtx::down_compress_sparse`]
+//!   are the O(k) fast path: when the driver has sparse links enabled and
+//!   the compressor has a native sparse form, the message lands as
+//!   `(index, value)` pairs in a caller-reused
+//!   [`crate::compress::SparseVec`] and the algorithm aggregates it with
+//!   an O(k) scatter-add instead of an O(d) dense axpy. Both paths
+//!   consume the same link-RNG draws and book the same bits, so sparse
+//!   and dense runs match bit-for-bit;
 //! * [`RoundCtx::charge_up`] / [`RoundCtx::charge_down`] book one node's
 //!   payload into the round's ledger. The driver records *per-node*
 //!   (average over senders / receivers) cumulative bits, matching the
@@ -34,7 +42,7 @@
 use anyhow::Result;
 
 use super::RunOptions;
-use crate::compress::Compressor;
+use crate::compress::{Compressor, SparseVec};
 use crate::oracle::Oracle;
 use crate::sampling::CohortSampler;
 use crate::Rng;
@@ -71,6 +79,9 @@ pub struct RoundCtx<'a> {
     pub sampler: Option<&'a dyn CohortSampler>,
     pub(crate) up: Option<&'a dyn Compressor>,
     pub(crate) down: Option<&'a dyn Compressor>,
+    /// Whether the driver allows the O(k) sparse message path; `false`
+    /// forces every link through the dense reference path.
+    pub(crate) sparse: bool,
     pub(crate) link_rng: Rng,
     pub(crate) up_bits: u64,
     pub(crate) up_nodes: u64,
@@ -90,6 +101,7 @@ impl<'a> RoundCtx<'a> {
         sampler: Option<&'a dyn CohortSampler>,
         up: Option<&'a dyn Compressor>,
         down: Option<&'a dyn Compressor>,
+        sparse: bool,
     ) -> Self {
         // deterministic per-round stream for the link compressors; never
         // touches the main rng (bit-for-bit equivalence with the
@@ -103,6 +115,7 @@ impl<'a> RoundCtx<'a> {
             sampler,
             up,
             down,
+            sparse,
             link_rng,
             up_bits: 0,
             up_nodes: 0,
@@ -121,6 +134,76 @@ impl<'a> RoundCtx<'a> {
     /// Is a downlink compressor configured on the driver?
     pub fn has_down(&self) -> bool {
         self.down.is_some()
+    }
+
+    /// Did the driver enable the O(k) sparse message path? (Algorithms
+    /// that own their compressor — EF-BV — honour this flag themselves.)
+    pub fn sparse_enabled(&self) -> bool {
+        self.sparse
+    }
+
+    /// Sparse uplink fast path: `Some(bits)` iff an uplink compressor is
+    /// configured, sparse links are enabled, and the compressor has a
+    /// native sparse form. The message lands as `(index, value)` pairs
+    /// in `out`; aggregate it with [`SparseVec::add_into`] (O(k)).
+    /// Consumes the same link-RNG draws and returns the same bits as
+    /// [`RoundCtx::up_compress`], so the two paths are bit-for-bit
+    /// interchangeable. Does *not* book the bits.
+    pub fn up_compress_sparse(&mut self, x: &[f32], out: &mut SparseVec) -> Option<u64> {
+        match (self.sparse, self.up) {
+            (true, Some(c)) => c.compress_sparse(x, out, &mut self.link_rng),
+            _ => None,
+        }
+    }
+
+    /// Sparse downlink fast path; see [`RoundCtx::up_compress_sparse`].
+    pub fn down_compress_sparse(&mut self, x: &[f32], out: &mut SparseVec) -> Option<u64> {
+        match (self.sparse, self.down) {
+            (true, Some(c)) => c.compress_sparse(x, out, &mut self.link_rng),
+            _ => None,
+        }
+    }
+
+    /// Compress `x` on the uplink and accumulate `scale * C(x)` into
+    /// `acc`: O(k) scatter-add when the compressor has a sparse form,
+    /// dense decompress + axpy otherwise — the two are bit-identical.
+    /// `sbuf`/`cbuf` are the caller's reusable sparse/dense message
+    /// buffers. Returns the message bits (not booked).
+    pub fn up_compress_add(
+        &mut self,
+        x: &[f32],
+        scale: f32,
+        acc: &mut [f32],
+        sbuf: &mut SparseVec,
+        cbuf: &mut [f32],
+    ) -> u64 {
+        if let Some(bits) = self.up_compress_sparse(x, sbuf) {
+            sbuf.add_into(scale, acc);
+            bits
+        } else {
+            let bits = self.up_compress(x, cbuf);
+            crate::vecmath::axpy(scale, cbuf, acc);
+            bits
+        }
+    }
+
+    /// Downlink counterpart of [`RoundCtx::up_compress_add`].
+    pub fn down_compress_add(
+        &mut self,
+        x: &[f32],
+        scale: f32,
+        acc: &mut [f32],
+        sbuf: &mut SparseVec,
+        cbuf: &mut [f32],
+    ) -> u64 {
+        if let Some(bits) = self.down_compress_sparse(x, sbuf) {
+            sbuf.add_into(scale, acc);
+            bits
+        } else {
+            let bits = self.down_compress(x, cbuf);
+            crate::vecmath::axpy(scale, cbuf, acc);
+            bits
+        }
     }
 
     /// Apply the uplink compressor to `x` (dense copy when none), writing

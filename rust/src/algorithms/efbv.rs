@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
 use super::RunOptions;
-use crate::compress::Compressor;
+use crate::compress::{Compressor, SparseVec};
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -54,6 +54,7 @@ pub struct EfBv {
     g_est: Vec<f32>,
     resid: Vec<f32>,
     di: Vec<f32>,
+    dsp: SparseVec,
     dbar: Vec<f32>,
     lambda: f32,
     nu: f32,
@@ -73,6 +74,7 @@ impl EfBv {
             g_est: Vec::new(),
             resid: Vec::new(),
             di: Vec::new(),
+            dsp: SparseVec::default(),
             dbar: Vec::new(),
             lambda: 0.0,
             nu: 0.0,
@@ -187,10 +189,28 @@ impl FlAlgorithm for EfBv {
                 ^ 0x9E3779B97F4A7C15u64.wrapping_mul(ctx.round as u64 + 1)
                 ^ ((group as u64) << 32),
         );
-        let bits = self.compressor.compress(&self.resid, &mut self.di, &mut crng);
-        ctx.charge_up(bits);
-        vm::axpy(self.lambda, &self.di, &mut self.h_i[client]);
-        vm::acc_mean(&self.di, ctx.cohort_size as f32, &mut self.dbar);
+        // EF-BV owns its compressor (it sets the stepsize), so it applies
+        // the driver's sparse-links policy itself: O(k) scatter into the
+        // control variate and the round average when the compressor has a
+        // sparse form, dense decompress + axpy otherwise (bit-identical).
+        let sparse = if ctx.sparse_enabled() {
+            self.compressor.compress_sparse(&self.resid, &mut self.dsp, &mut crng)
+        } else {
+            None
+        };
+        match sparse {
+            Some(bits) => {
+                ctx.charge_up(bits);
+                self.dsp.add_into(self.lambda, &mut self.h_i[client]);
+                self.dsp.add_into(1.0 / ctx.cohort_size as f32, &mut self.dbar);
+            }
+            None => {
+                let bits = self.compressor.compress(&self.resid, &mut self.di, &mut crng);
+                ctx.charge_up(bits);
+                vm::axpy(self.lambda, &self.di, &mut self.h_i[client]);
+                vm::acc_mean(&self.di, ctx.cohort_size as f32, &mut self.dbar);
+            }
+        }
         Ok(())
     }
 

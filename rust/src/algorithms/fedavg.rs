@@ -7,15 +7,19 @@
 //! MB-LocalGD / FedAvg.
 //!
 //! Link compression (FedCOM-style): with an uplink compressor clients
-//! send the compressed *delta* against the broadcast anchor; with a
+//! send the compressed *delta* against the broadcast anchor and the
+//! server aggregates the received deltas (`x + avg_i C(x_i - x)`); with a
 //! downlink compressor the server broadcasts the compressed model delta.
 //! With neither, the messages are dense and bit-for-bit identical to the
-//! classic loop.
+//! classic loop. Compressors with a native sparse form aggregate through
+//! the O(k) [`SparseVec`] scatter — bit-identical to the dense
+//! decompress-then-axpy reference path.
 
 use anyhow::Result;
 
 use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
 use super::RunOptions;
+use crate::compress::SparseVec;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 use crate::Rng;
@@ -36,7 +40,7 @@ pub struct FedAvg {
     g: Vec<f32>,
     delta: Vec<f32>,
     buf: Vec<f32>,
-    recv: Vec<f32>,
+    sbuf: SparseVec,
 }
 
 impl FedAvg {
@@ -52,8 +56,75 @@ impl FedAvg {
             g: Vec::new(),
             delta: Vec::new(),
             buf: Vec::new(),
-            recv: Vec::new(),
+            sbuf: SparseVec::default(),
         }
+    }
+}
+
+/// Shared FedCOM link plumbing for FedAvg/FedProx: uplink one client's
+/// local model (compressed delta against the anchor when an uplink
+/// compressor is set), accumulating the average into `next` (compressed:
+/// the average *delta*; dense: the average model). O(k) when the
+/// compressor has a sparse form.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fedcom_uplink(
+    ctx: &mut RoundCtx<'_>,
+    local: &[f32],
+    anchor: &[f32],
+    cohort_size: f32,
+    delta: &mut [f32],
+    buf: &mut [f32],
+    sbuf: &mut SparseVec,
+    next: &mut [f32],
+) {
+    if ctx.has_up() {
+        vm::sub(local, anchor, delta);
+        let bits = ctx.up_compress_add(delta, 1.0 / cohort_size, next, sbuf, buf);
+        ctx.charge_up(bits);
+    } else {
+        ctx.charge_up(dense_bits(local.len()));
+        vm::acc_mean(local, cohort_size, next);
+    }
+}
+
+/// Shared FedCOM server finish for FedAvg/FedProx: when the uplinks were
+/// delta-compressed, `next` holds the average received *delta* — rebase
+/// it on the anchor `x` first — then broadcast the new model and reset
+/// the accumulator. Keeping the rebase here (not at call sites) ties it
+/// to the [`fedcom_uplink`] contract it completes.
+pub(crate) fn fedcom_server_finish(
+    ctx: &mut RoundCtx<'_>,
+    next: &mut [f32],
+    x: &mut [f32],
+    delta: &mut [f32],
+    buf: &mut [f32],
+    sbuf: &mut SparseVec,
+) {
+    if ctx.has_up() {
+        vm::axpy(1.0, x, next);
+    }
+    fedcom_broadcast(ctx, next, x, delta, buf, sbuf);
+    next.fill(0.0);
+}
+
+/// Shared FedCOM broadcast for FedAvg/FedProx: move the fleet model `x`
+/// to `target` (compressed delta broadcast when a downlink compressor is
+/// set, dense copy otherwise), booking one receiver's payload.
+pub(crate) fn fedcom_broadcast(
+    ctx: &mut RoundCtx<'_>,
+    target: &[f32],
+    x: &mut [f32],
+    delta: &mut [f32],
+    buf: &mut [f32],
+    sbuf: &mut SparseVec,
+) {
+    if ctx.has_down() {
+        vm::sub(target, x, delta);
+        let bits = ctx.down_compress_add(delta, 1.0, x, sbuf, buf);
+        ctx.charge_down(bits);
+    } else {
+        ctx.charge_down(dense_bits(x.len()));
+        x.copy_from_slice(target);
     }
 }
 
@@ -74,7 +145,7 @@ impl FlAlgorithm for FedAvg {
         self.g = vec![0.0; d];
         self.delta = vec![0.0; d];
         self.buf = vec![0.0; d];
-        self.recv = vec![0.0; d];
+        self.sbuf = SparseVec::default();
         Ok(())
     }
 
@@ -101,11 +172,16 @@ impl FlAlgorithm for FedAvg {
             }
             vm::axpy(-self.lr, &self.g, &mut self.xi);
         }
-        if ctx.uplink_delta(&self.xi, &self.x, &mut self.delta, &mut self.recv) {
-            vm::acc_mean(&self.recv, m, &mut self.next);
-        } else {
-            vm::acc_mean(&self.xi, m, &mut self.next);
-        }
+        fedcom_uplink(
+            ctx,
+            &self.xi,
+            &self.x,
+            m,
+            &mut self.delta,
+            &mut self.buf,
+            &mut self.sbuf,
+            &mut self.next,
+        );
         Ok(())
     }
 
@@ -127,8 +203,14 @@ impl FlAlgorithm for FedAvg {
             }
             return Ok(());
         }
-        ctx.broadcast_delta(&self.next, &mut self.x, &mut self.delta, &mut self.buf);
-        self.next.fill(0.0);
+        fedcom_server_finish(
+            ctx,
+            &mut self.next,
+            &mut self.x,
+            &mut self.delta,
+            &mut self.buf,
+            &mut self.sbuf,
+        );
         Ok(())
     }
 
@@ -219,5 +301,26 @@ mod tests {
         let b10 = rec.rounds[1].bits_up;
         let b20 = rec.rounds[2].bits_up;
         assert_eq!(b20, 2 * b10);
+    }
+
+    #[test]
+    fn compressed_links_still_converge() {
+        // FedCOM-style delta compression on both links (sparse path)
+        let mut rng = crate::rng(37);
+        let q = QuadraticOracle::random(5, 8, 0.5, 2.0, 1.0, &mut rng);
+        let mut alg = FedAvg::new(3, 0.1);
+        let opts = RunOptions { rounds: 400, eval_every: 400, ..Default::default() };
+        let drv = Driver::new()
+            .with_sampler(Box::new(FullSampling { n: 5 }))
+            .with_up(Box::new(crate::compress::topk::TopK::new(4)))
+            .with_down(Box::new(crate::compress::topk::TopK::new(4)));
+        let rec = drv.run(&mut alg, &q, &vec![2.0; 8], &opts).unwrap();
+        let first = rec.rounds.first().unwrap().loss;
+        let last = rec.last().unwrap().loss;
+        assert!(last < first, "{first} -> {last}");
+        // both links booked compressed (fewer than dense) bits
+        let r = rec.last().unwrap();
+        assert!(r.bits_up < 32 * 8 * 400);
+        assert!(r.bits_down < 32 * 8 * 400);
     }
 }

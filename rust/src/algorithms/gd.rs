@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
 use super::RunOptions;
+use crate::compress::SparseVec;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -115,7 +116,9 @@ impl FlixGd {
 /// Driver adapter: one round = broadcast x (downlink), every cohort client
 /// uplinks its personalized gradient, the server averages and steps.
 /// An uplink compressor turns this into DCGD-style compressed GD; the
-/// downlink broadcast stays dense (charged as such).
+/// downlink broadcast stays dense (charged as such). Compressed uplinks
+/// aggregate through the O(k) sparse scatter when the compressor has a
+/// native sparse form (bit-identical to the dense path).
 pub struct Gd {
     pub flix: FlixGd,
     x: Vec<f32>,
@@ -123,6 +126,7 @@ pub struct Gd {
     tilde: Vec<f32>,
     gbuf: Vec<f32>,
     cbuf: Vec<f32>,
+    sbuf: SparseVec,
 }
 
 impl Gd {
@@ -134,6 +138,7 @@ impl Gd {
             tilde: Vec::new(),
             gbuf: Vec::new(),
             cbuf: Vec::new(),
+            sbuf: SparseVec::default(),
         }
     }
 
@@ -189,9 +194,10 @@ impl FlAlgorithm for Gd {
             None => &self.gbuf,
         };
         if ctx.has_up() {
-            let bits = ctx.up_compress(g, &mut self.cbuf);
+            // O(k) scatter when the compressor is sparse-capable, dense
+            // decompress + axpy otherwise (bit-identical either way)
+            let bits = ctx.up_compress_add(g, w, &mut self.grad, &mut self.sbuf, &mut self.cbuf);
             ctx.charge_up(bits);
-            vm::axpy(w, &self.cbuf, &mut self.grad);
         } else {
             ctx.charge_up(dense_bits(self.x.len()));
             vm::axpy(w, g, &mut self.grad);

@@ -52,6 +52,9 @@ pub struct Scafflix {
     x_srv: Vec<f32>,
     delta: Vec<f32>,
     buf: Vec<f32>,
+    /// Reusable participation mask for the communication rounds (O(n+tau)
+    /// non-participant sweep instead of O(n*tau) `contains` scans).
+    participating: Vec<bool>,
     gamma_srv: f32,
 }
 
@@ -88,6 +91,7 @@ impl Scafflix {
             x_srv: Vec::new(),
             delta: Vec::new(),
             buf: Vec::new(),
+            participating: Vec::new(),
             gamma_srv: 0.0,
         }
     }
@@ -123,6 +127,7 @@ impl FlAlgorithm for Scafflix {
         self.x_srv = x0.to_vec();
         self.delta = vec![0.0f32; d];
         self.buf = vec![0.0f32; d];
+        self.participating = vec![false; n];
         Ok(())
     }
 
@@ -193,11 +198,18 @@ impl FlAlgorithm for Scafflix {
                 }
                 self.x_i[i].copy_from_slice(&self.xbar);
             }
-            // non-participants keep their local iterate
+            // non-participants keep their local iterate (mask sweep:
+            // O(n + tau), not O(n * tau) contains scans)
+            for &i in &participants {
+                self.participating[i] = true;
+            }
             for i in 0..n {
-                if !participants.contains(&i) {
+                if !self.participating[i] {
                     self.x_i[i].copy_from_slice(&self.hat[i]);
                 }
+            }
+            for &i in &participants {
+                self.participating[i] = false;
             }
         } else {
             ctx.no_comm();

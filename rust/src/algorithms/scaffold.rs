@@ -17,7 +17,9 @@
 use anyhow::Result;
 
 use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::fedavg::{fedcom_server_finish, fedcom_uplink};
 use super::RunOptions;
+use crate::compress::SparseVec;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -39,6 +41,7 @@ pub struct Scaffold {
     dc: Vec<f32>,
     ddx: Vec<f32>,
     buf: Vec<f32>,
+    sbuf: SparseVec,
 }
 
 impl Scaffold {
@@ -58,6 +61,7 @@ impl Scaffold {
             dc: Vec::new(),
             ddx: Vec::new(),
             buf: Vec::new(),
+            sbuf: SparseVec::default(),
         }
     }
 }
@@ -110,13 +114,13 @@ impl FlAlgorithm for Scaffold {
             self.cin[j] = self.c_i[client][j] - self.c[j] + (self.x[j] - self.yi[j]) * coef;
         }
         if ctx.has_up() {
-            // compress the two uplink deltas (model, control) individually
+            // compress the two uplink deltas (model, control) individually;
+            // each aggregates O(k)-sparse when the compressor supports it
+            let (sbuf, buf) = (&mut self.sbuf, &mut self.buf);
             vm::sub(&self.yi, &self.x, &mut self.ddx);
-            let mut bits = ctx.up_compress(&self.ddx, &mut self.buf);
-            vm::axpy(1.0 / m, &self.buf, &mut self.dx);
+            let mut bits = ctx.up_compress_add(&self.ddx, 1.0 / m, &mut self.dx, sbuf, buf);
             vm::sub(&self.cin, &self.c_i[client], &mut self.ddx);
-            bits += ctx.up_compress(&self.ddx, &mut self.buf);
-            vm::axpy(1.0 / m, &self.buf, &mut self.dc);
+            bits += ctx.up_compress_add(&self.ddx, 1.0 / m, &mut self.dc, sbuf, buf);
             ctx.charge_up(bits);
         } else {
             ctx.charge_up(2 * dense_bits(d));
@@ -152,7 +156,9 @@ impl FlAlgorithm for Scaffold {
 }
 
 /// FedProx: one global round = cohort clients approximately solve the
-/// proximal subproblem with `local_steps` of GD, then average.
+/// proximal subproblem with `local_steps` of GD, then average. Links
+/// behave like FedAvg (FedCOM delta compression, sparse-aggregated when
+/// the compressor supports it).
 pub struct FedProx {
     pub local_steps: usize,
     pub lr: f32,
@@ -165,7 +171,7 @@ pub struct FedProx {
     g: Vec<f32>,
     delta: Vec<f32>,
     buf: Vec<f32>,
-    recv: Vec<f32>,
+    sbuf: SparseVec,
 }
 
 impl FedProx {
@@ -180,7 +186,7 @@ impl FedProx {
             g: Vec::new(),
             delta: Vec::new(),
             buf: Vec::new(),
-            recv: Vec::new(),
+            sbuf: SparseVec::default(),
         }
     }
 }
@@ -198,7 +204,7 @@ impl FlAlgorithm for FedProx {
         self.g = vec![0.0; d];
         self.delta = vec![0.0; d];
         self.buf = vec![0.0; d];
-        self.recv = vec![0.0; d];
+        self.sbuf = SparseVec::default();
         Ok(())
     }
 
@@ -219,11 +225,16 @@ impl FlAlgorithm for FedProx {
             }
             vm::axpy(-self.lr, &self.g, &mut self.yi);
         }
-        if ctx.uplink_delta(&self.yi, &self.x, &mut self.delta, &mut self.recv) {
-            vm::acc_mean(&self.recv, m, &mut self.next);
-        } else {
-            vm::acc_mean(&self.yi, m, &mut self.next);
-        }
+        fedcom_uplink(
+            ctx,
+            &self.yi,
+            &self.x,
+            m,
+            &mut self.delta,
+            &mut self.buf,
+            &mut self.sbuf,
+            &mut self.next,
+        );
         Ok(())
     }
 
@@ -245,8 +256,14 @@ impl FlAlgorithm for FedProx {
             }
             return Ok(());
         }
-        ctx.broadcast_delta(&self.next, &mut self.x, &mut self.delta, &mut self.buf);
-        self.next.fill(0.0);
+        fedcom_server_finish(
+            ctx,
+            &mut self.next,
+            &mut self.x,
+            &mut self.delta,
+            &mut self.buf,
+            &mut self.sbuf,
+        );
         Ok(())
     }
 

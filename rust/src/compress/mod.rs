@@ -1,10 +1,29 @@
 //! Compression operators — the `U(omega)`, `B(alpha)` and unified
 //! `C(eta, omega)` classes of Chapter 2, with exact bit accounting.
 //!
-//! A [`Compressor`] maps `x -> C(x)`; algorithms receive the *decompressed*
-//! value (written into a caller-provided buffer, allocation-free) plus the
-//! number of bits the message would occupy on the wire. The (eta, omega)
-//! parameters drive the optimal scaling factors
+//! A [`Compressor`] maps `x -> C(x)` and has **two output paths**:
+//!
+//! * the dense path ([`Compressor::compress`]) writes the decompressed
+//!   `C(x)` into a caller-provided `[f32; d]` buffer — every compressor
+//!   supports it, and it is the bit-for-bit reference semantics;
+//! * the sparse path ([`Compressor::compress_sparse`]) writes the message
+//!   as it would travel on the wire — k `(u32 index, f32 value)` pairs in
+//!   a reusable [`SparseVec`] — so the caller can aggregate in O(k)
+//!   instead of densifying to O(d). Top-K, Rand-K and Perm-K implement it
+//!   natively; operators without a compact sparse form (QSGD, mix/comp
+//!   compositions) return `None` and callers fall back to the dense path.
+//!
+//! The two paths consume identical RNG draws and book identical wire
+//! bits, and a [`SparseVec::add_into`] scatter performs exactly the same
+//! per-coordinate arithmetic as a dense `axpy` over `C(x)` (off-support
+//! entries of a dense message are exact zeros), so sparse and dense runs
+//! of the same experiment match bit-for-bit — `rust/tests/
+//! driver_equivalence.rs` pins this. Both paths are allocation-free at
+//! steady state: dense callers pass output buffers, sparse callers reuse
+//! the `SparseVec`, and selection scratch lives inside the compressor
+//! (interior mutability).
+//!
+//! The (eta, omega) parameters drive the optimal scaling factors
 //! `lambda* = min((1-eta)/((1-eta)^2 + omega), 1)` and
 //! `nu* = min((1-eta)/((1-eta)^2 + omega_ran), 1)` (Prop. 2.2.2 and
 //! Sect. 2.2.3), which in turn set the EF-BV stepsize.
@@ -47,9 +66,78 @@ impl Params {
     }
 }
 
+/// A k-sparse message: parallel `(u32 index, f32 value)` arrays over a
+/// dense dimension `dim` — what a compressed uplink actually carries on
+/// the wire. The reusable-buffer counterpart of a dense `[f32; d]`
+/// message: `clear` + `push` never shrink capacity, so steady-state
+/// compression rounds allocate nothing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    /// Coordinate indices, distinct, in message order (not sorted).
+    pub idx: Vec<u32>,
+    /// Values, parallel to `idx`.
+    pub val: Vec<f32>,
+    /// The dense dimension d this message lives in.
+    pub dim: usize,
+}
+
+impl SparseVec {
+    /// Reset to an empty message in dimension `dim` (keeps capacity).
+    pub fn clear(&mut self, dim: usize) {
+        self.idx.clear();
+        self.val.clear();
+        self.dim = dim;
+    }
+
+    pub fn push(&mut self, i: u32, v: f32) {
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// `out[i] += a * v` for every stored `(i, v)`: the O(k) scatter-add
+    /// that replaces an O(d) dense `axpy` over the decompressed message.
+    /// Indices are distinct, so each target coordinate is touched at most
+    /// once and the result is bit-identical to the dense aggregation
+    /// (off-support coordinates would only ever add an exact zero).
+    pub fn add_into(&self, a: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += a * v;
+        }
+    }
+
+    /// Dense materialization: `out = C(x)` as a full vector.
+    pub fn densify_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        out.fill(0.0);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+    }
+}
+
 pub trait Compressor {
     /// Write the decompressed `C(x)` into `out`; return message bits.
     fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64;
+
+    /// Sparse fast path: write `C(x)` as `(index, value)` pairs into
+    /// `out` and return `Some(message bits)`, or `None` when this
+    /// operator has no compact sparse form (callers then use the dense
+    /// [`Compressor::compress`]). Implementations must consume exactly
+    /// the same `rng` draws and return exactly the same bits as the
+    /// dense path so the two are bit-for-bit interchangeable.
+    fn compress_sparse(&self, x: &[f32], out: &mut SparseVec, rng: &mut Rng) -> Option<u64> {
+        let _ = (x, out, rng);
+        None
+    }
 
     /// Class parameters for input dimension `d`.
     fn params(&self, d: usize) -> Params;
@@ -158,5 +246,41 @@ mod tests {
     fn sparse_bits_scales_with_log_d() {
         assert_eq!(sparse_bits(1, 2), 32 + 1);
         assert_eq!(sparse_bits(2, 1024), 2 * (32 + 10));
+    }
+
+    #[test]
+    fn sparse_vec_scatter_matches_dense_axpy() {
+        let mut s = SparseVec::default();
+        s.clear(5);
+        s.push(3, 2.0);
+        s.push(0, -1.5);
+        let mut dense = vec![0.0f32; 5];
+        s.densify_into(&mut dense);
+        assert_eq!(dense, vec![-1.5, 0.0, 0.0, 2.0, 0.0]);
+        let mut a = vec![1.0f32; 5];
+        let mut b = vec![1.0f32; 5];
+        s.add_into(0.5, &mut a);
+        crate::vecmath::axpy(0.5, &dense, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_vec_clear_keeps_capacity() {
+        let mut s = SparseVec::default();
+        s.clear(8);
+        for i in 0..8 {
+            s.push(i, i as f32);
+        }
+        let cap = s.idx.capacity();
+        s.clear(8);
+        assert!(s.is_empty());
+        assert_eq!(s.idx.capacity(), cap);
+    }
+
+    #[test]
+    fn default_sparse_path_is_unsupported() {
+        let mut out = SparseVec::default();
+        // Identity has no sparse form: the trait default applies
+        assert!(Identity.compress_sparse(&[1.0, 2.0], &mut out, &mut crate::rng(0)).is_none());
     }
 }

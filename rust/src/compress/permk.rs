@@ -7,8 +7,13 @@
 //! (1/n) sum_i C_i(x_i) has zero variance when all x_i are equal —
 //! omega_ran = 0 in the homogeneous limit, the strongest possible
 //! collective variance reduction.
+//!
+//! The permutation scratch is reused across calls (`RefCell`), and the
+//! sparse path emits the block as (index, value) pairs directly.
 
-use super::{Compressor, Params};
+use std::cell::RefCell;
+
+use super::{Compressor, Params, SparseVec};
 use crate::Rng;
 
 pub struct PermK {
@@ -18,23 +23,38 @@ pub struct PermK {
     pub worker: usize,
     /// Shared per-round seed (all workers must agree).
     pub round_seed: u64,
+    /// Reusable permutation scratch.
+    perm: RefCell<Vec<u32>>,
 }
 
 impl PermK {
     pub fn new(n: usize, worker: usize, round_seed: u64) -> Self {
         assert!(worker < n && n >= 1);
-        Self { n, worker, round_seed }
+        Self { n, worker, round_seed, perm: RefCell::new(Vec::new()) }
+    }
+
+    /// Visit this worker's coordinate block for dimension `d` (derived
+    /// from the shared `round_seed`); returns the block length.
+    fn for_block(&self, d: usize, mut f: impl FnMut(u32)) -> usize {
+        let mut perm = self.perm.borrow_mut();
+        perm.clear();
+        perm.extend(0..d as u32);
+        let mut rng = crate::Rng::new(self.round_seed ^ 0x5EED_5EED);
+        rng.shuffle(perm.as_mut_slice());
+        let per = d.div_ceil(self.n);
+        let lo = (self.worker * per).min(d);
+        let hi = ((self.worker + 1) * per).min(d);
+        for &i in &perm[lo..hi] {
+            f(i);
+        }
+        hi - lo
     }
 
     /// The block of coordinates this worker keeps for dimension d.
     pub fn block(&self, d: usize) -> Vec<u32> {
-        let mut perm: Vec<u32> = (0..d as u32).collect();
-        let mut rng = crate::Rng::new(self.round_seed ^ 0x5EED_5EED);
-        rng.shuffle(&mut perm);
-        let per = d.div_ceil(self.n);
-        let lo = (self.worker * per).min(d);
-        let hi = ((self.worker + 1) * per).min(d);
-        perm[lo..hi].to_vec()
+        let mut out = Vec::new();
+        self.for_block(d, |i| out.push(i));
+        out
     }
 }
 
@@ -42,13 +62,18 @@ impl Compressor for PermK {
     fn compress(&self, x: &[f32], out: &mut [f32], _rng: &mut Rng) -> u64 {
         let d = x.len();
         out.fill(0.0);
-        let block = self.block(d);
         let scale = self.n as f32;
-        for &i in &block {
-            out[i as usize] = scale * x[i as usize];
-        }
+        let kept = self.for_block(d, |i| out[i as usize] = scale * x[i as usize]);
         // the permutation is derived from the shared seed: only values sent
-        32 * block.len() as u64 + 64
+        32 * kept as u64 + 64
+    }
+
+    fn compress_sparse(&self, x: &[f32], out: &mut SparseVec, _rng: &mut Rng) -> Option<u64> {
+        let d = x.len();
+        out.clear(d);
+        let scale = self.n as f32;
+        let kept = self.for_block(d, |i| out.push(i, scale * x[i as usize]));
+        Some(32 * kept as u64 + 64)
     }
 
     fn params(&self, _d: usize) -> Params {
@@ -133,5 +158,23 @@ mod tests {
         // (kept coords inflate by n); over rounds the operator is unbiased
         assert_eq!(c.params(16).omega, 3.0);
         assert!(p.eta <= 3.0 + 1e-4, "eta {}", p.eta);
+    }
+
+    #[test]
+    fn sparse_path_matches_dense_path() {
+        let d = 23;
+        let n = 4;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        for w in 0..n {
+            let c = PermK::new(n, w, 99);
+            let mut dense = vec![0.0f32; d];
+            let bits_d = c.compress(&x, &mut dense, &mut crate::rng(0));
+            let mut sp = SparseVec::default();
+            let bits_s = c.compress_sparse(&x, &mut sp, &mut crate::rng(0)).unwrap();
+            assert_eq!(bits_d, bits_s);
+            let mut densified = vec![0.0f32; d];
+            sp.densify_into(&mut densified);
+            assert_eq!(densified, dense);
+        }
     }
 }

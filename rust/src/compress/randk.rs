@@ -5,23 +5,30 @@
 //! * Scaled (biased) variant: same selection, no d/k scaling — this is the
 //!   unbiased compressor pre-scaled by lambda = k/d (Sect. 2.2.3), landing
 //!   in B(k/d) with eta = 1 - k/d, omega = (k/d)(1 - k/d).
+//!
+//! The sparse path samples its support directly into the output message
+//! (same RNG draws as the dense path, so the two are interchangeable);
+//! the dense path keeps its support in a reusable `RefCell` scratch.
 
+use std::cell::RefCell;
 
-use super::{sparse_bits, Compressor, Params};
+use super::{sparse_bits, Compressor, Params, SparseVec};
 use crate::Rng;
 
 pub struct RandK {
     pub k: usize,
     /// If true, multiply kept entries by d/k (unbiased).
     pub unbiased: bool,
+    /// Reusable support scratch for the dense path.
+    support: RefCell<Vec<u32>>,
 }
 
 impl RandK {
     pub fn unbiased(k: usize) -> Self {
-        Self { k, unbiased: true }
+        Self { k, unbiased: true, support: RefCell::new(Vec::new()) }
     }
     pub fn scaled(k: usize) -> Self {
-        Self { k, unbiased: false }
+        Self { k, unbiased: false, support: RefCell::new(Vec::new()) }
     }
 }
 
@@ -47,14 +54,26 @@ impl Compressor for RandK {
     fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64 {
         let d = x.len();
         let k = self.k.min(d);
-        let mut support = Vec::with_capacity(k);
+        let mut support = self.support.borrow_mut();
         sample_support(k, d, &mut support, rng);
         out.fill(0.0);
         let scale = if self.unbiased { d as f32 / k as f32 } else { 1.0 };
-        for &i in &support {
+        for &i in support.iter() {
             out[i as usize] = scale * x[i as usize];
         }
         sparse_bits(k, d)
+    }
+
+    fn compress_sparse(&self, x: &[f32], out: &mut SparseVec, rng: &mut Rng) -> Option<u64> {
+        let d = x.len();
+        let k = self.k.min(d);
+        out.clear(d);
+        sample_support(k, d, &mut out.idx, rng);
+        let scale = if self.unbiased { d as f32 / k as f32 } else { 1.0 };
+        for &i in &out.idx {
+            out.val.push(scale * x[i as usize]);
+        }
+        Some(sparse_bits(k, d))
     }
 
     fn params(&self, d: usize) -> Params {
@@ -121,5 +140,30 @@ mod tests {
             assert!(v == 0.0 || v == 2.0);
         }
         assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn sparse_path_consumes_same_rng_and_matches_dense() {
+        let c = RandK::unbiased(4);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        // identical seeds: identical support, values and bits
+        let mut dense = vec![0.0; 16];
+        let bits_d = c.compress(&x, &mut dense, &mut crate::rng(11));
+        let mut sp = SparseVec::default();
+        let bits_s = c.compress_sparse(&x, &mut sp, &mut crate::rng(11)).unwrap();
+        assert_eq!(bits_d, bits_s);
+        let mut densified = vec![0.0; 16];
+        sp.densify_into(&mut densified);
+        assert_eq!(densified, dense);
+        // and the streams stay aligned: a second draw from each matches too
+        let mut rng_a = crate::rng(12);
+        let mut rng_b = crate::rng(12);
+        c.compress(&x, &mut dense, &mut rng_a);
+        c.compress_sparse(&x, &mut sp, &mut rng_b);
+        c.compress(&x, &mut dense, &mut rng_a);
+        sp.clear(16);
+        c.compress_sparse(&x, &mut sp, &mut rng_b);
+        sp.densify_into(&mut densified);
+        assert_eq!(densified, dense);
     }
 }

@@ -2,19 +2,41 @@
 //!
 //! Keeps the k entries of largest magnitude, zeroes the rest. Deterministic;
 //! in B(alpha) with alpha = k/d, i.e. C(eta=sqrt(1-k/d), omega=0).
+//!
+//! Both output paths are allocation-free at steady state: the selection
+//! scratch lives in the compressor behind a `RefCell` and is reused
+//! across calls (dense and sparse alike).
 
-use super::{sparse_bits, Compressor, Params};
+use std::cell::RefCell;
+
+use super::{sparse_bits, Compressor, Params, SparseVec};
 use crate::Rng;
 
 pub struct TopK {
     pub k: usize,
+    /// Reusable selection scratch; interior mutability keeps the
+    /// `&self` compress methods allocation-free after the first call.
+    scratch: RefCell<Vec<u32>>,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
         assert!(k >= 1);
-        Self { k }
+        Self { k, scratch: RefCell::new(Vec::new()) }
     }
+}
+
+/// Partially select the `k` largest-|x| indices into `scratch[..k]`
+/// (unsorted; `k < x.len()` required).
+fn select_topk(k: usize, x: &[f32], scratch: &mut Vec<u32>) {
+    scratch.clear();
+    scratch.extend(0..x.len() as u32);
+    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
 }
 
 /// Write top-k of `x` into `out` using `scratch` for selection
@@ -26,15 +48,7 @@ pub fn topk_into(k: usize, x: &[f32], out: &mut [f32], scratch: &mut Vec<u32>) {
         out.copy_from_slice(x);
         return;
     }
-    scratch.clear();
-    scratch.extend(0..d as u32);
-    // partial selection of the k largest |x_i|
-    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
-        x[b as usize]
-            .abs()
-            .partial_cmp(&x[a as usize].abs())
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    select_topk(k, x, scratch);
     for &i in scratch[..k].iter() {
         out[i as usize] = x[i as usize];
     }
@@ -42,9 +56,27 @@ pub fn topk_into(k: usize, x: &[f32], out: &mut [f32], scratch: &mut Vec<u32>) {
 
 impl Compressor for TopK {
     fn compress(&self, x: &[f32], out: &mut [f32], _rng: &mut Rng) -> u64 {
-        let mut scratch = Vec::with_capacity(x.len());
+        let mut scratch = self.scratch.borrow_mut();
         topk_into(self.k, x, out, &mut scratch);
         sparse_bits(self.k.min(x.len()), x.len())
+    }
+
+    fn compress_sparse(&self, x: &[f32], out: &mut SparseVec, _rng: &mut Rng) -> Option<u64> {
+        let d = x.len();
+        let k = self.k.min(d);
+        out.clear(d);
+        if k == d {
+            for (i, &v) in x.iter().enumerate() {
+                out.push(i as u32, v);
+            }
+        } else {
+            let mut scratch = self.scratch.borrow_mut();
+            select_topk(k, x, &mut scratch);
+            for &i in scratch[..k].iter() {
+                out.push(i, x[i as usize]);
+            }
+        }
+        Some(sparse_bits(k, d))
     }
 
     fn params(&self, d: usize) -> Params {
@@ -94,5 +126,45 @@ mod tests {
         let mut out = vec![0.0; 6];
         TopK::new(2).compress(&x, &mut out, &mut crate::rng(0));
         assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn sparse_path_matches_dense_path() {
+        let c = TopK::new(3);
+        let x = vec![0.1, -5.0, 3.0, 0.2, -0.3, 4.0, 0.05, -2.0];
+        let mut dense = vec![0.0; 8];
+        let bits_d = c.compress(&x, &mut dense, &mut crate::rng(0));
+        let mut sp = SparseVec::default();
+        let bits_s = c.compress_sparse(&x, &mut sp, &mut crate::rng(0)).unwrap();
+        assert_eq!(bits_d, bits_s);
+        assert_eq!(sp.len(), 3);
+        let mut densified = vec![0.0; 8];
+        sp.densify_into(&mut densified);
+        assert_eq!(densified, dense);
+    }
+
+    #[test]
+    fn sparse_path_k_ge_d_keeps_everything() {
+        let c = TopK::new(9);
+        let x = vec![1.0, -2.0, 3.0];
+        let mut sp = SparseVec::default();
+        c.compress_sparse(&x, &mut sp, &mut crate::rng(0)).unwrap();
+        assert_eq!(sp.len(), 3);
+        let mut densified = vec![0.0; 3];
+        sp.densify_into(&mut densified);
+        assert_eq!(densified, x);
+    }
+
+    #[test]
+    fn dense_path_reuses_scratch_capacity() {
+        let c = TopK::new(2);
+        let x = vec![3.0f32; 16];
+        let mut out = vec![0.0; 16];
+        c.compress(&x, &mut out, &mut crate::rng(0));
+        let cap = c.scratch.borrow().capacity();
+        for _ in 0..5 {
+            c.compress(&x, &mut out, &mut crate::rng(0));
+        }
+        assert_eq!(c.scratch.borrow().capacity(), cap, "scratch must be reused, not regrown");
     }
 }

@@ -345,7 +345,7 @@ pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
         Some(t) => Topology::Hier(Hierarchy::even(n, t.hubs.max(1), t.c1, t.c2)),
         None => Topology::Flat,
     };
-    Ok(Driver { sampler, up, down, topology })
+    Ok(Driver { sampler, up, down, topology, ..Driver::default() })
 }
 
 #[cfg(test)]

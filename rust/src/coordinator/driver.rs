@@ -10,20 +10,30 @@
 //!   per-node uplink/downlink bits, the paper's x-axes;
 //! * optional link [`Compressor`]s on the uplink and downlink, opening
 //!   compositions the hand-rolled loops could not express (e.g.
-//!   Scafflix with Top-K uplink compression);
+//!   Scafflix with Top-K uplink compression). With [`Driver::sparse_links`]
+//!   (the default) compressors with a native sparse form hand algorithms
+//!   their messages as `(index, value)` pairs, so a Top-K round
+//!   aggregates in O(k) instead of O(d) — bit-for-bit identical to the
+//!   dense reference path, which `with_sparse_links(false)` forces;
 //! * abstract communication cost under a [`Topology`]: flat (`c1 = 1`,
 //!   `c2 = 0`, a communicating round costs its local-round count) or a
 //!   2-level [`Hierarchy`] (`c2 + c1 * local_rounds` per global round);
-//! * optional thread-parallel client execution via
-//!   [`run_cohort_parallel`] ([`Driver::run_parallel`], for `Send + Sync`
-//!   oracles) when the algorithm advertises a shared
-//!   [`FlAlgorithm::grad_point`];
+//! * client execution: under [`Driver::run_parallel`] (for `Send + Sync`
+//!   oracles) a persistent [`WorkerPool`] spawned once per run; else the
+//!   oracle's batched [`Oracle::all_loss_grads`] dispatch when supported
+//!   (cohort-aware, so sampling wastes no work); else per-client calls
+//!   on the driver thread. All three visit clients in the same (cohort)
+//!   order, so the paths are loss-identical;
 //! * [`RunRecord`] emission at every eval round plus a final eval.
+//!
+//! Steady-state rounds allocate nothing: the driver reserves its record
+//! and ledger capacity up front and reuses its point/gradient/batch
+//! buffers (`rust/tests/alloc_free.rs` counts allocations to pin this).
 
 use anyhow::Result;
 
 use super::hierarchy::Hierarchy;
-use super::{run_cohort_parallel, CommLedger};
+use super::{default_pool_size, CommLedger, WorkerPool};
 use crate::algorithms::api::{ClientMsg, FlAlgorithm, RoundCtx};
 use crate::algorithms::RunOptions;
 use crate::compress::Compressor;
@@ -53,11 +63,14 @@ impl Topology {
     }
 }
 
-type ParEval<'a> = dyn Fn(&[usize], &[f32]) -> Result<Vec<(usize, f32, Vec<f32>)>> + 'a;
+/// Cohort evaluation hook: given (cohort, point, visitor), evaluate every
+/// cohort client's gradient at the point and feed `(client, loss, grad)`
+/// to the visitor in cohort order.
+type ParEval<'a> =
+    dyn Fn(&[usize], &[f32], &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>) -> Result<()> + 'a;
 
 /// The coordinator's algorithm runner. Construct with [`Driver::new`] and
 /// the `with_*` builders; one driver can run any number of algorithms.
-#[derive(Default)]
 pub struct Driver {
     /// Cohort sampler; `None` = full participation (consumes no RNG).
     pub sampler: Option<Box<dyn CohortSampler>>,
@@ -67,6 +80,22 @@ pub struct Driver {
     pub down: Option<Box<dyn Compressor>>,
     /// Communication-cost topology.
     pub topology: Topology,
+    /// Exploit compressors' native sparse messages (O(k) aggregation).
+    /// Default `true`; `false` forces the dense reference path. The two
+    /// produce bit-for-bit identical results.
+    pub sparse_links: bool,
+}
+
+impl Default for Driver {
+    fn default() -> Self {
+        Self {
+            sampler: None,
+            up: None,
+            down: None,
+            topology: Topology::default(),
+            sparse_links: true,
+        }
+    }
 }
 
 impl Driver {
@@ -94,6 +123,12 @@ impl Driver {
         self
     }
 
+    /// Enable/disable the O(k) sparse message path (default: enabled).
+    pub fn with_sparse_links(mut self, on: bool) -> Self {
+        self.sparse_links = on;
+        self
+    }
+
     /// Run `alg` for `opts.rounds` rounds from `x0`; clients execute on
     /// the driver thread (required for the PJRT-backed oracles, whose FFI
     /// handles are not `Send`).
@@ -108,9 +143,14 @@ impl Driver {
     }
 
     /// Like [`Driver::run`], but when the algorithm advertises a shared
-    /// [`FlAlgorithm::grad_point`] (and the oracle has no batched fast
-    /// path), cohort gradients are evaluated concurrently across OS
-    /// threads via [`run_cohort_parallel`].
+    /// [`FlAlgorithm::grad_point`], cohort gradients are evaluated by a
+    /// persistent [`WorkerPool`] — spawned once here, alive for the
+    /// whole run.
+    ///
+    /// The pool is only set up when `grad_point()` is already `Some`
+    /// *before* [`FlAlgorithm::init`] runs (all in-tree algorithms
+    /// decide this from constructor state); an algorithm whose shared
+    /// point only materializes during `init` runs serially.
     pub fn run_parallel<O>(
         &self,
         alg: &mut dyn FlAlgorithm,
@@ -121,8 +161,7 @@ impl Driver {
     where
         O: Oracle + Send + Sync,
     {
-        let par = |cohort: &[usize], x: &[f32]| run_cohort_parallel(oracle, cohort, x);
-        self.run_inner(alg, oracle, Some(&par), None, x0, opts)
+        self.run_parallel_streaming(alg, oracle, x0, opts, |_| {})
     }
 
     /// [`Driver::run_parallel`] with a live observer: `on_eval` fires at
@@ -140,8 +179,19 @@ impl Driver {
         O: Oracle + Send + Sync,
         F: FnMut(&RoundStat),
     {
-        let par = |cohort: &[usize], x: &[f32]| run_cohort_parallel(oracle, cohort, x);
-        self.run_inner(alg, oracle, Some(&par), Some(&mut on_eval), x0, opts)
+        if alg.grad_point().is_none() {
+            // no shared evaluation point: the pool could never be fed
+            return self.run_inner(alg, oracle, None, Some(&mut on_eval), x0, opts);
+        }
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
+            let par = |cohort: &[usize],
+                       x: &[f32],
+                       visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>| {
+                pool.eval(cohort, x, visit)
+            };
+            self.run_inner(alg, oracle, Some(&par), Some(&mut on_eval), x0, opts)
+        })
     }
 
     fn run_inner(
@@ -164,11 +214,18 @@ impl Driver {
         alg.init(oracle, x0, opts)?;
         let mut rec = RunRecord::new(alg.label());
         let mut ledger = CommLedger::default();
+        // pre-size the per-round structures: steady-state rounds must not
+        // grow (and therefore not reallocate) anything
+        ledger.history.reserve(opts.rounds);
+        rec.rounds.reserve(opts.rounds / opts.eval_every.max(1) + 2);
         let (c1, c2) = self.topology.costs();
         let mut rng = crate::rng(opts.seed);
         let mut cohort: Vec<usize> = Vec::with_capacity(n);
         let mut point: Vec<f32> = Vec::new();
         let mut gbuf = vec![0.0f32; d];
+        // reusable outputs for the oracle's batched dispatch
+        let mut blosses: Vec<f32> = Vec::new();
+        let mut bgrads: Vec<f32> = Vec::new();
 
         for t in 0..opts.rounds {
             if t % opts.eval_every == 0 {
@@ -191,6 +248,7 @@ impl Driver {
                 self.sampler.as_deref(),
                 self.up.as_deref(),
                 self.down.as_deref(),
+                self.sparse_links,
             );
 
             let shared = match alg.grad_point() {
@@ -202,27 +260,23 @@ impl Driver {
                 None => false,
             };
             if shared {
-                // one-dispatch fast path when the oracle supports it
-                match oracle.all_loss_grads(&point)? {
-                    Some((_losses, grads)) => {
-                        for &i in &cohort {
-                            let msg = ClientMsg { grad: &grads[i * d..(i + 1) * d] };
-                            alg.client_step(oracle, i, Some(msg), &mut ctx)?;
-                        }
+                // preference order: the worker pool (parallel per-client
+                // evaluation; only pure-Rust oracles get here), then the
+                // oracle's one-dispatch batched path, then serial calls
+                if let Some(par) = par {
+                    par(&cohort, &point, &mut |i, _loss, grad| {
+                        alg.client_step(oracle, i, Some(ClientMsg { grad }), &mut ctx)
+                    })?;
+                } else if oracle.all_loss_grads(&point, &cohort, &mut blosses, &mut bgrads)? {
+                    for &i in &cohort {
+                        let msg = ClientMsg { grad: &bgrads[i * d..(i + 1) * d] };
+                        alg.client_step(oracle, i, Some(msg), &mut ctx)?;
                     }
-                    None => {
-                        if let Some(par) = par {
-                            for (i, _loss, grad) in par(&cohort, &point)? {
-                                let msg = ClientMsg { grad: &grad };
-                                alg.client_step(oracle, i, Some(msg), &mut ctx)?;
-                            }
-                        } else {
-                            for &i in &cohort {
-                                oracle.loss_grad(i, &point, &mut gbuf)?;
-                                let msg = ClientMsg { grad: &gbuf };
-                                alg.client_step(oracle, i, Some(msg), &mut ctx)?;
-                            }
-                        }
+                } else {
+                    for &i in &cohort {
+                        oracle.loss_grad(i, &point, &mut gbuf)?;
+                        let msg = ClientMsg { grad: &gbuf };
+                        alg.client_step(oracle, i, Some(msg), &mut ctx)?;
                     }
                 }
             } else {
@@ -294,6 +348,7 @@ mod tests {
     use crate::algorithms::gd::Gd;
     use crate::oracle::quadratic::QuadraticOracle;
     use crate::oracle::Oracle as _;
+    use crate::sampling::NiceSampling;
 
     #[test]
     fn driver_runs_gd_and_records_ledger() {
@@ -338,6 +393,28 @@ mod tests {
         let rec_p = Driver::new().run_parallel(&mut b, &q, &vec![1.0; 5], &opts).unwrap();
         for (s, p) in rec_s.rounds.iter().zip(&rec_p.rounds) {
             assert_eq!(s.loss, p.loss);
+        }
+    }
+
+    #[test]
+    fn parallel_run_matches_serial_with_sampler_and_compressor() {
+        // pool path under partial participation and a compressed uplink:
+        // the pool visits in cohort order, so the runs are bit-identical
+        let mut rng = crate::rng(74);
+        let q = QuadraticOracle::random(12, 16, 0.5, 2.0, 1.0, &mut rng);
+        let opts = RunOptions { rounds: 60, eval_every: 15, seed: 5, ..Default::default() };
+        let mk = || {
+            Driver::new()
+                .with_sampler(Box::new(NiceSampling { n: 12, tau: 5 }))
+                .with_up(Box::new(crate::compress::topk::TopK::new(4)))
+        };
+        let mut a = Gd::plain(12, 16, 0.2);
+        let rec_s = mk().run(&mut a, &q, &vec![1.0; 16], &opts).unwrap();
+        let mut b = Gd::plain(12, 16, 0.2);
+        let rec_p = mk().run_parallel(&mut b, &q, &vec![1.0; 16], &opts).unwrap();
+        for (s, p) in rec_s.rounds.iter().zip(&rec_p.rounds) {
+            assert_eq!(s.loss, p.loss);
+            assert_eq!(s.bits_up, p.bits_up);
         }
     }
 

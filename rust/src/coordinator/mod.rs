@@ -1,17 +1,30 @@
 //! The L3 coordinator: the round [`driver::Driver`], communication
-//! ledger, topologies, and the threaded client pump.
+//! ledger, topologies, and the persistent client worker pool.
 //!
 //! The algorithm modules own only the *math* of a round (the
 //! [`crate::algorithms::api::FlAlgorithm`] trait); the coordinator owns
 //! everything around it: the round loop ([`driver::Driver`]), who talks
 //! to whom at what cost ([`hierarchy::Hierarchy`], [`driver::Topology`]),
 //! how bits are accounted ([`CommLedger`]), and how a fleet of clients
-//! executes concurrently ([`run_cohort_parallel`], for the `Send + Sync`
-//! pure-Rust oracles; the PJRT-backed oracles run on the driver thread
-//! because the FFI handles are not `Send`).
+//! executes concurrently ([`WorkerPool`]).
+//!
+//! Perf contract of the client pump (DESIGN.md §Perf): a [`WorkerPool`]
+//! is spawned **once per run**, not per round — its OS threads live for
+//! the whole round loop and each worker owns reusable loss/gradient
+//! buffers, so steady-state rounds perform no thread spawns and no
+//! per-client `vec![0.0; d]` allocations (the pre-pool pump paid both,
+//! every round). Results are visited in **cohort order** — the same
+//! order the serial path uses — so pool-parallel runs are loss-identical
+//! to serial runs. The pool requires a `Send + Sync` oracle (the
+//! pure-Rust ones); the PJRT-backed oracles run on the driver thread
+//! because the FFI handles are not `Send`, and usually hit the batched
+//! [`crate::oracle::Oracle::all_loss_grads`] dispatch instead.
 
 pub mod driver;
 pub mod hierarchy;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -42,49 +55,226 @@ impl CommLedger {
     }
 }
 
-/// One concurrent cohort evaluation: every client computes its gradient at
-/// `x` on its own OS thread (scoped; no external runtime needed). Requires
-/// a `Send + Sync` oracle — i.e. the pure-Rust ones.
-pub fn run_cohort_parallel<O>(
-    oracle: &O,
-    cohort: &[usize],
-    x: &[f32],
-) -> Result<Vec<(usize, f32, Vec<f32>)>>
-where
-    O: Oracle + Send + Sync,
-{
-    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let chunk = cohort.len().div_ceil(n_threads.max(1)).max(1);
-    let mut out: Vec<(usize, f32, Vec<f32>)> = Vec::with_capacity(cohort.len());
-    let results = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for ids in cohort.chunks(chunk) {
-            handles.push(scope.spawn(move || {
-                let mut part = Vec::with_capacity(ids.len());
-                for &i in ids {
-                    let mut g = vec![0.0f32; oracle.dim()];
-                    let loss = oracle.loss_grad(i, x, &mut g)?;
-                    part.push((i, loss, g));
+/// Default pool width: one worker per available core.
+pub fn default_pool_size() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Round inputs shared between the driver thread and the workers,
+/// refreshed in place each round (capacity persists).
+#[derive(Default)]
+struct PoolInput {
+    point: Vec<f32>,
+    cohort: Vec<usize>,
+}
+
+/// One worker's output slots for the chunk it was last assigned; the
+/// buffers are reused across rounds (resize, never reallocate at steady
+/// state) and locked only at hand-off.
+#[derive(Default)]
+struct WorkerOut {
+    losses: Vec<f32>,
+    grads: Vec<f32>,
+    count: usize,
+    err: Option<anyhow::Error>,
+}
+
+/// A persistent pool of client-evaluation workers, spawned once per run
+/// on a [`std::thread::scope`] and fed one contiguous cohort chunk per
+/// round. Dropping the pool (or unwinding past it) closes the job
+/// channels; the workers drain and the scope joins them.
+pub struct WorkerPool {
+    input: Arc<RwLock<PoolInput>>,
+    outs: Vec<Arc<Mutex<WorkerOut>>>,
+    jobs: Vec<Sender<(usize, usize)>>,
+    done: Receiver<()>,
+    dim: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads on `scope`, each evaluating gradients of
+    /// `oracle` into its own reusable buffers for the lifetime of the
+    /// run.
+    pub fn spawn<'scope, 'env, O>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        oracle: &'env O,
+        workers: usize,
+    ) -> Self
+    where
+        O: Oracle + Send + Sync,
+    {
+        let workers = workers.max(1);
+        let dim = oracle.dim();
+        let input: Arc<RwLock<PoolInput>> = Arc::default();
+        let (done_tx, done) = channel();
+        let mut jobs = Vec::with_capacity(workers);
+        let mut outs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (job_tx, job_rx) = channel::<(usize, usize)>();
+            let out: Arc<Mutex<WorkerOut>> = Arc::default();
+            let input_w = input.clone();
+            let out_w = out.clone();
+            let done_w = done_tx.clone();
+            scope.spawn(move || {
+                while let Ok((start, end)) = job_rx.recv() {
+                    // catch panics from the oracle so the done signal is
+                    // always sent — a silently missing signal would leave
+                    // the driver blocked in eval() forever
+                    let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let input = input_w.read().expect("pool input lock poisoned");
+                        let mut guard = out_w.lock().unwrap_or_else(|p| p.into_inner());
+                        let slot = &mut *guard;
+                        let m = end - start;
+                        slot.count = m;
+                        slot.err = None;
+                        slot.losses.resize(m, 0.0);
+                        slot.grads.resize(m * dim, 0.0);
+                        for (j, &client) in input.cohort[start..end].iter().enumerate() {
+                            let g = &mut slot.grads[j * dim..(j + 1) * dim];
+                            match oracle.loss_grad(client, &input.point, g) {
+                                Ok(l) => slot.losses[j] = l,
+                                Err(e) => {
+                                    slot.err = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                    }));
+                    if work.is_err() {
+                        let mut guard = out_w.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.count = 0;
+                        guard.err = Some(anyhow::anyhow!(
+                            "pool worker panicked in Oracle::loss_grad"
+                        ));
+                    }
+                    if done_w.send(()).is_err() {
+                        return; // driver side is gone
+                    }
                 }
-                Ok::<_, anyhow::Error>(part)
-            }));
+            });
+            jobs.push(job_tx);
+            outs.push(out);
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("cohort worker panicked"))
-            .collect::<Result<Vec<_>>>()
-    })?;
-    for part in results {
-        out.extend(part);
+        Self { input, outs, jobs, done, dim }
     }
-    out.sort_by_key(|(i, _, _)| *i);
-    Ok(out)
+
+    /// Evaluate every cohort client's gradient at `x` across the pool,
+    /// then visit `(client, loss, grad)` results **in cohort order** —
+    /// exactly the serial iteration order, so callers are bit-compatible
+    /// with a serial run.
+    pub fn eval(
+        &self,
+        cohort: &[usize],
+        x: &[f32],
+        visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        if cohort.is_empty() {
+            return Ok(());
+        }
+        {
+            let mut input = self.input.write().expect("pool input lock poisoned");
+            input.point.clear();
+            input.point.extend_from_slice(x);
+            input.cohort.clear();
+            input.cohort.extend_from_slice(cohort);
+        }
+        let chunk = cohort.len().div_ceil(self.jobs.len()).max(1);
+        let mut active = 0;
+        for (w, job) in self.jobs.iter().enumerate() {
+            let start = w * chunk;
+            if start >= cohort.len() {
+                break;
+            }
+            let end = ((w + 1) * chunk).min(cohort.len());
+            job.send((start, end)).map_err(|_| anyhow::anyhow!("pool worker exited"))?;
+            active += 1;
+        }
+        for _ in 0..active {
+            self.done.recv().map_err(|_| anyhow::anyhow!("pool worker exited"))?;
+        }
+        for w in 0..active {
+            let mut guard = self.outs[w].lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(e) = guard.err.take() {
+                return Err(e);
+            }
+            let start = w * chunk;
+            for (j, &client) in cohort[start..start + guard.count].iter().enumerate() {
+                visit(client, guard.losses[j], &guard.grads[j * self.dim..(j + 1) * self.dim])?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::oracle::quadratic::QuadraticOracle;
+
+    #[test]
+    fn pool_matches_serial() {
+        let mut rng = crate::rng(42);
+        let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.7f32; 5];
+        let cohort = vec![0usize, 2, 4];
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, &q, 3);
+            let mut seen: Vec<(usize, f32, Vec<f32>)> = Vec::new();
+            pool.eval(&cohort, &x, &mut |i, loss, g| {
+                seen.push((i, loss, g.to_vec()));
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seen.len(), 3);
+            for (i, loss, g) in seen {
+                let mut g2 = vec![0.0f32; 5];
+                let l2 = q.loss_grad(i, &x, &mut g2).unwrap();
+                assert_eq!(loss, l2);
+                assert_eq!(g, g2);
+            }
+        });
+    }
+
+    #[test]
+    fn pool_visits_in_cohort_order_across_rounds() {
+        // the pool persists across rounds and always visits in cohort
+        // order — including deliberately unsorted cohorts
+        let mut rng = crate::rng(43);
+        let q = QuadraticOracle::random(32, 5, 0.5, 2.0, 1.0, &mut rng);
+        let cohort: Vec<usize> = (0..32).rev().collect();
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, &q, 4);
+            for round in 0..3 {
+                let x = vec![0.1f32 * (round + 1) as f32; 5];
+                let mut order = Vec::new();
+                pool.eval(&cohort, &x, &mut |i, _l, _g| {
+                    order.push(i);
+                    Ok(())
+                })
+                .unwrap();
+                assert_eq!(order, cohort, "round {round}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_handles_more_workers_than_clients() {
+        let mut rng = crate::rng(44);
+        let q = QuadraticOracle::random(4, 3, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.2f32; 3];
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, &q, 16);
+            let mut count = 0;
+            pool.eval(&[1, 3], &x, &mut |_i, _l, _g| {
+                count += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(count, 2);
+            // empty cohorts are a no-op, not a deadlock
+            pool.eval(&[], &x, &mut |_, _, _| Ok(())).unwrap();
+        });
+    }
 
     #[test]
     fn ledger_accumulates() {
@@ -96,33 +286,5 @@ mod tests {
         l.up(100);
         l.snapshot(2);
         assert_eq!(l.history, vec![(1, 100, 50, 2.5), (2, 200, 50, 2.5)]);
-    }
-
-    #[test]
-    fn parallel_cohort_matches_serial() {
-        let mut rng = crate::rng(42);
-        let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
-        let x = vec![0.7f32; 5];
-        let cohort = vec![0, 2, 4];
-        let par = run_cohort_parallel(&q, &cohort, &x).unwrap();
-        assert_eq!(par.len(), 3);
-        for (i, loss, g) in par {
-            let mut g2 = vec![0.0f32; 5];
-            let l2 = q.loss_grad(i, &x, &mut g2).unwrap();
-            assert_eq!(loss, l2);
-            assert_eq!(g, g2);
-        }
-    }
-
-    #[test]
-    fn parallel_cohort_full_fleet() {
-        let mut rng = crate::rng(43);
-        let q = QuadraticOracle::random(32, 5, 0.5, 2.0, 1.0, &mut rng);
-        let x = vec![0.3f32; 5];
-        let cohort: Vec<usize> = (0..32).collect();
-        let out = run_cohort_parallel(&q, &cohort, &x).unwrap();
-        assert_eq!(out.len(), 32);
-        // sorted by client id
-        assert!(out.windows(2).all(|w| w[0].0 < w[1].0));
     }
 }

@@ -37,8 +37,14 @@
 //!   nice, block, stratified + k-means clustering), consumed by the driver
 //!   for every algorithm.
 //! * [`coordinator`] owns the round driver, topologies (flat &
-//!   hierarchical), the communication-cost ledger and the threaded client
-//!   pump; [`metrics`] records every curve the paper plots.
+//!   hierarchical), the communication-cost ledger and the persistent
+//!   client worker pool; [`metrics`] records every curve the paper
+//!   plots. For the gradient-aggregating algorithms (GD, the EF-BV
+//!   family, FedAvg/FedProx, Scaffold) paired with the sparsifying
+//!   compressors (Top-K, Rand-K, Perm-K), compressed rounds are
+//!   allocation-free and aggregate in O(k): sparse messages
+//!   ([`compress::SparseVec`]) travel from the compressors through the
+//!   driver's link slots into the algorithms' scatter-add aggregation.
 //!
 //! See `examples/quickstart.rs` for a minimal end-to-end run.
 

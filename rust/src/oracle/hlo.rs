@@ -28,6 +28,8 @@ pub struct HloLogReg {
     /// (§Perf iteration 2: the batched path initially re-uploaded ~1 MB
     /// of shard data per call, making it slower than 10 per-client calls).
     batch_staged: RefCell<Option<(Staged, Staged)>>,
+    /// Reusable replicated-weights input for the batched artifact.
+    ws_buf: RefCell<Vec<f32>>,
     mu_buf: [f32; 1],
     m: usize,
     mb: usize,
@@ -56,6 +58,7 @@ impl HloLogReg {
             mu,
             staged,
             batch_staged: RefCell::new(None),
+            ws_buf: RefCell::new(Vec::new()),
             mu_buf: [mu],
             m: prof.m,
             mb: prof.mb,
@@ -135,18 +138,33 @@ impl Oracle for HloLogReg {
         Ok(out[0][0])
     }
 
-    fn all_loss_grads(&self, w: &[f32]) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+    fn all_loss_grads(
+        &self,
+        w: &[f32],
+        _cohort: &[usize],
+        losses: &mut Vec<f32>,
+        grads: &mut Vec<f32>,
+    ) -> Result<bool> {
+        // the artifact has a fixed [n, d] shape: one dispatch computes the
+        // whole fleet, which beats per-client dispatches even for partial
+        // cohorts
         let n = self.rt.manifest().logreg_batch_n;
         if self.data.clients.len() != n {
-            return Ok(None);
+            return Ok(false);
         }
         // replicate w per client (the batched artifact takes Ws[n, d])
-        let mut ws = Vec::with_capacity(n * w.len());
+        // into the reusable input scratch
+        let mut ws = self.ws_buf.borrow_mut();
+        ws.clear();
         for _ in 0..n {
             ws.extend_from_slice(w);
         }
-        let (losses, grads) = self.batch_loss_grad(&ws, n)?;
-        Ok(Some((losses, grads)))
+        let (l, g) = self.batch_loss_grad(&ws, n)?;
+        // move, don't copy: the PJRT boundary materializes fresh output
+        // Vecs (a runtime-layer constraint), so hand those to the caller
+        *losses = l;
+        *grads = g;
+        Ok(true)
     }
 
     fn smoothness(&self, client: usize) -> f32 {

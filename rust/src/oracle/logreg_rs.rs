@@ -4,12 +4,36 @@
 //! kernel (`python/compile/kernels/logreg.py`). Used to cross-validate the
 //! HLO artifacts (integration tests) and as a fast fallback for
 //! experiments whose shard shapes don't match a compiled artifact.
+//!
+//! The full-shard pass is *blocked* (DESIGN.md §Perf): margins are
+//! computed GEMV-style (one [`crate::vecmath::dot`] per row, unrolled
+//! 4-wide internally), the per-row gradient coefficients
+//! `c_i = -sigmoid(-t_i) y_i / m` land in a reusable buffer, and the
+//! gradient `A^T c` accumulates four rows at a time through
+//! [`crate::vecmath::axpy4`] — one read-modify-write pass over `grad`
+//! per 4 rows instead of per row. [`Oracle::all_loss_grads`] exposes the
+//! same pass over every shard in one call, so a full cohort evaluation is
+//! a single dispatch with zero per-round allocations.
+//!
+//! Scratch buffers are `thread_local!` rather than oracle fields: the
+//! oracle stays `Send + Sync` (the coordinator's worker pool calls
+//! `loss_grad` concurrently), each pool worker reuses its own buffers,
+//! and steady-state calls never allocate.
+
+use std::cell::RefCell;
 
 use anyhow::Result;
 
 use super::Oracle;
-use crate::data::FedBinDataset;
+use crate::data::{BinShard, FedBinDataset};
 use crate::Rng;
+
+thread_local! {
+    /// Per-row gradient coefficients for the blocked shard pass.
+    static COEFF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Sampled-row indices for the stochastic gradient.
+    static ROWS: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
 
 pub struct RustLogReg {
     pub data: FedBinDataset,
@@ -22,22 +46,71 @@ impl RustLogReg {
         Self { data, mu, batch: 32 }
     }
 
+    /// Stable log(1 + exp(-t)).
+    #[inline]
+    fn log1p_exp_neg(margin: f32) -> f32 {
+        if margin > 0.0 {
+            (-margin).exp().ln_1p()
+        } else {
+            -margin + margin.exp().ln_1p()
+        }
+    }
+
+    /// One blocked pass over a full shard: margins via per-row dots
+    /// (pass 1, GEMV), then `grad = A^T c + mu w` with the rank-4 fused
+    /// accumulation (pass 2). Allocation-free after each thread's first
+    /// call.
+    fn shard_loss_grad(&self, shard: &BinShard, w: &[f32], grad: &mut [f32]) -> f32 {
+        let m = shard.m;
+        let mf = m as f32;
+        COEFF.with(|cell| {
+            let mut coeff = cell.borrow_mut();
+            coeff.clear();
+            coeff.resize(m, 0.0);
+            let mut loss = 0.0f32;
+            for i in 0..m {
+                let yi = shard.y[i];
+                let margin = crate::vecmath::dot(shard.row(i), w) * yi;
+                loss += Self::log1p_exp_neg(margin);
+                // -sigmoid(-t) * y / m
+                let sig = 1.0 / (1.0 + margin.exp());
+                coeff[i] = -sig * yi / mf;
+            }
+            grad.fill(0.0);
+            let blocks = m / 4 * 4;
+            let mut i = 0;
+            while i < blocks {
+                crate::vecmath::axpy4(
+                    [coeff[i], coeff[i + 1], coeff[i + 2], coeff[i + 3]],
+                    shard.row(i),
+                    shard.row(i + 1),
+                    shard.row(i + 2),
+                    shard.row(i + 3),
+                    grad,
+                );
+                i += 4;
+            }
+            while i < m {
+                crate::vecmath::axpy(coeff[i], shard.row(i), grad);
+                i += 1;
+            }
+            loss /= mf;
+            loss += 0.5 * self.mu * crate::vecmath::norm_sq(w);
+            crate::vecmath::axpy(self.mu, w, grad);
+            loss
+        })
+    }
+
+    /// Loss/grad over an explicit row subset (the stochastic path).
     fn grad_rows(&self, client: usize, rows: &[usize], w: &[f32], grad: &mut [f32]) -> f32 {
         let shard = &self.data.clients[client];
-        let _d = shard.d;
         let m = rows.len() as f32;
         grad.fill(0.0);
         let mut loss = 0.0f32;
         for &i in rows {
             let xi = shard.row(i);
             let margin = crate::vecmath::dot(xi, w) * shard.y[i];
-            // stable log(1 + exp(-t))
-            loss += if margin > 0.0 {
-                (-margin).exp().ln_1p()
-            } else {
-                -margin + margin.exp().ln_1p()
-            };
-            // -sigmoid(-t) * y
+            loss += Self::log1p_exp_neg(margin);
             let sig = 1.0 / (1.0 + margin.exp());
             let coeff = -sig * shard.y[i] / m;
             crate::vecmath::axpy(coeff, xi, grad);
@@ -58,9 +131,8 @@ impl Oracle for RustLogReg {
     }
 
     fn loss_grad(&self, client: usize, w: &[f32], grad: &mut [f32]) -> Result<f32> {
-        let m = self.data.clients[client].m;
-        let rows: Vec<usize> = (0..m).collect();
-        Ok(self.grad_rows(client, &rows, w, grad))
+        // full shard: iterate rows directly — no index materialization
+        Ok(self.shard_loss_grad(&self.data.clients[client], w, grad))
     }
 
     fn loss_grad_stoch(
@@ -72,8 +144,34 @@ impl Oracle for RustLogReg {
     ) -> Result<f32> {
         let m = self.data.clients[client].m;
         let b = self.batch.min(m);
-        let rows: Vec<usize> = (0..b).map(|_| rng.below(m)).collect();
-        Ok(self.grad_rows(client, &rows, w, grad))
+        ROWS.with(|cell| {
+            let mut rows = cell.borrow_mut();
+            rows.clear();
+            rows.extend((0..b).map(|_| rng.below(m)));
+            Ok(self.grad_rows(client, &rows, w, grad))
+        })
+    }
+
+    /// The cohort at one point in a single blocked sweep: the pure-Rust
+    /// analogue of the batched HLO artifact. Fills the cohort rows of the
+    /// caller's reusable `losses[n]` / `grads[n*d]` buffers — only the
+    /// requested shards are computed (no wasted work under sampling).
+    fn all_loss_grads(
+        &self,
+        w: &[f32],
+        cohort: &[usize],
+        losses: &mut Vec<f32>,
+        grads: &mut Vec<f32>,
+    ) -> Result<bool> {
+        let n = self.data.clients.len();
+        let d = self.data.d;
+        losses.resize(n, 0.0);
+        grads.resize(n * d, 0.0);
+        for &i in cohort {
+            losses[i] =
+                self.shard_loss_grad(&self.data.clients[i], w, &mut grads[i * d..(i + 1) * d]);
+        }
+        Ok(true)
     }
 
     /// L_i = (1/(4 m_i)) sum_j ||a_{ij}||^2 + mu (paper's formula, Sect. 3.3.1).
@@ -103,7 +201,7 @@ mod tests {
     fn grad_matches_finite_difference() {
         let o = oracle();
         let mut rng = crate::rng(22);
-                let w: Vec<f32> = (0..12).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let w: Vec<f32> = (0..12).map(|_| rng.f32_range(-0.5, 0.5)).collect();
         let mut g = vec![0.0f32; 12];
         o.loss_grad(1, &w, &mut g).unwrap();
         let eps = 1e-3f32;
@@ -153,5 +251,72 @@ mod tests {
         for i in 0..3 {
             assert!(o.smoothness(i) > o.mu(i));
         }
+    }
+
+    #[test]
+    fn full_grad_matches_row_subset_grad() {
+        // the blocked full-shard pass and the explicit-rows pass compute
+        // the same mathematical gradient (different accumulation order)
+        let o = oracle();
+        let w = vec![0.2f32; 12];
+        let mut blocked = vec![0.0f32; 12];
+        let lb = o.loss_grad(0, &w, &mut blocked).unwrap();
+        let rows: Vec<usize> = (0..o.data.clients[0].m).collect();
+        let mut byrow = vec![0.0f32; 12];
+        let lr = o.grad_rows(0, &rows, &w, &mut byrow);
+        assert!((lb - lr).abs() < 1e-5, "loss {lb} vs {lr}");
+        for j in 0..12 {
+            assert!((blocked[j] - byrow[j]).abs() < 1e-4, "j={j}: {} vs {}", blocked[j], byrow[j]);
+        }
+    }
+
+    #[test]
+    fn batched_pass_matches_per_client_calls() {
+        // all_loss_grads must be bit-identical to loss_grad per client:
+        // it is the same shard pass writing into a row of the batch buffer
+        let o = oracle();
+        let w = vec![0.15f32; 12];
+        let mut losses = Vec::new();
+        let mut grads = Vec::new();
+        let cohort: Vec<usize> = (0..3).collect();
+        assert!(o.all_loss_grads(&w, &cohort, &mut losses, &mut grads).unwrap());
+        assert_eq!(losses.len(), 3);
+        assert_eq!(grads.len(), 3 * 12);
+        for i in 0..3 {
+            let mut g = vec![0.0f32; 12];
+            let l = o.loss_grad(i, &w, &mut g).unwrap();
+            assert_eq!(l, losses[i], "client {i} loss");
+            assert_eq!(&grads[i * 12..(i + 1) * 12], &g[..], "client {i} grad");
+        }
+    }
+
+    #[test]
+    fn batched_pass_is_cohort_aware() {
+        // only the requested shards are computed; other rows stay zero
+        let o = oracle();
+        let w = vec![0.15f32; 12];
+        let mut losses = Vec::new();
+        let mut grads = Vec::new();
+        assert!(o.all_loss_grads(&w, &[1], &mut losses, &mut grads).unwrap());
+        let mut g = vec![0.0f32; 12];
+        let l = o.loss_grad(1, &w, &mut g).unwrap();
+        assert_eq!(l, losses[1]);
+        assert_eq!(&grads[12..24], &g[..]);
+        assert!(grads[..12].iter().all(|&v| v == 0.0), "unrequested rows untouched");
+    }
+
+    #[test]
+    fn stochastic_path_reuses_row_buffer() {
+        let o = oracle();
+        let w = vec![0.1f32; 12];
+        let mut g = vec![0.0f32; 12];
+        let mut rng = crate::rng(9);
+        o.loss_grad_stoch(0, &w, &mut g, &mut rng).unwrap();
+        let cap = ROWS.with(|c| c.borrow().capacity());
+        for _ in 0..10 {
+            o.loss_grad_stoch(0, &w, &mut g, &mut rng).unwrap();
+        }
+        let cap_after = ROWS.with(|c| c.borrow().capacity());
+        assert_eq!(cap_after, cap, "row buffer must be reused, not regrown");
     }
 }

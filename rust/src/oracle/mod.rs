@@ -59,13 +59,24 @@ pub trait Oracle {
         Ok(acc / n as f32)
     }
 
-    /// Optional vectorized fast path: losses and gradients of *all*
-    /// clients at the same point w, in one dispatch (the batched HLO
-    /// artifact; see DESIGN.md §Perf L2). Returns None when unsupported;
-    /// callers fall back to per-client calls. On success returns
-    /// (losses[n], grads[n*d] row-major).
-    fn all_loss_grads(&self, _w: &[f32]) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
-        Ok(None)
+    /// Optional vectorized fast path: losses and gradients of the
+    /// `cohort` clients at the same point w, in one dispatch (the batched
+    /// HLO artifact, or the blocked pure-Rust logreg pass; see DESIGN.md
+    /// §Perf L2). Implementations resize the caller's reusable buffers to
+    /// `losses[n]` / `grads[n*d]` (row-major, indexed by client id) and
+    /// fill at least the cohort rows, returning `true`; fixed-shape
+    /// backends (the batched HLO artifact) may compute the whole fleet
+    /// regardless. The default returns `false` and callers fall back to
+    /// per-client [`Oracle::loss_grad`] calls. The buffers are owned by
+    /// the caller precisely so the per-round hot path does not allocate.
+    fn all_loss_grads(
+        &self,
+        _w: &[f32],
+        _cohort: &[usize],
+        _losses: &mut Vec<f32>,
+        _grads: &mut Vec<f32>,
+    ) -> Result<bool> {
+        Ok(false)
     }
 
     /// Per-client strong-convexity estimates mu_i (used by Scafflix

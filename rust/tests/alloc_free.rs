@@ -1,0 +1,77 @@
+//! Zero-per-round-allocation guarantee for the driver hot path.
+//!
+//! Strategy: a counting global allocator, and two runs of the same
+//! configuration that differ only in round count (evals pinned to t=0 +
+//! final in both). If steady-state rounds allocated anything, the longer
+//! run would count more allocations; equality proves the per-round path
+//! is allocation-free — for the dense GD path and for the sparse Top-K
+//! compressed path (reusable selection scratch + `SparseVec` buffers).
+//!
+//! Keep this file to a single `#[test]`: the counter is process-global,
+//! and a second concurrently-running test would pollute the window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fedeff::algorithms::gd::Gd;
+use fedeff::algorithms::RunOptions;
+use fedeff::compress::topk::TopK;
+use fedeff::coordinator::driver::Driver;
+use fedeff::oracle::quadratic::QuadraticOracle;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct Counting;
+
+// SAFETY: delegates allocation to `System` unchanged; only counts.
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+/// Allocation count of one full deterministic run (setup + init + two
+/// evals + `rounds` steady-state rounds).
+fn allocs_for(rounds: usize, topk_uplink: bool) -> u64 {
+    let mut rng = fedeff::rng(7);
+    let q = QuadraticOracle::random(8, 64, 0.5, 2.0, 1.0, &mut rng);
+    let mut alg = Gd::plain(8, 64, 0.2);
+    let drv = if topk_uplink {
+        Driver::new().with_up(Box::new(TopK::new(8)))
+    } else {
+        Driver::new()
+    };
+    // evals only at t=0 and the final record: identical in both runs
+    let opts = RunOptions { rounds, eval_every: 1 << 30, ..Default::default() };
+    let x0 = vec![0.5f32; 64];
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let rec = drv.run(&mut alg, &q, &x0, &opts).unwrap();
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert!(rec.last().unwrap().loss.is_finite());
+    after - before
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate() {
+    for &topk in &[false, true] {
+        let label = if topk { "sparse Top-K GD" } else { "dense GD" };
+        let _warmup = allocs_for(10, topk);
+        let base = allocs_for(50, topk);
+        let double = allocs_for(100, topk);
+        assert_eq!(
+            double, base,
+            "{label}: 100-round run allocated {double} vs {base} for 50 rounds — steady-state rounds must be allocation-free"
+        );
+    }
+}

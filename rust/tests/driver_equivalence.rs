@@ -3,10 +3,12 @@
 //! quadratic oracle at fixed seeds. The reference loops below are verbatim
 //! copies of the seed implementations of GD, FedAvg and Scafflix.
 //!
-//! Also covers the registry (every advertised name constructs and runs)
-//! and the two previously-impossible compositions the redesign opens:
-//! Scafflix with Top-K uplink compression and FedAvg costed over a
-//! 2-level hierarchy — both reachable from a TOML spec.
+//! Also covers the registry (every advertised name constructs and runs),
+//! the two previously-impossible compositions the redesign opens
+//! (Scafflix with Top-K uplink compression and FedAvg costed over a
+//! 2-level hierarchy — both reachable from a TOML spec), and the sparse
+//! message fast path: runs over the O(k) sparse link path must match the
+//! dense reference path bit-for-bit in loss and booked bits.
 
 use fedeff::algorithms::gd::{FlixGd, Gd};
 use fedeff::algorithms::scafflix::Scafflix;
@@ -365,6 +367,100 @@ fn composition_fedavg_over_hierarchy() {
     let rec = drv.run(&mut alg, &q, &vec![1.0; 5], &opts).unwrap();
     let cost = rec.last().unwrap().comm_cost;
     assert!((cost - 20.0 * 1.05).abs() < 1e-9, "hierarchical cost {cost}");
+}
+
+/// Assert two records are bit-for-bit identical in loss and in the
+/// cumulative per-node bits on both links.
+fn assert_records_bitwise_eq(
+    a: &fedeff::metrics::RunRecord,
+    b: &fedeff::metrics::RunRecord,
+    what: &str,
+) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: record lengths differ");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert!(ra.loss == rb.loss, "{what}: entry {i} loss {} vs {}", ra.loss, rb.loss);
+        assert_eq!(ra.bits_up, rb.bits_up, "{what}: entry {i} bits_up");
+        assert_eq!(ra.bits_down, rb.bits_down, "{what}: entry {i} bits_down");
+    }
+}
+
+#[test]
+fn sparse_path_matches_dense_gd_topk() {
+    let q = quadratic(60, 6, 64);
+    let x0 = vec![1.0f32; 64];
+    let opts = RunOptions { rounds: 80, eval_every: 10, seed: 3, ..Default::default() };
+    let mut a = Gd::plain(6, 64, 0.1);
+    let rec_dense = Driver::new()
+        .with_up(Box::new(fedeff::compress::topk::TopK::new(8)))
+        .with_sparse_links(false)
+        .run(&mut a, &q, &x0, &opts)
+        .unwrap();
+    let mut b = Gd::plain(6, 64, 0.1);
+    let rec_sparse = Driver::new()
+        .with_up(Box::new(fedeff::compress::topk::TopK::new(8)))
+        .run(&mut b, &q, &x0, &opts)
+        .unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "GD+TopK");
+    // the compressed uplink actually booked sparse-message bits
+    let dense_bits = 32u64 * 64 * 80;
+    assert!(rec_sparse.last().unwrap().bits_up < dense_bits);
+}
+
+#[test]
+fn sparse_path_matches_dense_ef21_topk() {
+    let q = quadratic(61, 8, 48);
+    let x0 = vec![1.0f32; 48];
+    let opts = RunOptions { rounds: 120, eval_every: 20, seed: 8, ..Default::default() };
+    let mut a =
+        fedeff::algorithms::efbv::EfBv::ef21(Box::new(fedeff::compress::topk::TopK::new(6)));
+    let rec_dense = Driver::new()
+        .with_sparse_links(false)
+        .run(&mut a, &q, &x0, &opts)
+        .unwrap();
+    let mut b =
+        fedeff::algorithms::efbv::EfBv::ef21(Box::new(fedeff::compress::topk::TopK::new(6)));
+    let rec_sparse = Driver::new().run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "EF21+TopK");
+}
+
+#[test]
+fn sparse_path_matches_dense_fedavg_randk() {
+    // FedCOM delta compression on both links under partial participation:
+    // Rand-K draws from the link RNG, which both paths must consume
+    // identically
+    let q = quadratic(62, 8, 32);
+    let x0 = vec![2.0f32; 32];
+    let opts = RunOptions { rounds: 100, eval_every: 20, seed: 13, ..Default::default() };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 8, tau: 4 }))
+            .with_up(Box::new(fedeff::compress::randk::RandK::scaled(5)))
+            .with_down(Box::new(fedeff::compress::randk::RandK::scaled(5)))
+            .with_sparse_links(sparse)
+    };
+    let mut a = fedeff::algorithms::fedavg::FedAvg::new(3, 0.1);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = fedeff::algorithms::fedavg::FedAvg::new(3, 0.1);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "FedAvg+RandK");
+}
+
+#[test]
+fn sparse_path_matches_dense_scaffold_topk() {
+    let q = quadratic(63, 6, 40);
+    let x0 = vec![1.5f32; 40];
+    let opts = RunOptions { rounds: 100, eval_every: 25, seed: 17, ..Default::default() };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 6, tau: 3 }))
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(5)))
+            .with_sparse_links(sparse)
+    };
+    let mut a = fedeff::algorithms::scaffold::Scaffold::new(3, 0.05);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = fedeff::algorithms::scaffold::Scaffold::new(3, 0.05);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "Scaffold+TopK");
 }
 
 #[test]
