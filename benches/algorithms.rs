@@ -193,6 +193,82 @@ fn main() {
         }
     }
 
+    // ---- hierarchical aggregation: flat vs 2-level vs 3-level trees ----
+    // Same workload (n=256, d=16384, Top-K(128) leaf uplink) aggregated
+    // flat at the server, through 16 hubs (Top-K(1024) hub->server), and
+    // through 64 sub-hubs + 8 hubs. The reported root_bits column is the
+    // per-round traffic on the server-facing edge, measured from a probe
+    // run's per-edge ledger — the hub->server bit reduction the tree buys.
+    {
+        use fedeff::coordinator::driver::Topology;
+        use fedeff::coordinator::hierarchy::AggTree;
+
+        let (n, d, k, rounds) = (256usize, 16384usize, 128usize, 3usize);
+        let mut rng4 = fedeff::rng(11);
+        let big = QuadraticOracle::random(n, d, 0.5, 3.0, 1.0, &mut rng4);
+        let bx0 = vec![0.5f32; d];
+        let bopts = RunOptions { rounds, eval_every: 1000, ..Default::default() };
+        let probe_opts = RunOptions { rounds: 1, eval_every: 1000, ..Default::default() };
+
+        let mk_flat = || Driver::new().with_up(Box::new(TopK::new(k)));
+        let mk_tree2 = || {
+            Driver::new()
+                .with_up(Box::new(TopK::new(k)))
+                .with_up_edge(1, Box::new(TopK::new(1024)))
+                .with_topology(Topology::Tree(AggTree::even(n, &[16], vec![0.05, 1.0])))
+        };
+        let mk_tree3 = || {
+            Driver::new()
+                .with_up(Box::new(TopK::new(k)))
+                .with_up_edge(1, Box::new(TopK::new(2048)))
+                .with_up_edge(2, Box::new(TopK::new(1024)))
+                .with_topology(Topology::Tree(AggTree::even(n, &[64, 8], vec![0.05, 0.2, 1.0])))
+        };
+        // per-round server-facing bits: closed form for the flat shape
+        // (n Top-K messages hit the server), a 1-round probe of the
+        // per-edge ledger for the trees
+        let root_bits = |drv: &Driver| -> u64 {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let rec = drv.run(&mut alg, &big, &bx0, &probe_opts).unwrap();
+            rec.edge_bits_up.last().copied().expect("tree probe books a per-edge ledger")
+        };
+        let rb_flat = n as u64 * fedeff::compress::sparse_bits(k, d);
+        let rb_t2 = root_bits(&mk_tree2());
+        let rb_t3 = root_bits(&mk_tree3());
+
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv_f = mk_flat();
+            b.run_case_bits("gd_topk_hier_flat_3rounds_n256_d16384", rounds, n, d, rb_flat, || {
+                black_box(drv_f.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv2 = mk_tree2();
+            let name = "gd_topk_hier_tree2_16hubs_3rounds_n256_d16384";
+            b.run_case_bits(name, rounds, n, d, rb_t2, || {
+                black_box(drv2.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv3 = mk_tree3();
+            b.run_case_bits("gd_topk_hier_tree3_64x8_3rounds_n256_d16384", rounds, n, d, rb_t3, || {
+                black_box(drv3.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+        {
+            // hub-sharded worker pool over the 2-level tree
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv2 = mk_tree2();
+            b.run_case_bits("gd_topk_hier_tree2_pool_3rounds_n256_d16384", rounds, n, d, rb_t2, || {
+                let rec = drv2.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+    }
+
     // ---- batched logreg oracle: per-client calls vs one blocked sweep --
     {
         let mut rng3 = fedeff::rng(9);

@@ -25,6 +25,10 @@ pub struct Entry {
     pub rounds: usize,
     pub n: usize,
     pub d: usize,
+    /// Uplink bits that reach the server-facing edge per round (the
+    /// hub→server column of the hierarchical-aggregation family; 0 when
+    /// not applicable).
+    pub root_bits: u64,
 }
 
 pub struct Bench {
@@ -51,7 +55,22 @@ impl Bench {
 
     /// Time `f` and record it with its workload shape (rounds per iter,
     /// fleet size n, dimension d) for the JSON report.
-    pub fn run_case<F: FnMut()>(&self, name: &str, rounds: usize, n: usize, d: usize, mut f: F) {
+    pub fn run_case<F: FnMut()>(&self, name: &str, rounds: usize, n: usize, d: usize, f: F) {
+        self.run_case_bits(name, rounds, n, d, 0, f);
+    }
+
+    /// [`Bench::run_case`] with the per-round server-facing uplink bits
+    /// of the measured configuration (hierarchical-aggregation column).
+    #[allow(dead_code)]
+    pub fn run_case_bits<F: FnMut()>(
+        &self,
+        name: &str,
+        rounds: usize,
+        n: usize,
+        d: usize,
+        root_bits: u64,
+        mut f: F,
+    ) {
         for _ in 0..self.warmup {
             f();
         }
@@ -76,6 +95,7 @@ impl Bench {
             rounds,
             n,
             d,
+            root_bits,
         });
     }
 
@@ -90,8 +110,8 @@ impl Bench {
         for (i, e) in results.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}}}",
-                e.name, e.ns_per_iter, e.rounds, e.n, e.d
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}}}",
+                e.name, e.ns_per_iter, e.rounds, e.n, e.d, e.root_bits
             );
             s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
         }

@@ -1,11 +1,20 @@
-//! Hierarchical (server–hub–client) FL with SPPM-AS vs LocalGD (Ch. 5).
+//! Hierarchical (server–hub–client) FL, executed for real (Ch. 5).
 //!
-//! Demonstrates the Cohort-Squeeze headline: with cheap intra-hub local
-//! communication (c1 << c2), squeezing K local rounds out of each cohort
-//! slashes the total communication cost to a target accuracy. Both
-//! methods run through the same coordinator `Driver` — the hierarchy is a
-//! driver topology, so *any* algorithm can be costed over it (here
-//! FedAvg/LocalGD rides the same 2-level topology as SPPM-AS).
+//! The hierarchy is no longer just a cost ledger: under
+//! `Topology::Tree` the coordinator *executes* the multi-level
+//! aggregation — each round's cohort is grouped by hub, every hub
+//! partially aggregates its clients' messages, and each edge class
+//! carries its own compressor (here Top-K on the cheap client→hub
+//! links, QSGD on the expensive hub→server links), so the `CommLedger`
+//! books bits per edge traversed and the server-facing edge carries a
+//! fraction of the flat run's traffic.
+//!
+//! Part 1 runs FedAvg over flat vs 2-level vs 3-level trees from the
+//! same ingredients and prints the per-edge ledgers. Part 2 is the
+//! Cohort-Squeeze headline (SPPM-AS vs LocalGD): with cheap intra-hub
+//! communication (c1 << c2), squeezing K local rounds out of each
+//! cohort slashes the cost to a target accuracy — both methods ride the
+//! same tree topology, so *any* algorithm can run over any tree.
 //!
 //! ```bash
 //! cargo run --release --example hierarchical
@@ -15,8 +24,10 @@ use anyhow::Result;
 use fedeff::algorithms::fedavg::FedAvg;
 use fedeff::algorithms::sppm::SppmAs;
 use fedeff::algorithms::RunOptions;
+use fedeff::compress::quantize::Qsgd;
+use fedeff::compress::topk::TopK;
 use fedeff::coordinator::driver::{Driver, Topology};
-use fedeff::coordinator::hierarchy::Hierarchy;
+use fedeff::coordinator::hierarchy::AggTree;
 use fedeff::data::synth::Heterogeneity;
 use fedeff::oracle::{solve_reference, Oracle};
 use fedeff::prox::LbfgsSolver;
@@ -37,10 +48,70 @@ fn main() -> Result<()> {
     let (x_star, _) = solve_reference(oracle.as_ref(), &vec![0.0; d], 0.5, 6000, 1e-9)?;
     let x0 = vec![1.0f32; d];
     let eps = 5e-3f32;
+    let lr = 0.5 / oracle.smoothness(0);
 
+    // ---- Part 1: executed trees with per-edge compression -------------
+    println!("== executed aggregation trees: FedAvg, {n} clients, d={d} ==");
+    let k_leaf = (d / 16).max(1);
+    let shapes: [(&str, Driver); 3] = [
+        ("flat  (clients -> server)", Driver::new().with_up(Box::new(TopK::new(k_leaf)))),
+        (
+            "tree2 (4 hubs, TopK->QSGD)",
+            Driver::new()
+                .with_up(Box::new(TopK::new(k_leaf)))
+                .with_up_edge(1, Box::new(Qsgd::new(4)))
+                .with_topology(Topology::Tree(AggTree::even(n, &[4], vec![0.05, 1.0]))),
+        ),
+        (
+            "tree3 (8 sub-hubs -> 4 hubs)",
+            Driver::new()
+                .with_up(Box::new(TopK::new(k_leaf)))
+                .with_up_edge(1, Box::new(TopK::new(d / 4)))
+                .with_up_edge(2, Box::new(Qsgd::new(4)))
+                .with_topology(Topology::Tree(AggTree::even(n, &[8, 4], vec![0.05, 0.2, 1.0]))),
+        ),
+    ];
+    let rounds = 60;
+    let mut flat_root_bits = 0u64;
+    for (label, drv) in shapes {
+        let mut alg = FedAvg::new(2, lr);
+        let opts = RunOptions { rounds, eval_every: rounds, seed: 2, ..Default::default() };
+        let rec = drv.run(&mut alg, oracle.as_ref(), &x0, &opts)?;
+        let last = rec.last().unwrap();
+        if rec.edge_bits_up.is_empty() {
+            // flat: every client's Top-K message reaches the server
+            flat_root_bits = last.bits_up * n as u64;
+            println!(
+                "{label}: loss {:.5}, server-edge bits {} (dense would be {})",
+                last.loss,
+                flat_root_bits,
+                32 * d as u64 * n as u64 * rounds as u64
+            );
+        } else {
+            let per_edge: Vec<String> = rec
+                .edge_bits_up
+                .iter()
+                .enumerate()
+                .map(|(l, b)| format!("l{l}={b}"))
+                .collect();
+            let root = *rec.edge_bits_up.last().unwrap();
+            println!(
+                "{label}: loss {:.5}, per-edge bits [{}], server-edge reduction {:.1}x vs flat",
+                last.loss,
+                per_edge.join(", "),
+                flat_root_bits as f64 / root.max(1) as f64
+            );
+        }
+    }
+
+    // ---- Part 2: Cohort-Squeeze costs over the same tree ---------------
     // topology: 4 hubs, client->hub cost 0.05, hub->server cost 1.0
-    let hier = Hierarchy::even(n, 4, 0.05, 1.0);
-    println!("topology: {} clients, {} hubs, c1={}, c2={}", n, hier.hubs.len(), hier.c1, hier.c2);
+    let tree = AggTree::even(n, &[4], vec![0.05, 1.0]);
+    println!(
+        "\n== Cohort-Squeeze: {} clients, 4 hubs, costs {:?} ==",
+        n,
+        tree.costs()
+    );
 
     // SPPM-AS with stratified sampling + BFGS prox solver
     let mut best: Option<(usize, f64)> = None;
@@ -48,7 +119,7 @@ fn main() -> Result<()> {
         let mut alg = SppmAs::new(Box::new(LbfgsSolver::default()), 100.0, k);
         let drv = Driver::new()
             .with_sampler(Box::new(StratifiedSampling::new(contiguous_blocks(n, 5))))
-            .with_topology(Topology::Hier(hier.clone()));
+            .with_topology(Topology::Tree(tree.clone()));
         let opts = RunOptions {
             rounds: 200,
             eval_every: 1,
@@ -67,13 +138,13 @@ fn main() -> Result<()> {
         }
     }
 
-    // LocalGD baseline over the *same* hierarchy (cost c1 + c2 per round)
+    // LocalGD baseline over the *same* tree (cost c1 + c2 per round)
     let mut lgd_best: Option<f64> = None;
     for steps in [1usize, 2, 4, 8] {
-        let mut alg = FedAvg::new(steps, 0.5 / oracle.smoothness(0));
+        let mut alg = FedAvg::new(steps, lr);
         let drv = Driver::new()
             .with_sampler(Box::new(NiceSampling { n, tau: 5 }))
-            .with_topology(Topology::Hier(hier.clone()));
+            .with_topology(Topology::Tree(tree.clone()));
         let opts = RunOptions {
             rounds: 2000,
             eval_every: 1,

@@ -25,6 +25,30 @@
 //!   (average over senders / receivers) cumulative bits, matching the
 //!   paper's "bits per node" x-axes.
 //!
+//! Multi-level aggregation: when the driver's topology is an executed
+//! [`AggTree`], [`RoundCtx::up_compress_add`] becomes *tree-aware*. A
+//! client's leaf message (compressed by the edge-class-0 compressor as
+//! usual) lands in the partial-aggregate buffer of its lowest ancestor
+//! whose out-edge carries a compressor — O(k) through the same
+//! [`SparseVec`] scatter as the flat path — and the moment a node has
+//! heard from every cohort leaf below it, its partial is re-compressed
+//! on a deterministic per-node stream ([`crate::compress::node_rng`])
+//! and cascades one hop up (recursively, to the next compressed
+//! ancestor or the algorithm's accumulator at the root). Edges with no
+//! compressor are pass-through: contributions skip them unchanged, so a
+//! tree whose internal edges are all identity aggregates bit-for-bit
+//! like the flat driver. Bits are booked **per edge traversed**: the
+//! sender's [`RoundCtx::charge_up`] books edge class 0 plus the
+//! pass-through relays below the first re-compressing edge (uniformly —
+//! whether or not the algorithm routes through hub partials), and each
+//! re-compressed flush books its own edge class plus its relays, all
+//! into the per-edge ledger the driver folds into
+//! [`crate::coordinator::CommLedger::up_edges`]. Contract: every cohort
+//! client must send the same number of routed uplink messages per round
+//! in the same order (each call index is an independent "channel" with
+//! its own partial buffers — Scaffold's model/control pair routes as
+//! two channels).
+//!
 //! Cost accounting: [`RoundCtx::set_local_rounds`] declares how many local
 //! communication rounds the global round used (SPPM-AS "cohort squeeze");
 //! [`RoundCtx::no_comm`] marks a round with no communication at all
@@ -37,12 +61,20 @@
 //! (FedCOM-style) on both links; GD and Scaffold compress uplink messages
 //! directly (DCGD-style) and broadcast dense; EF-BV owns its compressor
 //! (it determines the stepsize) and ignores the link slots; SPPM-AS sends
-//! dense by construction.
+//! dense by construction. Multi-level tree support follows the same
+//! split: GD, FedAvg, FedProx and Scaffold route their uplinks through
+//! the tree-aware [`RoundCtx::up_compress_add`], so their aggregation
+//! really happens hub-by-hub with per-edge re-compression; Scafflix,
+//! EF-BV and SPPM-AS keep their own aggregation structure and see a tree
+//! as leaf-edge compression plus the per-edge cost model only. The
+//! downlink broadcast traverses the tree un-recompressed (one payload,
+//! relayed), exactly as on the flat driver.
 
 use anyhow::Result;
 
 use super::RunOptions;
 use crate::compress::{Compressor, SparseVec};
+use crate::coordinator::hierarchy::AggTree;
 use crate::oracle::Oracle;
 use crate::sampling::CohortSampler;
 use crate::Rng;
@@ -58,6 +90,241 @@ pub fn dense_bits(d: usize) -> u64 {
 /// parallel dispatch fast paths.
 pub struct ClientMsg<'a> {
     pub grad: &'a [f32],
+}
+
+/// Reusable state of the multi-level uplink reduce, owned by the driver
+/// for the whole run (steady-state rounds allocate nothing once every
+/// channel exists). One "channel" is one routed uplink message per
+/// client per round — algorithms that send several (Scaffold: model
+/// delta + control delta) get independent partial buffers per channel.
+pub struct TreeScratch {
+    d: usize,
+    /// compressed[l]: does edge class l re-compress partial aggregates?
+    /// (index 0 is the leaf edge, handled by the `RoundCtx` link slots.)
+    compressed: Vec<bool>,
+    /// Lowest re-compressing edge class (`depth` when the whole tree is
+    /// pass-through). Every sender's payload relays unchanged across
+    /// edges `1..first_compressed`, which is where [`RoundCtx::charge_up`]
+    /// books it.
+    first_compressed: usize,
+    /// Node count of each internal level (levels 1..depth), index l-1.
+    widths: Vec<usize>,
+    /// partials[l-1][ch]: flattened `width * d` node buffers for
+    /// compressed level l (pass-through levels stay empty).
+    partials: Vec<Vec<Vec<f32>>>,
+    /// remaining[l-1][ch][node]: cohort leaves still to arrive before
+    /// the node's channel-`ch` partial flushes.
+    remaining: Vec<Vec<Vec<u32>>>,
+    /// Per-round leaf counts per internal level (template the channels'
+    /// `remaining` counters reset from).
+    leaf_count: Vec<Vec<u32>>,
+    /// Bits that traversed each edge class this round (the driver folds
+    /// these into [`crate::coordinator::CommLedger::up_edges`]).
+    pub edge_bits: Vec<u64>,
+    sbuf: SparseVec,
+    cbuf: Vec<f32>,
+    channels: usize,
+}
+
+impl TreeScratch {
+    /// Size the scratch for `tree`, with `comps[l]` the edge-class-`l`
+    /// uplink compressors (entry 0, the leaf edge, is not consulted
+    /// here). Channel buffers materialize lazily on first use.
+    pub fn new(tree: &AggTree, comps: &[Option<Box<dyn Compressor>>], d: usize) -> Self {
+        let depth = tree.depth();
+        let mut compressed = vec![false; depth];
+        for (l, flag) in compressed.iter_mut().enumerate().skip(1) {
+            *flag = comps.get(l).is_some_and(|c| c.is_some());
+        }
+        let first_compressed =
+            (1..depth).find(|&l| compressed[l]).unwrap_or(depth);
+        let widths: Vec<usize> = (1..depth).map(|l| tree.width(l)).collect();
+        let leaf_count: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+        let n_internal = widths.len();
+        Self {
+            d,
+            compressed,
+            first_compressed,
+            widths,
+            partials: (0..n_internal).map(|_| Vec::new()).collect(),
+            remaining: (0..n_internal).map(|_| Vec::new()).collect(),
+            leaf_count,
+            edge_bits: vec![0; depth],
+            sbuf: SparseVec::default(),
+            cbuf: vec![0.0; d],
+            channels: 0,
+        }
+    }
+
+    /// Does any internal edge re-compress (i.e. is a real hub reduce
+    /// active, as opposed to pure pass-through forwarding)?
+    pub fn any_compressed(&self) -> bool {
+        self.compressed.iter().any(|&c| c)
+    }
+
+    /// Reset the per-round state for a new cohort: zero the edge ledger,
+    /// recount the cohort leaves under every compressed node and arm
+    /// each channel's remaining-counters from those counts.
+    pub fn begin_round(&mut self, tree: &AggTree, cohort: &[usize]) {
+        self.edge_bits.fill(0);
+        let depth = tree.depth();
+        let mut any = false;
+        for l in 1..depth {
+            if self.compressed[l] {
+                self.leaf_count[l - 1].fill(0);
+                any = true;
+            }
+        }
+        if any {
+            for &c in cohort {
+                let mut node = c;
+                for l in 0..depth - 1 {
+                    node = tree.parent(l, node);
+                    if self.compressed[l + 1] {
+                        self.leaf_count[l][node] += 1;
+                    }
+                }
+            }
+        }
+        for l in 1..depth {
+            if self.compressed[l] {
+                for ch in 0..self.channels {
+                    self.remaining[l - 1][ch].copy_from_slice(&self.leaf_count[l - 1]);
+                }
+            }
+        }
+    }
+
+    /// Make sure channel `ch` has buffers; new channels start with the
+    /// current round's full remaining counts (a channel can only first
+    /// appear on the round's first client, before anything flushed).
+    fn ensure_channel(&mut self, ch: usize) {
+        while self.channels <= ch {
+            for l in 1..self.compressed.len() {
+                if self.compressed[l] {
+                    self.partials[l - 1].push(vec![0.0; self.widths[l - 1] * self.d]);
+                    self.remaining[l - 1].push(self.leaf_count[l - 1].clone());
+                }
+            }
+            self.channels += 1;
+        }
+    }
+}
+
+/// The tree-execution view the driver threads into a [`RoundCtx`]:
+/// the topology, the per-edge-class uplink compressors (index 0 = leaf
+/// edge, owned by the ctx's regular `up` slot) and the run's reduce
+/// scratch.
+pub(crate) struct TreeLinks<'a> {
+    pub tree: &'a AggTree,
+    pub comps: &'a [Option<Box<dyn Compressor>>],
+    pub scratch: &'a mut TreeScratch,
+}
+
+impl TreeLinks<'_> {
+    /// Lowest ancestor of `client` whose out-edge re-compresses, as
+    /// `(level, node)`; `None` routes straight to the root accumulator.
+    fn reduce_target(&self, client: usize) -> Option<(usize, usize)> {
+        let mut node = client;
+        for l in 0..self.tree.depth() - 1 {
+            node = self.tree.parent(l, node);
+            if self.scratch.compressed[l + 1] {
+                return Some((l + 1, node));
+            }
+        }
+        None
+    }
+}
+
+/// The one compress-and-accumulate primitive every uplink path shares:
+/// `dst += scale * C(x)` through the O(k) sparse scatter when `sparse`
+/// is allowed and the compressor has a native sparse form, through a
+/// dense decompress + axpy otherwise, and as a direct axpy (dense bits)
+/// when there is no compressor. All paths are bit-identical; returns
+/// the message's on-wire bits (not booked).
+#[allow(clippy::too_many_arguments)]
+fn compress_add_into(
+    comp: Option<&dyn Compressor>,
+    sparse: bool,
+    x: &[f32],
+    scale: f32,
+    dst: &mut [f32],
+    sbuf: &mut SparseVec,
+    cbuf: &mut [f32],
+    rng: &mut Rng,
+) -> u64 {
+    let sparse_msg = match (sparse, comp) {
+        (true, Some(c)) => c.compress_sparse(x, sbuf, rng),
+        _ => None,
+    };
+    if let Some(bits) = sparse_msg {
+        sbuf.add_into(scale, dst);
+        bits
+    } else if let Some(c) = comp {
+        let bits = c.compress(x, cbuf, rng);
+        crate::vecmath::axpy(scale, cbuf, dst);
+        bits
+    } else {
+        crate::vecmath::axpy(scale, x, dst);
+        dense_bits(x.len())
+    }
+}
+
+/// Re-compress the completed channel-`ch` partial of `node` at `lvl` on
+/// its own deterministic stream and cascade it one hop up (into the
+/// next compressed ancestor's partial, or `acc` at the root). Books the
+/// flush and any pass-through relays above it into the per-edge ledger;
+/// returns the flushed message's bits.
+#[allow(clippy::too_many_arguments)]
+fn flush_tree_node(
+    tl: &mut TreeLinks<'_>,
+    sparse: bool,
+    seed: u64,
+    round: usize,
+    lvl: usize,
+    node: usize,
+    ch: usize,
+    acc: &mut [f32],
+) -> u64 {
+    let depth = tl.tree.depth();
+    let d = tl.scratch.d;
+    // destination: next compressed ancestor above `lvl`, else the root
+    let mut dest: Option<(usize, usize)> = None;
+    let mut up_node = node;
+    for l in lvl..depth - 1 {
+        up_node = tl.tree.parent(l, up_node);
+        if tl.scratch.compressed[l + 1] {
+            dest = Some((l + 1, up_node));
+            break;
+        }
+    }
+    let comp = tl.comps[lvl].as_deref().expect("compressed level has a compressor");
+    let mut rng = crate::compress::node_rng(seed, round, lvl, node, ch);
+    let scratch = &mut *tl.scratch;
+    let (lo, hi) = scratch.partials.split_at_mut(lvl);
+    let src: &mut [f32] = &mut lo[lvl - 1][ch][node * d..(node + 1) * d];
+    let dst: &mut [f32] = match dest {
+        Some((dl, dn)) => &mut hi[dl - 1 - lvl][ch][dn * d..(dn + 1) * d],
+        None => acc,
+    };
+    let bits = compress_add_into(
+        Some(comp),
+        sparse,
+        src,
+        1.0,
+        dst,
+        &mut scratch.sbuf,
+        &mut scratch.cbuf,
+        &mut rng,
+    );
+    src.fill(0.0);
+    scratch.edge_bits[lvl] += bits;
+    // pass-through relays between this flush and its destination edge
+    let relay_to = dest.map_or(depth, |(dl, _)| dl);
+    for l in lvl + 1..relay_to {
+        scratch.edge_bits[l] += bits;
+    }
+    bits
 }
 
 /// Per-round context the driver hands to the algorithm: deterministic RNG
@@ -82,6 +349,9 @@ pub struct RoundCtx<'a> {
     /// Whether the driver allows the O(k) sparse message path; `false`
     /// forces every link through the dense reference path.
     pub(crate) sparse: bool,
+    /// Executed multi-level topology, when the driver's topology is an
+    /// [`AggTree`]; `None` is the flat reduce.
+    pub(crate) tree: Option<TreeLinks<'a>>,
     pub(crate) link_rng: Rng,
     pub(crate) up_bits: u64,
     pub(crate) up_nodes: u64,
@@ -89,6 +359,10 @@ pub struct RoundCtx<'a> {
     pub(crate) down_nodes: u64,
     pub(crate) local_rounds: usize,
     pub(crate) communicated: bool,
+    /// Channel tracking for the tree reduce: the client currently
+    /// sending and how many routed messages it has sent this round.
+    tree_client: usize,
+    tree_channel: usize,
 }
 
 impl<'a> RoundCtx<'a> {
@@ -102,6 +376,7 @@ impl<'a> RoundCtx<'a> {
         up: Option<&'a dyn Compressor>,
         down: Option<&'a dyn Compressor>,
         sparse: bool,
+        tree: Option<TreeLinks<'a>>,
     ) -> Self {
         // deterministic per-round stream for the link compressors; never
         // touches the main rng (bit-for-bit equivalence with the
@@ -116,6 +391,7 @@ impl<'a> RoundCtx<'a> {
             up,
             down,
             sparse,
+            tree,
             link_rng,
             up_bits: 0,
             up_nodes: 0,
@@ -123,6 +399,8 @@ impl<'a> RoundCtx<'a> {
             down_nodes: 0,
             local_rounds: 1,
             communicated: true,
+            tree_client: usize::MAX,
+            tree_channel: 0,
         }
     }
 
@@ -140,6 +418,22 @@ impl<'a> RoundCtx<'a> {
     /// that own their compressor — EF-BV — honour this flag themselves.)
     pub fn sparse_enabled(&self) -> bool {
         self.sparse
+    }
+
+    /// Is a real multi-level reduce active — an executed tree with at
+    /// least one re-compressing internal edge? Algorithms that switch
+    /// between a raw-model and a delta uplink (FedAvg/FedProx/Scaffold)
+    /// must take the delta path when this holds, so hub partials carry
+    /// anchor-relative deltas the server can rebase. Pure pass-through
+    /// trees return `false` and keep the flat code path bit-for-bit.
+    pub fn tree_reduce(&self) -> bool {
+        self.tree.as_ref().is_some_and(|tl| tl.scratch.any_compressed())
+    }
+
+    /// Bits that traversed each uplink edge class this round (leaf = 0),
+    /// when an executed tree is active.
+    pub fn tree_edge_bits(&self) -> Option<&[u64]> {
+        self.tree.as_ref().map(|tl| tl.scratch.edge_bits.as_slice())
     }
 
     /// Sparse uplink fast path: `Some(bits)` iff an uplink compressor is
@@ -164,27 +458,96 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// Compress `x` on the uplink and accumulate `scale * C(x)` into
-    /// `acc`: O(k) scatter-add when the compressor has a sparse form,
-    /// dense decompress + axpy otherwise — the two are bit-identical.
-    /// `sbuf`/`cbuf` are the caller's reusable sparse/dense message
-    /// buffers. Returns the message bits (not booked).
+    /// Compress `client`'s uplink message `x` and accumulate
+    /// `scale * C(x)` toward the root: O(k) scatter-add when the
+    /// compressor has a sparse form, dense decompress + axpy otherwise —
+    /// the two are bit-identical. Under a flat topology (and under pure
+    /// pass-through trees) the message lands directly in `acc`; under an
+    /// executed tree with compressed internal edges it lands in the
+    /// client's hub partial and cascades up as nodes complete (see the
+    /// module docs). `sbuf`/`cbuf` are the caller's reusable
+    /// sparse/dense message buffers. Returns the *leaf* message bits
+    /// (not booked — callers book them with [`RoundCtx::charge_up`],
+    /// which also files them under edge class 0; internal flushes book
+    /// themselves).
     pub fn up_compress_add(
         &mut self,
+        client: usize,
         x: &[f32],
         scale: f32,
         acc: &mut [f32],
         sbuf: &mut SparseVec,
         cbuf: &mut [f32],
     ) -> u64 {
-        if let Some(bits) = self.up_compress_sparse(x, sbuf) {
-            sbuf.add_into(scale, acc);
-            bits
-        } else {
-            let bits = self.up_compress(x, cbuf);
-            crate::vecmath::axpy(scale, cbuf, acc);
-            bits
+        if self.tree.is_some() {
+            return self.tree_up_add(client, x, scale, acc, sbuf, cbuf);
         }
+        let up = self.up;
+        compress_add_into(up, self.sparse, x, scale, acc, sbuf, cbuf, &mut self.link_rng)
+    }
+
+    /// The tree-aware body of [`RoundCtx::up_compress_add`].
+    #[allow(clippy::too_many_arguments)]
+    fn tree_up_add(
+        &mut self,
+        client: usize,
+        x: &[f32],
+        scale: f32,
+        acc: &mut [f32],
+        sbuf: &mut SparseVec,
+        cbuf: &mut [f32],
+    ) -> u64 {
+        let mut tl = self.tree.take().expect("tree links active");
+        // channel = index of this client's routed message this round
+        if self.tree_client == client {
+            self.tree_channel += 1;
+        } else {
+            self.tree_client = client;
+            self.tree_channel = 0;
+        }
+        let ch = self.tree_channel;
+        tl.scratch.ensure_channel(ch);
+        let depth = tl.tree.depth();
+        let d = tl.scratch.d;
+
+        // 1. leaf edge: compress x, add scale * C(x) into the lowest
+        //    compressed ancestor's partial (or straight into acc; the
+        //    caller's charge_up books the payload and its relays)
+        let target = tl.reduce_target(client);
+        let leaf_bits = {
+            let tgt: &mut [f32] = match target {
+                Some((lvl, node)) => {
+                    &mut tl.scratch.partials[lvl - 1][ch][node * d..(node + 1) * d]
+                }
+                // reborrow: acc is used again by the cascade below
+                None => &mut *acc,
+            };
+            let up = self.up;
+            compress_add_into(up, self.sparse, x, scale, tgt, sbuf, cbuf, &mut self.link_rng)
+        };
+
+        // 2. cascade: every compressed ancestor counts this leaf down;
+        //    completed nodes flush bottom-up on their own streams
+        let mut node = client;
+        for l in 0..depth - 1 {
+            node = tl.tree.parent(l, node);
+            let lvl = l + 1;
+            if !tl.scratch.compressed[lvl] {
+                continue;
+            }
+            let rem = &mut tl.scratch.remaining[lvl - 1][ch][node];
+            *rem -= 1;
+            if *rem == 0 {
+                let (sp, sd, rd) = (self.sparse, self.seed, self.round);
+                let bits = flush_tree_node(&mut tl, sp, sd, rd, lvl, node, ch, acc);
+                // a flushing aggregator is a sender like any other in
+                // the per-node average
+                self.up_bits += bits;
+                self.up_nodes += 1;
+            }
+        }
+        self.tree = Some(tl);
+        leaf_bits
     }
 
     /// Downlink counterpart of [`RoundCtx::up_compress_add`].
@@ -285,10 +648,21 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// Book one sender's uplink payload of `bits`.
+    /// Book one sender's uplink payload of `bits`. Under an executed
+    /// tree the payload is filed under edge class 0 (the client's own
+    /// hop) *and* relayed unchanged across every pass-through edge below
+    /// the first re-compressing one — so the per-edge ledger sees the
+    /// same traffic whether the sender's algorithm routes through hub
+    /// partials or not. (Edges at and above `first_compressed` carry
+    /// re-compressed flushes, booked by the flush itself.)
     pub fn charge_up(&mut self, bits: u64) {
         self.up_bits += bits;
         self.up_nodes += 1;
+        if let Some(tl) = self.tree.as_mut() {
+            for l in 0..tl.scratch.first_compressed {
+                tl.scratch.edge_bits[l] += bits;
+            }
+        }
     }
 
     /// Book one receiver's downlink payload of `bits` (a broadcast is one

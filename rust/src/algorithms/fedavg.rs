@@ -63,12 +63,16 @@ impl FedAvg {
 
 /// Shared FedCOM link plumbing for FedAvg/FedProx: uplink one client's
 /// local model (compressed delta against the anchor when an uplink
-/// compressor is set), accumulating the average into `next` (compressed:
-/// the average *delta*; dense: the average model). O(k) when the
-/// compressor has a sparse form.
+/// compressor is set *or* a multi-level tree re-compresses partial
+/// aggregates — hub partials must carry anchor-relative deltas),
+/// accumulating the average into `next` (delta path: the average
+/// *delta*; dense: the average model). O(k) when the compressor has a
+/// sparse form; under an executed tree the message routes through the
+/// client's hub partial.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fedcom_uplink(
     ctx: &mut RoundCtx<'_>,
+    client: usize,
     local: &[f32],
     anchor: &[f32],
     cohort_size: f32,
@@ -77,9 +81,9 @@ pub(crate) fn fedcom_uplink(
     sbuf: &mut SparseVec,
     next: &mut [f32],
 ) {
-    if ctx.has_up() {
+    if ctx.has_up() || ctx.tree_reduce() {
         vm::sub(local, anchor, delta);
-        let bits = ctx.up_compress_add(delta, 1.0 / cohort_size, next, sbuf, buf);
+        let bits = ctx.up_compress_add(client, delta, 1.0 / cohort_size, next, sbuf, buf);
         ctx.charge_up(bits);
     } else {
         ctx.charge_up(dense_bits(local.len()));
@@ -100,7 +104,7 @@ pub(crate) fn fedcom_server_finish(
     buf: &mut [f32],
     sbuf: &mut SparseVec,
 ) {
-    if ctx.has_up() {
+    if ctx.has_up() || ctx.tree_reduce() {
         vm::axpy(1.0, x, next);
     }
     fedcom_broadcast(ctx, next, x, delta, buf, sbuf);
@@ -174,6 +178,7 @@ impl FlAlgorithm for FedAvg {
         }
         fedcom_uplink(
             ctx,
+            client,
             &self.xi,
             &self.x,
             m,

@@ -193,15 +193,13 @@ impl FlAlgorithm for Gd {
             Some(msg) => msg.grad,
             None => &self.gbuf,
         };
-        if ctx.has_up() {
-            // O(k) scatter when the compressor is sparse-capable, dense
-            // decompress + axpy otherwise (bit-identical either way)
-            let bits = ctx.up_compress_add(g, w, &mut self.grad, &mut self.sbuf, &mut self.cbuf);
-            ctx.charge_up(bits);
-        } else {
-            ctx.charge_up(dense_bits(self.x.len()));
-            vm::axpy(w, g, &mut self.grad);
-        }
+        // O(k) scatter when the compressor is sparse-capable, dense
+        // decompress + axpy otherwise, direct axpy when the uplink is
+        // dense (bit-identical in every case); under an executed tree
+        // the message routes through the client's hub partial
+        let bits =
+            ctx.up_compress_add(client, g, w, &mut self.grad, &mut self.sbuf, &mut self.cbuf);
+        ctx.charge_up(bits);
         Ok(())
     }
 

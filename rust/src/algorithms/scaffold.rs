@@ -113,14 +113,16 @@ impl FlAlgorithm for Scaffold {
         for j in 0..d {
             self.cin[j] = self.c_i[client][j] - self.c[j] + (self.x[j] - self.yi[j]) * coef;
         }
-        if ctx.has_up() {
+        if ctx.has_up() || ctx.tree_reduce() {
             // compress the two uplink deltas (model, control) individually;
-            // each aggregates O(k)-sparse when the compressor supports it
+            // each aggregates O(k)-sparse when the compressor supports it.
+            // Under an executed tree the two messages route as separate
+            // channels, so hubs keep distinct model/control partials.
             let (sbuf, buf) = (&mut self.sbuf, &mut self.buf);
             vm::sub(&self.yi, &self.x, &mut self.ddx);
-            let mut bits = ctx.up_compress_add(&self.ddx, 1.0 / m, &mut self.dx, sbuf, buf);
+            let mut bits = ctx.up_compress_add(client, &self.ddx, 1.0 / m, &mut self.dx, sbuf, buf);
             vm::sub(&self.cin, &self.c_i[client], &mut self.ddx);
-            bits += ctx.up_compress_add(&self.ddx, 1.0 / m, &mut self.dc, sbuf, buf);
+            bits += ctx.up_compress_add(client, &self.ddx, 1.0 / m, &mut self.dc, sbuf, buf);
             ctx.charge_up(bits);
         } else {
             ctx.charge_up(2 * dense_bits(d));
@@ -227,6 +229,7 @@ impl FlAlgorithm for FedProx {
         }
         fedcom_uplink(
             ctx,
+            client,
             &self.yi,
             &self.x,
             m,

@@ -206,6 +206,25 @@ impl Compressor for Identity {
     }
 }
 
+/// Deterministic RNG stream for re-compressing the partial aggregate of
+/// tree node `node` at level `level`, channel `channel`, on round
+/// `round` of the run seeded with `seed`.
+///
+/// Multi-level aggregation flushes a node's partial the moment its last
+/// cohort leaf arrives, so the *order* of flushes depends on the cohort
+/// layout; drawing from a shared stream would make the compression
+/// noise depend on arrival order. Keying an independent stream on the
+/// node's coordinates instead makes every re-compression draw
+/// reproducible and arrival-order-free (hub runs differ from their
+/// permutations only by floating-point summation order). Never touches
+/// the round's link RNG, so leaf-edge compression is unaffected.
+pub fn node_rng(seed: u64, round: usize, level: usize, node: usize, channel: usize) -> Rng {
+    let mut h = seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(round as u64 + 1);
+    h ^= 0xC2B2AE3D27D4EB4Fu64.wrapping_mul((((level as u64) << 32) | node as u64) + 1);
+    h ^= 0x165667B19E3779F9u64.wrapping_mul(channel as u64 + 1);
+    Rng::new(h)
+}
+
 /// Bits for a sparse message of k (index, f32) pairs in dimension d.
 pub fn sparse_bits(k: usize, d: usize) -> u64 {
     let idx_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
@@ -275,6 +294,18 @@ mod tests {
         s.clear(8);
         assert!(s.is_empty());
         assert_eq!(s.idx.capacity(), cap);
+    }
+
+    #[test]
+    fn node_rng_streams_are_independent_and_deterministic() {
+        let mut a = node_rng(7, 3, 1, 0, 0);
+        let mut a2 = node_rng(7, 3, 1, 0, 0);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        for (lvl, node, ch) in [(1usize, 1usize, 0usize), (2, 0, 0), (1, 0, 1)] {
+            let mut b = node_rng(7, 3, lvl, node, ch);
+            let mut a3 = node_rng(7, 3, 1, 0, 0);
+            assert_ne!(a3.next_u64(), b.next_u64(), "lvl={lvl} node={node} ch={ch}");
+        }
     }
 
     #[test]

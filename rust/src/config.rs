@@ -44,19 +44,46 @@
 //! k = 8
 //! k_prime = 16
 //!
-//! # Optional 2-level topology (omit for flat costing, c1=1, c2=0):
+//! # Optional topology. Without `levels` this is the classic 2-level
+//! # *cost annotation* (aggregation stays flat, rounds are just priced
+//! # c2 + c1 * local_rounds):
 //! [topology]
 //! hubs = 4
 //! c1 = 0.05                # client -> hub cost per local round
 //! c2 = 1.0                 # hub -> server cost per global round
+//! ```
+//!
+//! Adding `levels` to `[topology]` turns it into an **executed**
+//! multi-level aggregation tree (`levels` counts node levels: 3 =
+//! clients → hubs → server; 4 inserts sub-hubs). Internal nodes then
+//! really partially aggregate, and each edge class may carry its own
+//! uplink compressor via `[links.up.l<i>]` sections (`l0` = client→hub,
+//! `l1` = hub→server, ...; omitted or `identity` edges are
+//! pass-through, and `l0` falls back to `[compressor] up`). A depth-1
+//! or all-pass-through tree reproduces the flat driver bit-for-bit.
+//!
+//! ```toml
+//! [topology]
+//! levels = 4               # clients -> sub-hubs -> hubs -> server
+//! widths = "64,8"          # internal node counts, bottom-up
+//! costs = "0.05,0.2,1.0"   # per edge class (default: c1, then c2 each)
+//!
+//! [links.up.l0]            # client -> sub-hub: Top-K
+//! kind = "top-k"
+//! k = 8
+//!
+//! [links.up.l2]            # hub -> server: QSGD (l1 stays pass-through)
+//! kind = "qsgd"
+//! k = 4                    # quantization levels for qsgd
 //! ```
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::Compressor;
 use crate::coordinator::driver::{Driver, Topology};
-use crate::coordinator::hierarchy::Hierarchy;
+use crate::coordinator::hierarchy::{AggTree, Hierarchy};
 
 /// One parsed TOML document: section -> key -> raw value.
 #[derive(Debug, Clone, Default)]
@@ -157,27 +184,47 @@ pub struct AlgorithmSpec {
     pub solver: Option<String>,
 }
 
-/// `[compressor]`: optional link compressors on the driver's up/downlink.
+/// One `[links.up.l<i>]` section: the compressor of tree edge class i.
+#[derive(Debug, Clone)]
+pub struct EdgeCompSpec {
+    pub kind: String,
+    pub k: usize,
+    pub k_prime: usize,
+}
+
+/// `[compressor]`: optional link compressors on the driver's up/downlink,
+/// plus the per-edge-class `[links.up.l<i>]` specs for executed trees.
 #[derive(Debug, Clone)]
 pub struct LinkSpec {
     pub up: Option<String>,
     pub down: Option<String>,
     pub k: usize,
     pub k_prime: usize,
+    /// Index = edge class; `None` entries are pass-through.
+    pub up_edges: Vec<Option<EdgeCompSpec>>,
 }
 
 impl Default for LinkSpec {
     fn default() -> Self {
-        Self { up: None, down: None, k: 8, k_prime: 16 }
+        Self { up: None, down: None, k: 8, k_prime: 16, up_edges: Vec::new() }
     }
 }
 
-/// `[topology]`: a 2-level server–hub–client hierarchy for cost ledgers.
+/// `[topology]`: without `levels`, the classic 2-level cost annotation;
+/// with `levels`, an executed multi-level aggregation tree (see the
+/// module docs for the grammar).
 #[derive(Debug, Clone)]
 pub struct TopologySpec {
     pub hubs: usize,
     pub c1: f64,
     pub c2: f64,
+    /// Node levels of an executed tree (3 = clients→hubs→server);
+    /// absent = cost-annotation hierarchy.
+    pub levels: Option<usize>,
+    /// Internal level node counts, bottom-up (`widths = "64,8"`).
+    pub widths: Vec<usize>,
+    /// Per-edge-class costs (`costs = "0.05,0.2,1.0"`).
+    pub costs: Vec<f64>,
 }
 
 #[derive(Debug, Clone)]
@@ -230,19 +277,57 @@ impl Spec {
             tau: t.get_usize("algorithm", "tau"),
             solver: t.get("algorithm", "solver").map(|s| s.to_string()),
         };
+        let mut up_edges: Vec<Option<EdgeCompSpec>> = Vec::new();
+        for sec in t.sections.keys() {
+            let Some(rest) = sec.strip_prefix("links.up.l") else { continue };
+            let i: usize = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad edge-class section name [{sec}]"))?;
+            if i >= up_edges.len() {
+                up_edges.resize(i + 1, None);
+            }
+            up_edges[i] = Some(EdgeCompSpec {
+                kind: t.get(sec, "kind").unwrap_or("identity").to_string(),
+                k: t.get_usize(sec, "k").unwrap_or(8),
+                k_prime: t.get_usize(sec, "k_prime").unwrap_or(16),
+            });
+        }
         let links = LinkSpec {
             up: t.get("compressor", "up").map(|s| s.to_string()),
             down: t.get("compressor", "down").map(|s| s.to_string()),
             k: t.get_usize("compressor", "k").unwrap_or(8),
             k_prime: t.get_usize("compressor", "k_prime").unwrap_or(16),
+            up_edges,
         };
-        let topology = t.sections.get("topology").map(|_| TopologySpec {
-            hubs: t.get_usize("topology", "hubs").unwrap_or(1),
-            c1: t.get_f64("topology", "c1").unwrap_or(1.0),
-            c2: t.get_f64("topology", "c2").unwrap_or(0.0),
-        });
+        let topology = if t.sections.contains_key("topology") {
+            Some(TopologySpec {
+                hubs: t.get_usize("topology", "hubs").unwrap_or(1),
+                c1: t.get_f64("topology", "c1").unwrap_or(1.0),
+                c2: t.get_f64("topology", "c2").unwrap_or(0.0),
+                levels: t.get_usize("topology", "levels"),
+                widths: match t.get("topology", "widths") {
+                    Some(s) => parse_list::<usize>(s).context("[topology] widths")?,
+                    None => Vec::new(),
+                },
+                costs: match t.get("topology", "costs") {
+                    Some(s) => parse_list::<f64>(s).context("[topology] costs")?,
+                    None => Vec::new(),
+                },
+            })
+        } else {
+            None
+        };
         Ok(Spec { experiment, dataset, algorithm, links, topology })
     }
+}
+
+/// Parse a comma-separated list value (`"64,8"`).
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<T>().map_err(|_| anyhow::anyhow!("bad list entry {p:?}")))
+        .collect()
 }
 
 /// Build a compressor by name.
@@ -311,9 +396,74 @@ pub fn build_solver(a: &AlgorithmSpec) -> Result<Box<dyn crate::prox::ProxSolver
     solver_by_name(a.solver.as_deref().unwrap_or("bfgs"))
 }
 
+/// Build the executed [`AggTree`] and per-edge compressors a spec with
+/// `[topology] levels` asks for.
+fn build_tree(
+    ts: &TopologySpec,
+    links: &LinkSpec,
+    n: usize,
+) -> Result<(AggTree, Vec<Option<Box<dyn Compressor>>>)> {
+    let levels = ts.levels.unwrap_or(2);
+    anyhow::ensure!(levels >= 2, "[topology] levels must be >= 2 (clients and server)");
+    let depth = levels - 1; // edge classes
+    let mut widths = ts.widths.clone();
+    if widths.is_empty() && levels == 3 {
+        widths = vec![ts.hubs.max(1)];
+    }
+    anyhow::ensure!(
+        widths.len() == levels - 2,
+        "[topology] widths must list {} internal level sizes for levels = {}",
+        levels - 2,
+        levels
+    );
+    anyhow::ensure!(widths.iter().all(|&w| w > 0), "[topology] widths must be positive");
+    // levels must narrow monotonically toward the root, or the even
+    // contiguous assignment leaves upper nodes childless
+    let mut below = n;
+    for (i, &w) in widths.iter().enumerate() {
+        anyhow::ensure!(
+            w <= below,
+            "[topology] level {} has {} nodes but only {} below it — widths must not grow toward the server",
+            i + 1,
+            w,
+            below
+        );
+        below = w;
+    }
+    let mut costs = ts.costs.clone();
+    if costs.is_empty() {
+        costs.push(ts.c1);
+        costs.resize(depth, ts.c2);
+    }
+    anyhow::ensure!(
+        costs.len() == depth,
+        "[topology] costs must list {} per-edge costs for levels = {}",
+        depth,
+        levels
+    );
+    let tree = AggTree::even(n, &widths, costs);
+    let mut up_edges: Vec<Option<Box<dyn Compressor>>> = Vec::new();
+    for (i, e) in links.up_edges.iter().enumerate() {
+        anyhow::ensure!(
+            i < depth,
+            "[links.up.l{i}] names edge class {i}, but the tree only has {depth} (l0..l{})",
+            depth - 1
+        );
+        up_edges.push(match e {
+            Some(spec) if spec.kind != "identity" => {
+                Some(compressor_by_name(&spec.kind, spec.k, spec.k_prime)?)
+            }
+            _ => None,
+        });
+    }
+    Ok((tree, up_edges))
+}
+
 /// Assemble the coordinator [`Driver`] a spec asks for: cohort sampler
 /// (for the cohort-based algorithms, or whenever `[algorithm] sampler` is
-/// set), optional up/down link compressors, and the cost topology.
+/// set), optional up/down link compressors, and the topology — a cost
+/// annotation, or an executed multi-level tree with per-edge uplink
+/// compressors when `[topology] levels` is set.
 pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
     let a = &spec.algorithm;
     let needs_sampler = matches!(a.kind.as_str(), "fedavg" | "scaffold" | "fedprox" | "sppm");
@@ -341,11 +491,27 @@ pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
         Some(name) => Some(compressor_by_name(name, spec.links.k, spec.links.k_prime)?),
         None => None,
     };
-    let topology = match &spec.topology {
-        Some(t) => Topology::Hier(Hierarchy::even(n, t.hubs.max(1), t.c1, t.c2)),
-        None => Topology::Flat,
+    let (topology, up_edges) = match &spec.topology {
+        Some(t) if t.levels.is_some() => {
+            let (tree, edges) = build_tree(t, &spec.links, n)?;
+            (Topology::Tree(tree), edges)
+        }
+        Some(t) => {
+            anyhow::ensure!(
+                spec.links.up_edges.is_empty(),
+                "[links.up.l<i>] sections need an executed tree: add `levels` to [topology]"
+            );
+            (Topology::Hier(Hierarchy::even(n, t.hubs.max(1), t.c1, t.c2)), Vec::new())
+        }
+        None => {
+            anyhow::ensure!(
+                spec.links.up_edges.is_empty(),
+                "[links.up.l<i>] sections need a [topology] with `levels`"
+            );
+            (Topology::Flat, Vec::new())
+        }
     };
-    Ok(Driver { sampler, up, down, topology, ..Driver::default() })
+    Ok(Driver { sampler, up, down, topology, up_edges, ..Driver::default() })
 }
 
 #[cfg(test)]
@@ -443,6 +609,108 @@ c2 = 1.0
         let drv2 = build_driver(&s2, 10).unwrap();
         assert!(drv2.sampler.is_some());
         assert!(matches!(drv2.topology, Topology::Flat));
+    }
+
+    const SAMPLE_TREE: &str = r#"
+[experiment]
+name = "tree"
+
+[dataset]
+clients = 16
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+
+[topology]
+levels = 4
+widths = "8,4"
+costs = "0.05,0.2,1.0"
+
+[links.up.l0]
+kind = "top-k"
+k = 4
+
+[links.up.l2]
+kind = "qsgd"
+k = 4
+"#;
+
+    #[test]
+    fn parses_multi_level_tree_spec() {
+        let s = Spec::parse(SAMPLE_TREE).unwrap();
+        let t = s.topology.as_ref().unwrap();
+        assert_eq!(t.levels, Some(4));
+        assert_eq!(t.widths, vec![8, 4]);
+        assert_eq!(t.costs, vec![0.05, 0.2, 1.0]);
+        assert_eq!(s.links.up_edges.len(), 3);
+        assert_eq!(s.links.up_edges[0].as_ref().unwrap().kind, "top-k");
+        assert!(s.links.up_edges[1].is_none()); // pass-through
+        assert_eq!(s.links.up_edges[2].as_ref().unwrap().kind, "qsgd");
+    }
+
+    #[test]
+    fn build_driver_wires_executed_tree() {
+        let s = Spec::parse(SAMPLE_TREE).unwrap();
+        let drv = build_driver(&s, 16).unwrap();
+        let Topology::Tree(tree) = &drv.topology else {
+            panic!("expected an executed tree topology");
+        };
+        assert_eq!(tree.depth(), 3);
+        assert_eq!((tree.width(1), tree.width(2)), (8, 4));
+        assert!((tree.round_cost(1) - 1.25).abs() < 1e-12);
+        assert_eq!(drv.up_edges.len(), 3);
+        assert!(drv.up_edges[0].is_some() && drv.up_edges[2].is_some());
+        assert!(drv.up_edges[1].is_none());
+    }
+
+    #[test]
+    fn tree_spec_defaults_and_errors() {
+        // levels = 3 defaults widths to [hubs] and costs to [c1, c2]
+        let s = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[topology]\nlevels = 3\nhubs = 4\nc1 = 0.1\nc2 = 2.0",
+        )
+        .unwrap();
+        let drv = build_driver(&s, 8).unwrap();
+        let Topology::Tree(tree) = &drv.topology else { panic!("expected tree") };
+        assert_eq!(tree.depth(), 2);
+        assert_eq!(tree.width(1), 4);
+        assert!((tree.round_cost(1) - 2.1).abs() < 1e-12);
+
+        // widths arity must match levels
+        let bad = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[topology]\nlevels = 4\nwidths = \"8\"",
+        )
+        .unwrap();
+        assert!(build_driver(&bad, 8).is_err());
+
+        // levels must narrow toward the server (16 hubs over 8 clients
+        // is an error, not a panic)
+        let wide = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[topology]\nlevels = 3\nhubs = 16",
+        )
+        .unwrap();
+        assert!(build_driver(&wide, 8).is_err());
+        let inverted = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[topology]\nlevels = 4\nwidths = \"4,8\"",
+        )
+        .unwrap();
+        assert!(build_driver(&inverted, 8).is_err());
+
+        // per-edge links without an executed tree are rejected
+        let orphan = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[links.up.l0]\nkind = \"top-k\"",
+        )
+        .unwrap();
+        assert!(build_driver(&orphan, 8).is_err());
+
+        // edge class beyond the tree depth is rejected
+        let deep = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[topology]\nlevels = 3\nhubs = 2\n[links.up.l5]\nkind = \"top-k\"",
+        )
+        .unwrap();
+        assert!(build_driver(&deep, 8).is_err());
     }
 
     #[test]

@@ -16,25 +16,39 @@
 //!   aggregates in O(k) instead of O(d) — bit-for-bit identical to the
 //!   dense reference path, which `with_sparse_links(false)` forces;
 //! * abstract communication cost under a [`Topology`]: flat (`c1 = 1`,
-//!   `c2 = 0`, a communicating round costs its local-round count) or a
-//!   2-level [`Hierarchy`] (`c2 + c1 * local_rounds` per global round);
+//!   `c2 = 0`, a communicating round costs its local-round count), a
+//!   2-level [`Hierarchy`] cost annotation (`c2 + c1 * local_rounds` per
+//!   global round, aggregation still flat), or an **executed**
+//!   [`AggTree`] — see below;
+//! * multi-level aggregation under [`Topology::Tree`]: the cohort is
+//!   grouped by hub, every internal tree node partially aggregates its
+//!   children's messages, and each edge class can carry its own uplink
+//!   compressor ([`Driver::up_edges`], e.g. Top-K client→hub + QSGD
+//!   hub→server). Partial aggregates re-compress on deterministic
+//!   per-node streams and the [`CommLedger`] books bits **per edge
+//!   traversed** ([`CommLedger::up_edges`]). A depth-1 or pass-through
+//!   (no internal compressor) tree reproduces the flat driver
+//!   bit-for-bit;
 //! * client execution: under [`Driver::run_parallel`] (for `Send + Sync`
-//!   oracles) a persistent [`WorkerPool`] spawned once per run; else the
-//!   oracle's batched [`Oracle::all_loss_grads`] dispatch when supported
-//!   (cohort-aware, so sampling wastes no work); else per-client calls
-//!   on the driver thread. All three visit clients in the same (cohort)
-//!   order, so the paths are loss-identical;
+//!   oracles) a persistent [`WorkerPool`] spawned once per run — sharded
+//!   by hub when a multi-level tree is active, so one worker evaluates
+//!   all of a hub's clients and the hub reduce consumes its results
+//!   contiguously; else the oracle's batched [`Oracle::all_loss_grads`]
+//!   dispatch when supported (cohort-aware, so sampling wastes no work);
+//!   else per-client calls on the driver thread. All three visit clients
+//!   in the same (cohort) order, so the paths are loss-identical;
 //! * [`RunRecord`] emission at every eval round plus a final eval.
 //!
-//! Steady-state rounds allocate nothing: the driver reserves its record
-//! and ledger capacity up front and reuses its point/gradient/batch
-//! buffers (`rust/tests/alloc_free.rs` counts allocations to pin this).
+//! Steady-state rounds allocate nothing: the driver reserves its record,
+//! ledger, grouping and tree-reduce capacity up front and reuses its
+//! point/gradient/batch buffers (`rust/tests/alloc_free.rs` counts
+//! allocations to pin this).
 
 use anyhow::Result;
 
-use super::hierarchy::Hierarchy;
+use super::hierarchy::{AggTree, Hierarchy};
 use super::{default_pool_size, CommLedger, WorkerPool};
-use crate::algorithms::api::{ClientMsg, FlAlgorithm, RoundCtx};
+use crate::algorithms::api::{ClientMsg, FlAlgorithm, RoundCtx, TreeLinks, TreeScratch};
 use crate::algorithms::RunOptions;
 use crate::compress::Compressor;
 use crate::metrics::{RoundStat, RunRecord};
@@ -47,27 +61,38 @@ pub enum Topology {
     /// Single-level: every local communication round costs 1.
     #[default]
     Flat,
-    /// Server–hub–client: client->hub rounds cost `c1`, the hub->server
-    /// exchange costs `c2` per global round.
+    /// Server–hub–client *cost annotation*: client->hub rounds cost
+    /// `c1`, the hub->server exchange costs `c2` per global round;
+    /// aggregation itself stays flat at the server.
     Hier(Hierarchy),
+    /// An *executed* multi-level aggregation tree: internal nodes
+    /// partially aggregate, edge classes may re-compress
+    /// ([`Driver::up_edges`]), costs are per edge class.
+    Tree(AggTree),
 }
 
 impl Topology {
-    /// (c1, c2) of the cost model `c2 + c1 * local_rounds` per
-    /// communicating global round.
-    pub fn costs(&self) -> (f64, f64) {
+    /// Abstract cost of one communicating global round that used
+    /// `local_rounds` local (leaf-edge) communication rounds.
+    pub fn round_cost(&self, local_rounds: usize) -> f64 {
         match self {
-            Topology::Flat => (1.0, 0.0),
-            Topology::Hier(h) => (h.c1, h.c2),
+            Topology::Flat => local_rounds as f64,
+            Topology::Hier(h) => h.c2 + h.c1 * local_rounds as f64,
+            Topology::Tree(t) => t.round_cost(local_rounds),
         }
     }
 }
 
-/// Cohort evaluation hook: given (cohort, point, visitor), evaluate every
-/// cohort client's gradient at the point and feed `(client, loss, grad)`
-/// to the visitor in cohort order.
-type ParEval<'a> =
-    dyn Fn(&[usize], &[f32], &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>) -> Result<()> + 'a;
+/// Cohort evaluation hook: given (cohort, optional hub-group starts,
+/// point, visitor), evaluate every cohort client's gradient at the point
+/// and feed `(client, loss, grad)` to the visitor in cohort order.
+type ParEval<'a> = dyn Fn(
+        &[usize],
+        Option<&[usize]>,
+        &[f32],
+        &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>,
+    ) -> Result<()>
+    + 'a;
 
 /// The coordinator's algorithm runner. Construct with [`Driver::new`] and
 /// the `with_*` builders; one driver can run any number of algorithms.
@@ -80,6 +105,11 @@ pub struct Driver {
     pub down: Option<Box<dyn Compressor>>,
     /// Communication-cost topology.
     pub topology: Topology,
+    /// Per-edge-class uplink compressors for [`Topology::Tree`], index =
+    /// edge class (0 = client→hub; a `Some` there overrides [`Driver::up`]
+    /// as the leaf compressor). `None`/missing entries are pass-through.
+    /// Ignored under flat/annotation topologies.
+    pub up_edges: Vec<Option<Box<dyn Compressor>>>,
     /// Exploit compressors' native sparse messages (O(k) aggregation).
     /// Default `true`; `false` forces the dense reference path. The two
     /// produce bit-for-bit identical results.
@@ -93,6 +123,7 @@ impl Default for Driver {
             up: None,
             down: None,
             topology: Topology::default(),
+            up_edges: Vec::new(),
             sparse_links: true,
         }
     }
@@ -120,6 +151,17 @@ impl Driver {
 
     pub fn with_topology(mut self, topology: Topology) -> Self {
         self.topology = topology;
+        self
+    }
+
+    /// Set the uplink compressor of tree edge class `level` (0 = the
+    /// client→hub leaf edge, 1 = hub→server on a 3-level tree, ...).
+    /// Only meaningful together with a [`Topology::Tree`].
+    pub fn with_up_edge(mut self, level: usize, comp: Box<dyn Compressor>) -> Self {
+        if self.up_edges.len() <= level {
+            self.up_edges.resize_with(level + 1, || None);
+        }
+        self.up_edges[level] = Some(comp);
         self
     }
 
@@ -186,9 +228,10 @@ impl Driver {
         std::thread::scope(|scope| {
             let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
             let par = |cohort: &[usize],
+                       groups: Option<&[usize]>,
                        x: &[f32],
                        visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>| {
-                pool.eval(cohort, x, visit)
+                pool.eval_grouped(cohort, groups, x, visit)
             };
             self.run_inner(alg, oracle, Some(&par), Some(&mut on_eval), x0, opts)
         })
@@ -218,7 +261,6 @@ impl Driver {
         // grow (and therefore not reallocate) anything
         ledger.history.reserve(opts.rounds);
         rec.rounds.reserve(opts.rounds / opts.eval_every.max(1) + 2);
-        let (c1, c2) = self.topology.costs();
         let mut rng = crate::rng(opts.seed);
         let mut cohort: Vec<usize> = Vec::with_capacity(n);
         let mut point: Vec<f32> = Vec::new();
@@ -226,6 +268,42 @@ impl Driver {
         // reusable outputs for the oracle's batched dispatch
         let mut blosses: Vec<f32> = Vec::new();
         let mut bgrads: Vec<f32> = Vec::new();
+
+        // executed multi-level topology: reduce scratch, leaf compressor
+        // resolution and hub-grouping buffers, all sized once here
+        let tree = match &self.topology {
+            Topology::Tree(t) => {
+                anyhow::ensure!(
+                    t.n_clients() == n,
+                    "topology tree has {} leaves but the oracle serves {} clients",
+                    t.n_clients(),
+                    n
+                );
+                Some(t)
+            }
+            _ => None,
+        };
+        let leaf_up: Option<&dyn Compressor> = match tree {
+            Some(_) => self.up_edges.first().and_then(|o| o.as_deref()).or(self.up.as_deref()),
+            None => self.up.as_deref(),
+        };
+        let mut tscratch = tree.map(|t| TreeScratch::new(t, &self.up_edges, d));
+        // hub-group the cohort only when a real hub reduce is active:
+        // pure pass-through trees keep the flat execution order exactly,
+        // so the bit-for-bit flat equivalence holds for *any* sampler
+        // (grouping would reorder link-RNG consumption otherwise)
+        let tree_groups = tscratch.as_ref().is_some_and(|ts| ts.any_compressed());
+        let mut grouped: Vec<usize> = Vec::new();
+        let mut hub_off: Vec<usize> = Vec::new();
+        let mut group_starts: Vec<usize> = Vec::new();
+        if let Some(t) = tree {
+            ledger.up_edges = vec![0; t.depth()];
+            if tree_groups && t.depth() >= 2 {
+                grouped.reserve(n);
+                hub_off = vec![0; t.width(1) + 1];
+                group_starts.reserve(t.width(1));
+            }
+        }
 
         for t in 0..opts.rounds {
             if t % opts.eval_every == 0 {
@@ -240,15 +318,67 @@ impl Driver {
                 None => cohort.extend(0..n),
             }
             alg.filter_cohort(&mut cohort, &mut rng);
+            // multi-level trees with a re-compressing edge: stable-group
+            // the cohort by hub (counting sort; consumes no RNG) so each
+            // hub's clients run and reduce contiguously and the pool can
+            // shard whole hubs per worker. Even trees assign hubs
+            // contiguously, so sorted cohorts are already grouped and
+            // the order is unchanged.
+            group_starts.clear();
+            if let Some(tr) = tree {
+                // channel inference in the tree reduce keys on consecutive
+                // same-client calls, so a cohort that repeats a client id
+                // (a with-replacement sampler) would silently corrupt hub
+                // partials — make that contract violation loud
+                debug_assert!(
+                    {
+                        let mut c = cohort.clone();
+                        c.sort_unstable();
+                        c.windows(2).all(|w| w[0] != w[1])
+                    },
+                    "tree topologies require cohorts without repeated client ids"
+                );
+                if tree_groups && tr.depth() >= 2 && !cohort.is_empty() {
+                    let hubs = tr.width(1);
+                    hub_off.fill(0);
+                    for &c in &cohort {
+                        hub_off[tr.hub_of(c) + 1] += 1;
+                    }
+                    for h in 0..hubs {
+                        hub_off[h + 1] += hub_off[h];
+                    }
+                    for h in 0..hubs {
+                        if hub_off[h + 1] > hub_off[h] {
+                            group_starts.push(hub_off[h]);
+                        }
+                    }
+                    grouped.clear();
+                    grouped.resize(cohort.len(), 0);
+                    for &c in &cohort {
+                        let h = tr.hub_of(c);
+                        grouped[hub_off[h]] = c;
+                        hub_off[h] += 1;
+                    }
+                    cohort.copy_from_slice(&grouped);
+                }
+            }
+            let tree_links = match (tree, tscratch.as_mut()) {
+                (Some(tr), Some(ts)) => {
+                    ts.begin_round(tr, &cohort);
+                    Some(TreeLinks { tree: tr, comps: &self.up_edges, scratch: ts })
+                }
+                _ => None,
+            };
             let mut ctx = RoundCtx::new(
                 t,
                 opts.seed,
                 cohort.len(),
                 &mut rng,
                 self.sampler.as_deref(),
-                self.up.as_deref(),
+                leaf_up,
                 self.down.as_deref(),
                 self.sparse_links,
+                tree_links,
             );
 
             let shared = match alg.grad_point() {
@@ -264,7 +394,9 @@ impl Driver {
                 // evaluation; only pure-Rust oracles get here), then the
                 // oracle's one-dispatch batched path, then serial calls
                 if let Some(par) = par {
-                    par(&cohort, &point, &mut |i, _loss, grad| {
+                    let groups: Option<&[usize]> =
+                        if group_starts.is_empty() { None } else { Some(&group_starts) };
+                    par(&cohort, groups, &point, &mut |i, _loss, grad| {
                         alg.client_step(oracle, i, Some(ClientMsg { grad }), &mut ctx)
                     })?;
                 } else if oracle.all_loss_grads(&point, &cohort, &mut blosses, &mut bgrads)? {
@@ -286,15 +418,21 @@ impl Driver {
             }
             alg.server_step(oracle, &cohort, &mut ctx)?;
 
-            // flush the round's accounting into the ledger (per-node avg)
+            // flush the round's accounting into the ledger (per-node avg
+            // on the classic counters, per-edge totals for trees)
             if ctx.up_nodes > 0 {
                 ledger.up(ctx.up_bits / ctx.up_nodes);
             }
             if ctx.down_nodes > 0 {
                 ledger.down(ctx.down_bits / ctx.down_nodes);
             }
+            if let Some(eb) = ctx.tree_edge_bits() {
+                for (l, b) in eb.iter().enumerate() {
+                    ledger.up_edges[l] += b;
+                }
+            }
             if ctx.communicated {
-                ledger.charge(c2 + c1 * ctx.local_rounds as f64);
+                ledger.charge(self.topology.round_cost(ctx.local_rounds));
             }
             ledger.snapshot(t);
         }
@@ -302,6 +440,7 @@ impl Driver {
         if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
             cb(stat);
         }
+        rec.edge_bits_up = ledger.up_edges.clone();
         Ok(rec)
     }
 }

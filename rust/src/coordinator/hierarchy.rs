@@ -1,32 +1,75 @@
-//! Server–hub–client hierarchical FL (Sect. 5.4.5, Fig. 5.5).
+//! Aggregation topologies: the 2-level cost model of Sect. 5.4.5 and the
+//! general multi-level [`AggTree`] the driver can actually *execute*.
 //!
-//! Clients talk only to their regional hub (cost `c1` per local round);
-//! hubs talk to the central server (cost `c2` per global round). Under
-//! SPPM-AS a global iteration with K local communication rounds costs
-//! `c1 * K + c2`; under LocalGD every global round costs `c1 + c2`.
+//! [`Hierarchy`] is the dissertation's server–hub–client *cost
+//! annotation* (Fig. 5.5): clients talk to their regional hub at cost
+//! `c1` per local round, hubs talk to the central server at cost `c2`
+//! per global round; aggregation itself still happens flat at the
+//! server. Under SPPM-AS a global iteration with K local communication
+//! rounds costs `c1 * K + c2`; under LocalGD every global round costs
+//! `c1 + c2`.
+//!
+//! [`AggTree`] makes the hierarchy real: an arbitrary-depth tree
+//! (server → hubs → sub-hubs → clients) in which every internal node
+//! *partially aggregates* its children's uplink messages and every edge
+//! class can re-compress the partial aggregate it forwards (the
+//! Cohort-Squeeze execution path; cf. FedComLoc's compounding of
+//! per-link compressors). Levels are numbered bottom-up: level 0 is the
+//! clients, level `depth()` is the root/server, and *edge class* `l`
+//! is the hop from level `l` to level `l + 1` (so `l0` = client→hub,
+//! `l1` = hub→server in a 3-level tree). The tree also carries one cost
+//! per edge class, generalizing `(c1, c2)`.
 
+use anyhow::{ensure, Result};
+
+/// Server–hub–client 2-level topology used as a pure *cost model* by
+/// [`crate::coordinator::driver::Topology::Hier`]. Construct through
+/// [`Hierarchy::new`] or [`Hierarchy::even`] (they precompute the
+/// client→hub index that keeps [`Hierarchy::hub_of`] O(1)).
 #[derive(Debug, Clone)]
 pub struct Hierarchy {
-    /// Clients served by each hub.
-    pub hubs: Vec<Vec<usize>>,
+    /// Clients served by each hub. Private so the client→hub index
+    /// below can never go stale; read through [`Hierarchy::hub_members`].
+    hubs: Vec<Vec<usize>>,
     /// Client -> hub cost per local communication round.
     pub c1: f64,
     /// Hub -> server cost per global round.
     pub c2: f64,
+    /// client -> hub index, built once at construction (`usize::MAX`
+    /// marks ids not served by any hub).
+    index: Vec<usize>,
 }
 
 impl Hierarchy {
+    /// Build from an explicit hub membership list.
+    pub fn new(hubs: Vec<Vec<usize>>, c1: f64, c2: f64) -> Self {
+        let max_id = hubs.iter().flatten().copied().max();
+        let mut index = vec![usize::MAX; max_id.map_or(0, |m| m + 1)];
+        for (h, members) in hubs.iter().enumerate() {
+            for &c in members {
+                index[c] = h;
+            }
+        }
+        Self { hubs, c1, c2, index }
+    }
+
     /// Evenly assign n clients to m hubs.
     pub fn even(n: usize, m: usize, c1: f64, c2: f64) -> Self {
         let mut hubs = vec![Vec::new(); m];
         for i in 0..n {
             hubs[i * m / n].push(i);
         }
-        Self { hubs, c1, c2 }
+        Self::new(hubs, c1, c2)
     }
 
     pub fn n_clients(&self) -> usize {
         self.hubs.iter().map(|h| h.len()).sum()
+    }
+
+    /// The membership lists: `hub_members()[h]` are the clients hub `h`
+    /// serves.
+    pub fn hub_members(&self) -> &[Vec<usize>] {
+        &self.hubs
     }
 
     /// Cost of one SPPM-AS global iteration with K local rounds.
@@ -44,8 +87,139 @@ impl Hierarchy {
         t as f64 * self.sppm_round_cost(k_local)
     }
 
+    /// The hub serving `client` — O(1) via the index precomputed at
+    /// construction (the seed implementation scanned every hub's member
+    /// list, O(hubs · clients), on each lookup).
     pub fn hub_of(&self, client: usize) -> Option<usize> {
-        self.hubs.iter().position(|h| h.contains(&client))
+        self.index.get(client).copied().filter(|&h| h != usize::MAX)
+    }
+}
+
+/// An arbitrary-depth aggregation tree the driver executes for real:
+/// every internal node partially aggregates its children and each edge
+/// class optionally re-compresses what it forwards (the compressors
+/// live on the [`crate::coordinator::driver::Driver`], one slot per
+/// edge class).
+///
+/// Representation: `parents[l][i]` is the parent (a node at level
+/// `l + 1`) of node `i` at level `l`. Level 0 holds the clients and the
+/// last level must collapse to a single root (the server), so
+/// `parents.len()` is the tree's depth in *edge classes*.
+#[derive(Debug, Clone)]
+pub struct AggTree {
+    /// parents[l][i]: parent at level l+1 of node i at level l.
+    parents: Vec<Vec<usize>>,
+    /// widths[l]: node count at level l (widths[0] = clients, last = 1).
+    widths: Vec<usize>,
+    /// Per-edge-class message cost; a communicating global round costs
+    /// `costs[0] * local_rounds + sum(costs[1..])`.
+    costs: Vec<f64>,
+}
+
+impl AggTree {
+    /// Build and validate an explicit tree. `costs.len()` must equal the
+    /// number of edge classes (`parents.len()`), every parent index must
+    /// be in range, and the top level must have exactly one node.
+    pub fn new(parents: Vec<Vec<usize>>, costs: Vec<f64>) -> Result<Self> {
+        ensure!(!parents.is_empty(), "AggTree needs at least one edge class");
+        ensure!(
+            costs.len() == parents.len(),
+            "AggTree has {} edge classes but {} costs",
+            parents.len(),
+            costs.len()
+        );
+        let mut widths = Vec::with_capacity(parents.len() + 1);
+        widths.push(parents[0].len());
+        for (l, level) in parents.iter().enumerate() {
+            ensure!(!level.is_empty(), "AggTree level {l} is empty");
+            ensure!(
+                level.len() == widths[l],
+                "AggTree level {l} has {} nodes; its children name {}",
+                level.len(),
+                widths[l]
+            );
+            let max = level.iter().copied().max().unwrap_or(0);
+            widths.push(max + 1);
+        }
+        ensure!(
+            *widths.last().unwrap() == 1,
+            "AggTree must collapse to a single root (top level has {} nodes)",
+            widths.last().unwrap()
+        );
+        Ok(Self { parents, widths, costs })
+    }
+
+    /// Evenly nested tree over `n` clients: `internal` lists the node
+    /// counts of the internal levels bottom-up (e.g. `[16]` = 16 hubs;
+    /// `[64, 8]` = 64 sub-hubs under 8 hubs), the root is implicit.
+    /// Children are assigned contiguously, so sorted cohorts stay
+    /// grouped by hub. `costs` must have `internal.len() + 1` entries.
+    ///
+    /// Precondition (asserted): levels narrow monotonically toward the
+    /// root (`n >= internal[0] >= internal[1] >= ... >= 1`) — a wider
+    /// upper level would leave nodes childless. The TOML path
+    /// (`config::build_driver`) validates this and returns an error
+    /// instead.
+    pub fn even(n: usize, internal: &[usize], costs: Vec<f64>) -> Self {
+        assert!(n > 0, "AggTree::even needs at least one client");
+        assert_eq!(
+            costs.len(),
+            internal.len() + 1,
+            "AggTree::even needs one cost per edge class"
+        );
+        let mut widths = Vec::with_capacity(internal.len() + 2);
+        widths.push(n);
+        for &w in internal {
+            assert!(w > 0, "AggTree::even internal level width must be > 0");
+            assert!(
+                w <= *widths.last().unwrap(),
+                "AggTree::even levels must not grow toward the root ({} above {})",
+                w,
+                widths.last().unwrap()
+            );
+            widths.push(w);
+        }
+        widths.push(1);
+        let parents: Vec<Vec<usize>> = (0..widths.len() - 1)
+            .map(|l| (0..widths[l]).map(|i| i * widths[l + 1] / widths[l]).collect())
+            .collect();
+        Self::new(parents, costs).expect("even construction is always valid")
+    }
+
+    /// Number of edge classes (1 = clients talk straight to the server).
+    pub fn depth(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.widths[0]
+    }
+
+    /// Node count at `level` (0 = clients, `depth()` = root).
+    pub fn width(&self, level: usize) -> usize {
+        self.widths[level]
+    }
+
+    /// Parent at level `level + 1` of node `node` at `level`.
+    pub fn parent(&self, level: usize, node: usize) -> usize {
+        self.parents[level][node]
+    }
+
+    /// The level-1 aggregator serving `client` — O(1).
+    pub fn hub_of(&self, client: usize) -> usize {
+        self.parents[0][client]
+    }
+
+    /// Per-edge costs, index = edge class.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Cost of one communicating global round with `local_rounds` local
+    /// (leaf-edge) communication rounds: every edge class is traversed
+    /// once, the leaf edge `local_rounds` times.
+    pub fn round_cost(&self, local_rounds: usize) -> f64 {
+        self.costs[0] * local_rounds as f64 + self.costs[1..].iter().sum::<f64>()
     }
 }
 
@@ -61,6 +235,18 @@ mod tests {
         for i in 0..10 {
             assert!(h.hub_of(i).is_some());
         }
+    }
+
+    #[test]
+    fn hub_of_matches_membership_scan() {
+        // the O(1) index must agree with the membership lists it replaced
+        let h = Hierarchy::even(23, 5, 0.1, 1.0);
+        for i in 0..23 {
+            let scanned = h.hubs.iter().position(|m| m.contains(&i));
+            assert_eq!(h.hub_of(i), scanned, "client {i}");
+        }
+        assert_eq!(h.hub_of(23), None);
+        assert_eq!(h.hub_of(1000), None);
     }
 
     #[test]
@@ -81,5 +267,54 @@ mod tests {
         let sppm = h.sppm_total(10, 10); // 10 globals, 10 local rounds each
         let localgd = 100.0 * h.localgd_round_cost(); // 100 globals
         assert!(sppm < localgd);
+    }
+
+    #[test]
+    fn even_tree_shapes_and_nesting() {
+        let t = AggTree::even(12, &[4, 2], vec![0.05, 0.2, 1.0]);
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.n_clients(), 12);
+        assert_eq!((t.width(0), t.width(1), t.width(2), t.width(3)), (12, 4, 2, 1));
+        // contiguous assignment at every level
+        for c in 0..12 {
+            assert_eq!(t.hub_of(c), c * 4 / 12);
+        }
+        for s in 0..4 {
+            assert_eq!(t.parent(1, s), s * 2 / 4);
+        }
+        assert_eq!(t.parent(2, 0), 0);
+        assert_eq!(t.parent(2, 1), 0);
+    }
+
+    #[test]
+    fn degenerate_tree_is_flat() {
+        let t = AggTree::even(6, &[], vec![1.0]);
+        assert_eq!(t.depth(), 1);
+        for c in 0..6 {
+            assert_eq!(t.hub_of(c), 0); // "hub" is the root itself
+        }
+        assert_eq!(t.round_cost(3), 3.0);
+    }
+
+    #[test]
+    fn tree_round_cost_generalizes_c1_c2() {
+        let t = AggTree::even(100, &[10], vec![0.05, 1.0]);
+        // c1 * K + c2
+        assert!((t.round_cost(10) - 1.5).abs() < 1e-12);
+        assert!((t.round_cost(1) - 1.05).abs() < 1e-12);
+        let t3 = AggTree::even(100, &[20, 5], vec![0.05, 0.2, 1.0]);
+        assert!((t3.round_cost(4) - (0.2 + 0.2 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn new_rejects_malformed_trees() {
+        // no root collapse
+        assert!(AggTree::new(vec![vec![0, 1, 1]], vec![1.0]).is_err());
+        // cost arity mismatch
+        assert!(AggTree::new(vec![vec![0, 0]], vec![1.0, 2.0]).is_err());
+        // level size mismatch: 2 hubs named below, 3 listed above
+        assert!(AggTree::new(vec![vec![0, 1, 0], vec![0, 0, 0]], vec![1.0, 1.0]).is_err());
+        // valid 2-level
+        assert!(AggTree::new(vec![vec![0, 1, 0], vec![0, 0]], vec![0.1, 1.0]).is_ok());
     }
 }

@@ -4,9 +4,22 @@
 //! The algorithm modules own only the *math* of a round (the
 //! [`crate::algorithms::api::FlAlgorithm`] trait); the coordinator owns
 //! everything around it: the round loop ([`driver::Driver`]), who talks
-//! to whom at what cost ([`hierarchy::Hierarchy`], [`driver::Topology`]),
-//! how bits are accounted ([`CommLedger`]), and how a fleet of clients
-//! executes concurrently ([`WorkerPool`]).
+//! to whom at what cost ([`hierarchy::Hierarchy`],
+//! [`hierarchy::AggTree`], [`driver::Topology`]), how bits are
+//! accounted ([`CommLedger`] — per-node averages on the classic
+//! counters, plus per-edge-class totals under an executed aggregation
+//! tree), and how a fleet of clients executes concurrently
+//! ([`WorkerPool`]).
+//!
+//! Multi-level aggregation ([`driver::Topology::Tree`]): the driver
+//! groups each round's cohort by hub, internal tree nodes partially
+//! aggregate their children's uplink messages, and every edge class can
+//! re-compress what it forwards (Top-K client→hub + QSGD hub→server,
+//! say). The reduce itself lives in
+//! [`crate::algorithms::api::RoundCtx::up_compress_add`]; the
+//! coordinator owns the topology, the per-round hub grouping, the
+//! [`CommLedger::up_edges`] per-edge ledger, and the pool sharding
+//! below.
 //!
 //! Perf contract of the client pump (DESIGN.md §Perf): a [`WorkerPool`]
 //! is spawned **once per run**, not per round — its OS threads live for
@@ -15,14 +28,19 @@
 //! per-client `vec![0.0; d]` allocations (the pre-pool pump paid both,
 //! every round). Results are visited in **cohort order** — the same
 //! order the serial path uses — so pool-parallel runs are loss-identical
-//! to serial runs. The pool requires a `Send + Sync` oracle (the
-//! pure-Rust ones); the PJRT-backed oracles run on the driver thread
-//! because the FFI handles are not `Send`, and usually hit the batched
+//! to serial runs. Under a multi-level tree the pool is **sharded by
+//! hub** ([`WorkerPool::eval_grouped`]): worker chunks align to hub
+//! boundaries, so a single worker evaluates all of a hub's clients and
+//! the hub's partial reduce consumes one worker's results contiguously.
+//! The pool requires a `Send + Sync` oracle (the pure-Rust ones); the
+//! PJRT-backed oracles run on the driver thread because the FFI handles
+//! are not `Send`, and usually hit the batched
 //! [`crate::oracle::Oracle::all_loss_grads`] dispatch instead.
 
 pub mod driver;
 pub mod hierarchy;
 
+use std::cell::RefCell;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -36,6 +54,17 @@ pub struct CommLedger {
     pub bits_up: u64,
     pub bits_down: u64,
     pub cost: f64,
+    /// Cumulative uplink bits that traversed each edge class of an
+    /// executed [`hierarchy::AggTree`] (index 0 = client→hub), summed
+    /// over *all* senders on that edge — the "bits per edge traversed"
+    /// view; empty under flat/annotation topologies. Unlike `bits_up`
+    /// this is a total, not a per-node average, so hub→server reduction
+    /// factors read off directly. Caveat: edges at and above the first
+    /// re-compressing level carry only hub-reduce traffic, so for
+    /// algorithms that bypass tree routing (EF-BV, Scafflix, SPPM-AS —
+    /// they aggregate their own way) those entries stay 0 even though
+    /// their dense aggregates do reach the server.
+    pub up_edges: Vec<u64>,
     /// Per-round log: (round, bits_up, bits_down, cost).
     pub history: Vec<(usize, u64, u64, f64)>,
 }
@@ -89,6 +118,9 @@ pub struct WorkerPool {
     jobs: Vec<Sender<(usize, usize)>>,
     done: Receiver<()>,
     dim: usize,
+    /// Reusable chunk boundaries of the last dispatch (driver-thread
+    /// only; the workers receive their ranges over the job channels).
+    bounds: RefCell<Vec<usize>>,
 }
 
 impl WorkerPool {
@@ -155,16 +187,33 @@ impl WorkerPool {
             jobs.push(job_tx);
             outs.push(out);
         }
-        Self { input, outs, jobs, done, dim }
+        Self { input, outs, jobs, done, dim, bounds: RefCell::new(Vec::new()) }
     }
 
     /// Evaluate every cohort client's gradient at `x` across the pool,
     /// then visit `(client, loss, grad)` results **in cohort order** —
     /// exactly the serial iteration order, so callers are bit-compatible
-    /// with a serial run.
+    /// with a serial run. Chunks the cohort evenly across workers.
     pub fn eval(
         &self,
         cohort: &[usize],
+        x: &[f32],
+        visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        self.eval_grouped(cohort, None, x, visit)
+    }
+
+    /// [`WorkerPool::eval`], sharded by hub: `groups` lists the start
+    /// offsets of the cohort's hub groups (ascending, first = 0). Worker
+    /// chunk boundaries then align to group boundaries — a hub never
+    /// spans two workers, so each hub's gradients come off one worker's
+    /// buffers and its partial reduce consumes them contiguously.
+    /// `None` falls back to even chunking. Visit order is cohort order
+    /// either way.
+    pub fn eval_grouped(
+        &self,
+        cohort: &[usize],
+        groups: Option<&[usize]>,
         x: &[f32],
         visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>,
     ) -> Result<()> {
@@ -178,16 +227,39 @@ impl WorkerPool {
             input.cohort.clear();
             input.cohort.extend_from_slice(cohort);
         }
-        let chunk = cohort.len().div_ceil(self.jobs.len()).max(1);
-        let mut active = 0;
-        for (w, job) in self.jobs.iter().enumerate() {
-            let start = w * chunk;
-            if start >= cohort.len() {
-                break;
+        // chunk boundaries: each closed chunk holds >= target clients, so
+        // there are never more chunks than workers (reusable buffer, no
+        // steady-state allocation)
+        let target = cohort.len().div_ceil(self.jobs.len()).max(1);
+        let mut bounds = self.bounds.borrow_mut();
+        bounds.clear();
+        bounds.push(0);
+        match groups {
+            Some(starts) if !starts.is_empty() => {
+                let mut chunk_start = 0usize;
+                let ends = starts.iter().skip(1).copied().chain(std::iter::once(cohort.len()));
+                for gend in ends {
+                    if gend - chunk_start >= target && gend < cohort.len() {
+                        bounds.push(gend);
+                        chunk_start = gend;
+                    }
+                }
             }
-            let end = ((w + 1) * chunk).min(cohort.len());
-            job.send((start, end)).map_err(|_| anyhow::anyhow!("pool worker exited"))?;
-            active += 1;
+            _ => {
+                let mut s = target;
+                while s < cohort.len() {
+                    bounds.push(s);
+                    s += target;
+                }
+            }
+        }
+        bounds.push(cohort.len());
+        let active = bounds.len() - 1;
+        debug_assert!(active <= self.jobs.len());
+        for w in 0..active {
+            self.jobs[w]
+                .send((bounds[w], bounds[w + 1]))
+                .map_err(|_| anyhow::anyhow!("pool worker exited"))?;
         }
         for _ in 0..active {
             self.done.recv().map_err(|_| anyhow::anyhow!("pool worker exited"))?;
@@ -197,7 +269,7 @@ impl WorkerPool {
             if let Some(e) = guard.err.take() {
                 return Err(e);
             }
-            let start = w * chunk;
+            let start = bounds[w];
             for (j, &client) in cohort[start..start + guard.count].iter().enumerate() {
                 visit(client, guard.losses[j], &guard.grads[j * self.dim..(j + 1) * self.dim])?;
             }
@@ -254,6 +326,42 @@ mod tests {
                 .unwrap();
                 assert_eq!(order, cohort, "round {round}");
             }
+        });
+    }
+
+    #[test]
+    fn pool_grouped_matches_even_chunking() {
+        // hub-aligned sharding changes which worker evaluates whom, but
+        // never the (cohort-order) results
+        let mut rng = crate::rng(45);
+        let q = QuadraticOracle::random(12, 4, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.3f32; 4];
+        let cohort: Vec<usize> = (0..12).collect();
+        // 4 hub groups of 3 clients each
+        let groups = vec![0usize, 3, 6, 9];
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, &q, 3);
+            let mut even: Vec<(usize, f32, Vec<f32>)> = Vec::new();
+            pool.eval(&cohort, &x, &mut |i, l, g| {
+                even.push((i, l, g.to_vec()));
+                Ok(())
+            })
+            .unwrap();
+            let mut sharded: Vec<(usize, f32, Vec<f32>)> = Vec::new();
+            pool.eval_grouped(&cohort, Some(&groups), &x, &mut |i, l, g| {
+                sharded.push((i, l, g.to_vec()));
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(even, sharded);
+            // a single giant group still works (one worker takes it all)
+            let mut count = 0;
+            pool.eval_grouped(&cohort, Some(&[0]), &x, &mut |_, _, _| {
+                count += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(count, 12);
         });
     }
 

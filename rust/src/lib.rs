@@ -13,11 +13,16 @@
 //! eval_point`) and is executed by the coordinator-owned
 //! [`coordinator::driver::Driver`], which owns the round loop, cohort
 //! sampling, the [`coordinator::CommLedger`] bit/cost accounting, optional
-//! up/down link compressors and flat-vs-hierarchical topology costing.
-//! Because compression, local training, cohort sampling and personalization
-//! are orthogonal driver axes, they compose freely (e.g. Scafflix with a
-//! Top-K uplink, or FedAvg costed over a 2-level hierarchy) — the
-//! dissertation's central "unified framework" claim, in code.
+//! up/down link compressors, and the topology — flat, a 2-level cost
+//! annotation, or an *executed* multi-level aggregation tree
+//! ([`coordinator::hierarchy::AggTree`]) whose internal nodes partially
+//! aggregate and whose edge classes carry their own compressors, with
+//! bits booked per edge traversed. Because compression, local training,
+//! cohort sampling, personalization and topology are orthogonal driver
+//! axes, they compose freely (e.g. Scafflix with a Top-K uplink, or
+//! FedAvg aggregated through hubs with Top-K client→hub and QSGD
+//! hub→server) — the dissertation's central "unified framework" claim,
+//! in code.
 //!
 //! * [`runtime`] loads AOT-compiled HLO artifacts (lowered from the JAX /
 //!   Pallas layers at build time) and executes them on the PJRT CPU client —

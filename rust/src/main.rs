@@ -6,7 +6,8 @@
 //!   * `run <config.toml>` — run a custom experiment spec; the algorithm
 //!     is resolved by name through the registry and executed by the
 //!     coordinator `Driver` (so any spec may add `[compressor]` /
-//!     `[topology]` sections).
+//!     `[topology]` sections — including an executed multi-level
+//!     aggregation tree with per-edge `[links.up.l<i>]` compressors).
 //!   * `list`              — list algorithms, experiments and artifacts.
 //!   * `serve [--clients N] [--rounds R] [--algorithm NAME]` — threaded
 //!     coordinator demo: the driver fans cohort gradient evaluation out
@@ -147,6 +148,17 @@ fn run_spec(path: &str) -> Result<()> {
         ex.rounds,
         outdir.display()
     );
+    if !rec.edge_bits_up.is_empty() {
+        // executed aggregation tree: show the per-edge uplink ledger
+        // (l0 = client->hub, last = hub->server)
+        let cells: Vec<String> = rec
+            .edge_bits_up
+            .iter()
+            .enumerate()
+            .map(|(l, b)| format!("l{l}={b}"))
+            .collect();
+        println!("uplink bits per edge class (cumulative totals): {}", cells.join("  "));
+    }
     Ok(())
 }
 

@@ -33,11 +33,16 @@ pub struct RoundStat {
 pub struct RunRecord {
     pub label: String,
     pub rounds: Vec<RoundStat>,
+    /// Final cumulative uplink bits per aggregation-tree edge class
+    /// (index 0 = client→hub, last = hub→server), totalled over all
+    /// senders on that edge; empty unless the run executed a
+    /// multi-level [`crate::coordinator::hierarchy::AggTree`].
+    pub edge_bits_up: Vec<u64>,
 }
 
 impl RunRecord {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { label: label.into(), rounds: Vec::new() }
+        Self { label: label.into(), rounds: Vec::new(), edge_bits_up: Vec::new() }
     }
 
     pub fn push(&mut self, stat: RoundStat) {

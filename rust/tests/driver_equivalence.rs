@@ -6,15 +6,21 @@
 //! Also covers the registry (every advertised name constructs and runs),
 //! the two previously-impossible compositions the redesign opens
 //! (Scafflix with Top-K uplink compression and FedAvg costed over a
-//! 2-level hierarchy — both reachable from a TOML spec), and the sparse
-//! message fast path: runs over the O(k) sparse link path must match the
-//! dense reference path bit-for-bit in loss and booked bits.
+//! 2-level hierarchy — both reachable from a TOML spec), the sparse
+//! message fast path (runs over the O(k) sparse link path must match the
+//! dense reference path bit-for-bit in loss and booked bits), and the
+//! executed multi-level aggregation trees: depth-1 and pass-through
+//! trees must reproduce the flat driver bit-for-bit, hub order must not
+//! matter beyond floating-point summation order, and per-edge
+//! re-compression must book strictly fewer hub→server bits than the
+//! flat run of the same experiment.
 
 use fedeff::algorithms::gd::{FlixGd, Gd};
 use fedeff::algorithms::scafflix::Scafflix;
 use fedeff::algorithms::{build_algorithm, registry, RunOptions};
+use fedeff::compress::sparse_bits;
 use fedeff::coordinator::driver::{Driver, Topology};
-use fedeff::coordinator::hierarchy::Hierarchy;
+use fedeff::coordinator::hierarchy::{AggTree, Hierarchy};
 use fedeff::metrics::RunRecord;
 use fedeff::oracle::quadratic::QuadraticOracle;
 use fedeff::oracle::{solve_local, Oracle};
@@ -513,4 +519,329 @@ c2 = 1.0
     assert!(rec2.last().unwrap().loss.is_finite());
     // hierarchy pricing applied: fedavg communicates every round
     assert!((rec2.last().unwrap().comm_cost - 4.0 * 1.05).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Executed multi-level aggregation trees (Cohort-Squeeze execution path)
+// ---------------------------------------------------------------------------
+
+/// A depth-1 tree (clients -> server, no internal nodes) is the flat
+/// driver by construction: identical losses and identical booked bits.
+#[test]
+fn tree_depth1_matches_flat_bitwise() {
+    let q = quadratic(70, 6, 32);
+    let x0 = vec![1.0f32; 32];
+    let opts = RunOptions { rounds: 60, eval_every: 15, seed: 3, ..Default::default() };
+    let mut a = Gd::plain(6, 32, 0.1);
+    let rec_flat = Driver::new()
+        .with_up(Box::new(fedeff::compress::topk::TopK::new(6)))
+        .run(&mut a, &q, &x0, &opts)
+        .unwrap();
+    let mut b = Gd::plain(6, 32, 0.1);
+    let rec_tree = Driver::new()
+        .with_up(Box::new(fedeff::compress::topk::TopK::new(6)))
+        .with_topology(Topology::Tree(AggTree::even(6, &[], vec![1.0])))
+        .run(&mut b, &q, &x0, &opts)
+        .unwrap();
+    assert_records_bitwise_eq(&rec_flat, &rec_tree, "depth-1 tree vs flat");
+    // the degenerate tree still reports its (single) edge class
+    assert_eq!(rec_tree.edge_bits_up.len(), 1);
+    assert!(rec_tree.edge_bits_up[0] > 0);
+    // same cost model as flat (costs = [1.0])
+    assert_eq!(
+        rec_flat.last().unwrap().comm_cost,
+        rec_tree.last().unwrap().comm_cost,
+    );
+}
+
+/// A 2-level tree whose internal edge carries no compressor is pure
+/// pass-through: hubs forward their children's messages unchanged, so
+/// GD aggregates bit-for-bit like the flat driver.
+#[test]
+fn tree_2level_identity_matches_flat_gd() {
+    let q = quadratic(71, 8, 24);
+    let x0 = vec![2.0f32; 24];
+    let opts = RunOptions { rounds: 80, eval_every: 20, seed: 5, ..Default::default() };
+    let mk_sampler = || Box::new(NiceSampling { n: 8, tau: 4 });
+    let mut a = Gd::plain(8, 24, 0.15);
+    let rec_flat =
+        Driver::new().with_sampler(mk_sampler()).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = Gd::plain(8, 24, 0.15);
+    let rec_tree = Driver::new()
+        .with_sampler(mk_sampler())
+        .with_topology(Topology::Tree(AggTree::even(8, &[2], vec![1.0, 0.0])))
+        .run(&mut b, &q, &x0, &opts)
+        .unwrap();
+    assert_records_bitwise_eq(&rec_flat, &rec_tree, "2-level identity tree GD");
+    // costs [1, 0] price rounds exactly like flat, so even comm_cost pins
+    assert_eq!(
+        rec_flat.last().unwrap().comm_cost,
+        rec_tree.last().unwrap().comm_cost,
+    );
+}
+
+/// Same pass-through equivalence for FedAvg with a Top-K uplink: the
+/// FedCOM delta messages compress at the leaf edge, hubs relay them
+/// unchanged, the server sees exactly the flat aggregate.
+#[test]
+fn tree_2level_identity_matches_flat_fedavg_topk() {
+    let q = quadratic(72, 9, 30);
+    let x0 = vec![1.5f32; 30];
+    let opts = RunOptions { rounds: 100, eval_every: 25, seed: 7, ..Default::default() };
+    let mk = |tree: bool| {
+        let d = Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 9, tau: 5 }))
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(5)));
+        if tree {
+            d.with_topology(Topology::Tree(AggTree::even(9, &[3], vec![1.0, 0.0])))
+        } else {
+            d
+        }
+    };
+    let mut a = fedeff::algorithms::fedavg::FedAvg::new(3, 0.1);
+    let rec_flat = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = fedeff::algorithms::fedavg::FedAvg::new(3, 0.1);
+    let rec_tree = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_flat, &rec_tree, "2-level identity tree FedAvg+TopK");
+    // pass-through hubs relay the leaf payloads: the internal edge saw
+    // exactly the leaf edge's traffic
+    assert_eq!(rec_tree.edge_bits_up[1], rec_tree.edge_bits_up[0]);
+}
+
+/// Scaffold (two uplink messages per client per round) over a 2-level
+/// identity tree also reproduces the flat driver bit-for-bit.
+#[test]
+fn tree_2level_identity_matches_flat_scaffold() {
+    let q = quadratic(73, 6, 20);
+    let x0 = vec![2.0f32; 20];
+    let opts = RunOptions { rounds: 120, eval_every: 30, seed: 11, ..Default::default() };
+    let mk_sampler = || Box::new(NiceSampling { n: 6, tau: 3 });
+    let mut a = fedeff::algorithms::scaffold::Scaffold::new(3, 0.05);
+    let rec_flat =
+        Driver::new().with_sampler(mk_sampler()).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = fedeff::algorithms::scaffold::Scaffold::new(3, 0.05);
+    let rec_tree = Driver::new()
+        .with_sampler(mk_sampler())
+        .with_topology(Topology::Tree(AggTree::even(6, &[2], vec![1.0, 0.0])))
+        .run(&mut b, &q, &x0, &opts)
+        .unwrap();
+    assert_records_bitwise_eq(&rec_flat, &rec_tree, "2-level identity tree Scaffold");
+}
+
+/// Relabeling hubs (same partition, different hub ids) only changes the
+/// order partial aggregates reach the server accumulator, i.e. pure
+/// floating-point reassociation. With deterministic Top-K edges the
+/// final losses agree to ~1e-4 relative — the bound documents the f32
+/// summation-order drift over 10 rounds, not an algorithmic difference.
+#[test]
+fn tree_hub_order_permutation_invariance() {
+    let q = quadratic(74, 6, 40);
+    let x0 = vec![1.0f32; 40];
+    let opts = RunOptions { rounds: 10, eval_every: 10, ..Default::default() };
+    // partition {0,1} {2,3} {4,5}, hubs in natural vs permuted order
+    let natural =
+        AggTree::new(vec![vec![0, 0, 1, 1, 2, 2], vec![0, 0, 0]], vec![1.0, 0.0]).unwrap();
+    let permuted =
+        AggTree::new(vec![vec![2, 2, 0, 0, 1, 1], vec![0, 0, 0]], vec![1.0, 0.0]).unwrap();
+    let run = |tree: AggTree| {
+        let mut alg = Gd::plain(6, 40, 0.1);
+        Driver::new()
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(10)))
+            .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(20)))
+            .with_topology(Topology::Tree(tree))
+            .run(&mut alg, &q, &x0, &opts)
+            .unwrap()
+    };
+    let rec_a = run(natural);
+    let rec_b = run(permuted);
+    // bits are exactly equal (same messages, same sizes)...
+    assert_eq!(rec_a.edge_bits_up, rec_b.edge_bits_up);
+    let (la, lb) = (rec_a.last().unwrap().loss, rec_b.last().unwrap().loss);
+    // ...losses agree within the documented fp-reassociation tolerance
+    let tol = 1e-4 * la.abs().max(1.0);
+    assert!((la - lb).abs() <= tol, "hub permutation drifted: {la} vs {lb}");
+}
+
+/// The O(k) sparse scatter path must match the dense reference path
+/// bit-for-bit when hubs re-compress partial aggregates too.
+#[test]
+fn tree_sparse_matches_dense_with_hub_compression() {
+    let q = quadratic(75, 8, 48);
+    let x0 = vec![1.0f32; 48];
+    let opts = RunOptions { rounds: 60, eval_every: 15, seed: 9, ..Default::default() };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(6)))
+            .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(12)))
+            .with_topology(Topology::Tree(AggTree::even(8, &[2], vec![1.0, 0.0])))
+            .with_sparse_links(sparse)
+    };
+    let mut a = Gd::plain(8, 48, 0.1);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = Gd::plain(8, 48, 0.1);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "tree hub compression sparse vs dense");
+    assert_eq!(rec_dense.edge_bits_up, rec_sparse.edge_bits_up);
+}
+
+/// The hub-sharded worker pool visits results in cohort order, so a
+/// pool-parallel tree run is bit-identical to the serial tree run.
+#[test]
+fn tree_parallel_run_matches_serial() {
+    let q = quadratic(76, 12, 32);
+    let x0 = vec![1.0f32; 32];
+    let opts = RunOptions { rounds: 50, eval_every: 10, seed: 6, ..Default::default() };
+    let mk = || {
+        Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 12, tau: 6 }))
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(4)))
+            .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(8)))
+            .with_topology(Topology::Tree(AggTree::even(12, &[3], vec![0.05, 1.0])))
+    };
+    let mut a = Gd::plain(12, 32, 0.1);
+    let rec_s = mk().run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = Gd::plain(12, 32, 0.1);
+    let rec_p = mk().run_parallel(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_s, &rec_p, "tree serial vs hub-sharded pool");
+    assert_eq!(rec_s.edge_bits_up, rec_p.edge_bits_up);
+}
+
+/// Scaffold's two uplink messages route as independent channels, so hub
+/// re-compression keeps model and control partials separate and the
+/// algorithm still converges.
+#[test]
+fn tree_scaffold_channels_converge_under_hub_compression() {
+    let q = quadratic(77, 8, 24);
+    let x0 = vec![2.0f32; 24];
+    let opts = RunOptions { rounds: 300, eval_every: 300, ..Default::default() };
+    let mut alg = fedeff::algorithms::scaffold::Scaffold::new(3, 0.05);
+    let rec = Driver::new()
+        .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(18)))
+        .with_topology(Topology::Tree(AggTree::even(8, &[2], vec![0.05, 1.0])))
+        .run(&mut alg, &q, &x0, &opts)
+        .unwrap();
+    let first = rec.rounds.first().unwrap().loss;
+    let last = rec.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "{first} -> {last}");
+    // the hub edge really re-compressed: it carried bits, fewer than the
+    // dense leaf edge's
+    assert!(rec.edge_bits_up[1] > 0);
+    assert!(rec.edge_bits_up[1] < rec.edge_bits_up[0]);
+}
+
+/// A middle pass-through level relays exactly what it receives: with
+/// only the top edge compressed, edge 1 carries the same bits as the
+/// leaf edge and edge 2 carries the re-compressed partials.
+#[test]
+fn tree_pass_through_levels_relay_bits() {
+    let q = quadratic(78, 8, 32);
+    let x0 = vec![1.0f32; 32];
+    let opts = RunOptions { rounds: 10, eval_every: 10, ..Default::default() };
+    let mut alg = Gd::plain(8, 32, 0.1);
+    let rec = Driver::new()
+        .with_up_edge(2, Box::new(fedeff::compress::topk::TopK::new(16)))
+        .with_topology(Topology::Tree(AggTree::even(8, &[4, 2], vec![0.05, 0.2, 1.0])))
+        .run(&mut alg, &q, &x0, &opts)
+        .unwrap();
+    assert_eq!(rec.edge_bits_up.len(), 3);
+    assert_eq!(rec.edge_bits_up[1], rec.edge_bits_up[0], "pass-through relay");
+    assert!(rec.edge_bits_up[2] > 0);
+    // 2 hubs send Top-K(16) partials instead of 8 dense client messages
+    assert!(rec.edge_bits_up[2] < rec.edge_bits_up[1]);
+}
+
+/// Acceptance pin: a TOML-only config runs FedAvg over a 3-level tree
+/// with Top-K client→hub and QSGD hub→server, and the ledger books
+/// strictly fewer hub→server bits than the flat run of the same
+/// experiment books at its (only) server-facing edge.
+#[test]
+fn toml_tree_fedavg_topk_qsgd_reduces_root_bits() {
+    let toml = r#"
+[experiment]
+name = "tree-e2e"
+rounds = 8
+seed = 2
+
+[dataset]
+clients = 12
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+sampler = "full"
+
+[topology]
+levels = 3
+hubs = 3
+c1 = 0.05
+c2 = 1.0
+
+[links.up.l0]
+kind = "top-k"
+k = 6
+
+[links.up.l1]
+kind = "qsgd"
+k = 4
+"#;
+    let d = 64usize;
+    let q = quadratic(80, 12, d);
+    let opts = RunOptions { rounds: 8, eval_every: 8, seed: 2, ..Default::default() };
+
+    let spec = fedeff::config::Spec::parse(toml).unwrap();
+    let mut alg = build_algorithm(&spec.algorithm, &q).unwrap();
+    let driver = fedeff::config::build_driver(&spec, 12).unwrap();
+    let rec_tree = driver.run(alg.as_mut(), &q, &vec![1.0; d], &opts).unwrap();
+    assert!(rec_tree.last().unwrap().loss.is_finite());
+
+    // flat run of the same experiment: same Top-K uplink, no hierarchy
+    let leaf_as_link = "[links.up.l0]\nkind = \"top-k\"\nk = 6\n";
+    let leaf_as_compressor = "[compressor]\nup = \"top-k\"\nk = 6\n";
+    let flat_toml = toml
+        .replace("[topology]\nlevels = 3\nhubs = 3\nc1 = 0.05\nc2 = 1.0\n", "")
+        .replace(leaf_as_link, leaf_as_compressor)
+        .replace("[links.up.l1]\nkind = \"qsgd\"\nk = 4\n", "");
+    let spec_flat = fedeff::config::Spec::parse(&flat_toml).unwrap();
+    assert!(spec_flat.topology.is_none(), "flat spec still has a topology");
+    let mut alg_flat = build_algorithm(&spec_flat.algorithm, &q).unwrap();
+    let driver_flat = fedeff::config::build_driver(&spec_flat, 12).unwrap();
+    let rec_flat = driver_flat.run(alg_flat.as_mut(), &q, &vec![1.0; d], &opts).unwrap();
+
+    // flat: all 12 clients' Top-K messages hit the server every round
+    let flat_server_bits = 12 * sparse_bits(6, d) * 8;
+    assert_eq!(rec_tree.edge_bits_up.len(), 2);
+    assert_eq!(rec_tree.edge_bits_up[0], flat_server_bits, "leaf edge is the same Top-K");
+    assert!(
+        rec_tree.edge_bits_up[1] < flat_server_bits,
+        "hub→server must book strictly fewer bits: {} vs flat {}",
+        rec_tree.edge_bits_up[1],
+        flat_server_bits
+    );
+    // the flat run's per-node uplink is exactly the Top-K message size
+    // per round — the same leaf compression the tree run applied
+    assert_eq!(rec_flat.last().unwrap().bits_up, sparse_bits(6, d) * 8);
+}
+
+/// Every registry algorithm runs over a multi-level tree straight from
+/// TOML (tree-routing algorithms aggregate hub-by-hub; the rest see
+/// leaf compression plus the per-edge cost model).
+#[test]
+fn registry_every_name_runs_over_a_tree_from_toml() {
+    let q = quadratic(81, 6, 16);
+    for name in registry() {
+        let toml = format!(
+            "[experiment]\nname = \"reg-tree\"\n[dataset]\nclients = 6\n[algorithm]\nkind = \"{name}\"\nk = 2\n[topology]\nlevels = 3\nhubs = 2\n[links.up.l1]\nkind = \"top-k\"\nk = 8\n"
+        );
+        let spec = fedeff::config::Spec::parse(&toml).unwrap();
+        let mut alg = build_algorithm(&spec.algorithm, &q)
+            .unwrap_or_else(|e| panic!("{name} failed to build: {e}"));
+        let driver = fedeff::config::build_driver(&spec, 6)
+            .unwrap_or_else(|e| panic!("{name} failed to build driver: {e}"));
+        let opts = RunOptions { rounds: 2, eval_every: 1, ..Default::default() };
+        let rec = driver
+            .run(alg.as_mut(), &q, &vec![1.0; 16], &opts)
+            .unwrap_or_else(|e| panic!("{name} failed to run over a tree: {e}"));
+        assert!(rec.last().unwrap().loss.is_finite(), "{name}: non-finite loss over tree");
+    }
 }
