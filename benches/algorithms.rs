@@ -7,11 +7,17 @@
 //! overhead against a hand-rolled round loop identical to the pre-driver
 //! implementation (acceptance: <= 5% on this workload).
 //!
-//! The `gd_topk_largeD_*` family measures this PR's claim on a large-d
-//! compressed round (n=64, d=16384, Top-K k=128): `dense_spawn` is the
-//! pre-PR reference (dense O(d) decompress/aggregate + a thread spawn and
-//! a `vec![0.0; d]` per client, every round); `sparse_pool` is the O(k)
-//! sparse message path on the persistent worker pool (acceptance: >= 3x).
+//! The `gd_topk_largeD_*` family measures the sparse-path claim on a
+//! large-d compressed round (n=64, d=16384, Top-K k=128): `dense_spawn`
+//! is the pre-pool reference (dense O(d) decompress/aggregate + a thread
+//! spawn and a `vec![0.0; d]` per client, every round); `sparse_pool` is
+//! the O(k) sparse message path on the persistent worker pool
+//! (acceptance: >= 3x).
+//!
+//! The `fedavg_masked_{0,50,90}` family measures masked federated
+//! training (SymWanda masks enforced on the wire): the JSON rows carry
+//! the enforced support (`nnz`) and the per-node uplink bits booked per
+//! round (`bits_up_per_round`) next to the runtimes.
 
 #[path = "harness.rs"]
 mod harness;
@@ -265,6 +271,47 @@ fn main() {
             b.run_case_bits("gd_topk_hier_tree2_pool_3rounds_n256_d16384", rounds, n, d, rb_t2, || {
                 let rec = drv2.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
                 black_box(rec.unwrap());
+            });
+        }
+    }
+
+    // ---- masked federated training: FedAvg + Top-K at 0/50/90% masks --
+    // Same workload (n=32, d=4096, Top-K(64) uplink) under SymWanda masks
+    // at 0%, 50% and 90% sparsity. All three rows run the full masked
+    // machinery — the 0% row is a *full-support mask*, not a dense run:
+    // it prices the mask path itself (gather/scatter at nnz = d) and its
+    // wire cost is the unmasked baseline's. The nnz column is the
+    // enforced support; bits_up_per_round is the per-node uplink booked
+    // per round (support-relative index widths + support-sized payloads),
+    // measured from a 1-round probe of the same driver.
+    {
+        use fedeff::algorithms::fedavg::FedAvg;
+        use fedeff::pruning::{Method, Scope};
+        use fedeff::sparsity::MaskSpec;
+
+        let (n, d, k, rounds) = (32usize, 4096usize, 64usize, 5usize);
+        let mut rngm = fedeff::rng(13);
+        let big = QuadraticOracle::random(n, d, 0.5, 3.0, 1.0, &mut rngm);
+        let bx0 = vec![0.5f32; d];
+        let bopts = RunOptions { rounds, eval_every: 1000, ..Default::default() };
+        let probe_opts = RunOptions { rounds: 1, eval_every: 1000, ..Default::default() };
+        for (tag, sparsity) in [("0", 0.0f32), ("50", 0.5), ("90", 0.9)] {
+            let drv = Driver::new().with_up(Box::new(TopK::new(k))).with_mask(MaskSpec {
+                method: Method::SymWanda { alpha: 0.5 },
+                scope: Scope::PerMatrix,
+                sparsity,
+                ..MaskSpec::default()
+            });
+            // probe: enforced support + per-round per-node uplink bits
+            let (nnz, bits_round) = {
+                let mut alg = FedAvg::new(2, 0.05);
+                let rec = drv.run(&mut alg, &big, &bx0, &probe_opts).unwrap();
+                (rec.mask_nnz.unwrap_or(d as u64) as usize, rec.last().unwrap().bits_up)
+            };
+            let mut alg = FedAvg::new(2, 0.05);
+            let name = format!("fedavg_masked_{tag}_topk{k}_5rounds_n32_d4096");
+            b.run_case_masked(&name, rounds, n, d, nnz, bits_round, || {
+                black_box(drv.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
             });
         }
     }

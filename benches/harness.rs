@@ -29,6 +29,12 @@ pub struct Entry {
     /// hub→server column of the hierarchical-aggregation family; 0 when
     /// not applicable).
     pub root_bits: u64,
+    /// Mask support size of a masked-training case (0 = not a masked
+    /// case; a full-support mask reports its dimension, not 0).
+    pub nnz: usize,
+    /// Per-node uplink bits booked per round (the masked-training
+    /// family's wire-saving column; 0 when not measured).
+    pub bits_up_per_round: u64,
 }
 
 pub struct Bench {
@@ -69,6 +75,39 @@ impl Bench {
         n: usize,
         d: usize,
         root_bits: u64,
+        f: F,
+    ) {
+        self.run_case_full(name, rounds, n, d, root_bits, 0, 0, f);
+    }
+
+    /// [`Bench::run_case`] with the masked-training columns: the mask
+    /// support size and the per-node uplink bits booked per round.
+    #[allow(dead_code)]
+    pub fn run_case_masked<F: FnMut()>(
+        &self,
+        name: &str,
+        rounds: usize,
+        n: usize,
+        d: usize,
+        nnz: usize,
+        bits_up_per_round: u64,
+        f: F,
+    ) {
+        self.run_case_full(name, rounds, n, d, 0, nnz, bits_up_per_round, f);
+    }
+
+    /// The full recording surface behind the `run_case_*` fronts.
+    #[allow(dead_code)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_case_full<F: FnMut()>(
+        &self,
+        name: &str,
+        rounds: usize,
+        n: usize,
+        d: usize,
+        root_bits: u64,
+        nnz: usize,
+        bits_up_per_round: u64,
         mut f: F,
     ) {
         for _ in 0..self.warmup {
@@ -96,6 +135,8 @@ impl Bench {
             n,
             d,
             root_bits,
+            nnz,
+            bits_up_per_round,
         });
     }
 
@@ -110,8 +151,8 @@ impl Bench {
         for (i, e) in results.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}}}",
-                e.name, e.ns_per_iter, e.rounds, e.n, e.d, e.root_bits
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}}}",
+                e.name, e.ns_per_iter, e.rounds, e.n, e.d, e.root_bits, e.nnz, e.bits_up_per_round
             );
             s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
         }

@@ -1,12 +1,20 @@
-//! Post-training pruning of the e2e-trained transformer (Ch. 6 pipeline).
+//! Post-training pruning of the e2e-trained transformer (Ch. 6
+//! pipeline), driven through the first-class mask subsystem.
 //!
 //! Loads the model saved by `train_transformer`, collects Wanda/RIA
-//! calibration activations through the AOT `lm_calib` artifact, prunes
-//! with every method of the SymWanda family at several sparsities,
-//! applies R²-DSnoT training-free fine-tuning, and reports perplexities.
+//! calibration activations through the AOT `lm_calib` artifact, builds
+//! per-layer keep-masks (`fedeff::pruning::layer_masks` — the same
+//! `sparsity::Mask` objects the coordinator enforces during masked
+//! federated training), applies them, runs R²-DSnoT training-free
+//! fine-tuning, and reports perplexities plus per-layer mask densities.
+//!
+//! Method and scope are declarable from the CLI with the same grammar
+//! the `[sparsity]` TOML section uses:
 //!
 //! ```bash
-//! cargo run --release --example prune_llm -- [cfg] [sparsity]
+//! cargo run --release --example prune_llm -- [cfg] [sparsity] [method] [scope]
+//! # e.g.: ... -- lm_small 0.5 "symwanda(0.5)" per-row
+//! #       ... -- lm_small 0.5 ria 2:4
 //! ```
 
 use std::rc::Rc;
@@ -16,13 +24,26 @@ use fedeff::data::corpus::fed_token_dataset;
 use fedeff::metrics::Table;
 use fedeff::oracle::hlo::HloLm;
 use fedeff::pruning::dsnot::{finetune_model, DsnotConfig};
-use fedeff::pruning::{prune_model, Method, Scope};
+use fedeff::pruning::{apply_layer_masks, layer_masks, Method};
 use fedeff::runtime::Runtime;
+use fedeff::sparsity::{parse_method, parse_scope};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let cfg = args.get(1).map(|s| s.as_str()).unwrap_or("lm_small").to_string();
     let sparsity: f32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    // optional single method + scope from the CLI (the [sparsity] grammar);
+    // without a method argument the whole SymWanda family is swept. The
+    // sweep spells out every parameter inline so a CLI run of the same
+    // name scores identically to its sweep row.
+    let methods: Vec<(String, Method)> = match args.get(3) {
+        Some(name) => vec![(name.clone(), parse_method(name, None, None, None)?)],
+        None => ["magnitude", "wanda", "ria(1.0)", "symwanda(0.5)"]
+            .iter()
+            .map(|&n| Ok((n.to_string(), parse_method(n, None, Some(0.5), None)?)))
+            .collect::<Result<_>>()?,
+    };
+    let scope = parse_scope(args.get(4).map(|s| s.as_str()).unwrap_or("per-row"))?;
 
     let rt = Rc::new(Runtime::from_default_manifest()?);
     let prof = rt.manifest().lm_configs[&cfg].clone();
@@ -52,24 +73,40 @@ fn main() -> Result<()> {
     let dense_ppl = oracle.eval_perplexity(&theta)?;
 
     let mut table = Table::new(
-        format!("prune_llm: {cfg} at {:.0}% sparsity (dense ppl {dense_ppl:.3})", sparsity * 100.0),
-        &["method", "ppl", "ppl + R2-DSnoT"],
+        format!(
+            "prune_llm: {cfg} at {:.0}% sparsity, scope {scope:?} (dense ppl {dense_ppl:.3})",
+            sparsity * 100.0
+        ),
+        &["method", "kept", "ppl", "ppl + R2-DSnoT"],
     );
-    for (name, m) in [
-        ("magnitude", Method::Magnitude),
-        ("wanda", Method::Wanda),
-        ("RIA", Method::Ria { alpha: 1.0, p: 0.5 }),
-        ("symwanda a=0.5", Method::SymWanda { alpha: 0.5 }),
-    ] {
+    for (name, m) in methods {
+        // first-class masks: score + select per layer, then apply — the
+        // same Mask objects a masked federated run would enforce
+        let masks = layer_masks(&layout, &calib_layout, &theta, &calib, m, sparsity, scope);
         let mut th = theta.clone();
-        let (zeroed, total) =
-            prune_model(&layout, &calib_layout, &mut th, &calib, m, sparsity, Scope::PerRow);
+        let (zeroed, total) = apply_layer_masks(&layout, &mut th, &masks);
+        let kept: usize = masks.iter().map(|(_, mask)| mask.nnz()).sum();
+        let prunable: usize = masks.iter().map(|(_, mask)| mask.dim()).sum();
         let ppl = oracle.eval_perplexity(&th)?;
         let mut th_ft = th.clone();
         finetune_model(&layout, &calib_layout, &mut th_ft, &theta, &calib, &DsnotConfig::default());
         let ppl_ft = oracle.eval_perplexity(&th_ft)?;
-        println!("  {name}: zeroed {zeroed}/{total} prunable params");
-        table.row(vec![name.into(), format!("{ppl:.3}"), format!("{ppl_ft:.3}")]);
+        println!("  {name}: zeroed {zeroed}/{total} prunable params across {} layers", masks.len());
+        for (ei, mask) in masks.iter().take(3) {
+            println!(
+                "    {}: {}/{} kept ({:.1}% dense)",
+                layout[*ei].name,
+                mask.nnz(),
+                mask.dim(),
+                100.0 * mask.density()
+            );
+        }
+        table.row(vec![
+            name,
+            format!("{:.1}%", 100.0 * kept as f64 / prunable.max(1) as f64),
+            format!("{ppl:.3}"),
+            format!("{ppl_ft:.3}"),
+        ]);
     }
     println!("{}", table.render());
     table.write_csv("results", "prune_llm")?;

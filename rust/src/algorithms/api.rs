@@ -49,6 +49,24 @@
 //! its own partial buffers — Scaffold's model/control pair routes as
 //! two channels).
 //!
+//! Training-time sparsity: when the driver owns a [`crate::sparsity`]
+//! mask, the link helpers above become *mask-aware*. A masked uplink
+//! ([`RoundCtx::up_compress_add`], [`RoundCtx::uplink_delta`]) restricts
+//! the payload to the sender's mask support before compression — the
+//! compressor sees the compacted `nnz`-length vector, so Top-K / Rand-K
+//! select within the support and sparse-message index widths shrink to
+//! `ceil(log2 nnz)` — and aggregation scatters back through the cached
+//! support (O(nnz), off-support coordinates are never touched). Masked
+//! dense payloads cost `32 * nnz` bits (both ends know the mask).
+//! Downlink broadcasts are masked by the *global* mask only
+//! ([`RoundCtx::down_payload_bits`]); FedP3-style personalized runs keep
+//! the broadcast dense — no client uplinks more than its own support,
+//! which is the privacy contract. Under an executed tree, masked leaf
+//! messages land in hub partials as usual and node re-compressions
+//! flush within the global support. The masked-sparse and masked-dense
+//! reference paths consume identical RNG draws and book identical bits,
+//! exactly like the unmasked pair.
+//!
 //! Cost accounting: [`RoundCtx::set_local_rounds`] declares how many local
 //! communication rounds the global round used (SPPM-AS "cohort squeeze");
 //! [`RoundCtx::no_comm`] marks a round with no communication at all
@@ -77,6 +95,7 @@ use crate::compress::{Compressor, SparseVec};
 use crate::coordinator::hierarchy::AggTree;
 use crate::oracle::Oracle;
 use crate::sampling::CohortSampler;
+use crate::sparsity::{masked_compress_add_into, MaskSet};
 use crate::Rng;
 
 /// Bits of a dense f32 message in dimension `d`.
@@ -211,6 +230,17 @@ impl TreeScratch {
     }
 }
 
+/// The masked-link view the driver threads into a [`RoundCtx`] when a
+/// [`crate::sparsity`] mask is active: the run's resolved masks plus the
+/// reusable gather/compress scratch of the masked message path (owned by
+/// the driver's `MaskState` so masked rounds allocate nothing).
+pub(crate) struct MaskLinks<'a> {
+    pub set: &'a MaskSet,
+    pub gather: &'a mut Vec<f32>,
+    pub cbuf: &'a mut Vec<f32>,
+    pub sbuf: &'a mut SparseVec,
+}
+
 /// The tree-execution view the driver threads into a [`RoundCtx`]:
 /// the topology, the per-edge-class uplink compressors (index 0 = leaf
 /// edge, owned by the ctx's regular `up` slot) and the run's reduce
@@ -274,10 +304,14 @@ fn compress_add_into(
 /// its own deterministic stream and cascade it one hop up (into the
 /// next compressed ancestor's partial, or `acc` at the root). Books the
 /// flush and any pass-through relays above it into the per-edge ledger;
-/// returns the flushed message's bits.
+/// returns the flushed message's bits. Under a *global* mask the partial
+/// lives in the support, so the flush compresses the compacted payload
+/// (personalized masks leave node re-compression unmasked — hub partials
+/// mix different supports).
 #[allow(clippy::too_many_arguments)]
 fn flush_tree_node(
     tl: &mut TreeLinks<'_>,
+    mask: Option<&mut MaskLinks<'_>>,
     sparse: bool,
     seed: u64,
     round: usize,
@@ -307,16 +341,34 @@ fn flush_tree_node(
         Some((dl, dn)) => &mut hi[dl - 1 - lvl][ch][dn * d..(dn + 1) * d],
         None => acc,
     };
-    let bits = compress_add_into(
-        Some(comp),
-        sparse,
-        src,
-        1.0,
-        dst,
-        &mut scratch.sbuf,
-        &mut scratch.cbuf,
-        &mut rng,
-    );
+    let global = match mask {
+        Some(ml) => ml.set.global().map(|m| (m, ml)),
+        None => None,
+    };
+    let bits = match global {
+        Some((m, ml)) => masked_compress_add_into(
+            m,
+            Some(comp),
+            sparse,
+            src,
+            1.0,
+            dst,
+            ml.gather,
+            ml.cbuf,
+            &mut scratch.sbuf,
+            &mut rng,
+        ),
+        None => compress_add_into(
+            Some(comp),
+            sparse,
+            src,
+            1.0,
+            dst,
+            &mut scratch.sbuf,
+            &mut scratch.cbuf,
+            &mut rng,
+        ),
+    };
     src.fill(0.0);
     scratch.edge_bits[lvl] += bits;
     // pass-through relays between this flush and its destination edge
@@ -352,6 +404,9 @@ pub struct RoundCtx<'a> {
     /// Executed multi-level topology, when the driver's topology is an
     /// [`AggTree`]; `None` is the flat reduce.
     pub(crate) tree: Option<TreeLinks<'a>>,
+    /// Training-time sparsity masks, when the driver owns a
+    /// [`crate::sparsity::MaskSpec`]; `None` is the dense message path.
+    pub(crate) mask: Option<MaskLinks<'a>>,
     pub(crate) link_rng: Rng,
     pub(crate) up_bits: u64,
     pub(crate) up_nodes: u64,
@@ -377,6 +432,7 @@ impl<'a> RoundCtx<'a> {
         down: Option<&'a dyn Compressor>,
         sparse: bool,
         tree: Option<TreeLinks<'a>>,
+        mask: Option<MaskLinks<'a>>,
     ) -> Self {
         // deterministic per-round stream for the link compressors; never
         // touches the main rng (bit-for-bit equivalence with the
@@ -392,6 +448,7 @@ impl<'a> RoundCtx<'a> {
             down,
             sparse,
             tree,
+            mask,
             link_rng,
             up_bits: 0,
             up_nodes: 0,
@@ -418,6 +475,26 @@ impl<'a> RoundCtx<'a> {
     /// that own their compressor — EF-BV — honour this flag themselves.)
     pub fn sparse_enabled(&self) -> bool {
         self.sparse
+    }
+
+    /// Is a training-time sparsity mask active on the message path?
+    /// Algorithms that switch between a raw-model and a delta uplink
+    /// (FedAvg/FedProx/Scaffold) must take the delta path when this
+    /// holds, so masked messages carry anchor-relative deltas restricted
+    /// to the support.
+    pub fn masked(&self) -> bool {
+        self.mask.is_some()
+    }
+
+    /// On-wire bits of one dense length-`d` downlink payload: `32 * nnz`
+    /// under a *global* mask (both ends know the mask, so only support
+    /// values travel), `32 * d` otherwise — including personalized-mask
+    /// runs, whose broadcast model stays dense.
+    pub fn down_payload_bits(&self, d: usize) -> u64 {
+        match self.mask.as_ref().and_then(|ml| ml.set.global()) {
+            Some(m) => 32 * m.nnz() as u64,
+            None => dense_bits(d),
+        }
     }
 
     /// Is a real multi-level reduce active — an executed tree with at
@@ -483,7 +560,23 @@ impl<'a> RoundCtx<'a> {
             return self.tree_up_add(client, x, scale, acc, sbuf, cbuf);
         }
         let up = self.up;
-        compress_add_into(up, self.sparse, x, scale, acc, sbuf, cbuf, &mut self.link_rng)
+        match self.mask.as_mut() {
+            Some(ml) => masked_compress_add_into(
+                ml.set.mask_for(client),
+                up,
+                self.sparse,
+                x,
+                scale,
+                acc,
+                ml.gather,
+                ml.cbuf,
+                sbuf,
+                &mut self.link_rng,
+            ),
+            None => {
+                compress_add_into(up, self.sparse, x, scale, acc, sbuf, cbuf, &mut self.link_rng)
+            }
+        }
     }
 
     /// The tree-aware body of [`RoundCtx::up_compress_add`].
@@ -523,7 +616,30 @@ impl<'a> RoundCtx<'a> {
                 None => &mut *acc,
             };
             let up = self.up;
-            compress_add_into(up, self.sparse, x, scale, tgt, sbuf, cbuf, &mut self.link_rng)
+            match self.mask.as_mut() {
+                Some(ml) => masked_compress_add_into(
+                    ml.set.mask_for(client),
+                    up,
+                    self.sparse,
+                    x,
+                    scale,
+                    tgt,
+                    ml.gather,
+                    ml.cbuf,
+                    sbuf,
+                    &mut self.link_rng,
+                ),
+                None => compress_add_into(
+                    up,
+                    self.sparse,
+                    x,
+                    scale,
+                    tgt,
+                    sbuf,
+                    cbuf,
+                    &mut self.link_rng,
+                ),
+            }
         };
 
         // 2. cascade: every compressed ancestor counts this leaf down;
@@ -539,7 +655,8 @@ impl<'a> RoundCtx<'a> {
             *rem -= 1;
             if *rem == 0 {
                 let (sp, sd, rd) = (self.sparse, self.seed, self.round);
-                let bits = flush_tree_node(&mut tl, sp, sd, rd, lvl, node, ch, acc);
+                let bits =
+                    flush_tree_node(&mut tl, self.mask.as_mut(), sp, sd, rd, lvl, node, ch, acc);
                 // a flushing aggregator is a sender like any other in
                 // the per-node average
                 self.up_bits += bits;
@@ -550,7 +667,9 @@ impl<'a> RoundCtx<'a> {
         leaf_bits
     }
 
-    /// Downlink counterpart of [`RoundCtx::up_compress_add`].
+    /// Downlink counterpart of [`RoundCtx::up_compress_add`]. Masked by
+    /// the *global* mask when one is active (a broadcast is one payload;
+    /// personalized runs broadcast dense).
     pub fn down_compress_add(
         &mut self,
         x: &[f32],
@@ -559,6 +678,24 @@ impl<'a> RoundCtx<'a> {
         sbuf: &mut SparseVec,
         cbuf: &mut [f32],
     ) -> u64 {
+        let down = self.down;
+        let sparse = self.sparse;
+        if let Some(ml) = self.mask.as_mut() {
+            if let Some(m) = ml.set.global() {
+                return masked_compress_add_into(
+                    m,
+                    down,
+                    sparse,
+                    x,
+                    scale,
+                    acc,
+                    ml.gather,
+                    ml.cbuf,
+                    sbuf,
+                    &mut self.link_rng,
+                );
+            }
+        }
         if let Some(bits) = self.down_compress_sparse(x, sbuf) {
             sbuf.add_into(scale, acc);
             bits
@@ -595,19 +732,70 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// FedCOM-style model uplink: when an up-compressor is configured,
-    /// send `local` as a compressed delta against `anchor` (a model both
-    /// sides know), write the server-received model into `recv` and
-    /// return `true`; on the dense path just book dense bits and return
-    /// `false` — the received model is `local` itself, bit-exact. Either
-    /// way one sender's payload is booked.
+    /// [`RoundCtx::down_compress`], mask-aware: under a *global* mask
+    /// the payload is the support restriction of `x` (compressed
+    /// compacted; `out` receives the decompressed value on the support,
+    /// zeros elsewhere) and the returned bits are support-sized. Without
+    /// a global mask this is exactly [`RoundCtx::down_compress`].
+    pub fn down_compress_payload(&mut self, x: &[f32], out: &mut [f32]) -> u64 {
+        let down = self.down;
+        let sparse = self.sparse;
+        if let Some(ml) = self.mask.as_mut() {
+            if let Some(m) = ml.set.global() {
+                out.fill(0.0);
+                return masked_compress_add_into(
+                    m,
+                    down,
+                    sparse,
+                    x,
+                    1.0,
+                    out,
+                    ml.gather,
+                    ml.cbuf,
+                    ml.sbuf,
+                    &mut self.link_rng,
+                );
+            }
+        }
+        self.down_compress(x, out)
+    }
+
+    /// FedCOM-style model uplink for `client`: when an up-compressor is
+    /// configured or a mask is active, send `local` as a compressed
+    /// delta against `anchor` (a model both sides know) restricted to
+    /// the client's mask support, write the server-received model into
+    /// `recv` and return `true`; on the dense unmasked path just book
+    /// dense bits and return `false` — the received model is `local`
+    /// itself, bit-exact. Either way one sender's payload is booked.
     pub fn uplink_delta(
         &mut self,
+        client: usize,
         local: &[f32],
         anchor: &[f32],
         delta: &mut [f32],
         recv: &mut [f32],
     ) -> bool {
+        let up = self.up;
+        let sparse = self.sparse;
+        if let Some(ml) = self.mask.as_mut() {
+            crate::vecmath::sub(local, anchor, delta);
+            recv.fill(0.0);
+            let bits = masked_compress_add_into(
+                ml.set.mask_for(client),
+                up,
+                sparse,
+                delta,
+                1.0,
+                recv,
+                ml.gather,
+                ml.cbuf,
+                ml.sbuf,
+                &mut self.link_rng,
+            );
+            self.charge_up(bits);
+            crate::vecmath::axpy(1.0, anchor, recv);
+            return true;
+        }
         match self.up {
             Some(c) => {
                 crate::vecmath::sub(local, anchor, delta);
@@ -623,9 +811,10 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// FedCOM-style model broadcast: with a down-compressor, send
-    /// `target` as a compressed delta against the clients' current model
-    /// `x` and apply the received delta to `x` in place; dense otherwise
+    /// FedCOM-style model broadcast: with a down-compressor (or a global
+    /// mask), send `target` as a compressed delta against the clients'
+    /// current model `x` — restricted to the global support when masked —
+    /// and apply the received delta to `x` in place; dense otherwise
     /// (straight copy). Books the broadcast either way.
     pub fn broadcast_delta(
         &mut self,
@@ -634,6 +823,27 @@ impl<'a> RoundCtx<'a> {
         delta: &mut [f32],
         buf: &mut [f32],
     ) {
+        let down = self.down;
+        let sparse = self.sparse;
+        if let Some(ml) = self.mask.as_mut() {
+            if let Some(m) = ml.set.global() {
+                crate::vecmath::sub(target, x, delta);
+                let bits = masked_compress_add_into(
+                    m,
+                    down,
+                    sparse,
+                    delta,
+                    1.0,
+                    x,
+                    ml.gather,
+                    ml.cbuf,
+                    ml.sbuf,
+                    &mut self.link_rng,
+                );
+                self.charge_down(bits);
+                return;
+            }
+        }
         match self.down {
             Some(c) => {
                 crate::vecmath::sub(target, x, delta);

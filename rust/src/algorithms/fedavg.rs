@@ -63,12 +63,13 @@ impl FedAvg {
 
 /// Shared FedCOM link plumbing for FedAvg/FedProx: uplink one client's
 /// local model (compressed delta against the anchor when an uplink
-/// compressor is set *or* a multi-level tree re-compresses partial
-/// aggregates — hub partials must carry anchor-relative deltas),
-/// accumulating the average into `next` (delta path: the average
-/// *delta*; dense: the average model). O(k) when the compressor has a
-/// sparse form; under an executed tree the message routes through the
-/// client's hub partial.
+/// compressor is set, a multi-level tree re-compresses partial
+/// aggregates — hub partials must carry anchor-relative deltas — *or* a
+/// sparsity mask is active, which restricts the delta to the client's
+/// support), accumulating the average into `next` (delta path: the
+/// average *delta*; dense: the average model). O(k) when the compressor
+/// has a sparse form, O(nnz) under a mask; under an executed tree the
+/// message routes through the client's hub partial.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fedcom_uplink(
     ctx: &mut RoundCtx<'_>,
@@ -81,7 +82,7 @@ pub(crate) fn fedcom_uplink(
     sbuf: &mut SparseVec,
     next: &mut [f32],
 ) {
-    if ctx.has_up() || ctx.tree_reduce() {
+    if ctx.has_up() || ctx.tree_reduce() || ctx.masked() {
         vm::sub(local, anchor, delta);
         let bits = ctx.up_compress_add(client, delta, 1.0 / cohort_size, next, sbuf, buf);
         ctx.charge_up(bits);
@@ -104,7 +105,7 @@ pub(crate) fn fedcom_server_finish(
     buf: &mut [f32],
     sbuf: &mut SparseVec,
 ) {
-    if ctx.has_up() || ctx.tree_reduce() {
+    if ctx.has_up() || ctx.tree_reduce() || ctx.masked() {
         vm::axpy(1.0, x, next);
     }
     fedcom_broadcast(ctx, next, x, delta, buf, sbuf);
@@ -113,7 +114,9 @@ pub(crate) fn fedcom_server_finish(
 
 /// Shared FedCOM broadcast for FedAvg/FedProx: move the fleet model `x`
 /// to `target` (compressed delta broadcast when a downlink compressor is
-/// set, dense copy otherwise), booking one receiver's payload.
+/// set, dense copy otherwise — booked support-sized under a global
+/// mask, whose broadcast never leaves the support), booking one
+/// receiver's payload.
 pub(crate) fn fedcom_broadcast(
     ctx: &mut RoundCtx<'_>,
     target: &[f32],
@@ -127,7 +130,7 @@ pub(crate) fn fedcom_broadcast(
         let bits = ctx.down_compress_add(delta, 1.0, x, sbuf, buf);
         ctx.charge_down(bits);
     } else {
-        ctx.charge_down(dense_bits(x.len()));
+        ctx.charge_down(ctx.down_payload_bits(x.len()));
         x.copy_from_slice(target);
     }
 }
@@ -201,10 +204,10 @@ impl FlAlgorithm for FedAvg {
             // delta when the link is compressed) went out, nobody reported
             if ctx.has_down() {
                 self.delta.fill(0.0);
-                let bits = ctx.down_compress(&self.delta, &mut self.buf);
+                let bits = ctx.down_compress_payload(&self.delta, &mut self.buf);
                 ctx.charge_down(bits);
             } else {
-                ctx.charge_down(dense_bits(self.x.len()));
+                ctx.charge_down(ctx.down_payload_bits(self.x.len()));
             }
             return Ok(());
         }

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::api::{ClientMsg, FlAlgorithm, RoundCtx};
 use super::RunOptions;
 use crate::compress::SparseVec;
 use crate::oracle::Oracle;
@@ -211,7 +211,9 @@ impl FlAlgorithm for Gd {
     ) -> Result<()> {
         vm::axpy(-self.flix.gamma, &self.grad, &mut self.x);
         self.grad.fill(0.0);
-        ctx.charge_down(dense_bits(self.x.len()));
+        // dense model broadcast; support-sized under a global mask (the
+        // masked gradient aggregate keeps x in the support subspace)
+        ctx.charge_down(ctx.down_payload_bits(self.x.len()));
         Ok(())
     }
 

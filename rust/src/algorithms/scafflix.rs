@@ -179,8 +179,10 @@ impl FlAlgorithm for Scafflix {
             for &jc in &participants {
                 let w = self.gamma_srv * self.alphas[jc] * self.alphas[jc] / self.gammas[jc] / norm;
                 // uplink x^_j, FedCOM-delta-compressed against the anchor
-                // when an up-compressor is configured
-                if ctx.uplink_delta(&self.hat[jc], &self.x_srv, &mut self.delta, &mut self.buf) {
+                // when an up-compressor is configured (and restricted to
+                // jc's support when a sparsity mask is active)
+                if ctx.uplink_delta(jc, &self.hat[jc], &self.x_srv, &mut self.delta, &mut self.buf)
+                {
                     vm::axpy(w, &self.buf, &mut self.xbar);
                 } else {
                     vm::axpy(w, &self.hat[jc], &mut self.xbar);

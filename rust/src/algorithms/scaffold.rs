@@ -113,11 +113,12 @@ impl FlAlgorithm for Scaffold {
         for j in 0..d {
             self.cin[j] = self.c_i[client][j] - self.c[j] + (self.x[j] - self.yi[j]) * coef;
         }
-        if ctx.has_up() || ctx.tree_reduce() {
+        if ctx.has_up() || ctx.tree_reduce() || ctx.masked() {
             // compress the two uplink deltas (model, control) individually;
-            // each aggregates O(k)-sparse when the compressor supports it.
-            // Under an executed tree the two messages route as separate
-            // channels, so hubs keep distinct model/control partials.
+            // each aggregates O(k)-sparse when the compressor supports it
+            // (O(nnz) support-restricted under a mask). Under an executed
+            // tree the two messages route as separate channels, so hubs
+            // keep distinct model/control partials.
             let (sbuf, buf) = (&mut self.sbuf, &mut self.buf);
             vm::sub(&self.yi, &self.x, &mut self.ddx);
             let mut bits = ctx.up_compress_add(client, &self.ddx, 1.0 / m, &mut self.dx, sbuf, buf);
@@ -148,7 +149,8 @@ impl FlAlgorithm for Scaffold {
         vm::axpy(m / n, &self.dc, &mut self.c);
         self.dx.fill(0.0);
         self.dc.fill(0.0);
-        ctx.charge_down(2 * dense_bits(self.x.len()));
+        // the (x, c) broadcast pair; support-sized under a global mask
+        ctx.charge_down(2 * ctx.down_payload_bits(self.x.len()));
         Ok(())
     }
 
@@ -252,10 +254,10 @@ impl FlAlgorithm for FedProx {
             // still goes out
             if ctx.has_down() {
                 self.delta.fill(0.0);
-                let bits = ctx.down_compress(&self.delta, &mut self.buf);
+                let bits = ctx.down_compress_payload(&self.delta, &mut self.buf);
                 ctx.charge_down(bits);
             } else {
-                ctx.charge_down(dense_bits(self.x.len()));
+                ctx.charge_down(ctx.down_payload_bits(self.x.len()));
             }
             return Ok(());
         }

@@ -27,6 +27,15 @@
 //! `lambda* = min((1-eta)/((1-eta)^2 + omega), 1)` and
 //! `nu* = min((1-eta)/((1-eta)^2 + omega_ran), 1)` (Prop. 2.2.2 and
 //! Sect. 2.2.3), which in turn set the EF-BV stepsize.
+//!
+//! Compressors compose with the training-time sparsity masks of
+//! [`crate::sparsity`] without knowing about them: a masked link
+//! gathers the payload onto the mask support and hands the compressor
+//! the compacted `nnz`-length vector, so Top-K / Rand-K select *within*
+//! the support, [`sparse_bits`] index widths shrink to
+//! `ceil(log2 nnz)`, and the resulting [`SparseVec`] message is
+//! remapped back to full model coordinates for the O(nnz) scatter
+//! (see [`crate::sparsity::masked_compress_add_into`]).
 
 pub mod comp;
 pub mod mix;

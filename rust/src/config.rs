@@ -76,6 +76,26 @@
 //! kind = "qsgd"
 //! k = 4                    # quantization levels for qsgd
 //! ```
+//!
+//! A `[sparsity]` section turns the run into **masked federated
+//! training** ([`crate::sparsity`]): the driver builds keep-masks from
+//! the pruning scorers at init, restricts every link payload to the
+//! mask support (compressors select *within* the support), books
+//! support-sized bits plus the mask's own transmission, and optionally
+//! re-prunes from the current server model every `refresh` rounds.
+//! Applies to `gd | fedavg | scaffold | fedprox | scafflix`; composes
+//! with `[compressor]` and any `[topology]`.
+//!
+//! ```toml
+//! [sparsity]
+//! method = "symwanda"      # magnitude | wanda | symwanda(alpha) | ria | stochria
+//! alpha = 0.5              # symwanda / ria blend (or inline: "symwanda(0.5)")
+//! scope = "per-matrix"     # per-row | per-matrix | "n:m" (e.g. "2:4")
+//! sparsity = 0.5           # pruned fraction, in [0, 1)
+//! rows = 1                 # score the flat model as `rows` x (d/rows)
+//! refresh = 50             # re-prune every 50 rounds (omit: fixed mask)
+//! personalized = false     # true: FedP3-style per-client masks
+//! ```
 
 use std::collections::HashMap;
 
@@ -210,6 +230,30 @@ impl Default for LinkSpec {
     }
 }
 
+/// `[sparsity]`: training-time mask configuration, resolved into a
+/// [`crate::sparsity::MaskSpec`] by [`build_mask_spec`].
+#[derive(Debug, Clone)]
+pub struct SparsitySpec {
+    /// Pruning method name ([`crate::sparsity::parse_method`] grammar).
+    pub method: String,
+    /// Selection scope ([`crate::sparsity::parse_scope`] grammar).
+    pub scope: String,
+    /// Pruned fraction in [0, 1).
+    pub sparsity: f32,
+    /// SymWanda/RIA blend weight.
+    pub alpha: Option<f32>,
+    /// RIA activation exponent.
+    pub p: Option<f32>,
+    /// stochRIA subsample ratio.
+    pub ratio: Option<f32>,
+    /// Matrix interpretation for scoring: `rows` x (d / rows).
+    pub rows: usize,
+    /// Re-prune cadence in rounds.
+    pub refresh: Option<usize>,
+    /// FedP3-style per-client masks.
+    pub personalized: bool,
+}
+
 /// `[topology]`: without `levels`, the classic 2-level cost annotation;
 /// with `levels`, an executed multi-level aggregation tree (see the
 /// module docs for the grammar).
@@ -234,6 +278,7 @@ pub struct Spec {
     pub algorithm: AlgorithmSpec,
     pub links: LinkSpec,
     pub topology: Option<TopologySpec>,
+    pub sparsity: Option<SparsitySpec>,
 }
 
 impl Spec {
@@ -317,7 +362,29 @@ impl Spec {
         } else {
             None
         };
-        Ok(Spec { experiment, dataset, algorithm, links, topology })
+        let sparsity = if t.sections.contains_key("sparsity") {
+            let personalized = match t.get("sparsity", "personalized") {
+                None | Some("false") => false,
+                Some("true") => true,
+                Some(other) => {
+                    bail!("[sparsity] personalized must be true or false, got {other:?}")
+                }
+            };
+            Some(SparsitySpec {
+                method: t.get("sparsity", "method").unwrap_or("magnitude").to_string(),
+                scope: t.get("sparsity", "scope").unwrap_or("per-matrix").to_string(),
+                sparsity: t.get_f32("sparsity", "sparsity").unwrap_or(0.5),
+                alpha: t.get_f32("sparsity", "alpha"),
+                p: t.get_f32("sparsity", "p"),
+                ratio: t.get_f32("sparsity", "ratio"),
+                rows: t.get_usize("sparsity", "rows").unwrap_or(1),
+                refresh: t.get_usize("sparsity", "refresh"),
+                personalized,
+            })
+        } else {
+            None
+        };
+        Ok(Spec { experiment, dataset, algorithm, links, topology, sparsity })
     }
 }
 
@@ -377,6 +444,31 @@ pub fn build_sampler(
             crate::sampling::contiguous_blocks(n, tau.max(1)),
         )),
         other => anyhow::bail!("unknown sampler {other}"),
+    })
+}
+
+/// Resolve a `[sparsity]` section into the driver's
+/// [`crate::sparsity::MaskSpec`], with clear errors on bad method /
+/// scope / parameter specs (dimension-dependent checks — `rows` must
+/// divide d — happen when the driver builds the masks).
+pub fn build_mask_spec(s: &SparsitySpec) -> Result<crate::sparsity::MaskSpec> {
+    let method = crate::sparsity::parse_method(&s.method, s.alpha, s.p, s.ratio)
+        .context("[sparsity] method")?;
+    let scope = crate::sparsity::parse_scope(&s.scope).context("[sparsity] scope")?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&s.sparsity),
+        "[sparsity] sparsity must be in [0, 1), got {}",
+        s.sparsity
+    );
+    anyhow::ensure!(s.rows >= 1, "[sparsity] rows must be >= 1");
+    anyhow::ensure!(s.refresh != Some(0), "[sparsity] refresh must be >= 1 round");
+    Ok(crate::sparsity::MaskSpec {
+        method,
+        scope,
+        sparsity: s.sparsity,
+        rows: s.rows,
+        refresh: s.refresh,
+        personalized: s.personalized,
     })
 }
 
@@ -461,11 +553,27 @@ fn build_tree(
 
 /// Assemble the coordinator [`Driver`] a spec asks for: cohort sampler
 /// (for the cohort-based algorithms, or whenever `[algorithm] sampler` is
-/// set), optional up/down link compressors, and the topology — a cost
+/// set), optional up/down link compressors, the topology — a cost
 /// annotation, or an executed multi-level tree with per-edge uplink
-/// compressors when `[topology] levels` is set.
+/// compressors when `[topology] levels` is set — and the training-time
+/// sparsity masks of a `[sparsity]` section.
 pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
     let a = &spec.algorithm;
+    let mask = match &spec.sparsity {
+        Some(s) => {
+            // masks ride the driver's link helpers; algorithms that own
+            // their aggregation (EF-BV family compressors, SPPM-AS dense
+            // prox iterates) never route through them — reject loudly
+            // instead of silently running dense
+            anyhow::ensure!(
+                matches!(a.kind.as_str(), "gd" | "fedavg" | "scaffold" | "fedprox" | "scafflix"),
+                "[sparsity] masks apply to gd | fedavg | scaffold | fedprox | scafflix, not {:?}",
+                a.kind
+            );
+            Some(build_mask_spec(s)?)
+        }
+        None => None,
+    };
     let needs_sampler = matches!(a.kind.as_str(), "fedavg" | "scaffold" | "fedprox" | "sppm");
     // gd degrades gracefully to minibatch GD under a cohort sampler, so it
     // may opt in; scafflix (which samples *communication* rounds via p and
@@ -511,7 +619,7 @@ pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
             (Topology::Flat, Vec::new())
         }
     };
-    Ok(Driver { sampler, up, down, topology, up_edges, ..Driver::default() })
+    Ok(Driver { sampler, up, down, topology, up_edges, mask, ..Driver::default() })
 }
 
 #[cfg(test)]
@@ -711,6 +819,79 @@ k = 4
         )
         .unwrap();
         assert!(build_driver(&deep, 8).is_err());
+    }
+
+    const SAMPLE_MASKED: &str = r#"
+[experiment]
+name = "masked"
+seed = 4
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+
+[compressor]
+up = "top-k"
+k = 4
+
+[sparsity]
+method = "symwanda"
+alpha = 0.5
+scope = "per-matrix"
+sparsity = 0.5
+refresh = 20
+"#;
+
+    #[test]
+    fn parses_and_builds_sparsity_section() {
+        let s = Spec::parse(SAMPLE_MASKED).unwrap();
+        let sp = s.sparsity.as_ref().unwrap();
+        assert_eq!(sp.method, "symwanda");
+        assert_eq!(sp.sparsity, 0.5);
+        assert_eq!(sp.refresh, Some(20));
+        assert!(!sp.personalized);
+        let drv = build_driver(&s, 8).unwrap();
+        let mask = drv.mask.as_ref().expect("driver mask spec");
+        assert_eq!(mask.method, crate::pruning::Method::SymWanda { alpha: 0.5 });
+        assert_eq!(mask.scope, crate::pruning::Scope::PerMatrix);
+        assert_eq!(mask.refresh, Some(20));
+    }
+
+    #[test]
+    fn sparsity_section_errors_are_loud() {
+        // unknown method
+        let bad = SAMPLE_MASKED.replace("method = \"symwanda\"", "method = \"snip\"");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        // structured pattern that keeps more than the block
+        let bad = SAMPLE_MASKED.replace("scope = \"per-matrix\"", "scope = \"4:2\"");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        // sparsity out of range
+        let bad = SAMPLE_MASKED.replace("sparsity = 0.5", "sparsity = 1.5");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        // refresh = 0
+        let bad = SAMPLE_MASKED.replace("refresh = 20", "refresh = 0");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        // personalized must be a real boolean, not silently false
+        let bad = format!("{SAMPLE_MASKED}personalized = maybe\n");
+        assert!(Spec::parse(&bad).is_err());
+        let ok = format!("{SAMPLE_MASKED}personalized = true\n");
+        assert!(Spec::parse(&ok).unwrap().sparsity.unwrap().personalized);
+        // algorithms that own their aggregation reject masks
+        let bad = SAMPLE_MASKED.replace("kind = \"fedavg\"", "kind = \"efbv\"");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        let bad = SAMPLE_MASKED.replace("kind = \"fedavg\"", "kind = \"sppm\"");
+        assert!(build_driver(&Spec::parse(&bad).unwrap(), 8).is_err());
+        // a valid structured N:M spec still builds
+        let ok = SAMPLE_MASKED.replace("scope = \"per-matrix\"", "scope = \"2:4\"");
+        let drv = build_driver(&Spec::parse(&ok).unwrap(), 8).unwrap();
+        assert_eq!(
+            drv.mask.as_ref().unwrap().scope,
+            crate::pruning::Scope::StructuredNm { n: 2, m: 4 }
+        );
     }
 
     #[test]

@@ -37,6 +37,20 @@
 //!   dispatch when supported (cohort-aware, so sampling wastes no work);
 //!   else per-client calls on the driver thread. All three visit clients
 //!   in the same (cohort) order, so the paths are loss-identical;
+//! * training-time sparsity under [`Driver::with_mask`]: the run's
+//!   masks are built at init by the [`crate::pruning`] scorers from the
+//!   initial model ([`crate::sparsity::MaskState`]) — one global mask,
+//!   or FedP3-style per-client masks — and optionally rebuilt from the
+//!   current server model every `refresh` rounds. A global mask is
+//!   applied to `x0`, so the server model lives in the support subspace
+//!   for the whole run; every masked link payload is support-restricted
+//!   before compression and aggregates O(nnz) (see the
+//!   [`crate::algorithms::api`] docs). The ledger books support-sized
+//!   payloads, plus the mask's own transmission — `dim` bits (one
+//!   bitset) per receiving client on the downlink, once before round 0
+//!   and again at every refresh (frozen coordinates keep their last
+//!   value after a refresh: re-pruning is a message-path event, the
+//!   driver never rewrites algorithm state);
 //! * [`RunRecord`] emission at every eval round plus a final eval.
 //!
 //! Steady-state rounds allocate nothing: the driver reserves its record,
@@ -48,12 +62,13 @@ use anyhow::Result;
 
 use super::hierarchy::{AggTree, Hierarchy};
 use super::{default_pool_size, CommLedger, WorkerPool};
-use crate::algorithms::api::{ClientMsg, FlAlgorithm, RoundCtx, TreeLinks, TreeScratch};
+use crate::algorithms::api::{ClientMsg, FlAlgorithm, MaskLinks, RoundCtx, TreeLinks, TreeScratch};
 use crate::algorithms::RunOptions;
 use crate::compress::Compressor;
 use crate::metrics::{RoundStat, RunRecord};
 use crate::oracle::Oracle;
 use crate::sampling::CohortSampler;
+use crate::sparsity::{MaskSpec, MaskState};
 
 /// Who talks to whom at what cost.
 #[derive(Debug, Clone, Default)]
@@ -114,6 +129,10 @@ pub struct Driver {
     /// Default `true`; `false` forces the dense reference path. The two
     /// produce bit-for-bit identical results.
     pub sparse_links: bool,
+    /// Training-time sparsity: build masks from this scorer spec at init
+    /// and enforce them on every link (see the module docs). `None` runs
+    /// dense.
+    pub mask: Option<MaskSpec>,
 }
 
 impl Default for Driver {
@@ -125,6 +144,7 @@ impl Default for Driver {
             topology: Topology::default(),
             up_edges: Vec::new(),
             sparse_links: true,
+            mask: None,
         }
     }
 }
@@ -168,6 +188,13 @@ impl Driver {
     /// Enable/disable the O(k) sparse message path (default: enabled).
     pub fn with_sparse_links(mut self, on: bool) -> Self {
         self.sparse_links = on;
+        self
+    }
+
+    /// Run masked: build training-time sparsity masks from `spec` at
+    /// init and enforce them on the message path.
+    pub fn with_mask(mut self, spec: MaskSpec) -> Self {
+        self.mask = Some(spec);
         self
     }
 
@@ -254,12 +281,34 @@ impl Driver {
                 alg.label()
             );
         }
+        // training-time sparsity: build the run's masks from the scorer
+        // spec before anything else (a global mask confines x0 — and with
+        // it the whole run's server model — to the support subspace)
+        let mut mask_state = match &self.mask {
+            Some(spec) => Some(MaskState::build(spec, oracle, x0, opts.seed)?),
+            None => None,
+        };
+        let x0_masked: Vec<f32>;
+        let x0 = match mask_state.as_ref().and_then(|ms| ms.set.global()) {
+            Some(m) => {
+                let mut v = x0.to_vec();
+                m.apply(&mut v);
+                x0_masked = v;
+                &x0_masked[..]
+            }
+            None => x0,
+        };
         alg.init(oracle, x0, opts)?;
         let mut rec = RunRecord::new(alg.label());
         let mut ledger = CommLedger::default();
         // pre-size the per-round structures: steady-state rounds must not
         // grow (and therefore not reallocate) anything
         ledger.history.reserve(opts.rounds);
+        if let Some(ms) = &mask_state {
+            // SoteriaFL-style mask accounting: every client receives its
+            // (bitset) mask before round 0, and again at every refresh
+            ledger.down(ms.set.mask_wire_bits());
+        }
         rec.rounds.reserve(opts.rounds / opts.eval_every.max(1) + 2);
         let mut rng = crate::rng(opts.seed);
         let mut cohort: Vec<usize> = Vec::with_capacity(n);
@@ -310,6 +359,18 @@ impl Driver {
                 record_eval(alg, oracle, t, &ledger, opts, &mut rec)?;
                 if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
                     cb(stat);
+                }
+            }
+            // training-time re-pruning: rebuild the masks from the current
+            // server model every `refresh` rounds and re-charge their
+            // transmission (scoring is server-side and free)
+            if let Some(ms) = mask_state.as_mut() {
+                if let Some(r) = ms.spec.refresh {
+                    if t > 0 && t % r == 0 {
+                        let xcur = alg.eval_point();
+                        ms.rebuild(oracle, &xcur, opts.seed, t / r)?;
+                        ledger.down(ms.set.mask_wire_bits());
+                    }
                 }
             }
             cohort.clear();
@@ -369,6 +430,15 @@ impl Driver {
                 }
                 _ => None,
             };
+            let mask_links = match mask_state.as_mut() {
+                Some(ms) => Some(MaskLinks {
+                    set: &ms.set,
+                    gather: &mut ms.gather,
+                    cbuf: &mut ms.cbuf,
+                    sbuf: &mut ms.sbuf,
+                }),
+                None => None,
+            };
             let mut ctx = RoundCtx::new(
                 t,
                 opts.seed,
@@ -379,6 +449,7 @@ impl Driver {
                 self.down.as_deref(),
                 self.sparse_links,
                 tree_links,
+                mask_links,
             );
 
             let shared = match alg.grad_point() {
@@ -441,6 +512,7 @@ impl Driver {
             cb(stat);
         }
         rec.edge_bits_up = ledger.up_edges.clone();
+        rec.mask_nnz = mask_state.as_ref().map(|ms| ms.set.avg_nnz());
         Ok(rec)
     }
 }

@@ -5,11 +5,14 @@
 //! [`crate::algorithms::api::FlAlgorithm`] trait); the coordinator owns
 //! everything around it: the round loop ([`driver::Driver`]), who talks
 //! to whom at what cost ([`hierarchy::Hierarchy`],
-//! [`hierarchy::AggTree`], [`driver::Topology`]), how bits are
-//! accounted ([`CommLedger`] — per-node averages on the classic
-//! counters, plus per-edge-class totals under an executed aggregation
-//! tree), and how a fleet of clients executes concurrently
-//! ([`WorkerPool`]).
+//! [`hierarchy::AggTree`], [`driver::Topology`]), *what subspace* they
+//! talk in (the per-run training-time sparsity masks of
+//! [`crate::sparsity`], built and refreshed by the driver and enforced
+//! on every link), how bits are accounted ([`CommLedger`] — per-node
+//! averages on the classic counters, plus per-edge-class totals under
+//! an executed aggregation tree and support-sized payloads plus a mask
+//! charge under masks), and how a fleet of clients executes
+//! concurrently ([`WorkerPool`]).
 //!
 //! Multi-level aggregation ([`driver::Topology::Tree`]): the driver
 //! groups each round's cohort by hub, internal tree nodes partially
@@ -64,6 +67,15 @@ pub struct CommLedger {
     /// algorithms that bypass tree routing (EF-BV, Scafflix, SPPM-AS —
     /// they aggregate their own way) those entries stay 0 even though
     /// their dense aggregates do reach the server.
+    ///
+    /// Mask-bit convention (training-time sparsity,
+    /// [`crate::sparsity`]): masked payloads book their *support-sized*
+    /// cost — `32 * nnz` bits for a dense payload, the compressor's
+    /// bits on the compacted `nnz`-length input otherwise (sparse
+    /// index widths shrink to `ceil(log2 nnz)`) — and the mask itself
+    /// is charged on the downlink as `dim` bits (one bitset) per
+    /// receiving client, once before round 0 and again at every
+    /// refresh. Mask scoring happens server-side and books nothing.
     pub up_edges: Vec<u64>,
     /// Per-round log: (round, bits_up, bits_down, cost).
     pub history: Vec<(usize, u64, u64, f64)>,

@@ -35,9 +35,21 @@
 //!   FedProx and SPPM-AS (Ch. 5) over a common [`oracle::Oracle`]
 //!   abstraction, all behind [`algorithms::api::FlAlgorithm`] with a
 //!   string-keyed [`algorithms::api::registry`] for config-driven dispatch.
-//! * [`pruning`] implements FedP3 (Ch. 4) and the post-training pruning
-//!   family: magnitude, Wanda, RIA, stochRIA, SymWanda, and the
-//!   training-free R²-DSnoT fine-tuner (Ch. 6).
+//! * [`pruning`] implements the pruning *scorers* — magnitude, Wanda,
+//!   RIA, stochRIA, SymWanda with per-row / per-matrix / structured N:M
+//!   selection (Ch. 6) — plus FedP3 (Ch. 4) and the training-free
+//!   R²-DSnoT fine-tuner. The scorers feed both post-training pruning
+//!   and the training-time mask subsystem below.
+//! * [`sparsity`] makes masks first-class: a [`sparsity::Mask`] (bitset
+//!   + cached support) built by the pruning scorers is owned per-run by
+//!   the driver — one global mask (FedComLoc-style sparse training) or
+//!   per-client personalized masks (FedP3-style) — and enforced on the
+//!   message path: masked payloads are restricted to the support before
+//!   compression, Top-K/Rand-K select *within* the support, masked
+//!   aggregation is O(nnz) through the same [`compress::SparseVec`]
+//!   scatter, and the ledger books support-sized payloads plus the
+//!   mask's own transmission (`[sparsity]` in TOML; composes with every
+//!   compressor and topology axis).
 //! * [`sampling`] implements arbitrary cohort sampling (full, nonuniform,
 //!   nice, block, stratified + k-means clustering), consumed by the driver
 //!   for every algorithm.
@@ -71,6 +83,7 @@ pub mod repro;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod sparsity;
 pub mod vecmath;
 
 pub use anyhow::Result;

@@ -7,7 +7,8 @@
 //!     is resolved by name through the registry and executed by the
 //!     coordinator `Driver` (so any spec may add `[compressor]` /
 //!     `[topology]` sections — including an executed multi-level
-//!     aggregation tree with per-edge `[links.up.l<i>]` compressors).
+//!     aggregation tree with per-edge `[links.up.l<i>]` compressors —
+//!     and a `[sparsity]` section for masked federated training).
 //!   * `list`              — list algorithms, experiments and artifacts.
 //!   * `serve [--clients N] [--rounds R] [--algorithm NAME]` — threaded
 //!     coordinator demo: the driver fans cohort gradient evaluation out
@@ -148,6 +149,14 @@ fn run_spec(path: &str) -> Result<()> {
         ex.rounds,
         outdir.display()
     );
+    if let Some(nnz) = rec.mask_nnz {
+        // masked run: report the enforced support (bits above already
+        // include the support-sized payloads and the mask charge)
+        println!(
+            "sparsity mask: {nnz}/{d} coordinates kept ({:.1}% sparse)",
+            100.0 * (1.0 - nnz as f64 / d as f64)
+        );
+    }
     if !rec.edge_bits_up.is_empty() {
         // executed aggregation tree: show the per-edge uplink ledger
         // (l0 = client->hub, last = hub->server)

@@ -38,11 +38,14 @@ pub struct RunRecord {
     /// senders on that edge; empty unless the run executed a
     /// multi-level [`crate::coordinator::hierarchy::AggTree`].
     pub edge_bits_up: Vec<u64>,
+    /// Support size of the run's training-time sparsity mask (average
+    /// over clients for personalized masks); `None` for dense runs.
+    pub mask_nnz: Option<u64>,
 }
 
 impl RunRecord {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { label: label.into(), rounds: Vec::new(), edge_bits_up: Vec::new() }
+        Self { label: label.into(), rounds: Vec::new(), edge_bits_up: Vec::new(), mask_nnz: None }
     }
 
     pub fn push(&mut self, stat: RoundStat) {

@@ -1,11 +1,26 @@
-//! Post-training pruning (Ch. 6): magnitude, Wanda, RIA, stochRIA,
-//! SymWanda, lp re-weighting — plus mask selection scopes and model-level
-//! application driven by the manifest layout.
+//! Pruning scorers and mask selection — the shared front-end of both
+//! post-training pruning (Ch. 6) and training-time masked federated
+//! runs ([`crate::sparsity`]).
+//!
+//! [`score`] computes importance matrices (magnitude, Wanda, RIA,
+//! stochRIA, SymWanda) and [`select_mask`] turns them into keep-masks
+//! under a [`Scope`] (per-row, per-matrix, or structured N:M). Two
+//! consumers sit on top:
+//!
+//! * **post-training** ([`prune_model`] / [`layer_masks`] /
+//!   [`apply_layer_masks`]): one [`crate::sparsity::Mask`] per prunable
+//!   layer of a manifest-laid-out model, scored against measured
+//!   activation calibration norms ([`calib_slices`]) and applied in
+//!   place — `examples/prune_llm.rs` drives this end to end, with
+//!   [`dsnot`] (R²-DSnoT) as the training-free fine-tuner;
+//! * **training-time** ([`crate::sparsity::MaskState`]): the
+//!   coordinator builds run-wide masks from the same scorers (gradient
+//!   saliency standing in for activation norms) and enforces them on
+//!   every federated link; [`fedp3`] remains the reference
+//!   implementation of Ch. 4's personalized-pruning round structure.
 //!
 //! Scores are computed natively here (cross-tested against the L1 Pallas
-//! kernels via the `wanda_score_*` artifacts in integration tests); the
-//! [`dsnot`] module implements the training-free fine-tuning (R²-DSnoT)
-//! and [`fedp3`] the federated personalized pruning of Ch. 4.
+//! kernels via the `wanda_score_*` artifacts in integration tests).
 
 pub mod dsnot;
 pub mod fedp3;
@@ -211,7 +226,54 @@ pub fn calib_slices<'a>(
     ))
 }
 
-/// Prune every linear layer of a flat-parameter model in place.
+/// Score and select one keep-[`Mask`] per prunable linear layer of a
+/// flat-parameter model (entries without matrix dims or calibration are
+/// skipped). Returns `(layout entry index, mask)` pairs; apply with
+/// [`apply_layer_masks`], or hand them to anything else that consumes
+/// first-class masks.
+pub fn layer_masks(
+    layout: &[LayoutEntry],
+    calib_layout: &CalibLayout,
+    theta: &[f32],
+    calib: &[f32],
+    method: Method,
+    sparsity: f32,
+    scope: Scope,
+) -> Vec<(usize, crate::sparsity::Mask)> {
+    let mut out = Vec::new();
+    for (ei, e) in layout.iter().enumerate() {
+        if !e.is_prunable() {
+            continue;
+        }
+        let Some((o, i)) = e.matrix_dims() else { continue };
+        let Some((a_in, a_out)) = calib_slices(calib_layout, calib, &e.name) else { continue };
+        let w = &theta[e.offset..e.offset + e.size];
+        let s = score(method, w, o, i, a_in, a_out);
+        let keep = select_mask(&s, o, i, sparsity, scope);
+        out.push((ei, crate::sparsity::Mask::from_keep(&keep)));
+    }
+    out
+}
+
+/// Apply per-layer keep-masks (from [`layer_masks`]) in place.
+/// Returns (zeroed, total prunable) counts.
+pub fn apply_layer_masks(
+    layout: &[LayoutEntry],
+    theta: &mut [f32],
+    masks: &[(usize, crate::sparsity::Mask)],
+) -> (usize, usize) {
+    let mut zeroed = 0;
+    let mut total = 0;
+    for (ei, m) in masks {
+        let e = &layout[*ei];
+        zeroed += m.apply(&mut theta[e.offset..e.offset + e.size]);
+        total += e.size;
+    }
+    (zeroed, total)
+}
+
+/// Prune every linear layer of a flat-parameter model in place
+/// ([`layer_masks`] + [`apply_layer_masks`]).
 /// Returns (zeroed, total prunable) counts.
 pub fn prune_model(
     layout: &[LayoutEntry],
@@ -222,18 +284,8 @@ pub fn prune_model(
     sparsity: f32,
     scope: Scope,
 ) -> (usize, usize) {
-    let mut zeroed = 0;
-    let mut total = 0;
-    for e in layout.iter().filter(|e| e.is_prunable()) {
-        let Some((o, i)) = e.matrix_dims() else { continue };
-        let Some((a_in, a_out)) = calib_slices(calib_layout, calib, &e.name) else { continue };
-        let w = &mut theta[e.offset..e.offset + e.size];
-        let s = score(method, w, o, i, a_in, a_out);
-        let mask = select_mask(&s, o, i, sparsity, scope);
-        zeroed += apply_mask(w, &mask);
-        total += e.size;
-    }
-    (zeroed, total)
+    let masks = layer_masks(layout, calib_layout, theta, calib, method, sparsity, scope);
+    apply_layer_masks(layout, theta, &masks)
 }
 
 #[cfg(test)]

@@ -1,0 +1,668 @@
+//! Training-time sparsity: masks as first-class citizens of the
+//! federated message path.
+//!
+//! The [`crate::pruning`] scorers (magnitude / Wanda / SymWanda / RIA /
+//! stochRIA, with per-row, per-matrix and structured N:M selection
+//! scopes) produce a keep-[`Mask`] — a bitset plus its cached support
+//! indices — and this module turns that mask into a *run-wide wire
+//! contract* enforced by the coordinator
+//! ([`crate::coordinator::driver::Driver::with_mask`]):
+//!
+//! * **Lifecycle** ([`MaskState`]): masks are built once at init from
+//!   the scorer config ([`MaskSpec`]) and the run's initial model,
+//!   optionally refreshed every `refresh` rounds from the *current*
+//!   server model (training-time re-pruning). Scoring calibration is
+//!   gradient saliency: `a_in[c] = sum_r |g[r,c]|`,
+//!   `a_out[r] = sum_c |g[r,c]|` from one full (or, for personalized
+//!   masks, per-client) gradient at the build point — the training-time
+//!   analogue of Wanda's activation norms. Stochastic scorers draw from
+//!   deterministic per-client/per-epoch streams ([`mask_seed`]), so
+//!   masked runs are bit-reproducible.
+//! * **Scope**: one `global` mask shared by every node (FedComLoc-style
+//!   sparse federated training — the server model lives in the support
+//!   subspace for the whole run), or `personalized` per-client masks
+//!   (FedP3-style: every client uplinks only its own support; the
+//!   server model stays dense and so does the broadcast).
+//! * **Enforcement** ([`masked_compress_add_into`]): every masked link
+//!   payload is restricted to the support *before* compression — the
+//!   compressor sees the compacted `nnz`-length vector, so Top-K /
+//!   Rand-K select within the support and index widths shrink to
+//!   `ceil(log2 nnz)`. Aggregation scatters back through the cached
+//!   support (O(nnz), via the same [`SparseVec`] message type as the
+//!   unmasked sparse fast path), never touching off-support
+//!   coordinates.
+//! * **Accounting** (SoteriaFL-style, booked by the driver): a masked
+//!   dense payload costs `32 * nnz` bits (both ends know the mask, so
+//!   only support values travel); a masked compressed payload costs
+//!   whatever the compressor books *on the compacted input*; and the
+//!   mask itself is charged — `dim` bits (one bitset) per receiving
+//!   client on the downlink, once at build and again at every refresh.
+//!
+//! [`parse_method`] / [`parse_scope`] are the single string grammar for
+//! pruning choices, shared by the `[sparsity]` TOML section
+//! ([`crate::config`]) and the example CLIs.
+
+use anyhow::{bail, Result};
+
+use crate::compress::{Compressor, SparseVec};
+use crate::oracle::Oracle;
+use crate::pruning::{score, select_mask, Method, Scope};
+use crate::Rng;
+
+/// A keep-mask over `dim` model coordinates: a bitset for O(1)
+/// membership plus the cached (sorted) support indices the masked
+/// message path scatters through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    words: Vec<u64>,
+    support: Vec<u32>,
+    dim: usize,
+}
+
+impl Mask {
+    /// Build from a keep slice (`true` = coordinate stays trainable).
+    pub fn from_keep(keep: &[bool]) -> Self {
+        let dim = keep.len();
+        let mut words = vec![0u64; dim.div_ceil(64)];
+        let mut support = Vec::new();
+        for (j, &k) in keep.iter().enumerate() {
+            if k {
+                words[j / 64] |= 1u64 << (j % 64);
+                support.push(j as u32);
+            }
+        }
+        Self { words, support, dim }
+    }
+
+    /// The all-kept mask (0% sparsity).
+    pub fn full(dim: usize) -> Self {
+        Self::from_keep(&vec![true; dim])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Support size (kept coordinates).
+    pub fn nnz(&self) -> usize {
+        self.support.len()
+    }
+
+    /// Kept fraction nnz / dim.
+    pub fn density(&self) -> f32 {
+        self.support.len() as f32 / self.dim.max(1) as f32
+    }
+
+    pub fn is_kept(&self, j: usize) -> bool {
+        (self.words[j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    /// Sorted kept coordinate indices.
+    pub fn support(&self) -> &[u32] {
+        &self.support
+    }
+
+    /// Zero every off-support coordinate in place; returns how many
+    /// nonzero entries were zeroed (same convention as
+    /// [`crate::pruning::apply_mask`]).
+    pub fn apply(&self, w: &mut [f32]) -> usize {
+        debug_assert_eq!(w.len(), self.dim);
+        let mut zeroed = 0;
+        for (j, v) in w.iter_mut().enumerate() {
+            if !self.is_kept(j) && *v != 0.0 {
+                *v = 0.0;
+                zeroed += 1;
+            }
+        }
+        zeroed
+    }
+
+    /// On-wire bits of transmitting the mask itself: one bitset.
+    pub fn wire_bits(&self) -> u64 {
+        self.dim as u64
+    }
+}
+
+/// Deterministic stream seed for mask construction: refresh epoch
+/// `epoch`, client `client` (0 for the global mask) of the run seeded
+/// with `seed`. Keys the stochastic scorers (stochRIA) so personalized
+/// masks and refreshes are reproducible and order-free.
+pub fn mask_seed(seed: u64, epoch: usize, client: usize) -> u64 {
+    let mut h = seed ^ 0xD6E8FEB86659FD93u64.wrapping_mul(epoch as u64 + 1);
+    h ^= 0xA24BAED4963EE407u64.wrapping_mul(client as u64 + 1);
+    h
+}
+
+/// Scorer configuration of a masked run — the `[sparsity]` TOML section
+/// ([`crate::config::build_mask_spec`]) resolved into pruning types.
+#[derive(Debug, Clone)]
+pub struct MaskSpec {
+    /// Pruning score ([`crate::pruning::score`]). StochRIA's seed is
+    /// overwritten at build time with a [`mask_seed`] stream.
+    pub method: Method,
+    /// Selection scope; [`Scope::StructuredNm`] ignores `sparsity`.
+    pub scope: Scope,
+    /// Fraction of coordinates pruned, in [0, 1).
+    pub sparsity: f32,
+    /// Matrix interpretation of the flat model for scoring: `rows`
+    /// output rows of `dim / rows` inputs each (1 = one flat row, which
+    /// makes per-row and per-matrix selection coincide).
+    pub rows: usize,
+    /// Rebuild the masks from the current server model every `refresh`
+    /// rounds (training-time re-pruning); `None` = fixed masks.
+    pub refresh: Option<usize>,
+    /// FedP3-style per-client masks (scored on per-client gradients)
+    /// instead of one global mask.
+    pub personalized: bool,
+}
+
+impl Default for MaskSpec {
+    fn default() -> Self {
+        Self {
+            method: Method::Magnitude,
+            scope: Scope::PerMatrix,
+            sparsity: 0.5,
+            rows: 1,
+            refresh: None,
+            personalized: false,
+        }
+    }
+}
+
+impl MaskSpec {
+    /// Dimension-aware validation (the dimension-free part happens at
+    /// parse time in [`crate::config::build_mask_spec`]).
+    pub fn validate(&self, dim: usize) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.sparsity),
+            "mask sparsity must be in [0, 1), got {}",
+            self.sparsity
+        );
+        anyhow::ensure!(self.rows >= 1, "mask rows must be >= 1");
+        anyhow::ensure!(
+            dim % self.rows == 0,
+            "mask rows = {} must divide the model dimension {dim}",
+            self.rows
+        );
+        anyhow::ensure!(self.refresh != Some(0), "mask refresh must be >= 1 round");
+        if let Scope::StructuredNm { n, m } = self.scope {
+            anyhow::ensure!(n >= 1 && n <= m, "structured {n}:{m} must keep 1 <= n <= m");
+        }
+        Ok(())
+    }
+}
+
+/// The resolved masks of one run: either one global mask or per-client
+/// personalized masks.
+#[derive(Debug, Clone, Default)]
+pub struct MaskSet {
+    global: Option<Mask>,
+    per_client: Vec<Mask>,
+}
+
+impl MaskSet {
+    /// The shared mask, when the run is not personalized. Broadcast
+    /// payloads and tree-node re-compressions key off this (personalized
+    /// runs keep those dense).
+    pub fn global(&self) -> Option<&Mask> {
+        self.global.as_ref()
+    }
+
+    /// The mask governing `client`'s uplink.
+    pub fn mask_for(&self, client: usize) -> &Mask {
+        match &self.global {
+            Some(m) => m,
+            None => &self.per_client[client],
+        }
+    }
+
+    /// Per-receiver bits of distributing the masks (each client receives
+    /// one `dim`-bit bitset, global and personalized alike).
+    pub fn mask_wire_bits(&self) -> u64 {
+        match &self.global {
+            Some(m) => m.wire_bits(),
+            None => self.per_client.first().map_or(0, Mask::wire_bits),
+        }
+    }
+
+    /// Average support size (exact for global masks, mean over clients
+    /// for personalized ones) — the `nnz` column of the reports.
+    pub fn avg_nnz(&self) -> u64 {
+        match &self.global {
+            Some(m) => m.nnz() as u64,
+            None => {
+                let n = self.per_client.len().max(1) as u64;
+                self.per_client.iter().map(|m| m.nnz() as u64).sum::<u64>() / n
+            }
+        }
+    }
+}
+
+/// Per-run mask state owned by the driver: the spec, the resolved
+/// [`MaskSet`], and the reusable scratch of the masked message path
+/// (masked rounds allocate nothing at steady state).
+pub struct MaskState {
+    pub spec: MaskSpec,
+    pub set: MaskSet,
+    /// Compacted (support-gathered) input scratch.
+    pub gather: Vec<f32>,
+    /// Compacted dense-compress output scratch.
+    pub cbuf: Vec<f32>,
+    /// Sparse message scratch for paths whose caller provides none.
+    pub sbuf: SparseVec,
+    // build-time scratch
+    grad: Vec<f32>,
+    a_in: Vec<f32>,
+    a_out: Vec<f32>,
+}
+
+impl MaskState {
+    /// Build the run's masks from `spec` at model `x0` (refresh epoch 0).
+    pub fn build(spec: &MaskSpec, oracle: &dyn Oracle, x0: &[f32], seed: u64) -> Result<Self> {
+        let d = oracle.dim();
+        spec.validate(d)?;
+        let mut ms = Self {
+            spec: spec.clone(),
+            set: MaskSet::default(),
+            gather: Vec::with_capacity(d),
+            cbuf: Vec::with_capacity(d),
+            sbuf: SparseVec::default(),
+            grad: vec![0.0; d],
+            a_in: Vec::new(),
+            a_out: Vec::new(),
+        };
+        ms.rebuild(oracle, x0, seed, 0)?;
+        Ok(ms)
+    }
+
+    /// Re-score and re-select every mask from the current model `x`
+    /// (refresh epoch `epoch`; the caller books the mask re-transmission).
+    pub fn rebuild(
+        &mut self,
+        oracle: &dyn Oracle,
+        x: &[f32],
+        seed: u64,
+        epoch: usize,
+    ) -> Result<()> {
+        let d = oracle.dim();
+        anyhow::ensure!(x.len() == d, "mask build point has dim {} != {d}", x.len());
+        let o = self.spec.rows;
+        let i = d / o;
+        if self.spec.personalized {
+            let n = oracle.n_clients();
+            self.set.global = None;
+            self.set.per_client.clear();
+            for c in 0..n {
+                oracle.loss_grad(c, x, &mut self.grad)?;
+                let m = self.build_one(x, o, i, seed, epoch, c)?;
+                self.set.per_client.push(m);
+            }
+        } else {
+            oracle.full_loss_grad(x, &mut self.grad)?;
+            let m = self.build_one(x, o, i, seed, epoch, 0)?;
+            self.set.global = Some(m);
+            self.set.per_client.clear();
+        }
+        Ok(())
+    }
+
+    /// Score `x` (as an `o x i` matrix) against the gradient-saliency
+    /// calibration currently in `self.grad` and select one mask.
+    fn build_one(
+        &mut self,
+        x: &[f32],
+        o: usize,
+        i: usize,
+        seed: u64,
+        epoch: usize,
+        client: usize,
+    ) -> Result<Mask> {
+        self.a_in.clear();
+        self.a_in.resize(i, 0.0);
+        self.a_out.clear();
+        self.a_out.resize(o, 0.0);
+        for r in 0..o {
+            for c in 0..i {
+                let ag = self.grad[r * i + c].abs();
+                self.a_in[c] += ag;
+                self.a_out[r] += ag;
+            }
+        }
+        let method = match self.spec.method {
+            Method::StochRia { alpha, p, ratio, .. } => {
+                Method::StochRia { alpha, p, ratio, seed: mask_seed(seed, epoch, client) }
+            }
+            m => m,
+        };
+        let scores = score(method, x, o, i, &self.a_in, &self.a_out);
+        let keep = select_mask(&scores, o, i, self.spec.sparsity, self.spec.scope);
+        let mask = Mask::from_keep(&keep);
+        anyhow::ensure!(
+            mask.nnz() > 0,
+            "mask at sparsity {} keeps no coordinate",
+            self.spec.sparsity
+        );
+        Ok(mask)
+    }
+}
+
+/// The one masked compress-and-accumulate primitive every masked link
+/// shares: gather `x` on the mask support, compress the compacted
+/// payload, and scatter `scale * C(x|mask)` back through the support
+/// into `dst` — O(nnz) end to end, off-support coordinates of `dst`
+/// are never touched.
+///
+/// Three paths, mirroring the unmasked `compress_add_into`:
+/// no compressor (support values travel raw: `32 * nnz` bits, direct
+/// scatter), a native sparse form when `sparse` allows it (compacted
+/// indices remapped through the support, O(k) [`SparseVec`] scatter),
+/// or dense decompress over the compacted buffer + support scatter.
+/// The sparse and dense paths consume identical RNG draws and book
+/// identical bits (the compressor contract), and off-selected entries
+/// of a dense compacted message are exact zeros — so masked-sparse and
+/// masked-dense runs match bit for bit. Returns the payload's on-wire
+/// bits (not booked).
+#[allow(clippy::too_many_arguments)]
+pub fn masked_compress_add_into(
+    mask: &Mask,
+    comp: Option<&dyn Compressor>,
+    sparse: bool,
+    x: &[f32],
+    scale: f32,
+    dst: &mut [f32],
+    gather: &mut Vec<f32>,
+    cbuf: &mut Vec<f32>,
+    sbuf: &mut SparseVec,
+    rng: &mut Rng,
+) -> u64 {
+    let sup = mask.support();
+    gather.clear();
+    gather.extend(sup.iter().map(|&j| x[j as usize]));
+    let Some(c) = comp else {
+        for (&j, &v) in sup.iter().zip(gather.iter()) {
+            dst[j as usize] += scale * v;
+        }
+        return 32 * sup.len() as u64;
+    };
+    if sparse {
+        if let Some(bits) = c.compress_sparse(gather, sbuf, rng) {
+            // remap compacted indices to full model coordinates
+            for idx in sbuf.idx.iter_mut() {
+                *idx = sup[*idx as usize];
+            }
+            sbuf.dim = dst.len();
+            sbuf.add_into(scale, dst);
+            return bits;
+        }
+    }
+    cbuf.clear();
+    cbuf.resize(sup.len(), 0.0);
+    let bits = c.compress(gather, cbuf, rng);
+    for (&j, &v) in sup.iter().zip(cbuf.iter()) {
+        dst[j as usize] += scale * v;
+    }
+    bits
+}
+
+/// Parse a pruning method name — the shared grammar of the `[sparsity]`
+/// TOML section and the example CLIs. Accepts `magnitude | wanda |
+/// symwanda | ria | stochria`, with parameters either inline
+/// (`"symwanda(0.3)"` sets alpha, `"stochria(0.8)"` sets the subsample
+/// ratio) or from the explicit `alpha` / `p` / `ratio` keys.
+pub fn parse_method(
+    name: &str,
+    alpha: Option<f32>,
+    p: Option<f32>,
+    ratio: Option<f32>,
+) -> Result<Method> {
+    let (kind, inline) = match (name.find('('), name.ends_with(')')) {
+        (Some(i), true) => (&name[..i], Some(&name[i + 1..name.len() - 1])),
+        _ => (name, None),
+    };
+    let inline_f = |s: &str| -> Result<f32> {
+        s.trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad numeric argument {s:?} in pruning method {name:?}"))
+    };
+    Ok(match kind {
+        "magnitude" => Method::Magnitude,
+        "wanda" => Method::Wanda,
+        "symwanda" => {
+            let a = match inline {
+                Some(s) => inline_f(s)?,
+                None => alpha.unwrap_or(0.5),
+            };
+            anyhow::ensure!((0.0..=1.0).contains(&a), "symwanda alpha must be in [0, 1], got {a}");
+            Method::SymWanda { alpha: a }
+        }
+        "ria" => {
+            let a = match inline {
+                Some(s) => inline_f(s)?,
+                None => alpha.unwrap_or(0.5),
+            };
+            Method::Ria { alpha: a, p: p.unwrap_or(0.5) }
+        }
+        "stochria" => {
+            let r = match inline {
+                Some(s) => inline_f(s)?,
+                None => ratio.unwrap_or(0.5),
+            };
+            anyhow::ensure!(r > 0.0 && r <= 1.0, "stochria ratio must be in (0, 1], got {r}");
+            Method::StochRia { alpha: alpha.unwrap_or(0.5), p: p.unwrap_or(0.5), ratio: r, seed: 0 }
+        }
+        other => bail!(
+            "unknown pruning method {other:?} (known: magnitude | wanda | symwanda(alpha) | ria | stochria)"
+        ),
+    })
+}
+
+/// Parse a mask-selection scope: `per-row`, `per-matrix`, or an `n:m`
+/// structured pattern (`"2:4"` keeps 2 of every 4 consecutive inputs
+/// per row — the hardware-friendly semi-structured sparsity).
+pub fn parse_scope(s: &str) -> Result<Scope> {
+    match s {
+        "per-row" => Ok(Scope::PerRow),
+        "per-matrix" => Ok(Scope::PerMatrix),
+        _ => {
+            let Some((n, m)) = s.split_once(':') else {
+                bail!("unknown pruning scope {s:?} (known: per-row | per-matrix | n:m, e.g. \"2:4\")");
+            };
+            let parse = |v: &str| -> Result<usize> {
+                v.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad structured-sparsity pattern {s:?}"))
+            };
+            let (n, m) = (parse(n)?, parse(m)?);
+            anyhow::ensure!(n >= 1 && n <= m, "structured {n}:{m} must keep 1 <= n <= m");
+            Ok(Scope::StructuredNm { n, m })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::TopK;
+    use crate::oracle::quadratic::QuadraticOracle;
+
+    #[test]
+    fn mask_from_keep_caches_support_and_bitset() {
+        let m = Mask::from_keep(&[true, false, true, true, false]);
+        assert_eq!(m.dim(), 5);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.support(), &[0, 2, 3]);
+        assert!(m.is_kept(0) && !m.is_kept(1) && m.is_kept(3) && !m.is_kept(4));
+        assert_eq!(m.wire_bits(), 5);
+        let mut w = vec![1.0f32, 2.0, 0.0, 3.0, 4.0];
+        assert_eq!(m.apply(&mut w), 2); // entries 1 and 4 (entry 2 was 0)
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn full_mask_keeps_everything() {
+        let m = Mask::full(70); // spans a word boundary
+        assert_eq!(m.nnz(), 70);
+        assert!((0..70).all(|j| m.is_kept(j)));
+        assert!((m.density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn masked_dense_message_books_support_bits_and_scatters_o_nnz() {
+        let m = Mask::from_keep(&[true, false, true, false]);
+        let x = vec![1.0f32, 9.0, 2.0, 9.0];
+        let mut dst = vec![0.0f32; 4];
+        let (mut g, mut c, mut s) = (Vec::new(), Vec::new(), SparseVec::default());
+        let bits = masked_compress_add_into(
+            &m,
+            None,
+            true,
+            &x,
+            0.5,
+            &mut dst,
+            &mut g,
+            &mut c,
+            &mut s,
+            &mut crate::rng(0),
+        );
+        assert_eq!(bits, 32 * 2);
+        assert_eq!(dst, vec![0.5, 0.0, 1.0, 0.0]); // off-support untouched
+    }
+
+    #[test]
+    fn masked_topk_selects_within_support_and_remaps() {
+        // the largest-|x| coordinate is off-support: Top-1 must pick the
+        // largest *kept* coordinate, with support-relative bit width
+        let m = Mask::from_keep(&[true, false, true, true]);
+        let x = vec![1.0f32, 100.0, -3.0, 2.0];
+        let comp = TopK::new(1);
+        let mut dst = vec![0.0f32; 4];
+        let (mut g, mut c, mut s) = (Vec::new(), Vec::new(), SparseVec::default());
+        let bits = masked_compress_add_into(
+            &m,
+            Some(&comp),
+            true,
+            &x,
+            1.0,
+            &mut dst,
+            &mut g,
+            &mut c,
+            &mut s,
+            &mut crate::rng(0),
+        );
+        assert_eq!(dst, vec![0.0, 0.0, -3.0, 0.0]);
+        // 1 entry at nnz=3 index width (2 bits), not d=4 width
+        assert_eq!(bits, crate::compress::sparse_bits(1, 3));
+    }
+
+    #[test]
+    fn masked_sparse_and_dense_paths_match_bitwise() {
+        let m = Mask::from_keep(&(0..32).map(|j| j % 3 != 0).collect::<Vec<_>>());
+        let x: Vec<f32> = (0..32).map(|j| (j as f32 - 11.0) * 0.7).collect();
+        let comp = TopK::new(4);
+        let run = |sparse: bool| {
+            let mut dst = vec![0.25f32; 32];
+            let (mut g, mut c, mut s) = (Vec::new(), Vec::new(), SparseVec::default());
+            let bits = masked_compress_add_into(
+                &m,
+                Some(&comp),
+                sparse,
+                &x,
+                0.3,
+                &mut dst,
+                &mut g,
+                &mut c,
+                &mut s,
+                &mut crate::rng(7),
+            );
+            (bits, dst)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn mask_state_builds_global_and_personalized() {
+        let mut rng = crate::rng(91);
+        let q = QuadraticOracle::random(4, 16, 0.5, 2.0, 1.0, &mut rng);
+        let x0 = vec![1.0f32; 16];
+        let spec = MaskSpec {
+            method: Method::SymWanda { alpha: 0.5 },
+            sparsity: 0.5,
+            ..MaskSpec::default()
+        };
+        let ms = MaskState::build(&spec, &q, &x0, 3).unwrap();
+        let g = ms.set.global().expect("global mask");
+        assert_eq!(g.nnz(), 8);
+        assert_eq!(ms.set.avg_nnz(), 8);
+        assert_eq!(ms.set.mask_wire_bits(), 16);
+
+        let pspec = MaskSpec { personalized: true, ..spec };
+        let pms = MaskState::build(&pspec, &q, &x0, 3).unwrap();
+        assert!(pms.set.global().is_none());
+        // heterogeneous clients score differently: at least one pair of
+        // personalized masks must differ
+        let distinct = (0..4).any(|i| pms.set.mask_for(i) != pms.set.mask_for(0));
+        assert!(distinct, "personalized masks should differ across clients");
+        // and rebuilding at the same point is deterministic
+        let pms2 = MaskState::build(&pspec, &q, &x0, 3).unwrap();
+        for i in 0..4 {
+            assert_eq!(pms.set.mask_for(i), pms2.set.mask_for(i));
+        }
+    }
+
+    #[test]
+    fn mask_spec_validation_catches_bad_configs() {
+        let mut rng = crate::rng(92);
+        let q = QuadraticOracle::random(2, 10, 0.5, 2.0, 1.0, &mut rng);
+        let x0 = vec![1.0f32; 10];
+        let bad_sparsity = MaskSpec { sparsity: 1.0, ..MaskSpec::default() };
+        assert!(MaskState::build(&bad_sparsity, &q, &x0, 0).is_err());
+        let bad_rows = MaskSpec { rows: 3, ..MaskSpec::default() }; // 3 does not divide 10
+        assert!(MaskState::build(&bad_rows, &q, &x0, 0).is_err());
+        let bad_refresh = MaskSpec { refresh: Some(0), ..MaskSpec::default() };
+        assert!(MaskState::build(&bad_refresh, &q, &x0, 0).is_err());
+    }
+
+    #[test]
+    fn parse_method_grammar_and_errors() {
+        assert_eq!(parse_method("magnitude", None, None, None).unwrap(), Method::Magnitude);
+        assert_eq!(parse_method("wanda", None, None, None).unwrap(), Method::Wanda);
+        assert_eq!(
+            parse_method("symwanda(0.3)", None, None, None).unwrap(),
+            Method::SymWanda { alpha: 0.3 }
+        );
+        assert_eq!(
+            parse_method("symwanda", Some(0.7), None, None).unwrap(),
+            Method::SymWanda { alpha: 0.7 }
+        );
+        assert_eq!(
+            parse_method("ria", Some(1.0), Some(0.5), None).unwrap(),
+            Method::Ria { alpha: 1.0, p: 0.5 }
+        );
+        assert!(matches!(
+            parse_method("stochria(0.8)", None, None, None).unwrap(),
+            Method::StochRia { ratio, .. } if (ratio - 0.8).abs() < 1e-6
+        ));
+        assert!(parse_method("optimal-brain-damage", None, None, None).is_err());
+        assert!(parse_method("symwanda(huge)", None, None, None).is_err());
+        assert!(parse_method("symwanda(2.0)", None, None, None).is_err());
+    }
+
+    #[test]
+    fn parse_scope_grammar_and_errors() {
+        assert_eq!(parse_scope("per-row").unwrap(), Scope::PerRow);
+        assert_eq!(parse_scope("per-matrix").unwrap(), Scope::PerMatrix);
+        assert_eq!(parse_scope("2:4").unwrap(), Scope::StructuredNm { n: 2, m: 4 });
+        assert!(parse_scope("4:2").is_err()); // n > m
+        assert!(parse_scope("0:4").is_err());
+        assert!(parse_scope("rowwise").is_err());
+        assert!(parse_scope("a:b").is_err());
+    }
+
+    #[test]
+    fn mask_seed_streams_are_distinct_and_stable() {
+        assert_eq!(mask_seed(5, 1, 2), mask_seed(5, 1, 2));
+        assert_ne!(mask_seed(5, 1, 2), mask_seed(5, 1, 3));
+        assert_ne!(mask_seed(5, 1, 2), mask_seed(5, 2, 2));
+        assert_ne!(mask_seed(5, 1, 2), mask_seed(6, 1, 2));
+    }
+}

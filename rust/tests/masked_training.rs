@@ -1,0 +1,326 @@
+//! Masked federated training: the sparsity subsystem's safety net.
+//!
+//! Pins the mask invariants of the refactor: structured N:M masks keep
+//! exactly n of every m inputs per row; masked runs over the O(nnz)
+//! sparse message path are bit-for-bit identical to the dense-masked
+//! reference path (`with_sparse_links(false)`), flat and over executed
+//! trees, global and personalized; a 0%-sparsity mask reproduces the
+//! unmasked driver exactly (identical losses and uplink bits — the
+//! downlink differs by exactly the documented mask-transmission
+//! charge); and the acceptance composition — a TOML-only FedAvg run
+//! with a 50% SymWanda mask and a Top-K uplink — completes over both
+//! flat and 3-level tree topologies while booking strictly fewer
+//! uplink bits than the dense run of the same experiment, mask charge
+//! included.
+
+use fedeff::algorithms::fedavg::FedAvg;
+use fedeff::algorithms::gd::Gd;
+use fedeff::algorithms::scaffold::Scaffold;
+use fedeff::algorithms::{build_algorithm, RunOptions};
+use fedeff::compress::randk::RandK;
+use fedeff::compress::sparse_bits;
+use fedeff::compress::topk::TopK;
+use fedeff::coordinator::driver::Driver;
+use fedeff::metrics::RunRecord;
+use fedeff::oracle::quadratic::QuadraticOracle;
+use fedeff::pruning::{Method, Scope};
+use fedeff::sparsity::{MaskSpec, MaskState};
+
+fn quadratic(seed: u64, n: usize, d: usize) -> QuadraticOracle {
+    let mut rng = fedeff::rng(seed);
+    QuadraticOracle::random(n, d, 0.5, 2.0, 1.0, &mut rng)
+}
+
+fn symwanda_mask(sparsity: f32) -> MaskSpec {
+    MaskSpec { method: Method::SymWanda { alpha: 0.5 }, sparsity, ..MaskSpec::default() }
+}
+
+fn assert_records_bitwise_eq(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: record lengths differ");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert!(ra.loss == rb.loss, "{what}: entry {i} loss {} vs {}", ra.loss, rb.loss);
+        assert_eq!(ra.bits_up, rb.bits_up, "{what}: entry {i} bits_up");
+        assert_eq!(ra.bits_down, rb.bits_down, "{what}: entry {i} bits_down");
+    }
+}
+
+/// Structured N:M selection really is structured: with the flat model
+/// scored as 4 rows of 8 inputs, a 2:4 mask keeps exactly 2 of every 4
+/// consecutive inputs in every row.
+#[test]
+fn structured_nm_mask_keeps_exactly_n_of_every_m() {
+    let q = quadratic(90, 3, 32);
+    let spec = MaskSpec {
+        method: Method::SymWanda { alpha: 0.5 },
+        scope: Scope::StructuredNm { n: 2, m: 4 },
+        rows: 4,
+        ..MaskSpec::default()
+    };
+    let ms = MaskState::build(&spec, &q, &vec![1.0f32; 32], 7).unwrap();
+    let mask = ms.set.global().unwrap();
+    assert_eq!(mask.nnz(), 16);
+    let i = 8; // inputs per row
+    for r in 0..4 {
+        for c4 in 0..2 {
+            let kept = (0..4).filter(|&j| mask.is_kept(r * i + c4 * 4 + j)).count();
+            assert_eq!(kept, 2, "row {r} block {c4} keeps {kept} != 2");
+        }
+    }
+}
+
+/// Masked-sparse vs masked-dense: the O(nnz) SparseVec path must match
+/// the dense-masked reference bit for bit (GD + Rand-K exercises the
+/// link RNG; FedAvg + Top-K exercises the FedCOM delta path).
+#[test]
+fn masked_sparse_matches_masked_dense_gd_randk() {
+    let q = quadratic(91, 6, 64);
+    let x0 = vec![1.0f32; 64];
+    let opts = RunOptions { rounds: 60, eval_every: 15, seed: 3, ..Default::default() };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_up(Box::new(RandK::scaled(8)))
+            .with_mask(symwanda_mask(0.5))
+            .with_sparse_links(sparse)
+    };
+    let mut a = Gd::plain(6, 64, 0.1);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = Gd::plain(6, 64, 0.1);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "masked GD+RandK");
+    assert_eq!(rec_sparse.mask_nnz, Some(32));
+}
+
+#[test]
+fn masked_sparse_matches_masked_dense_fedavg_topk() {
+    let q = quadratic(92, 8, 48);
+    let x0 = vec![2.0f32; 48];
+    let opts = RunOptions { rounds: 80, eval_every: 20, seed: 5, ..Default::default() };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_up(Box::new(TopK::new(6)))
+            .with_down(Box::new(TopK::new(6)))
+            .with_mask(symwanda_mask(0.5))
+            .with_sparse_links(sparse)
+    };
+    let mut a = FedAvg::new(3, 0.1);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(3, 0.1);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "masked FedAvg+TopK");
+    // compressed masked uplink: Top-K bits at support-relative width
+    let per_round = sparse_bits(6, 24);
+    assert_eq!(rec_sparse.rounds.last().unwrap().bits_up, per_round * 80);
+}
+
+/// FedP3-style personalized masks (per-client supports, dense
+/// broadcast) keep the sparse/dense equivalence too — including the
+/// two-channel Scaffold uplink.
+#[test]
+fn masked_sparse_matches_masked_dense_personalized() {
+    let q = quadratic(93, 6, 40);
+    let x0 = vec![1.5f32; 40];
+    let opts = RunOptions { rounds: 60, eval_every: 20, seed: 9, ..Default::default() };
+    let spec = MaskSpec { personalized: true, ..symwanda_mask(0.5) };
+    let mk = |sparse: bool| {
+        Driver::new()
+            .with_up(Box::new(TopK::new(5)))
+            .with_mask(spec.clone())
+            .with_sparse_links(sparse)
+    };
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_dense = mk(false).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_sparse = mk(true).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_dense, &rec_sparse, "personalized FedAvg+TopK");
+
+    let mut c = Scaffold::new(3, 0.05);
+    let rec_sc_dense = mk(false).run(&mut c, &q, &x0, &opts).unwrap();
+    let mut e = Scaffold::new(3, 0.05);
+    let rec_sc_sparse = mk(true).run(&mut e, &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_sc_dense, &rec_sc_sparse, "personalized Scaffold+TopK");
+}
+
+/// A 0%-sparsity mask is the identity on the message path: identical
+/// losses and identical uplink bits to the unmasked driver; the
+/// downlink differs by exactly the documented one-time mask charge
+/// (`d` bits, booked before round 0).
+#[test]
+fn zero_sparsity_mask_reproduces_unmasked_driver() {
+    let d = 64usize;
+    let q = quadratic(94, 6, d);
+    let x0 = vec![1.0f32; d];
+    let opts = RunOptions { rounds: 60, eval_every: 15, seed: 3, ..Default::default() };
+
+    // dense GD (no compressor): masked dense payloads at nnz = d
+    let mut a = Gd::plain(6, d, 0.1);
+    let rec_plain = Driver::new().run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = Gd::plain(6, d, 0.1);
+    let rec_masked =
+        Driver::new().with_mask(symwanda_mask(0.0)).run(&mut b, &q, &x0, &opts).unwrap();
+    assert_eq!(rec_masked.mask_nnz, Some(d as u64));
+    assert_eq!(rec_plain.rounds.len(), rec_masked.rounds.len());
+    for (rp, rm) in rec_plain.rounds.iter().zip(&rec_masked.rounds) {
+        assert!(rp.loss == rm.loss, "0%-mask GD loss {} vs {}", rp.loss, rm.loss);
+        assert_eq!(rp.bits_up, rm.bits_up, "0%-mask GD bits_up");
+        assert_eq!(rp.bits_down + d as u64, rm.bits_down, "0%-mask GD mask charge");
+    }
+
+    // FedAvg + Top-K: the compressed FedCOM delta path, full support
+    let mut a = FedAvg::new(3, 0.1);
+    let drv = Driver::new().with_up(Box::new(TopK::new(8)));
+    let rec_plain = drv.run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(3, 0.1);
+    let drv_m = Driver::new().with_up(Box::new(TopK::new(8))).with_mask(symwanda_mask(0.0));
+    let rec_masked = drv_m.run(&mut b, &q, &x0, &opts).unwrap();
+    for (rp, rm) in rec_plain.rounds.iter().zip(&rec_masked.rounds) {
+        assert!(rp.loss == rm.loss, "0%-mask FedAvg loss {} vs {}", rp.loss, rm.loss);
+        assert_eq!(rp.bits_up, rm.bits_up, "0%-mask FedAvg bits_up");
+        assert_eq!(rp.bits_down + d as u64, rm.bits_down, "0%-mask FedAvg mask charge");
+    }
+}
+
+/// Mask refresh re-prunes from the current server model and re-charges
+/// the mask transmission: two extra `d`-bit downlink charges over 30
+/// rounds at refresh = 10, with the run still progressing.
+#[test]
+fn mask_refresh_recharges_and_still_trains() {
+    let d = 32usize;
+    let q = quadratic(95, 5, d);
+    let x0 = vec![1.0f32; d];
+    let opts = RunOptions { rounds: 30, eval_every: 30, seed: 2, ..Default::default() };
+    let fixed = MaskSpec { method: Method::Magnitude, sparsity: 0.5, ..MaskSpec::default() };
+    let refreshing = MaskSpec { refresh: Some(10), ..fixed.clone() };
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_fixed = Driver::new().with_mask(fixed).run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_refresh = Driver::new().with_mask(refreshing).run(&mut b, &q, &x0, &opts).unwrap();
+    // refreshes at t = 10 and t = 20 book one extra mask each; the
+    // masked dense payloads are support-sized either way (same nnz)
+    let (lf, lr) = (rec_fixed.rounds.last().unwrap(), rec_refresh.rounds.last().unwrap());
+    assert_eq!(lf.bits_down + 2 * d as u64, lr.bits_down);
+    let first = rec_refresh.rounds.first().unwrap().loss;
+    assert!(lr.loss.is_finite() && lr.loss < first, "{first} -> {}", lr.loss);
+}
+
+/// Acceptance pin: a TOML-only FedAvg run with a 50% SymWanda mask and
+/// a Top-K uplink completes over both flat and 3-level tree topologies
+/// and books strictly fewer uplink bits than the dense run of the same
+/// experiment — mask transmission charge included — while the masked
+/// tree aggregates bit-for-bit identically over the sparse and the
+/// dense-masked reference paths.
+#[test]
+fn toml_masked_fedavg_topk_books_fewer_uplink_bits_flat_and_tree() {
+    let (n, d, rounds) = (12usize, 1024usize, 40usize);
+    let q = quadratic(96, n, d);
+    let x0 = vec![1.0f32; d];
+    let opts = RunOptions { rounds, eval_every: rounds, seed: 2, ..Default::default() };
+
+    let base = r#"
+[experiment]
+name = "masked-e2e"
+rounds = 40
+seed = 2
+
+[dataset]
+clients = 12
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+
+[compressor]
+up = "top-k"
+k = 32
+
+[sparsity]
+method = "symwanda"
+alpha = 0.5
+scope = "per-matrix"
+sparsity = 0.5
+"#;
+    let tree_section =
+        "\n[topology]\nlevels = 3\nhubs = 4\n\n[links.up.l1]\nkind = \"top-k\"\nk = 64\n";
+
+    let run = |toml: &str, masked: bool| -> RunRecord {
+        let toml = if masked {
+            toml.to_string()
+        } else {
+            // the dense reference: same spec minus the [sparsity] section
+            let i = toml.find("[sparsity]").expect("spec has a sparsity section");
+            let j = toml[i..].find("\n[").map(|j| i + j).unwrap_or(toml.len());
+            format!("{}{}", &toml[..i], &toml[j..])
+        };
+        let spec = fedeff::config::Spec::parse(&toml).unwrap();
+        let mut alg = build_algorithm(&spec.algorithm, &q).unwrap();
+        let driver = fedeff::config::build_driver(&spec, n).unwrap();
+        driver.run(alg.as_mut(), &q, &x0, &opts).unwrap()
+    };
+
+    // ---- flat ----
+    let rec_masked = run(base, true);
+    let rec_dense = run(base, false);
+    assert_eq!(rec_masked.mask_nnz, Some(512));
+    let (lm, ld) = (rec_masked.rounds.last().unwrap(), rec_dense.rounds.last().unwrap());
+    assert!(lm.loss.is_finite() && ld.loss.is_finite());
+    // masked Top-K books support-relative index widths every round...
+    assert_eq!(lm.bits_up, sparse_bits(32, 512) * rounds as u64);
+    assert_eq!(ld.bits_up, sparse_bits(32, 1024) * rounds as u64);
+    // ...and stays strictly cheaper than dense even after paying the
+    // mask's own d-bit transmission
+    assert!(
+        lm.bits_up + d as u64 < ld.bits_up,
+        "masked uplink (+mask charge) {} must undercut dense {}",
+        lm.bits_up + d as u64,
+        ld.bits_up
+    );
+
+    // ---- 3-level tree (clients -> 4 hubs -> server) ----
+    let tree_toml = format!("{base}{tree_section}");
+    let rec_masked_t = run(&tree_toml, true);
+    let rec_dense_t = run(&tree_toml, false);
+    let (lmt, ldt) = (rec_masked_t.rounds.last().unwrap(), rec_dense_t.rounds.last().unwrap());
+    assert!(lmt.loss.is_finite() && ldt.loss.is_finite());
+    assert_eq!(rec_masked_t.edge_bits_up.len(), 2);
+    // leaf and hub edges both carry support-sized traffic
+    assert_eq!(rec_masked_t.edge_bits_up[0], 12 * sparse_bits(32, 512) * rounds as u64);
+    assert_eq!(rec_masked_t.edge_bits_up[1], 4 * sparse_bits(64, 512) * rounds as u64);
+    assert!(
+        lmt.bits_up + d as u64 < ldt.bits_up,
+        "masked tree uplink (+mask charge) {} must undercut dense {}",
+        lmt.bits_up + d as u64,
+        ldt.bits_up
+    );
+
+    // the masked tree's O(nnz) sparse path == dense-masked reference
+    let spec = fedeff::config::Spec::parse(&tree_toml).unwrap();
+    let mut alg = build_algorithm(&spec.algorithm, &q).unwrap();
+    let mut driver = fedeff::config::build_driver(&spec, n).unwrap();
+    driver.sparse_links = false;
+    let rec_ref = driver.run(alg.as_mut(), &q, &x0, &opts).unwrap();
+    assert_records_bitwise_eq(&rec_masked_t, &rec_ref, "masked tree sparse vs dense");
+    assert_eq!(rec_masked_t.edge_bits_up, rec_ref.edge_bits_up);
+}
+
+/// Masked runs still optimize: a 50% mask costs accuracy but the loss
+/// must strictly decrease for every masked algorithm that routes the
+/// masked link path — including Scafflix's anchored uplink.
+#[test]
+fn masked_runs_converge_across_algorithms() {
+    let q = quadratic(97, 6, 32);
+    let x0 = vec![2.0f32; 32];
+    for kind in ["gd", "fedavg", "fedprox", "scaffold", "scafflix"] {
+        let spec = fedeff::config::AlgorithmSpec {
+            kind: kind.to_string(),
+            k: Some(2),
+            ..Default::default()
+        };
+        let mut alg = build_algorithm(&spec, &q).unwrap();
+        let opts = RunOptions { rounds: 150, eval_every: 150, seed: 4, ..Default::default() };
+        let drv = Driver::new().with_mask(symwanda_mask(0.5));
+        let rec = drv.run(alg.as_mut(), &q, &x0, &opts).unwrap();
+        let first = rec.rounds.first().unwrap().loss;
+        let last = rec.rounds.last().unwrap().loss;
+        assert!(last.is_finite() && last < first, "{kind}: masked run {first} -> {last}");
+    }
+}
