@@ -18,6 +18,14 @@
 //! training (SymWanda masks enforced on the wire): the JSON rows carry
 //! the enforced support (`nnz`) and the per-node uplink bits booked per
 //! round (`bits_up_per_round`) next to the runtimes.
+//!
+//! The `gd_topk_fused_*` / `fedavg_topk_fused_*` family measures the
+//! fused uplink pipeline at n=1024, d=16384, Top-K k=128: `ref_pool` is
+//! the reference path (`with_fused_uplink(false)` — workers evaluate
+//! dense gradients, the driver receives cohort·d floats and compresses
+//! serially), `fused` runs the whole client pipeline in the workers and
+//! the driver replays O(k)-per-client message batches (acceptance:
+//! >= 2x, read the `clients_per_sec` column).
 
 #[path = "harness.rs"]
 mod harness;
@@ -270,6 +278,58 @@ fn main() {
             let drv2 = mk_tree2();
             b.run_case_bits("gd_topk_hier_tree2_pool_3rounds_n256_d16384", rounds, n, d, rb_t2, || {
                 let rec = drv2.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+    }
+
+    // ---- fused uplink: reference pool vs in-worker compress ----------
+    // Same workload (n=1024, d=16384, Top-K(128) uplink), three ways:
+    // the reference pool path ships cohort·d dense gradients to the
+    // driver and compresses serially there; the fused path compresses
+    // in the workers on per-client streams and hands the driver
+    // payload-proportional message batches. Bit-for-bit identical
+    // results (pinned in rust/tests/driver_equivalence.rs) — only the
+    // clock may differ. FedAvg adds in-worker local training (2 local
+    // steps), so its reference is the serial driver.
+    {
+        use fedeff::algorithms::fedavg::FedAvg;
+
+        let (n, d, k, rounds) = (1024usize, 16384usize, 128usize, 2usize);
+        let mut rng5 = fedeff::rng(17);
+        let big = QuadraticOracle::random(n, d, 0.5, 3.0, 1.0, &mut rng5);
+        let bx0 = vec![0.5f32; d];
+        let bopts = RunOptions { rounds, eval_every: 1000, ..Default::default() };
+
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv = Driver::new().with_up(Box::new(TopK::new(k))).with_fused_uplink(false);
+            b.run_case("gd_topk_fused_ref_pool_2rounds_n1024_d16384", rounds, n, d, || {
+                let rec = drv.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+        {
+            let mut alg = Gd::plain(n, d, 0.05);
+            let drv = Driver::new().with_up(Box::new(TopK::new(k)));
+            b.run_case("gd_topk_fused_2rounds_n1024_d16384", rounds, n, d, || {
+                let rec = drv.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+        {
+            let mut alg = FedAvg::new(2, 0.05);
+            let drv = Driver::new().with_up(Box::new(TopK::new(k))).with_fused_uplink(false);
+            b.run_case("fedavg_topk_fused_ref_serial_2rounds_n1024_d16384", rounds, n, d, || {
+                let rec = drv.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
+                black_box(rec.unwrap());
+            });
+        }
+        {
+            let mut alg = FedAvg::new(2, 0.05);
+            let drv = Driver::new().with_up(Box::new(TopK::new(k)));
+            b.run_case("fedavg_topk_fused_2rounds_n1024_d16384", rounds, n, d, || {
+                let rec = drv.run_parallel(&mut alg, black_box(&big), black_box(&bx0), &bopts);
                 black_box(rec.unwrap());
             });
         }

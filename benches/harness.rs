@@ -8,8 +8,15 @@
 //! [`Bench::run_case`] is recorded, and [`Bench::write_json`] dumps the
 //! batch as JSON (`{"entries": [{"name", "ns_per_iter", "rounds", "n",
 //! "d"}, ...]}`) — `benches/algorithms.rs` writes `BENCH_algorithms.json`
-//! at the repo root so perf regressions are diffable in review. CI builds
-//! the benches (`cargo bench --no-run`) so this harness cannot rot.
+//! at the repo root so perf regressions are diffable in review. A
+//! `clients_per_sec` column (`rounds · n / seconds`, 0 when the shape is
+//! unknown) is derived for every case — the throughput view the fused
+//! uplink family is judged by. CI builds the benches
+//! (`cargo bench --no-run`) and exercises the measurement + JSON-writer
+//! path on every PR through **quick mode**: setting `FEDEFF_BENCH_QUICK=1`
+//! collapses every case to 1 timed iteration with no warmup and redirects
+//! [`Bench::write_json`] to `<path>.quick` so a smoke run never
+//! overwrites the committed medians.
 
 use std::cell::RefCell;
 use std::fmt::Write as _;
@@ -35,11 +42,15 @@ pub struct Entry {
     /// Per-node uplink bits booked per round (the masked-training
     /// family's wire-saving column; 0 when not measured).
     pub bits_up_per_round: u64,
+    /// Derived throughput: `rounds * n / seconds` per iteration (0 when
+    /// the workload shape is unknown).
+    pub clients_per_sec: u64,
 }
 
 pub struct Bench {
     pub samples: usize,
     pub warmup: usize,
+    quick: bool,
     results: RefCell<Vec<Entry>>,
 }
 
@@ -51,7 +62,10 @@ impl Default for Bench {
 
 impl Bench {
     pub fn new(samples: usize) -> Self {
-        Self { samples, warmup: (samples / 10).max(1), results: RefCell::new(Vec::new()) }
+        let quick = std::env::var_os("FEDEFF_BENCH_QUICK")
+            .is_some_and(|v| v != "0" && !v.is_empty());
+        let (samples, warmup) = if quick { (1, 0) } else { (samples, (samples / 10).max(1)) };
+        Self { samples, warmup, quick, results: RefCell::new(Vec::new()) }
     }
 
     /// Time `f`, report, and record with an unspecified workload shape.
@@ -128,6 +142,9 @@ impl Bench {
             fmt(mean),
             self.samples
         );
+        let work = (rounds as u128) * (n as u128);
+        let ns = median.as_nanos().max(1);
+        let clients_per_sec = (work * 1_000_000_000u128 / ns) as u64;
         self.results.borrow_mut().push(Entry {
             name: name.to_string(),
             ns_per_iter: median.as_nanos(),
@@ -137,11 +154,13 @@ impl Bench {
             root_bits,
             nnz,
             bits_up_per_round,
+            clients_per_sec,
         });
     }
 
     /// Write every recorded case as JSON to `path` (hand-rolled — the
-    /// crate is dependency-free by policy).
+    /// crate is dependency-free by policy). Quick mode redirects to
+    /// `<path>.quick` so smoke runs never clobber committed medians.
     #[allow(dead_code)]
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         let results = self.results.borrow();
@@ -151,13 +170,22 @@ impl Bench {
         for (i, e) in results.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}}}",
-                e.name, e.ns_per_iter, e.rounds, e.n, e.d, e.root_bits, e.nnz, e.bits_up_per_round
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}, \"clients_per_sec\": {}}}",
+                e.name,
+                e.ns_per_iter,
+                e.rounds,
+                e.n,
+                e.d,
+                e.root_bits,
+                e.nnz,
+                e.bits_up_per_round,
+                e.clients_per_sec
             );
             s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
         }
         s.push_str("  ]\n}\n");
-        std::fs::write(path, s)
+        let target = if self.quick { format!("{path}.quick") } else { path.to_string() };
+        std::fs::write(target, s)
     }
 }
 

@@ -12,18 +12,50 @@
 //! * [`RoundCtx::up_compress`] / [`RoundCtx::down_compress`] apply the
 //!   driver's link compressor (dense copy when none is configured) and
 //!   return the on-wire bits of that payload;
-//! * [`RoundCtx::up_compress_sparse`] / [`RoundCtx::down_compress_sparse`]
-//!   are the O(k) fast path: when the driver has sparse links enabled and
-//!   the compressor has a native sparse form, the message lands as
+//! * [`RoundCtx::up_compress_add`] / [`RoundCtx::down_compress_sparse`]
+//!   carry the O(k) fast path: when the driver has sparse links enabled
+//!   and the compressor has a native sparse form, the message lands as
 //!   `(index, value)` pairs in a caller-reused
-//!   [`crate::compress::SparseVec`] and the algorithm aggregates it with
-//!   an O(k) scatter-add instead of an O(d) dense axpy. Both paths
-//!   consume the same link-RNG draws and book the same bits, so sparse
-//!   and dense runs match bit-for-bit;
+//!   [`crate::compress::SparseVec`] and aggregates through an O(k)
+//!   scatter-add instead of an O(d) dense axpy. Both paths consume the
+//!   same RNG draws and book the same bits, so sparse and dense runs
+//!   match bit-for-bit;
 //! * [`RoundCtx::charge_up`] / [`RoundCtx::charge_down`] book one node's
 //!   payload into the round's ledger. The driver records *per-node*
 //!   (average over senders / receivers) cumulative bits, matching the
 //!   paper's "bits per node" x-axes.
+//!
+//! Link randomness (DESIGN.md §Perf): every client-originated uplink
+//! message draws from its own deterministic stream,
+//! [`crate::compress::client_rng`]`(seed, round, client, channel)` —
+//! the channel is the index of the client's routed message within the
+//! round, inferred from consecutive sends exactly like the tree-reduce
+//! channels below. Tree nodes re-compress on the sibling
+//! [`crate::compress::node_rng`]; only the downlink (one server
+//! sender) draws from the shared per-round link stream. Per-message
+//! streams make every compression draw independent of execution order,
+//! so serial, batched, pool-parallel and fused-uplink runs of the same
+//! experiment are bit-identical *by construction*. (This changed the
+//! draws of randomized uplink compressors — Rand-K, QSGD — relative to
+//! the old shared per-round stream; trajectories of such runs differ
+//! from pre-stream releases, and the seeded bench rows were refreshed.)
+//!
+//! Fused uplink execution: an algorithm whose round is "every cohort
+//! client derives a payload from the broadcast anchor and uplinks it"
+//! can advertise that shape as an [`UplinkPlan`]
+//! ([`FlAlgorithm::uplink_plan`]). The driver then executes the whole
+//! client pipeline inside the worker pool — payload compute, mask
+//! gather, compression on the client's own stream — and hands the
+//! algorithm the merged per-channel aggregates through
+//! [`FlAlgorithm::absorb_fused`] instead of per-client
+//! [`FlAlgorithm::client_step`] calls. GD (gradient payload), FedAvg /
+//! FedProx (local-SGD delta vs. the anchor) and Scaffold (model +
+//! control pair as two channels, control rows updated in place through
+//! [`crate::coordinator::ClientRows`]) express executable plans;
+//! Scafflix expresses its anchored-delta shape but communicates
+//! conditionally (the p-coin), so the driver keeps it on the reference
+//! path. Fused rounds are bit-for-bit identical to the reference path
+//! (`Driver::with_fused_uplink(false)`).
 //!
 //! Multi-level aggregation: when the driver's topology is an executed
 //! [`AggTree`], [`RoundCtx::up_compress_add`] becomes *tree-aware*. A
@@ -91,8 +123,9 @@
 use anyhow::Result;
 
 use super::RunOptions;
-use crate::compress::{Compressor, SparseVec};
+use crate::compress::{client_rng, Compressor, SparseVec};
 use crate::coordinator::hierarchy::AggTree;
+use crate::coordinator::ClientRows;
 use crate::oracle::Oracle;
 use crate::sampling::CohortSampler;
 use crate::sparsity::{masked_compress_add_into, MaskSet};
@@ -109,6 +142,70 @@ pub fn dense_bits(d: usize) -> u64 {
 /// parallel dispatch fast paths.
 pub struct ClientMsg<'a> {
     pub grad: &'a [f32],
+}
+
+/// How one cohort client derives its uplink payload(s) from the
+/// round's broadcast anchor — the declarative half of the fused uplink
+/// pipeline (DESIGN.md §Perf). The pool's worker-side executor
+/// replicates the matching `client_step` arithmetic verbatim, so a
+/// fused round is bit-identical to the reference round.
+pub enum PayloadSpec<'a> {
+    /// One channel: grad f_client(anchor).
+    Gradient,
+    /// One channel: (local model after `steps` GD steps from the
+    /// anchor) − anchor. `prox_mu = Some(mu)` adds FedProx's proximal
+    /// pull toward the anchor inside every step.
+    LocalSgd { steps: usize, lr: f32, prox_mu: Option<f32> },
+    /// Two channels — model delta, then control delta — via Scaffold's
+    /// drift-corrected local loop. `c` is the server control; `c_i` the
+    /// per-client control table the workers update in place.
+    ScaffoldPair { steps: usize, lr: f32, c: &'a [f32], c_i: &'a ClientRows },
+    /// The client's stored local iterate (maintained by the algorithm's
+    /// own round logic) minus the anchor. Expressible — it documents
+    /// Scafflix's uplink shape — but never pool-executed: it is always
+    /// paired with conditional communication.
+    StoredIterateDelta,
+}
+
+/// How a client's uplink message is weighted into the aggregate.
+pub enum ScaleSpec<'a> {
+    /// `1 / cohort_size` (FedAvg / FedProx / Scaffold averages).
+    MeanOverCohort,
+    /// Horvitz–Thompson: `weights[client] / (n · p_sampler(client))` —
+    /// GD's unbiased reweighting under any cohort sampler.
+    WeightedHt { weights: &'a [f32] },
+}
+
+/// A per-client uplink plan: everything the driver + worker pool need
+/// to execute a round's uplinks *inside the workers* — payload recipe,
+/// scale rule, the anchor both sides know — plus whether the round
+/// communicates unconditionally (a fused pool must know the uplinks
+/// happen before it dispatches them).
+pub struct UplinkPlan<'a> {
+    /// The round's broadcast anchor (every payload derives from it).
+    pub anchor: &'a [f32],
+    pub payload: PayloadSpec<'a>,
+    pub scale: ScaleSpec<'a>,
+    /// `false` for algorithms that decide per round whether to
+    /// communicate (Scafflix's p-coin) — the driver keeps those on the
+    /// reference path.
+    pub unconditional: bool,
+}
+
+impl UplinkPlan<'_> {
+    /// Routed uplink messages per client per round.
+    pub fn channels(&self) -> usize {
+        match self.payload {
+            PayloadSpec::ScaffoldPair { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Can the pool execute this plan? (Unconditional rounds with a
+    /// worker-computable payload.)
+    pub fn executable(&self) -> bool {
+        self.unconditional && !matches!(self.payload, PayloadSpec::StoredIterateDelta)
+    }
 }
 
 /// Reusable state of the multi-level uplink reduce, owned by the driver
@@ -414,10 +511,12 @@ pub struct RoundCtx<'a> {
     pub(crate) down_nodes: u64,
     pub(crate) local_rounds: usize,
     pub(crate) communicated: bool,
-    /// Channel tracking for the tree reduce: the client currently
-    /// sending and how many routed messages it has sent this round.
-    tree_client: usize,
-    tree_channel: usize,
+    /// Uplink channel tracking: the client currently sending and the
+    /// index of its current routed message this round. Keys both the
+    /// per-client compression streams ([`crate::compress::client_rng`])
+    /// and the tree reduce's per-channel partial buffers.
+    up_client: usize,
+    up_channel: usize,
 }
 
 impl<'a> RoundCtx<'a> {
@@ -434,7 +533,9 @@ impl<'a> RoundCtx<'a> {
         tree: Option<TreeLinks<'a>>,
         mask: Option<MaskLinks<'a>>,
     ) -> Self {
-        // deterministic per-round stream for the link compressors; never
+        // deterministic per-round stream for the *downlink* compressor
+        // (one server sender); uplinks draw from per-client streams
+        // ([`crate::compress::client_rng`]) instead, and neither ever
         // touches the main rng (bit-for-bit equivalence with the
         // compressor-free path)
         let link_rng = Rng::new(seed ^ 0xC2B2AE3D27D4EB4Fu64.wrapping_mul(round as u64 + 1));
@@ -456,9 +557,25 @@ impl<'a> RoundCtx<'a> {
             down_nodes: 0,
             local_rounds: 1,
             communicated: true,
-            tree_client: usize::MAX,
-            tree_channel: 0,
+            up_client: usize::MAX,
+            up_channel: 0,
         }
+    }
+
+    /// Advance the (client, channel) uplink tracker for one routed
+    /// message: consecutive sends by the same client are successive
+    /// channels; a new client resets to channel 0. The round contract
+    /// (module docs) — every cohort client sends the same number of
+    /// routed uplink messages in the same order — makes this inference
+    /// exact.
+    fn uplink_channel(&mut self, client: usize) -> usize {
+        if self.up_client == client {
+            self.up_channel += 1;
+        } else {
+            self.up_client = client;
+            self.up_channel = 0;
+        }
+        self.up_channel
     }
 
     /// Is an uplink compressor configured on the driver?
@@ -513,21 +630,14 @@ impl<'a> RoundCtx<'a> {
         self.tree.as_ref().map(|tl| tl.scratch.edge_bits.as_slice())
     }
 
-    /// Sparse uplink fast path: `Some(bits)` iff an uplink compressor is
-    /// configured, sparse links are enabled, and the compressor has a
-    /// native sparse form. The message lands as `(index, value)` pairs
-    /// in `out`; aggregate it with [`SparseVec::add_into`] (O(k)).
-    /// Consumes the same link-RNG draws and returns the same bits as
-    /// [`RoundCtx::up_compress`], so the two paths are bit-for-bit
-    /// interchangeable. Does *not* book the bits.
-    pub fn up_compress_sparse(&mut self, x: &[f32], out: &mut SparseVec) -> Option<u64> {
-        match (self.sparse, self.up) {
-            (true, Some(c)) => c.compress_sparse(x, out, &mut self.link_rng),
-            _ => None,
-        }
-    }
-
-    /// Sparse downlink fast path; see [`RoundCtx::up_compress_sparse`].
+    /// Sparse downlink fast path: `Some(bits)` iff a downlink
+    /// compressor is configured, sparse links are enabled, and the
+    /// compressor has a native sparse form. The message lands as
+    /// `(index, value)` pairs in `out`; aggregate it with
+    /// [`SparseVec::add_into`] (O(k)). Consumes the same link-RNG draws
+    /// and returns the same bits as [`RoundCtx::down_compress`], so the
+    /// two paths are bit-for-bit interchangeable. Does *not* book the
+    /// bits.
     pub fn down_compress_sparse(&mut self, x: &[f32], out: &mut SparseVec) -> Option<u64> {
         match (self.sparse, self.down) {
             (true, Some(c)) => c.compress_sparse(x, out, &mut self.link_rng),
@@ -535,7 +645,8 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// Compress `client`'s uplink message `x` and accumulate
+    /// Compress `client`'s uplink message `x` on the client's own
+    /// stream ([`crate::compress::client_rng`]) and accumulate
     /// `scale * C(x)` toward the root: O(k) scatter-add when the
     /// compressor has a sparse form, dense decompress + axpy otherwise —
     /// the two are bit-identical. Under a flat topology (and under pure
@@ -556,8 +667,10 @@ impl<'a> RoundCtx<'a> {
         sbuf: &mut SparseVec,
         cbuf: &mut [f32],
     ) -> u64 {
+        let ch = self.uplink_channel(client);
+        let mut rng = client_rng(self.seed, self.round, client, ch);
         if self.tree.is_some() {
-            return self.tree_up_add(client, x, scale, acc, sbuf, cbuf);
+            return self.tree_up_add(client, ch, &mut rng, x, scale, acc, sbuf, cbuf);
         }
         let up = self.up;
         match self.mask.as_mut() {
@@ -571,19 +684,21 @@ impl<'a> RoundCtx<'a> {
                 ml.gather,
                 ml.cbuf,
                 sbuf,
-                &mut self.link_rng,
+                &mut rng,
             ),
-            None => {
-                compress_add_into(up, self.sparse, x, scale, acc, sbuf, cbuf, &mut self.link_rng)
-            }
+            None => compress_add_into(up, self.sparse, x, scale, acc, sbuf, cbuf, &mut rng),
         }
     }
 
-    /// The tree-aware body of [`RoundCtx::up_compress_add`].
+    /// The tree-aware body of [`RoundCtx::up_compress_add`]: `ch` is
+    /// the client's routed-message channel, `rng` its per-message
+    /// stream.
     #[allow(clippy::too_many_arguments)]
     fn tree_up_add(
         &mut self,
         client: usize,
+        ch: usize,
+        rng: &mut Rng,
         x: &[f32],
         scale: f32,
         acc: &mut [f32],
@@ -591,14 +706,6 @@ impl<'a> RoundCtx<'a> {
         cbuf: &mut [f32],
     ) -> u64 {
         let mut tl = self.tree.take().expect("tree links active");
-        // channel = index of this client's routed message this round
-        if self.tree_client == client {
-            self.tree_channel += 1;
-        } else {
-            self.tree_client = client;
-            self.tree_channel = 0;
-        }
-        let ch = self.tree_channel;
         tl.scratch.ensure_channel(ch);
         let depth = tl.tree.depth();
         let d = tl.scratch.d;
@@ -627,18 +734,9 @@ impl<'a> RoundCtx<'a> {
                     ml.gather,
                     ml.cbuf,
                     sbuf,
-                    &mut self.link_rng,
+                    rng,
                 ),
-                None => compress_add_into(
-                    up,
-                    self.sparse,
-                    x,
-                    scale,
-                    tgt,
-                    sbuf,
-                    cbuf,
-                    &mut self.link_rng,
-                ),
+                None => compress_add_into(up, self.sparse, x, scale, tgt, sbuf, cbuf, rng),
             }
         };
 
@@ -665,6 +763,68 @@ impl<'a> RoundCtx<'a> {
         }
         self.tree = Some(tl);
         leaf_bits
+    }
+
+    /// Replay one fused uplink message — already compressed on the
+    /// client's own stream and scale-premultiplied by a pool worker —
+    /// into the reduce: the driver-side half of the fused pipeline.
+    /// Performs exactly the scatter (and, under an executed tree, the
+    /// cascade bookkeeping and node flushes) that
+    /// [`RoundCtx::up_compress_add`] performs after compression, so a
+    /// fused round is bit-identical to the reference round. Does *not*
+    /// book the leaf bits — the driver books one
+    /// [`RoundCtx::charge_up`] per client with its channels' summed
+    /// bits, exactly like the serial per-client calls.
+    pub(crate) fn replay_uplink_msg(
+        &mut self,
+        client: usize,
+        ch: usize,
+        idx: &[u32],
+        val: &[f32],
+        acc: &mut [f32],
+    ) {
+        let Some(mut tl) = self.tree.take() else {
+            // flat reduce: the premultiplied scatter — bit-identical to
+            // `SparseVec::add_into(scale, acc)` over the raw message
+            for (&i, &v) in idx.iter().zip(val) {
+                acc[i as usize] += v;
+            }
+            return;
+        };
+        tl.scratch.ensure_channel(ch);
+        let d = tl.scratch.d;
+        let target = tl.reduce_target(client);
+        {
+            let tgt: &mut [f32] = match target {
+                Some((lvl, node)) => {
+                    &mut tl.scratch.partials[lvl - 1][ch][node * d..(node + 1) * d]
+                }
+                None => &mut *acc,
+            };
+            for (&i, &v) in idx.iter().zip(val) {
+                tgt[i as usize] += v;
+            }
+        }
+        // cascade: identical to the serial tree_up_add step 2
+        let depth = tl.tree.depth();
+        let mut node = client;
+        for l in 0..depth - 1 {
+            node = tl.tree.parent(l, node);
+            let lvl = l + 1;
+            if !tl.scratch.compressed[lvl] {
+                continue;
+            }
+            let rem = &mut tl.scratch.remaining[lvl - 1][ch][node];
+            *rem -= 1;
+            if *rem == 0 {
+                let (sp, sd, rd) = (self.sparse, self.seed, self.round);
+                let bits =
+                    flush_tree_node(&mut tl, self.mask.as_mut(), sp, sd, rd, lvl, node, ch, acc);
+                self.up_bits += bits;
+                self.up_nodes += 1;
+            }
+        }
+        self.tree = Some(tl);
     }
 
     /// Downlink counterpart of [`RoundCtx::up_compress_add`]. Masked by
@@ -706,13 +866,17 @@ impl<'a> RoundCtx<'a> {
         }
     }
 
-    /// Apply the uplink compressor to `x` (dense copy when none), writing
-    /// the decompressed received value into `out`; returns on-wire bits.
-    /// Does *not* book the bits — combine the payloads of one sender and
-    /// book them with [`RoundCtx::charge_up`].
-    pub fn up_compress(&mut self, x: &[f32], out: &mut [f32]) -> u64 {
+    /// Apply the uplink compressor to `client`'s message `x` (dense
+    /// copy when none), writing the decompressed received value into
+    /// `out`; returns on-wire bits. Draws from the client's own stream
+    /// and counts as one routed uplink message. Does *not* book the
+    /// bits — combine the payloads of one sender and book them with
+    /// [`RoundCtx::charge_up`].
+    pub fn up_compress(&mut self, client: usize, x: &[f32], out: &mut [f32]) -> u64 {
+        let ch = self.uplink_channel(client);
+        let mut rng = client_rng(self.seed, self.round, client, ch);
         match self.up {
-            Some(c) => c.compress(x, out, &mut self.link_rng),
+            Some(c) => c.compress(x, out, &mut rng),
             None => {
                 out.copy_from_slice(x);
                 dense_bits(x.len())
@@ -775,6 +939,8 @@ impl<'a> RoundCtx<'a> {
         delta: &mut [f32],
         recv: &mut [f32],
     ) -> bool {
+        let ch = self.uplink_channel(client);
+        let mut rng = client_rng(self.seed, self.round, client, ch);
         let up = self.up;
         let sparse = self.sparse;
         if let Some(ml) = self.mask.as_mut() {
@@ -790,7 +956,7 @@ impl<'a> RoundCtx<'a> {
                 ml.gather,
                 ml.cbuf,
                 ml.sbuf,
-                &mut self.link_rng,
+                &mut rng,
             );
             self.charge_up(bits);
             crate::vecmath::axpy(1.0, anchor, recv);
@@ -799,7 +965,7 @@ impl<'a> RoundCtx<'a> {
         match self.up {
             Some(c) => {
                 crate::vecmath::sub(local, anchor, delta);
-                let bits = c.compress(delta, recv, &mut self.link_rng);
+                let bits = c.compress(delta, recv, &mut rng);
                 self.charge_up(bits);
                 crate::vecmath::axpy(1.0, anchor, recv);
                 true
@@ -932,6 +1098,40 @@ pub trait FlAlgorithm {
     /// result to [`FlAlgorithm::client_step`].
     fn grad_point(&self) -> Option<&[f32]> {
         None
+    }
+
+    /// The round's per-client uplink shape, when it is expressible as
+    /// "derive a payload from the broadcast anchor and uplink it"
+    /// (module docs, *Fused uplink execution*). An executable plan lets
+    /// [`crate::coordinator::driver::Driver::run_parallel`] run the
+    /// whole client pipeline in the worker pool; `None` (the default)
+    /// keeps the per-client [`FlAlgorithm::client_step`] path. Like
+    /// [`FlAlgorithm::grad_point`], the answer must be decidable from
+    /// constructor state (the driver probes it before `init`); plans
+    /// must return `None` while the algorithm draws client-side
+    /// randomness (stochastic gradients consume the main round stream
+    /// serially).
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        None
+    }
+
+    /// Fold a fused round's merged per-channel uplink aggregates into
+    /// the algorithm's round state — called *instead of* the cohort's
+    /// `client_step` loop. `agg[ch]` holds exactly what the reference
+    /// path's [`RoundCtx::up_compress_add`] calls would have
+    /// accumulated for channel `ch` (same floating-point operation
+    /// sequence), and the driver has already booked every uplink
+    /// payload; implementations just adopt the aggregates (and leave
+    /// per-client state to the workers). Must be implemented by every
+    /// algorithm whose [`FlAlgorithm::uplink_plan`] is executable.
+    fn absorb_fused(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        _agg: &[Vec<f32>],
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        anyhow::bail!("{} advertises no executable fused uplink plan", self.label())
     }
 
     /// One client's contribution to the round.

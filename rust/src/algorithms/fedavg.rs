@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 
-use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, PayloadSpec, RoundCtx, ScaleSpec, UplinkPlan};
 use super::RunOptions;
 use crate::compress::SparseVec;
 use crate::oracle::Oracle;
@@ -160,6 +160,33 @@ impl FlAlgorithm for FedAvg {
         if self.dropout > 0.0 {
             cohort.retain(|_| !rng.bernoulli(self.dropout));
         }
+    }
+
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        if self.stochastic {
+            // stochastic local steps draw from the main round stream,
+            // serially — not worker-computable
+            return None;
+        }
+        Some(UplinkPlan {
+            anchor: &self.x,
+            payload: PayloadSpec::LocalSgd { steps: self.local_steps, lr: self.lr, prox_mu: None },
+            scale: ScaleSpec::MeanOverCohort,
+            unconditional: true,
+        })
+    }
+
+    fn absorb_fused(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        agg: &[Vec<f32>],
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // fused rounds only run on the delta link regimes, so `next`
+        // holds the average received delta, as in fedcom_uplink
+        self.next.copy_from_slice(&agg[0]);
+        Ok(())
     }
 
     fn client_step(

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use super::api::{ClientMsg, FlAlgorithm, RoundCtx};
+use super::api::{ClientMsg, FlAlgorithm, PayloadSpec, RoundCtx, ScaleSpec, UplinkPlan};
 use super::RunOptions;
 use crate::compress::SparseVec;
 use crate::oracle::Oracle;
@@ -171,6 +171,35 @@ impl FlAlgorithm for Gd {
         } else {
             None
         }
+    }
+
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        // plain GD only: under personalization the payload is the
+        // gradient at a per-client point, which the plan cannot express
+        if self.flix.alphas.iter().all(|&a| a == 1.0) {
+            Some(UplinkPlan {
+                anchor: &self.x,
+                payload: PayloadSpec::Gradient,
+                // same Horvitz–Thompson weighting as client_step
+                scale: ScaleSpec::WeightedHt { weights: &self.flix.alphas },
+                unconditional: true,
+            })
+        } else {
+            None
+        }
+    }
+
+    fn absorb_fused(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        agg: &[Vec<f32>],
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // the fused reduce accumulated exactly what the per-client
+        // up_compress_add calls would have put into self.grad
+        self.grad.copy_from_slice(&agg[0]);
+        Ok(())
     }
 
     fn client_step(

@@ -27,6 +27,7 @@ pub mod scafflix;
 pub mod sppm;
 
 pub use api::{build_algorithm, dense_bits, registry, ClientMsg, FlAlgorithm, RoundCtx};
+pub use api::{PayloadSpec, ScaleSpec, UplinkPlan};
 
 /// Options shared by algorithm drivers.
 #[derive(Debug, Clone)]

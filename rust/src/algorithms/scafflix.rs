@@ -23,7 +23,7 @@
 
 use anyhow::Result;
 
-use super::api::{ClientMsg, FlAlgorithm, RoundCtx};
+use super::api::{ClientMsg, FlAlgorithm, PayloadSpec, RoundCtx, ScaleSpec, UplinkPlan};
 use super::gd::personalize;
 use super::RunOptions;
 use crate::oracle::Oracle;
@@ -107,6 +107,19 @@ impl FlAlgorithm for Scafflix {
         // communication rounds are sampled via p / clients_per_round;
         // every client must take the local step each round
         false
+    }
+
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        // Scafflix's uplink is an anchored delta of the stored local
+        // iterate — expressible, but the round only communicates with
+        // probability p (decided inside server_step), so the plan is
+        // conditional and the driver keeps the reference path.
+        Some(UplinkPlan {
+            anchor: &self.x_srv,
+            payload: PayloadSpec::StoredIterateDelta,
+            scale: ScaleSpec::MeanOverCohort,
+            unconditional: false,
+        })
     }
 
     fn init(&mut self, oracle: &dyn Oracle, x0: &[f32], _opts: &RunOptions) -> Result<()> {

@@ -16,10 +16,11 @@
 
 use anyhow::Result;
 
-use super::api::{dense_bits, ClientMsg, FlAlgorithm, RoundCtx};
+use super::api::{dense_bits, ClientMsg, FlAlgorithm, PayloadSpec, RoundCtx, ScaleSpec, UplinkPlan};
 use super::fedavg::{fedcom_server_finish, fedcom_uplink};
 use super::RunOptions;
 use crate::compress::SparseVec;
+use crate::coordinator::ClientRows;
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -33,7 +34,9 @@ pub struct Scaffold {
     // run state
     x: Vec<f32>,
     c: Vec<f32>,
-    c_i: Vec<Vec<f32>>,
+    /// Per-client control variates as a flat n×d row table, so fused
+    /// pool workers can update each cohort client's row in place.
+    c_i: ClientRows,
     g: Vec<f32>,
     yi: Vec<f32>,
     cin: Vec<f32>,
@@ -53,7 +56,7 @@ impl Scaffold {
             stochastic: false,
             x: Vec::new(),
             c: Vec::new(),
-            c_i: Vec::new(),
+            c_i: ClientRows::new(0, 0),
             g: Vec::new(),
             yi: Vec::new(),
             cin: Vec::new(),
@@ -76,7 +79,7 @@ impl FlAlgorithm for Scaffold {
         let n = oracle.n_clients();
         self.x = x0.to_vec();
         self.c = vec![0.0; d];
-        self.c_i = vec![vec![0.0; d]; n];
+        self.c_i = ClientRows::new(n, d);
         self.g = vec![0.0; d];
         self.yi = vec![0.0; d];
         self.cin = vec![0.0; d];
@@ -84,6 +87,38 @@ impl FlAlgorithm for Scaffold {
         self.dc = vec![0.0; d];
         self.ddx = vec![0.0; d];
         self.buf = vec![0.0; d];
+        Ok(())
+    }
+
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        if self.stochastic {
+            // stochastic local steps draw from the main round stream
+            return None;
+        }
+        Some(UplinkPlan {
+            anchor: &self.x,
+            payload: PayloadSpec::ScaffoldPair {
+                steps: self.local_steps,
+                lr: self.lr,
+                c: &self.c,
+                c_i: &self.c_i,
+            },
+            scale: ScaleSpec::MeanOverCohort,
+            unconditional: true,
+        })
+    }
+
+    fn absorb_fused(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        agg: &[Vec<f32>],
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        // channel 0 = model deltas, channel 1 = control deltas; the
+        // workers already updated every cohort client's c_i row
+        self.dx.copy_from_slice(&agg[0]);
+        self.dc.copy_from_slice(&agg[1]);
         Ok(())
     }
 
@@ -96,22 +131,27 @@ impl FlAlgorithm for Scaffold {
     ) -> Result<()> {
         let d = self.x.len();
         let m = ctx.cohort_size as f32;
-        self.yi.copy_from_slice(&self.x);
-        for _ in 0..self.local_steps {
-            if self.stochastic {
-                oracle.loss_grad_stoch(client, &self.yi, &mut self.g, ctx.rng)?;
-            } else {
-                oracle.loss_grad(client, &self.yi, &mut self.g)?;
+        let (lr, steps, stochastic) = (self.lr, self.local_steps, self.stochastic);
+        {
+            let Self { c_i, x, c, g, yi, cin, .. } = self;
+            let ci = c_i.row_mut_exclusive(client);
+            yi.copy_from_slice(x);
+            for _ in 0..steps {
+                if stochastic {
+                    oracle.loss_grad_stoch(client, yi, g, ctx.rng)?;
+                } else {
+                    oracle.loss_grad(client, yi, g)?;
+                }
+                // y <- y - lr (g - c_i + c)
+                for j in 0..d {
+                    yi[j] -= lr * (g[j] - ci[j] + c[j]);
+                }
             }
-            // y <- y - lr (g - c_i + c)
+            // c_i^+ = c_i - c + (x - y)/(K lr)
+            let coef = 1.0 / (steps as f32 * lr);
             for j in 0..d {
-                self.yi[j] -= self.lr * (self.g[j] - self.c_i[client][j] + self.c[j]);
+                cin[j] = ci[j] - c[j] + (x[j] - yi[j]) * coef;
             }
-        }
-        // c_i^+ = c_i - c + (x - y)/(K lr)
-        let coef = 1.0 / (self.local_steps as f32 * self.lr);
-        for j in 0..d {
-            self.cin[j] = self.c_i[client][j] - self.c[j] + (self.x[j] - self.yi[j]) * coef;
         }
         if ctx.has_up() || ctx.tree_reduce() || ctx.masked() {
             // compress the two uplink deltas (model, control) individually;
@@ -119,20 +159,38 @@ impl FlAlgorithm for Scaffold {
             // (O(nnz) support-restricted under a mask). Under an executed
             // tree the two messages route as separate channels, so hubs
             // keep distinct model/control partials.
-            let (sbuf, buf) = (&mut self.sbuf, &mut self.buf);
             vm::sub(&self.yi, &self.x, &mut self.ddx);
-            let mut bits = ctx.up_compress_add(client, &self.ddx, 1.0 / m, &mut self.dx, sbuf, buf);
-            vm::sub(&self.cin, &self.c_i[client], &mut self.ddx);
-            bits += ctx.up_compress_add(client, &self.ddx, 1.0 / m, &mut self.dc, sbuf, buf);
+            let mut bits = ctx.up_compress_add(
+                client,
+                &self.ddx,
+                1.0 / m,
+                &mut self.dx,
+                &mut self.sbuf,
+                &mut self.buf,
+            );
+            {
+                let Self { c_i, cin, ddx, .. } = self;
+                vm::sub(cin, c_i.row_mut_exclusive(client), ddx);
+            }
+            bits += ctx.up_compress_add(
+                client,
+                &self.ddx,
+                1.0 / m,
+                &mut self.dc,
+                &mut self.sbuf,
+                &mut self.buf,
+            );
             ctx.charge_up(bits);
         } else {
             ctx.charge_up(2 * dense_bits(d));
+            let Self { c_i, cin, yi, x, dc, dx, .. } = self;
+            let ci = c_i.row_mut_exclusive(client);
             for j in 0..d {
-                self.dc[j] += (self.cin[j] - self.c_i[client][j]) / m;
-                self.dx[j] += (self.yi[j] - self.x[j]) / m;
+                dc[j] += (cin[j] - ci[j]) / m;
+                dx[j] += (yi[j] - x[j]) / m;
             }
         }
-        self.c_i[client].copy_from_slice(&self.cin);
+        self.c_i.row_mut_exclusive(client).copy_from_slice(&self.cin);
         Ok(())
     }
 
@@ -209,6 +267,32 @@ impl FlAlgorithm for FedProx {
         self.delta = vec![0.0; d];
         self.buf = vec![0.0; d];
         self.sbuf = SparseVec::default();
+        Ok(())
+    }
+
+    fn uplink_plan(&self) -> Option<UplinkPlan<'_>> {
+        Some(UplinkPlan {
+            anchor: &self.x,
+            payload: PayloadSpec::LocalSgd {
+                steps: self.local_steps,
+                lr: self.lr,
+                // Some(mu) replays FedProx's proximal pull verbatim,
+                // even at mu = 0 (the add is not a floating-point no-op)
+                prox_mu: Some(self.mu_prox),
+            },
+            scale: ScaleSpec::MeanOverCohort,
+            unconditional: true,
+        })
+    }
+
+    fn absorb_fused(
+        &mut self,
+        _oracle: &dyn Oracle,
+        _cohort: &[usize],
+        agg: &[Vec<f32>],
+        _ctx: &mut RoundCtx<'_>,
+    ) -> Result<()> {
+        self.next.copy_from_slice(&agg[0]);
         Ok(())
     }
 

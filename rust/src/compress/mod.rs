@@ -36,6 +36,16 @@
 //! `ceil(log2 nnz)`, and the resulting [`SparseVec`] message is
 //! remapped back to full model coordinates for the O(nnz) scatter
 //! (see [`crate::sparsity::masked_compress_add_into`]).
+//!
+//! Randomness convention (DESIGN.md §Perf): every *client-originated*
+//! uplink message is compressed on its own deterministic stream,
+//! [`client_rng`]`(seed, round, client, channel)`; tree-node
+//! re-compressions use the sibling [`node_rng`]; only the downlink —
+//! one server sender — draws from the shared per-round link stream.
+//! Per-message streams make compression draws independent of execution
+//! order, which is what lets the fused worker-pool pipeline compress on
+//! worker threads ([`Compressor::fork`] hands each worker its own
+//! instance) while staying bit-identical to the serial reference path.
 
 pub mod comp;
 pub mod mix;
@@ -137,6 +147,19 @@ pub trait Compressor {
     /// Write the decompressed `C(x)` into `out`; return message bits.
     fn compress(&self, x: &[f32], out: &mut [f32], rng: &mut Rng) -> u64;
 
+    /// A fresh instance of this operator for concurrent use from a pool
+    /// worker: the shared instance's interior-mutability selection
+    /// scratch is not thread-safe, so the fused uplink pipeline
+    /// ([`crate::coordinator::WorkerPool`]) hands every worker its own
+    /// fork at setup. `None` (the default) opts the operator out of
+    /// fusing; the sparse-capable compressors (Top-K, Rand-K, Perm-K)
+    /// implement it, and a fork must be *stateless-equivalent*: given
+    /// the same input and RNG stream it produces exactly the message
+    /// the original instance would.
+    fn fork(&self) -> Option<Box<dyn Compressor + Send>> {
+        None
+    }
+
     /// Sparse fast path: write `C(x)` as `(index, value)` pairs into
     /// `out` and return `Some(message bits)`, or `None` when this
     /// operator has no compact sparse form (callers then use the dense
@@ -234,6 +257,28 @@ pub fn node_rng(seed: u64, round: usize, level: usize, node: usize, channel: usi
     Rng::new(h)
 }
 
+/// Deterministic RNG stream for `client`'s `channel`-th uplink message
+/// on round `round` of the run seeded with `seed` — the client-side
+/// sibling of [`node_rng`].
+///
+/// Every client-originated uplink compression draws from its own
+/// stream keyed on (round, client, channel), never from a shared
+/// per-round stream. That makes the compression noise of a message a
+/// function of *whose* message it is, not of when it was compressed —
+/// so serial, batched and pool-parallel executions (and the fused
+/// in-worker pipeline, which compresses on a different thread
+/// entirely) are bit-identical by construction under any execution
+/// order. A "channel" is the index of the client's routed uplink
+/// message within the round (Scaffold's model/control pair is channels
+/// 0 and 1). The downlink — a single server sender — keeps the shared
+/// per-round link stream.
+pub fn client_rng(seed: u64, round: usize, client: usize, channel: usize) -> Rng {
+    let mut h = seed ^ 0xC2B2AE3D27D4EB4Fu64.wrapping_mul(round as u64 + 1);
+    h ^= 0x9E3779B97F4A7C15u64.wrapping_mul(client as u64 + 1);
+    h ^= 0x165667B19E3779F9u64.wrapping_mul(channel as u64 + 1);
+    Rng::new(h.rotate_left(17))
+}
+
 /// Bits for a sparse message of k (index, f32) pairs in dimension d.
 pub fn sparse_bits(k: usize, d: usize) -> u64 {
     let idx_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
@@ -315,6 +360,52 @@ mod tests {
             let mut a3 = node_rng(7, 3, 1, 0, 0);
             assert_ne!(a3.next_u64(), b.next_u64(), "lvl={lvl} node={node} ch={ch}");
         }
+    }
+
+    #[test]
+    fn client_rng_streams_are_independent_and_deterministic() {
+        // mirror of the node_rng pin: same coordinates = same stream,
+        // any differing coordinate = a different stream
+        let mut a = client_rng(7, 3, 2, 0);
+        let mut a2 = client_rng(7, 3, 2, 0);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        for (round, client, ch) in
+            [(4usize, 2usize, 0usize), (3, 1, 0), (3, 3, 0), (3, 2, 1)]
+        {
+            let mut b = client_rng(7, round, client, ch);
+            let mut a3 = client_rng(7, 3, 2, 0);
+            assert_ne!(
+                a3.next_u64(),
+                b.next_u64(),
+                "round={round} client={client} ch={ch}"
+            );
+        }
+        let mut s = client_rng(8, 3, 2, 0);
+        let mut a4 = client_rng(7, 3, 2, 0);
+        assert_ne!(a4.next_u64(), s.next_u64(), "seed must key the stream");
+        // and the client streams are distinct from the node streams of
+        // the same coordinates (they mix the same constants differently)
+        let mut n = node_rng(7, 3, 2, 0, 0);
+        let mut a5 = client_rng(7, 3, 2, 0);
+        assert_ne!(a5.next_u64(), n.next_u64());
+    }
+
+    #[test]
+    fn fork_is_default_none_and_sparse_capable_forks_match() {
+        assert!(Identity.fork().is_none());
+        let c = super::topk::TopK::new(3);
+        let f = c.fork().expect("top-k forks");
+        let x = vec![0.1f32, -5.0, 3.0, 0.2, -0.3, 4.0];
+        let mut a = SparseVec::default();
+        let mut b = SparseVec::default();
+        let ba = c.compress_sparse(&x, &mut a, &mut crate::rng(1)).unwrap();
+        let bb = f.compress_sparse(&x, &mut b, &mut crate::rng(1)).unwrap();
+        assert_eq!((ba, &a), (bb, &b));
+        let r = super::randk::RandK::unbiased(2);
+        let rf = r.fork().expect("rand-k forks");
+        let ba = r.compress_sparse(&x, &mut a, &mut crate::rng(2)).unwrap();
+        let bb = rf.compress_sparse(&x, &mut b, &mut crate::rng(2)).unwrap();
+        assert_eq!((ba, &a), (bb, &b));
     }
 
     #[test]

@@ -76,6 +76,10 @@ impl Compressor for PermK {
         Some(32 * kept as u64 + 64)
     }
 
+    fn fork(&self) -> Option<Box<dyn Compressor + Send>> {
+        Some(Box::new(PermK::new(self.n, self.worker, self.round_seed)))
+    }
+
     fn params(&self, _d: usize) -> Params {
         // individually unbiased with omega = n - 1
         Params { eta: 0.0, omega: (self.n - 1) as f32 }

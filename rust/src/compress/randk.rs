@@ -76,6 +76,11 @@ impl Compressor for RandK {
         Some(sparse_bits(k, d))
     }
 
+    fn fork(&self) -> Option<Box<dyn Compressor + Send>> {
+        let fork = RandK { k: self.k, unbiased: self.unbiased, support: RefCell::new(Vec::new()) };
+        Some(Box::new(fork))
+    }
+
     fn params(&self, d: usize) -> Params {
         let kf = self.k.min(d) as f32;
         let df = d as f32;

@@ -79,6 +79,10 @@ impl Compressor for TopK {
         Some(sparse_bits(k, d))
     }
 
+    fn fork(&self) -> Option<Box<dyn Compressor + Send>> {
+        Some(Box::new(TopK::new(self.k)))
+    }
+
     fn params(&self, d: usize) -> Params {
         let a = (self.k.min(d)) as f32 / d as f32;
         Params { eta: (1.0 - a).max(0.0).sqrt(), omega: 0.0 }

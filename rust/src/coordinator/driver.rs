@@ -6,8 +6,9 @@
 //! * the round loop and [`RunOptions`] (eval cadence, seeds, references);
 //! * cohort selection through an optional [`CohortSampler`] (none =
 //!   full participation, no RNG consumed);
-//! * per-message bit accounting through [`CommLedger`] — cumulative
-//!   per-node uplink/downlink bits, the paper's x-axes;
+//! * per-message bit accounting through [`CommLedger`] — exact bit
+//!   totals, read out as cumulative per-node uplink/downlink bits, the
+//!   paper's x-axes;
 //! * optional link [`Compressor`]s on the uplink and downlink, opening
 //!   compositions the hand-rolled loops could not express (e.g.
 //!   Scafflix with Top-K uplink compression). With [`Driver::sparse_links`]
@@ -31,12 +32,22 @@
 //!   bit-for-bit;
 //! * client execution: under [`Driver::run_parallel`] (for `Send + Sync`
 //!   oracles) a persistent [`WorkerPool`] spawned once per run — sharded
-//!   by hub when a multi-level tree is active, so one worker evaluates
-//!   all of a hub's clients and the hub reduce consumes its results
-//!   contiguously; else the oracle's batched [`Oracle::all_loss_grads`]
-//!   dispatch when supported (cohort-aware, so sampling wastes no work);
-//!   else per-client calls on the driver thread. All three visit clients
-//!   in the same (cohort) order, so the paths are loss-identical;
+//!   by hub when a multi-level tree is active. When the algorithm
+//!   advertises an executable [`FlAlgorithm::uplink_plan`] and the
+//!   uplink has a sparse wire format, the round runs **fused**
+//!   (DESIGN.md §Perf): the workers execute the whole client pipeline —
+//!   payload compute, mask gather, compression on each client's own
+//!   [`crate::compress::client_rng`] stream — and the driver replays W
+//!   payload-proportional message batches in cohort order (an O(k)
+//!   scatter per client) instead of receiving `cohort·d` dense
+//!   gradients and compressing serially. [`Driver::with_fused_uplink`]`(false)`
+//!   forces the visit-in-cohort-order reference path; the two are
+//!   bit-for-bit identical (per-client streams make the draws
+//!   execution-order-free by construction). Without a plan the pool
+//!   evaluates shared-point gradients ([`FlAlgorithm::grad_point`]);
+//!   else the oracle's batched [`Oracle::all_loss_grads`] dispatch when
+//!   supported; else per-client calls on the driver thread. All paths
+//!   visit clients in the same (cohort) order and are bit-identical;
 //! * training-time sparsity under [`Driver::with_mask`]: the run's
 //!   masks are built at init by the [`crate::pruning`] scorers from the
 //!   initial model ([`crate::sparsity::MaskState`]) — one global mask,
@@ -54,15 +65,19 @@
 //! * [`RunRecord`] emission at every eval round plus a final eval.
 //!
 //! Steady-state rounds allocate nothing: the driver reserves its record,
-//! ledger, grouping and tree-reduce capacity up front and reuses its
-//! point/gradient/batch buffers (`rust/tests/alloc_free.rs` counts
-//! allocations to pin this).
+//! ledger, grouping, tree-reduce and fused-aggregate capacity up front
+//! and reuses its point/gradient/batch buffers (`rust/tests/alloc_free.rs`
+//! counts allocations to pin this, for the serial and the fused pool
+//! paths alike).
 
 use anyhow::Result;
 
+use super::fused::{FusedPayload, RowsPtr};
 use super::hierarchy::{AggTree, Hierarchy};
 use super::{default_pool_size, CommLedger, WorkerPool};
-use crate::algorithms::api::{ClientMsg, FlAlgorithm, MaskLinks, RoundCtx, TreeLinks, TreeScratch};
+use crate::algorithms::api::{
+    ClientMsg, FlAlgorithm, MaskLinks, PayloadSpec, RoundCtx, ScaleSpec, TreeLinks, TreeScratch,
+};
 use crate::algorithms::RunOptions;
 use crate::compress::Compressor;
 use crate::metrics::{RoundStat, RunRecord};
@@ -98,17 +113,6 @@ impl Topology {
     }
 }
 
-/// Cohort evaluation hook: given (cohort, optional hub-group starts,
-/// point, visitor), evaluate every cohort client's gradient at the point
-/// and feed `(client, loss, grad)` to the visitor in cohort order.
-type ParEval<'a> = dyn Fn(
-        &[usize],
-        Option<&[usize]>,
-        &[f32],
-        &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>,
-    ) -> Result<()>
-    + 'a;
-
 /// The coordinator's algorithm runner. Construct with [`Driver::new`] and
 /// the `with_*` builders; one driver can run any number of algorithms.
 pub struct Driver {
@@ -129,6 +133,12 @@ pub struct Driver {
     /// Default `true`; `false` forces the dense reference path. The two
     /// produce bit-for-bit identical results.
     pub sparse_links: bool,
+    /// Execute uplinks inside the worker pool when the algorithm
+    /// advertises an executable [`FlAlgorithm::uplink_plan`] (fused
+    /// pipeline, [`Driver::run_parallel`] only). Default `true`;
+    /// `false` forces the visit-in-cohort-order reference path. The two
+    /// produce bit-for-bit identical results.
+    pub fused_uplink: bool,
     /// Training-time sparsity: build masks from this scorer spec at init
     /// and enforce them on every link (see the module docs). `None` runs
     /// dense.
@@ -144,6 +154,7 @@ impl Default for Driver {
             topology: Topology::default(),
             up_edges: Vec::new(),
             sparse_links: true,
+            fused_uplink: true,
             mask: None,
         }
     }
@@ -191,11 +202,49 @@ impl Driver {
         self
     }
 
+    /// Enable/disable the fused in-worker uplink pipeline (default:
+    /// enabled). `false` keeps the reference path — bit-for-bit
+    /// identical, but the driver thread receives dense per-client
+    /// gradients and compresses them serially.
+    pub fn with_fused_uplink(mut self, on: bool) -> Self {
+        self.fused_uplink = on;
+        self
+    }
+
     /// Run masked: build training-time sparsity masks from `spec` at
     /// init and enforce them on the message path.
     pub fn with_mask(mut self, spec: MaskSpec) -> Self {
         self.mask = Some(spec);
         self
+    }
+
+    /// The effective leaf (client-out) uplink compressor of this
+    /// configuration.
+    fn leaf_up(&self) -> Option<&dyn Compressor> {
+        match &self.topology {
+            Topology::Tree(_) => {
+                self.up_edges.first().and_then(|o| o.as_deref()).or(self.up.as_deref())
+            }
+            _ => self.up.as_deref(),
+        }
+    }
+
+    /// Can this driver configuration execute fused uplink rounds at all
+    /// (given a pool and a willing plan)? Fusing requires the O(k)
+    /// sparse wire format: a fork-capable (sparse-native) leaf
+    /// compressor, or a global mask with raw support payloads.
+    /// Personalized masks and dense links stay on the reference path.
+    fn fused_configured(&self) -> bool {
+        if !self.fused_uplink || !self.sparse_links {
+            return false;
+        }
+        if self.mask.as_ref().is_some_and(|m| m.personalized) {
+            return false;
+        }
+        match self.leaf_up() {
+            Some(c) => c.fork().is_some(),
+            None => self.mask.is_some(),
+        }
     }
 
     /// Run `alg` for `opts.rounds` rounds from `x0`; clients execute on
@@ -211,12 +260,14 @@ impl Driver {
         self.run_inner(alg, oracle, None, None, x0, opts)
     }
 
-    /// Like [`Driver::run`], but when the algorithm advertises a shared
-    /// [`FlAlgorithm::grad_point`], cohort gradients are evaluated by a
-    /// persistent [`WorkerPool`] — spawned once here, alive for the
-    /// whole run.
+    /// Like [`Driver::run`], but client work executes on a persistent
+    /// [`WorkerPool`] — spawned once here, alive for the whole run —
+    /// whenever the algorithm advertises a shared
+    /// [`FlAlgorithm::grad_point`] (parallel gradient evaluation) or an
+    /// executable [`FlAlgorithm::uplink_plan`] this configuration can
+    /// fuse (the in-worker compress pipeline).
     ///
-    /// The pool is only set up when `grad_point()` is already `Some`
+    /// The pool is only set up when the advertisement is already there
     /// *before* [`FlAlgorithm::init`] runs (all in-tree algorithms
     /// decide this from constructor state); an algorithm whose shared
     /// point only materializes during `init` runs serially.
@@ -248,19 +299,15 @@ impl Driver {
         O: Oracle + Send + Sync,
         F: FnMut(&RoundStat),
     {
-        if alg.grad_point().is_none() {
-            // no shared evaluation point: the pool could never be fed
+        let fusable = self.fused_configured() && alg.uplink_plan().is_some_and(|p| p.executable());
+        if alg.grad_point().is_none() && !fusable {
+            // neither a shared evaluation point nor a fusable uplink
+            // plan: the pool could never be fed
             return self.run_inner(alg, oracle, None, Some(&mut on_eval), x0, opts);
         }
         std::thread::scope(|scope| {
             let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
-            let par = |cohort: &[usize],
-                       groups: Option<&[usize]>,
-                       x: &[f32],
-                       visit: &mut dyn FnMut(usize, f32, &[f32]) -> Result<()>| {
-                pool.eval_grouped(cohort, groups, x, visit)
-            };
-            self.run_inner(alg, oracle, Some(&par), Some(&mut on_eval), x0, opts)
+            self.run_inner(alg, oracle, Some(&pool), Some(&mut on_eval), x0, opts)
         })
     }
 
@@ -268,7 +315,7 @@ impl Driver {
         &self,
         alg: &mut dyn FlAlgorithm,
         oracle: &dyn Oracle,
-        par: Option<&ParEval<'_>>,
+        pool: Option<&WorkerPool>,
         mut obs: Option<&mut dyn FnMut(&RoundStat)>,
         x0: &[f32],
         opts: &RunOptions,
@@ -307,7 +354,7 @@ impl Driver {
         if let Some(ms) = &mask_state {
             // SoteriaFL-style mask accounting: every client receives its
             // (bitset) mask before round 0, and again at every refresh
-            ledger.down(ms.set.mask_wire_bits());
+            ledger.down(ms.set.mask_wire_bits(), 1);
         }
         rec.rounds.reserve(opts.rounds / opts.eval_every.max(1) + 2);
         let mut rng = crate::rng(opts.seed);
@@ -332,15 +379,12 @@ impl Driver {
             }
             _ => None,
         };
-        let leaf_up: Option<&dyn Compressor> = match tree {
-            Some(_) => self.up_edges.first().and_then(|o| o.as_deref()).or(self.up.as_deref()),
-            None => self.up.as_deref(),
-        };
+        let leaf_up: Option<&dyn Compressor> = self.leaf_up();
         let mut tscratch = tree.map(|t| TreeScratch::new(t, &self.up_edges, d));
         // hub-group the cohort only when a real hub reduce is active:
         // pure pass-through trees keep the flat execution order exactly,
         // so the bit-for-bit flat equivalence holds for *any* sampler
-        // (grouping would reorder link-RNG consumption otherwise)
+        // (grouping would reorder per-node flush order otherwise)
         let tree_groups = tscratch.as_ref().is_some_and(|ts| ts.any_compressed());
         let mut grouped: Vec<usize> = Vec::new();
         let mut hub_off: Vec<usize> = Vec::new();
@@ -352,6 +396,29 @@ impl Driver {
                 hub_off = vec![0; t.width(1) + 1];
                 group_starts.reserve(t.width(1));
             }
+        }
+
+        // fused uplink (DESIGN.md §Perf): with a pool, an executable
+        // plan and a sparse wire format, every round runs the whole
+        // client pipeline inside the workers and the driver merges W
+        // payload-proportional message batches instead of cohort·d
+        // dense gradients
+        let fused_channels = match alg.uplink_plan() {
+            Some(p) if p.executable() => p.channels(),
+            _ => 0,
+        };
+        let fused_active = fused_channels > 0 && pool.is_some() && self.fused_configured();
+        let mut fagg: Vec<Vec<f32>> = Vec::new();
+        let mut seen: Vec<bool> = Vec::new();
+        if fused_active {
+            let pool = pool.expect("fused rounds need the worker pool");
+            let forks: Vec<Option<Box<dyn Compressor + Send>>> =
+                (0..pool.workers()).map(|_| leaf_up.and_then(|c| c.fork())).collect();
+            // fused_configured() verified fork() support whenever a leaf
+            // compressor is set, so all-None kits only occur on the
+            // masked no-compressor pipeline
+            pool.install_fused(forks);
+            fagg = (0..fused_channels).map(|_| vec![0.0f32; d]).collect();
         }
 
         for t in 0..opts.rounds {
@@ -369,7 +436,7 @@ impl Driver {
                     if t > 0 && t % r == 0 {
                         let xcur = alg.eval_point();
                         ms.rebuild(oracle, &xcur, opts.seed, t / r)?;
-                        ledger.down(ms.set.mask_wire_bits());
+                        ledger.down(ms.set.mask_wire_bits(), 1);
                     }
                 }
             }
@@ -423,6 +490,83 @@ impl Driver {
                     cohort.copy_from_slice(&grouped);
                 }
             }
+            let groups: Option<&[usize]> =
+                if group_starts.is_empty() { None } else { Some(&group_starts) };
+
+            // fused dispatch: compress-and-stage the whole cohort in the
+            // workers before the round context (and with it the mask /
+            // tree borrows) is constructed
+            if fused_active && !cohort.is_empty() {
+                let pool = pool.expect("fused rounds need the worker pool");
+                let plan = alg.uplink_plan().expect("fused run lost its uplink plan");
+                // fused rounds require distinct cohort ids (samplers are
+                // without-replacement by contract) — a repeated id would
+                // alias two writers on ScaffoldPair's state rows, and on
+                // any plan it would desync the reference path's channel
+                // inference (the repeat becomes channel 1 there, while a
+                // worker always compresses a 1-channel payload on
+                // channel 0), silently breaking fused == reference.
+                // Reject loudly instead; O(cohort) on a reusable bitmap.
+                {
+                    seen.resize(n, false);
+                    let mut dup = None;
+                    for &c in &cohort {
+                        if seen[c] {
+                            dup = Some(c);
+                        }
+                        seen[c] = true;
+                    }
+                    for &c in &cohort {
+                        seen[c] = false;
+                    }
+                    anyhow::ensure!(
+                        dup.is_none(),
+                        "fused rounds require cohorts without repeated client ids (client {})",
+                        dup.unwrap_or(0)
+                    );
+                }
+                let sampler = self.sampler.as_deref();
+                let nf = n as f32;
+                pool.fused_dispatch(&cohort, groups, &mut |input| {
+                    input.point.clear();
+                    input.point.extend_from_slice(plan.anchor);
+                    input.seed = opts.seed;
+                    input.round = t;
+                    input.scales.clear();
+                    match &plan.scale {
+                        ScaleSpec::MeanOverCohort => {
+                            input.scales.resize(cohort.len(), 1.0 / cohort.len() as f32);
+                        }
+                        ScaleSpec::WeightedHt { weights } => {
+                            for &cid in &cohort {
+                                // identical expression to Gd::client_step
+                                let p = sampler.map_or(1.0, |s| s.p(cid)) as f32;
+                                input.scales.push(weights[cid] / (nf * p));
+                            }
+                        }
+                    }
+                    input.sup.clear();
+                    if let Some(m) = mask_state.as_ref().and_then(|ms| ms.set.global()) {
+                        input.sup.extend_from_slice(m.support());
+                    }
+                    input.aux.clear();
+                    input.payload = match &plan.payload {
+                        PayloadSpec::Gradient => FusedPayload::Gradient,
+                        PayloadSpec::LocalSgd { steps, lr, prox_mu } => {
+                            FusedPayload::LocalSgd { steps: *steps, lr: *lr, prox_mu: *prox_mu }
+                        }
+                        PayloadSpec::ScaffoldPair { steps, lr, c, c_i } => {
+                            input.aux.extend_from_slice(c);
+                            let rows = RowsPtr::new(c_i);
+                            FusedPayload::Scaffold { steps: *steps, lr: *lr, rows }
+                        }
+                        PayloadSpec::StoredIterateDelta => {
+                            unreachable!("non-executable plans never fuse")
+                        }
+                    };
+                });
+            }
+
             let tree_links = match (tree, tscratch.as_mut()) {
                 (Some(tr), Some(ts)) => {
                     ts.begin_round(tr, &cohort);
@@ -452,51 +596,69 @@ impl Driver {
                 mask_links,
             );
 
-            let shared = match alg.grad_point() {
-                Some(p) => {
-                    point.clear();
-                    point.extend_from_slice(p);
-                    true
+            if fused_active {
+                // merge: replay the workers' premultiplied messages in
+                // cohort order — the exact scatter (and tree cascade)
+                // sequence of the reference path — and book one uplink
+                // charge per client, then hand the aggregates over
+                for a in fagg.iter_mut() {
+                    a.fill(0.0);
                 }
-                None => false,
-            };
-            if shared {
-                // preference order: the worker pool (parallel per-client
-                // evaluation; only pure-Rust oracles get here), then the
-                // oracle's one-dispatch batched path, then serial calls
-                if let Some(par) = par {
-                    let groups: Option<&[usize]> =
-                        if group_starts.is_empty() { None } else { Some(&group_starts) };
-                    par(&cohort, groups, &point, &mut |i, _loss, grad| {
-                        alg.client_step(oracle, i, Some(ClientMsg { grad }), &mut ctx)
+                if !cohort.is_empty() {
+                    let pool = pool.expect("fused rounds need the worker pool");
+                    let mut pending = 0u64;
+                    pool.fused_visit(&cohort, fused_channels, &mut |client, ch, idx, val, bits| {
+                        pending += bits;
+                        ctx.replay_uplink_msg(client, ch, idx, val, &mut fagg[ch]);
+                        if ch + 1 == fused_channels {
+                            ctx.charge_up(pending);
+                            pending = 0;
+                        }
+                        Ok(())
                     })?;
-                } else if oracle.all_loss_grads(&point, &cohort, &mut blosses, &mut bgrads)? {
-                    for &i in &cohort {
-                        let msg = ClientMsg { grad: &bgrads[i * d..(i + 1) * d] };
-                        alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                }
+                alg.absorb_fused(oracle, &cohort, &fagg, &mut ctx)?;
+            } else {
+                let shared = match alg.grad_point() {
+                    Some(p) => {
+                        point.clear();
+                        point.extend_from_slice(p);
+                        true
+                    }
+                    None => false,
+                };
+                if shared {
+                    // preference order: the worker pool (parallel per-client
+                    // evaluation; only pure-Rust oracles get here), then the
+                    // oracle's one-dispatch batched path, then serial calls
+                    if let Some(pool) = pool {
+                        pool.eval_grouped(&cohort, groups, &point, &mut |i, _loss, grad| {
+                            alg.client_step(oracle, i, Some(ClientMsg { grad }), &mut ctx)
+                        })?;
+                    } else if oracle.all_loss_grads(&point, &cohort, &mut blosses, &mut bgrads)? {
+                        for &i in &cohort {
+                            let msg = ClientMsg { grad: &bgrads[i * d..(i + 1) * d] };
+                            alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                        }
+                    } else {
+                        for &i in &cohort {
+                            oracle.loss_grad(i, &point, &mut gbuf)?;
+                            let msg = ClientMsg { grad: &gbuf };
+                            alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                        }
                     }
                 } else {
                     for &i in &cohort {
-                        oracle.loss_grad(i, &point, &mut gbuf)?;
-                        let msg = ClientMsg { grad: &gbuf };
-                        alg.client_step(oracle, i, Some(msg), &mut ctx)?;
+                        alg.client_step(oracle, i, None, &mut ctx)?;
                     }
-                }
-            } else {
-                for &i in &cohort {
-                    alg.client_step(oracle, i, None, &mut ctx)?;
                 }
             }
             alg.server_step(oracle, &cohort, &mut ctx)?;
 
-            // flush the round's accounting into the ledger (per-node avg
+            // flush the round's accounting into the ledger (exact totals
             // on the classic counters, per-edge totals for trees)
-            if ctx.up_nodes > 0 {
-                ledger.up(ctx.up_bits / ctx.up_nodes);
-            }
-            if ctx.down_nodes > 0 {
-                ledger.down(ctx.down_bits / ctx.down_nodes);
-            }
+            ledger.up(ctx.up_bits, ctx.up_nodes);
+            ledger.down(ctx.down_bits, ctx.down_nodes);
             if let Some(eb) = ctx.tree_edge_bits() {
                 for (l, b) in eb.iter().enumerate() {
                     ledger.up_edges[l] += b;
@@ -542,8 +704,8 @@ fn record_eval(
     };
     rec.push(RoundStat {
         round,
-        bits_up: ledger.bits_up,
-        bits_down: ledger.bits_down,
+        bits_up: ledger.bits_up(),
+        bits_down: ledger.bits_down(),
         comm_cost: ledger.cost,
         loss,
         gap,
@@ -610,7 +772,8 @@ mod tests {
     #[test]
     fn parallel_run_matches_serial_with_sampler_and_compressor() {
         // pool path under partial participation and a compressed uplink:
-        // the pool visits in cohort order, so the runs are bit-identical
+        // per-client streams + cohort-order merge keep serial, reference
+        // pool and fused pool runs bit-identical
         let mut rng = crate::rng(74);
         let q = QuadraticOracle::random(12, 16, 0.5, 2.0, 1.0, &mut rng);
         let opts = RunOptions { rounds: 60, eval_every: 15, seed: 5, ..Default::default() };
@@ -623,9 +786,14 @@ mod tests {
         let rec_s = mk().run(&mut a, &q, &vec![1.0; 16], &opts).unwrap();
         let mut b = Gd::plain(12, 16, 0.2);
         let rec_p = mk().run_parallel(&mut b, &q, &vec![1.0; 16], &opts).unwrap();
-        for (s, p) in rec_s.rounds.iter().zip(&rec_p.rounds) {
+        let mut c = Gd::plain(12, 16, 0.2);
+        let rec_r =
+            mk().with_fused_uplink(false).run_parallel(&mut c, &q, &vec![1.0; 16], &opts).unwrap();
+        for ((s, p), r) in rec_s.rounds.iter().zip(&rec_p.rounds).zip(&rec_r.rounds) {
             assert_eq!(s.loss, p.loss);
             assert_eq!(s.bits_up, p.bits_up);
+            assert_eq!(s.loss, r.loss);
+            assert_eq!(s.bits_up, r.bits_up);
         }
     }
 

@@ -1,0 +1,339 @@
+//! Worker-side half of the fused uplink pipeline (DESIGN.md §Perf).
+//!
+//! A fused round moves the whole per-client uplink — payload compute,
+//! mask gather, compression, scale — off the driver thread and into the
+//! [`super::WorkerPool`] workers. Each worker executes the round's
+//! payload recipe for every client in its (hub-aligned) chunk:
+//!
+//! 1. evaluate the payload into a reusable buffer — the gradient at the
+//!    anchor, a local-SGD delta against it, or Scaffold's model/control
+//!    pair;
+//! 2. when the run has a global sparsity mask, gather the payload onto
+//!    the support (the compressor then selects *within* the support and
+//!    index widths shrink, exactly like the serial masked path);
+//! 3. compress on the client's own deterministic stream
+//!    ([`crate::compress::client_rng`]) with the worker's private
+//!    [`Compressor`] fork;
+//! 4. premultiply the driver-provided uplink scale into the values and
+//!    append the `(index, value)` pairs plus wire bits to the worker's
+//!    message batch.
+//!
+//! The driver then replays the W batches in cohort order — the exact
+//! scatter sequence the serial reference path performs, so fused and
+//! reference runs are bit-for-bit identical while the driver's
+//! per-round work drops from `O(cohort·d)` dense hand-off plus serial
+//! `O(cohort·d log k)` compression to a payload-proportional `O(k)`
+//! scatter per client.
+//!
+//! The arithmetic in the payload arms is a *verbatim* replica of the
+//! corresponding `client_step` bodies (FedAvg / FedProx / Scaffold) —
+//! bit-exact equivalence depends on it, and
+//! `rust/tests/driver_equivalence.rs` pins every pairing.
+
+use std::cell::UnsafeCell;
+
+use anyhow::Result;
+
+use super::{PoolInput, WorkerOut};
+use crate::compress::{client_rng, Compressor};
+use crate::oracle::Oracle;
+use crate::vecmath as vm;
+
+/// A flat `n × d` table of per-client state rows that fused pool
+/// workers update in place (Scaffold's control variates c_i).
+///
+/// Interior-mutable: the worker-side accessors are `unsafe fn`s under
+/// the pool's **disjoint-row contract** — a fused round's cohort holds
+/// distinct client ids (the driver verifies this before dispatching)
+/// and worker chunks never overlap, so no two threads ever touch the
+/// same row, and the driver does not touch the table while a dispatch
+/// is in flight. The driver-thread reference path uses the safe
+/// `&mut self` accessor instead.
+pub struct ClientRows {
+    data: Vec<UnsafeCell<f32>>,
+    stride: usize,
+}
+
+// SAFETY: every access goes through the disjoint-row contract above;
+// `UnsafeCell` makes the through-shared-reference writes legal.
+unsafe impl Sync for ClientRows {}
+
+impl ClientRows {
+    /// An all-zero `n × d` table.
+    pub fn new(n: usize, d: usize) -> Self {
+        let mut data = Vec::with_capacity(n * d);
+        data.resize_with(n * d, || UnsafeCell::new(0.0));
+        Self { data, stride: d }
+    }
+
+    /// Row length d.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Row count n.
+    pub fn rows(&self) -> usize {
+        if self.stride == 0 {
+            0
+        } else {
+            self.data.len() / self.stride
+        }
+    }
+
+    /// Exclusive (driver-thread) row access — the safe reference path.
+    pub fn row_mut_exclusive(&mut self, i: usize) -> &mut [f32] {
+        let s = self.stride;
+        debug_assert!((i + 1) * s <= self.data.len());
+        // SAFETY: &mut self guarantees no other access anywhere.
+        unsafe { std::slice::from_raw_parts_mut(self.data.as_ptr().add(i * s) as *mut f32, s) }
+    }
+
+    /// Shared row read.
+    ///
+    /// # Safety
+    /// No thread may write row `i` for the duration of the borrow.
+    pub unsafe fn row(&self, i: usize) -> &[f32] {
+        let s = self.stride;
+        debug_assert!((i + 1) * s <= self.data.len());
+        std::slice::from_raw_parts(self.data.as_ptr().add(i * s) as *const f32, s)
+    }
+
+    /// Mutable row access from a shared reference (worker side).
+    ///
+    /// # Safety
+    /// The caller must have exclusive access to row `i` for the
+    /// duration of the borrow (the pool's disjoint-row contract).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [f32] {
+        let s = self.stride;
+        debug_assert!((i + 1) * s <= self.data.len());
+        std::slice::from_raw_parts_mut(self.data.as_ptr().add(i * s) as *mut f32, s)
+    }
+}
+
+/// Raw shared handle to a [`ClientRows`] table for the duration of one
+/// fused dispatch. The driver's borrow of the algorithm ends before the
+/// workers run, so a pointer — not a reference — carries the access;
+/// the driver keeps the algorithm (and with it the table) alive and
+/// untouched until every worker has signalled done.
+#[derive(Clone, Copy)]
+pub(crate) struct RowsPtr(*const ClientRows);
+
+// SAFETY: dereferenced only during a dispatch, under the disjoint-row
+// contract documented on ClientRows.
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
+impl RowsPtr {
+    pub(crate) fn new(rows: &ClientRows) -> Self {
+        Self(rows as *const ClientRows)
+    }
+
+    /// # Safety
+    /// The `ClientRows` must be alive and otherwise untouched for the
+    /// duration of the dispatch this pointer serves.
+    pub(crate) unsafe fn get<'a>(self) -> &'a ClientRows {
+        &*self.0
+    }
+}
+
+/// The worker-side payload recipe of a fused round — the executable
+/// mirror of [`crate::algorithms::api::PayloadSpec`], with borrowed
+/// algorithm state replaced by pool-copied buffers ([`PoolInput`]'s
+/// `aux`) or a raw row table ([`RowsPtr`]).
+#[derive(Clone, Copy, Default)]
+pub(crate) enum FusedPayload {
+    /// No fused round in flight.
+    #[default]
+    None,
+    /// grad f_client(anchor).
+    Gradient,
+    /// `steps` local GD steps from the anchor; payload = y − anchor.
+    /// `prox_mu = Some(mu)` replicates FedProx's proximal pull verbatim
+    /// (including `mu = 0`, whose add is not a floating-point no-op).
+    LocalSgd { steps: usize, lr: f32, prox_mu: Option<f32> },
+    /// Scaffold's two channels — model delta then control delta — with
+    /// the client's control row updated in place.
+    Scaffold { steps: usize, lr: f32, rows: RowsPtr },
+}
+
+/// One worker's private fused state: its leaf-compressor fork and the
+/// reusable payload/compression buffers (sized on first use, then
+/// steady-state allocation-free).
+#[derive(Default)]
+pub(crate) struct FusedKit {
+    comp: Option<Box<dyn Compressor + Send>>,
+    yi: Vec<f32>,
+    g: Vec<f32>,
+    pay: Vec<f32>,
+    cin: Vec<f32>,
+    gather: Vec<f32>,
+    sbuf: crate::compress::SparseVec,
+}
+
+impl FusedKit {
+    pub(crate) fn install(&mut self, comp: Option<Box<dyn Compressor + Send>>) {
+        self.comp = comp;
+    }
+}
+
+/// Compress the payload currently in `kit.pay` on `client`'s own
+/// stream and append the scale-premultiplied message to the worker's
+/// batch. Mirrors the serial paths exactly: unmasked → the
+/// compressor's native sparse message; masked → gather on the support,
+/// compress the compacted vector, remap indices back to model
+/// coordinates (no compressor: the raw support values at `32 · nnz`
+/// bits).
+fn emit(
+    kit: &mut FusedKit,
+    out: &mut WorkerOut,
+    input: &PoolInput,
+    client: usize,
+    channel: usize,
+    scale: f32,
+) -> Result<()> {
+    let FusedKit { comp, pay, gather, sbuf, .. } = kit;
+    let mut rng = client_rng(input.seed, input.round, client, channel);
+    let base = out.idx.len();
+    let bits = if !input.sup.is_empty() {
+        gather.clear();
+        gather.extend(input.sup.iter().map(|&j| pay[j as usize]));
+        match comp.as_deref() {
+            Some(c) => {
+                let bits = c
+                    .compress_sparse(gather, sbuf, &mut rng)
+                    .ok_or_else(|| anyhow::anyhow!("fused kit compressor lost its sparse form"))?;
+                for (&i, &v) in sbuf.idx.iter().zip(&sbuf.val) {
+                    out.idx.push(input.sup[i as usize]);
+                    out.val.push(scale * v);
+                }
+                bits
+            }
+            None => {
+                for (&j, &v) in input.sup.iter().zip(gather.iter()) {
+                    out.idx.push(j);
+                    out.val.push(scale * v);
+                }
+                32 * input.sup.len() as u64
+            }
+        }
+    } else {
+        let c = comp
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("unmasked fused round without a compressor fork"))?;
+        let bits = c
+            .compress_sparse(pay, sbuf, &mut rng)
+            .ok_or_else(|| anyhow::anyhow!("fused kit compressor lost its sparse form"))?;
+        for (&i, &v) in sbuf.idx.iter().zip(&sbuf.val) {
+            out.idx.push(i);
+            out.val.push(scale * v);
+        }
+        bits
+    };
+    out.lens.push((out.idx.len() - base) as u32);
+    out.bits.push(bits);
+    Ok(())
+}
+
+/// Execute the fused pipeline for `cohort[start..end]`: one message per
+/// (client, channel), appended client-major / channel-minor to the
+/// worker's batch.
+pub(crate) fn run_chunk<O: Oracle>(
+    oracle: &O,
+    input: &PoolInput,
+    kit: &mut FusedKit,
+    out: &mut WorkerOut,
+    start: usize,
+    end: usize,
+    dim: usize,
+) -> Result<()> {
+    out.err = None;
+    out.idx.clear();
+    out.val.clear();
+    out.lens.clear();
+    out.bits.clear();
+    out.count = end - start;
+    kit.yi.resize(dim, 0.0);
+    kit.g.resize(dim, 0.0);
+    kit.pay.resize(dim, 0.0);
+    kit.cin.resize(dim, 0.0);
+    for p in start..end {
+        let client = input.cohort[p];
+        let scale = input.scales[p];
+        match input.payload {
+            FusedPayload::None => anyhow::bail!("fused job dispatched without a payload recipe"),
+            FusedPayload::Gradient => {
+                oracle.loss_grad(client, &input.point, &mut kit.pay)?;
+                emit(kit, out, input, client, 0, scale)?;
+            }
+            FusedPayload::LocalSgd { steps, lr, prox_mu } => {
+                // verbatim FedAvg::client_step / FedProx::client_step
+                let x = &input.point;
+                kit.yi.copy_from_slice(x);
+                for _ in 0..steps {
+                    oracle.loss_grad(client, &kit.yi, &mut kit.g)?;
+                    if let Some(mu) = prox_mu {
+                        for j in 0..dim {
+                            kit.g[j] += mu * (kit.yi[j] - x[j]);
+                        }
+                    }
+                    vm::axpy(-lr, &kit.g, &mut kit.yi);
+                }
+                // FedCOM delta against the broadcast anchor
+                vm::sub(&kit.yi, x, &mut kit.pay);
+                emit(kit, out, input, client, 0, scale)?;
+            }
+            FusedPayload::Scaffold { steps, lr, rows } => {
+                // SAFETY: the fused contract — distinct cohort ids,
+                // disjoint chunks, the driver blocked until every
+                // worker is done — gives this worker exclusive access
+                // to `client`'s control row for the whole job.
+                let ci = unsafe { rows.get().row_mut(client) };
+                let x = &input.point;
+                let c = &input.aux;
+                // verbatim Scaffold::client_step
+                kit.yi.copy_from_slice(x);
+                for _ in 0..steps {
+                    oracle.loss_grad(client, &kit.yi, &mut kit.g)?;
+                    // y <- y - lr (g - c_i + c)
+                    for j in 0..dim {
+                        kit.yi[j] -= lr * (kit.g[j] - ci[j] + c[j]);
+                    }
+                }
+                // c_i^+ = c_i - c + (x - y)/(K lr)
+                let coef = 1.0 / (steps as f32 * lr);
+                for j in 0..dim {
+                    kit.cin[j] = ci[j] - c[j] + (x[j] - kit.yi[j]) * coef;
+                }
+                vm::sub(&kit.yi, x, &mut kit.pay);
+                emit(kit, out, input, client, 0, scale)?;
+                vm::sub(&kit.cin, ci, &mut kit.pay);
+                emit(kit, out, input, client, 1, scale)?;
+                ci.copy_from_slice(&kit.cin);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_rows_roundtrip_and_exclusive_access() {
+        let mut rows = ClientRows::new(3, 4);
+        assert_eq!((rows.rows(), rows.stride()), (3, 4));
+        rows.row_mut_exclusive(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        rows.row_mut_exclusive(2)[0] = -7.0;
+        // SAFETY: single-threaded test, no concurrent writers.
+        unsafe {
+            assert_eq!(rows.row(0), &[0.0; 4]);
+            assert_eq!(rows.row(1), &[1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(rows.row(2)[0], -7.0);
+            // shared-path writes land too
+            rows.row_mut(0)[3] = 9.0;
+        }
+        assert_eq!(rows.row_mut_exclusive(0)[3], 9.0);
+    }
+}

@@ -8,10 +8,10 @@
 //! [`hierarchy::AggTree`], [`driver::Topology`]), *what subspace* they
 //! talk in (the per-run training-time sparsity masks of
 //! [`crate::sparsity`], built and refreshed by the driver and enforced
-//! on every link), how bits are accounted ([`CommLedger`] — per-node
-//! averages on the classic counters, plus per-edge-class totals under
-//! an executed aggregation tree and support-sized payloads plus a mask
-//! charge under masks), and how a fleet of clients executes
+//! on every link), how bits are accounted ([`CommLedger`] — exact bit
+//! totals, read out as per-node averages, plus per-edge-class totals
+//! under an executed aggregation tree and support-sized payloads plus a
+//! mask charge under masks), and how a fleet of clients executes
 //! concurrently ([`WorkerPool`]).
 //!
 //! Multi-level aggregation ([`driver::Topology::Tree`]): the driver
@@ -26,47 +26,87 @@
 //!
 //! Perf contract of the client pump (DESIGN.md §Perf): a [`WorkerPool`]
 //! is spawned **once per run**, not per round — its OS threads live for
-//! the whole round loop and each worker owns reusable loss/gradient
-//! buffers, so steady-state rounds perform no thread spawns and no
-//! per-client `vec![0.0; d]` allocations (the pre-pool pump paid both,
-//! every round). Results are visited in **cohort order** — the same
-//! order the serial path uses — so pool-parallel runs are loss-identical
-//! to serial runs. Under a multi-level tree the pool is **sharded by
-//! hub** ([`WorkerPool::eval_grouped`]): worker chunks align to hub
-//! boundaries, so a single worker evaluates all of a hub's clients and
-//! the hub's partial reduce consumes one worker's results contiguously.
-//! The pool requires a `Send + Sync` oracle (the pure-Rust ones); the
-//! PJRT-backed oracles run on the driver thread because the FFI handles
-//! are not `Send`, and usually hit the batched
-//! [`crate::oracle::Oracle::all_loss_grads`] dispatch instead.
+//! the whole round loop, each worker owns reusable loss/gradient/
+//! message buffers, and all driver↔worker signalling goes through
+//! mutex/condvar job slots (never an allocating channel), so
+//! steady-state rounds perform no thread spawns and no allocations.
+//! The pool runs in one of two modes per round:
+//!
+//! * **Reference pump** ([`WorkerPool::eval_grouped`]): workers
+//!   evaluate cohort gradients at a shared point and the driver visits
+//!   the dense results in **cohort order** — the same order the serial
+//!   path uses, so pool-parallel runs are loss-identical to serial
+//!   runs.
+//! * **Fused uplink** (driven by [`driver::Driver`] when the algorithm
+//!   advertises an
+//!   [`crate::algorithms::api::FlAlgorithm::uplink_plan`]): each worker
+//!   executes the *whole client pipeline* — evaluate the payload
+//!   (gradient or local-training delta) into a reusable buffer, gather
+//!   it onto the run mask's support when sparsity is active, compress
+//!   it on the client's own [`crate::compress::client_rng`] stream with
+//!   the worker's private [`crate::compress::Compressor::fork`], and
+//!   append the scale-premultiplied `(index, value)` pairs to the
+//!   worker's message batch. The driver then receives W payload-
+//!   proportional batches (O(k) per client) plus per-message bit
+//!   counts instead of `cohort·d` dense gradients, and replays them in
+//!   cohort order — the identical scatter sequence the reference path
+//!   performs, so fused and reference runs match bit for bit.
+//!
+//! Under a multi-level tree both modes shard **by hub** (the chunk
+//! planner aligns chunk boundaries to hub groups and balances the
+//! remaining work adaptively, so skewed hub sizes still dispatch
+//! `min(workers, hubs)` chunks), which keeps each hub's partial reduce
+//! inside one worker's contiguous results. The pool requires a
+//! `Send + Sync` oracle (the pure-Rust ones); the PJRT-backed oracles
+//! run on the driver thread because the FFI handles are not `Send`,
+//! and usually hit the batched [`crate::oracle::Oracle::all_loss_grads`]
+//! dispatch instead.
 
 pub mod driver;
+pub mod fused;
 pub mod hierarchy;
 
-use std::cell::RefCell;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::cell::{Cell, RefCell};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::Result;
 
+use crate::compress::Compressor;
 use crate::oracle::Oracle;
 
+pub use fused::ClientRows;
+use fused::{FusedKit, FusedPayload};
+
 /// Exact communication accounting (bits + abstract cost units).
+///
+/// The classic counters accumulate **exact totals** — bits and
+/// sender/receiver node-rounds — and the paper's cumulative per-node
+/// x-axes are derived at read time ([`CommLedger::bits_up`] /
+/// [`CommLedger::bits_down`]): `total_bits * rounds / node_rounds`,
+/// one integer division per read instead of one truncation per round
+/// (with a constant cohort this is exactly `total / cohort`; the old
+/// per-round `bits / nodes` flush lost up to `nodes - 1` bits every
+/// round).
 #[derive(Debug, Clone, Default)]
 pub struct CommLedger {
-    pub bits_up: u64,
-    pub bits_down: u64,
+    up_bits_total: u64,
+    up_node_rounds: u64,
+    up_rounds: u64,
+    down_bits_total: u64,
+    down_node_rounds: u64,
+    down_rounds: u64,
     pub cost: f64,
     /// Cumulative uplink bits that traversed each edge class of an
     /// executed [`hierarchy::AggTree`] (index 0 = client→hub), summed
     /// over *all* senders on that edge — the "bits per edge traversed"
-    /// view; empty under flat/annotation topologies. Unlike `bits_up`
-    /// this is a total, not a per-node average, so hub→server reduction
-    /// factors read off directly. Caveat: edges at and above the first
-    /// re-compressing level carry only hub-reduce traffic, so for
-    /// algorithms that bypass tree routing (EF-BV, Scafflix, SPPM-AS —
-    /// they aggregate their own way) those entries stay 0 even though
-    /// their dense aggregates do reach the server.
+    /// view; empty under flat/annotation topologies. Unlike
+    /// [`CommLedger::bits_up`] this is a total, not a per-node average,
+    /// so hub→server reduction factors read off directly. Caveat: edges
+    /// at and above the first re-compressing level carry only
+    /// hub-reduce traffic, so for algorithms that bypass tree routing
+    /// (EF-BV, Scafflix, SPPM-AS — they aggregate their own way) those
+    /// entries stay 0 even though their dense aggregates do reach the
+    /// server.
     ///
     /// Mask-bit convention (training-time sparsity,
     /// [`crate::sparsity`]): masked payloads book their *support-sized*
@@ -81,18 +121,53 @@ pub struct CommLedger {
     pub history: Vec<(usize, u64, u64, f64)>,
 }
 
+/// `total * rounds / node_rounds` — the cumulative per-node average,
+/// derived once at read time (u128 intermediate so totals never clip).
+fn per_node(total: u64, node_rounds: u64, rounds: u64) -> u64 {
+    if node_rounds == 0 {
+        0
+    } else {
+        (total as u128 * rounds as u128 / node_rounds as u128) as u64
+    }
+}
+
 impl CommLedger {
-    pub fn up(&mut self, bits: u64) {
-        self.bits_up += bits;
+    /// Book one uplink flush: `bits` total over `nodes` senders.
+    pub fn up(&mut self, bits: u64, nodes: u64) {
+        if nodes > 0 {
+            self.up_bits_total += bits;
+            self.up_node_rounds += nodes;
+            self.up_rounds += 1;
+        }
     }
-    pub fn down(&mut self, bits: u64) {
-        self.bits_down += bits;
+
+    /// Book one downlink flush: `bits` total over `nodes` receivers (a
+    /// broadcast is one receiver-set; the mask charge books per-receiver
+    /// bits with `nodes = 1`).
+    pub fn down(&mut self, bits: u64, nodes: u64) {
+        if nodes > 0 {
+            self.down_bits_total += bits;
+            self.down_node_rounds += nodes;
+            self.down_rounds += 1;
+        }
     }
+
+    /// Cumulative per-node uplink bits (exact; see the type docs).
+    pub fn bits_up(&self) -> u64 {
+        per_node(self.up_bits_total, self.up_node_rounds, self.up_rounds)
+    }
+
+    /// Cumulative per-node downlink bits (exact; see the type docs).
+    pub fn bits_down(&self) -> u64 {
+        per_node(self.down_bits_total, self.down_node_rounds, self.down_rounds)
+    }
+
     pub fn charge(&mut self, cost: f64) {
         self.cost += cost;
     }
+
     pub fn snapshot(&mut self, round: usize) {
-        self.history.push((round, self.bits_up, self.bits_down, self.cost));
+        self.history.push((round, self.bits_up(), self.bits_down(), self.cost));
     }
 }
 
@@ -102,36 +177,184 @@ pub fn default_pool_size() -> usize {
 }
 
 /// Round inputs shared between the driver thread and the workers,
-/// refreshed in place each round (capacity persists).
+/// refreshed in place each round (capacity persists). The fused fields
+/// are only read by [`Job::Fused`] jobs.
 #[derive(Default)]
-struct PoolInput {
-    point: Vec<f32>,
-    cohort: Vec<usize>,
+pub(crate) struct PoolInput {
+    pub(crate) point: Vec<f32>,
+    pub(crate) cohort: Vec<usize>,
+    /// Fused: per-cohort-position uplink scale, premultiplied into the
+    /// message values by the worker.
+    pub(crate) scales: Vec<f32>,
+    /// Fused: the run's global mask support (empty = unmasked).
+    pub(crate) sup: Vec<u32>,
+    /// Fused: payload auxiliary vector (Scaffold's server control c).
+    pub(crate) aux: Vec<f32>,
+    /// Fused: the payload recipe workers execute.
+    pub(crate) payload: FusedPayload,
+    pub(crate) seed: u64,
+    pub(crate) round: usize,
 }
 
 /// One worker's output slots for the chunk it was last assigned; the
 /// buffers are reused across rounds (resize, never reallocate at steady
 /// state) and locked only at hand-off.
 #[derive(Default)]
-struct WorkerOut {
-    losses: Vec<f32>,
-    grads: Vec<f32>,
-    count: usize,
-    err: Option<anyhow::Error>,
+pub(crate) struct WorkerOut {
+    pub(crate) losses: Vec<f32>,
+    pub(crate) grads: Vec<f32>,
+    pub(crate) count: usize,
+    /// Fused: concatenated scale-premultiplied sparse messages
+    /// (client-major, channel-minor within the chunk), with per-message
+    /// pair counts and wire bits alongside.
+    pub(crate) idx: Vec<u32>,
+    pub(crate) val: Vec<f32>,
+    pub(crate) lens: Vec<u32>,
+    pub(crate) bits: Vec<u64>,
+    pub(crate) err: Option<anyhow::Error>,
+}
+
+/// One unit of work handed to a worker through its job slot.
+enum Job {
+    /// Evaluate gradients of `cohort[start..end]` at the shared point.
+    Eval { start: usize, end: usize },
+    /// Run the fused uplink pipeline over `cohort[start..end]`.
+    Fused { start: usize, end: usize },
+    /// Swap in the worker's fused kit (its private leaf-compressor
+    /// fork; `None` for the masked no-compressor pipeline).
+    Setup { comp: Option<Box<dyn Compressor + Send>> },
+    /// Exit the worker loop (sent on pool drop).
+    Quit,
+}
+
+/// Per-worker mailbox: a single-job slot plus the worker's output
+/// buffers. Mutex + condvar instead of a channel so steady-state rounds
+/// allocate nothing (std's mpsc allocates per send).
+struct WorkerCell {
+    job: Mutex<Option<Job>>,
+    ready: Condvar,
+    out: Mutex<WorkerOut>,
+}
+
+/// Completion gate: workers bump the monotonic counter, the driver
+/// waits for its target. Allocation-free.
+#[derive(Default)]
+struct DoneGate {
+    count: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl DoneGate {
+    fn signal(&self) {
+        let mut c = self.count.lock().unwrap_or_else(|p| p.into_inner());
+        *c += 1;
+        self.cv.notify_all();
+    }
+
+    fn wait_until(&self, target: u64) {
+        let mut c = self.count.lock().unwrap_or_else(|p| p.into_inner());
+        while *c < target {
+            c = self.cv.wait(c).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Dense gradient evaluation of one chunk (the reference pump).
+fn eval_chunk<O: Oracle>(
+    oracle: &O,
+    input: &PoolInput,
+    out: &mut WorkerOut,
+    start: usize,
+    end: usize,
+    dim: usize,
+) {
+    let m = end - start;
+    out.count = m;
+    out.err = None;
+    out.losses.resize(m, 0.0);
+    out.grads.resize(m * dim, 0.0);
+    for (j, &client) in input.cohort[start..end].iter().enumerate() {
+        let g = &mut out.grads[j * dim..(j + 1) * dim];
+        match oracle.loss_grad(client, &input.point, g) {
+            Ok(l) => out.losses[j] = l,
+            Err(e) => {
+                out.err = Some(e);
+                break;
+            }
+        }
+    }
+}
+
+/// Record a worker panic into its out slot so the driver sees an error
+/// instead of silence.
+fn poison(cell: &WorkerCell, what: &str) {
+    let mut guard = cell.out.lock().unwrap_or_else(|p| p.into_inner());
+    guard.count = 0;
+    guard.err = Some(anyhow::anyhow!("pool worker panicked in {what}"));
+}
+
+/// Partition `len` cohort slots into at most `workers` contiguous
+/// chunks, aligned to `groups` start offsets when given (a hub never
+/// spans two chunks). The target chunk size adapts to the work and
+/// workers *remaining*, and a chunk also closes whenever the groups
+/// left could otherwise no longer each get their own worker — so
+/// skewed hub sizes (one giant hub up front, crumbs behind it) still
+/// dispatch `min(workers, groups)` chunks instead of idling most of
+/// the pool behind one boundary.
+pub(crate) fn plan_chunks(
+    len: usize,
+    groups: Option<&[usize]>,
+    workers: usize,
+    bounds: &mut Vec<usize>,
+) {
+    bounds.clear();
+    bounds.push(0);
+    let workers = workers.max(1);
+    match groups {
+        Some(starts) if !starts.is_empty() => {
+            let ngroups = starts.len();
+            let mut chunk_start = 0usize;
+            let mut chunks_left = workers;
+            let ends = starts.iter().skip(1).copied().chain(std::iter::once(len));
+            for (gi, gend) in ends.enumerate() {
+                if gend >= len || chunks_left <= 1 {
+                    break;
+                }
+                let groups_after = ngroups - 1 - gi;
+                let target = (len - chunk_start).div_ceil(chunks_left);
+                if gend - chunk_start >= target || groups_after < chunks_left {
+                    bounds.push(gend);
+                    chunk_start = gend;
+                    chunks_left -= 1;
+                }
+            }
+        }
+        _ => {
+            let target = len.div_ceil(workers).max(1);
+            let mut s = target;
+            while s < len {
+                bounds.push(s);
+                s += target;
+            }
+        }
+    }
+    bounds.push(len);
+    debug_assert!(bounds.len() - 1 <= workers);
 }
 
 /// A persistent pool of client-evaluation workers, spawned once per run
 /// on a [`std::thread::scope`] and fed one contiguous cohort chunk per
-/// round. Dropping the pool (or unwinding past it) closes the job
-/// channels; the workers drain and the scope joins them.
+/// round through per-worker job slots. Dropping the pool (or unwinding
+/// past it) posts a quit job to every slot; the workers drain and the
+/// scope joins them.
 pub struct WorkerPool {
     input: Arc<RwLock<PoolInput>>,
-    outs: Vec<Arc<Mutex<WorkerOut>>>,
-    jobs: Vec<Sender<(usize, usize)>>,
-    done: Receiver<()>,
+    cells: Vec<Arc<WorkerCell>>,
+    done: Arc<DoneGate>,
+    done_target: Cell<u64>,
     dim: usize,
     /// Reusable chunk boundaries of the last dispatch (driver-thread
-    /// only; the workers receive their ranges over the job channels).
+    /// only; the workers receive their ranges in the job itself).
     bounds: RefCell<Vec<usize>>,
 }
 
@@ -150,56 +373,100 @@ impl WorkerPool {
         let workers = workers.max(1);
         let dim = oracle.dim();
         let input: Arc<RwLock<PoolInput>> = Arc::default();
-        let (done_tx, done) = channel();
-        let mut jobs = Vec::with_capacity(workers);
-        let mut outs = Vec::with_capacity(workers);
+        let done: Arc<DoneGate> = Arc::default();
+        let mut cells = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let (job_tx, job_rx) = channel::<(usize, usize)>();
-            let out: Arc<Mutex<WorkerOut>> = Arc::default();
+            let cell = Arc::new(WorkerCell {
+                job: Mutex::new(None),
+                ready: Condvar::new(),
+                out: Mutex::new(WorkerOut::default()),
+            });
+            let cell_w = cell.clone();
             let input_w = input.clone();
-            let out_w = out.clone();
-            let done_w = done_tx.clone();
+            let done_w = done.clone();
             scope.spawn(move || {
-                while let Ok((start, end)) = job_rx.recv() {
-                    // catch panics from the oracle so the done signal is
-                    // always sent — a silently missing signal would leave
-                    // the driver blocked in eval() forever
-                    let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let input = input_w.read().expect("pool input lock poisoned");
-                        let mut guard = out_w.lock().unwrap_or_else(|p| p.into_inner());
-                        let slot = &mut *guard;
-                        let m = end - start;
-                        slot.count = m;
-                        slot.err = None;
-                        slot.losses.resize(m, 0.0);
-                        slot.grads.resize(m * dim, 0.0);
-                        for (j, &client) in input.cohort[start..end].iter().enumerate() {
-                            let g = &mut slot.grads[j * dim..(j + 1) * dim];
-                            match oracle.loss_grad(client, &input.point, g) {
-                                Ok(l) => slot.losses[j] = l,
-                                Err(e) => {
-                                    slot.err = Some(e);
-                                    break;
-                                }
+                let mut kit = FusedKit::default();
+                loop {
+                    let job = {
+                        let mut slot = cell_w.job.lock().unwrap_or_else(|p| p.into_inner());
+                        loop {
+                            if let Some(j) = slot.take() {
+                                break j;
+                            }
+                            slot = cell_w.ready.wait(slot).unwrap_or_else(|p| p.into_inner());
+                        }
+                    };
+                    // catch panics from the oracle / compressor so the
+                    // done signal is always sent — a silently missing
+                    // signal would block the driver forever
+                    match job {
+                        Job::Quit => return,
+                        Job::Setup { comp } => kit.install(comp),
+                        Job::Eval { start, end } => {
+                            let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                let input = input_w.read().expect("pool input lock poisoned");
+                                let mut out = cell_w.out.lock().unwrap_or_else(|p| p.into_inner());
+                                eval_chunk(oracle, &input, &mut out, start, end, dim);
+                            }));
+                            if work.is_err() {
+                                poison(&cell_w, "Oracle::loss_grad");
                             }
                         }
-                    }));
-                    if work.is_err() {
-                        let mut guard = out_w.lock().unwrap_or_else(|p| p.into_inner());
-                        guard.count = 0;
-                        guard.err = Some(anyhow::anyhow!(
-                            "pool worker panicked in Oracle::loss_grad"
-                        ));
+                        Job::Fused { start, end } => {
+                            let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                let input = input_w.read().expect("pool input lock poisoned");
+                                let mut out = cell_w.out.lock().unwrap_or_else(|p| p.into_inner());
+                                let kit = &mut kit;
+                                if let Err(e) =
+                                    fused::run_chunk(oracle, &input, kit, &mut out, start, end, dim)
+                                {
+                                    out.err = Some(e);
+                                }
+                            }));
+                            if work.is_err() {
+                                poison(&cell_w, "the fused uplink pipeline");
+                            }
+                        }
                     }
-                    if done_w.send(()).is_err() {
-                        return; // driver side is gone
-                    }
+                    done_w.signal();
                 }
             });
-            jobs.push(job_tx);
-            outs.push(out);
+            cells.push(cell);
         }
-        Self { input, outs, jobs, done, dim, bounds: RefCell::new(Vec::new()) }
+        let bounds = RefCell::new(Vec::new());
+        Self { input, cells, done, done_target: Cell::new(0), dim, bounds }
+    }
+
+    /// Pool width.
+    pub fn workers(&self) -> usize {
+        self.cells.len()
+    }
+
+    fn send(&self, w: usize, job: Job) {
+        let cell = &self.cells[w];
+        let mut slot = cell.job.lock().unwrap_or_else(|p| p.into_inner());
+        debug_assert!(slot.is_none(), "worker {w} already holds a pending job");
+        *slot = Some(job);
+        cell.ready.notify_one();
+    }
+
+    /// Plan chunk boundaries and post one job per active chunk; returns
+    /// the number of chunks dispatched.
+    fn dispatch(&self, len: usize, groups: Option<&[usize]>, fused: bool) -> usize {
+        let mut bounds = self.bounds.borrow_mut();
+        plan_chunks(len, groups, self.cells.len(), &mut bounds);
+        let active = bounds.len() - 1;
+        for w in 0..active {
+            let (start, end) = (bounds[w], bounds[w + 1]);
+            self.send(w, if fused { Job::Fused { start, end } } else { Job::Eval { start, end } });
+        }
+        active
+    }
+
+    fn await_done(&self, active: usize) {
+        let target = self.done_target.get() + active as u64;
+        self.done_target.set(target);
+        self.done.wait_until(target);
     }
 
     /// Evaluate every cohort client's gradient at `x` across the pool,
@@ -239,45 +506,11 @@ impl WorkerPool {
             input.cohort.clear();
             input.cohort.extend_from_slice(cohort);
         }
-        // chunk boundaries: each closed chunk holds >= target clients, so
-        // there are never more chunks than workers (reusable buffer, no
-        // steady-state allocation)
-        let target = cohort.len().div_ceil(self.jobs.len()).max(1);
-        let mut bounds = self.bounds.borrow_mut();
-        bounds.clear();
-        bounds.push(0);
-        match groups {
-            Some(starts) if !starts.is_empty() => {
-                let mut chunk_start = 0usize;
-                let ends = starts.iter().skip(1).copied().chain(std::iter::once(cohort.len()));
-                for gend in ends {
-                    if gend - chunk_start >= target && gend < cohort.len() {
-                        bounds.push(gend);
-                        chunk_start = gend;
-                    }
-                }
-            }
-            _ => {
-                let mut s = target;
-                while s < cohort.len() {
-                    bounds.push(s);
-                    s += target;
-                }
-            }
-        }
-        bounds.push(cohort.len());
-        let active = bounds.len() - 1;
-        debug_assert!(active <= self.jobs.len());
+        let active = self.dispatch(cohort.len(), groups, false);
+        self.await_done(active);
+        let bounds = self.bounds.borrow();
         for w in 0..active {
-            self.jobs[w]
-                .send((bounds[w], bounds[w + 1]))
-                .map_err(|_| anyhow::anyhow!("pool worker exited"))?;
-        }
-        for _ in 0..active {
-            self.done.recv().map_err(|_| anyhow::anyhow!("pool worker exited"))?;
-        }
-        for w in 0..active {
-            let mut guard = self.outs[w].lock().unwrap_or_else(|p| p.into_inner());
+            let mut guard = self.cells[w].out.lock().unwrap_or_else(|p| p.into_inner());
             if let Some(e) = guard.err.take() {
                 return Err(e);
             }
@@ -287,6 +520,92 @@ impl WorkerPool {
             }
         }
         Ok(())
+    }
+
+    /// Install each worker's fused kit — its private fork of the leaf
+    /// uplink compressor (`None` for the masked no-compressor
+    /// pipeline). One entry per worker; blocks until every worker has
+    /// swapped kits. Called once per run (the kit persists across
+    /// rounds).
+    pub(crate) fn install_fused(&self, mut forks: Vec<Option<Box<dyn Compressor + Send>>>) {
+        let w = self.cells.len();
+        debug_assert_eq!(forks.len(), w, "one compressor fork per worker");
+        for i in (0..w).rev() {
+            let comp = forks.pop().expect("one fork per worker");
+            self.send(i, Job::Setup { comp });
+        }
+        self.await_done(w);
+    }
+
+    /// First half of a fused uplink round: `fill` writes the round's
+    /// inputs (anchor point, per-position scales, payload recipe, mask
+    /// support, ...) into the shared [`PoolInput`], then the cohort is
+    /// dispatched in hub-aligned chunks and the call blocks until
+    /// every worker has compressed its clients. Pair with
+    /// [`WorkerPool::fused_visit`] (split so the driver can build its
+    /// round context between the two).
+    pub(crate) fn fused_dispatch(
+        &self,
+        cohort: &[usize],
+        groups: Option<&[usize]>,
+        fill: &mut dyn FnMut(&mut PoolInput),
+    ) {
+        debug_assert!(!cohort.is_empty());
+        {
+            let mut input = self.input.write().expect("pool input lock poisoned");
+            input.cohort.clear();
+            input.cohort.extend_from_slice(cohort);
+            fill(&mut input);
+        }
+        let active = self.dispatch(cohort.len(), groups, true);
+        self.await_done(active);
+    }
+
+    /// Second half of a fused round: visit the messages the last
+    /// [`WorkerPool::fused_dispatch`] produced, in **cohort order** —
+    /// `(client, channel, idx, val, wire_bits)` with scale-
+    /// premultiplied pairs — which is exactly the serial reference
+    /// path's scatter sequence, so replaying it is bit-identical to
+    /// the reference round.
+    pub(crate) fn fused_visit(
+        &self,
+        cohort: &[usize],
+        channels: usize,
+        visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
+    ) -> Result<()> {
+        let bounds = self.bounds.borrow();
+        let active = bounds.len() - 1;
+        for w in 0..active {
+            let mut guard = self.cells[w].out.lock().unwrap_or_else(|p| p.into_inner());
+            let out = &mut *guard;
+            if let Some(e) = out.err.take() {
+                return Err(e);
+            }
+            let m = bounds[w + 1] - bounds[w];
+            debug_assert_eq!(out.lens.len(), m * channels, "fused worker message count");
+            let mut off = 0usize;
+            for (msg, &len) in out.lens.iter().enumerate() {
+                let client = cohort[bounds[w] + msg / channels];
+                let ch = msg % channels;
+                let (lo, hi) = (off, off + len as usize);
+                visit(client, ch, &out.idx[lo..hi], &out.val[lo..hi], out.bits[msg])?;
+                off = hi;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // post a quit to every slot; a worker mid-job takes it on its
+        // next loop (the driver never drops the pool while it still
+        // needs results)
+        for cell in &self.cells {
+            let mut slot = cell.job.lock().unwrap_or_else(|p| p.into_inner());
+            *slot = Some(Job::Quit);
+            cell.ready.notify_one();
+        }
     }
 }
 
@@ -397,14 +716,85 @@ mod tests {
     }
 
     #[test]
+    fn skewed_hub_groups_still_fill_the_pool() {
+        // one giant hub followed by crumbs: the old fixed-target greedy
+        // closed a single chunk and idled the rest of the pool; the
+        // adaptive planner must dispatch min(workers, hubs) chunks
+        let mut bounds = Vec::new();
+        plan_chunks(100, Some(&[0, 97, 98, 99]), 4, &mut bounds);
+        assert_eq!(bounds.len() - 1, 4, "bounds {bounds:?}");
+        assert_eq!(bounds, vec![0, 97, 98, 99, 100]);
+        // giant hub at the END: early groups must close early so every
+        // later group can still get a worker
+        plan_chunks(100, Some(&[0, 10, 20, 30]), 4, &mut bounds);
+        assert_eq!(bounds.len() - 1, 4, "bounds {bounds:?}");
+        assert_eq!(bounds, vec![0, 10, 20, 30, 100]);
+        // more hubs than workers: never more chunks than workers
+        let starts: Vec<usize> = (0..50).map(|g| g * 2).collect();
+        plan_chunks(100, Some(&starts), 4, &mut bounds);
+        assert_eq!(bounds.len() - 1, 4, "bounds {bounds:?}");
+        // chunks only ever close on group boundaries
+        assert!(bounds.iter().all(|b| b % 2 == 0), "bounds {bounds:?}");
+        // degenerate: one worker, one group
+        plan_chunks(7, Some(&[0]), 1, &mut bounds);
+        assert_eq!(bounds, vec![0, 7]);
+        // even ungrouped chunking unchanged
+        plan_chunks(12, None, 3, &mut bounds);
+        assert_eq!(bounds, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn skewed_groups_dispatch_across_workers_end_to_end() {
+        // integration: a 13-client cohort in hub groups [10, 1, 1, 1]
+        // over 4 workers evaluates correctly and in cohort order
+        let mut rng = crate::rng(46);
+        let q = QuadraticOracle::random(13, 4, 0.5, 2.0, 1.0, &mut rng);
+        let x = vec![0.4f32; 4];
+        let cohort: Vec<usize> = (0..13).collect();
+        let groups = vec![0usize, 10, 11, 12];
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, &q, 4);
+            let mut order = Vec::new();
+            pool.eval_grouped(&cohort, Some(&groups), &x, &mut |i, l, g| {
+                let mut g2 = vec![0.0f32; 4];
+                let l2 = q.loss_grad(i, &x, &mut g2).unwrap();
+                assert_eq!((l, g.to_vec()), (l2, g2));
+                order.push(i);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(order, cohort);
+        });
+    }
+
+    #[test]
     fn ledger_accumulates() {
         let mut l = CommLedger::default();
-        l.up(100);
-        l.down(50);
+        l.up(100, 1);
+        l.down(50, 1);
         l.charge(2.5);
         l.snapshot(1);
-        l.up(100);
+        l.up(100, 1);
         l.snapshot(2);
         assert_eq!(l.history, vec![(1, 100, 50, 2.5), (2, 200, 50, 2.5)]);
+    }
+
+    #[test]
+    fn per_node_average_is_exact_when_nodes_do_not_divide_bits() {
+        // 2 senders, 3 + 4 bits: 3.5 bits per node per round. The old
+        // per-round truncation booked 3, losing a bit every round; the
+        // exact totals derive 7 after two rounds.
+        let mut l = CommLedger::default();
+        l.up(7, 2);
+        assert_eq!(l.bits_up(), 3, "one round still truncates at read");
+        l.up(7, 2);
+        assert_eq!(l.bits_up(), 7, "two rounds: 14 bits over 2 nodes");
+        // and with a constant cohort the read is exactly total/nodes
+        let mut m = CommLedger::default();
+        for _ in 0..10 {
+            m.up(1001, 10);
+        }
+        assert_eq!(m.bits_up(), 1001);
+        assert_eq!(m.bits_down(), 0);
     }
 }

@@ -12,7 +12,12 @@
 //! ([`algorithms::api::FlAlgorithm`]: `init / client_step / server_step /
 //! eval_point`) and is executed by the coordinator-owned
 //! [`coordinator::driver::Driver`], which owns the round loop, cohort
-//! sampling, the [`coordinator::CommLedger`] bit/cost accounting, optional
+//! sampling, client execution — serial, batched-oracle, or the
+//! persistent worker pool, whose fused mode runs the whole per-client
+//! uplink (payload, mask gather, compression on per-client
+//! [`compress::client_rng`] streams) inside the workers and hands the
+//! driver payload-proportional message batches — plus
+//! the [`coordinator::CommLedger`] bit/cost accounting, optional
 //! up/down link compressors, and the topology — flat, a 2-level cost
 //! annotation, or an *executed* multi-level aggregation tree
 //! ([`coordinator::hierarchy::AggTree`]) whose internal nodes partially

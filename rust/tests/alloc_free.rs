@@ -4,8 +4,15 @@
 //! configuration that differ only in round count (evals pinned to t=0 +
 //! final in both). If steady-state rounds allocated anything, the longer
 //! run would count more allocations; equality proves the per-round path
-//! is allocation-free — for the dense GD path and for the sparse Top-K
-//! compressed path (reusable selection scratch + `SparseVec` buffers).
+//! is allocation-free — for the dense GD path, for the sparse Top-K
+//! compressed path (reusable selection scratch + `SparseVec` buffers),
+//! and for the fused worker-pool path, where every per-round hand-off
+//! (job slots, done gate, message batches, replay) must reuse
+//! spawn-time capacity: the pool signals through mutex/condvar slots
+//! precisely because channel sends allocate. The fused case also pins
+//! the no-dense-hand-off property indirectly — a `cohort·d` staging
+//! buffer would have to grow on the first post-warmup round and show up
+//! in the count.
 //!
 //! Keep this file to a single `#[test]`: the counter is process-global,
 //! and a second concurrently-running test would pollute the window.
@@ -41,22 +48,37 @@ unsafe impl GlobalAlloc for Counting {
 #[global_allocator]
 static COUNTER: Counting = Counting;
 
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Serial driver, dense uplink.
+    DenseSerial,
+    /// Serial driver, sparse Top-K uplink.
+    TopkSerial,
+    /// Fused worker-pool run: in-worker Top-K compression, per-worker
+    /// message batches, driver-side replay. Setup (thread spawn, kit
+    /// sizing) allocates once per run — identical in both runs — and
+    /// steady-state rounds must add nothing.
+    TopkFusedPool,
+}
+
 /// Allocation count of one full deterministic run (setup + init + two
 /// evals + `rounds` steady-state rounds).
-fn allocs_for(rounds: usize, topk_uplink: bool) -> u64 {
+fn allocs_for(rounds: usize, mode: Mode) -> u64 {
     let mut rng = fedeff::rng(7);
     let q = QuadraticOracle::random(8, 64, 0.5, 2.0, 1.0, &mut rng);
     let mut alg = Gd::plain(8, 64, 0.2);
-    let drv = if topk_uplink {
-        Driver::new().with_up(Box::new(TopK::new(8)))
-    } else {
-        Driver::new()
+    let drv = match mode {
+        Mode::DenseSerial => Driver::new(),
+        _ => Driver::new().with_up(Box::new(TopK::new(8))),
     };
     // evals only at t=0 and the final record: identical in both runs
     let opts = RunOptions { rounds, eval_every: 1 << 30, ..Default::default() };
     let x0 = vec![0.5f32; 64];
     let before = ALLOCS.load(Ordering::Relaxed);
-    let rec = drv.run(&mut alg, &q, &x0, &opts).unwrap();
+    let rec = match mode {
+        Mode::TopkFusedPool => drv.run_parallel(&mut alg, &q, &x0, &opts).unwrap(),
+        _ => drv.run(&mut alg, &q, &x0, &opts).unwrap(),
+    };
     let after = ALLOCS.load(Ordering::Relaxed);
     assert!(rec.last().unwrap().loss.is_finite());
     after - before
@@ -64,11 +86,14 @@ fn allocs_for(rounds: usize, topk_uplink: bool) -> u64 {
 
 #[test]
 fn steady_state_rounds_do_not_allocate() {
-    for &topk in &[false, true] {
-        let label = if topk { "sparse Top-K GD" } else { "dense GD" };
-        let _warmup = allocs_for(10, topk);
-        let base = allocs_for(50, topk);
-        let double = allocs_for(100, topk);
+    for (label, mode) in [
+        ("dense GD", Mode::DenseSerial),
+        ("sparse Top-K GD", Mode::TopkSerial),
+        ("fused Top-K GD pool", Mode::TopkFusedPool),
+    ] {
+        let _warmup = allocs_for(10, mode);
+        let base = allocs_for(50, mode);
+        let double = allocs_for(100, mode);
         assert_eq!(
             double, base,
             "{label}: 100-round run allocated {double} vs {base} for 50 rounds — steady-state rounds must be allocation-free"

@@ -8,12 +8,16 @@
 //! (Scafflix with Top-K uplink compression and FedAvg costed over a
 //! 2-level hierarchy — both reachable from a TOML spec), the sparse
 //! message fast path (runs over the O(k) sparse link path must match the
-//! dense reference path bit-for-bit in loss and booked bits), and the
-//! executed multi-level aggregation trees: depth-1 and pass-through
+//! dense reference path bit-for-bit in loss and booked bits), the
+//! executed multi-level aggregation trees (depth-1 and pass-through
 //! trees must reproduce the flat driver bit-for-bit, hub order must not
 //! matter beyond floating-point summation order, and per-edge
 //! re-compression must book strictly fewer hub→server bits than the
-//! flat run of the same experiment.
+//! flat run), and the fused uplink pipeline: with per-client
+//! compression streams, the in-worker fused path, the reference pool
+//! path (`with_fused_uplink(false)`) and the fully serial driver must
+//! produce bit-for-bit identical records for every plan-capable
+//! algorithm across flat, 3-level tree, masked and sampled runs.
 
 use fedeff::algorithms::gd::{FlixGd, Gd};
 use fedeff::algorithms::scafflix::Scafflix;
@@ -821,6 +825,174 @@ k = 4
     // the flat run's per-node uplink is exactly the Top-K message size
     // per round — the same leaf compression the tree run applied
     assert_eq!(rec_flat.last().unwrap().bits_up, sparse_bits(6, d) * 8);
+}
+
+// ---------------------------------------------------------------------------
+// Fused uplink pipeline (in-worker compress + O(k) driver merge)
+// ---------------------------------------------------------------------------
+
+/// Run the same experiment three ways — fully serial, reference pool
+/// (`with_fused_uplink(false)`), and fused pool — and pin all three
+/// bit-for-bit equal, per-edge ledger included. Per-client compression
+/// streams make the draws execution-order-free, so this holds *by
+/// construction*; the assert keeps it that way.
+fn pin_fused_reference(
+    what: &str,
+    q: &QuadraticOracle,
+    x0: &[f32],
+    opts: &RunOptions,
+    mk_drv: &dyn Fn() -> Driver,
+    mk_alg: &dyn Fn() -> Box<dyn fedeff::algorithms::FlAlgorithm>,
+) {
+    let mut a = mk_alg();
+    let rec_serial = mk_drv().run(a.as_mut(), q, x0, opts).unwrap();
+    let mut b = mk_alg();
+    let rec_fused = mk_drv().run_parallel(b.as_mut(), q, x0, opts).unwrap();
+    let mut c = mk_alg();
+    let rec_ref = mk_drv().with_fused_uplink(false).run_parallel(c.as_mut(), q, x0, opts).unwrap();
+    assert_records_bitwise_eq(&rec_fused, &rec_serial, &format!("{what}: fused vs serial"));
+    assert_records_bitwise_eq(&rec_fused, &rec_ref, &format!("{what}: fused vs reference pool"));
+    assert_eq!(rec_fused.edge_bits_up, rec_serial.edge_bits_up, "{what}: edge ledger vs serial");
+    assert_eq!(rec_fused.edge_bits_up, rec_ref.edge_bits_up, "{what}: edge ledger vs reference");
+}
+
+fn spec_alg(kind: &str) -> fedeff::config::AlgorithmSpec {
+    fedeff::config::AlgorithmSpec { kind: kind.to_string(), k: Some(2), ..Default::default() }
+}
+
+/// Fused == reference == serial for every plan-capable algorithm on a
+/// flat topology with a Top-K uplink and cohort sampling (Scafflix
+/// rejects samplers, so it runs full-participation — its conditional
+/// plan keeps it on the reference path, pinned trivially equal).
+#[test]
+fn fused_matches_reference_flat_sampled() {
+    let q = quadratic(85, 10, 48);
+    let x0 = vec![1.0f32; 48];
+    let opts = RunOptions { rounds: 60, eval_every: 15, seed: 11, ..Default::default() };
+    for kind in ["gd", "fedavg", "fedprox", "scaffold"] {
+        pin_fused_reference(
+            &format!("flat+sampled {kind}"),
+            &q,
+            &x0,
+            &opts,
+            &|| {
+                Driver::new()
+                    .with_sampler(Box::new(NiceSampling { n: 10, tau: 5 }))
+                    .with_up(Box::new(fedeff::compress::topk::TopK::new(6)))
+            },
+            &|| build_algorithm(&spec_alg(kind), &q).unwrap(),
+        );
+    }
+    pin_fused_reference(
+        "flat scafflix (conditional plan declines fusing)",
+        &q,
+        &x0,
+        &opts,
+        &|| Driver::new().with_up(Box::new(fedeff::compress::topk::TopK::new(6))),
+        &|| build_algorithm(&spec_alg("scafflix"), &q).unwrap(),
+    );
+}
+
+/// Fused == reference == serial over an executed 3-level tree with
+/// hub re-compression (leaf Top-K, hub Top-K), sampled cohorts, for
+/// every tree-routing plan-capable algorithm — Scaffold's two channels
+/// keep distinct hub partials in both paths.
+#[test]
+fn fused_matches_reference_3level_tree() {
+    let q = quadratic(86, 12, 40);
+    let x0 = vec![1.5f32; 40];
+    let opts = RunOptions { rounds: 50, eval_every: 10, seed: 7, ..Default::default() };
+    for kind in ["gd", "fedavg", "fedprox", "scaffold"] {
+        pin_fused_reference(
+            &format!("3-level tree {kind}"),
+            &q,
+            &x0,
+            &opts,
+            &|| {
+                Driver::new()
+                    .with_sampler(Box::new(NiceSampling { n: 12, tau: 6 }))
+                    .with_up(Box::new(fedeff::compress::topk::TopK::new(5)))
+                    .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(10)))
+                    .with_topology(Topology::Tree(AggTree::even(12, &[3], vec![0.05, 1.0])))
+            },
+            &|| build_algorithm(&spec_alg(kind), &q).unwrap(),
+        );
+    }
+}
+
+/// The satellite composition: Rand-K uplink + cohort sampling +
+/// 3-level tree + 50% global mask, fused vs reference vs serial —
+/// randomized compression draws, support-gathered payloads and hub
+/// flushes all line up bit-for-bit.
+#[test]
+fn fused_matches_reference_randk_sampled_tree_masked() {
+    use fedeff::pruning::Method;
+    use fedeff::sparsity::MaskSpec;
+    let q = quadratic(87, 12, 64);
+    let x0 = vec![1.0f32; 64];
+    let opts = RunOptions { rounds: 40, eval_every: 10, seed: 3, ..Default::default() };
+    let mask = || MaskSpec {
+        method: Method::SymWanda { alpha: 0.5 },
+        sparsity: 0.5,
+        ..MaskSpec::default()
+    };
+    for kind in ["gd", "fedavg", "scaffold"] {
+        pin_fused_reference(
+            &format!("randk+sampled+tree+mask {kind}"),
+            &q,
+            &x0,
+            &opts,
+            &|| {
+                Driver::new()
+                    .with_sampler(Box::new(NiceSampling { n: 12, tau: 6 }))
+                    .with_up(Box::new(fedeff::compress::randk::RandK::unbiased(6)))
+                    .with_up_edge(1, Box::new(fedeff::compress::randk::RandK::unbiased(12)))
+                    .with_topology(Topology::Tree(AggTree::even(12, &[4], vec![0.05, 1.0])))
+                    .with_mask(mask())
+            },
+            &|| build_algorithm(&spec_alg(kind), &q).unwrap(),
+        );
+    }
+}
+
+/// Masked runs with *no* compressor fuse too (raw support payloads are
+/// already the sparse wire format), flat and personalized-vs-global:
+/// personalized masks stay on the reference path and still match.
+#[test]
+fn fused_matches_reference_masked_no_compressor() {
+    use fedeff::pruning::Method;
+    use fedeff::sparsity::MaskSpec;
+    let q = quadratic(88, 8, 32);
+    let x0 = vec![2.0f32; 32];
+    let opts = RunOptions { rounds: 40, eval_every: 10, seed: 9, ..Default::default() };
+    let mask = |personalized: bool| MaskSpec {
+        method: Method::SymWanda { alpha: 0.5 },
+        sparsity: 0.5,
+        personalized,
+        ..MaskSpec::default()
+    };
+    for kind in ["gd", "fedavg", "fedprox", "scaffold"] {
+        pin_fused_reference(
+            &format!("masked no-comp {kind}"),
+            &q,
+            &x0,
+            &opts,
+            &|| Driver::new().with_mask(mask(false)),
+            &|| build_algorithm(&spec_alg(kind), &q).unwrap(),
+        );
+    }
+    // personalized masks are declined by the fused path (per-client
+    // supports in the workers would leak across rows) — the three
+    // execution modes must still agree because they all take the
+    // reference path
+    pin_fused_reference(
+        "masked personalized fedavg (reference path)",
+        &q,
+        &x0,
+        &opts,
+        &|| Driver::new().with_mask(mask(true)),
+        &|| build_algorithm(&spec_alg("fedavg"), &q).unwrap(),
+    );
 }
 
 /// Every registry algorithm runs over a multi-level tree straight from
