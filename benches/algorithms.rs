@@ -19,6 +19,12 @@
 //! the enforced support (`nnz`) and the per-node uplink bits booked per
 //! round (`bits_up_per_round`) next to the runtimes.
 //!
+//! The `fedavg_async_{sync,buffered}` family drives the same straggler
+//! scenario through the time-aware engine both ways; its JSON rows carry
+//! the engine's `virtual_time` (sync pays the per-round max over all n
+//! compute draws, buffered-async pays only arrival order) next to the
+//! host-clock runtimes.
+//!
 //! The `gd_topk_fused_*` / `fedavg_topk_fused_*` family measures the
 //! fused uplink pipeline at n=1024, d=16384, Top-K k=128: `ref_pool` is
 //! the reference path (`with_fused_uplink(false)` — workers evaluate
@@ -372,6 +378,59 @@ fn main() {
             let name = format!("fedavg_masked_{tag}_topk{k}_5rounds_n32_d4096");
             b.run_case_masked(&name, rounds, n, d, nnz, bits_round, || {
                 black_box(drv.run(&mut alg, black_box(&big), black_box(&bx0), &bopts).unwrap());
+            });
+        }
+    }
+
+    // ---- time-aware scenarios: sync barrier vs buffered-async ---------
+    // Same workload (n=32, d=1024, Top-K(64) uplink, heavy-tailed Pareto
+    // stragglers) driven through the scenario engine both ways. The
+    // virtual_time column is the engine's clock for one full run of the
+    // case (from a probe run — the timeline is a pure function of the
+    // seed, so the probe and the timed iterations are identical): the
+    // sync row pays the per-round max over all n compute draws, the
+    // buffered row (buffer 8, poly(0.5) staleness, 4x the applies so it
+    // folds the same number of client updates) pays only arrival order.
+    {
+        use fedeff::algorithms::fedavg::FedAvg;
+        use fedeff::scenario::{Dist, Mode, ScenarioSpec, Staleness};
+
+        let (n, d, rounds) = (32usize, 1024usize, 10usize);
+        let mut rngs = fedeff::rng(19);
+        let big = QuadraticOracle::random(n, d, 0.5, 3.0, 1.0, &mut rngs);
+        let bx0 = vec![0.5f32; d];
+        let spec_at = |mode| ScenarioSpec {
+            compute: Dist::Pareto { scale: 0.05, shape: 1.1 },
+            speed: Dist::Uniform { lo: 0.5, hi: 2.0 },
+            mode,
+            ..Default::default()
+        };
+        let drv = Driver::new().with_up(Box::new(TopK::new(64)));
+        let vtime_of = |spec: &ScenarioSpec, opts: &RunOptions| {
+            let mut alg = FedAvg::new(2, 0.05);
+            let rec = drv.run_scenario(&mut alg, &big, spec, &bx0, opts).unwrap();
+            rec.scenario.expect("scenario stat").vtime
+        };
+
+        let sopts = RunOptions { rounds, eval_every: 1000, ..Default::default() };
+        let sync = spec_at(Mode::Sync);
+        let vt_sync = vtime_of(&sync, &sopts);
+        {
+            let mut alg = FedAvg::new(2, 0.05);
+            b.run_case_vtime("fedavg_async_sync_10rounds_n32_d1024", rounds, n, d, vt_sync, || {
+                let rec = drv.run_scenario(&mut alg, black_box(&big), &sync, &bx0, &sopts);
+                black_box(rec.unwrap());
+            });
+        }
+        let aopts = RunOptions { rounds: rounds * 4, eval_every: 1000, ..Default::default() };
+        let asy = spec_at(Mode::BufferedAsync { buffer: 8, staleness: Staleness::Poly(0.5) });
+        let vt_async = vtime_of(&asy, &aopts);
+        {
+            let mut alg = FedAvg::new(2, 0.05);
+            let name = "fedavg_async_buffered_40applies_n32_d1024";
+            b.run_case_vtime(name, rounds * 4, n, d, vt_async, || {
+                let rec = drv.run_scenario(&mut alg, black_box(&big), &asy, &bx0, &aopts);
+                black_box(rec.unwrap());
             });
         }
     }

@@ -45,6 +45,10 @@ pub struct Entry {
     /// Derived throughput: `rounds * n / seconds` per iteration (0 when
     /// the workload shape is unknown).
     pub clients_per_sec: u64,
+    /// Virtual seconds on the scenario engine's clock for one run of the
+    /// case (the `fedavg_async_*` family's wall-clock column; 0 when the
+    /// case is untimed).
+    pub virtual_time: f64,
 }
 
 pub struct Bench {
@@ -91,7 +95,7 @@ impl Bench {
         root_bits: u64,
         f: F,
     ) {
-        self.run_case_full(name, rounds, n, d, root_bits, 0, 0, f);
+        self.run_case_full(name, rounds, n, d, root_bits, 0, 0, 0.0, f);
     }
 
     /// [`Bench::run_case`] with the masked-training columns: the mask
@@ -107,7 +111,23 @@ impl Bench {
         bits_up_per_round: u64,
         f: F,
     ) {
-        self.run_case_full(name, rounds, n, d, 0, nnz, bits_up_per_round, f);
+        self.run_case_full(name, rounds, n, d, 0, nnz, bits_up_per_round, 0.0, f);
+    }
+
+    /// [`Bench::run_case`] with the scenario-engine column: the virtual
+    /// seconds one run of the case spends on the engine's clock (the
+    /// sync-vs-buffered-async family's wall-clock view).
+    #[allow(dead_code)]
+    pub fn run_case_vtime<F: FnMut()>(
+        &self,
+        name: &str,
+        rounds: usize,
+        n: usize,
+        d: usize,
+        virtual_time: f64,
+        f: F,
+    ) {
+        self.run_case_full(name, rounds, n, d, 0, 0, 0, virtual_time, f);
     }
 
     /// The full recording surface behind the `run_case_*` fronts.
@@ -122,6 +142,7 @@ impl Bench {
         root_bits: u64,
         nnz: usize,
         bits_up_per_round: u64,
+        virtual_time: f64,
         mut f: F,
     ) {
         for _ in 0..self.warmup {
@@ -155,6 +176,7 @@ impl Bench {
             nnz,
             bits_up_per_round,
             clients_per_sec,
+            virtual_time,
         });
     }
 
@@ -170,7 +192,7 @@ impl Bench {
         for (i, e) in results.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}, \"clients_per_sec\": {}}}",
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}, \"clients_per_sec\": {}, \"virtual_time\": {}}}",
                 e.name,
                 e.ns_per_iter,
                 e.rounds,
@@ -179,7 +201,8 @@ impl Bench {
                 e.root_bits,
                 e.nnz,
                 e.bits_up_per_round,
-                e.clients_per_sec
+                e.clients_per_sec,
+                e.virtual_time
             );
             s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
         }

@@ -1,0 +1,106 @@
+//! Sync barrier vs buffered-async aggregation under stragglers.
+//!
+//! Runs FedAvg over a synthetic logreg fleet through the time-aware
+//! scenario engine twice — once with the classic sync barrier (every
+//! round waits for the slowest of the n clients) and once with
+//! buffered-async aggregation (the server applies a staleness-weighted
+//! aggregate every `buffer` arrivals and immediately redispatches) —
+//! under the same heavy-tailed Pareto compute profile, exactly what a
+//! `[scenario]` TOML section configures. Prints the virtual wall-clock
+//! each mode needed to first reach a shared target loss and exits
+//! non-zero if async fails to win, so CI can run this as a smoke test.
+//!
+//! ```bash
+//! cargo run --release --example async_vs_sync
+//! ```
+
+use anyhow::Result;
+use fedeff::algorithms::fedavg::FedAvg;
+use fedeff::algorithms::RunOptions;
+use fedeff::data::synth::{logreg_dataset, Heterogeneity};
+use fedeff::metrics::{RunRecord, Table};
+use fedeff::oracle::logreg_rs::RustLogReg;
+use fedeff::oracle::Oracle;
+use fedeff::scenario::{Dist, Mode, ScenarioSpec, Staleness};
+
+/// First eval whose loss is at or below `target`, with its timestamp.
+fn time_to_target(rec: &RunRecord, target: f32) -> Option<(f64, usize)> {
+    rec.rounds.iter().find(|r| r.loss <= target).map(|r| (r.vtime, r.round))
+}
+
+fn main() -> Result<()> {
+    let (n, d, sync_rounds) = (16usize, 128usize, 60usize);
+    let mut rng = fedeff::rng(4);
+    let data = logreg_dataset(d, 200, n, Heterogeneity::FeatureShift(0.5), 0.3, &mut rng);
+    let oracle = RustLogReg::new(data, 0.1);
+    let x0 = vec![0.2f32; oracle.dim()];
+    let spec_at = |mode| ScenarioSpec {
+        // heavy-tailed stragglers: Pareto shape 1.1 has a finite mean
+        // but an enormous tail, so the per-round max over 16 clients
+        // (what the barrier pays) dwarfs the typical draw
+        compute: Dist::Pareto { scale: 0.05, shape: 1.1 },
+        speed: Dist::Uniform { lo: 0.5, hi: 2.0 },
+        drop: 0.05,
+        mode,
+        ..Default::default()
+    };
+
+    let mut alg = FedAvg::new(2, 0.5 / oracle.smoothness(0));
+    let opts = RunOptions { rounds: sync_rounds, eval_every: 1, seed: 9, ..Default::default() };
+    let rec_sync =
+        fedeff::coordinator::driver::Driver::new().run_scenario_parallel(
+            &mut alg,
+            &oracle,
+            &spec_at(Mode::Sync),
+            &x0,
+            &opts,
+        )?;
+
+    // each async apply folds `buffer` arrivals, so 4x the applies sees
+    // roughly the same number of client updates as the sync run
+    let buffer = 4usize;
+    let mut alg = FedAvg::new(2, 0.5 / oracle.smoothness(0));
+    let opts_async =
+        RunOptions { rounds: sync_rounds * buffer, eval_every: 1, seed: 9, ..Default::default() };
+    let rec_async = fedeff::coordinator::driver::Driver::new().run_scenario_parallel(
+        &mut alg,
+        &oracle,
+        &spec_at(Mode::BufferedAsync { buffer, staleness: Staleness::Poly(0.5) }),
+        &x0,
+        &opts_async,
+    )?;
+
+    // shared target: the loss the sync run reached halfway in
+    let target = rec_sync.rounds[sync_rounds / 2].loss;
+    let (sync_t, sync_at) = time_to_target(&rec_sync, target).expect("sync reaches its own loss");
+    let Some((async_t, async_at)) = time_to_target(&rec_async, target) else {
+        anyhow::bail!("async run never reached the sync target loss {target:.5}");
+    };
+
+    let mut table = Table::new(
+        format!(
+            "async_vs_sync: FedAvg, n={n}, pareto(0.05, 1.1) stragglers, target loss {target:.5}"
+        ),
+        &["mode", "applies", "dispatched", "dropped", "virtual s to target", "total virtual s"],
+    );
+    for (label, rec, t, at) in
+        [("sync barrier", &rec_sync, sync_t, sync_at), ("buffered-async", &rec_async, async_t, async_at)]
+    {
+        let st = rec.scenario.expect("scenario stat");
+        table.row(vec![
+            format!("{label} (hit @ {at})"),
+            format!("{}", st.applies),
+            format!("{}", st.dispatches),
+            format!("{}", st.dropped),
+            format!("{t:.3}"),
+            format!("{:.3}", st.vtime),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("speedup on virtual wall-clock to target: {:.2}x", sync_t / async_t);
+    anyhow::ensure!(
+        async_t < sync_t,
+        "buffered-async regressed: {async_t:.3} virtual s vs sync {sync_t:.3}"
+    );
+    Ok(())
+}

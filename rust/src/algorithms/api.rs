@@ -39,6 +39,10 @@
 //! draws of randomized uplink compressors — Rand-K, QSGD — relative to
 //! the old shared per-round stream; trajectories of such runs differ
 //! from pre-stream releases, and the seeded bench rows were refreshed.)
+//! The time-aware scenario engine extends the same convention with its
+//! own sibling, [`crate::scenario::event_rng`]`(seed, round, client,
+//! event)`, for compute-time / availability / dropout draws — event
+//! timelines are equally execution-order-free.
 //!
 //! Fused uplink execution: an algorithm whose round is "every cohort
 //! client derives a payload from the broadcast anchor and uplinks it"
@@ -237,6 +241,11 @@ pub struct TreeScratch {
     /// Bits that traversed each edge class this round (the driver folds
     /// these into [`crate::coordinator::CommLedger::up_edges`]).
     pub edge_bits: Vec<u64>,
+    /// This round's node flushes as `(level, relay_to, bits)` — the
+    /// flush's own edge class, the exclusive end of its pass-through
+    /// relay span, and its on-wire bits. The scenario engine prices
+    /// hub→up transfer times from this log.
+    pub(crate) flush_log: Vec<(u32, u32, u64)>,
     sbuf: SparseVec,
     cbuf: Vec<f32>,
     channels: usize,
@@ -266,6 +275,7 @@ impl TreeScratch {
             remaining: (0..n_internal).map(|_| Vec::new()).collect(),
             leaf_count,
             edge_bits: vec![0; depth],
+            flush_log: Vec::new(),
             sbuf: SparseVec::default(),
             cbuf: vec![0.0; d],
             channels: 0,
@@ -283,6 +293,7 @@ impl TreeScratch {
     /// each channel's remaining-counters from those counts.
     pub fn begin_round(&mut self, tree: &AggTree, cohort: &[usize]) {
         self.edge_bits.fill(0);
+        self.flush_log.clear();
         let depth = tree.depth();
         let mut any = false;
         for l in 1..depth {
@@ -473,6 +484,7 @@ fn flush_tree_node(
     for l in lvl + 1..relay_to {
         scratch.edge_bits[l] += bits;
     }
+    scratch.flush_log.push((lvl as u32, relay_to as u32, bits));
     bits
 }
 
@@ -511,6 +523,10 @@ pub struct RoundCtx<'a> {
     pub(crate) down_nodes: u64,
     pub(crate) local_rounds: usize,
     pub(crate) communicated: bool,
+    /// Per-sender uplink log `(client, bits)` the scenario engine prices
+    /// leaf transfer times from (`u32::MAX` = unattributed sender);
+    /// `None` — the default — skips the bookkeeping entirely.
+    pub(crate) senders: Option<Vec<(u32, u64)>>,
     /// Uplink channel tracking: the client currently sending and the
     /// index of its current routed message this round. Keys both the
     /// per-client compression streams ([`crate::compress::client_rng`])
@@ -532,6 +548,7 @@ impl<'a> RoundCtx<'a> {
         sparse: bool,
         tree: Option<TreeLinks<'a>>,
         mask: Option<MaskLinks<'a>>,
+        senders: Option<Vec<(u32, u64)>>,
     ) -> Self {
         // deterministic per-round stream for the *downlink* compressor
         // (one server sender); uplinks draw from per-client streams
@@ -550,6 +567,7 @@ impl<'a> RoundCtx<'a> {
             sparse,
             tree,
             mask,
+            senders,
             link_rng,
             up_bits: 0,
             up_nodes: 0,
@@ -628,6 +646,16 @@ impl<'a> RoundCtx<'a> {
     /// when an executed tree is active.
     pub fn tree_edge_bits(&self) -> Option<&[u64]> {
         self.tree.as_ref().map(|tl| tl.scratch.edge_bits.as_slice())
+    }
+
+    /// The round's tree-flush log `(level, relay_to, bits)` plus the
+    /// first re-compressing edge class (= the leaf payload's relay
+    /// span), when an executed tree is active. The scenario engine
+    /// prices hub transfer times from this.
+    pub(crate) fn tree_flush_log(&self) -> Option<(&[(u32, u32, u64)], usize)> {
+        self.tree
+            .as_ref()
+            .map(|tl| (tl.scratch.flush_log.as_slice(), tl.scratch.first_compressed))
     }
 
     /// Sparse downlink fast path: `Some(bits)` iff a downlink
@@ -783,6 +811,10 @@ impl<'a> RoundCtx<'a> {
         val: &[f32],
         acc: &mut [f32],
     ) {
+        // keep the sender tracker coherent so the driver's follow-up
+        // charge_up attributes this client's bits to it
+        self.up_client = client;
+        self.up_channel = ch;
         let Some(mut tl) = self.tree.take() else {
             // flat reduce: the premultiplied scatter — bit-identical to
             // `SparseVec::add_into(scale, acc)` over the raw message
@@ -1034,6 +1066,10 @@ impl<'a> RoundCtx<'a> {
     pub fn charge_up(&mut self, bits: u64) {
         self.up_bits += bits;
         self.up_nodes += 1;
+        if let Some(log) = self.senders.as_mut() {
+            let c = if self.up_client == usize::MAX { u32::MAX } else { self.up_client as u32 };
+            log.push((c, bits));
+        }
         if let Some(tl) = self.tree.as_mut() {
             for l in 0..tl.scratch.first_compressed {
                 tl.scratch.edge_bits[l] += bits;
@@ -1132,6 +1168,28 @@ pub trait FlAlgorithm {
         _ctx: &mut RoundCtx<'_>,
     ) -> Result<()> {
         anyhow::bail!("{} advertises no executable fused uplink plan", self.label())
+    }
+
+    /// Whether the algorithm's server update can absorb a buffered-async
+    /// aggregate ([`crate::scenario`] `Mode::BufferedAsync`): its round
+    /// must reduce to "fold a weighted sum of client payloads into the
+    /// server model", with no per-round client-side randomness and no
+    /// cross-client control state. Default `false` — the scenario engine
+    /// refuses rather than silently corrupting an algorithm whose round
+    /// is richer than that (Scaffold's control pair, EF-BV's error
+    /// feedback).
+    fn supports_async(&self) -> bool {
+        false
+    }
+
+    /// Fold one buffered-async aggregate — the staleness- and
+    /// scale-weighted sum of `buffer` arrived payloads, built by the
+    /// scenario engine exactly like one sync round's reduce — into the
+    /// server model. Called instead of `client_step`/`server_step`;
+    /// must be implemented whenever [`FlAlgorithm::supports_async`]
+    /// returns `true`.
+    fn absorb_async(&mut self, _agg: &[f32]) -> Result<()> {
+        anyhow::bail!("{} does not support buffered-async aggregation", self.label())
     }
 
     /// One client's contribution to the round.

@@ -189,6 +189,20 @@ impl FlAlgorithm for FedAvg {
         Ok(())
     }
 
+    fn supports_async(&self) -> bool {
+        // the round is "average local-SGD deltas into x" — exactly the
+        // buffered-async shape — unless local steps draw stochastic
+        // gradients (those consume the main round stream serially)
+        !self.stochastic
+    }
+
+    fn absorb_async(&mut self, agg: &[f32]) -> Result<()> {
+        // agg is the staleness-weighted mean of arrived deltas vs. their
+        // anchors: the async analog of fedcom_server_finish's rebase
+        vm::axpy(1.0, agg, &mut self.x);
+        Ok(())
+    }
+
     fn client_step(
         &mut self,
         oracle: &dyn Oracle,

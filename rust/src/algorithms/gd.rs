@@ -202,6 +202,19 @@ impl FlAlgorithm for Gd {
         Ok(())
     }
 
+    fn supports_async(&self) -> bool {
+        // plain GD only: a personalized (FLIX) gradient anchors on a
+        // per-client point the async engine's plan cannot express
+        self.flix.alphas.iter().all(|&a| a == 1.0)
+    }
+
+    fn absorb_async(&mut self, agg: &[f32]) -> Result<()> {
+        // agg is the weighted gradient aggregate — the async analog of
+        // server_step's descent step
+        vm::axpy(-self.flix.gamma, agg, &mut self.x);
+        Ok(())
+    }
+
     fn client_step(
         &mut self,
         oracle: &dyn Oracle,

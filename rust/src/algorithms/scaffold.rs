@@ -296,6 +296,18 @@ impl FlAlgorithm for FedProx {
         Ok(())
     }
 
+    fn supports_async(&self) -> bool {
+        // like FedAvg: the round folds a mean of anchored deltas into x.
+        // (Scaffold keeps the default `false` — its cross-client control
+        // pair has no buffered-async analog here.)
+        true
+    }
+
+    fn absorb_async(&mut self, agg: &[f32]) -> Result<()> {
+        vm::axpy(1.0, agg, &mut self.x);
+        Ok(())
+    }
+
     fn client_step(
         &mut self,
         oracle: &dyn Oracle,

@@ -96,6 +96,28 @@
 //! refresh = 50             # re-prune every 50 rounds (omit: fixed mask)
 //! personalized = false     # true: FedP3-style per-client masks
 //! ```
+//!
+//! A `[scenario]` section makes the run **time-aware**
+//! ([`crate::scenario`]): per-client compute/speed distributions,
+//! availability and mid-round dropout, and a deterministic virtual
+//! clock that prices every booked bit over the topology's edge costs.
+//! `mode = "async"` replaces the priced synchronous barrier with
+//! buffered-async aggregation (staleness-weighted applies every
+//! `buffer` arrivals). Composes with any algorithm the driver runs;
+//! async mode additionally needs
+//! [`crate::algorithms::api::FlAlgorithm::supports_async`].
+//!
+//! ```toml
+//! [scenario]
+//! compute = "pareto(0.05, 1.1)"  # fixed(v) | uniform(lo,hi) | exp(mean) | pareto(scale,shape)
+//! speed = "uniform(0.5, 2.0)"    # persistent per-client factor
+//! bandwidth = 100000.0           # bits per virtual second per unit edge cost
+//! drop = 0.05                    # mid-round dropout probability, [0, 1)
+//! unavailable = 0.1              # per-round unavailability probability, [0, 1)
+//! mode = "async"                 # sync (default) | async
+//! buffer = 4                     # async: server applies every 4 arrivals
+//! staleness = "poly(0.5)"        # async: const(c) | poly(a)
+//! ```
 
 use std::collections::HashMap;
 
@@ -254,6 +276,32 @@ pub struct SparsitySpec {
     pub personalized: bool,
 }
 
+/// `[scenario]`: raw time-aware scenario configuration, resolved into a
+/// [`crate::scenario::ScenarioSpec`] by [`build_scenario`]. Every key is
+/// optional; an empty section is the zero-effect default (fixed unit
+/// compute, no stragglers, no dropout, sync barrier).
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioSection {
+    /// Per-round compute-time distribution
+    /// ([`crate::scenario::parse_dist`] grammar).
+    pub compute: Option<String>,
+    /// Persistent per-client speed-factor distribution (same grammar).
+    pub speed: Option<String>,
+    /// Bits per virtual second across a unit-cost edge.
+    pub bandwidth: Option<f64>,
+    /// Mid-round dropout probability, in [0, 1).
+    pub drop: Option<f32>,
+    /// Per-round unavailability probability, in [0, 1).
+    pub unavailable: Option<f32>,
+    /// `"sync"` (default) or `"async"`.
+    pub mode: Option<String>,
+    /// Async buffer size: server applies every `buffer` arrivals.
+    pub buffer: Option<usize>,
+    /// Async staleness weighting ([`crate::scenario::parse_staleness`]
+    /// grammar).
+    pub staleness: Option<String>,
+}
+
 /// `[topology]`: without `levels`, the classic 2-level cost annotation;
 /// with `levels`, an executed multi-level aggregation tree (see the
 /// module docs for the grammar).
@@ -279,6 +327,7 @@ pub struct Spec {
     pub links: LinkSpec,
     pub topology: Option<TopologySpec>,
     pub sparsity: Option<SparsitySpec>,
+    pub scenario: Option<ScenarioSection>,
 }
 
 impl Spec {
@@ -384,7 +433,21 @@ impl Spec {
         } else {
             None
         };
-        Ok(Spec { experiment, dataset, algorithm, links, topology, sparsity })
+        let scenario = if t.sections.contains_key("scenario") {
+            Some(ScenarioSection {
+                compute: t.get("scenario", "compute").map(|s| s.to_string()),
+                speed: t.get("scenario", "speed").map(|s| s.to_string()),
+                bandwidth: t.get_f64("scenario", "bandwidth"),
+                drop: t.get_f32("scenario", "drop"),
+                unavailable: t.get_f32("scenario", "unavailable"),
+                mode: t.get("scenario", "mode").map(|s| s.to_string()),
+                buffer: t.get_usize("scenario", "buffer"),
+                staleness: t.get("scenario", "staleness").map(|s| s.to_string()),
+            })
+        } else {
+            None
+        };
+        Ok(Spec { experiment, dataset, algorithm, links, topology, sparsity, scenario })
     }
 }
 
@@ -470,6 +533,53 @@ pub fn build_mask_spec(s: &SparsitySpec) -> Result<crate::sparsity::MaskSpec> {
         refresh: s.refresh,
         personalized: s.personalized,
     })
+}
+
+/// Resolve a `[scenario]` section into the engine's
+/// [`crate::scenario::ScenarioSpec`], with clear errors on bad
+/// distribution / staleness grammars, out-of-range rates, unknown
+/// modes and a zero-sized async buffer (cohort-dependent checks —
+/// `buffer <= clients`, algorithm async support — happen when the
+/// driver starts the run).
+pub fn build_scenario(s: &ScenarioSection) -> Result<crate::scenario::ScenarioSpec> {
+    use crate::scenario::{parse_dist, parse_staleness, Mode, Staleness};
+    let mut spec = crate::scenario::ScenarioSpec::default();
+    if let Some(d) = &s.compute {
+        spec.compute = parse_dist(d).context("[scenario] compute")?;
+    }
+    if let Some(d) = &s.speed {
+        spec.speed = parse_dist(d).context("[scenario] speed")?;
+    }
+    if let Some(b) = s.bandwidth {
+        spec.bandwidth = b;
+    }
+    if let Some(p) = s.drop {
+        spec.drop = p;
+    }
+    if let Some(p) = s.unavailable {
+        spec.unavailable = p;
+    }
+    spec.mode = match s.mode.as_deref().unwrap_or("sync") {
+        "sync" => {
+            anyhow::ensure!(
+                s.buffer.is_none() && s.staleness.is_none(),
+                "[scenario] buffer/staleness need mode = \"async\""
+            );
+            Mode::Sync
+        }
+        "async" => {
+            let buffer = s.buffer.unwrap_or(1);
+            anyhow::ensure!(buffer >= 1, "[scenario] buffer must be >= 1, got {buffer}");
+            let staleness = match &s.staleness {
+                Some(w) => parse_staleness(w).context("[scenario] staleness")?,
+                None => Staleness::Poly(0.5),
+            };
+            Mode::BufferedAsync { buffer, staleness }
+        }
+        other => anyhow::bail!("[scenario] mode must be \"sync\" or \"async\", got {other:?}"),
+    };
+    spec.validate()?;
+    Ok(spec)
 }
 
 /// Build a prox solver by name.
@@ -892,6 +1002,97 @@ refresh = 20
             drv.mask.as_ref().unwrap().scope,
             crate::pruning::Scope::StructuredNm { n: 2, m: 4 }
         );
+    }
+
+    const SAMPLE_SCENARIO: &str = r#"
+[experiment]
+name = "timed"
+seed = 7
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+
+[scenario]
+compute = "pareto(0.05, 1.1)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+drop = 0.05
+unavailable = 0.1
+mode = "async"
+buffer = 4
+staleness = "poly(0.5)"
+"#;
+
+    #[test]
+    fn parses_and_builds_scenario_section() {
+        let s = Spec::parse(SAMPLE_SCENARIO).unwrap();
+        let sc = s.scenario.as_ref().expect("scenario section");
+        assert_eq!(sc.compute.as_deref(), Some("pareto(0.05, 1.1)"));
+        assert_eq!(sc.buffer, Some(4));
+        let spec = build_scenario(sc).unwrap();
+        assert_eq!(spec.compute, crate::scenario::Dist::Pareto { scale: 0.05, shape: 1.1 });
+        assert_eq!(spec.speed, crate::scenario::Dist::Uniform { lo: 0.5, hi: 2.0 });
+        assert_eq!(spec.bandwidth, 100000.0);
+        assert_eq!(spec.drop, 0.05);
+        assert_eq!(spec.unavailable, 0.1);
+        assert_eq!(
+            spec.mode,
+            crate::scenario::Mode::BufferedAsync {
+                buffer: 4,
+                staleness: crate::scenario::Staleness::Poly(0.5),
+            }
+        );
+        // an empty [scenario] section is the zero-effect default
+        let bare =
+            Spec::parse("[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[scenario]")
+                .unwrap();
+        let spec = build_scenario(bare.scenario.as_ref().unwrap()).unwrap();
+        assert_eq!(spec, crate::scenario::ScenarioSpec::default());
+        // no section at all parses to None
+        assert!(Spec::parse(SAMPLE).unwrap().scenario.is_none());
+    }
+
+    #[test]
+    fn scenario_section_errors_are_loud() {
+        // `{:#}` formats the whole anyhow chain, so the assertions see
+        // both the "[scenario] <key>" context and the grammar message.
+        let msg = |text: String| {
+            let s = Spec::parse(&text).unwrap();
+            let err = build_scenario(s.scenario.as_ref().unwrap())
+                .expect_err("expected a config error");
+            format!("{err:#}")
+        };
+        // unknown distribution name, with the grammar in the message
+        let e = msg(SAMPLE_SCENARIO.replace("pareto(0.05, 1.1)", "gauss(1.0)"));
+        assert!(e.contains("[scenario] compute") && e.contains("unknown distribution"), "{e}");
+        // bad distribution parameters stay attributed to their key
+        let e = msg(SAMPLE_SCENARIO.replace("uniform(0.5, 2.0)", "pareto(-1.0, 1.1)"));
+        assert!(e.contains("[scenario] speed") && e.contains("pareto(scale,shape) needs"), "{e}");
+        let e = msg(SAMPLE_SCENARIO.replace("pareto(0.05, 1.1)", "exp(1.0"));
+        assert!(e.contains("malformed spec"), "{e}");
+        // negative / out-of-range rates
+        let e = msg(SAMPLE_SCENARIO.replace("drop = 0.05", "drop = -0.1"));
+        assert!(e.contains("drop must be in [0, 1)"), "{e}");
+        let e = msg(SAMPLE_SCENARIO.replace("unavailable = 0.1", "unavailable = 1.5"));
+        assert!(e.contains("unavailable must be in [0, 1)"), "{e}");
+        // async buffer size 0
+        let e = msg(SAMPLE_SCENARIO.replace("buffer = 4", "buffer = 0"));
+        assert!(e.contains("buffer must be >= 1"), "{e}");
+        // unknown staleness weighting, unknown mode, orphaned async keys
+        let e = msg(SAMPLE_SCENARIO.replace("poly(0.5)", "linear(0.5)"));
+        assert!(e.contains("unknown staleness weighting"), "{e}");
+        let e = msg(SAMPLE_SCENARIO.replace("mode = \"async\"", "mode = \"gossip\""));
+        assert!(e.contains("mode must be \"sync\" or \"async\""), "{e}");
+        let e = msg(SAMPLE_SCENARIO.replace("mode = \"async\"", "mode = \"sync\""));
+        assert!(e.contains("need mode = \"async\""), "{e}");
+        // bandwidth must be positive
+        let e = msg(SAMPLE_SCENARIO.replace("bandwidth = 100000.0", "bandwidth = 0.0"));
+        assert!(e.contains("bandwidth must be positive"), "{e}");
     }
 
     #[test]

@@ -62,7 +62,15 @@
 //!   and again at every refresh (frozen coordinates keep their last
 //!   value after a refresh: re-pruning is a message-path event, the
 //!   driver never rewrites algorithm state);
-//! * [`RunRecord`] emission at every eval round plus a final eval.
+//! * [`RunRecord`] emission at every eval round plus a final eval;
+//! * time-aware execution through [`Driver::run_scenario`] /
+//!   [`Driver::run_scenario_parallel`]: the [`crate::scenario`] engine
+//!   trims every cohort (availability traces, mid-round dropout) and
+//!   prices each round in virtual seconds from the exact bits this loop
+//!   books — or replaces the barrier entirely with buffered-async
+//!   aggregation. A zero-effect sync scenario is bit-for-bit the plain
+//!   driver; event draws come from their own streams
+//!   ([`crate::scenario::event_rng`]) and never touch the round RNG.
 //!
 //! Steady-state rounds allocate nothing: the driver reserves its record,
 //! ledger, grouping, tree-reduce and fused-aggregate capacity up front
@@ -257,7 +265,7 @@ impl Driver {
         x0: &[f32],
         opts: &RunOptions,
     ) -> Result<RunRecord> {
-        self.run_inner(alg, oracle, None, None, x0, opts)
+        self.run_inner(alg, oracle, None, None, x0, opts, None)
     }
 
     /// Like [`Driver::run`], but client work executes on a persistent
@@ -303,14 +311,86 @@ impl Driver {
         if alg.grad_point().is_none() && !fusable {
             // neither a shared evaluation point nor a fusable uplink
             // plan: the pool could never be fed
-            return self.run_inner(alg, oracle, None, Some(&mut on_eval), x0, opts);
+            return self.run_inner(alg, oracle, None, Some(&mut on_eval), x0, opts, None);
         }
         std::thread::scope(|scope| {
             let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
-            self.run_inner(alg, oracle, Some(&pool), Some(&mut on_eval), x0, opts)
+            self.run_inner(alg, oracle, Some(&pool), Some(&mut on_eval), x0, opts, None)
         })
     }
 
+    /// Run `alg` under a time-aware [`crate::scenario::ScenarioSpec`]:
+    /// sync mode keeps this driver's round loop — cohorts trimmed by
+    /// availability/dropout, every round priced in virtual seconds from
+    /// the exact bits it booked — while buffered-async mode replaces the
+    /// barrier entirely (see [`crate::scenario`]). The returned record
+    /// carries per-eval virtual timestamps ([`RoundStat::vtime`]) and a
+    /// final [`crate::metrics::ScenarioStat`].
+    pub fn run_scenario(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        spec: &crate::scenario::ScenarioSpec,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        spec.validate()?;
+        match spec.mode {
+            crate::scenario::Mode::Sync => {
+                let mut eng =
+                    crate::scenario::SyncEngine::new(*spec, opts.seed, oracle.n_clients());
+                self.run_inner(alg, oracle, None, None, x0, opts, Some(&mut eng))
+            }
+            crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
+                crate::scenario::run_buffered_async(
+                    self, alg, oracle, spec, buffer, staleness, x0, opts,
+                )
+            }
+        }
+    }
+
+    /// [`Driver::run_scenario`] on the worker pool: sync-mode scenarios
+    /// run their rounds exactly like [`Driver::run_parallel`] (fused
+    /// pipeline included) under the same virtual clock — the timeline is
+    /// a pure function of the seed and the booked bits, so serial, pool
+    /// and fused scenario runs are bit-identical by construction.
+    /// Buffered-async mode is inherently event-serial and runs on the
+    /// driver thread.
+    pub fn run_scenario_parallel<O>(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &O,
+        spec: &crate::scenario::ScenarioSpec,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord>
+    where
+        O: Oracle + Send + Sync,
+    {
+        spec.validate()?;
+        match spec.mode {
+            crate::scenario::Mode::Sync => {
+                let mut eng =
+                    crate::scenario::SyncEngine::new(*spec, opts.seed, oracle.n_clients());
+                let fusable =
+                    self.fused_configured() && alg.uplink_plan().is_some_and(|p| p.executable());
+                if alg.grad_point().is_none() && !fusable {
+                    return self.run_inner(alg, oracle, None, None, x0, opts, Some(&mut eng));
+                }
+                std::thread::scope(|scope| {
+                    let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
+                    self.run_inner(alg, oracle, Some(&pool), None, x0, opts, Some(&mut eng))
+                })
+            }
+            crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
+                crate::scenario::run_buffered_async(
+                    self, alg, oracle, spec, buffer, staleness, x0, opts,
+                )
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn run_inner(
         &self,
         alg: &mut dyn FlAlgorithm,
@@ -319,6 +399,7 @@ impl Driver {
         mut obs: Option<&mut dyn FnMut(&RoundStat)>,
         x0: &[f32],
         opts: &RunOptions,
+        mut scen: Option<&mut crate::scenario::SyncEngine>,
     ) -> Result<RunRecord> {
         let n = oracle.n_clients();
         let d = oracle.dim();
@@ -364,6 +445,9 @@ impl Driver {
         // reusable outputs for the oracle's batched dispatch
         let mut blosses: Vec<f32> = Vec::new();
         let mut bgrads: Vec<f32> = Vec::new();
+        // per-sender uplink log the scenario clock prices leaf transfer
+        // times from (reused across rounds; empty when untimed)
+        let mut sender_log: Vec<(u32, u64)> = Vec::new();
 
         // executed multi-level topology: reduce scratch, leaf compressor
         // resolution and hub-grouping buffers, all sized once here
@@ -423,7 +507,8 @@ impl Driver {
 
         for t in 0..opts.rounds {
             if t % opts.eval_every == 0 {
-                record_eval(alg, oracle, t, &ledger, opts, &mut rec)?;
+                let vt = scen.as_deref().map_or(0.0, |e| e.vtime);
+                record_eval(alg, oracle, t, &ledger, opts, vt, &mut rec)?;
                 if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
                     cb(stat);
                 }
@@ -446,6 +531,12 @@ impl Driver {
                 None => cohort.extend(0..n),
             }
             alg.filter_cohort(&mut cohort, &mut rng);
+            // scenario trim: availability + mid-round dropout, drawn from
+            // per-event streams ([`crate::scenario::event_rng`]) — never
+            // the main rng, so untimed equivalence holds bit-for-bit
+            if let Some(eng) = scen.as_deref_mut() {
+                eng.begin_round(t, &mut cohort);
+            }
             // multi-level trees with a re-compressing edge: stable-group
             // the cohort by hub (counting sort; consumes no RNG) so each
             // hub's clients run and reduce contiguously and the pool can
@@ -594,6 +685,7 @@ impl Driver {
                 self.sparse_links,
                 tree_links,
                 mask_links,
+                if scen.is_some() { Some(std::mem::take(&mut sender_log)) } else { None },
             );
 
             if fused_active {
@@ -668,23 +760,43 @@ impl Driver {
                 ledger.charge(self.topology.round_cost(ctx.local_rounds));
             }
             ledger.snapshot(t);
+            // scenario clock: price the round from exactly what it booked
+            // (per-sender payloads, tree flushes, the broadcast) and give
+            // the sender log back for the next round
+            if let Some(eng) = scen.as_deref_mut() {
+                let mut log = ctx.senders.take().unwrap_or_default();
+                eng.end_round(
+                    &self.topology,
+                    &log,
+                    ctx.tree_flush_log(),
+                    ctx.down_bits,
+                    ctx.down_nodes,
+                );
+                log.clear();
+                sender_log = log;
+            }
         }
-        record_eval(alg, oracle, opts.rounds, &ledger, opts, &mut rec)?;
+        let vt = scen.as_deref().map_or(0.0, |e| e.vtime);
+        record_eval(alg, oracle, opts.rounds, &ledger, opts, vt, &mut rec)?;
         if let (Some(cb), Some(stat)) = (obs.as_mut(), rec.rounds.last()) {
             cb(stat);
         }
         rec.edge_bits_up = ledger.up_edges.clone();
         rec.mask_nnz = mask_state.as_ref().map(|ms| ms.set.avg_nnz());
+        if let Some(eng) = scen.as_deref() {
+            rec.scenario = Some(eng.stat());
+        }
         Ok(rec)
     }
 }
 
-fn record_eval(
+pub(crate) fn record_eval(
     alg: &dyn FlAlgorithm,
     oracle: &dyn Oracle,
     round: usize,
     ledger: &CommLedger,
     opts: &RunOptions,
+    vtime: f64,
     rec: &mut RunRecord,
 ) -> Result<()> {
     let x = alg.eval_point();
@@ -707,6 +819,7 @@ fn record_eval(
         bits_up: ledger.bits_up(),
         bits_down: ledger.bits_down(),
         comm_cost: ledger.cost,
+        vtime,
         loss,
         gap,
         grad_norm_sq,
@@ -795,6 +908,32 @@ mod tests {
             assert_eq!(s.loss, r.loss);
             assert_eq!(s.bits_up, r.bits_up);
         }
+    }
+
+    #[test]
+    fn zero_effect_scenario_matches_plain_driver() {
+        // acceptance: a zero-straggler/zero-dropout sync scenario is
+        // bit-for-bit the plain driver on loss and ledger — only the
+        // virtual clock moves
+        let mut rng = crate::rng(75);
+        let q = QuadraticOracle::random(6, 5, 0.5, 2.0, 1.0, &mut rng);
+        let opts = RunOptions { rounds: 20, eval_every: 5, ..Default::default() };
+        let mut a = Gd::plain(6, 5, 0.3);
+        let plain = Driver::new().run(&mut a, &q, &vec![1.0; 5], &opts).unwrap();
+        let mut b = Gd::plain(6, 5, 0.3);
+        let spec = crate::scenario::ScenarioSpec::default();
+        let timed = Driver::new().run_scenario(&mut b, &q, &spec, &vec![1.0; 5], &opts).unwrap();
+        for (p, s) in plain.rounds.iter().zip(&timed.rounds) {
+            assert_eq!(p.loss, s.loss);
+            assert_eq!(p.bits_up, s.bits_up);
+            assert_eq!(p.bits_down, s.bits_down);
+            assert_eq!(p.comm_cost, s.comm_cost);
+        }
+        let stat = timed.scenario.unwrap();
+        assert!(stat.vtime > 0.0);
+        assert_eq!(stat.dropped, 0);
+        assert_eq!(stat.unavailable, 0);
+        assert_eq!(stat.applies, 20);
     }
 
     #[test]

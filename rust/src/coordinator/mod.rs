@@ -52,6 +52,16 @@
 //!   cohort order — the identical scatter sequence the reference path
 //!   performs, so fused and reference runs match bit for bit.
 //!
+//! Time-aware runs ([`driver::Driver::run_scenario`]) wrap this same
+//! loop: the [`crate::scenario`] engine trims each round's cohort
+//! (availability, mid-round dropout) *before* dispatch and prices the
+//! finished round from the bits the ledger actually booked, so the
+//! pool's sharding, the fused uplink and the reduce order are exactly
+//! the plain driver's — a timeline is bookkeeping on the side, never a
+//! different execution. (Buffered-async mode replaces the round loop
+//! entirely and runs on the driver thread; see
+//! [`crate::scenario::Mode`].)
+//!
 //! Under a multi-level tree both modes shard **by hub** (the chunk
 //! planner aligns chunk boundaries to hub groups and balances the
 //! remaining work adaptively, so skewed hub sizes still dispatch
@@ -741,6 +751,34 @@ mod tests {
         // even ungrouped chunking unchanged
         plan_chunks(12, None, 3, &mut bounds);
         assert_eq!(bounds, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn plan_chunks_degenerate_cases() {
+        let mut bounds = Vec::new();
+        // cohort smaller than the worker pool: one chunk per client,
+        // never an empty trailing chunk
+        plan_chunks(3, None, 8, &mut bounds);
+        assert_eq!(bounds, vec![0, 1, 2, 3]);
+        plan_chunks(1, None, 16, &mut bounds);
+        assert_eq!(bounds, vec![0, 1]);
+        // grouped cohort smaller than the pool: still one chunk per hub
+        plan_chunks(2, Some(&[0, 1]), 8, &mut bounds);
+        assert_eq!(bounds, vec![0, 1, 2]);
+        // a single giant hub cannot split across workers — one chunk
+        plan_chunks(50, Some(&[0]), 8, &mut bounds);
+        assert_eq!(bounds, vec![0, 50]);
+        // hubs emptied by cohort sampling never reach the planner (the
+        // driver pushes only non-empty hubs into the group starts), but
+        // a duplicated start must still yield monotone bounds covering
+        // the whole cohort with at most `workers` chunks
+        plan_chunks(12, Some(&[0, 5, 5, 10]), 4, &mut bounds);
+        assert_eq!((bounds[0], *bounds.last().unwrap()), (0, 12));
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds {bounds:?}");
+        assert!(bounds.len() - 1 <= 4, "bounds {bounds:?}");
+        // zero-length cohort (everyone unavailable this round)
+        plan_chunks(0, None, 4, &mut bounds);
+        assert_eq!(bounds, vec![0, 0]);
     }
 
     #[test]

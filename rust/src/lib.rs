@@ -58,6 +58,16 @@
 //! * [`sampling`] implements arbitrary cohort sampling (full, nonuniform,
 //!   nice, block, stratified + k-means clustering), consumed by the driver
 //!   for every algorithm.
+//! * [`scenario`] adds time: a deterministic virtual-clock engine over
+//!   the driver with per-client compute/speed distributions, availability
+//!   traces, mid-round dropout, and two aggregation modes — the
+//!   synchronous barrier priced in virtual seconds (transfer time =
+//!   ledger bits × edge cost / bandwidth), or buffered-async aggregation
+//!   with staleness-weighted applies ([`scenario::Staleness`]). Event
+//!   draws come from per-event streams ([`scenario::event_rng`], the
+//!   sibling of [`compress::client_rng`]), so timelines replay
+//!   bit-identically across serial/pool/fused execution (`[scenario]`
+//!   in TOML).
 //! * [`coordinator`] owns the round driver, topologies (flat &
 //!   hierarchical), the communication-cost ledger and the persistent
 //!   client worker pool; [`metrics`] records every curve the paper
@@ -88,6 +98,7 @@ pub mod repro;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod scenario;
 pub mod sparsity;
 pub mod vecmath;
 

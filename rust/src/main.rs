@@ -8,18 +8,21 @@
 //!     coordinator `Driver` (so any spec may add `[compressor]` /
 //!     `[topology]` sections — including an executed multi-level
 //!     aggregation tree with per-edge `[links.up.l<i>]` compressors —
-//!     and a `[sparsity]` section for masked federated training).
+//!     a `[sparsity]` section for masked federated training, and a
+//!     `[scenario]` section for time-aware runs: virtual clock,
+//!     stragglers, dropout, buffered-async aggregation).
 //!   * `list`              — list algorithms, experiments and artifacts.
-//!   * `serve [--clients N] [--rounds R] [--algorithm NAME]` — threaded
-//!     coordinator demo: the driver fans cohort gradient evaluation out
-//!     across OS threads and prints JSON round metrics.
+//!   * `serve [--config SPEC] [--clients N] [--rounds R] [--algorithm
+//!     NAME]` — threaded coordinator demo: the driver fans cohort
+//!     gradient evaluation out across OS threads and prints JSON round
+//!     metrics. `--config` routes a full TOML spec through the same
+//!     `build_driver` path as `run`; the other flags override it.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
 use fedeff::algorithms::{build_algorithm, registry, RunOptions};
-use fedeff::coordinator::driver::Driver;
 use fedeff::data::synth::Heterogeneity;
 use fedeff::metrics::write_runs;
 use fedeff::oracle::Oracle;
@@ -27,7 +30,7 @@ use fedeff::oracle::Oracle;
 const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | run <config.toml>
               | list
-              | serve [--clients N] [--rounds R] [--algorithm NAME]>";
+              | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -89,10 +92,11 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("serve") => {
-            let clients = opt_val(&args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(10);
-            let rounds = opt_val(&args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100);
-            let algorithm = opt_val(&args, "--algorithm").unwrap_or_else(|| "gd".into());
-            serve(clients, rounds, &algorithm)
+            let config = opt_val(&args, "--config");
+            let clients = opt_val(&args, "--clients").and_then(|v| v.parse().ok());
+            let rounds = opt_val(&args, "--rounds").and_then(|v| v.parse().ok());
+            let algorithm = opt_val(&args, "--algorithm");
+            serve(config.as_deref(), clients, rounds, algorithm.as_deref())
         }
         _ => {
             eprintln!("{USAGE}");
@@ -138,7 +142,13 @@ fn run_spec(path: &str) -> Result<()> {
 
     let mut alg = build_algorithm(&spec.algorithm, oracle.as_ref())?;
     let driver = fedeff::config::build_driver(&spec, ds.clients)?;
-    let rec = driver.run(alg.as_mut(), oracle.as_ref(), &x0, &opts)?;
+    let rec = match &spec.scenario {
+        Some(sc) => {
+            let scen = fedeff::config::build_scenario(sc)?;
+            driver.run_scenario(alg.as_mut(), oracle.as_ref(), &scen, &x0, &opts)?
+        }
+        None => driver.run(alg.as_mut(), oracle.as_ref(), &x0, &opts)?,
+    };
 
     let outdir = PathBuf::from(&ex.outdir).join(&ex.name);
     write_runs(&outdir, std::slice::from_ref(&rec))?;
@@ -168,14 +178,45 @@ fn run_spec(path: &str) -> Result<()> {
             .collect();
         println!("uplink bits per edge class (cumulative totals): {}", cells.join("  "));
     }
+    if let Some(sc) = rec.scenario {
+        // time-aware run: the virtual-clock timeline summary
+        println!(
+            "scenario timeline: {:.3} virtual s, {} dispatched / {} applied, \
+             {} dropped mid-round, {} unavailable",
+            sc.vtime, sc.dispatches, sc.applies, sc.dropped, sc.unavailable
+        );
+    }
     Ok(())
 }
 
 /// Threaded coordinator demo over the pure-Rust logreg fleet: the driver
-/// fans each round's cohort out across OS threads (`run_parallel`) and
-/// prints JSON round metrics. Any registry algorithm can be served.
-fn serve(clients: usize, rounds: usize, algorithm: &str) -> Result<()> {
-    let mut rng = fedeff::rng(0);
+/// fans each round's cohort out across OS threads and prints JSON round
+/// metrics. Any registry algorithm can be served. With `--config`, the
+/// full TOML spec — algorithm, links, topology, sparsity, scenario — is
+/// routed through the same [`fedeff::config::build_driver`] path as
+/// `run`; the remaining CLI flags act as overrides.
+fn serve(
+    config: Option<&str>,
+    clients: Option<usize>,
+    rounds: Option<usize>,
+    algorithm: Option<&str>,
+) -> Result<()> {
+    let mut spec = match config {
+        Some(path) => fedeff::config::Spec::load(path)?,
+        // flag-only serves keep their historical defaults via a tiny
+        // inline spec (clients 10, rounds 100, gd, seed 0)
+        None => fedeff::config::Spec::parse(
+            "[experiment]\nname = \"serve\"\nrounds = 100\n[algorithm]\nkind = \"gd\"",
+        )?,
+    };
+    if let Some(a) = algorithm {
+        spec.algorithm.kind = a.to_string();
+    }
+    let clients = clients.unwrap_or(spec.dataset.clients);
+    let rounds = rounds.unwrap_or(spec.experiment.rounds);
+    let seed = spec.experiment.seed;
+
+    let mut rng = fedeff::rng(seed);
     let data = fedeff::data::synth::logreg_dataset(
         112,
         256,
@@ -186,20 +227,37 @@ fn serve(clients: usize, rounds: usize, algorithm: &str) -> Result<()> {
     );
     let oracle = fedeff::oracle::logreg_rs::RustLogReg::new(data, 0.1);
     let d = oracle.dim();
-    let spec = fedeff::config::AlgorithmSpec { kind: algorithm.to_string(), ..Default::default() };
-    let mut alg = build_algorithm(&spec, &oracle)?;
-    let opts = RunOptions { rounds, eval_every: 10, seed: 0, ..Default::default() };
-    let _rec = Driver::new().run_parallel_streaming(
-        alg.as_mut(),
-        &oracle,
-        &vec![0.0f32; d],
-        &opts,
-        |r| {
+    let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
+    let driver = fedeff::config::build_driver(&spec, clients)?;
+    let opts = RunOptions {
+        rounds,
+        eval_every: spec.experiment.eval_every,
+        seed,
+        ..Default::default()
+    };
+    let x0 = vec![0.0f32; d];
+    let emit = |r: &fedeff::metrics::RoundStat| {
+        println!(
+            "{{\"round\":{},\"loss\":{:.6},\"bits_up\":{},\"bits_down\":{},\"cost\":{},\"vtime\":{}}}",
+            r.round, r.loss, r.bits_up, r.bits_down, r.comm_cost, r.vtime
+        );
+    };
+    if let Some(sc) = &spec.scenario {
+        // scenario runs don't stream: replay the recorded eval rounds,
+        // then the timeline summary
+        let scen = fedeff::config::build_scenario(sc)?;
+        let rec = driver.run_scenario_parallel(alg.as_mut(), &oracle, &scen, &x0, &opts)?;
+        for r in &rec.rounds {
+            emit(r);
+        }
+        if let Some(st) = rec.scenario {
             println!(
-                "{{\"round\":{},\"loss\":{:.6},\"bits_up\":{},\"bits_down\":{},\"cost\":{}}}",
-                r.round, r.loss, r.bits_up, r.bits_down, r.comm_cost
+                "{{\"vtime\":{},\"dispatches\":{},\"applies\":{},\"dropped\":{},\"unavailable\":{}}}",
+                st.vtime, st.dispatches, st.applies, st.dropped, st.unavailable
             );
-        },
-    )?;
+        }
+    } else {
+        let _rec = driver.run_parallel_streaming(alg.as_mut(), &oracle, &x0, &opts, emit)?;
+    }
     Ok(())
 }

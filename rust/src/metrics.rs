@@ -19,6 +19,9 @@ pub struct RoundStat {
     pub bits_down: u64,
     /// Cumulative abstract communication cost (hierarchical c1/c2 ledger).
     pub comm_cost: f64,
+    /// Virtual wall-clock seconds elapsed (time-aware scenario runs; 0
+    /// otherwise).
+    pub vtime: f64,
     /// Objective value f(x^t) (or train loss).
     pub loss: f32,
     /// f(x^t) - f* when f* is known.
@@ -41,11 +44,37 @@ pub struct RunRecord {
     /// Support size of the run's training-time sparsity mask (average
     /// over clients for personalized masks); `None` for dense runs.
     pub mask_nnz: Option<u64>,
+    /// Timeline counters when the run went through the time-aware
+    /// scenario engine; `None` for plain (untimed) runs.
+    pub scenario: Option<ScenarioStat>,
+}
+
+/// Timeline counters of a time-aware scenario run
+/// (see [`crate::scenario`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScenarioStat {
+    /// Total virtual wall-clock seconds.
+    pub vtime: f64,
+    /// Clients that dropped mid-round (their bits were never sent).
+    pub dropped: u64,
+    /// Sampled clients that were unavailable at round start.
+    pub unavailable: u64,
+    /// Client work dispatches (sync: sampled cohort sizes summed;
+    /// async: model broadcasts).
+    pub dispatches: u64,
+    /// Server model updates applied (sync rounds / async buffer flushes).
+    pub applies: u64,
 }
 
 impl RunRecord {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { label: label.into(), rounds: Vec::new(), edge_bits_up: Vec::new(), mask_nnz: None }
+        Self {
+            label: label.into(),
+            rounds: Vec::new(),
+            edge_bits_up: Vec::new(),
+            mask_nnz: None,
+            scenario: None,
+        }
     }
 
     pub fn push(&mut self, stat: RoundStat) {
@@ -67,15 +96,17 @@ impl RunRecord {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,bits_up,bits_down,comm_cost,loss,gap,grad_norm_sq,eval\n");
+        let mut s =
+            String::from("round,bits_up,bits_down,comm_cost,vtime,loss,gap,grad_norm_sq,eval\n");
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.bits_up,
                 r.bits_down,
                 r.comm_cost,
+                r.vtime,
                 r.loss,
                 r.gap.map_or(String::new(), |v| v.to_string()),
                 r.grad_norm_sq.map_or(String::new(), |v| v.to_string()),

@@ -1,0 +1,846 @@
+//! Time-aware scenario engine: a deterministic virtual clock layered
+//! over the [`crate::coordinator::driver::Driver`].
+//!
+//! The coordinator's round loop is logically synchronous and
+//! failure-free; real cohorts are slow, flaky and heterogeneous. This
+//! module prices a run in *virtual seconds* so wall-clock-to-accuracy
+//! comparisons (sync barrier vs buffered-async, stragglers, dropout)
+//! fall out of machinery the ledger already trusts:
+//!
+//! * **Client profiles.** Every client owns a persistent relative speed
+//!   (drawn once per run from [`ScenarioSpec::speed`]) and draws one
+//!   compute time per round from [`ScenarioSpec::compute`], scaled by
+//!   its speed. Distributions are [`Dist`] — fixed, uniform,
+//!   exponential or Pareto (the heavy-tailed straggler profile).
+//! * **Transfer times from booked bits.** The engine never re-models
+//!   message sizes: it reads the *exact* per-sender bits the
+//!   [`crate::coordinator::CommLedger`] path books, multiplies by the
+//!   per-edge `[topology] costs` span the message traverses, and
+//!   divides by [`ScenarioSpec::bandwidth`] (bits per virtual second
+//!   across a unit-cost edge). `transfer = bits * cost_span / bandwidth`.
+//! * **Availability and mid-round dropout.** Before a round, each
+//!   sampled client may be unavailable (skipped, no time cost) or drop
+//!   mid-round (its compute time still gates the sync barrier — the
+//!   server waited that long to learn of the failure — but none of its
+//!   bits are booked or transferred). Dropout under an executed tree
+//!   exercises the hierarchy executor's partial-hub completion path.
+//! * **Two aggregation modes.** [`Mode::Sync`] keeps the driver's
+//!   barrier semantics: a round lasts `t_down + max(compute + leaf
+//!   transfer over survivors and dropped compute) + per-level hub-flush
+//!   transfers`. [`Mode::BufferedAsync`] replaces the barrier: the
+//!   server applies a [`Staleness`]-weighted aggregate every `buffer`
+//!   arrivals (FedBuff-style), redispatching each client immediately,
+//!   so fast clients are never gated on stragglers.
+//!
+//! Determinism (DESIGN.md §Scenario): every stochastic event draws from
+//! its own stream, [`event_rng`]`(seed, round, client, event)` — the
+//! sibling of [`crate::compress::client_rng`] — with a documented draw
+//! order per client per round (availability → compute → dropout).
+//! Event draws never touch the driver's main RNG, so a zero-effect
+//! scenario is bit-for-bit the plain driver, and identical seeds replay
+//! identical timelines across serial, pool and fused execution (the
+//! timeline is a pure function of the seed and the booked bits, which
+//! are already execution-order-free).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::api::{dense_bits, FlAlgorithm, PayloadSpec, ScaleSpec};
+use crate::algorithms::RunOptions;
+use crate::compress::client_rng;
+use crate::coordinator::driver::{record_eval, Driver, Topology};
+use crate::coordinator::CommLedger;
+use crate::metrics::{RunRecord, ScenarioStat};
+use crate::oracle::Oracle;
+use crate::vecmath as vm;
+use crate::Rng;
+
+/// Event channels of [`event_rng`]: the per-client persistent speed
+/// (drawn at round 0 only), the per-round compute time, the
+/// availability coin and the mid-round dropout coin.
+pub const EV_SPEED: u64 = 0;
+pub const EV_COMPUTE: u64 = 1;
+pub const EV_AVAIL: u64 = 2;
+pub const EV_DROP: u64 = 3;
+
+/// Deterministic per-event RNG stream — the scenario sibling of
+/// [`crate::compress::client_rng`] (same multiplier family, distinct
+/// mixing order and rotation, so the streams never collide). Every
+/// stochastic scenario event draws from its own stream, making the
+/// event timeline a pure function of `(seed, round, client, event)`
+/// and therefore independent of execution order.
+pub fn event_rng(seed: u64, round: usize, client: usize, event: u64) -> Rng {
+    let mut h = seed ^ 0x165667B19E3779F9u64.wrapping_mul(round as u64 + 1);
+    h ^= 0xC2B2AE3D27D4EB4Fu64.wrapping_mul(client as u64 + 1);
+    h ^= 0x9E3779B97F4A7C15u64.wrapping_mul(event + 1);
+    Rng::new(h.rotate_left(29))
+}
+
+/// A non-negative duration/speed distribution. TOML grammar (see
+/// [`parse_dist`]): `fixed(v)`, `uniform(lo,hi)`, `exp(mean)`,
+/// `pareto(scale,shape)` — Pareto with `shape` close to 1 is the
+/// heavy-tailed straggler profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Always `v`.
+    Fixed(f64),
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// Exponential with the given mean.
+    Exp { mean: f64 },
+    /// Pareto: `scale / U^(1/shape)`, support `[scale, inf)`; mean
+    /// `scale * shape / (shape - 1)` for `shape > 1`, infinite below.
+    Pareto { scale: f64, shape: f64 },
+}
+
+impl Dist {
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Fixed(v) => v,
+            Dist::Uniform { lo, hi } => lo + (hi - lo) * rng.f64_unit(),
+            Dist::Exp { mean } => -mean * (1.0 - rng.f64_unit()).ln(),
+            Dist::Pareto { scale, shape } => scale / (1.0 - rng.f64_unit()).powf(1.0 / shape),
+        }
+    }
+
+    /// Parameter sanity — loud, in the `sparsity::parse_*` error style.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Dist::Fixed(v) => {
+                ensure!(v.is_finite() && v >= 0.0, "fixed(v) needs v >= 0, got {v}")
+            }
+            Dist::Uniform { lo, hi } => ensure!(
+                lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi,
+                "uniform(lo,hi) needs 0 <= lo <= hi, got ({lo}, {hi})"
+            ),
+            Dist::Exp { mean } => {
+                ensure!(mean.is_finite() && mean > 0.0, "exp(mean) needs mean > 0, got {mean}")
+            }
+            Dist::Pareto { scale, shape } => ensure!(
+                scale.is_finite() && scale > 0.0 && shape.is_finite() && shape > 0.0,
+                "pareto(scale,shape) needs scale > 0 and shape > 0, got ({scale}, {shape})"
+            ),
+        }
+        Ok(())
+    }
+}
+
+/// Parse `name(arg, ...)` into its name and numeric arguments.
+fn split_call(s: &str) -> Result<(&str, Vec<f64>)> {
+    let s = s.trim();
+    let (name, rest) = match (s.find('('), s.ends_with(')')) {
+        (Some(i), true) => (s[..i].trim(), &s[i + 1..s.len() - 1]),
+        _ => bail!("malformed spec {s:?}: expected name(arg, ...)"),
+    };
+    let mut args = Vec::new();
+    if !rest.trim().is_empty() {
+        for part in rest.split(',') {
+            let v: f64 = part
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad numeric argument {part:?} in {s:?}"))?;
+            args.push(v);
+        }
+    }
+    Ok((name, args))
+}
+
+/// Parse a [`Dist`] from its TOML string form; unknown names and bad
+/// parameters fail loudly with the full grammar in the message.
+pub fn parse_dist(s: &str) -> Result<Dist> {
+    let (name, args) = split_call(s)?;
+    let dist = match (name, args.as_slice()) {
+        ("fixed", [v]) => Dist::Fixed(*v),
+        ("uniform", [lo, hi]) => Dist::Uniform { lo: *lo, hi: *hi },
+        ("exp", [mean]) => Dist::Exp { mean: *mean },
+        ("pareto", [scale, shape]) => Dist::Pareto { scale: *scale, shape: *shape },
+        _ => bail!(
+            "unknown distribution {s:?} (known: fixed(v), uniform(lo,hi), exp(mean), \
+             pareto(scale,shape))"
+        ),
+    };
+    dist.validate()?;
+    Ok(dist)
+}
+
+/// How a buffered-async server discounts an update computed against an
+/// anchor that is `s` server versions old. TOML grammar (see
+/// [`parse_staleness`]): `const(c)`, `poly(a)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Staleness {
+    /// Every update weighs `c` regardless of staleness.
+    Constant(f64),
+    /// Polynomial discount `(1 + s)^-a` (FedBuff's default family);
+    /// `poly(0)` is no discount.
+    Poly(f64),
+}
+
+impl Staleness {
+    /// Weight of an update whose anchor is `staleness` applies old.
+    pub fn weight(&self, staleness: u64) -> f64 {
+        match *self {
+            Staleness::Constant(c) => c,
+            Staleness::Poly(a) => (1.0 + staleness as f64).powf(-a),
+        }
+    }
+}
+
+/// Parse a [`Staleness`] from its TOML string form.
+pub fn parse_staleness(s: &str) -> Result<Staleness> {
+    let (name, args) = split_call(s)?;
+    match (name, args.as_slice()) {
+        ("const", [c]) => {
+            ensure!(c.is_finite() && *c > 0.0, "const(c) staleness needs c > 0, got {c}");
+            Ok(Staleness::Constant(*c))
+        }
+        ("poly", [a]) => {
+            ensure!(a.is_finite() && *a >= 0.0, "poly(a) staleness needs a >= 0, got {a}");
+            Ok(Staleness::Poly(*a))
+        }
+        _ => bail!("unknown staleness weighting {s:?} (known: const(c), poly(a))"),
+    }
+}
+
+/// Aggregation mode of a scenario run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// The driver's synchronous barrier, priced in virtual time.
+    #[allow(clippy::enum_variant_names)]
+    Sync,
+    /// Buffered asynchronous aggregation: the server folds in a
+    /// staleness-weighted aggregate every `buffer` arrivals and
+    /// redispatches each client immediately on arrival.
+    BufferedAsync { buffer: usize, staleness: Staleness },
+}
+
+/// Everything a time-aware run needs beyond the driver itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioSpec {
+    /// Per-round compute-time distribution (virtual seconds), scaled by
+    /// the client's persistent speed factor.
+    pub compute: Dist,
+    /// Per-client persistent speed factor, drawn once per run.
+    pub speed: Dist,
+    /// Link bandwidth: bits per virtual second across a unit-cost edge
+    /// (an edge of cost `c` delivers `bandwidth / c` bits per second).
+    pub bandwidth: f64,
+    /// Per-round mid-round dropout probability per participating client.
+    pub drop: f32,
+    /// Per-round unavailability probability per sampled client.
+    pub unavailable: f32,
+    pub mode: Mode,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        Self {
+            compute: Dist::Fixed(1.0),
+            speed: Dist::Fixed(1.0),
+            bandwidth: 1e6,
+            drop: 0.0,
+            unavailable: 0.0,
+            mode: Mode::Sync,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Loud parameter validation (the config path and the driver entry
+    /// points both call this).
+    pub fn validate(&self) -> Result<()> {
+        self.compute.validate()?;
+        self.speed.validate()?;
+        ensure!(
+            self.bandwidth.is_finite() && self.bandwidth > 0.0,
+            "[scenario] bandwidth must be positive and finite, got {}",
+            self.bandwidth
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.drop),
+            "[scenario] drop must be in [0, 1), got {}",
+            self.drop
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.unavailable),
+            "[scenario] unavailable must be in [0, 1), got {}",
+            self.unavailable
+        );
+        if let Mode::BufferedAsync { buffer, .. } = self.mode {
+            ensure!(buffer > 0, "[scenario] async buffer size must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// The synchronous-mode clock: it trims each round's cohort (availability
+/// and dropout) before execution and prices the finished round from the
+/// bits the round actually booked. One instance per run, owned by
+/// [`crate::coordinator::driver::Driver::run_scenario`].
+pub(crate) struct SyncEngine {
+    spec: ScenarioSpec,
+    seed: u64,
+    /// Persistent per-client speed factors (round-0 [`EV_SPEED`] draws).
+    speeds: Vec<f64>,
+    /// Virtual seconds elapsed so far.
+    pub(crate) vtime: f64,
+    pub(crate) dropped: u64,
+    pub(crate) unavailable: u64,
+    /// Clients asked to participate (sampled cohort sizes summed).
+    pub(crate) dispatches: u64,
+    /// Completed (server-applied) rounds.
+    pub(crate) applies: u64,
+    /// This round's surviving (client, compute-time) pairs, cohort order.
+    survivors: Vec<(u32, f64)>,
+    /// Slowest compute time among this round's dropped clients — the
+    /// barrier cannot close before the server learns of the failure.
+    dropped_compute: f64,
+    /// Per-client attributed sender bits (zeroed after every round).
+    bits_scratch: Vec<f64>,
+    /// Per-level max flush transfer times (tree topologies).
+    flush_scratch: Vec<f64>,
+}
+
+impl SyncEngine {
+    pub(crate) fn new(spec: ScenarioSpec, seed: u64, n: usize) -> Self {
+        let speeds = (0..n)
+            .map(|c| spec.speed.sample(&mut event_rng(seed, 0, c, EV_SPEED)))
+            .collect();
+        Self {
+            spec,
+            seed,
+            speeds,
+            vtime: 0.0,
+            dropped: 0,
+            unavailable: 0,
+            dispatches: 0,
+            applies: 0,
+            survivors: Vec::new(),
+            dropped_compute: 0.0,
+            bits_scratch: vec![0.0; n],
+            flush_scratch: Vec::new(),
+        }
+    }
+
+    /// Trim the sampled cohort for round `round`. Documented draw order
+    /// per client: availability → compute → dropout, each on its own
+    /// [`event_rng`] stream (zero-probability events still skip their
+    /// coin, so a zero-effect scenario consumes no draws it would not
+    /// have consumed — not that it matters: event streams never touch
+    /// the driver's RNG).
+    pub(crate) fn begin_round(&mut self, round: usize, cohort: &mut Vec<usize>) {
+        self.dispatches += cohort.len() as u64;
+        self.survivors.clear();
+        self.dropped_compute = 0.0;
+        let (spec, seed) = (self.spec, self.seed);
+        let (survivors, speeds) = (&mut self.survivors, &self.speeds);
+        let (dropped, unavailable) = (&mut self.dropped, &mut self.unavailable);
+        let dropped_compute = &mut self.dropped_compute;
+        cohort.retain(|&c| {
+            if spec.unavailable > 0.0
+                && event_rng(seed, round, c, EV_AVAIL).bernoulli(spec.unavailable)
+            {
+                *unavailable += 1;
+                return false;
+            }
+            let compute =
+                speeds[c] * spec.compute.sample(&mut event_rng(seed, round, c, EV_COMPUTE));
+            if spec.drop > 0.0 && event_rng(seed, round, c, EV_DROP).bernoulli(spec.drop) {
+                *dropped += 1;
+                if compute > *dropped_compute {
+                    *dropped_compute = compute;
+                }
+                return false;
+            }
+            survivors.push((c as u32, compute));
+            true
+        });
+    }
+
+    /// Price the finished round from what it actually booked and advance
+    /// the clock. `senders` are the round's per-client booked uplink
+    /// payloads (`u32::MAX` = unattributed, spread evenly over
+    /// survivors — exact whenever every survivor sends identical dense
+    /// payloads, which is the only way unattributed entries arise);
+    /// `flushes` is the tree executor's flush log plus the first
+    /// re-compressing level.
+    ///
+    /// Round duration = `t_down + max(survivor compute + leaf transfer,
+    /// dropped compute) + sum over levels of the level's max flush
+    /// transfer` — broadcast, then the barrier on the slowest leaf, then
+    /// stage-synchronized hub flushes (nodes of one level flush in
+    /// parallel). Transfer spans mirror the ledger's booking exactly: a
+    /// leaf payload traverses edge classes `0..first_compressed`, a
+    /// flush its own edge plus its pass-through relays, the broadcast
+    /// every edge.
+    pub(crate) fn end_round(
+        &mut self,
+        topology: &Topology,
+        senders: &[(u32, u64)],
+        flushes: Option<(&[(u32, u32, u64)], usize)>,
+        down_bits: u64,
+        down_nodes: u64,
+    ) {
+        let bw = self.spec.bandwidth;
+        let (leaf_span, down_span) = match topology {
+            Topology::Flat => (1.0, 1.0),
+            Topology::Hier(h) => (h.c1, h.c1 + h.c2),
+            Topology::Tree(t) => {
+                let fc = flushes.map_or(t.depth(), |(_, fc)| fc);
+                (t.costs()[..fc].iter().sum::<f64>(), t.costs().iter().sum::<f64>())
+            }
+        };
+        let t_down = if down_nodes == 0 {
+            0.0
+        } else {
+            (down_bits as f64 / down_nodes as f64) * down_span / bw
+        };
+        let mut unattrib = 0u64;
+        for &(c, b) in senders {
+            if c == u32::MAX {
+                unattrib += b;
+            } else {
+                self.bits_scratch[c as usize] += b as f64;
+            }
+        }
+        let even = if self.survivors.is_empty() {
+            0.0
+        } else {
+            unattrib as f64 / self.survivors.len() as f64
+        };
+        let mut t_up = self.dropped_compute;
+        for &(c, compute) in &self.survivors {
+            let arr = compute + (self.bits_scratch[c as usize] + even) * leaf_span / bw;
+            if arr > t_up {
+                t_up = arr;
+            }
+        }
+        for &(c, _) in senders {
+            if c != u32::MAX {
+                self.bits_scratch[c as usize] = 0.0;
+            }
+        }
+        let mut t_flush = 0.0;
+        if let (Some((log, _)), Topology::Tree(t)) = (flushes, topology) {
+            self.flush_scratch.clear();
+            self.flush_scratch.resize(t.depth(), 0.0);
+            for &(lvl, relay_to, bits) in log {
+                let span: f64 = t.costs()[lvl as usize..relay_to as usize].iter().sum();
+                let tt = bits as f64 * span / bw;
+                if tt > self.flush_scratch[lvl as usize] {
+                    self.flush_scratch[lvl as usize] = tt;
+                }
+            }
+            t_flush = self.flush_scratch.iter().sum();
+        }
+        self.vtime += t_down + t_up + t_flush;
+        self.applies += 1;
+    }
+
+    pub(crate) fn stat(&self) -> ScenarioStat {
+        ScenarioStat {
+            vtime: self.vtime,
+            dropped: self.dropped,
+            unavailable: self.unavailable,
+            dispatches: self.dispatches,
+            applies: self.applies,
+        }
+    }
+}
+
+/// The payload recipe the async engine replicates per dispatch —
+/// captured once from the algorithm's [`PayloadSpec`] (arithmetic
+/// mirrors the fused worker pipeline verbatim).
+enum AsyncPayload {
+    Gradient,
+    LocalSgd { steps: usize, lr: f32, prox_mu: Option<f32> },
+}
+
+/// Per-client flight state of the buffered-async engine.
+struct AsyncState<'a> {
+    spec: &'a ScenarioSpec,
+    seed: u64,
+    d: usize,
+    comp: Option<&'a dyn crate::compress::Compressor>,
+    payload: AsyncPayload,
+    speeds: Vec<f64>,
+    /// Per-client dispatch counter — the "round" of its streams, so
+    /// redispatches draw fresh, deterministic randomness.
+    k: Vec<usize>,
+    /// Virtual arrival time of each client's in-flight update.
+    arrival: Vec<f64>,
+    /// Whether the in-flight update drops on arrival.
+    dropflag: Vec<bool>,
+    /// Server version each in-flight update anchored on.
+    anchor_ver: Vec<u64>,
+    /// Server-received payloads, `n * d` flattened.
+    recv: Vec<f32>,
+    yi: Vec<f32>,
+    g: Vec<f32>,
+    pay: Vec<f32>,
+    version: u64,
+    dispatches: u64,
+    dropped: u64,
+}
+
+impl AsyncState<'_> {
+    /// Send the current server model to client `c` at virtual time
+    /// `now` and put its update in flight: compute the payload from the
+    /// anchor (the arithmetic of the fused worker pipeline, verbatim),
+    /// compress it on the client's own [`client_rng`] stream, and draw
+    /// its compute time and dropout coin from [`event_rng`] keyed by
+    /// the client's dispatch counter. Books the anchor broadcast per
+    /// dispatch; uplink bits are booked only if the update is not
+    /// dropped — the ledger sees only bits actually sent.
+    fn dispatch(
+        &mut self,
+        alg: &dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        ledger: &mut CommLedger,
+        c: usize,
+        now: f64,
+    ) -> Result<()> {
+        let anchor = alg.eval_point();
+        let kc = self.k[c];
+        self.k[c] += 1;
+        match self.payload {
+            AsyncPayload::Gradient => {
+                oracle.loss_grad(c, &anchor, &mut self.pay)?;
+            }
+            AsyncPayload::LocalSgd { steps, lr, prox_mu } => {
+                self.yi.copy_from_slice(&anchor);
+                for _ in 0..steps {
+                    oracle.loss_grad(c, &self.yi, &mut self.g)?;
+                    if let Some(mu) = prox_mu {
+                        for j in 0..self.d {
+                            self.g[j] += mu * (self.yi[j] - anchor[j]);
+                        }
+                    }
+                    vm::axpy(-lr, &self.g, &mut self.yi);
+                }
+                vm::sub(&self.yi, &anchor, &mut self.pay);
+            }
+        }
+        let out = &mut self.recv[c * self.d..(c + 1) * self.d];
+        let bits = match self.comp {
+            Some(comp) => {
+                let mut rng = client_rng(self.seed, kc, c, 0);
+                comp.compress(&self.pay, out, &mut rng)
+            }
+            None => {
+                out.copy_from_slice(&self.pay);
+                dense_bits(self.d)
+            }
+        };
+        let compute =
+            self.speeds[c] * self.spec.compute.sample(&mut event_rng(self.seed, kc, c, EV_COMPUTE));
+        let dropped =
+            self.spec.drop > 0.0 && event_rng(self.seed, kc, c, EV_DROP).bernoulli(self.spec.drop);
+        self.arrival[c] = now + compute + bits as f64 / self.spec.bandwidth;
+        self.dropflag[c] = dropped;
+        self.anchor_ver[c] = self.version;
+        self.dispatches += 1;
+        if dropped {
+            self.dropped += 1;
+        } else {
+            ledger.up(bits, 1);
+        }
+        ledger.down(dense_bits(self.d), 1);
+        Ok(())
+    }
+}
+
+/// Buffered-async execution (FedBuff-style): all `n` clients fly
+/// continuously; the server folds a staleness-weighted aggregate into
+/// the model via [`FlAlgorithm::absorb_async`] every `buffer` arrivals
+/// and a "round" in the [`RunRecord`] is one such apply (`opts.rounds`
+/// applies total, eval cadence on applies). Per arrival the update is
+/// weighted `staleness.weight(s) * w_c / buffer` — `s` the number of
+/// applies since the update's anchor, `w_c` the plan's per-client
+/// weight (1 under [`ScaleSpec::MeanOverCohort`]) — the direct analog
+/// of the sync path's `1 / cohort` (resp. Horvitz–Thompson) scaling
+/// with the buffer as the cohort. Availability traces are a barrier
+/// concept and are ignored here (a client is simply always in flight);
+/// flat topology only, and each dispatch books one dense anchor
+/// broadcast down plus (if not dropped) the compressed payload up.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_buffered_async(
+    drv: &Driver,
+    alg: &mut dyn FlAlgorithm,
+    oracle: &dyn Oracle,
+    spec: &ScenarioSpec,
+    buffer: usize,
+    staleness: Staleness,
+    x0: &[f32],
+    opts: &RunOptions,
+) -> Result<RunRecord> {
+    let n = oracle.n_clients();
+    let d = oracle.dim();
+    ensure!(
+        matches!(drv.topology, Topology::Flat),
+        "buffered-async scenarios support only the flat topology"
+    );
+    ensure!(
+        drv.mask.is_none(),
+        "buffered-async scenarios do not compose with training-time sparsity masks"
+    );
+    ensure!(
+        drv.sampler.is_none(),
+        "buffered-async scenarios run every client continuously; drop the cohort sampler"
+    );
+    ensure!(
+        alg.supports_async(),
+        "{} does not support buffered-async aggregation",
+        alg.label()
+    );
+    ensure!((1..=n).contains(&buffer), "async buffer size must be in 1..={n}, got {buffer}");
+    alg.init(oracle, x0, opts)?;
+    let (payload, weights) = {
+        let plan = match alg.uplink_plan() {
+            Some(p) if p.executable() && p.channels() == 1 => p,
+            _ => bail!(
+                "{} advertises no single-channel executable uplink plan for async execution",
+                alg.label()
+            ),
+        };
+        let payload = match plan.payload {
+            PayloadSpec::Gradient => AsyncPayload::Gradient,
+            PayloadSpec::LocalSgd { steps, lr, prox_mu } => {
+                AsyncPayload::LocalSgd { steps, lr, prox_mu }
+            }
+            _ => bail!(
+                "{} advertises no single-channel executable uplink plan for async execution",
+                alg.label()
+            ),
+        };
+        let weights = match plan.scale {
+            ScaleSpec::MeanOverCohort => None,
+            ScaleSpec::WeightedHt { weights } => Some(weights.to_vec()),
+        };
+        (payload, weights)
+    };
+    let speeds = (0..n)
+        .map(|c| spec.speed.sample(&mut event_rng(opts.seed, 0, c, EV_SPEED)))
+        .collect();
+    let mut st = AsyncState {
+        spec,
+        seed: opts.seed,
+        d,
+        comp: drv.up.as_deref(),
+        payload,
+        speeds,
+        k: vec![0; n],
+        arrival: vec![0.0; n],
+        dropflag: vec![false; n],
+        anchor_ver: vec![0; n],
+        recv: vec![0.0; n * d],
+        yi: vec![0.0; d],
+        g: vec![0.0; d],
+        pay: vec![0.0; d],
+        version: 0,
+        dispatches: 0,
+        dropped: 0,
+    };
+    let mut ledger = CommLedger::default();
+    let mut rec = RunRecord::new(alg.label());
+    record_eval(alg, oracle, 0, &ledger, opts, 0.0, &mut rec)?;
+    for c in 0..n {
+        st.dispatch(alg, oracle, &mut ledger, c, 0.0)?;
+    }
+    let mut agg = vec![0.0f32; d];
+    let mut in_buffer = 0usize;
+    let mut applies = 0usize;
+    let mut vtime = 0.0f64;
+    while applies < opts.rounds {
+        // next arrival: earliest in-flight update, client-id tiebreak
+        let mut c = 0usize;
+        for i in 1..n {
+            if st.arrival[i] < st.arrival[c] {
+                c = i;
+            }
+        }
+        let now = st.arrival[c];
+        vtime = now;
+        if !st.dropflag[c] {
+            let s = st.version - st.anchor_ver[c];
+            let wc = weights.as_ref().map_or(1.0, |w| w[c] as f64);
+            let coeff = (staleness.weight(s) * wc / buffer as f64) as f32;
+            vm::axpy(coeff, &st.recv[c * d..(c + 1) * d], &mut agg);
+            in_buffer += 1;
+            if in_buffer == buffer {
+                alg.absorb_async(&agg)?;
+                agg.fill(0.0);
+                in_buffer = 0;
+                st.version += 1;
+                applies += 1;
+                ledger.charge(drv.topology.round_cost(1));
+                ledger.snapshot(applies - 1);
+                if applies < opts.rounds && applies % opts.eval_every == 0 {
+                    record_eval(alg, oracle, applies, &ledger, opts, vtime, &mut rec)?;
+                }
+            }
+        }
+        if applies < opts.rounds {
+            st.dispatch(alg, oracle, &mut ledger, c, now)?;
+        }
+    }
+    record_eval(alg, oracle, opts.rounds, &ledger, opts, vtime, &mut rec)?;
+    rec.scenario = Some(ScenarioStat {
+        vtime,
+        dropped: st.dropped,
+        unavailable: 0,
+        dispatches: st.dispatches,
+        applies: applies as u64,
+    });
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_streams_are_deterministic_and_independent() {
+        let base = event_rng(7, 3, 2, EV_COMPUTE).next_u64();
+        assert_eq!(base, event_rng(7, 3, 2, EV_COMPUTE).next_u64());
+        assert_ne!(base, event_rng(7, 3, 2, EV_DROP).next_u64());
+        assert_ne!(base, event_rng(7, 3, 3, EV_COMPUTE).next_u64());
+        assert_ne!(base, event_rng(7, 4, 2, EV_COMPUTE).next_u64());
+        assert_ne!(base, event_rng(8, 3, 2, EV_COMPUTE).next_u64());
+        // distinct from the compress-side sibling on the same key
+        assert_ne!(base, crate::compress::client_rng(7, 3, 2, EV_COMPUTE as usize).next_u64());
+    }
+
+    #[test]
+    fn dist_samples_match_support() {
+        let mut rng = crate::rng(9);
+        assert_eq!(Dist::Fixed(2.5).sample(&mut rng), 2.5);
+        let u = Dist::Uniform { lo: 1.0, hi: 3.0 };
+        let e = Dist::Exp { mean: 0.5 };
+        let p = Dist::Pareto { scale: 0.1, shape: 2.0 };
+        let mut esum = 0.0;
+        for _ in 0..4000 {
+            let v = u.sample(&mut rng);
+            assert!((1.0..3.0).contains(&v), "uniform {v}");
+            let v = e.sample(&mut rng);
+            assert!(v >= 0.0, "exp {v}");
+            esum += v;
+            let v = p.sample(&mut rng);
+            assert!(v >= 0.1, "pareto {v}");
+        }
+        let emean = esum / 4000.0;
+        assert!((emean - 0.5).abs() < 0.05, "exp mean {emean}");
+    }
+
+    #[test]
+    fn parse_dist_grammar_and_errors() {
+        assert_eq!(parse_dist("fixed(1.5)").unwrap(), Dist::Fixed(1.5));
+        assert_eq!(
+            parse_dist(" uniform( 0.5 , 2.0 ) ").unwrap(),
+            Dist::Uniform { lo: 0.5, hi: 2.0 }
+        );
+        assert_eq!(parse_dist("exp(0.3)").unwrap(), Dist::Exp { mean: 0.3 });
+        assert_eq!(
+            parse_dist("pareto(0.05,1.1)").unwrap(),
+            Dist::Pareto { scale: 0.05, shape: 1.1 }
+        );
+        // unknown names and arity mismatches list the grammar
+        let e = parse_dist("gamma(1,2)").unwrap_err().to_string();
+        assert!(e.contains("unknown distribution") && e.contains("pareto"), "{e}");
+        assert!(parse_dist("fixed(1, 2)").is_err());
+        // negative / degenerate rates are loud
+        assert!(parse_dist("fixed(-1)").is_err());
+        assert!(parse_dist("exp(0)").is_err());
+        assert!(parse_dist("exp(-0.5)").is_err());
+        assert!(parse_dist("uniform(2, 1)").is_err());
+        assert!(parse_dist("pareto(0, 1)").is_err());
+        assert!(parse_dist("nonsense").is_err());
+        assert!(parse_dist("exp(abc)").is_err());
+    }
+
+    #[test]
+    fn staleness_weights_discount() {
+        let c = Staleness::Constant(0.7);
+        assert_eq!(c.weight(0), 0.7);
+        assert_eq!(c.weight(100), 0.7);
+        let p = Staleness::Poly(0.5);
+        assert_eq!(p.weight(0), 1.0);
+        assert!(p.weight(1) < 1.0);
+        assert!(p.weight(8) < p.weight(1));
+        assert_eq!(Staleness::Poly(0.0).weight(9), 1.0);
+    }
+
+    #[test]
+    fn parse_staleness_grammar_and_errors() {
+        assert_eq!(parse_staleness("const(0.5)").unwrap(), Staleness::Constant(0.5));
+        assert_eq!(parse_staleness("poly(1.0)").unwrap(), Staleness::Poly(1.0));
+        assert!(parse_staleness("const(0)").is_err());
+        assert!(parse_staleness("poly(-1)").is_err());
+        let e = parse_staleness("exp(1)").unwrap_err().to_string();
+        assert!(e.contains("unknown staleness"), "{e}");
+    }
+
+    #[test]
+    fn spec_validation_is_loud() {
+        let ok = ScenarioSpec::default();
+        ok.validate().unwrap();
+        let bad = ScenarioSpec { bandwidth: 0.0, ..ok };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioSpec { drop: 1.0, ..ok };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioSpec { unavailable: -0.1, ..ok };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioSpec {
+            mode: Mode::BufferedAsync { buffer: 0, staleness: Staleness::Constant(1.0) },
+            ..ok
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn sync_engine_replays_identically() {
+        let spec = ScenarioSpec {
+            compute: Dist::Exp { mean: 0.2 },
+            speed: Dist::Uniform { lo: 0.5, hi: 2.0 },
+            drop: 0.2,
+            unavailable: 0.1,
+            ..Default::default()
+        };
+        let mut a = SyncEngine::new(spec, 11, 16);
+        let mut b = SyncEngine::new(spec, 11, 16);
+        for round in 0..5 {
+            let mut ca: Vec<usize> = (0..16).collect();
+            let mut cb: Vec<usize> = (0..16).collect();
+            a.begin_round(round, &mut ca);
+            b.begin_round(round, &mut cb);
+            assert_eq!(ca, cb, "round {round}");
+            assert_eq!(a.survivors, b.survivors, "round {round}");
+            let senders: Vec<(u32, u64)> = ca.iter().map(|&c| (c as u32, 512)).collect();
+            a.end_round(&Topology::Flat, &senders, None, 512, 1);
+            b.end_round(&Topology::Flat, &senders, None, 512, 1);
+            assert_eq!(a.vtime.to_bits(), b.vtime.to_bits(), "round {round}");
+        }
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.unavailable, b.unavailable);
+        assert!(a.vtime > 0.0);
+    }
+
+    #[test]
+    fn sync_round_duration_is_barrier_shaped() {
+        // two survivors with known compute times and bits: the round
+        // lasts broadcast + the slower leaf (compute + transfer)
+        let spec = ScenarioSpec { bandwidth: 100.0, ..Default::default() };
+        let mut eng = SyncEngine::new(spec, 3, 4);
+        eng.survivors.clear();
+        eng.survivors.push((0, 1.0));
+        eng.survivors.push((1, 4.0));
+        eng.end_round(&Topology::Flat, &[(0, 200), (1, 100)], None, 300, 1);
+        // t_down = 300/100 = 3; leaf 0 = 1 + 2 = 3; leaf 1 = 4 + 1 = 5
+        assert!((eng.vtime - 8.0).abs() < 1e-12, "vtime {}", eng.vtime);
+        // dropped stragglers still gate the barrier
+        let mut eng = SyncEngine::new(spec, 3, 4);
+        eng.dropped_compute = 9.0;
+        eng.survivors.push((0, 1.0));
+        eng.end_round(&Topology::Flat, &[(0, 100)], None, 0, 0);
+        assert!((eng.vtime - 9.0).abs() < 1e-12, "vtime {}", eng.vtime);
+    }
+}

@@ -1,0 +1,334 @@
+//! Acceptance pins for the time-aware scenario engine (DESIGN.md
+//! §Scenario):
+//!
+//! * a zero-straggler / zero-dropout sync scenario is **bit-for-bit**
+//!   the plain driver in loss and ledger — the virtual clock is
+//!   bookkeeping on the side, never a different execution;
+//! * identical seeds replay identical timelines (losses, booked bits
+//!   *and* virtual timestamps) across serial, pool and fused runs;
+//! * mid-round dropout over a 3-level tree completes the round with
+//!   correctly down-weighted partial hubs, and the ledger books only
+//!   the bits survivors actually sent — pinned by scripting the
+//!   engine's own survivor cohorts into an untimed reference driver;
+//! * buffered-async aggregation reaches a target loss in **less
+//!   virtual time** than the sync barrier under a heavy-tailed
+//!   (Pareto) straggler profile, replays bitwise at a fixed seed, and
+//!   rejects unsupported configurations loudly.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use fedeff::algorithms::fedavg::FedAvg;
+use fedeff::algorithms::scaffold::Scaffold;
+use fedeff::algorithms::RunOptions;
+use fedeff::coordinator::driver::{Driver, Topology};
+use fedeff::coordinator::hierarchy::AggTree;
+use fedeff::metrics::RunRecord;
+use fedeff::oracle::quadratic::QuadraticOracle;
+use fedeff::sampling::{CohortSampler, NiceSampling};
+use fedeff::scenario::{event_rng, Dist, Mode, ScenarioSpec, Staleness, EV_DROP};
+use fedeff::Rng;
+
+fn quadratic(seed: u64, n: usize, d: usize) -> QuadraticOracle {
+    let mut rng = fedeff::rng(seed);
+    QuadraticOracle::random(n, d, 0.5, 2.0, 1.0, &mut rng)
+}
+
+/// Bit-for-bit equality in loss, booked bits and comm cost; the virtual
+/// clock column is compared only when both records carry one.
+fn assert_records_eq(a: &RunRecord, b: &RunRecord, vtime_too: bool, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: record lengths differ");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert!(ra.loss == rb.loss, "{what}: entry {i} loss {} vs {}", ra.loss, rb.loss);
+        assert_eq!(ra.bits_up, rb.bits_up, "{what}: entry {i} bits_up");
+        assert_eq!(ra.bits_down, rb.bits_down, "{what}: entry {i} bits_down");
+        assert!(
+            ra.comm_cost == rb.comm_cost,
+            "{what}: entry {i} comm_cost {} vs {}",
+            ra.comm_cost,
+            rb.comm_cost
+        );
+        if vtime_too {
+            assert_eq!(
+                ra.vtime.to_bits(),
+                rb.vtime.to_bits(),
+                "{what}: entry {i} vtime {} vs {}",
+                ra.vtime,
+                rb.vtime
+            );
+        }
+    }
+    assert_eq!(a.edge_bits_up, b.edge_bits_up, "{what}: per-edge ledger");
+}
+
+/// A zero-effect scenario (fixed unit compute, no stragglers, no
+/// dropout, sync barrier) is the plain driver bit-for-bit — including a
+/// composed configuration (Top-K uplink + cohort sampling).
+#[test]
+fn sync_zero_effect_scenario_matches_untimed_driver() {
+    let q = quadratic(90, 10, 24);
+    let x0 = vec![1.0f32; 24];
+    let opts = RunOptions { rounds: 40, eval_every: 10, seed: 3, ..Default::default() };
+    let mk = || {
+        Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 10, tau: 5 }))
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(6)))
+    };
+    let mut a = FedAvg::new(3, 0.1);
+    let rec_plain = mk().run(&mut a, &q, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(3, 0.1);
+    let spec = ScenarioSpec::default();
+    let rec_timed = mk().run_scenario(&mut b, &q, &spec, &x0, &opts).unwrap();
+    assert_records_eq(&rec_plain, &rec_timed, false, "zero-effect scenario");
+    // the clock still ran: virtual timestamps are positive and monotone
+    let stat = rec_timed.scenario.expect("scenario stat");
+    assert!(stat.vtime > 0.0);
+    assert_eq!((stat.dropped, stat.unavailable), (0, 0));
+    assert_eq!(stat.applies, 40);
+    let vts: Vec<f64> = rec_timed.rounds.iter().map(|r| r.vtime).collect();
+    assert!(vts.windows(2).all(|w| w[0] < w[1]), "vtime not monotone: {vts:?}");
+    assert!(rec_plain.rounds.iter().all(|r| r.vtime == 0.0), "untimed run must report 0");
+}
+
+/// Fixed seed => identical event timeline, losses and booked bits
+/// across serial, reference-pool and fused execution, under stragglers,
+/// unavailability AND dropout.
+#[test]
+fn sync_timeline_bit_identical_across_serial_pool_fused() {
+    let q = quadratic(91, 12, 32);
+    let x0 = vec![1.5f32; 32];
+    let opts = RunOptions { rounds: 50, eval_every: 10, seed: 7, ..Default::default() };
+    let spec = ScenarioSpec {
+        compute: Dist::Pareto { scale: 0.05, shape: 1.1 },
+        speed: Dist::Uniform { lo: 0.5, hi: 2.0 },
+        bandwidth: 1e4,
+        drop: 0.15,
+        unavailable: 0.1,
+        mode: Mode::Sync,
+    };
+    let mk = || {
+        Driver::new()
+            .with_sampler(Box::new(NiceSampling { n: 12, tau: 6 }))
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(4)))
+    };
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_serial = mk().run_scenario(&mut a, &q, &spec, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_fused = mk().run_scenario_parallel(&mut b, &q, &spec, &x0, &opts).unwrap();
+    let mut c = FedAvg::new(2, 0.1);
+    let rec_ref = mk()
+        .with_fused_uplink(false)
+        .run_scenario_parallel(&mut c, &q, &spec, &x0, &opts)
+        .unwrap();
+    assert_records_eq(&rec_serial, &rec_fused, true, "scenario serial vs fused");
+    assert_records_eq(&rec_serial, &rec_ref, true, "scenario serial vs reference pool");
+    let (sa, sb, sc) = (rec_serial.scenario, rec_fused.scenario, rec_ref.scenario);
+    assert_eq!(sa, sb, "scenario stat serial vs fused");
+    assert_eq!(sa, sc, "scenario stat serial vs reference pool");
+    let stat = sa.expect("scenario stat");
+    // the profile really bit: some clients dropped or sat out
+    assert!(stat.dropped > 0, "expected mid-round dropouts, got {stat:?}");
+    assert!(stat.unavailable > 0, "expected unavailable clients, got {stat:?}");
+}
+
+/// Replays a pre-recorded cohort per round (and inclusion probability
+/// 1, matching a sampler-less timed run).
+struct ScriptedSampler {
+    n: usize,
+    rounds: RefCell<VecDeque<Vec<usize>>>,
+}
+
+impl CohortSampler for ScriptedSampler {
+    fn sample(&self, _rng: &mut Rng) -> Vec<usize> {
+        self.rounds.borrow_mut().pop_front().expect("scripted sampler exhausted")
+    }
+    fn p(&self, _i: usize) -> f64 {
+        1.0
+    }
+    fn n_clients(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        "Scripted".into()
+    }
+}
+
+/// Mid-round dropout under an executed 3-level tree with hub
+/// re-compression: the round completes with the surviving (partial)
+/// hubs, and the ledger books exactly the bits the survivors sent —
+/// pinned bit-for-bit against an untimed driver fed the engine's own
+/// survivor cohorts through a scripted sampler. The survivor cohorts
+/// are recomputed here from the *public* [`event_rng`] streams and the
+/// documented draw order (availability → compute → dropout), so this
+/// test also pins that contract.
+#[test]
+fn tree_dropout_completes_partial_hubs_and_books_only_sent_bits() {
+    const N: usize = 12;
+    const ROUNDS: usize = 30;
+    let q = quadratic(92, N, 40);
+    let x0 = vec![1.0f32; 40];
+    let opts = RunOptions { rounds: ROUNDS, eval_every: 10, seed: 11, ..Default::default() };
+    let spec = ScenarioSpec { drop: 0.3, ..Default::default() };
+    let mk = || {
+        Driver::new()
+            .with_up(Box::new(fedeff::compress::topk::TopK::new(5)))
+            .with_up_edge(1, Box::new(fedeff::compress::topk::TopK::new(10)))
+            .with_topology(Topology::Tree(AggTree::even(N, &[3], vec![0.05, 1.0])))
+    };
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_timed = mk().run_scenario(&mut a, &q, &spec, &x0, &opts).unwrap();
+    let stat = rec_timed.scenario.expect("scenario stat");
+    assert!(stat.dropped > 0, "dropout profile never fired: {stat:?}");
+    assert_eq!(stat.applies as usize, ROUNDS, "every round must complete");
+
+    // replay the engine's cohort trimming from its public streams:
+    // unavailability is 0 (no coin), compute draws live on their own
+    // stream, so survival is exactly the EV_DROP coin per (round, client)
+    let survivors: VecDeque<Vec<usize>> = (0..ROUNDS)
+        .map(|t| {
+            (0..N)
+                .filter(|&c| !event_rng(opts.seed, t, c, EV_DROP).bernoulli(spec.drop))
+                .collect()
+        })
+        .collect();
+    let total_survivors: usize = survivors.iter().map(|s| s.len()).sum();
+    assert_eq!(
+        total_survivors as u64 + stat.dropped,
+        (N * ROUNDS) as u64,
+        "recomputed survivor cohorts disagree with the engine"
+    );
+    let scripted = ScriptedSampler { n: N, rounds: RefCell::new(survivors) };
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_ref =
+        mk().with_sampler(Box::new(scripted)).run(&mut b, &q, &x0, &opts).unwrap();
+    // bit-for-bit: losses (partial hubs aggregated with survivor-cohort
+    // weighting), booked bits on every link and edge class (only what
+    // survivors sent), comm cost
+    assert_records_eq(&rec_ref, &rec_timed, false, "tree dropout vs scripted reference");
+}
+
+fn straggler_spec(mode: Mode) -> ScenarioSpec {
+    ScenarioSpec {
+        compute: Dist::Pareto { scale: 0.05, shape: 1.1 },
+        mode,
+        ..Default::default()
+    }
+}
+
+/// The headline claim: under a heavy-tailed straggler profile,
+/// buffered-async aggregation reaches the sync run's mid-run loss in
+/// strictly less virtual time (the barrier pays the slowest of all n
+/// clients every round; the async server applies every `buffer`
+/// arrivals and never waits for the tail).
+#[test]
+fn async_reaches_target_loss_in_less_virtual_time_than_sync() {
+    let q = quadratic(93, 16, 12);
+    let x0 = vec![1.0f32; 12];
+    let sync_opts = RunOptions { rounds: 30, eval_every: 1, seed: 5, ..Default::default() };
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_sync = Driver::new()
+        .run_scenario(&mut a, &q, &straggler_spec(Mode::Sync), &x0, &sync_opts)
+        .unwrap();
+    // target: the sync run's loss a third of the way in, and the virtual
+    // time sync itself needed to first reach it
+    let target = rec_sync.rounds[10].loss;
+    let sync_vtime = rec_sync
+        .rounds
+        .iter()
+        .find(|r| r.loss <= target)
+        .expect("sync run never reached its own loss")
+        .vtime;
+    assert!(sync_vtime > 0.0);
+
+    let async_opts = RunOptions { rounds: 120, eval_every: 1, seed: 5, ..Default::default() };
+    let spec = straggler_spec(Mode::BufferedAsync {
+        buffer: 4,
+        staleness: Staleness::Poly(0.5),
+    });
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_async = Driver::new().run_scenario(&mut b, &q, &spec, &x0, &async_opts).unwrap();
+    let async_vtime = rec_async
+        .rounds
+        .iter()
+        .find(|r| r.loss <= target)
+        .unwrap_or_else(|| panic!("async run never reached sync target {target}"))
+        .vtime;
+    assert!(
+        async_vtime < sync_vtime,
+        "buffered-async must beat the barrier: async {async_vtime} vs sync {sync_vtime} \
+         virtual s to loss {target}"
+    );
+    let stat = rec_async.scenario.expect("scenario stat");
+    assert_eq!(stat.applies, 120);
+    assert!(stat.dispatches >= stat.applies * 4, "4 arrivals per apply");
+}
+
+/// Same seed => bitwise identical buffered-async run: losses, booked
+/// bits, virtual timestamps, final stat.
+#[test]
+fn async_same_seed_replays_bitwise() {
+    let q = quadratic(94, 10, 16);
+    let x0 = vec![2.0f32; 16];
+    let opts = RunOptions { rounds: 60, eval_every: 5, seed: 21, ..Default::default() };
+    let spec = ScenarioSpec {
+        compute: Dist::Exp { mean: 0.4 },
+        speed: Dist::Uniform { lo: 0.5, hi: 2.0 },
+        drop: 0.1,
+        mode: Mode::BufferedAsync { buffer: 3, staleness: Staleness::Constant(0.8) },
+        ..Default::default()
+    };
+    let mk = || Driver::new().with_up(Box::new(fedeff::compress::topk::TopK::new(4)));
+    let mut a = FedAvg::new(2, 0.1);
+    let rec_a = mk().run_scenario(&mut a, &q, &spec, &x0, &opts).unwrap();
+    let mut b = FedAvg::new(2, 0.1);
+    let rec_b = mk().run_scenario(&mut b, &q, &spec, &x0, &opts).unwrap();
+    assert_records_eq(&rec_a, &rec_b, true, "async replay");
+    assert_eq!(rec_a.scenario, rec_b.scenario, "async replay stat");
+    let stat = rec_a.scenario.expect("scenario stat");
+    // dropped in-flight updates booked no uplink bits but did redispatch
+    assert!(stat.dropped > 0, "drop profile never fired: {stat:?}");
+    assert!(stat.dispatches > stat.applies * 3, "dropped arrivals still redispatch");
+}
+
+/// Unsupported async configurations fail loudly, before any work runs.
+#[test]
+fn async_guards_are_loud() {
+    let q = quadratic(95, 16, 8);
+    let x0 = vec![1.0f32; 8];
+    let opts = RunOptions { rounds: 5, eval_every: 5, seed: 1, ..Default::default() };
+    let spec = |buffer| {
+        straggler_spec(Mode::BufferedAsync { buffer, staleness: Staleness::Poly(0.5) })
+    };
+    // algorithm without an async absorb hook (Scaffold's control pair)
+    let mut sca = Scaffold::new(3, 0.05);
+    let e = Driver::new()
+        .run_scenario(&mut sca, &q, &spec(4), &x0, &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("does not support buffered-async"), "{e}");
+    // cohort samplers are a barrier concept
+    let mut f = FedAvg::new(2, 0.1);
+    let e = Driver::new()
+        .with_sampler(Box::new(NiceSampling { n: 16, tau: 4 }))
+        .run_scenario(&mut f, &q, &spec(4), &x0, &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("drop the cohort sampler"), "{e}");
+    // buffer bounds: 0 dies in validation, > n at the entry point
+    let mut f = FedAvg::new(2, 0.1);
+    let e = Driver::new().run_scenario(&mut f, &q, &spec(0), &x0, &opts).unwrap_err().to_string();
+    assert!(e.contains("async buffer size must be > 0"), "{e}");
+    let mut f = FedAvg::new(2, 0.1);
+    let e = Driver::new().run_scenario(&mut f, &q, &spec(17), &x0, &opts).unwrap_err().to_string();
+    assert!(e.contains("async buffer size must be in 1..=16"), "{e}");
+    // non-flat topologies are sync-only
+    let mut f = FedAvg::new(2, 0.1);
+    let e = Driver::new()
+        .with_topology(Topology::Hier(fedeff::coordinator::hierarchy::Hierarchy::even(
+            16, 4, 0.05, 1.0,
+        )))
+        .run_scenario(&mut f, &q, &spec(4), &x0, &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("only the flat topology"), "{e}");
+}
