@@ -25,6 +25,15 @@
 //! compute draws, buffered-async pays only arrival order) next to the
 //! host-clock runtimes.
 //!
+//! The `wire_{encode,decode}_*` family measures the bit-packed codec
+//! (DESIGN.md §Wire) on one message each of the sparse, QSGD and
+//! masked-sparse kinds; the `serve_net_vs_inproc` pair runs the same
+//! spec through the networked coordinator (TCP loopback, one socket
+//! client per dataset client) and the in-process fused driver — bit-for-
+//! bit identical results (pinned in rust/tests/serve_net.rs), only the
+//! clock and the transport differ. Their JSON rows carry
+//! `bytes_per_round`: the real codec bytes moved per round.
+//!
 //! The `gd_topk_fused_*` / `fedavg_topk_fused_*` family measures the
 //! fused uplink pipeline at n=1024, d=16384, Top-K k=128: `ref_pool` is
 //! the reference path (`with_fused_uplink(false)` — workers evaluate
@@ -433,6 +442,157 @@ fn main() {
                 black_box(rec.unwrap());
             });
         }
+    }
+
+    // ---- wire codec: encode/decode throughput, real bytes per message --
+    // One message each of the three networked layouts (sparse Top-K,
+    // QSGD, masked-sparse): the bytes_per_round column is the codec
+    // payload size — by the codec invariant, exactly the ledger's
+    // booked bits rounded up to bytes.
+    {
+        use fedeff::compress::quantize::Qsgd;
+        use fedeff::compress::{client_rng, SparseVec};
+        use fedeff::wire::bits::{BitReader, BitWriter};
+        use fedeff::wire::codec;
+
+        let (d, k) = (16384usize, 128usize);
+        let mut rngw = fedeff::rng(23);
+        let x: Vec<f32> = (0..d).map(|_| rngw.f32_range(-1.0, 1.0)).collect();
+        let comp = TopK::new(k);
+
+        // sparse: Top-K(128) over d=16384
+        let mut sv = SparseVec::default();
+        let sbits = comp.compress_sparse(&x, &mut sv, &mut client_rng(1, 0, 0, 0)).unwrap();
+        {
+            let mut w = BitWriter::new();
+            b.run_case_wire("wire_encode_sparse_topk128_d16384", 1, 1, d, sbits.div_ceil(8), || {
+                w.clear();
+                codec::encode_sparse(&sv, &mut w).unwrap();
+                black_box(w.bit_len());
+            });
+        }
+        {
+            let mut w = BitWriter::new();
+            codec::encode_sparse(&sv, &mut w).unwrap();
+            let enc = w.finish().to_vec();
+            let mut out = SparseVec::default();
+            b.run_case_wire("wire_decode_sparse_topk128_d16384", 1, 1, d, sbits.div_ceil(8), || {
+                let mut r = BitReader::new(&enc);
+                codec::decode_sparse(&mut r, d, sv.len(), &mut out).unwrap();
+                black_box(out.len());
+            });
+        }
+
+        // qsgd: 4 levels, dense run of d entries
+        let levels = 4u32;
+        let qbits = {
+            let mut probe = vec![0.0f32; d];
+            Qsgd::new(levels).compress(&x, &mut probe, &mut client_rng(2, 0, 0, 0))
+        };
+        {
+            let mut w = BitWriter::new();
+            b.run_case_wire("wire_encode_qsgd4_d16384", 1, 1, d, qbits.div_ceil(8), || {
+                let mut rng = client_rng(2, 0, 0, 0);
+                w.clear();
+                codec::qsgd_encode(levels, &x, &mut rng, &mut w);
+                black_box(w.bit_len());
+            });
+        }
+        {
+            let mut w = BitWriter::new();
+            codec::qsgd_encode(levels, &x, &mut client_rng(2, 0, 0, 0), &mut w);
+            let enc = w.finish().to_vec();
+            let mut out = Vec::new();
+            b.run_case_wire("wire_decode_qsgd4_d16384", 1, 1, d, qbits.div_ceil(8), || {
+                let mut r = BitReader::new(&enc);
+                codec::qsgd_decode(&mut r, levels, d, &mut out).unwrap();
+                black_box(out.len());
+            });
+        }
+
+        // masked sparse: Top-K(128) within a 50% support (the fused
+        // emit convention: global indices, support-relative packing)
+        let sup: Vec<u32> = (0..d as u32).step_by(2).collect();
+        let gathered: Vec<f32> = sup.iter().map(|&j| x[j as usize]).collect();
+        let mut compact = SparseVec::default();
+        let mbits =
+            comp.compress_sparse(&gathered, &mut compact, &mut client_rng(3, 0, 0, 0)).unwrap();
+        let mut global = SparseVec::default();
+        global.clear(d);
+        for (&c, &v) in compact.idx.iter().zip(&compact.val) {
+            global.push(sup[c as usize], v);
+        }
+        {
+            let mut w = BitWriter::new();
+            let name = "wire_encode_masked_topk128_nnz8192_d16384";
+            b.run_case_wire(name, 1, 1, d, mbits.div_ceil(8), || {
+                w.clear();
+                codec::encode_masked_sparse(&global, &sup, &mut w).unwrap();
+                black_box(w.bit_len());
+            });
+        }
+        {
+            let mut w = BitWriter::new();
+            codec::encode_masked_sparse(&global, &sup, &mut w).unwrap();
+            let enc = w.finish().to_vec();
+            let mut out = SparseVec::default();
+            let name = "wire_decode_masked_topk128_nnz8192_d16384";
+            b.run_case_wire(name, 1, 1, d, mbits.div_ceil(8), || {
+                let mut r = BitReader::new(&enc);
+                codec::decode_masked_sparse(&mut r, d, &sup, global.len(), &mut out).unwrap();
+                black_box(out.len());
+            });
+        }
+    }
+
+    // ---- networked coordinator vs in-process fused driver -------------
+    // The same spec (16 logreg clients, gd + Top-K(16), 5 rounds) run
+    // through real sockets (TCP loopback, one connection per client,
+    // server + fleet + dataset built fresh every iteration) and through
+    // the in-process fused pool. Results are bit-for-bit identical
+    // (rust/tests/serve_net.rs pins it); the rows compare transports.
+    // bytes_per_round = fleet-wide codec bytes per round.
+    {
+        use fedeff::config::Spec;
+        use fedeff::wire::net::{run_fleet, run_in_process, NetServer};
+
+        let toml = r#"
+[experiment]
+name = "bench-serve"
+rounds = 5
+eval_every = 1000
+seed = 29
+
+[dataset]
+clients = 16
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+"#;
+        let spec = Spec::parse(toml).unwrap();
+        let (n, rounds, d) = (spec.dataset.clients, spec.experiment.rounds, 112usize);
+        let wire_bytes = n as u64 * fedeff::compress::sparse_bits(16, d).div_ceil(8);
+        b.run_case_wire("serve_net_16clients_gd_topk16_5rounds_d112", rounds, n, d, wire_bytes, || {
+            let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+            let addr = server.local_addr().unwrap();
+            let rec = std::thread::scope(|scope| {
+                let spec = &spec;
+                let fleet = scope.spawn(move || run_fleet(&addr, spec));
+                let rec = server.serve(spec, &mut |_| {}).unwrap();
+                fleet.join().unwrap().unwrap();
+                rec
+            });
+            black_box(rec);
+        });
+        let name = "serve_inproc_16clients_gd_topk16_5rounds_d112";
+        b.run_case_wire(name, rounds, n, d, wire_bytes, || {
+            black_box(run_in_process(&spec, &mut |_| {}).unwrap());
+        });
     }
 
     // ---- batched logreg oracle: per-client calls vs one blocked sweep --

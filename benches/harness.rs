@@ -49,6 +49,10 @@ pub struct Entry {
     /// case (the `fedavg_async_*` family's wall-clock column; 0 when the
     /// case is untimed).
     pub virtual_time: f64,
+    /// Real wire bytes moved per round by the case (the `wire_*` /
+    /// `serve_net_*` family's payload column — codec bytes, excluding
+    /// frame headers; 0 when the case does not touch the wire layer).
+    pub bytes_per_round: u64,
 }
 
 pub struct Bench {
@@ -95,7 +99,7 @@ impl Bench {
         root_bits: u64,
         f: F,
     ) {
-        self.run_case_full(name, rounds, n, d, root_bits, 0, 0, 0.0, f);
+        self.run_case_full(name, rounds, n, d, root_bits, 0, 0, 0.0, 0, f);
     }
 
     /// [`Bench::run_case`] with the masked-training columns: the mask
@@ -111,7 +115,7 @@ impl Bench {
         bits_up_per_round: u64,
         f: F,
     ) {
-        self.run_case_full(name, rounds, n, d, 0, nnz, bits_up_per_round, 0.0, f);
+        self.run_case_full(name, rounds, n, d, 0, nnz, bits_up_per_round, 0.0, 0, f);
     }
 
     /// [`Bench::run_case`] with the scenario-engine column: the virtual
@@ -127,7 +131,22 @@ impl Bench {
         virtual_time: f64,
         f: F,
     ) {
-        self.run_case_full(name, rounds, n, d, 0, 0, 0, virtual_time, f);
+        self.run_case_full(name, rounds, n, d, 0, 0, 0, virtual_time, 0, f);
+    }
+
+    /// [`Bench::run_case`] with the wire-layer column: real codec bytes
+    /// moved per round (the `wire_*` / `serve_net_*` families).
+    #[allow(dead_code)]
+    pub fn run_case_wire<F: FnMut()>(
+        &self,
+        name: &str,
+        rounds: usize,
+        n: usize,
+        d: usize,
+        bytes_per_round: u64,
+        f: F,
+    ) {
+        self.run_case_full(name, rounds, n, d, 0, 0, 0, 0.0, bytes_per_round, f);
     }
 
     /// The full recording surface behind the `run_case_*` fronts.
@@ -143,6 +162,7 @@ impl Bench {
         nnz: usize,
         bits_up_per_round: u64,
         virtual_time: f64,
+        bytes_per_round: u64,
         mut f: F,
     ) {
         for _ in 0..self.warmup {
@@ -177,6 +197,7 @@ impl Bench {
             bits_up_per_round,
             clients_per_sec,
             virtual_time,
+            bytes_per_round,
         });
     }
 
@@ -192,7 +213,7 @@ impl Bench {
         for (i, e) in results.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}, \"clients_per_sec\": {}, \"virtual_time\": {}}}",
+                "    {{\"name\": \"{}\", \"ns_per_iter\": {}, \"rounds\": {}, \"n\": {}, \"d\": {}, \"root_bits_per_round\": {}, \"nnz\": {}, \"bits_up_per_round\": {}, \"clients_per_sec\": {}, \"virtual_time\": {}, \"bytes_per_round\": {}}}",
                 e.name,
                 e.ns_per_iter,
                 e.rounds,
@@ -202,7 +223,8 @@ impl Bench {
                 e.nnz,
                 e.bits_up_per_round,
                 e.clients_per_sec,
-                e.virtual_time
+                e.virtual_time,
+                e.bytes_per_round
             );
             s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
         }

@@ -1,0 +1,111 @@
+//! CI serve-smoke (DESIGN.md §Wire): run one spec twice — over the
+//! networked coordinator with a 256-client socket fleet, and through
+//! the in-process fused driver — and exit non-zero unless every eval
+//! round matches **bit for bit** (loss raw bits, booked `bits_up` /
+//! `bits_down`, comm cost).
+//!
+//! Uses a Unix domain socket where available (the CI path), TCP
+//! loopback elsewhere. Run with:
+//!
+//! ```sh
+//! cargo run --release --example serve_smoke
+//! ```
+
+use fedeff::config::Spec;
+use fedeff::wire::net::{run_fleet, run_in_process, NetServer};
+
+const SPEC: &str = r#"
+[experiment]
+name = "serve-smoke"
+rounds = 30
+eval_every = 10
+seed = 2024
+
+[dataset]
+clients = 256
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+"#;
+
+fn main() -> anyhow::Result<()> {
+    let spec = Spec::parse(SPEC)?;
+    let n = spec.dataset.clients;
+
+    let sock_path = std::env::temp_dir().join(format!("fedeff-smoke-{}.sock", std::process::id()));
+    let bind_addr = if cfg!(unix) {
+        format!("uds:{}", sock_path.display())
+    } else {
+        "tcp:127.0.0.1:0".to_string()
+    };
+    let server = NetServer::bind(&bind_addr)?;
+    let addr = server.local_addr()?;
+    eprintln!("[smoke] coordinator on {addr}, fleet of {n} clients");
+
+    let t0 = std::time::Instant::now();
+    let net = std::thread::scope(|scope| -> anyhow::Result<fedeff::metrics::RunRecord> {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server.serve(&spec, &mut |r| {
+            eprintln!(
+                "[smoke] round {:>3}  loss {:.6}  bits_up {}  bits_down {}",
+                r.round, r.loss, r.bits_up, r.bits_down
+            );
+        })?;
+        fleet.join().map_err(|_| anyhow::anyhow!("fleet thread panicked"))??;
+        Ok(rec)
+    })?;
+    let net_secs = t0.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&sock_path);
+
+    let t1 = std::time::Instant::now();
+    let inproc = run_in_process(&spec, &mut |_| {})?;
+    let inproc_secs = t1.elapsed().as_secs_f64();
+
+    let mut mismatches = 0usize;
+    if net.rounds.len() != inproc.rounds.len() {
+        eprintln!(
+            "[smoke] MISMATCH: {} networked eval rounds vs {} in-process",
+            net.rounds.len(),
+            inproc.rounds.len()
+        );
+        mismatches += 1;
+    }
+    for (a, b) in net.rounds.iter().zip(&inproc.rounds) {
+        let same = a.round == b.round
+            && a.loss.to_bits() == b.loss.to_bits()
+            && a.bits_up == b.bits_up
+            && a.bits_down == b.bits_down
+            && a.comm_cost.to_bits() == b.comm_cost.to_bits();
+        if !same {
+            eprintln!(
+                "[smoke] MISMATCH at round {}: networked (loss {:.9}, up {}, down {}) vs \
+                 in-process (loss {:.9}, up {}, down {})",
+                a.round, a.loss, a.bits_up, a.bits_down, b.loss, b.bits_up, b.bits_down
+            );
+            mismatches += 1;
+        }
+    }
+    if mismatches > 0 {
+        eprintln!("[smoke] FAILED: {mismatches} mismatching rounds");
+        std::process::exit(1);
+    }
+
+    let rounds = spec.experiment.rounds as f64;
+    println!(
+        "serve-smoke OK: {n} networked clients reproduced the in-process run bit-for-bit \
+         over {} eval rounds ({:.1} net vs {:.1} in-proc client-rounds/s)",
+        net.rounds.len(),
+        n as f64 * rounds / net_secs.max(1e-9),
+        n as f64 * rounds / inproc_secs.max(1e-9),
+    );
+    Ok(())
+}

@@ -46,6 +46,12 @@
 //! order, which is what lets the fused worker-pool pipeline compress on
 //! worker threads ([`Compressor::fork`] hands each worker its own
 //! instance) while staying bit-identical to the serial reference path.
+//!
+//! The bits a compressor quotes are not merely bookkeeping: the wire
+//! layer ([`crate::wire`], DESIGN.md §Wire) bit-packs every message
+//! kind at exactly the quoted widths — [`sparse_bits`] index widths,
+//! QSGD code widths — so `encode(msg).bit_len()` equals the booked
+//! bits, property-tested per registry kind in `rust/tests/wire.rs`.
 
 pub mod comp;
 pub mod mix;

@@ -82,7 +82,7 @@ use anyhow::Result;
 
 use super::fused::{FusedPayload, RowsPtr};
 use super::hierarchy::{AggTree, Hierarchy};
-use super::{default_pool_size, CommLedger, WorkerPool};
+use super::{default_pool_size, CommLedger, FusedUplink, PoolInput, WorkerPool};
 use crate::algorithms::api::{
     ClientMsg, FlAlgorithm, MaskLinks, PayloadSpec, RoundCtx, ScaleSpec, TreeLinks, TreeScratch,
 };
@@ -265,7 +265,7 @@ impl Driver {
         x0: &[f32],
         opts: &RunOptions,
     ) -> Result<RunRecord> {
-        self.run_inner(alg, oracle, None, None, x0, opts, None)
+        self.run_inner(alg, oracle, None, None, None, x0, opts, None)
     }
 
     /// Like [`Driver::run`], but client work executes on a persistent
@@ -311,12 +311,49 @@ impl Driver {
         if alg.grad_point().is_none() && !fusable {
             // neither a shared evaluation point nor a fusable uplink
             // plan: the pool could never be fed
-            return self.run_inner(alg, oracle, None, Some(&mut on_eval), x0, opts, None);
+            return self.run_inner(alg, oracle, None, None, Some(&mut on_eval), x0, opts, None);
         }
         std::thread::scope(|scope| {
             let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
-            self.run_inner(alg, oracle, Some(&pool), Some(&mut on_eval), x0, opts, None)
+            self.run_inner(alg, oracle, Some(&pool), None, Some(&mut on_eval), x0, opts, None)
         })
+    }
+
+    /// Run `alg` with the fused client pipeline executing on a
+    /// [`FusedUplink`] transport (the networked coordinator,
+    /// [`crate::wire::net`]) instead of the in-process worker pool. The
+    /// transport replays messages in cohort order, so a networked run
+    /// reproduces [`Driver::run_parallel`]'s losses and booked bits
+    /// bit-for-bit. Only fusable configurations qualify — there is no
+    /// reference fallback across a socket.
+    pub(crate) fn run_with_transport(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        transport: &dyn FusedUplink,
+        x0: &[f32],
+        opts: &RunOptions,
+        obs: Option<&mut dyn FnMut(&RoundStat)>,
+    ) -> Result<RunRecord> {
+        let plan = alg.uplink_plan();
+        anyhow::ensure!(
+            self.fused_configured() && plan.as_ref().is_some_and(|p| p.executable()),
+            "networked serving needs a fusable configuration: a sparse-capable uplink \
+             compressor (top-k / rand-k / srand-k) or a global (non-personalized) sparsity \
+             mask, and an algorithm with an executable uplink plan ({} qualifies: no)",
+            alg.label()
+        );
+        anyhow::ensure!(
+            matches!(
+                plan.as_ref().map(|p| &p.payload),
+                Some(PayloadSpec::Gradient) | Some(PayloadSpec::LocalSgd { .. })
+            ),
+            "networked serving supports stateless payloads (gradient / local-SGD); {} keeps \
+             per-client server-side state the fleet cannot update",
+            alg.label()
+        );
+        drop(plan);
+        self.run_inner(alg, oracle, None, Some(transport), obs, x0, opts, None)
     }
 
     /// Run `alg` under a time-aware [`crate::scenario::ScenarioSpec`]:
@@ -339,7 +376,7 @@ impl Driver {
             crate::scenario::Mode::Sync => {
                 let mut eng =
                     crate::scenario::SyncEngine::new(*spec, opts.seed, oracle.n_clients());
-                self.run_inner(alg, oracle, None, None, x0, opts, Some(&mut eng))
+                self.run_inner(alg, oracle, None, None, None, x0, opts, Some(&mut eng))
             }
             crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
                 crate::scenario::run_buffered_async(
@@ -375,11 +412,11 @@ impl Driver {
                 let fusable =
                     self.fused_configured() && alg.uplink_plan().is_some_and(|p| p.executable());
                 if alg.grad_point().is_none() && !fusable {
-                    return self.run_inner(alg, oracle, None, None, x0, opts, Some(&mut eng));
+                    return self.run_inner(alg, oracle, None, None, None, x0, opts, Some(&mut eng));
                 }
                 std::thread::scope(|scope| {
                     let pool = WorkerPool::spawn(scope, oracle, default_pool_size());
-                    self.run_inner(alg, oracle, Some(&pool), None, x0, opts, Some(&mut eng))
+                    self.run_inner(alg, oracle, Some(&pool), None, None, x0, opts, Some(&mut eng))
                 })
             }
             crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
@@ -396,6 +433,7 @@ impl Driver {
         alg: &mut dyn FlAlgorithm,
         oracle: &dyn Oracle,
         pool: Option<&WorkerPool>,
+        transport: Option<&dyn FusedUplink>,
         mut obs: Option<&mut dyn FnMut(&RoundStat)>,
         x0: &[f32],
         opts: &RunOptions,
@@ -491,17 +529,21 @@ impl Driver {
             Some(p) if p.executable() => p.channels(),
             _ => 0,
         };
-        let fused_active = fused_channels > 0 && pool.is_some() && self.fused_configured();
+        let fused_active = fused_channels > 0
+            && (pool.is_some() || transport.is_some())
+            && self.fused_configured();
         let mut fagg: Vec<Vec<f32>> = Vec::new();
         let mut seen: Vec<bool> = Vec::new();
         if fused_active {
-            let pool = pool.expect("fused rounds need the worker pool");
-            let forks: Vec<Option<Box<dyn Compressor + Send>>> =
-                (0..pool.workers()).map(|_| leaf_up.and_then(|c| c.fork())).collect();
-            // fused_configured() verified fork() support whenever a leaf
-            // compressor is set, so all-None kits only occur on the
-            // masked no-compressor pipeline
-            pool.install_fused(forks);
+            if let Some(pool) = pool {
+                let forks: Vec<Option<Box<dyn Compressor + Send>>> =
+                    (0..pool.workers()).map(|_| leaf_up.and_then(|c| c.fork())).collect();
+                // fused_configured() verified fork() support whenever a
+                // leaf compressor is set, so all-None kits only occur on
+                // the masked no-compressor pipeline
+                pool.install_fused(forks);
+            }
+            // (a transport's clients own their compressor forks)
             fagg = (0..fused_channels).map(|_| vec![0.0f32; d]).collect();
         }
 
@@ -588,7 +630,6 @@ impl Driver {
             // workers before the round context (and with it the mask /
             // tree borrows) is constructed
             if fused_active && !cohort.is_empty() {
-                let pool = pool.expect("fused rounds need the worker pool");
                 let plan = alg.uplink_plan().expect("fused run lost its uplink plan");
                 // fused rounds require distinct cohort ids (samplers are
                 // without-replacement by contract) — a repeated id would
@@ -618,7 +659,7 @@ impl Driver {
                 }
                 let sampler = self.sampler.as_deref();
                 let nf = n as f32;
-                pool.fused_dispatch(&cohort, groups, &mut |input| {
+                let mut fill = |input: &mut PoolInput| {
                     input.point.clear();
                     input.point.extend_from_slice(plan.anchor);
                     input.seed = opts.seed;
@@ -655,7 +696,12 @@ impl Driver {
                             unreachable!("non-executable plans never fuse")
                         }
                     };
-                });
+                };
+                match (pool, transport) {
+                    (Some(pool), _) => pool.fused_dispatch(&cohort, groups, &mut fill),
+                    (None, Some(tr)) => tr.fused_dispatch(&cohort, groups, &mut fill)?,
+                    (None, None) => unreachable!("fused rounds need an execution substrate"),
+                }
             }
 
             let tree_links = match (tree, tscratch.as_mut()) {
@@ -697,9 +743,13 @@ impl Driver {
                     a.fill(0.0);
                 }
                 if !cohort.is_empty() {
-                    let pool = pool.expect("fused rounds need the worker pool");
                     let mut pending = 0u64;
-                    pool.fused_visit(&cohort, fused_channels, &mut |client, ch, idx, val, bits| {
+                    let mut on_msg = |client: usize,
+                                      ch: usize,
+                                      idx: &[u32],
+                                      val: &[f32],
+                                      bits: u64|
+                     -> Result<()> {
                         pending += bits;
                         ctx.replay_uplink_msg(client, ch, idx, val, &mut fagg[ch]);
                         if ch + 1 == fused_channels {
@@ -707,7 +757,12 @@ impl Driver {
                             pending = 0;
                         }
                         Ok(())
-                    })?;
+                    };
+                    match (pool, transport) {
+                        (Some(pool), _) => pool.fused_visit(&cohort, fused_channels, &mut on_msg)?,
+                        (None, Some(tr)) => tr.fused_visit(&cohort, fused_channels, &mut on_msg)?,
+                        (None, None) => unreachable!("fused rounds need an execution substrate"),
+                    }
                 }
                 alg.absorb_fused(oracle, &cohort, &fagg, &mut ctx)?;
             } else {

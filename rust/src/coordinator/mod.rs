@@ -71,6 +71,13 @@
 //! run on the driver thread because the FFI handles are not `Send`,
 //! and usually hit the batched [`crate::oracle::Oracle::all_loss_grads`]
 //! dispatch instead.
+//!
+//! The fused uplink seam is transport-agnostic: the same driver loop
+//! that dispatches to the in-process pool can hand the round to a
+//! `FusedUplink` transport — the networked coordinator of
+//! [`crate::wire::net`] streams bit-packed frames from socket clients
+//! into the identical O(k)-per-client merge, bit-for-bit (DESIGN.md
+//! §Wire).
 
 pub mod driver;
 pub mod fused;
@@ -184,6 +191,44 @@ impl CommLedger {
 /// Default pool width: one worker per available core.
 pub fn default_pool_size() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// A fused-uplink execution substrate the [`driver::Driver`] can hand a
+/// round to when the client pipeline does not run on this process's
+/// worker pool — the seam the networked coordinator
+/// ([`crate::wire::net::NetTransport`]) plugs into.
+///
+/// The contract mirrors the pool's two-phase fused round exactly:
+/// `fused_dispatch` receives the round's inputs through `fill` (same
+/// [`PoolInput`] recipe the pool shares with its workers) and makes the
+/// cohort execute it; `fused_visit` then replays every `(client,
+/// channel, idx, val, wire_bits)` message **in cohort order, channels
+/// ascending within a client** — the serial reference path's scatter
+/// sequence, which is what makes any implementation bit-for-bit
+/// equivalent to the in-process driver. Implementations own their
+/// transport (sockets, frames, decode) but must preserve values exactly
+/// and report the same wire bits the compressor quoted (the codec
+/// invariant, DESIGN.md §Wire).
+pub(crate) trait FusedUplink {
+    /// Phase one: ship the round described by `fill` to every cohort
+    /// client and start (or complete) their pipelines. `groups` carries
+    /// the driver's hub-aligned shard hints; transports that do not
+    /// shard may ignore it.
+    fn fused_dispatch(
+        &self,
+        cohort: &[usize],
+        groups: Option<&[usize]>,
+        fill: &mut dyn FnMut(&mut PoolInput),
+    ) -> Result<()>;
+
+    /// Phase two: visit the dispatched round's messages in cohort
+    /// order.
+    fn fused_visit(
+        &self,
+        cohort: &[usize],
+        channels: usize,
+        visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
+    ) -> Result<()>;
 }
 
 /// Round inputs shared between the driver thread and the workers,

@@ -77,6 +77,13 @@
 //!   allocation-free and aggregate in O(k): sparse messages
 //!   ([`compress::SparseVec`]) travel from the compressors through the
 //!   driver's link slots into the algorithms' scatter-add aggregation.
+//! * [`wire`] turns the accounting into bytes: bit-packed codecs for
+//!   every message kind whose encoded length equals the ledger's
+//!   booking exactly ([`wire::codec`]), and a networked coordinator
+//!   ([`wire::net`], `fedeff serve --listen`) that streams length-framed
+//!   messages from a socket client fleet straight into the fused O(k)
+//!   merge — bit-for-bit the in-process run, over real sockets
+//!   (DESIGN.md §Wire).
 //!
 //! See `examples/quickstart.rs` for a minimal end-to-end run.
 
@@ -101,6 +108,7 @@ pub mod sampling;
 pub mod scenario;
 pub mod sparsity;
 pub mod vecmath;
+pub mod wire;
 
 pub use anyhow::Result;
 

@@ -13,10 +13,15 @@
 //!     stragglers, dropout, buffered-async aggregation).
 //!   * `list`              — list algorithms, experiments and artifacts.
 //!   * `serve [--config SPEC] [--clients N] [--rounds R] [--algorithm
-//!     NAME]` — threaded coordinator demo: the driver fans cohort
-//!     gradient evaluation out across OS threads and prints JSON round
-//!     metrics. `--config` routes a full TOML spec through the same
-//!     `build_driver` path as `run`; the other flags override it.
+//!     NAME] [--listen ADDR | --join ADDR]` — coordinator server. With
+//!     no address, a threaded in-process demo: the driver fans the
+//!     cohort out across OS threads and prints JSON round metrics.
+//!     `--listen tcp:HOST:PORT|uds:PATH` binds a networked coordinator
+//!     that streams bit-packed frames to a socket client fleet (start
+//!     one with `--join ADDR` and the same spec) and reproduces the
+//!     in-process run bit for bit — see DESIGN.md §Wire. `--config`
+//!     routes a full TOML spec — dataset included — through the same
+//!     config path as `run`; the other flags override it.
 
 use std::path::PathBuf;
 
@@ -30,7 +35,8 @@ use fedeff::oracle::Oracle;
 const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | run <config.toml>
               | list
-              | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]>";
+              | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]
+                      [--listen ADDR | --join ADDR]   (ADDR = tcp:HOST:PORT | uds:PATH)>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -96,7 +102,20 @@ fn main() -> Result<()> {
             let clients = opt_val(&args, "--clients").and_then(|v| v.parse().ok());
             let rounds = opt_val(&args, "--rounds").and_then(|v| v.parse().ok());
             let algorithm = opt_val(&args, "--algorithm");
-            serve(config.as_deref(), clients, rounds, algorithm.as_deref())
+            let listen = opt_val(&args, "--listen");
+            let join = opt_val(&args, "--join");
+            anyhow::ensure!(
+                listen.is_none() || join.is_none(),
+                "--listen and --join are mutually exclusive (one process per role)"
+            );
+            serve(
+                config.as_deref(),
+                clients,
+                rounds,
+                algorithm.as_deref(),
+                listen.as_deref(),
+                join.as_deref(),
+            )
         }
         _ => {
             eprintln!("{USAGE}");
@@ -189,17 +208,22 @@ fn run_spec(path: &str) -> Result<()> {
     Ok(())
 }
 
-/// Threaded coordinator demo over the pure-Rust logreg fleet: the driver
-/// fans each round's cohort out across OS threads and prints JSON round
-/// metrics. Any registry algorithm can be served. With `--config`, the
-/// full TOML spec — algorithm, links, topology, sparsity, scenario — is
-/// routed through the same [`fedeff::config::build_driver`] path as
-/// `run`; the remaining CLI flags act as overrides.
+/// Coordinator server over the pure-Rust logreg fleet. Any registry
+/// algorithm can be served. With `--config`, the full TOML spec —
+/// dataset, algorithm, links, topology, sparsity, scenario — is routed
+/// through the same [`fedeff::config::build_driver`] path as `run`; the
+/// remaining CLI flags act as overrides. Without an address the driver
+/// fans the cohort out across OS threads in-process; `--listen` binds a
+/// networked coordinator and `--join` runs the matching client fleet
+/// ([`fedeff::wire::net`], DESIGN.md §Wire) — the networked run
+/// reproduces the in-process one bit for bit.
 fn serve(
     config: Option<&str>,
     clients: Option<usize>,
     rounds: Option<usize>,
     algorithm: Option<&str>,
+    listen: Option<&str>,
+    join: Option<&str>,
 ) -> Result<()> {
     let mut spec = match config {
         Some(path) => fedeff::config::Spec::load(path)?,
@@ -212,36 +236,56 @@ fn serve(
     if let Some(a) = algorithm {
         spec.algorithm.kind = a.to_string();
     }
-    let clients = clients.unwrap_or(spec.dataset.clients);
-    let rounds = rounds.unwrap_or(spec.experiment.rounds);
-    let seed = spec.experiment.seed;
+    // overrides flow through the spec so every role — in-process,
+    // listening coordinator, joining fleet — resolves the identical
+    // dataset and round plan from the same config path as `run`
+    if let Some(c) = clients {
+        spec.dataset.clients = c;
+    }
+    if let Some(r) = rounds {
+        spec.experiment.rounds = r;
+    }
 
-    let mut rng = fedeff::rng(seed);
-    let data = fedeff::data::synth::logreg_dataset(
-        112,
-        256,
-        clients,
-        Heterogeneity::FeatureShift(0.5),
-        0.3,
-        &mut rng,
-    );
-    let oracle = fedeff::oracle::logreg_rs::RustLogReg::new(data, 0.1);
-    let d = oracle.dim();
-    let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
-    let driver = fedeff::config::build_driver(&spec, clients)?;
-    let opts = RunOptions {
-        rounds,
-        eval_every: spec.experiment.eval_every,
-        seed,
-        ..Default::default()
-    };
-    let x0 = vec![0.0f32; d];
+    if let Some(addr) = join {
+        // client-fleet role: one simulated client per dataset client,
+        // answering ROUND frames until the coordinator broadcasts DONE
+        return fedeff::wire::net::run_fleet(addr, &spec);
+    }
+
     let emit = |r: &fedeff::metrics::RoundStat| {
         println!(
             "{{\"round\":{},\"loss\":{:.6},\"bits_up\":{},\"bits_down\":{},\"cost\":{},\"vtime\":{}}}",
             r.round, r.loss, r.bits_up, r.bits_down, r.comm_cost, r.vtime
         );
     };
+
+    if let Some(addr) = listen {
+        let server = fedeff::wire::net::NetServer::bind(addr)?;
+        eprintln!(
+            "[fedeff] serving {} clients on {} (join with: fedeff serve --join {1} ...)",
+            spec.dataset.clients,
+            server.local_addr()?
+        );
+        let rec = server.serve(&spec, &mut |r| emit(r))?;
+        eprintln!(
+            "[fedeff] networked run complete: final loss {:.6}, {} bits up",
+            rec.last().map(|r| r.loss).unwrap_or(f32::NAN),
+            rec.rounds.last().map(|r| r.bits_up).unwrap_or(0)
+        );
+        return Ok(());
+    }
+
+    let oracle = fedeff::wire::net::fleet_oracle(&spec)?;
+    let d = oracle.dim();
+    let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
+    let driver = fedeff::config::build_driver(&spec, spec.dataset.clients)?;
+    let opts = RunOptions {
+        rounds: spec.experiment.rounds,
+        eval_every: spec.experiment.eval_every,
+        seed: spec.experiment.seed,
+        ..Default::default()
+    };
+    let x0 = vec![0.5f32; d];
     if let Some(sc) = &spec.scenario {
         // scenario runs don't stream: replay the recorded eval rounds,
         // then the timeline summary

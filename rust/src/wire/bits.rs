@@ -1,0 +1,193 @@
+//! LSB-first bit packing: the substrate every wire codec builds on.
+//!
+//! A [`BitWriter`] appends values at arbitrary widths (1..=64 bits) and
+//! tracks the exact bit length — the number the codec invariant compares
+//! against the [`crate::coordinator::CommLedger`] booking. Bit `i` of
+//! the stream is bit `i % 8` of byte `i / 8`, so a stream is decoded by
+//! a [`BitReader`] reading the same widths in the same order. The final
+//! byte is zero-padded; the pad is framing overhead, never counted in
+//! [`BitWriter::bit_len`].
+//!
+//! Readers are loud: running past the end of the buffer is an `anyhow`
+//! error (the decoder robustness contract — truncated frames must never
+//! panic or hang), and both ends reject widths outside 1..=64.
+
+use anyhow::Result;
+
+/// Append-only bit stream with exact bit accounting.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits not yet flushed to a full byte (LSB-first).
+    acc: u128,
+    used: u32,
+    bit_len: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset to an empty stream, keeping the buffer capacity (the
+    /// reusable-buffer idiom of the round hot path).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.used = 0;
+        self.bit_len = 0;
+    }
+
+    /// Append the low `width` bits of `value` (1..=64; higher bits of
+    /// `value` must be zero).
+    pub fn push(&mut self, value: u64, width: u32) {
+        debug_assert!((1..=64).contains(&width), "bit width {width} outside 1..=64");
+        debug_assert!(width == 64 || value >> width == 0, "value {value} overflows {width} bits");
+        self.acc |= (value as u128) << self.used;
+        self.used += width;
+        self.bit_len += width as u64;
+        while self.used >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.used -= 8;
+        }
+    }
+
+    /// Append an f32 as its 32 raw bits.
+    pub fn push_f32(&mut self, v: f32) {
+        self.push(v.to_bits() as u64, 32);
+    }
+
+    /// Exact number of bits pushed so far — the codec side of the
+    /// `codec bits == ledger bits` invariant.
+    pub fn bit_len(&self) -> u64 {
+        self.bit_len
+    }
+
+    /// Flush the trailing partial byte (zero-padded) and expose the
+    /// byte stream. `bit_len` is unaffected by the pad.
+    pub fn finish(&mut self) -> &[u8] {
+        if self.used > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.used = 0;
+        }
+        &self.buf
+    }
+}
+
+/// Cursor over an LSB-first bit stream; every read is bounds-checked.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    acc: u128,
+    avail: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, byte: 0, acc: 0, avail: 0 }
+    }
+
+    /// Read the next `width` bits (1..=64). Errors — never panics — when
+    /// the stream ends early.
+    pub fn read(&mut self, width: u32) -> Result<u64> {
+        anyhow::ensure!((1..=64).contains(&width), "bit width {width} outside 1..=64");
+        while self.avail < width {
+            let b = *self
+                .buf
+                .get(self.byte)
+                .ok_or_else(|| anyhow::anyhow!("bit stream truncated: {width}-bit read past end"))?;
+            self.acc |= (b as u128) << self.avail;
+            self.avail += 8;
+            self.byte += 1;
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let v = (self.acc as u64) & mask;
+        self.acc >>= width;
+        self.avail -= width;
+        Ok(v)
+    }
+
+    /// Read 32 bits as an f32.
+    pub fn read_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.read(32)? as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        let cases: Vec<(u64, u32)> = vec![
+            (1, 1),
+            (0, 1),
+            (5, 3),
+            (1023, 10),
+            (u64::MAX, 64),
+            (0xDEAD_BEEF, 32),
+            (1, 64),
+            (7, 7),
+        ];
+        let mut bits = 0u64;
+        for &(v, width) in &cases {
+            w.push(v, width);
+            bits += width as u64;
+        }
+        assert_eq!(w.bit_len(), bits);
+        let bytes = w.finish().to_vec();
+        assert_eq!(bytes.len(), bits.div_ceil(8) as usize);
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in &cases {
+            assert_eq!(r.read(width).unwrap(), v, "width {width}");
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_is_bitwise() {
+        let mut w = BitWriter::new();
+        let xs = [0.0f32, -0.0, 1.5, -3.25e-9, f32::MAX, f32::MIN_POSITIVE];
+        for &x in &xs {
+            w.push(1, 3); // misalign on purpose
+            w.push_f32(x);
+        }
+        let bytes = w.finish().to_vec();
+        let mut r = BitReader::new(&bytes);
+        for &x in &xs {
+            r.read(3).unwrap();
+            assert_eq!(r.read_f32().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_read_errors_loudly() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        let bytes = w.finish().to_vec();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3).unwrap(), 0b101);
+        // the pad bits of the final byte are readable (zeros), but the
+        // next full byte is not there
+        assert!(r.read(64).is_err());
+        let mut r2 = BitReader::new(&[]);
+        assert!(r2.read(1).is_err());
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.push(i, 7);
+        }
+        w.finish();
+        let cap = {
+            w.clear();
+            w.buf.capacity()
+        };
+        assert!(cap > 0);
+        assert_eq!(w.bit_len(), 0);
+    }
+}

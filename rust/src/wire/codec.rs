@@ -1,0 +1,254 @@
+//! Per-message-kind bit packing, pinned to the [`CommLedger`] formulas.
+//!
+//! Every encoder here produces a stream whose [`BitWriter::bit_len`]
+//! equals, by construction, the bits the ledger books for that payload
+//! (DESIGN.md §Wire; property-tested in rust/tests/wire.rs):
+//!
+//! - **Dense** — 32 bits per entry (`Identity`: `32 * d`).
+//! - **Sparse** — `k * (32 + ceil(log2 d))` for a [`SparseVec`] of `k`
+//!   pairs over dimension `d`, exactly [`sparse_bits`]`(k, d)`: indices
+//!   packed at log2(d) width, values as raw f32 bits, pair order
+//!   preserved (Top-K / Rand-K emit order is part of the message).
+//! - **Masked raw** — `32 * nnz`: support known on both ends, only the
+//!   values travel, in support order.
+//! - **Masked sparse** — compressor output over the compacted support:
+//!   `k * (32 + ceil(log2 nnz))` with support-relative indices, mapped
+//!   back to global coordinates on decode.
+//! - **QSGD** — 32-bit norm + `max(1, ceil(log2(2s+1)))` bits per entry;
+//!   [`qsgd_encode`] *is* the quantizer (it replicates
+//!   [`Qsgd::compress`]'s arithmetic and rng draws bit-for-bit, then
+//!   packs sign+level codes instead of f32s).
+//! - **PermK** — 64-bit shared round seed + 32 bits per kept value; the
+//!   block indices are re-derived from the seed on decode.
+//!
+//! Decoders validate everything they read (index ranges, level codes,
+//! lengths) and return `anyhow` errors on malformed input — never a
+//! panic (see the fuzz tests in rust/tests/wire.rs).
+//!
+//! [`CommLedger`]: crate::coordinator::CommLedger
+//! [`sparse_bits`]: crate::compress::sparse_bits
+//! [`Qsgd::compress`]: crate::compress::quantize::Qsgd
+
+use anyhow::{ensure, Result};
+
+use super::bits::{BitReader, BitWriter};
+use crate::compress::{permk::PermK, SparseVec};
+use crate::Rng;
+
+/// Packed index width for dimension `d`: ceil(log2 d), min 1 — the
+/// width [`crate::compress::sparse_bits`] charges per index.
+pub fn idx_width(d: usize) -> u32 {
+    usize::BITS - (d.max(2) - 1).leading_zeros()
+}
+
+/// QSGD per-entry code width for `levels` levels: sign+level in
+/// `max(1, ceil(log2(2s+1)))` bits — the width `Qsgd::compress` quotes.
+pub fn qsgd_entry_width(levels: u32) -> u32 {
+    (32 - (2 * levels).leading_zeros().min(31)).max(1)
+}
+
+/// Encode a dense f32 run at 32 bits per entry.
+pub fn encode_dense(x: &[f32], w: &mut BitWriter) {
+    for &v in x {
+        w.push_f32(v);
+    }
+}
+
+/// Decode `len` dense f32 entries into `out` (cleared first).
+pub fn decode_dense(r: &mut BitReader, len: usize, out: &mut Vec<f32>) -> Result<()> {
+    out.clear();
+    out.reserve(len);
+    for _ in 0..len {
+        out.push(r.read_f32()?);
+    }
+    Ok(())
+}
+
+/// Encode a [`SparseVec`] as `k` (index, value) pairs, indices at
+/// [`idx_width`]`(dim)`. Bit length is exactly `sparse_bits(k, dim)`.
+pub fn encode_sparse(sv: &SparseVec, w: &mut BitWriter) -> Result<()> {
+    let iw = idx_width(sv.dim);
+    for (&i, &v) in sv.idx.iter().zip(&sv.val) {
+        ensure!((i as usize) < sv.dim, "sparse index {i} out of range for dim {}", sv.dim);
+        w.push(i as u64, iw);
+        w.push_f32(v);
+    }
+    Ok(())
+}
+
+/// Decode `k` (index, value) pairs over dimension `dim` into `out`
+/// (cleared first); rejects out-of-range indices.
+pub fn decode_sparse(r: &mut BitReader, dim: usize, k: usize, out: &mut SparseVec) -> Result<()> {
+    let iw = idx_width(dim);
+    out.clear(dim);
+    for _ in 0..k {
+        let i = r.read(iw)?;
+        ensure!((i as usize) < dim, "sparse index {i} out of range for dim {dim}");
+        let v = r.read_f32()?;
+        out.push(i as u32, v);
+    }
+    Ok(())
+}
+
+/// Encode a masked no-compressor payload: the values of `sv` in
+/// support order, 32 bits each (`32 * nnz`; `sv` must cover the whole
+/// support, which the fused emit path guarantees).
+pub fn encode_masked_raw(sv: &SparseVec, sup: &[u32], w: &mut BitWriter) -> Result<()> {
+    ensure!(
+        sv.len() == sup.len(),
+        "masked raw payload has {} values for a support of {}",
+        sv.len(),
+        sup.len()
+    );
+    for &v in &sv.val {
+        w.push_f32(v);
+    }
+    Ok(())
+}
+
+/// Decode a masked no-compressor payload: one f32 per support index,
+/// re-attached to the global coordinates in `sup`.
+pub fn decode_masked_raw(
+    r: &mut BitReader,
+    dim: usize,
+    sup: &[u32],
+    out: &mut SparseVec,
+) -> Result<()> {
+    out.clear(dim);
+    for &g in sup {
+        ensure!((g as usize) < dim, "support index {g} out of range for dim {dim}");
+        out.push(g, r.read_f32()?);
+    }
+    Ok(())
+}
+
+/// Encode a compressed masked payload: `sv` holds *global* indices (the
+/// fused emit convention); each is mapped to its position in the sorted
+/// support and packed at [`idx_width`]`(nnz)` — exactly the
+/// `sparse_bits(k, nnz)` the ledger books for compression within the
+/// support.
+pub fn encode_masked_sparse(sv: &SparseVec, sup: &[u32], w: &mut BitWriter) -> Result<()> {
+    let iw = idx_width(sup.len());
+    for (&g, &v) in sv.idx.iter().zip(&sv.val) {
+        let c = sup
+            .binary_search(&g)
+            .map_err(|_| anyhow::anyhow!("masked index {g} not in the support"))?;
+        w.push(c as u64, iw);
+        w.push_f32(v);
+    }
+    Ok(())
+}
+
+/// Decode `k` support-relative pairs, mapping each compact index back
+/// through `sup` to its global coordinate.
+pub fn decode_masked_sparse(
+    r: &mut BitReader,
+    dim: usize,
+    sup: &[u32],
+    k: usize,
+    out: &mut SparseVec,
+) -> Result<()> {
+    let iw = idx_width(sup.len());
+    out.clear(dim);
+    for _ in 0..k {
+        let c = r.read(iw)? as usize;
+        let g = *sup.get(c).ok_or_else(|| {
+            anyhow::anyhow!("masked index {c} out of range for support of {}", sup.len())
+        })?;
+        ensure!((g as usize) < dim, "support index {g} out of range for dim {dim}");
+        let v = r.read_f32()?;
+        out.push(g, v);
+    }
+    Ok(())
+}
+
+/// Quantize-and-pack: replicates `Qsgd::compress`'s arithmetic and rng
+/// draws exactly (same norm, same stochastic rounding, same draw count)
+/// but emits sign+level codes at [`qsgd_entry_width`] instead of f32s.
+/// Bit length is exactly the compressor's quote:
+/// `32 + len * qsgd_entry_width(levels)`.
+///
+/// Level-0 codes are canonicalized to positive sign, so decode yields
+/// `+0.0` where the float path may carry `-0.0` — numerically equal,
+/// and invisible to the `+=` scatter the server replays into.
+pub fn qsgd_encode(levels: u32, x: &[f32], rng: &mut Rng, w: &mut BitWriter) {
+    let s = levels as f32;
+    let ew = qsgd_entry_width(levels);
+    let nx = crate::vecmath::norm(x);
+    w.push_f32(nx);
+    if nx == 0.0 {
+        // Qsgd::compress zero-fills without touching the rng; the code
+        // for level 0 is `levels` (positive sign).
+        for _ in 0..x.len() {
+            w.push(levels as u64, ew);
+        }
+    } else {
+        for &v in x {
+            let u = v.abs() / nx * s; // in [0, s]
+            let l = u.floor();
+            let p = u - l;
+            let level = if rng.f32_unit() < p { l + 1.0 } else { l };
+            let lv = level as u32;
+            let code = if lv == 0 || !v.is_sign_negative() { levels + lv } else { levels - lv };
+            w.push(code as u64, ew);
+        }
+    }
+}
+
+/// Decode `len` QSGD codes back to the quantized grid: each entry is
+/// `sign * norm * level / s` in `Qsgd::compress`'s exact f32 op order.
+pub fn qsgd_decode(r: &mut BitReader, levels: u32, len: usize, out: &mut Vec<f32>) -> Result<()> {
+    let s = levels as f32;
+    let ew = qsgd_entry_width(levels);
+    let nx = r.read_f32()?;
+    ensure!(nx.is_finite() && nx >= 0.0, "qsgd norm {nx} is not a finite non-negative value");
+    out.clear();
+    out.reserve(len);
+    for _ in 0..len {
+        let code = r.read(ew)?;
+        ensure!(code <= 2 * levels as u64, "qsgd code {code} exceeds 2*levels = {}", 2 * levels);
+        let signed = code as i64 - levels as i64;
+        let sign = if signed < 0 { -1.0f32 } else { 1.0 };
+        let level = signed.unsigned_abs() as f32;
+        out.push(sign * nx * level / s);
+    }
+    Ok(())
+}
+
+/// Encode a PermK block: the shared round seed (64 bits) plus the kept
+/// values in block order (32 bits each) — `64 + 32 * kept`, the
+/// compressor's quote. `sv` must be `comp.compress_sparse` output for
+/// the same dimension (indices are checked against the derived block).
+pub fn permk_encode(comp: &PermK, sv: &SparseVec, w: &mut BitWriter) -> Result<()> {
+    let block = comp.block(sv.dim);
+    ensure!(
+        sv.idx == block,
+        "PermK payload indices do not match the block derived from seed {:#x}",
+        comp.round_seed
+    );
+    w.push(comp.round_seed, 64);
+    for &v in &sv.val {
+        w.push_f32(v);
+    }
+    Ok(())
+}
+
+/// Decode a PermK block for worker `worker` of `n`: re-derives the
+/// permutation from the streamed seed and re-attaches indices in the
+/// identical block order.
+pub fn permk_decode(
+    r: &mut BitReader,
+    n: usize,
+    worker: usize,
+    dim: usize,
+    out: &mut SparseVec,
+) -> Result<()> {
+    ensure!(n >= 1 && worker < n, "PermK worker {worker} out of range for n = {n}");
+    let seed = r.read(64)?;
+    let block = PermK::new(n, worker, seed).block(dim);
+    out.clear(dim);
+    for g in block {
+        out.push(g, r.read_f32()?);
+    }
+    Ok(())
+}

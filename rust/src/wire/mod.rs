@@ -1,0 +1,16 @@
+//! The wire layer: bit-packed message codecs and the networked
+//! coordinator (DESIGN.md §Wire).
+//!
+//! Everything the simulator previously *accounted* (the
+//! [`crate::coordinator::CommLedger`]'s bit formulas) this module
+//! *materializes*: [`bits`] is the LSB-first packing substrate,
+//! [`codec`] encodes every registry message kind at exactly the bit
+//! cost the ledger books (`encode(msg).bit_len() == booked bits`, the
+//! codec invariant), and [`net`] streams those bytes between a socket
+//! client fleet and the driver's fused O(k) merge — so a networked
+//! `fedeff serve --listen` run reproduces the in-process run bit for
+//! bit while sending real, countable bytes.
+
+pub mod bits;
+pub mod codec;
+pub mod net;

@@ -1,0 +1,863 @@
+//! The networked coordinator: real bytes between a socket fleet and the
+//! fused O(k) merge (DESIGN.md §Wire).
+//!
+//! `fedeff serve --listen ADDR` binds a [`NetServer`] (TCP loopback or
+//! a Unix domain socket; addresses are `tcp:HOST:PORT` / `uds:PATH`),
+//! accepts one length-framed connection per dataset client, and drives
+//! the same [`crate::coordinator::driver::Driver`] round loop as an
+//! in-process run — with the client pipeline executing on the other
+//! end of the sockets. A [`NetTransport`] implements the driver's
+//! fused-uplink seam: it broadcasts each round's recipe (anchor, seed,
+//! scale, payload, mask support) as ROUND frames and then reads one MSG
+//! frame per (cohort client, channel) **in cohort order**, decoding the
+//! bit-packed body straight into the driver's sparse scatter
+//! ([`crate::algorithms::api::RoundCtx`]'s uplink replay) — the server
+//! never materializes a cohort·d dense staging buffer, and the booked
+//! bits come from the same formulas the compressors quote, so a
+//! networked run reproduces the in-process fused run **bit for bit**
+//! (losses, bits_up, bits_down; pinned by rust/tests/serve_net.rs and
+//! the serve-smoke CI job at 256 clients).
+//!
+//! Frame layout (little-endian): `u32 len | u8 kind | payload`, where
+//! `len` counts the kind byte plus the payload and is capped at
+//! [`MAX_FRAME`]. Kinds: HELLO (client joins: id, fleet size, dim),
+//! ROUND (server→client round recipe), MSG (client→server one uplink
+//! channel: round, channel, layout, pair count, bit-packed codec body,
+//! zero-padded to bytes), DONE (server→fleet shutdown). Malformed,
+//! truncated or oversized frames produce `anyhow` errors and a closed
+//! connection — never a panic, and never a hang (every socket carries a
+//! read timeout).
+//!
+//! Backpressure: the server reads MSG frames in cohort order with one
+//! bounded [`BufReader`]/[`BufWriter`] pair per connection; a client
+//! only ever has one round in flight (it cannot produce a second
+//! message until the next ROUND frame arrives), so per-connection
+//! memory is O(k) userspace plus the kernel socket buffers.
+
+use std::cell::RefCell;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::bits::{BitReader, BitWriter};
+use super::codec;
+use crate::algorithms::build_algorithm;
+use crate::algorithms::RunOptions;
+use crate::compress::SparseVec;
+use crate::config::{build_driver, compressor_by_name, Spec};
+use crate::coordinator::fused::{run_chunk, FusedKit, FusedPayload};
+use crate::coordinator::{FusedUplink, PoolInput, WorkerOut};
+use crate::data::synth::Heterogeneity;
+use crate::metrics::{RoundStat, RunRecord};
+use crate::oracle::logreg_rs::RustLogReg;
+use crate::oracle::Oracle;
+
+/// Hard ceiling on one frame's size (kind byte + payload): 64 MiB.
+pub const MAX_FRAME: u32 = 1 << 26;
+/// Userspace buffer per connection half (the bounded backpressure
+/// window; everything beyond it waits in the kernel socket buffer).
+const CONN_BUF: usize = 64 * 1024;
+/// Default socket read timeout — a peer that stops mid-frame errors
+/// out instead of hanging the round loop.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+const KIND_HELLO: u8 = 1;
+const KIND_ROUND: u8 = 2;
+const KIND_MSG: u8 = 3;
+const KIND_DONE: u8 = 4;
+
+const LAYOUT_SPARSE: u8 = 0;
+const LAYOUT_MASKED_RAW: u8 = 1;
+const LAYOUT_MASKED_SPARSE: u8 = 2;
+
+const PAYLOAD_GRADIENT: u8 = 0;
+const PAYLOAD_LOCAL_SGD: u8 = 1;
+
+// ---------------------------------------------------------------------
+// address grammar + stream/listener abstraction
+// ---------------------------------------------------------------------
+
+/// One connected byte stream (TCP or, on Unix, a domain socket).
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    fn set_read_timeout(&self, t: Duration) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(Some(t))?,
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(Some(t))?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket. `tcp:HOST:PORT` binds TCP (port 0 picks a
+/// free port — read the real one back from [`Listener::local_addr`]);
+/// `uds:PATH` binds a Unix domain socket (stale socket files are
+/// replaced).
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            let l = TcpListener::bind(hostport)
+                .with_context(|| format!("binding tcp listener on {hostport}"))?;
+            return Ok(Listener::Tcp(l));
+        }
+        if let Some(path) = addr.strip_prefix("uds:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix socket {path}"))?;
+                return Ok(Listener::Unix(l));
+            }
+            #[cfg(not(unix))]
+            bail!("uds: addresses need a Unix platform; use tcp:HOST:PORT");
+        }
+        bail!("address {addr:?} is neither tcp:HOST:PORT nor uds:PATH")
+    }
+
+    /// The canonical address peers connect to (resolves `tcp:...:0` to
+    /// the picked port).
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Tcp(l) => format!("tcp:{}", l.local_addr()?),
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let a = l.local_addr()?;
+                let p = a.as_pathname().context("unix listener has no pathname")?;
+                format!("uds:{}", p.display())
+            }
+        })
+    }
+
+    fn accept(&self) -> Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => Stream::Tcp(l.accept()?.0),
+            #[cfg(unix)]
+            Listener::Unix(l) => Stream::Unix(l.accept()?.0),
+        })
+    }
+}
+
+/// Connect to a `tcp:`/`uds:` address.
+pub fn connect(addr: &str) -> Result<Stream> {
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        return Ok(Stream::Tcp(
+            TcpStream::connect(hostport).with_context(|| format!("connecting to {hostport}"))?,
+        ));
+    }
+    if let Some(path) = addr.strip_prefix("uds:") {
+        #[cfg(unix)]
+        return Ok(Stream::Unix(
+            UnixStream::connect(path).with_context(|| format!("connecting to {path}"))?,
+        ));
+        #[cfg(not(unix))]
+        bail!("uds: addresses need a Unix platform; use tcp:HOST:PORT");
+    }
+    bail!("address {addr:?} is neither tcp:HOST:PORT nor uds:PATH")
+}
+
+/// [`connect`] with retries while the server is still binding/accepting
+/// (the fleet usually races the coordinator's startup).
+fn connect_retry(addr: &str, budget: Duration) -> Result<Stream> {
+    let t0 = std::time::Instant::now();
+    loop {
+        match connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if t0.elapsed() < budget => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------
+
+/// One connection: buffered reader/writer halves over cloned handles.
+struct Conn {
+    r: BufReader<Stream>,
+    w: BufWriter<Stream>,
+}
+
+impl Conn {
+    fn new(s: Stream, timeout: Duration) -> Result<Conn> {
+        s.set_read_timeout(timeout)?;
+        let rh = s.try_clone()?;
+        Ok(Conn {
+            r: BufReader::with_capacity(CONN_BUF, rh),
+            w: BufWriter::with_capacity(CONN_BUF, s),
+        })
+    }
+}
+
+fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u64 + 1;
+    ensure!(len <= MAX_FRAME as u64, "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame into `buf` (payload only); returns the kind byte.
+/// Zero-length and oversized frames are protocol errors.
+fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<u8> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr).context("reading frame header")?;
+    let len = u32::from_le_bytes(hdr);
+    ensure!(len >= 1, "zero-length frame");
+    ensure!(len <= MAX_FRAME, "oversized frame: {len} bytes (max {MAX_FRAME})");
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("reading frame kind")?;
+    buf.clear();
+    buf.resize(len as usize - 1, 0);
+    r.read_exact(buf).context("reading frame payload")?;
+    Ok(kind[0])
+}
+
+/// Bounds-checked little-endian cursor over a frame payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("frame length overflow")?;
+        ensure!(
+            end <= self.buf.len(),
+            "frame truncated: wanted {n} bytes past offset {}",
+            self.pos
+        );
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn rest(self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{} trailing bytes in frame",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared spec plumbing (the config path `run`, `serve` and the fleet
+// all resolve identically — satellite fix for the serve dataset bug)
+// ---------------------------------------------------------------------
+
+/// Build the pure-Rust logreg oracle a spec describes — the exact
+/// dataset construction `fedeff run` uses (profile, clients,
+/// heterogeneity, regularizer, seed), so server, fleet and in-process
+/// comparisons all train on identical data.
+pub fn fleet_oracle(spec: &Spec) -> Result<RustLogReg> {
+    let ds = &spec.dataset;
+    ensure!(ds.kind == "logreg", "networked serving drives the logreg substrate, not {}", ds.kind);
+    let het = match ds.heterogeneity.as_deref() {
+        Some("iid") => Heterogeneity::Iid,
+        Some("class") => Heterogeneity::ClassSkew(0.85),
+        _ => Heterogeneity::FeatureShift(0.5),
+    };
+    let (d, m) = crate::data::synth::logreg_profile(&ds.profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown logreg profile {}", ds.profile))?;
+    let mut rng = crate::rng(spec.experiment.seed);
+    let data = crate::data::synth::logreg_dataset(d, m, ds.clients, het, 0.3, &mut rng);
+    Ok(RustLogReg::new(data, ds.reg))
+}
+
+/// The effective leaf (client-out) uplink compressor of a spec —
+/// mirrors the driver's resolution (a `[links.up.l0]` edge under an
+/// executed tree overrides the flat `[compressor] up`).
+pub fn leaf_compressor(spec: &Spec) -> Option<(String, usize, usize)> {
+    if spec.topology.as_ref().is_some_and(|t| t.levels.is_some()) {
+        if let Some(Some(e)) = spec.links.up_edges.first() {
+            return Some((e.kind.clone(), e.k, e.k_prime));
+        }
+    }
+    spec.links.up.as_ref().map(|u| (u.clone(), spec.links.k, spec.links.k_prime))
+}
+
+/// [`RunOptions`] a spec describes (the serve path's view).
+fn spec_opts(spec: &Spec) -> RunOptions {
+    RunOptions {
+        rounds: spec.experiment.rounds,
+        eval_every: spec.experiment.eval_every,
+        seed: spec.experiment.seed,
+        ..Default::default()
+    }
+}
+
+/// Run a spec in-process on the fused worker-pool path, streaming eval
+/// rounds — the reference a networked run must match bit for bit.
+pub fn run_in_process(spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Result<RunRecord> {
+    let oracle = fleet_oracle(spec)?;
+    let d = oracle.dim();
+    let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
+    let driver = build_driver(spec, spec.dataset.clients)?;
+    let x0 = vec![0.5f32; d];
+    driver.run_parallel_streaming(alg.as_mut(), &oracle, &x0, &spec_opts(spec), |r| on_eval(r))
+}
+
+// ---------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------
+
+/// Decode scratch + per-round state behind [`NetTransport`]'s interior
+/// mutability (the driver's fused seam takes `&self`).
+struct NetState {
+    input: PoolInput,
+    sup: Vec<u32>,
+    round: usize,
+    layout: u8,
+    frame: Vec<u8>,
+    body: Vec<u8>,
+    sv: SparseVec,
+}
+
+/// The driver-facing side of an accepted fleet: implements the fused
+/// uplink seam over one framed connection per client.
+pub struct NetTransport {
+    conns: RefCell<Vec<Conn>>,
+    dim: usize,
+    has_comp: bool,
+    st: RefCell<NetState>,
+}
+
+impl NetTransport {
+    /// Broadcast DONE and flush — the fleet's clean-shutdown signal.
+    pub fn shutdown(&self) -> Result<()> {
+        let mut conns = self.conns.borrow_mut();
+        for c in conns.iter_mut() {
+            write_frame(&mut c.w, KIND_DONE, &[])?;
+            c.w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+impl FusedUplink for NetTransport {
+    fn fused_dispatch(
+        &self,
+        cohort: &[usize],
+        _groups: Option<&[usize]>,
+        fill: &mut dyn FnMut(&mut PoolInput),
+    ) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        let st = &mut *st;
+        st.input.cohort.clear();
+        st.input.cohort.extend_from_slice(cohort);
+        fill(&mut st.input);
+        let inp = &st.input;
+        ensure!(inp.point.len() == self.dim, "round anchor has the wrong dimension");
+        ensure!(inp.scales.len() == cohort.len(), "round scales do not cover the cohort");
+        let layout = if inp.sup.is_empty() {
+            ensure!(self.has_comp, "an unmasked networked round needs an uplink compressor");
+            LAYOUT_SPARSE
+        } else if self.has_comp {
+            LAYOUT_MASKED_SPARSE
+        } else {
+            LAYOUT_MASKED_RAW
+        };
+        st.layout = layout;
+        st.round = inp.round;
+        st.sup.clear();
+        st.sup.extend_from_slice(&inp.sup);
+
+        // one shared ROUND body; only the 4 scale bytes differ per client
+        let b = &mut st.body;
+        b.clear();
+        b.extend_from_slice(&u32::try_from(inp.round).context("round exceeds u32")?.to_le_bytes());
+        b.extend_from_slice(&inp.seed.to_le_bytes());
+        let scale_off = b.len();
+        b.extend_from_slice(&0f32.to_le_bytes());
+        b.push(layout);
+        match inp.payload {
+            FusedPayload::Gradient => b.push(PAYLOAD_GRADIENT),
+            FusedPayload::LocalSgd { steps, lr, prox_mu } => {
+                b.push(PAYLOAD_LOCAL_SGD);
+                b.extend_from_slice(
+                    &u32::try_from(steps).context("local steps exceed u32")?.to_le_bytes(),
+                );
+                b.extend_from_slice(&lr.to_le_bytes());
+                match prox_mu {
+                    Some(mu) => {
+                        b.push(1);
+                        b.extend_from_slice(&mu.to_le_bytes());
+                    }
+                    None => b.push(0),
+                }
+            }
+            FusedPayload::Scaffold { .. } => bail!(
+                "stateful (Scaffold) payloads cannot be served over the wire: the control \
+                 rows live in server memory"
+            ),
+            FusedPayload::None => bail!("networked round dispatched without a payload recipe"),
+        }
+        b.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        for &v in &inp.point {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&(inp.sup.len() as u32).to_le_bytes());
+        for &j in &inp.sup {
+            b.extend_from_slice(&j.to_le_bytes());
+        }
+
+        let mut conns = self.conns.borrow_mut();
+        for (p, &client) in cohort.iter().enumerate() {
+            b[scale_off..scale_off + 4].copy_from_slice(&inp.scales[p].to_le_bytes());
+            let conn = conns
+                .get_mut(client)
+                .with_context(|| format!("cohort client {client} has no connection"))?;
+            write_frame(&mut conn.w, KIND_ROUND, b)
+                .with_context(|| format!("sending ROUND to client {client}"))?;
+            conn.w.flush().with_context(|| format!("flushing ROUND to client {client}"))?;
+        }
+        Ok(())
+    }
+
+    fn fused_visit(
+        &self,
+        cohort: &[usize],
+        channels: usize,
+        visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
+    ) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        let st = &mut *st;
+        let mut conns = self.conns.borrow_mut();
+        for &client in cohort {
+            let conn = conns
+                .get_mut(client)
+                .with_context(|| format!("cohort client {client} has no connection"))?;
+            for ch in 0..channels {
+                let kind = read_frame(&mut conn.r, &mut st.frame)
+                    .with_context(|| format!("reading channel {ch} from client {client}"))?;
+                ensure!(kind == KIND_MSG, "client {client} sent frame kind {kind}, expected MSG");
+                let mut cur = Cur::new(&st.frame);
+                let round = cur.u32()? as usize;
+                let mch = cur.u8()? as usize;
+                let layout = cur.u8()?;
+                let k = cur.u32()? as usize;
+                let body = cur.rest();
+                ensure!(
+                    round == st.round && mch == ch && layout == st.layout,
+                    "client {client} answered (round {round}, ch {mch}, layout {layout}); \
+                     expected (round {}, ch {ch}, layout {})",
+                    st.round,
+                    st.layout
+                );
+                let bits = decode_msg_body(layout, k, body, self.dim, &st.sup, &mut st.sv)
+                    .with_context(|| format!("decoding client {client} channel {ch}"))?;
+                visit(client, ch, &st.sv.idx, &st.sv.val, bits)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode one MSG body into `sv` (global indices) and return its exact
+/// wire bits — by construction the same number the client's compressor
+/// quoted, which is what the ledger books.
+fn decode_msg_body(
+    layout: u8,
+    k: usize,
+    body: &[u8],
+    dim: usize,
+    sup: &[u32],
+    sv: &mut SparseVec,
+) -> Result<u64> {
+    let bits = match layout {
+        LAYOUT_SPARSE => {
+            ensure!(k >= 1 && k <= dim, "sparse payload of {k} pairs over dim {dim}");
+            crate::compress::sparse_bits(k, dim)
+        }
+        LAYOUT_MASKED_RAW => {
+            ensure!(
+                k == sup.len() && k >= 1,
+                "masked raw payload must cover the support exactly ({k} != {})",
+                sup.len()
+            );
+            32 * k as u64
+        }
+        LAYOUT_MASKED_SPARSE => {
+            ensure!(
+                k >= 1 && k <= sup.len(),
+                "masked sparse payload of {k} pairs over a support of {}",
+                sup.len()
+            );
+            crate::compress::sparse_bits(k, sup.len())
+        }
+        other => bail!("unknown wire layout {other}"),
+    };
+    ensure!(
+        body.len() as u64 == bits.div_ceil(8),
+        "MSG body is {} bytes; layout {layout} with {k} pairs packs {bits} bits ({} bytes)",
+        body.len(),
+        bits.div_ceil(8)
+    );
+    let mut r = BitReader::new(body);
+    match layout {
+        LAYOUT_SPARSE => codec::decode_sparse(&mut r, dim, k, sv)?,
+        LAYOUT_MASKED_RAW => codec::decode_masked_raw(&mut r, dim, sup, sv)?,
+        LAYOUT_MASKED_SPARSE => codec::decode_masked_sparse(&mut r, dim, sup, k, sv)?,
+        _ => unreachable!(),
+    }
+    Ok(bits)
+}
+
+/// A bound coordinator endpoint. [`NetServer::bind`] first (so tests
+/// and scripts can read the real port before starting a fleet), then
+/// [`NetServer::serve`] a spec against it.
+pub struct NetServer {
+    listener: Listener,
+    /// Socket read timeout applied to every accepted connection.
+    pub timeout: Duration,
+}
+
+impl NetServer {
+    pub fn bind(addr: &str) -> Result<NetServer> {
+        Ok(NetServer { listener: Listener::bind(addr)?, timeout: DEFAULT_TIMEOUT })
+    }
+
+    /// The canonical connect address (resolves `tcp:...:0`).
+    pub fn local_addr(&self) -> Result<String> {
+        self.listener.local_addr()
+    }
+
+    /// Accept HELLO handshakes until all `n` client slots are filled. A
+    /// malformed or duplicate HELLO aborts the serve — the coordinator
+    /// refuses to run a round over a broken fleet.
+    fn accept_fleet(&self, n: usize, dim: usize, has_comp: bool) -> Result<NetTransport> {
+        let mut slots: Vec<Option<Conn>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut joined = 0usize;
+        let mut buf = Vec::new();
+        while joined < n {
+            let mut conn = Conn::new(self.listener.accept()?, self.timeout)?;
+            let kind = read_frame(&mut conn.r, &mut buf).context("reading HELLO")?;
+            ensure!(kind == KIND_HELLO, "first frame must be HELLO, got kind {kind}");
+            let mut cur = Cur::new(&buf);
+            let id = cur.u32()? as usize;
+            let fleet = cur.u32()? as usize;
+            let hdim = cur.u32()? as usize;
+            cur.done()?;
+            ensure!(fleet == n, "client expects a fleet of {fleet}, server runs {n}");
+            ensure!(hdim == dim, "client expects dim {hdim}, server runs {dim}");
+            ensure!(id < n, "client id {id} out of range for a fleet of {n}");
+            ensure!(slots[id].is_none(), "client id {id} joined twice");
+            slots[id] = Some(conn);
+            joined += 1;
+        }
+        let conns: Vec<Conn> = slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+        Ok(NetTransport {
+            conns: RefCell::new(conns),
+            dim,
+            has_comp,
+            st: RefCell::new(NetState {
+                input: PoolInput::default(),
+                sup: Vec::new(),
+                round: 0,
+                layout: LAYOUT_SPARSE,
+                frame: Vec::new(),
+                body: Vec::new(),
+                sv: SparseVec::default(),
+            }),
+        })
+    }
+
+    /// Drive a full networked run of `spec`: accept one connection per
+    /// dataset client, stream every round over the sockets, broadcast
+    /// DONE, and return the record — bit-for-bit the in-process fused
+    /// run of the same spec. `on_eval` fires at every eval round (the
+    /// JSON metrics line of `fedeff serve --listen`).
+    pub fn serve(&self, spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Result<RunRecord> {
+        ensure!(
+            spec.scenario.is_none(),
+            "time-aware scenarios are in-process only (the virtual clock replaces the real \
+             barrier); drop [scenario] or serve without --listen"
+        );
+        let oracle = fleet_oracle(spec)?;
+        let n = spec.dataset.clients;
+        let d = oracle.dim();
+        let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
+        let driver = build_driver(spec, n)?;
+        let transport = self.accept_fleet(n, d, leaf_compressor(spec).is_some())?;
+        let x0 = vec![0.5f32; d];
+        let mut cb = |r: &RoundStat| on_eval(r);
+        let rec = driver.run_with_transport(
+            alg.as_mut(),
+            &oracle,
+            &transport,
+            &x0,
+            &spec_opts(spec),
+            Some(&mut cb),
+        )?;
+        transport.shutdown()?;
+        Ok(rec)
+    }
+}
+
+// ---------------------------------------------------------------------
+// client fleet
+// ---------------------------------------------------------------------
+
+/// Run the client side of a networked serve: one simulated client per
+/// dataset client (each on its own thread with its own compressor
+/// fork), all built from the same spec the server loaded, connecting to
+/// `addr` and answering ROUND frames until DONE.
+pub fn run_fleet(addr: &str, spec: &Spec) -> Result<()> {
+    let oracle = fleet_oracle(spec)?;
+    let n = spec.dataset.clients;
+    let d = oracle.dim();
+    let comp = leaf_compressor(spec);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(n);
+        for c in 0..n {
+            let oracle = &oracle;
+            let comp = comp.clone();
+            handles.push(
+                scope.spawn(move || client_loop(addr, c, n, d, comp.as_ref(), oracle)),
+            );
+        }
+        let mut first_err = None;
+        for (c, h) in handles.into_iter().enumerate() {
+            let res = h.join().map_err(|_| anyhow::anyhow!("fleet client {c} panicked"));
+            if let Err(e) = res.and_then(|r| r) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })
+}
+
+/// One simulated client: HELLO, then execute every ROUND recipe through
+/// the *same* fused pipeline the in-process workers run
+/// ([`run_chunk`]), encode each channel's message with the wire codec,
+/// and enforce the codec invariant (`bit_len == compressor-quoted
+/// bits`) before sending.
+fn client_loop(
+    addr: &str,
+    client: usize,
+    fleet: usize,
+    dim: usize,
+    comp: Option<&(String, usize, usize)>,
+    oracle: &RustLogReg,
+) -> Result<()> {
+    let stream = connect_retry(addr, Duration::from_secs(10))?;
+    let mut conn = Conn::new(stream, DEFAULT_TIMEOUT)?;
+    let mut hello = Vec::with_capacity(12);
+    hello.extend_from_slice(&(client as u32).to_le_bytes());
+    hello.extend_from_slice(&(fleet as u32).to_le_bytes());
+    hello.extend_from_slice(&(dim as u32).to_le_bytes());
+    write_frame(&mut conn.w, KIND_HELLO, &hello)?;
+    conn.w.flush()?;
+
+    let mut kit = FusedKit::default();
+    let fork = match comp {
+        Some((name, k, kp)) => Some(
+            compressor_by_name(name, *k, *kp)?
+                .fork()
+                .with_context(|| format!("uplink compressor {name} has no sparse fork"))?,
+        ),
+        None => None,
+    };
+    let has_comp = fork.is_some();
+    kit.install(fork);
+
+    let mut input = PoolInput::default();
+    input.cohort.push(client);
+    input.scales.push(0.0);
+    let mut out = WorkerOut::default();
+    let mut frame = Vec::new();
+    let mut msg = Vec::new();
+    let mut w = BitWriter::new();
+    let mut sv = SparseVec::default();
+
+    loop {
+        let kind = read_frame(&mut conn.r, &mut frame)
+            .with_context(|| format!("client {client} reading from the coordinator"))?;
+        match kind {
+            KIND_DONE => return Ok(()),
+            KIND_ROUND => {
+                let layout = parse_round(&frame, dim, &mut input)?;
+                let expect = if input.sup.is_empty() {
+                    ensure!(has_comp, "unmasked round reached a compressor-less client");
+                    LAYOUT_SPARSE
+                } else if has_comp {
+                    LAYOUT_MASKED_SPARSE
+                } else {
+                    LAYOUT_MASKED_RAW
+                };
+                ensure!(
+                    layout == expect,
+                    "coordinator negotiated layout {layout}, this client produces {expect}"
+                );
+                run_chunk(oracle, &input, &mut kit, &mut out, 0, 1, dim)?;
+                let round32 = input.round as u32;
+                let mut off = 0usize;
+                for (ch, &len) in out.lens.iter().enumerate() {
+                    let (lo, hi) = (off, off + len as usize);
+                    off = hi;
+                    sv.clear(dim);
+                    for (&i, &v) in out.idx[lo..hi].iter().zip(&out.val[lo..hi]) {
+                        sv.push(i, v);
+                    }
+                    w.clear();
+                    match layout {
+                        LAYOUT_SPARSE => codec::encode_sparse(&sv, &mut w)?,
+                        LAYOUT_MASKED_RAW => codec::encode_masked_raw(&sv, &input.sup, &mut w)?,
+                        LAYOUT_MASKED_SPARSE => {
+                            codec::encode_masked_sparse(&sv, &input.sup, &mut w)?
+                        }
+                        _ => unreachable!("layout validated above"),
+                    }
+                    // the codec invariant, enforced on every live message
+                    ensure!(
+                        w.bit_len() == out.bits[ch],
+                        "codec packed {} bits but the compressor quoted {} (client {client}, \
+                         round {}, channel {ch})",
+                        w.bit_len(),
+                        out.bits[ch],
+                        input.round
+                    );
+                    msg.clear();
+                    msg.extend_from_slice(&round32.to_le_bytes());
+                    msg.push(ch as u8);
+                    msg.push(layout);
+                    msg.extend_from_slice(&(sv.len() as u32).to_le_bytes());
+                    msg.extend_from_slice(w.finish());
+                    write_frame(&mut conn.w, KIND_MSG, &msg)?;
+                }
+                conn.w.flush()?;
+            }
+            other => bail!("unexpected frame kind {other} from the coordinator"),
+        }
+    }
+}
+
+/// Parse a ROUND frame into the client's single-slot [`PoolInput`];
+/// returns the negotiated layout byte.
+fn parse_round(frame: &[u8], dim: usize, input: &mut PoolInput) -> Result<u8> {
+    let mut cur = Cur::new(frame);
+    input.round = cur.u32()? as usize;
+    input.seed = cur.u64()?;
+    input.scales[0] = cur.f32()?;
+    let layout = cur.u8()?;
+    input.payload = match cur.u8()? {
+        PAYLOAD_GRADIENT => FusedPayload::Gradient,
+        PAYLOAD_LOCAL_SGD => {
+            let steps = cur.u32()? as usize;
+            let lr = cur.f32()?;
+            let prox_mu = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.f32()?),
+                other => bail!("bad prox flag {other}"),
+            };
+            FusedPayload::LocalSgd { steps, lr, prox_mu }
+        }
+        other => bail!("unknown payload tag {other}"),
+    };
+    let d = cur.u32()? as usize;
+    ensure!(d == dim, "round anchor dim {d} != client dim {dim}");
+    input.point.clear();
+    input.point.reserve(d);
+    for _ in 0..d {
+        input.point.push(cur.f32()?);
+    }
+    let nsup = cur.u32()? as usize;
+    ensure!(nsup <= d, "support of {nsup} over dim {d}");
+    input.sup.clear();
+    input.sup.reserve(nsup);
+    for _ in 0..nsup {
+        input.sup.push(cur.u32()?);
+    }
+    ensure!(
+        input.sup.windows(2).all(|p| p[0] < p[1]) && input.sup.iter().all(|&j| (j as usize) < d),
+        "mask support must be strictly ascending within the model dimension"
+    );
+    cur.done()?;
+    Ok(layout)
+}

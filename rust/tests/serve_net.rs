@@ -1,0 +1,353 @@
+//! The networked coordinator's acceptance bar (DESIGN.md §Wire): a
+//! `NetServer` + socket client fleet run of a spec reproduces the
+//! in-process fused driver run of the same spec **bit for bit** —
+//! identical loss raw bits, identical booked `bits_up` / `bits_down`,
+//! identical comm cost — across the wire-eligible configurations
+//! (sparse compressors, masked raw, masked compressed, local steps,
+//! cohort sampling). Plus the robustness contract: malformed, truncated
+//! and oversized frames error loudly and never hang the server.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use fedeff::config::Spec;
+use fedeff::metrics::RunRecord;
+use fedeff::wire::net::{run_fleet, run_in_process, NetServer};
+
+/// Run `toml` once over TCP loopback (server + in-thread fleet) and
+/// once in-process; return both records.
+fn networked_vs_inproc(toml: &str) -> (RunRecord, RunRecord) {
+    let spec = Spec::parse(toml).expect("test spec parses");
+    let server = NetServer::bind("tcp:127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().expect("resolved address");
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("networked serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
+    (net, inproc)
+}
+
+fn assert_bitwise_equal(net: &RunRecord, inproc: &RunRecord) {
+    assert_eq!(net.rounds.len(), inproc.rounds.len(), "eval round counts differ");
+    assert!(!net.rounds.is_empty(), "run produced no eval rounds");
+    for (a, b) in net.rounds.iter().zip(&inproc.rounds) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "round {}: networked loss {} != in-process loss {}",
+            a.round,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.bits_up, b.bits_up, "round {}: booked uplink bits differ", a.round);
+        assert_eq!(a.bits_down, b.bits_down, "round {}: booked downlink bits differ", a.round);
+        assert_eq!(
+            a.comm_cost.to_bits(),
+            b.comm_cost.to_bits(),
+            "round {}: comm cost differs",
+            a.round
+        );
+    }
+    assert_eq!(net.mask_nnz, inproc.mask_nnz, "mask support sizes differ");
+}
+
+#[test]
+fn gd_topk_over_tcp_matches_inproc_bitwise() {
+    let (net, inproc) = networked_vs_inproc(
+        r#"
+[experiment]
+name = "net-gd-topk"
+rounds = 20
+eval_every = 5
+seed = 7
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 12
+"#,
+    );
+    assert_bitwise_equal(&net, &inproc);
+    // compression actually happened: bits stay far below dense
+    let last = net.rounds.last().unwrap();
+    assert!(last.bits_up > 0 && last.bits_up < 20 * 32 * 112);
+}
+
+#[test]
+fn fedavg_sampled_randk_over_tcp_matches_inproc_bitwise() {
+    // local steps (LocalSgd payload) + the default nice sampler
+    // (changing cohorts each round) + rand-k's per-client rng streams
+    let (net, inproc) = networked_vs_inproc(
+        r#"
+[experiment]
+name = "net-fedavg-randk"
+rounds = 18
+eval_every = 6
+seed = 3
+
+[dataset]
+clients = 12
+
+[algorithm]
+kind = "fedavg"
+local_steps = 3
+lr = 0.1
+
+[compressor]
+up = "rand-k"
+k = 16
+"#,
+    );
+    assert_bitwise_equal(&net, &inproc);
+}
+
+#[test]
+fn fedprox_srandk_over_tcp_matches_inproc_bitwise() {
+    // proximal local steps (prox_mu travels in the ROUND frame)
+    let (net, inproc) = networked_vs_inproc(
+        r#"
+[experiment]
+name = "net-fedprox-srandk"
+rounds = 12
+eval_every = 4
+seed = 11
+
+[dataset]
+clients = 10
+
+[algorithm]
+kind = "fedprox"
+local_steps = 2
+lr = 0.1
+mu_prox = 0.05
+
+[compressor]
+up = "srand-k"
+k = 10
+"#,
+    );
+    assert_bitwise_equal(&net, &inproc);
+}
+
+#[test]
+fn masked_compressed_uplink_over_tcp_matches_inproc_bitwise() {
+    // global sparsity mask + top-k within the support: the
+    // MaskedSparse layout with support-relative packed indices
+    let (net, inproc) = networked_vs_inproc(
+        r#"
+[experiment]
+name = "net-masked-topk"
+rounds = 16
+eval_every = 4
+seed = 5
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "fedavg"
+local_steps = 2
+lr = 0.1
+
+[compressor]
+up = "top-k"
+k = 8
+
+[sparsity]
+method = "magnitude"
+sparsity = 0.5
+"#,
+    );
+    assert_bitwise_equal(&net, &inproc);
+    assert!(net.mask_nnz.is_some(), "masked run must report its support");
+}
+
+#[test]
+fn masked_raw_uplink_over_tcp_matches_inproc_bitwise() {
+    // mask with no compressor: the MaskedRaw layout (values only,
+    // 32 bits per support coordinate)
+    let (net, inproc) = networked_vs_inproc(
+        r#"
+[experiment]
+name = "net-masked-raw"
+rounds = 12
+eval_every = 4
+seed = 9
+
+[dataset]
+clients = 6
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[sparsity]
+method = "magnitude"
+sparsity = 0.6
+"#,
+    );
+    assert_bitwise_equal(&net, &inproc);
+}
+
+// -------------------------------------------------------------------
+// robustness: broken peers error loudly, never hang or panic
+// -------------------------------------------------------------------
+
+const BROKEN_PEER_SPEC: &str = r#"
+[experiment]
+name = "net-broken"
+rounds = 5
+seed = 1
+
+[dataset]
+clients = 1
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 4
+"#;
+
+/// Bind a short-timeout server and run `peer` against it on a raw TCP
+/// socket; the serve must return an error (and must return at all).
+fn serve_against_broken_peer(peer: impl FnOnce(&mut TcpStream) + Send) -> String {
+    let spec = Spec::parse(BROKEN_PEER_SPEC).unwrap();
+    let mut server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    server.timeout = Duration::from_millis(500);
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let mut s = TcpStream::connect(&hostport).expect("connect to test server");
+            peer(&mut s);
+            // hold the socket open briefly so the server error comes
+            // from frame validation, not a racing disconnect
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let err = server
+            .serve(&spec, &mut |_| {})
+            .expect_err("server must reject the broken peer");
+        format!("{err:#}")
+    })
+}
+
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(5 + payload.len());
+    f.extend_from_slice(&(payload.len() as u32 + 1).to_le_bytes());
+    f.push(kind);
+    f.extend_from_slice(payload);
+    f
+}
+
+#[test]
+fn garbage_first_frame_errors_loudly() {
+    let err = serve_against_broken_peer(|s| {
+        s.write_all(&frame(0xAB, &[1, 2, 3])).unwrap();
+    });
+    assert!(err.contains("HELLO"), "unexpected error: {err}");
+}
+
+#[test]
+fn oversized_frame_is_rejected() {
+    let err = serve_against_broken_peer(|s| {
+        // header claims 1 GiB; the length check must fire before any
+        // allocation or read of that size
+        s.write_all(&(1u32 << 30).to_le_bytes()).unwrap();
+        s.write_all(&[1]).unwrap();
+    });
+    assert!(err.contains("oversized"), "unexpected error: {err}");
+}
+
+#[test]
+fn truncated_frame_times_out_with_an_error() {
+    let err = serve_against_broken_peer(|s| {
+        // header promises 64 payload bytes that never arrive; the read
+        // timeout must surface as an error instead of hanging
+        s.write_all(&65u32.to_le_bytes()).unwrap();
+        s.write_all(&[1]).unwrap();
+    });
+    assert!(!err.is_empty());
+}
+
+#[test]
+fn malformed_msg_after_valid_hello_errors_loudly() {
+    let err = serve_against_broken_peer(|s| {
+        // a correct HELLO for client 0 of 1 (dim 112 = mushrooms) ...
+        let mut hello = Vec::new();
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        hello.extend_from_slice(&1u32.to_le_bytes());
+        hello.extend_from_slice(&112u32.to_le_bytes());
+        s.write_all(&frame(1, &hello)).unwrap();
+        // ... then an MSG whose body length cannot match any layout
+        let mut msg = Vec::new();
+        msg.extend_from_slice(&0u32.to_le_bytes()); // round
+        msg.push(0); // channel
+        msg.push(0); // layout: sparse
+        msg.extend_from_slice(&4u32.to_le_bytes()); // k = 4
+        msg.extend_from_slice(&[0xFF; 3]); // 3 bytes << the 20 required
+        s.write_all(&frame(3, &msg)).unwrap();
+    });
+    assert!(err.contains("decoding client 0"), "unexpected error: {err}");
+}
+
+#[test]
+fn duplicate_client_id_is_rejected() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-dup"
+rounds = 3
+seed = 1
+
+[dataset]
+clients = 2
+
+[algorithm]
+kind = "gd"
+
+[compressor]
+up = "top-k"
+k = 4
+"#,
+    )
+    .unwrap();
+    let mut server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    server.timeout = Duration::from_millis(500);
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let mut hello = Vec::new();
+            hello.extend_from_slice(&0u32.to_le_bytes());
+            hello.extend_from_slice(&2u32.to_le_bytes());
+            hello.extend_from_slice(&112u32.to_le_bytes());
+            let f = frame(1, &hello);
+            // two sockets both claiming client id 0
+            let mut a = TcpStream::connect(&hostport).unwrap();
+            a.write_all(&f).unwrap();
+            let mut b = TcpStream::connect(&hostport).unwrap();
+            b.write_all(&f).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let err = server.serve(&spec, &mut |_| {}).expect_err("duplicate id must be rejected");
+        assert!(format!("{err:#}").contains("twice"), "unexpected error: {err:#}");
+    });
+}

@@ -1,0 +1,333 @@
+//! Wire codec properties (DESIGN.md §Wire): for every registry message
+//! kind, `decode(encode(x)) == x` exactly (f32 raw bits preserved) and
+//! `encode(x).bit_len()` equals the bits the compressor quoted — the
+//! number the [`fedeff::coordinator::CommLedger`] books. Plus the
+//! robustness contract: random and bit-flipped byte streams must never
+//! panic a decoder (they either decode to something valid or return a
+//! loud error).
+
+use fedeff::compress::permk::PermK;
+use fedeff::compress::quantize::Qsgd;
+use fedeff::compress::randk::RandK;
+use fedeff::compress::topk::TopK;
+use fedeff::compress::{client_rng, sparse_bits, Compressor, Identity, SparseVec};
+use fedeff::wire::bits::{BitReader, BitWriter};
+use fedeff::wire::codec;
+
+/// Deterministic test vector with mixed signs and magnitudes.
+fn vector(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = fedeff::rng(seed);
+    (0..d).map(|_| rng.f32_range(-2.0, 2.0)).collect()
+}
+
+fn assert_same_pairs(kind: &str, got: &SparseVec, want: &SparseVec) {
+    assert_eq!(got.idx, want.idx, "{kind}: decoded indices differ");
+    assert_eq!(got.val.len(), want.val.len(), "{kind}: decoded pair count differs");
+    for (j, (g, w)) in got.val.iter().zip(&want.val).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{kind}: value {j} not bitwise-identical");
+    }
+}
+
+// -------------------------------------------------------------------
+// sparse: Top-K / Rand-K / sRand-K native messages
+// -------------------------------------------------------------------
+
+#[test]
+fn sparse_codec_roundtrips_and_matches_ledger() {
+    // dims deliberately include non-powers-of-two and k == d
+    for &d in &[2usize, 7, 23, 100, 128, 1000] {
+        for &k in &[1usize, 3, 8, d] {
+            let comps: Vec<(&str, Box<dyn Compressor>)> = vec![
+                ("top-k", Box::new(TopK::new(k))),
+                ("rand-k", Box::new(RandK::unbiased(k))),
+                ("srand-k", Box::new(RandK::scaled(k))),
+            ];
+            for (name, comp) in comps {
+                let x = vector(d, 0xC0DE + d as u64 + k as u64);
+                let mut rng = client_rng(7, 3, 1, 0);
+                let mut sv = SparseVec::default();
+                let bits = comp
+                    .compress_sparse(&x, &mut sv, &mut rng)
+                    .expect("sparsifiers have a sparse form");
+                assert_eq!(bits, sparse_bits(k.min(d), d), "{name}: quote (d={d}, k={k})");
+
+                let mut w = BitWriter::new();
+                codec::encode_sparse(&sv, &mut w).unwrap();
+                assert_eq!(w.bit_len(), bits, "{name}: codec bits != ledger bits (d={d}, k={k})");
+                let bytes = w.finish().to_vec();
+                assert_eq!(bytes.len() as u64, bits.div_ceil(8));
+
+                let mut r = BitReader::new(&bytes);
+                let mut back = SparseVec::default();
+                codec::decode_sparse(&mut r, d, sv.len(), &mut back).unwrap();
+                assert_same_pairs(name, &back, &sv);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// masked payloads: raw support values and compressed-within-support
+// -------------------------------------------------------------------
+
+#[test]
+fn masked_raw_codec_roundtrips_at_32_bits_per_nnz() {
+    for &d in &[6usize, 23, 112] {
+        // every third coordinate, and the nnz == 1 edge
+        for sup in [
+            (0..d as u32).step_by(3).collect::<Vec<u32>>(),
+            vec![(d - 1) as u32],
+        ] {
+            let x = vector(d, 0xA5 + d as u64);
+            let mut sv = SparseVec::default();
+            sv.clear(d);
+            for &j in &sup {
+                sv.push(j, x[j as usize]);
+            }
+            let mut w = BitWriter::new();
+            codec::encode_masked_raw(&sv, &sup, &mut w).unwrap();
+            assert_eq!(w.bit_len(), 32 * sup.len() as u64, "masked raw is 32 bits per nnz");
+            let bytes = w.finish().to_vec();
+            let mut back = SparseVec::default();
+            codec::decode_masked_raw(&mut BitReader::new(&bytes), d, &sup, &mut back).unwrap();
+            assert_same_pairs("masked-raw", &back, &sv);
+        }
+    }
+}
+
+#[test]
+fn masked_sparse_codec_roundtrips_with_support_relative_indices() {
+    for &d in &[23usize, 112, 300] {
+        let sup: Vec<u32> = (0..d as u32).filter(|j| j % 4 != 1).collect();
+        let nnz = sup.len();
+        for &k in &[1usize, 5, nnz] {
+            for (name, comp) in [
+                ("top-k", Box::new(TopK::new(k)) as Box<dyn Compressor>),
+                ("rand-k", Box::new(RandK::unbiased(k))),
+            ] {
+                // replicate the fused emit path: gather the support,
+                // compress the compacted vector, remap to global indices
+                let x = vector(d, 0xF00D + d as u64 + k as u64);
+                let gathered: Vec<f32> = sup.iter().map(|&j| x[j as usize]).collect();
+                let mut rng = client_rng(11, 5, 2, 0);
+                let mut compact = SparseVec::default();
+                let bits = comp.compress_sparse(&gathered, &mut compact, &mut rng).unwrap();
+                assert_eq!(bits, sparse_bits(k.min(nnz), nnz), "{name}: support-domain quote");
+                let mut global = SparseVec::default();
+                global.clear(d);
+                for (&c, &v) in compact.idx.iter().zip(&compact.val) {
+                    global.push(sup[c as usize], v);
+                }
+
+                let mut w = BitWriter::new();
+                codec::encode_masked_sparse(&global, &sup, &mut w).unwrap();
+                assert_eq!(w.bit_len(), bits, "{name}: codec bits != ledger bits over support");
+                let bytes = w.finish().to_vec();
+                let mut back = SparseVec::default();
+                codec::decode_masked_sparse(
+                    &mut BitReader::new(&bytes),
+                    d,
+                    &sup,
+                    global.len(),
+                    &mut back,
+                )
+                .unwrap();
+                assert_same_pairs(name, &back, &global);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// QSGD: the encoder IS the quantizer
+// -------------------------------------------------------------------
+
+#[test]
+fn qsgd_codec_replicates_the_compressor_exactly() {
+    for &levels in &[1u32, 2, 4, 7, 15, 33] {
+        for &len in &[1usize, 5, 23, 112] {
+            let q = Qsgd::new(levels);
+            let x = vector(len, 0xBEEF + levels as u64 + len as u64);
+            let mut compressed = vec![0.0f32; len];
+            let mut rng_comp = client_rng(3, 9, 4, 0);
+            let mut rng_codec = client_rng(3, 9, 4, 0);
+            let bits = q.compress(&x, &mut compressed, &mut rng_comp);
+
+            let mut w = BitWriter::new();
+            codec::qsgd_encode(levels, &x, &mut rng_codec, &mut w);
+            assert_eq!(
+                w.bit_len(),
+                bits,
+                "qsgd codec bits != quote (levels={levels}, len={len})"
+            );
+            assert_eq!(
+                bits,
+                32 + len as u64 * codec::qsgd_entry_width(levels) as u64,
+                "entry width mirrors the compressor formula"
+            );
+            // identical rng draw counts: both streams must now agree
+            assert_eq!(rng_comp.next_u64(), rng_codec.next_u64(), "rng streams diverged");
+
+            let bytes = w.finish().to_vec();
+            let mut back = Vec::new();
+            codec::qsgd_decode(&mut BitReader::new(&bytes), levels, len, &mut back).unwrap();
+            assert_eq!(back.len(), len);
+            for (j, (b, c)) in back.iter().zip(&compressed).enumerate() {
+                // numerically identical everywhere; level-0 entries are
+                // canonicalized to +0.0 (compress may carry -0.0, which
+                // is == and scatter-invisible)
+                assert_eq!(b, c, "entry {j} differs (levels={levels})");
+                if *c != 0.0 {
+                    assert_eq!(b.to_bits(), c.to_bits(), "entry {j} not bitwise (levels={levels})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qsgd_codec_handles_the_zero_vector_without_rng_draws() {
+    let levels = 4u32;
+    let q = Qsgd::new(levels);
+    let x = vec![0.0f32; 17];
+    let mut compressed = vec![1.0f32; 17];
+    let mut rng_comp = fedeff::rng(42);
+    let mut rng_codec = fedeff::rng(42);
+    let bits = q.compress(&x, &mut compressed, &mut rng_comp);
+    let mut w = BitWriter::new();
+    codec::qsgd_encode(levels, &x, &mut rng_codec, &mut w);
+    assert_eq!(w.bit_len(), bits);
+    assert_eq!(rng_comp.next_u64(), rng_codec.next_u64(), "zero vector must not draw");
+    let bytes = w.finish().to_vec();
+    let mut back = Vec::new();
+    codec::qsgd_decode(&mut BitReader::new(&bytes), levels, 17, &mut back).unwrap();
+    assert_eq!(back, compressed);
+}
+
+// -------------------------------------------------------------------
+// PermK: seed travels, block is re-derived
+// -------------------------------------------------------------------
+
+#[test]
+fn permk_codec_roundtrips_every_worker_block() {
+    let n = 4usize;
+    for &d in &[13usize, 64, 100] {
+        for worker in 0..n {
+            let comp = PermK::new(n, worker, 0xFEED_F00D ^ d as u64);
+            let x = vector(d, 0x9 + d as u64 + worker as u64);
+            let mut rng = client_rng(1, 2, worker, 0);
+            let mut sv = SparseVec::default();
+            let bits = comp.compress_sparse(&x, &mut sv, &mut rng).unwrap();
+            assert_eq!(bits, 64 + 32 * sv.len() as u64, "PermK quote: seed + kept values");
+
+            let mut w = BitWriter::new();
+            codec::permk_encode(&comp, &sv, &mut w).unwrap();
+            assert_eq!(w.bit_len(), bits, "PermK codec bits != quote (d={d}, worker={worker})");
+            let bytes = w.finish().to_vec();
+            let mut back = SparseVec::default();
+            codec::permk_decode(&mut BitReader::new(&bytes), n, worker, d, &mut back).unwrap();
+            assert_same_pairs("perm-k", &back, &sv);
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Identity: the dense run
+// -------------------------------------------------------------------
+
+#[test]
+fn dense_codec_roundtrips_identity_messages() {
+    for &d in &[1usize, 23, 112] {
+        let x = vector(d, 0x1D + d as u64);
+        let mut out = vec![0.0f32; d];
+        let bits = Identity.compress(&x, &mut out, &mut fedeff::rng(0));
+        assert_eq!(bits, 32 * d as u64);
+        let mut w = BitWriter::new();
+        codec::encode_dense(&x, &mut w);
+        assert_eq!(w.bit_len(), bits, "dense codec bits != ledger bits");
+        let bytes = w.finish().to_vec();
+        let mut back = Vec::new();
+        codec::decode_dense(&mut BitReader::new(&bytes), d, &mut back).unwrap();
+        for (b, v) in back.iter().zip(&x) {
+            assert_eq!(b.to_bits(), v.to_bits());
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// robustness: garbage in, errors (never panics) out
+// -------------------------------------------------------------------
+
+/// Throw random byte strings at every decoder: each call must return
+/// (Ok with validated contents, or Err) — never panic.
+#[test]
+fn decoders_survive_random_bytes() {
+    let mut rng = fedeff::rng(0xDEAD);
+    let sup: Vec<u32> = (0..40u32).step_by(2).collect();
+    for _ in 0..500 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let d = 2 + rng.below(200);
+        let k = 1 + rng.below(d);
+        let mut sv = SparseVec::default();
+        if let Ok(()) = codec::decode_sparse(&mut BitReader::new(&bytes), d, k, &mut sv) {
+            assert!(sv.idx.iter().all(|&i| (i as usize) < d), "accepted out-of-range index");
+        }
+        let _ = codec::decode_masked_raw(&mut BitReader::new(&bytes), 40, &sup, &mut sv);
+        let kk = 1 + rng.below(sup.len());
+        if let Ok(()) =
+            codec::decode_masked_sparse(&mut BitReader::new(&bytes), 40, &sup, kk, &mut sv)
+        {
+            assert!(sv.idx.iter().all(|&i| sup.contains(&i)), "accepted index outside support");
+        }
+        let mut dense = Vec::new();
+        let _ = codec::qsgd_decode(&mut BitReader::new(&bytes), 4, 16, &mut dense);
+        let _ = codec::decode_dense(&mut BitReader::new(&bytes), 64, &mut dense);
+        let _ = codec::permk_decode(&mut BitReader::new(&bytes), 4, 1, d, &mut sv);
+    }
+}
+
+/// Flip every bit of a valid sparse encoding in turn: the decoder must
+/// either reject the corrupted stream or produce an in-range result.
+#[test]
+fn bit_flips_never_panic_the_sparse_decoder() {
+    let d = 100usize;
+    let comp = TopK::new(8);
+    let x = vector(d, 0xF11);
+    let mut sv = SparseVec::default();
+    comp.compress_sparse(&x, &mut sv, &mut fedeff::rng(5)).unwrap();
+    let mut w = BitWriter::new();
+    codec::encode_sparse(&sv, &mut w).unwrap();
+    let clean = w.finish().to_vec();
+    for bit in 0..clean.len() * 8 {
+        let mut bytes = clean.clone();
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        let mut back = SparseVec::default();
+        if let Ok(()) = codec::decode_sparse(&mut BitReader::new(&bytes), d, sv.len(), &mut back) {
+            assert!(back.idx.iter().all(|&i| (i as usize) < d));
+            assert_eq!(back.len(), sv.len());
+        }
+    }
+}
+
+/// Truncating a valid encoding at every byte boundary errors loudly.
+#[test]
+fn truncation_errors_loudly_in_every_codec() {
+    let d = 64usize;
+    let x = vector(d, 0x7AB);
+    let comp = TopK::new(9);
+    let mut sv = SparseVec::default();
+    comp.compress_sparse(&x, &mut sv, &mut fedeff::rng(6)).unwrap();
+    let mut w = BitWriter::new();
+    codec::encode_sparse(&sv, &mut w).unwrap();
+    let clean = w.finish().to_vec();
+    // any strict prefix is missing at least one trailing value bit
+    for cut in 0..clean.len().saturating_sub(1) {
+        let mut back = SparseVec::default();
+        assert!(
+            codec::decode_sparse(&mut BitReader::new(&clean[..cut]), d, sv.len(), &mut back)
+                .is_err(),
+            "prefix of {cut} bytes decoded silently"
+        );
+    }
+}
