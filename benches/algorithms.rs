@@ -593,6 +593,50 @@ k = 16
         b.run_case_wire(name, rounds, n, d, wire_bytes, || {
             black_box(run_in_process(&spec, &mut |_| {}).unwrap());
         });
+
+        // the event-loop scaling rows (PR 8): same spec shape at 256
+        // and 1024 clients over a readiness-multiplexed server. These
+        // are the clients_per_sec story — one process, one poll loop,
+        // n sockets, server + fleet + dataset rebuilt per iteration.
+        let _ = fedeff::wire::evloop::raise_nofile_limit();
+        for big_n in [256usize, 1024] {
+            let toml = format!(
+                r#"
+[experiment]
+name = "bench-serve-evloop"
+rounds = 5
+eval_every = 1000
+seed = 29
+
+[dataset]
+clients = {big_n}
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+"#
+            );
+            let spec = Spec::parse(&toml).unwrap();
+            let rounds = spec.experiment.rounds;
+            let wire_bytes = big_n as u64 * fedeff::compress::sparse_bits(16, d).div_ceil(8);
+            let name = format!("serve_net_evloop_{big_n}clients_gd_topk16_5rounds_d112");
+            b.run_case_wire(&name, rounds, big_n, d, wire_bytes, || {
+                let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+                let addr = server.local_addr().unwrap();
+                let rec = std::thread::scope(|scope| {
+                    let spec = &spec;
+                    let fleet = scope.spawn(move || run_fleet(&addr, spec));
+                    let rec = server.serve(spec, &mut |_| {}).unwrap();
+                    fleet.join().unwrap().unwrap();
+                    rec
+                });
+                black_box(rec);
+            });
+        }
     }
 
     // ---- batched logreg oracle: per-client calls vs one blocked sweep --

@@ -1,8 +1,8 @@
 //! CI serve-smoke (DESIGN.md §Wire): run one spec twice — over the
-//! networked coordinator with a 256-client socket fleet, and through
-//! the in-process fused driver — and exit non-zero unless every eval
-//! round matches **bit for bit** (loss raw bits, booked `bits_up` /
-//! `bits_down`, comm cost).
+//! event-driven networked coordinator with a 1024-client socket fleet,
+//! and through the in-process fused driver — and exit non-zero unless
+//! every eval round matches **bit for bit** (loss raw bits, booked
+//! `bits_up` / `bits_down`, comm cost).
 //!
 //! Uses a Unix domain socket where available (the CI path), TCP
 //! loopback elsewhere. Run with:
@@ -22,7 +22,7 @@ eval_every = 10
 seed = 2024
 
 [dataset]
-clients = 256
+clients = 1024
 
 [algorithm]
 kind = "gd"
@@ -36,6 +36,14 @@ k = 16
 fn main() -> anyhow::Result<()> {
     let spec = Spec::parse(SPEC)?;
     let n = spec.dataset.clients;
+
+    // a 1024-client fleet in one process needs ~3 fds per client
+    // (server side + the client Conn's cloned reader/writer pair);
+    // CI runners often default the soft limit to 1024
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    if limit < 3 * n as u64 + 64 {
+        anyhow::bail!("fd soft limit {limit} too low for a {n}-client fleet");
+    }
 
     let sock_path = std::env::temp_dir().join(format!("fedeff-smoke-{}.sock", std::process::id()));
     let bind_addr = if cfg!(unix) {

@@ -699,7 +699,9 @@ impl Driver {
                 };
                 match (pool, transport) {
                     (Some(pool), _) => pool.fused_dispatch(&cohort, groups, &mut fill),
-                    (None, Some(tr)) => tr.fused_dispatch(&cohort, groups, &mut fill)?,
+                    (None, Some(tr)) => {
+                        tr.fused_dispatch(&cohort, groups, fused_channels, &mut fill)?
+                    }
                     (None, None) => unreachable!("fused rounds need an execution substrate"),
                 }
             }

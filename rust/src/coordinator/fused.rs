@@ -32,10 +32,10 @@
 
 use std::cell::UnsafeCell;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::{PoolInput, WorkerOut};
-use crate::compress::{client_rng, Compressor};
+use crate::compress::{client_rng, Compressor, SparseVec};
 use crate::oracle::Oracle;
 use crate::vecmath as vm;
 
@@ -316,9 +316,187 @@ pub(crate) fn run_chunk<O: Oracle>(
     Ok(())
 }
 
+/// Arrival-order staging for one fused round's uplink messages — the
+/// piece that lets a transport decouple *when* a message arrives from
+/// *where* it lands in the deterministic merge.
+///
+/// The [`super::FusedUplink`] contract fixes the visit order (cohort
+/// order, channels ascending) because that is the serial reference
+/// path's scatter sequence; but scatter-adds commute only in that fixed
+/// order, not in arrival order. So an event-driven transport decodes
+/// each frame the moment it is complete into its `(cohort position,
+/// channel)` slot here — O(k) sparse pairs plus the quoted wire bits —
+/// and once the round is [`StagedUplink::is_complete`], [`commit`]
+/// replays the slots in contract order. Decode work happens on arrival
+/// (tail clients overlap with early decoders); the merge stays
+/// bit-for-bit identical to the in-process run.
+///
+/// Slot buffers persist across rounds (the reusable-buffer idiom);
+/// `begin_round` only resets occupancy.
+///
+/// [`commit`]: StagedUplink::commit
+#[derive(Default)]
+pub(crate) struct StagedUplink {
+    channels: usize,
+    cohort_len: usize,
+    /// client id → cohort position + 1; 0 = not in this round's cohort.
+    pos: Vec<u32>,
+    slots: Vec<StagedSlot>,
+    filled: usize,
+}
+
+#[derive(Default)]
+struct StagedSlot {
+    sv: SparseVec,
+    bits: u64,
+    full: bool,
+}
+
+impl StagedUplink {
+    /// Reset occupancy for a round of `cohort` over `channels` uplink
+    /// messages per client, in a fleet of `n` client ids.
+    pub(crate) fn begin_round(&mut self, cohort: &[usize], channels: usize, n: usize) {
+        self.channels = channels;
+        self.cohort_len = cohort.len();
+        self.filled = 0;
+        self.pos.clear();
+        self.pos.resize(n, 0);
+        for (p, &c) in cohort.iter().enumerate() {
+            self.pos[c] = p as u32 + 1;
+        }
+        let want = cohort.len() * channels;
+        if self.slots.len() < want {
+            self.slots.resize_with(want, StagedSlot::default);
+        }
+        for s in self.slots.iter_mut().take(want) {
+            s.full = false;
+        }
+    }
+
+    /// Uplink messages per client this round.
+    pub(crate) fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// This round's cohort position of `client`, if it has one.
+    pub(crate) fn cohort_pos(&self, client: usize) -> Option<usize> {
+        match self.pos.get(client) {
+            Some(&p) if p > 0 => Some(p as usize - 1),
+            _ => None,
+        }
+    }
+
+    /// Whether every channel of cohort position `pos` has arrived.
+    pub(crate) fn client_complete(&self, pos: usize) -> bool {
+        (0..self.channels).all(|ch| self.slots[pos * self.channels + ch].full)
+    }
+
+    /// Whether every (client, channel) slot of the round has arrived.
+    pub(crate) fn is_complete(&self) -> bool {
+        self.filled == self.cohort_len * self.channels
+    }
+
+    /// Stage one arrived message: `decode` fills the slot's
+    /// [`SparseVec`] in place (no intermediate copy) and returns the
+    /// message's wire bits. A second message for an occupied slot is a
+    /// protocol error.
+    pub(crate) fn stage_with(
+        &mut self,
+        pos: usize,
+        ch: usize,
+        decode: &mut dyn FnMut(&mut SparseVec) -> Result<u64>,
+    ) -> Result<()> {
+        ensure!(ch < self.channels, "channel {ch} out of range ({} channels)", self.channels);
+        let slot = &mut self.slots[pos * self.channels + ch];
+        ensure!(!slot.full, "duplicate message for channel {ch}");
+        slot.bits = decode(&mut slot.sv)?;
+        slot.full = true;
+        self.filled += 1;
+        Ok(())
+    }
+
+    /// Replay the completed round in contract order: cohort order,
+    /// channels ascending within a client.
+    pub(crate) fn commit(
+        &self,
+        cohort: &[usize],
+        visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
+    ) -> Result<()> {
+        ensure!(
+            self.is_complete() && cohort.len() == self.cohort_len,
+            "committing an incomplete round ({}/{} messages staged)",
+            self.filled,
+            self.cohort_len * self.channels
+        );
+        for (p, &client) in cohort.iter().enumerate() {
+            for ch in 0..self.channels {
+                let s = &self.slots[p * self.channels + ch];
+                visit(client, ch, &s.sv.idx, &s.sv.val, s.bits)?;
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn staged_uplink_commits_in_cohort_order_regardless_of_arrival() {
+        let mut st = StagedUplink::default();
+        let cohort = [4usize, 1, 7];
+        st.begin_round(&cohort, 2, 9);
+        assert_eq!(st.channels(), 2);
+        assert_eq!(st.cohort_pos(4), Some(0));
+        assert_eq!(st.cohort_pos(7), Some(2));
+        assert_eq!(st.cohort_pos(0), None);
+        assert_eq!(st.cohort_pos(8), None);
+
+        // arrival order scrambled on purpose: (7, ch1), (1, *), (7,
+        // ch0), (4, *)
+        let arrivals = [(7usize, 1usize), (1, 0), (1, 1), (7, 0), (4, 1), (4, 0)];
+        for (i, &(client, ch)) in arrivals.iter().enumerate() {
+            assert!(!st.is_complete());
+            let pos = st.cohort_pos(client).unwrap();
+            st.stage_with(pos, ch, &mut |sv| {
+                sv.clear(16);
+                sv.push(client as u32, i as f32);
+                Ok(100 + i as u64)
+            })
+            .unwrap();
+        }
+        assert!(st.is_complete());
+        assert!((0..3).all(|p| st.client_complete(p)));
+
+        // a duplicate is loud
+        let e = st.stage_with(0, 1, &mut |_| Ok(0)).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+
+        let mut seen = Vec::new();
+        st.commit(&cohort, &mut |client, ch, idx, val, bits| {
+            assert_eq!(idx, [client as u32]);
+            let arrival = arrivals.iter().position(|&a| a == (client, ch)).unwrap();
+            assert_eq!(val, [arrival as f32]);
+            assert_eq!(bits, 100 + arrival as u64);
+            seen.push((client, ch));
+            Ok(())
+        })
+        .unwrap();
+        // contract order: cohort order, channels ascending
+        assert_eq!(seen, [(4, 0), (4, 1), (1, 0), (1, 1), (7, 0), (7, 1)]);
+
+        // shrinking rounds reuse slots without leaking stale occupancy
+        st.begin_round(&cohort[..1], 1, 9);
+        assert!(!st.is_complete());
+        assert_eq!(st.cohort_pos(1), None);
+        st.stage_with(0, 0, &mut |sv| {
+            sv.clear(16);
+            Ok(1)
+        })
+        .unwrap();
+        assert!(st.is_complete());
+    }
 
     #[test]
     fn client_rows_roundtrip_and_exclusive_access() {

@@ -205,19 +205,26 @@ pub fn default_pool_size() -> usize {
 /// channel, idx, val, wire_bits)` message **in cohort order, channels
 /// ascending within a client** — the serial reference path's scatter
 /// sequence, which is what makes any implementation bit-for-bit
-/// equivalent to the in-process driver. Implementations own their
-/// transport (sockets, frames, decode) but must preserve values exactly
-/// and report the same wire bits the compressor quoted (the codec
-/// invariant, DESIGN.md §Wire).
+/// equivalent to the in-process driver. Between the two phases an
+/// implementation may *collect* messages in any order it likes (the
+/// event-driven transport decodes frames on arrival, see
+/// [`fused::StagedUplink`]); only the visit order is part of the
+/// contract. Implementations own their transport (sockets, frames,
+/// decode) but must preserve values exactly and report the same wire
+/// bits the compressor quoted (the codec invariant, DESIGN.md §Wire).
 pub(crate) trait FusedUplink {
     /// Phase one: ship the round described by `fill` to every cohort
     /// client and start (or complete) their pipelines. `groups` carries
     /// the driver's hub-aligned shard hints; transports that do not
-    /// shard may ignore it.
+    /// shard may ignore it. `channels` is the per-client uplink message
+    /// count of this round's plan — dispatch-side knowledge of it lets
+    /// a transport size its arrival staging before the first frame
+    /// lands.
     fn fused_dispatch(
         &self,
         cohort: &[usize],
         groups: Option<&[usize]>,
+        channels: usize,
         fill: &mut dyn FnMut(&mut PoolInput),
     ) -> Result<()>;
 

@@ -22,6 +22,10 @@
 //!     in-process run bit for bit — see DESIGN.md §Wire. `--config`
 //!     routes a full TOML spec — dataset included — through the same
 //!     config path as `run`; the other flags override it.
+//!     `--max-clients N` caps how many connections the event loop will
+//!     track (extras are accepted and shed); `--metrics` adds one JSON
+//!     line per eval round with the live transport counters (connected
+//!     clients, socket bytes in/out, booked bits, virtual time).
 
 use std::path::PathBuf;
 
@@ -36,7 +40,8 @@ const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | run <config.toml>
               | list
               | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]
-                      [--listen ADDR | --join ADDR]   (ADDR = tcp:HOST:PORT | uds:PATH)>";
+                      [--listen ADDR | --join ADDR]   (ADDR = tcp:HOST:PORT | uds:PATH)
+                      [--max-clients N] [--metrics]>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -104,18 +109,22 @@ fn main() -> Result<()> {
             let algorithm = opt_val(&args, "--algorithm");
             let listen = opt_val(&args, "--listen");
             let join = opt_val(&args, "--join");
+            let max_clients = opt_val(&args, "--max-clients").and_then(|v| v.parse().ok());
+            let metrics = flag(&args, "--metrics");
             anyhow::ensure!(
                 listen.is_none() || join.is_none(),
                 "--listen and --join are mutually exclusive (one process per role)"
             );
-            serve(
-                config.as_deref(),
+            let opts = ServeCli {
                 clients,
                 rounds,
-                algorithm.as_deref(),
-                listen.as_deref(),
-                join.as_deref(),
-            )
+                algorithm: algorithm.as_deref(),
+                listen: listen.as_deref(),
+                join: join.as_deref(),
+                max_clients,
+                metrics,
+            };
+            serve(config.as_deref(), &opts)
         }
         _ => {
             eprintln!("{USAGE}");
@@ -217,14 +226,18 @@ fn run_spec(path: &str) -> Result<()> {
 /// networked coordinator and `--join` runs the matching client fleet
 /// ([`fedeff::wire::net`], DESIGN.md §Wire) — the networked run
 /// reproduces the in-process one bit for bit.
-fn serve(
-    config: Option<&str>,
+/// The `serve` subcommand's parsed flags.
+struct ServeCli<'a> {
     clients: Option<usize>,
     rounds: Option<usize>,
-    algorithm: Option<&str>,
-    listen: Option<&str>,
-    join: Option<&str>,
-) -> Result<()> {
+    algorithm: Option<&'a str>,
+    listen: Option<&'a str>,
+    join: Option<&'a str>,
+    max_clients: Option<usize>,
+    metrics: bool,
+}
+
+fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
     let mut spec = match config {
         Some(path) => fedeff::config::Spec::load(path)?,
         // flag-only serves keep their historical defaults via a tiny
@@ -233,20 +246,20 @@ fn serve(
             "[experiment]\nname = \"serve\"\nrounds = 100\n[algorithm]\nkind = \"gd\"",
         )?,
     };
-    if let Some(a) = algorithm {
+    if let Some(a) = cli.algorithm {
         spec.algorithm.kind = a.to_string();
     }
     // overrides flow through the spec so every role — in-process,
     // listening coordinator, joining fleet — resolves the identical
     // dataset and round plan from the same config path as `run`
-    if let Some(c) = clients {
+    if let Some(c) = cli.clients {
         spec.dataset.clients = c;
     }
-    if let Some(r) = rounds {
+    if let Some(r) = cli.rounds {
         spec.experiment.rounds = r;
     }
 
-    if let Some(addr) = join {
+    if let Some(addr) = cli.join {
         // client-fleet role: one simulated client per dataset client,
         // answering ROUND frames until the coordinator broadcasts DONE
         return fedeff::wire::net::run_fleet(addr, &spec);
@@ -258,15 +271,42 @@ fn serve(
             r.round, r.loss, r.bits_up, r.bits_down, r.comm_cost, r.vtime
         );
     };
+    // in-process runs have no sockets: the metrics line reports the
+    // simulated fleet size and zero wire bytes, with the same booked
+    // bits as a networked serve of this spec
+    let n_inproc = spec.dataset.clients;
+    let emit_metrics = move |r: &fedeff::metrics::RoundStat| {
+        println!(
+            "{{\"metrics\":{{\"round\":{},\"clients\":{n_inproc},\"bytes_in\":0,\
+             \"bytes_out\":0,\"bits_up\":{},\"bits_down\":{},\"vtime\":{}}}}}",
+            r.round, r.bits_up, r.bits_down, r.vtime
+        );
+    };
 
-    if let Some(addr) = listen {
-        let server = fedeff::wire::net::NetServer::bind(addr)?;
+    if let Some(addr) = cli.listen {
+        let mut server = fedeff::wire::net::NetServer::bind(addr)?;
+        server.max_clients = cli.max_clients;
         eprintln!(
             "[fedeff] serving {} clients on {} (join with: fedeff serve --join {1} ...)",
             spec.dataset.clients,
             server.local_addr()?
         );
-        let rec = server.serve(&spec, &mut |r| emit(r))?;
+        // the metrics line reads the transport's live counters at each
+        // eval round — same thread as the event loop, so the snapshot
+        // is exact for everything booked up to this round
+        let srv = &server;
+        let metrics = cli.metrics;
+        let rec = server.serve(&spec, &mut |r| {
+            emit(r);
+            if metrics {
+                let s = srv.stats();
+                println!(
+                    "{{\"metrics\":{{\"round\":{},\"clients\":{},\"bytes_in\":{},\
+                     \"bytes_out\":{},\"bits_up\":{},\"bits_down\":{},\"vtime\":{}}}}}",
+                    r.round, s.connected, s.bytes_in, s.bytes_out, r.bits_up, r.bits_down, r.vtime
+                );
+            }
+        })?;
         eprintln!(
             "[fedeff] networked run complete: final loss {:.6}, {} bits up",
             rec.last().map(|r| r.loss).unwrap_or(f32::NAN),
@@ -293,6 +333,9 @@ fn serve(
         let rec = driver.run_scenario_parallel(alg.as_mut(), &oracle, &scen, &x0, &opts)?;
         for r in &rec.rounds {
             emit(r);
+            if cli.metrics {
+                emit_metrics(r);
+            }
         }
         if let Some(st) = rec.scenario {
             println!(
@@ -301,7 +344,12 @@ fn serve(
             );
         }
     } else {
-        let _rec = driver.run_parallel_streaming(alg.as_mut(), &oracle, &x0, &opts, emit)?;
+        let _rec = driver.run_parallel_streaming(alg.as_mut(), &oracle, &x0, &opts, |r| {
+            emit(r);
+            if cli.metrics {
+                emit_metrics(r);
+            }
+        })?;
     }
     Ok(())
 }

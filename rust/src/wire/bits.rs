@@ -113,6 +113,28 @@ impl<'a> BitReader<'a> {
     pub fn read_f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.read(32)? as u32))
     }
+
+    /// Bits consumed so far (pad included once read).
+    pub fn bit_pos(&self) -> u64 {
+        self.byte as u64 * 8 - self.avail as u64
+    }
+
+    /// Consume the rest of the stream, requiring it to be nothing but
+    /// the final byte's zero pad (< 8 bits, all zero). Decoders that
+    /// borrow a frame body straight out of a connection buffer call
+    /// this after the last field: it turns "trailing garbage after a
+    /// well-formed prefix" into a loud error instead of silently
+    /// accepting a longer-than-quoted message.
+    pub fn expect_zero_pad(&mut self) -> Result<()> {
+        let total = self.buf.len() as u64 * 8;
+        let rem = total - self.bit_pos();
+        anyhow::ensure!(rem < 8, "{rem} unread bits where only a byte-alignment pad may remain");
+        if rem > 0 {
+            let pad = self.read(rem as u32)?;
+            anyhow::ensure!(pad == 0, "nonzero pad bits 0b{pad:b} in the final byte");
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +196,31 @@ mod tests {
         assert!(r.read(64).is_err());
         let mut r2 = BitReader::new(&[]);
         assert!(r2.read(1).is_err());
+    }
+
+    #[test]
+    fn zero_pad_check_accepts_pads_and_rejects_garbage() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        let bytes = w.finish().to_vec();
+        let mut r = BitReader::new(&bytes);
+        r.read(3).unwrap();
+        r.expect_zero_pad().unwrap();
+
+        // an exactly byte-aligned stream has a zero-width pad
+        let mut r = BitReader::new(&[0xAB]);
+        r.read(8).unwrap();
+        r.expect_zero_pad().unwrap();
+
+        // a full unread byte is trailing garbage, not a pad
+        let mut r = BitReader::new(&[0xAB, 0x00]);
+        r.read(3).unwrap();
+        assert!(r.expect_zero_pad().is_err());
+
+        // nonzero pad bits are rejected
+        let mut r = BitReader::new(&[0b1000_0101]);
+        r.read(3).unwrap();
+        assert!(r.expect_zero_pad().is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! [`sparse_bits`]: crate::compress::sparse_bits
 //! [`Qsgd::compress`]: crate::compress::quantize::Qsgd
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::bits::{BitReader, BitWriter};
 use crate::compress::{permk::PermK, SparseVec};
@@ -45,6 +45,73 @@ pub fn idx_width(d: usize) -> u32 {
 /// `max(1, ceil(log2(2s+1)))` bits — the width `Qsgd::compress` quotes.
 pub fn qsgd_entry_width(levels: u32) -> u32 {
     (32 - (2 * levels).leading_zeros().min(31)).max(1)
+}
+
+/// MSG body layouts of the `wire::net` frame grammar. The layout byte
+/// travels in every ROUND (negotiated) and MSG (echoed) frame; it picks
+/// which codec above packs/unpacks the body.
+pub const LAYOUT_SPARSE: u8 = 0;
+pub const LAYOUT_MASKED_RAW: u8 = 1;
+pub const LAYOUT_MASKED_SPARSE: u8 = 2;
+
+/// Exact bit cost of a MSG body: the number the client's compressor
+/// quoted and the [`crate::coordinator::CommLedger`] books — recomputed
+/// server-side from the frame header alone, so a peer cannot lie about
+/// its own size.
+pub fn wire_body_bits(layout: u8, k: usize, dim: usize, sup_len: usize) -> Result<u64> {
+    Ok(match layout {
+        LAYOUT_SPARSE => {
+            ensure!(k >= 1 && k <= dim, "sparse payload of {k} pairs over dim {dim}");
+            crate::compress::sparse_bits(k, dim)
+        }
+        LAYOUT_MASKED_RAW => {
+            ensure!(
+                k == sup_len && k >= 1,
+                "masked raw payload must cover the support exactly ({k} != {sup_len})"
+            );
+            32 * k as u64
+        }
+        LAYOUT_MASKED_SPARSE => {
+            ensure!(
+                k >= 1 && k <= sup_len,
+                "masked sparse payload of {k} pairs over a support of {sup_len}"
+            );
+            crate::compress::sparse_bits(k, sup_len)
+        }
+        other => bail!("unknown wire layout {other}"),
+    })
+}
+
+/// Decode one MSG body — borrowed straight out of a connection's
+/// receive buffer, no per-frame copy — into `sv` (global indices) and
+/// return its exact wire bits. The body must be exactly
+/// `ceil(bits / 8)` bytes and its final-byte pad must be zero: trailing
+/// garbage after a well-formed prefix is a protocol error, not free
+/// riding.
+pub fn decode_wire_body(
+    layout: u8,
+    k: usize,
+    body: &[u8],
+    dim: usize,
+    sup: &[u32],
+    sv: &mut SparseVec,
+) -> Result<u64> {
+    let bits = wire_body_bits(layout, k, dim, sup.len())?;
+    ensure!(
+        body.len() as u64 == bits.div_ceil(8),
+        "MSG body is {} bytes; layout {layout} with {k} pairs packs {bits} bits ({} bytes)",
+        body.len(),
+        bits.div_ceil(8)
+    );
+    let mut r = BitReader::new(body);
+    match layout {
+        LAYOUT_SPARSE => decode_sparse(&mut r, dim, k, sv)?,
+        LAYOUT_MASKED_RAW => decode_masked_raw(&mut r, dim, sup, sv)?,
+        LAYOUT_MASKED_SPARSE => decode_masked_sparse(&mut r, dim, sup, k, sv)?,
+        _ => unreachable!("layout validated by wire_body_bits"),
+    }
+    r.expect_zero_pad()?;
+    Ok(bits)
 }
 
 /// Encode a dense f32 run at 32 bits per entry.

@@ -1,0 +1,337 @@
+//! Readiness multiplexing for the networked coordinator: a minimal,
+//! std-only `poll(2)` wrapper (DESIGN.md §Wire).
+//!
+//! The event-driven server in [`super::net`] needs exactly three things
+//! from the OS: "which of these sockets can make progress", "wake me no
+//! later than this deadline", and a listener whose address can be
+//! rebound immediately by the next test run. None of that justifies a
+//! dependency — `poll(2)` is POSIX, its ABI is three integers and a
+//! flat array, and the crate policy (ROADMAP) is std-only. [`Poller`]
+//! owns one reusable descriptor array: callers re-register the sockets
+//! they care about each lap (`clear` + `push`), `wait` blocks until
+//! readiness or timeout, and `readiness(slot)` reports the i-th pushed
+//! descriptor's state. Registration order is the caller's own index
+//! space — no opaque tokens.
+//!
+//! On non-Unix hosts there is no `poll`; the fallback `wait` sleeps
+//! briefly and reports every registered descriptor ready per its
+//! interest. That is *spurious* readiness, which is safe — every socket
+//! the server registers is non-blocking, so a wrong "ready" costs one
+//! `WouldBlock` syscall, degrading the event loop to a slow poll loop
+//! rather than breaking it.
+
+use std::io;
+use std::time::Duration;
+
+/// Raw descriptor handle registered with a [`Poller`]. An alias for the
+/// platform `RawFd` on Unix; a placeholder integer elsewhere (the
+/// fallback poller never dereferences it).
+#[cfg(unix)]
+pub type RawFd = std::os::unix::io::RawFd;
+#[cfg(not(unix))]
+pub type RawFd = i32;
+
+/// What a registered descriptor waits for.
+#[derive(Clone, Copy, Default)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+/// What the kernel reported for one registered descriptor.
+#[derive(Clone, Copy, Default)]
+pub struct Readiness {
+    pub readable: bool,
+    pub writable: bool,
+    /// Error, hangup, or invalid descriptor — the owner should read it
+    /// to observe the actual error/EOF and retire the connection.
+    pub closed: bool,
+}
+
+#[cfg(unix)]
+mod sys {
+    /// `struct pollfd` — identical layout on every POSIX platform.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// `nfds_t`: `unsigned long` on Linux/glibc, `unsigned int` on the
+    /// BSD family.
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = u32;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    }
+}
+
+/// A reusable `poll(2)` descriptor set. `clear` + `push` rebuild the
+/// set each event-loop lap (registration is just a Vec write — no
+/// kernel state to keep in sync), `wait` blocks, `readiness(i)` reads
+/// the i-th pushed descriptor's result.
+#[derive(Default)]
+pub struct Poller {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+    #[cfg(not(unix))]
+    interests: Vec<Interest>,
+}
+
+impl Poller {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(unix)]
+impl Poller {
+    pub fn clear(&mut self) {
+        self.fds.clear();
+    }
+
+    pub fn push(&mut self, fd: RawFd, interest: Interest) {
+        let mut events = 0i16;
+        if interest.read {
+            events |= sys::POLLIN;
+        }
+        if interest.write {
+            events |= sys::POLLOUT;
+        }
+        self.fds.push(sys::PollFd { fd, events, revents: 0 });
+    }
+
+    /// Block until at least one descriptor is ready or `timeout`
+    /// passes; returns how many are ready (0 on timeout). `EINTR`
+    /// retries with the full timeout — callers re-check their deadlines
+    /// every lap, so a signal can only stretch one wait, never a
+    /// deadline.
+    pub fn wait(&mut self, timeout: Duration) -> io::Result<usize> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        loop {
+            let rc = unsafe { sys::poll(self.fds.as_mut_ptr(), self.fds.len() as sys::NfdsT, ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+
+    pub fn readiness(&self, slot: usize) -> Readiness {
+        let r = self.fds[slot].revents;
+        Readiness {
+            readable: r & sys::POLLIN != 0,
+            writable: r & sys::POLLOUT != 0,
+            closed: r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+        }
+    }
+}
+
+#[cfg(not(unix))]
+impl Poller {
+    pub fn clear(&mut self) {
+        self.interests.clear();
+    }
+
+    pub fn push(&mut self, _fd: RawFd, interest: Interest) {
+        self.interests.push(interest);
+    }
+
+    /// Fallback without `poll`: nap briefly, then report everything
+    /// ready per its interest (spurious readiness — see module docs).
+    pub fn wait(&mut self, timeout: Duration) -> io::Result<usize> {
+        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+        Ok(self.interests.len())
+    }
+
+    pub fn readiness(&self, slot: usize) -> Readiness {
+        let i = self.interests[slot];
+        Readiness { readable: i.read, writable: i.write, closed: false }
+    }
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR` set *before* `bind`, so
+/// back-to-back test/bench runs reusing a fixed port don't flake on
+/// `TIME_WAIT` remnants (std's `TcpListener::bind` never sets it). The
+/// raw-socket path covers IPv4 on Unix with a 1024-deep accept backlog;
+/// anything else (IPv6, non-Unix, or a raw-path failure) falls back to
+/// the portable std bind.
+pub fn bind_tcp_reuseaddr(hostport: &str) -> io::Result<std::net::TcpListener> {
+    #[cfg(unix)]
+    {
+        use std::net::ToSocketAddrs;
+        let addrs: Vec<std::net::SocketAddr> = hostport.to_socket_addrs()?.collect();
+        for a in &addrs {
+            if let std::net::SocketAddr::V4(v4) = a {
+                if let Ok(l) = bind_v4_reuseaddr(v4) {
+                    return Ok(l);
+                }
+            }
+        }
+    }
+    std::net::TcpListener::bind(hostport)
+}
+
+#[cfg(unix)]
+fn bind_v4_reuseaddr(addr: &std::net::SocketAddrV4) -> io::Result<std::net::TcpListener> {
+    use std::os::unix::io::FromRawFd;
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    #[cfg(target_os = "linux")]
+    const SOL_SOCKET: i32 = 1;
+    #[cfg(target_os = "linux")]
+    const SO_REUSEADDR: i32 = 2;
+    #[cfg(not(target_os = "linux"))]
+    const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(not(target_os = "linux"))]
+    const SO_REUSEADDR: i32 = 0x0004;
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, val: *const u8, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const u8, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    let fd = unsafe { socket(AF_INET, SOCK_STREAM, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let fail = |fd: i32| -> io::Error {
+        let e = io::Error::last_os_error();
+        unsafe { close(fd) };
+        e
+    };
+    let one: i32 = 1;
+    if unsafe { setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, (&one as *const i32).cast(), 4) } < 0 {
+        return Err(fail(fd));
+    }
+    // struct sockaddr_in, hand-packed (16 bytes): family, big-endian
+    // port, big-endian address, 8 zero bytes of padding. BSD kernels
+    // read a leading length byte where Linux has a 16-bit family.
+    let mut sa = [0u8; 16];
+    #[cfg(target_os = "linux")]
+    sa[..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+    #[cfg(not(target_os = "linux"))]
+    {
+        sa[0] = 16;
+        sa[1] = AF_INET as u8;
+    }
+    sa[2..4].copy_from_slice(&addr.port().to_be_bytes());
+    sa[4..8].copy_from_slice(&addr.ip().octets());
+    if unsafe { bind(fd, sa.as_ptr(), 16) } < 0 {
+        return Err(fail(fd));
+    }
+    if unsafe { listen(fd, 1024) } < 0 {
+        return Err(fail(fd));
+    }
+    Ok(unsafe { std::net::TcpListener::from_raw_fd(fd) })
+}
+
+/// Raise this process's open-file soft limit toward its hard limit and
+/// return the resulting soft limit. A 1024-client serve needs roughly
+/// three descriptors per client when fleet and coordinator share one
+/// process (server socket + the client's read/write handle pair), which
+/// blows straight through the common 1024 default — tests and the
+/// serve-smoke example call this first so the scaling story doesn't
+/// depend on shell `ulimit` incantations. Best-effort: on failure the
+/// current limit is returned unchanged (non-Unix: a large placeholder).
+pub fn raise_nofile_limit() -> u64 {
+    #[cfg(unix)]
+    {
+        #[repr(C)]
+        struct RLimit {
+            cur: u64,
+            max: u64,
+        }
+        #[cfg(target_os = "linux")]
+        const RLIMIT_NOFILE: i32 = 7;
+        #[cfg(not(target_os = "linux"))]
+        const RLIMIT_NOFILE: i32 = 8;
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+        }
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 0;
+        }
+        if lim.cur >= lim.max {
+            return lim.cur;
+        }
+        // macOS rejects NOFILE soft limits above OPEN_MAX even when the
+        // reported hard limit is RLIM_INFINITY; step down once
+        for cur in [lim.max, lim.max.min(10_240)] {
+            let want = RLimit { cur, max: lim.max };
+            if unsafe { setrlimit(RLIMIT_NOFILE, &want) } == 0 {
+                return cur;
+            }
+        }
+        lim.cur
+    }
+    #[cfg(not(unix))]
+    {
+        u64::MAX
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn poll_reports_written_bytes_readable() {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let mut tx = std::net::TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+
+        let mut p = Poller::new();
+        p.clear();
+        p.push(rx.as_raw_fd(), Interest { read: true, write: false });
+        // nothing written yet: a short wait times out with 0 ready
+        let n = p.wait(Duration::from_millis(10)).unwrap();
+        assert_eq!(n, 0, "unwritten socket must not be readable");
+
+        tx.write_all(b"ping").unwrap();
+        tx.flush().unwrap();
+        p.clear();
+        p.push(rx.as_raw_fd(), Interest { read: true, write: false });
+        let n = p.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(n, 1);
+        assert!(p.readiness(0).readable);
+        let mut buf = [0u8; 4];
+        rx.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn reuseaddr_listener_accepts_and_rebinds() {
+        let l = bind_tcp_reuseaddr("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let mut tx = std::net::TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        tx.write_all(b"ok").unwrap();
+        let mut buf = [0u8; 2];
+        rx.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ok");
+        // the whole point: the same port rebinds immediately
+        drop((tx, rx, l));
+        let again = bind_tcp_reuseaddr(&addr.to_string()).unwrap();
+        drop(again);
+    }
+}

@@ -9,8 +9,11 @@
 //! codec invariant), and [`net`] streams those bytes between a socket
 //! client fleet and the driver's fused O(k) merge — so a networked
 //! `fedeff serve --listen` run reproduces the in-process run bit for
-//! bit while sending real, countable bytes.
+//! bit while sending real, countable bytes. [`evloop`] is the std-only
+//! readiness substrate under [`net`]: a raw `poll(2)` wrapper plus the
+//! socket/rlimit syscalls the event loop needs, no async runtime.
 
 pub mod bits;
 pub mod codec;
+pub mod evloop;
 pub mod net;

@@ -1,22 +1,34 @@
 //! The networked coordinator: real bytes between a socket fleet and the
-//! fused O(k) merge (DESIGN.md §Wire).
+//! fused O(k) merge, served by a readiness-driven event loop
+//! (DESIGN.md §Wire).
 //!
 //! `fedeff serve --listen ADDR` binds a [`NetServer`] (TCP loopback or
 //! a Unix domain socket; addresses are `tcp:HOST:PORT` / `uds:PATH`),
 //! accepts one length-framed connection per dataset client, and drives
 //! the same [`crate::coordinator::driver::Driver`] round loop as an
-//! in-process run — with the client pipeline executing on the other
-//! end of the sockets. A [`NetTransport`] implements the driver's
-//! fused-uplink seam: it broadcasts each round's recipe (anchor, seed,
-//! scale, payload, mask support) as ROUND frames and then reads one MSG
-//! frame per (cohort client, channel) **in cohort order**, decoding the
-//! bit-packed body straight into the driver's sparse scatter
-//! ([`crate::algorithms::api::RoundCtx`]'s uplink replay) — the server
-//! never materializes a cohort·d dense staging buffer, and the booked
-//! bits come from the same formulas the compressors quote, so a
-//! networked run reproduces the in-process fused run **bit for bit**
-//! (losses, bits_up, bits_down; pinned by rust/tests/serve_net.rs and
-//! the serve-smoke CI job at 256 clients).
+//! in-process run — with the client pipeline executing on the other end
+//! of the sockets. A [`NetTransport`] implements the driver's
+//! fused-uplink seam over a single-threaded [`super::evloop`] event
+//! loop: every socket is non-blocking, each connection accumulates
+//! bytes in a compacting receive window (partial-frame reassembly),
+//! and complete MSG frames are decoded **on arrival** — whatever order
+//! the kernel delivers them — straight into per-`(client, channel)`
+//! staging slots (`StagedUplink`). Once the round is fully staged,
+//! the slots are committed to the driver **in cohort order, channels
+//! ascending**: the serial reference path's scatter sequence, which is
+//! what keeps a networked run bit-for-bit identical to the in-process
+//! fused run (losses, bits_up, bits_down, comm cost; pinned by
+//! rust/tests/serve_net.rs and the serve-smoke CI job at 1024 clients).
+//! Arrival order affects only *when* decode work happens; commit order
+//! is fixed by the contract.
+//!
+//! The ROUND broadcast is encoded **once** per round; the only
+//! per-client bytes are the 4 little-endian scale bytes, which travel
+//! as the middle segment of a 3-segment vectored write around the
+//! shared frame — the frame itself is never copied or patched per
+//! client. Writes drain through the event loop with explicit
+//! backpressure state (`Outgoing::sent`), so a client with a full
+//! socket buffer delays only its own frames.
 //!
 //! Frame layout (little-endian): `u32 len | u8 kind | payload`, where
 //! `len` counts the kind byte plus the payload and is capped at
@@ -25,31 +37,30 @@
 //! channel: round, channel, layout, pair count, bit-packed codec body,
 //! zero-padded to bytes), DONE (server→fleet shutdown). Malformed,
 //! truncated or oversized frames produce `anyhow` errors and a closed
-//! connection — never a panic, and never a hang (every socket carries a
-//! read timeout).
-//!
-//! Backpressure: the server reads MSG frames in cohort order with one
-//! bounded [`BufReader`]/[`BufWriter`] pair per connection; a client
-//! only ever has one round in flight (it cannot produce a second
-//! message until the next ROUND frame arrives), so per-connection
-//! memory is O(k) userspace plus the kernel socket buffers.
+//! connection — never a panic, and never a hang: every connection the
+//! round is waiting on carries a progress deadline, refreshed on every
+//! byte of socket progress, and a stalled client is evicted loudly (by
+//! name) when *its own* deadline lapses while every other connection
+//! keeps decoding.
 
 use std::cell::RefCell;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{self, BufReader, BufWriter, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::time::Duration;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::bits::{BitReader, BitWriter};
-use super::codec;
+use super::bits::BitWriter;
+use super::codec::{self, LAYOUT_MASKED_RAW, LAYOUT_MASKED_SPARSE, LAYOUT_SPARSE};
+use super::evloop;
 use crate::algorithms::build_algorithm;
 use crate::algorithms::RunOptions;
 use crate::compress::SparseVec;
 use crate::config::{build_driver, compressor_by_name, Spec};
-use crate::coordinator::fused::{run_chunk, FusedKit, FusedPayload};
+use crate::coordinator::fused::{run_chunk, FusedKit, FusedPayload, StagedUplink};
 use crate::coordinator::{FusedUplink, PoolInput, WorkerOut};
 use crate::data::synth::Heterogeneity;
 use crate::metrics::{RoundStat, RunRecord};
@@ -58,11 +69,15 @@ use crate::oracle::Oracle;
 
 /// Hard ceiling on one frame's size (kind byte + payload): 64 MiB.
 pub const MAX_FRAME: u32 = 1 << 26;
-/// Userspace buffer per connection half (the bounded backpressure
-/// window; everything beyond it waits in the kernel socket buffer).
+/// Userspace buffer per client-side connection half, and the server's
+/// per-`read` chunk (the bounded backpressure window; everything beyond
+/// it waits in the kernel socket buffer).
 const CONN_BUF: usize = 64 * 1024;
-/// Default socket read timeout — a peer that stops mid-frame errors
-/// out instead of hanging the round loop.
+/// Consumed-prefix size at which a receive window compacts (memmoves
+/// its live tail to the front).
+const COMPACT_AT: usize = 64 * 1024;
+/// Default progress deadline — a peer that stops mid-frame errors out
+/// instead of hanging the round loop.
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
 const KIND_HELLO: u8 = 1;
@@ -70,9 +85,8 @@ const KIND_ROUND: u8 = 2;
 const KIND_MSG: u8 = 3;
 const KIND_DONE: u8 = 4;
 
-const LAYOUT_SPARSE: u8 = 0;
-const LAYOUT_MASKED_RAW: u8 = 1;
-const LAYOUT_MASKED_SPARSE: u8 = 2;
+/// The complete DONE frame: `len=1 | kind` and no payload.
+const DONE_FRAME: [u8; 5] = [1, 0, 0, 0, KIND_DONE];
 
 const PAYLOAD_GRADIENT: u8 = 0;
 const PAYLOAD_LOCAL_SGD: u8 = 1;
@@ -105,10 +119,45 @@ impl Stream {
         }
         Ok(())
     }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb)?,
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Disable Nagle on TCP (frame latency beats batching here); a
+    /// no-op for domain sockets.
+    fn set_nodelay(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.set_nodelay(true);
+            }
+            #[cfg(unix)]
+            Stream::Unix(_) => {}
+        }
+    }
+
+    #[cfg(unix)]
+    fn raw_fd(&self) -> evloop::RawFd {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            Stream::Unix(s) => s.as_raw_fd(),
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn raw_fd(&self) -> evloop::RawFd {
+        0
+    }
 }
 
 impl Read for Stream {
-    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
         match self {
             Stream::Tcp(s) => s.read(buf),
             #[cfg(unix)]
@@ -118,7 +167,7 @@ impl Read for Stream {
 }
 
 impl Write for Stream {
-    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         match self {
             Stream::Tcp(s) => s.write(buf),
             #[cfg(unix)]
@@ -126,7 +175,15 @@ impl Write for Stream {
         }
     }
 
-    fn flush(&mut self) -> std::io::Result<()> {
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write_vectored(bufs),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write_vectored(bufs),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.flush(),
             #[cfg(unix)]
@@ -135,20 +192,21 @@ impl Write for Stream {
     }
 }
 
-/// A bound accept socket. `tcp:HOST:PORT` binds TCP (port 0 picks a
-/// free port — read the real one back from [`Listener::local_addr`]);
-/// `uds:PATH` binds a Unix domain socket (stale socket files are
-/// replaced).
+/// A bound accept socket. `tcp:HOST:PORT` binds TCP with `SO_REUSEADDR`
+/// (port 0 picks a free port — read the real one back from
+/// [`Listener::local_addr`]); `uds:PATH` binds a Unix domain socket
+/// (stale socket files are replaced, and the path is unlinked again
+/// when the listener drops).
 pub enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
-    Unix(UnixListener),
+    Unix(UnixListener, PathBuf),
 }
 
 impl Listener {
     pub fn bind(addr: &str) -> Result<Listener> {
         if let Some(hostport) = addr.strip_prefix("tcp:") {
-            let l = TcpListener::bind(hostport)
+            let l = evloop::bind_tcp_reuseaddr(hostport)
                 .with_context(|| format!("binding tcp listener on {hostport}"))?;
             return Ok(Listener::Tcp(l));
         }
@@ -158,7 +216,7 @@ impl Listener {
                 let _ = std::fs::remove_file(path);
                 let l = UnixListener::bind(path)
                     .with_context(|| format!("binding unix socket {path}"))?;
-                return Ok(Listener::Unix(l));
+                return Ok(Listener::Unix(l, PathBuf::from(path)));
             }
             #[cfg(not(unix))]
             bail!("uds: addresses need a Unix platform; use tcp:HOST:PORT");
@@ -172,20 +230,68 @@ impl Listener {
         Ok(match self {
             Listener::Tcp(l) => format!("tcp:{}", l.local_addr()?),
             #[cfg(unix)]
-            Listener::Unix(l) => {
-                let a = l.local_addr()?;
-                let p = a.as_pathname().context("unix listener has no pathname")?;
-                format!("uds:{}", p.display())
-            }
+            Listener::Unix(_, path) => format!("uds:{}", path.display()),
         })
     }
 
-    fn accept(&self) -> Result<Stream> {
-        Ok(match self {
-            Listener::Tcp(l) => Stream::Tcp(l.accept()?.0),
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
             #[cfg(unix)]
-            Listener::Unix(l) => Stream::Unix(l.accept()?.0),
-        })
+            Listener::Unix(l, _) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection if the queue is non-empty. Transient
+    /// accept failures (`WouldBlock`, `EINTR`, a peer that aborted
+    /// between readiness and accept) report "nothing to accept" — the
+    /// next readiness lap retries.
+    fn accept_nonblocking(&self) -> Result<Option<Stream>> {
+        let r = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match r {
+            Ok(s) => Ok(Some(s)),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::Interrupted
+                        | io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    #[cfg(unix)]
+    fn raw_fd(&self) -> evloop::RawFd {
+        use std::os::unix::io::AsRawFd;
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Unix(l, _) => l.as_raw_fd(),
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn raw_fd(&self) -> evloop::RawFd {
+        0
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        // socket-lifecycle hygiene: a dead server must not leave a
+        // stale socket file for the next bind to trip over
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
@@ -210,7 +316,7 @@ pub fn connect(addr: &str) -> Result<Stream> {
 /// [`connect`] with retries while the server is still binding/accepting
 /// (the fleet usually races the coordinator's startup).
 fn connect_retry(addr: &str, budget: Duration) -> Result<Stream> {
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     loop {
         match connect(addr) {
             Ok(s) => return Ok(s),
@@ -227,7 +333,9 @@ fn connect_retry(addr: &str, budget: Duration) -> Result<Stream> {
 // frames
 // ---------------------------------------------------------------------
 
-/// One connection: buffered reader/writer halves over cloned handles.
+/// One blocking client-side connection: buffered reader/writer halves
+/// over cloned handles. (The server side is non-blocking and uses
+/// [`RecvBuf`] instead.)
 struct Conn {
     r: BufReader<Stream>,
     w: BufWriter<Stream>,
@@ -267,6 +375,26 @@ fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<u8> {
     buf.resize(len as usize - 1, 0);
     r.read_exact(buf).context("reading frame payload")?;
     Ok(kind[0])
+}
+
+/// Inspect the head of a receive window for one complete frame without
+/// consuming it: `Ok(Some((kind, total_len)))` when `data[..total_len]`
+/// is a whole frame (payload at `data[5..total_len]`), `Ok(None)` when
+/// more bytes must arrive, and an error for frames that can never
+/// become valid (zero-length, oversized) — checked from the 4 header
+/// bytes alone, before any buffering commitment.
+fn peek_frame(data: &[u8]) -> Result<Option<(u8, usize)>> {
+    if data.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(data[..4].try_into().expect("4 bytes"));
+    ensure!(len >= 1, "zero-length frame");
+    ensure!(len <= MAX_FRAME, "oversized frame: {len} bytes (max {MAX_FRAME})");
+    let total = 4 + len as usize;
+    if data.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((data[4], total)))
 }
 
 /// Bounds-checked little-endian cursor over a frame payload.
@@ -324,7 +452,7 @@ impl<'a> Cur<'a> {
 
 // ---------------------------------------------------------------------
 // shared spec plumbing (the config path `run`, `serve` and the fleet
-// all resolve identically — satellite fix for the serve dataset bug)
+// all resolve identically)
 // ---------------------------------------------------------------------
 
 /// Build the pure-Rust logreg oracle a spec describes — the exact
@@ -380,55 +508,189 @@ pub fn run_in_process(spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Resul
 }
 
 // ---------------------------------------------------------------------
-// server
+// server: event loop over non-blocking connections
 // ---------------------------------------------------------------------
 
-/// Decode scratch + per-round state behind [`NetTransport`]'s interior
-/// mutability (the driver's fused seam takes `&self`).
-struct NetState {
-    input: PoolInput,
-    sup: Vec<u32>,
-    round: usize,
-    layout: u8,
-    frame: Vec<u8>,
-    body: Vec<u8>,
-    sv: SparseVec,
+/// Per-connection receive window: bytes land at the tail, complete
+/// frames are consumed from the head, and a partial frame simply stays
+/// buffered until its remaining bytes arrive (reassembly across any
+/// number of reads — a peer may trickle one byte at a time). The
+/// consumed prefix slides forward without copying until it outgrows
+/// [`COMPACT_AT`], then the live tail is compacted to the front; frame
+/// payloads are decoded by *borrowing* straight out of this buffer, so
+/// the steady-state round loop does no per-frame allocation at all.
+#[derive(Default)]
+struct RecvBuf {
+    buf: Vec<u8>,
+    start: usize,
 }
 
-/// The driver-facing side of an accepted fleet: implements the fused
-/// uplink seam over one framed connection per client.
-pub struct NetTransport {
-    conns: RefCell<Vec<Conn>>,
-    dim: usize,
-    has_comp: bool,
-    st: RefCell<NetState>,
-}
+impl RecvBuf {
+    fn data(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
 
-impl NetTransport {
-    /// Broadcast DONE and flush — the fleet's clean-shutdown signal.
-    pub fn shutdown(&self) -> Result<()> {
-        let mut conns = self.conns.borrow_mut();
-        for c in conns.iter_mut() {
-            write_frame(&mut c.w, KIND_DONE, &[])?;
-            c.w.flush()?;
+    fn is_empty(&self) -> bool {
+        self.start == self.buf.len()
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.start += n;
+        debug_assert!(self.start <= self.buf.len());
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= COMPACT_AT {
+            self.buf.drain(..self.start);
+            self.start = 0;
         }
-        Ok(())
+    }
+
+    /// One non-blocking `read` of up to [`CONN_BUF`] bytes into the
+    /// tail; returns the byte count (0 = EOF) or the raw I/O error.
+    fn fill(&mut self, stream: &mut Stream) -> io::Result<usize> {
+        let len = self.buf.len();
+        self.buf.resize(len + CONN_BUF, 0);
+        match stream.read(&mut self.buf[len..]) {
+            Ok(n) => {
+                self.buf.truncate(len + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.buf.truncate(len);
+                Err(e)
+            }
+        }
     }
 }
 
-impl FusedUplink for NetTransport {
+/// A broadcast frame draining through the event loop; `sent` is the
+/// write-backpressure cursor (bytes already accepted by the kernel).
+enum Outgoing {
+    Round { sent: usize },
+    Done { sent: usize },
+}
+
+/// One accepted (post-HELLO) connection in the event loop.
+struct EvConn {
+    stream: Stream,
+    rbuf: RecvBuf,
+    /// This client's 4 little-endian scale bytes — the middle segment
+    /// of its vectored ROUND write, in place of the shared frame's
+    /// zeroed hole.
+    scale: [u8; 4],
+    out: Option<Outgoing>,
+    /// Progress deadline: refreshed on every byte read or written.
+    /// Consulted only while the round is actually waiting on this
+    /// connection.
+    deadline: Instant,
+    /// False once EOF or a hard I/O error was observed.
+    open: bool,
+}
+
+/// Live serve counters, readable via [`NetServer::stats`] (the
+/// `--metrics` JSON line and the adversarial tests' progress probes).
+#[derive(Clone, Default)]
+pub struct ServeStats {
+    /// Bytes read off client sockets (frames and fragments alike).
+    pub bytes_in: u64,
+    /// Bytes written to client sockets (ROUND broadcasts + DONE).
+    pub bytes_out: u64,
+    /// MSG frames decoded and staged.
+    pub frames_in: u64,
+    /// ROUND frames enqueued (rounds × cohort size).
+    pub rounds_broadcast: u64,
+    /// Connections that completed HELLO and are still open.
+    pub connected: usize,
+    /// Pre-HELLO connections evicted on their idle deadline.
+    pub evicted: u64,
+    /// Pre-HELLO connections that hung up on their own (churn).
+    pub churned: u64,
+    /// Connections shed: beyond `--max-clients`, or arriving after the
+    /// fleet was already complete.
+    pub rejected: u64,
+}
+
+/// What one [`pump`] call runs the event loop for.
+#[derive(Clone, Copy, PartialEq)]
+enum Until {
+    /// One zero-timeout lap: start whatever I/O is ready, never block.
+    Opportunistic,
+    /// Every queued broadcast frame fully written.
+    WritesFlushed,
+    /// The dispatched round fully staged (writes drain on the way).
+    StagingComplete,
+}
+
+/// Copyable slice of the round context MSG validation echoes against.
+#[derive(Clone, Copy)]
+struct RoundMeta {
+    round: usize,
+    layout: u8,
+}
+
+/// Mutable event-loop state behind [`NetTransport`]'s interior
+/// mutability (the driver's fused seam takes `&self`).
+struct TransportInner {
+    conns: Vec<EvConn>,
+    staging: StagedUplink,
+    poller: evloop::Poller,
+    /// Poll-slot → connection-id map, rebuilt each lap (slot 0 is the
+    /// listener).
+    pslots: Vec<usize>,
+    /// The round's shared ROUND frame (header + body), encoded once;
+    /// per-client writes splice each connection's scale bytes over the
+    /// hole at `scale_off`.
+    round_frame: Vec<u8>,
+    scale_off: usize,
+    round: usize,
+    layout: u8,
+    sup: Vec<u32>,
+    input: PoolInput,
+}
+
+/// The driver-facing side of an accepted fleet: implements the fused
+/// uplink seam over the event loop — arrival-order decode into
+/// `StagedUplink`, cohort-order commit.
+pub struct NetTransport<'a> {
+    srv: &'a NetServer,
+    dim: usize,
+    has_comp: bool,
+    inner: RefCell<TransportInner>,
+}
+
+impl NetTransport<'_> {
+    /// Broadcast DONE to every open connection and drain — the fleet's
+    /// clean-shutdown signal.
+    pub fn shutdown(&self) -> Result<()> {
+        let mut guard = self.inner.borrow_mut();
+        let inner = &mut *guard;
+        let now = Instant::now();
+        for c in inner.conns.iter_mut() {
+            if c.open {
+                c.out = Some(Outgoing::Done { sent: 0 });
+                c.deadline = now + self.srv.timeout;
+            }
+        }
+        pump(self.srv, inner, self.dim, Until::WritesFlushed).context("broadcasting DONE")
+    }
+}
+
+impl FusedUplink for NetTransport<'_> {
     fn fused_dispatch(
         &self,
         cohort: &[usize],
         _groups: Option<&[usize]>,
+        channels: usize,
         fill: &mut dyn FnMut(&mut PoolInput),
     ) -> Result<()> {
-        let mut st = self.st.borrow_mut();
-        let st = &mut *st;
-        st.input.cohort.clear();
-        st.input.cohort.extend_from_slice(cohort);
-        fill(&mut st.input);
-        let inp = &st.input;
+        let mut guard = self.inner.borrow_mut();
+        let inner = &mut *guard;
+        let n = inner.conns.len();
+        inner.input.cohort.clear();
+        inner.input.cohort.extend_from_slice(cohort);
+        fill(&mut inner.input);
+        let inp = &inner.input;
         ensure!(inp.point.len() == self.dim, "round anchor has the wrong dimension");
         ensure!(inp.scales.len() == cohort.len(), "round scales do not cover the cohort");
         let layout = if inp.sup.is_empty() {
@@ -439,33 +701,39 @@ impl FusedUplink for NetTransport {
         } else {
             LAYOUT_MASKED_RAW
         };
-        st.layout = layout;
-        st.round = inp.round;
-        st.sup.clear();
-        st.sup.extend_from_slice(&inp.sup);
+        inner.layout = layout;
+        inner.round = inp.round;
+        inner.sup.clear();
+        inner.sup.extend_from_slice(&inp.sup);
+        inner.staging.begin_round(cohort, channels, n);
 
-        // one shared ROUND body; only the 4 scale bytes differ per client
-        let b = &mut st.body;
-        b.clear();
-        b.extend_from_slice(&u32::try_from(inp.round).context("round exceeds u32")?.to_le_bytes());
-        b.extend_from_slice(&inp.seed.to_le_bytes());
-        let scale_off = b.len();
-        b.extend_from_slice(&0f32.to_le_bytes());
-        b.push(layout);
+        // one shared ROUND frame per round — encoded once, never
+        // re-patched per client; the scale hole stays zeroed and each
+        // connection's 4 scale bytes are spliced in by the vectored
+        // write
+        let f = &mut inner.round_frame;
+        f.clear();
+        f.extend_from_slice(&[0u8; 4]); // length, patched below
+        f.push(KIND_ROUND);
+        f.extend_from_slice(&u32::try_from(inp.round).context("round exceeds u32")?.to_le_bytes());
+        f.extend_from_slice(&inp.seed.to_le_bytes());
+        let scale_off = f.len();
+        f.extend_from_slice(&0f32.to_le_bytes());
+        f.push(layout);
         match inp.payload {
-            FusedPayload::Gradient => b.push(PAYLOAD_GRADIENT),
+            FusedPayload::Gradient => f.push(PAYLOAD_GRADIENT),
             FusedPayload::LocalSgd { steps, lr, prox_mu } => {
-                b.push(PAYLOAD_LOCAL_SGD);
-                b.extend_from_slice(
+                f.push(PAYLOAD_LOCAL_SGD);
+                f.extend_from_slice(
                     &u32::try_from(steps).context("local steps exceed u32")?.to_le_bytes(),
                 );
-                b.extend_from_slice(&lr.to_le_bytes());
+                f.extend_from_slice(&lr.to_le_bytes());
                 match prox_mu {
                     Some(mu) => {
-                        b.push(1);
-                        b.extend_from_slice(&mu.to_le_bytes());
+                        f.push(1);
+                        f.extend_from_slice(&mu.to_le_bytes());
                     }
-                    None => b.push(0),
+                    None => f.push(0),
                 }
             }
             FusedPayload::Scaffold { .. } => bail!(
@@ -474,26 +742,63 @@ impl FusedUplink for NetTransport {
             ),
             FusedPayload::None => bail!("networked round dispatched without a payload recipe"),
         }
-        b.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        f.extend_from_slice(&(self.dim as u32).to_le_bytes());
         for &v in &inp.point {
-            b.extend_from_slice(&v.to_le_bytes());
+            f.extend_from_slice(&v.to_le_bytes());
         }
-        b.extend_from_slice(&(inp.sup.len() as u32).to_le_bytes());
+        f.extend_from_slice(&(inp.sup.len() as u32).to_le_bytes());
         for &j in &inp.sup {
-            b.extend_from_slice(&j.to_le_bytes());
+            f.extend_from_slice(&j.to_le_bytes());
         }
+        let len = f.len() as u64 - 4;
+        ensure!(len <= MAX_FRAME as u64, "ROUND frame of {len} bytes exceeds MAX_FRAME");
+        let len32 = (len as u32).to_le_bytes();
+        f[..4].copy_from_slice(&len32);
+        inner.scale_off = scale_off;
+        // broadcast-cost invariant: scale patching never changes the
+        // frame, so every client receives the same anchor payload the
+        // ledger prices — 32·d bits, `dense_bits(d)`, the unmasked
+        // uncompressed downlink charge
+        let anchor_bits = 32 * inp.point.len() as u64;
+        ensure!(
+            anchor_bits == crate::algorithms::dense_bits(inp.point.len()),
+            "ROUND anchor packs {anchor_bits} bits but the ledger books {}",
+            crate::algorithms::dense_bits(inp.point.len())
+        );
 
-        let mut conns = self.conns.borrow_mut();
+        let now = Instant::now();
         for (p, &client) in cohort.iter().enumerate() {
-            b[scale_off..scale_off + 4].copy_from_slice(&inp.scales[p].to_le_bytes());
-            let conn = conns
+            let c = inner
+                .conns
                 .get_mut(client)
                 .with_context(|| format!("cohort client {client} has no connection"))?;
-            write_frame(&mut conn.w, KIND_ROUND, b)
-                .with_context(|| format!("sending ROUND to client {client}"))?;
-            conn.w.flush().with_context(|| format!("flushing ROUND to client {client}"))?;
+            ensure!(
+                c.open,
+                "cohort client {client} disconnected in an earlier round; cannot dispatch \
+                 round {}",
+                inp.round
+            );
+            c.scale = inp.scales[p].to_le_bytes();
+            c.out = Some(Outgoing::Round { sent: 0 });
+            c.deadline = now + self.srv.timeout;
         }
-        Ok(())
+        self.srv.stat(|s| s.rounds_broadcast += cohort.len() as u64);
+
+        // adversarially early bytes (a peer answering before its ROUND
+        // even went out) may already sit in a receive window; surface
+        // them now so they fail loudly instead of idling untouched
+        {
+            let TransportInner { conns, staging, sup, round, layout, .. } = &mut *inner;
+            let meta = RoundMeta { round: *round, layout: *layout };
+            for (id, c) in conns.iter_mut().enumerate() {
+                if c.open && !c.rbuf.is_empty() {
+                    parse_msg_frames(self.srv, c, id, staging, meta, sup, self.dim)?;
+                }
+            }
+        }
+        // start the broadcast on whatever sockets are ready right now;
+        // the rest drains during the visit-phase event loop
+        pump(self.srv, inner, self.dim, Until::Opportunistic)
     }
 
     fn fused_visit(
@@ -502,87 +807,286 @@ impl FusedUplink for NetTransport {
         channels: usize,
         visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
     ) -> Result<()> {
-        let mut st = self.st.borrow_mut();
-        let st = &mut *st;
-        let mut conns = self.conns.borrow_mut();
-        for &client in cohort {
-            let conn = conns
-                .get_mut(client)
-                .with_context(|| format!("cohort client {client} has no connection"))?;
-            for ch in 0..channels {
-                let kind = read_frame(&mut conn.r, &mut st.frame)
-                    .with_context(|| format!("reading channel {ch} from client {client}"))?;
-                ensure!(kind == KIND_MSG, "client {client} sent frame kind {kind}, expected MSG");
-                let mut cur = Cur::new(&st.frame);
-                let round = cur.u32()? as usize;
-                let mch = cur.u8()? as usize;
-                let layout = cur.u8()?;
-                let k = cur.u32()? as usize;
-                let body = cur.rest();
-                ensure!(
-                    round == st.round && mch == ch && layout == st.layout,
-                    "client {client} answered (round {round}, ch {mch}, layout {layout}); \
-                     expected (round {}, ch {ch}, layout {})",
-                    st.round,
-                    st.layout
-                );
-                let bits = decode_msg_body(layout, k, body, self.dim, &st.sup, &mut st.sv)
-                    .with_context(|| format!("decoding client {client} channel {ch}"))?;
-                visit(client, ch, &st.sv.idx, &st.sv.val, bits)?;
-            }
-        }
-        Ok(())
+        let mut guard = self.inner.borrow_mut();
+        let inner = &mut *guard;
+        ensure!(
+            channels == inner.staging.channels(),
+            "visit expects {channels} channels but the dispatch staged {}",
+            inner.staging.channels()
+        );
+        pump(self.srv, inner, self.dim, Until::StagingComplete)?;
+        inner.staging.commit(cohort, visit)
     }
 }
 
-/// Decode one MSG body into `sv` (global indices) and return its exact
-/// wire bits — by construction the same number the client's compressor
-/// quoted, which is what the ledger books.
-fn decode_msg_body(
-    layout: u8,
-    k: usize,
-    body: &[u8],
-    dim: usize,
-    sup: &[u32],
-    sv: &mut SparseVec,
-) -> Result<u64> {
-    let bits = match layout {
-        LAYOUT_SPARSE => {
-            ensure!(k >= 1 && k <= dim, "sparse payload of {k} pairs over dim {dim}");
-            crate::compress::sparse_bits(k, dim)
+/// One call into the event loop: poll readiness over the listener and
+/// every open connection, then accept/read/decode/write whatever is
+/// ready, looping until the `until` condition holds. Deadlines are
+/// enforced *per connection* and only for connections the condition is
+/// actually waiting on — a stalled client is named and evicted when its
+/// own deadline lapses, while every other connection keeps reading,
+/// decoding and staging in the meantime.
+fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -> Result<()> {
+    let TransportInner {
+        conns,
+        staging,
+        poller,
+        pslots,
+        round_frame,
+        scale_off,
+        round,
+        layout,
+        sup,
+        ..
+    } = inner;
+    let meta = RoundMeta { round: *round, layout: *layout };
+    let scale_off = *scale_off;
+    loop {
+        let writes_pending = conns.iter().any(|c| c.open && c.out.is_some());
+        let done = match until {
+            Until::Opportunistic => false,
+            Until::WritesFlushed => !writes_pending,
+            Until::StagingComplete => !writes_pending && staging.is_complete(),
+        };
+        if done {
+            return Ok(());
         }
-        LAYOUT_MASKED_RAW => {
-            ensure!(
-                k == sup.len() && k >= 1,
-                "masked raw payload must cover the support exactly ({k} != {})",
-                sup.len()
-            );
-            32 * k as u64
+
+        // deadline sweep over the connections this call waits on
+        let now = Instant::now();
+        let mut next_deadline: Option<Instant> = None;
+        for (id, c) in conns.iter().enumerate() {
+            if !c.open {
+                continue;
+            }
+            let awaited = c.out.is_some()
+                || (until == Until::StagingComplete
+                    && staging.cohort_pos(id).is_some_and(|p| !staging.client_complete(p)));
+            if !awaited {
+                continue;
+            }
+            if now >= c.deadline {
+                bail!(
+                    "client {id} stalled: no socket progress within {:?} (round {}); evicting \
+                     it and aborting the round — all other connections kept their own deadlines",
+                    srv.timeout,
+                    meta.round
+                );
+            }
+            next_deadline = Some(next_deadline.map_or(c.deadline, |d| d.min(c.deadline)));
         }
-        LAYOUT_MASKED_SPARSE => {
-            ensure!(
-                k >= 1 && k <= sup.len(),
-                "masked sparse payload of {k} pairs over a support of {}",
-                sup.len()
-            );
-            crate::compress::sparse_bits(k, sup.len())
+
+        poller.clear();
+        pslots.clear();
+        poller.push(srv.listener.raw_fd(), evloop::Interest { read: true, write: false });
+        pslots.push(usize::MAX);
+        for (id, c) in conns.iter().enumerate() {
+            if !c.open {
+                continue;
+            }
+            let interest = evloop::Interest { read: true, write: c.out.is_some() };
+            poller.push(c.stream.raw_fd(), interest);
+            pslots.push(id);
         }
-        other => bail!("unknown wire layout {other}"),
-    };
-    ensure!(
-        body.len() as u64 == bits.div_ceil(8),
-        "MSG body is {} bytes; layout {layout} with {k} pairs packs {bits} bits ({} bytes)",
-        body.len(),
-        bits.div_ceil(8)
-    );
-    let mut r = BitReader::new(body);
-    match layout {
-        LAYOUT_SPARSE => codec::decode_sparse(&mut r, dim, k, sv)?,
-        LAYOUT_MASKED_RAW => codec::decode_masked_raw(&mut r, dim, sup, sv)?,
-        LAYOUT_MASKED_SPARSE => codec::decode_masked_sparse(&mut r, dim, sup, k, sv)?,
-        _ => unreachable!(),
+        let timeout = match until {
+            Until::Opportunistic => Duration::ZERO,
+            _ => next_deadline
+                .map_or(Duration::from_millis(100), |d| d.saturating_duration_since(now)),
+        };
+        poller.wait(timeout)?;
+
+        for (slot, &id) in pslots.iter().enumerate() {
+            let rd = poller.readiness(slot);
+            if !(rd.readable || rd.writable || rd.closed) {
+                continue;
+            }
+            if id == usize::MAX {
+                // the fleet is complete: late connections are churn,
+                // shed without touching the round
+                while let Some(s) = srv.listener.accept_nonblocking()? {
+                    drop(s);
+                    srv.stat(|st| st.rejected += 1);
+                }
+                continue;
+            }
+            let c = &mut conns[id];
+            if c.out.is_some() && (rd.writable || rd.closed) {
+                drain_conn_out(srv, c, id, round_frame, scale_off)?;
+            }
+            if rd.readable || rd.closed {
+                loop {
+                    match c.rbuf.fill(&mut c.stream) {
+                        Ok(0) => {
+                            c.open = false;
+                            srv.stat(|st| st.connected = st.connected.saturating_sub(1));
+                            break;
+                        }
+                        Ok(n) => {
+                            c.deadline = Instant::now() + srv.timeout;
+                            srv.stat(|st| st.bytes_in += n as u64);
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            let _ = e;
+                            c.open = false;
+                            srv.stat(|st| st.connected = st.connected.saturating_sub(1));
+                            break;
+                        }
+                    }
+                }
+                parse_msg_frames(srv, c, id, staging, meta, sup, dim)?;
+                if !c.open {
+                    let awaited = c.out.is_some()
+                        || staging.cohort_pos(id).is_some_and(|p| !staging.client_complete(p));
+                    ensure!(
+                        !awaited,
+                        "client {id} disconnected mid-round (round {}) with its work \
+                         outstanding; the server keeps serving the remaining connections",
+                        meta.round
+                    );
+                }
+            }
+        }
+        if until == Until::Opportunistic {
+            return Ok(());
+        }
     }
-    Ok(bits)
+}
+
+/// Drain a connection's queued broadcast frame as far as the kernel
+/// will take it right now. A ROUND goes out as a 3-segment vectored
+/// write — shared frame before the scale hole, this client's 4 scale
+/// bytes, shared frame after — so per-client cost is 4 bytes of state,
+/// not a frame copy.
+fn drain_conn_out(
+    srv: &NetServer,
+    c: &mut EvConn,
+    id: usize,
+    round_frame: &[u8],
+    scale_off: usize,
+) -> Result<()> {
+    let EvConn { stream, scale, out, deadline, open, .. } = c;
+    let round_parts: [&[u8]; 3] =
+        [&round_frame[..scale_off], &scale[..], &round_frame[scale_off + 4..]];
+    let done_parts: [&[u8]; 1] = [&DONE_FRAME];
+    debug_assert_eq!(
+        round_parts.iter().map(|p| p.len()).sum::<usize>(),
+        round_frame.len(),
+        "scale splice must preserve the frame length"
+    );
+    loop {
+        let (is_round, sent_now) = match &*out {
+            None => return Ok(()),
+            Some(Outgoing::Round { sent }) => (true, *sent),
+            Some(Outgoing::Done { sent }) => (false, *sent),
+        };
+        let parts: &[&[u8]] = if is_round { &round_parts } else { &done_parts };
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut iov = [IoSlice::new(&[]); 3];
+        let mut niov = 0usize;
+        let mut off = sent_now;
+        for p in parts {
+            if off >= p.len() {
+                off -= p.len();
+                continue;
+            }
+            iov[niov] = IoSlice::new(&p[off..]);
+            niov += 1;
+            off = 0;
+        }
+        let wrote = match stream.write_vectored(&iov[..niov]) {
+            Ok(0) => {
+                *open = false;
+                bail!("client {id} closed its socket mid-broadcast");
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                *open = false;
+                bail!("client {id} broadcast write failed: {e}");
+            }
+        };
+        srv.stat(|st| st.bytes_out += wrote as u64);
+        *deadline = Instant::now() + srv.timeout;
+        let new_sent = sent_now + wrote;
+        *out = if new_sent >= total {
+            None
+        } else if is_round {
+            Some(Outgoing::Round { sent: new_sent })
+        } else {
+            Some(Outgoing::Done { sent: new_sent })
+        };
+    }
+}
+
+/// Decode every complete MSG frame buffered on one connection into its
+/// staging slot — the arrival-order half of the deterministic merge.
+/// The bit-packed body is borrowed straight out of the receive window
+/// (no per-frame copy) and validated against the round context: round
+/// echo, channel range, negotiated layout, and the exact byte length
+/// the server-side bit formula dictates.
+fn parse_msg_frames(
+    srv: &NetServer,
+    c: &mut EvConn,
+    id: usize,
+    staging: &mut StagedUplink,
+    meta: RoundMeta,
+    sup: &[u32],
+    dim: usize,
+) -> Result<()> {
+    loop {
+        let flen = {
+            let data = c.rbuf.data();
+            let Some((kind, flen)) = peek_frame(data)? else { return Ok(()) };
+            ensure!(kind == KIND_MSG, "client {id} sent frame kind {kind}, expected MSG");
+            let payload = &data[5..flen];
+            let mut cur = Cur::new(payload);
+            let mround = cur.u32()? as usize;
+            let mch = cur.u8()? as usize;
+            let mlayout = cur.u8()?;
+            let k = cur.u32()? as usize;
+            let body = cur.rest();
+            let pos = staging
+                .cohort_pos(id)
+                .with_context(|| format!("client {id} sent an MSG outside its cohort round"))?;
+            ensure!(
+                mround == meta.round && mch < staging.channels() && mlayout == meta.layout,
+                "client {id} answered (round {mround}, ch {mch}, layout {mlayout}); expected \
+                 (round {}, {} channels, layout {})",
+                meta.round,
+                staging.channels(),
+                meta.layout
+            );
+            staging
+                .stage_with(pos, mch, &mut |sv| {
+                    codec::decode_wire_body(mlayout, k, body, dim, sup, sv)
+                })
+                .with_context(|| format!("decoding client {id} channel {mch}"))?;
+            flen
+        };
+        c.rbuf.consume(flen);
+        srv.stat(|st| st.frames_in += 1);
+    }
+}
+
+/// A pre-HELLO connection: accepted, polled, not yet part of the fleet.
+struct Pending {
+    stream: Stream,
+    rbuf: RecvBuf,
+    deadline: Instant,
+}
+
+/// What one readiness lap decided about a pending connection.
+enum HelloStep {
+    /// Frame still incomplete; keep waiting.
+    Wait,
+    /// Peer hung up before completing HELLO; quiet churn drop.
+    Dead,
+    /// Valid HELLO: join the fleet as `id`, consuming `flen` bytes
+    /// (any extra buffered bytes ride along into the event loop).
+    Join { id: usize, flen: usize },
 }
 
 /// A bound coordinator endpoint. [`NetServer::bind`] first (so tests
@@ -590,13 +1094,23 @@ fn decode_msg_body(
 /// [`NetServer::serve`] a spec against it.
 pub struct NetServer {
     listener: Listener,
-    /// Socket read timeout applied to every accepted connection.
+    /// Per-connection progress deadline (reads, writes, and the
+    /// pre-HELLO idle eviction all refresh against it).
     pub timeout: Duration,
+    /// Cap on concurrently tracked connections; extras are accepted
+    /// and immediately shed. `None` = uncapped.
+    pub max_clients: Option<usize>,
+    stats: RefCell<ServeStats>,
 }
 
 impl NetServer {
     pub fn bind(addr: &str) -> Result<NetServer> {
-        Ok(NetServer { listener: Listener::bind(addr)?, timeout: DEFAULT_TIMEOUT })
+        Ok(NetServer {
+            listener: Listener::bind(addr)?,
+            timeout: DEFAULT_TIMEOUT,
+            max_clients: None,
+            stats: RefCell::new(ServeStats::default()),
+        })
     }
 
     /// The canonical connect address (resolves `tcp:...:0`).
@@ -604,52 +1118,190 @@ impl NetServer {
         self.listener.local_addr()
     }
 
-    /// Accept HELLO handshakes until all `n` client slots are filled. A
-    /// malformed or duplicate HELLO aborts the serve — the coordinator
-    /// refuses to run a round over a broken fleet.
-    fn accept_fleet(&self, n: usize, dim: usize, has_comp: bool) -> Result<NetTransport> {
-        let mut slots: Vec<Option<Conn>> = Vec::new();
+    /// Snapshot of the live serve counters.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn stat(&self, f: impl FnOnce(&mut ServeStats)) {
+        f(&mut self.stats.borrow_mut());
+    }
+
+    /// Accept HELLO handshakes until all `n` client slots are filled,
+    /// multiplexing every pending connection: a peer may trickle its
+    /// HELLO byte by byte, a silent peer is evicted on its own idle
+    /// deadline without delaying anyone, and a malformed or duplicate
+    /// HELLO aborts the serve — the coordinator refuses to run a round
+    /// over a broken fleet. The whole accept phase also carries a
+    /// global no-progress deadline so a fleet that never completes
+    /// errors out instead of hanging.
+    fn accept_fleet(&self, n: usize, dim: usize, has_comp: bool) -> Result<NetTransport<'_>> {
+        let cap = self.max_clients.unwrap_or(usize::MAX);
+        ensure!(cap >= n, "--max-clients {cap} cannot host a fleet of {n}");
+        self.listener.set_nonblocking(true)?;
+        let mut slots: Vec<Option<(Stream, RecvBuf)>> = Vec::new();
         slots.resize_with(n, || None);
+        let mut pending: Vec<Option<Pending>> = Vec::new();
+        let mut poller = evloop::Poller::new();
         let mut joined = 0usize;
-        let mut buf = Vec::new();
+        let mut last_progress = Instant::now();
         while joined < n {
-            let mut conn = Conn::new(self.listener.accept()?, self.timeout)?;
-            let kind = read_frame(&mut conn.r, &mut buf).context("reading HELLO")?;
-            ensure!(kind == KIND_HELLO, "first frame must be HELLO, got kind {kind}");
-            let mut cur = Cur::new(&buf);
-            let id = cur.u32()? as usize;
-            let fleet = cur.u32()? as usize;
-            let hdim = cur.u32()? as usize;
-            cur.done()?;
-            ensure!(fleet == n, "client expects a fleet of {fleet}, server runs {n}");
-            ensure!(hdim == dim, "client expects dim {hdim}, server runs {dim}");
-            ensure!(id < n, "client id {id} out of range for a fleet of {n}");
-            ensure!(slots[id].is_none(), "client id {id} joined twice");
-            slots[id] = Some(conn);
-            joined += 1;
+            let now = Instant::now();
+            ensure!(
+                now < last_progress + self.timeout,
+                "timed out waiting for the fleet: {joined}/{n} clients joined within {:?}",
+                self.timeout
+            );
+            // evict pre-HELLO connections that sat silent past their
+            // own deadline — they never delay the fleet
+            for p in pending.iter_mut() {
+                if p.as_ref().is_some_and(|q| now >= q.deadline) {
+                    *p = None;
+                    self.stat(|s| s.evicted += 1);
+                }
+            }
+            pending.retain(|p| p.is_some());
+
+            poller.clear();
+            poller.push(self.listener.raw_fd(), evloop::Interest { read: true, write: false });
+            let mut wake = last_progress + self.timeout;
+            for p in pending.iter().flatten() {
+                poller.push(p.stream.raw_fd(), evloop::Interest { read: true, write: false });
+                wake = wake.min(p.deadline);
+            }
+            let registered = pending.len();
+            poller.wait(wake.saturating_duration_since(now))?;
+
+            if poller.readiness(0).readable {
+                while let Some(s) = self.listener.accept_nonblocking()? {
+                    if joined + pending.len() >= cap {
+                        drop(s);
+                        self.stat(|st| st.rejected += 1);
+                        continue;
+                    }
+                    s.set_nonblocking(true)?;
+                    s.set_nodelay();
+                    pending.push(Some(Pending {
+                        stream: s,
+                        rbuf: RecvBuf::default(),
+                        deadline: Instant::now() + self.timeout,
+                    }));
+                }
+            }
+
+            for i in 0..registered {
+                let rd = poller.readiness(1 + i);
+                if !(rd.readable || rd.closed) {
+                    continue;
+                }
+                let step = {
+                    let Some(p) = pending[i].as_mut() else { continue };
+                    let mut open = true;
+                    loop {
+                        match p.rbuf.fill(&mut p.stream) {
+                            Ok(0) => {
+                                open = false;
+                                break;
+                            }
+                            Ok(nb) => {
+                                p.deadline = Instant::now() + self.timeout;
+                                self.stat(|st| st.bytes_in += nb as u64);
+                            }
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                            Err(e) => {
+                                let _ = e;
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                    match peek_frame(p.rbuf.data()).context("reading HELLO")? {
+                        Some((kind, flen)) => {
+                            ensure!(
+                                kind == KIND_HELLO,
+                                "first frame must be HELLO, got kind {kind}"
+                            );
+                            let mut cur = Cur::new(&p.rbuf.data()[5..flen]);
+                            let id = cur.u32()? as usize;
+                            let fleet = cur.u32()? as usize;
+                            let hdim = cur.u32()? as usize;
+                            cur.done().context("reading HELLO")?;
+                            ensure!(
+                                fleet == n,
+                                "client expects a fleet of {fleet}, server runs {n}"
+                            );
+                            ensure!(hdim == dim, "client expects dim {hdim}, server runs {dim}");
+                            ensure!(id < n, "client id {id} out of range for a fleet of {n}");
+                            ensure!(slots[id].is_none(), "client id {id} joined twice");
+                            HelloStep::Join { id, flen }
+                        }
+                        None if !open => HelloStep::Dead,
+                        None => HelloStep::Wait,
+                    }
+                };
+                match step {
+                    HelloStep::Wait => {}
+                    HelloStep::Dead => {
+                        pending[i] = None;
+                        self.stat(|st| st.churned += 1);
+                    }
+                    HelloStep::Join { id, flen } => {
+                        let mut q = pending[i].take().expect("pending present");
+                        q.rbuf.consume(flen);
+                        slots[id] = Some((q.stream, q.rbuf));
+                        joined += 1;
+                        last_progress = Instant::now();
+                        self.stat(|st| st.connected += 1);
+                    }
+                }
+            }
+            pending.retain(|p| p.is_some());
         }
-        let conns: Vec<Conn> = slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+        // connections beyond the completed fleet are shed
+        self.stat(|st| st.rejected += pending.iter().flatten().count() as u64);
+        drop(pending);
+
+        let now = Instant::now();
+        let conns: Vec<EvConn> = slots
+            .into_iter()
+            .map(|s| {
+                let (stream, rbuf) = s.expect("all slots filled");
+                EvConn {
+                    stream,
+                    rbuf,
+                    scale: [0u8; 4],
+                    out: None,
+                    deadline: now + self.timeout,
+                    open: true,
+                }
+            })
+            .collect();
         Ok(NetTransport {
-            conns: RefCell::new(conns),
+            srv: self,
             dim,
             has_comp,
-            st: RefCell::new(NetState {
-                input: PoolInput::default(),
-                sup: Vec::new(),
+            inner: RefCell::new(TransportInner {
+                conns,
+                staging: StagedUplink::default(),
+                poller: evloop::Poller::new(),
+                pslots: Vec::new(),
+                round_frame: Vec::new(),
+                scale_off: 0,
                 round: 0,
                 layout: LAYOUT_SPARSE,
-                frame: Vec::new(),
-                body: Vec::new(),
-                sv: SparseVec::default(),
+                sup: Vec::new(),
+                input: PoolInput::default(),
             }),
         })
     }
 
     /// Drive a full networked run of `spec`: accept one connection per
-    /// dataset client, stream every round over the sockets, broadcast
-    /// DONE, and return the record — bit-for-bit the in-process fused
-    /// run of the same spec. `on_eval` fires at every eval round (the
-    /// JSON metrics line of `fedeff serve --listen`).
+    /// dataset client, stream every round over the sockets through the
+    /// event loop, broadcast DONE, and return the record — bit-for-bit
+    /// the in-process fused run of the same spec. `on_eval` fires at
+    /// every eval round (the JSON metrics line of `fedeff serve
+    /// --listen`).
     pub fn serve(&self, spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Result<RunRecord> {
         ensure!(
             spec.scenario.is_none(),
@@ -686,21 +1338,31 @@ impl NetServer {
 /// fork), all built from the same spec the server loaded, connecting to
 /// `addr` and answering ROUND frames until DONE.
 pub fn run_fleet(addr: &str, spec: &Spec) -> Result<()> {
+    let ids: Vec<usize> = (0..spec.dataset.clients).collect();
+    run_fleet_clients(addr, spec, &ids)
+}
+
+/// [`run_fleet`] restricted to a subset of client ids — the missing
+/// ids never connect, which is how the adversarial tests stand in for
+/// stalled or misbehaving fleet members while the rest of the fleet
+/// behaves normally.
+pub fn run_fleet_clients(addr: &str, spec: &Spec, clients: &[usize]) -> Result<()> {
     let oracle = fleet_oracle(spec)?;
     let n = spec.dataset.clients;
     let d = oracle.dim();
     let comp = leaf_compressor(spec);
+    for &c in clients {
+        ensure!(c < n, "fleet client id {c} out of range for {n} dataset clients");
+    }
     std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::with_capacity(n);
-        for c in 0..n {
+        let mut handles = Vec::with_capacity(clients.len());
+        for &c in clients {
             let oracle = &oracle;
             let comp = comp.clone();
-            handles.push(
-                scope.spawn(move || client_loop(addr, c, n, d, comp.as_ref(), oracle)),
-            );
+            handles.push(scope.spawn(move || client_loop(addr, c, n, d, comp.as_ref(), oracle)));
         }
         let mut first_err = None;
-        for (c, h) in handles.into_iter().enumerate() {
+        for (h, &c) in handles.into_iter().zip(clients) {
             let res = h.join().map_err(|_| anyhow::anyhow!("fleet client {c} panicked"));
             if let Err(e) = res.and_then(|r| r) {
                 first_err.get_or_insert(e);
@@ -727,6 +1389,7 @@ fn client_loop(
     oracle: &RustLogReg,
 ) -> Result<()> {
     let stream = connect_retry(addr, Duration::from_secs(10))?;
+    stream.set_nodelay();
     let mut conn = Conn::new(stream, DEFAULT_TIMEOUT)?;
     let mut hello = Vec::with_capacity(12);
     hello.extend_from_slice(&(client as u32).to_le_bytes());

@@ -9,30 +9,35 @@
 
 use std::io::Write;
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fedeff::config::Spec;
 use fedeff::metrics::RunRecord;
-use fedeff::wire::net::{run_fleet, run_in_process, NetServer};
+use fedeff::wire::net::{run_fleet, run_fleet_clients, run_in_process, NetServer};
+
+/// Serve `spec` on an already-bound server with an in-thread fleet,
+/// then run the same spec in-process; return both records.
+fn serve_pair(spec: &Spec, server: &NetServer) -> (RunRecord, RunRecord) {
+    let addr = server.local_addr().expect("resolved address");
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server.serve(spec, &mut |_| {}).expect("networked serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    let inproc = run_in_process(spec, &mut |_| {}).expect("in-process run");
+    (net, inproc)
+}
 
 /// Run `toml` once over TCP loopback (server + in-thread fleet) and
 /// once in-process; return both records.
 fn networked_vs_inproc(toml: &str) -> (RunRecord, RunRecord) {
     let spec = Spec::parse(toml).expect("test spec parses");
     let server = NetServer::bind("tcp:127.0.0.1:0").expect("bind loopback");
-    let addr = server.local_addr().expect("resolved address");
-    let net = std::thread::scope(|scope| {
-        let fleet = {
-            let spec = &spec;
-            let addr = addr.clone();
-            scope.spawn(move || run_fleet(&addr, spec))
-        };
-        let rec = server.serve(&spec, &mut |_| {}).expect("networked serve");
-        fleet.join().expect("fleet thread").expect("fleet run");
-        rec
-    });
-    let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
-    (net, inproc)
+    serve_pair(&spec, &server)
 }
 
 fn assert_bitwise_equal(net: &RunRecord, inproc: &RunRecord) {
@@ -350,4 +355,317 @@ k = 4
         let err = server.serve(&spec, &mut |_| {}).expect_err("duplicate id must be rejected");
         assert!(format!("{err:#}").contains("twice"), "unexpected error: {err:#}");
     });
+}
+
+// -------------------------------------------------------------------
+// event-loop scaling: the bit-for-bit contract holds at 1024 clients
+// -------------------------------------------------------------------
+
+/// The acceptance bar of the event-driven rewrite: a 1024-connection
+/// fleet over a Unix domain socket reproduces the in-process run bit
+/// for bit. Exercises partial-frame reassembly, arrival-order decode
+/// and cohort-order commit under real kernel scheduling pressure.
+#[cfg(unix)]
+#[test]
+fn evloop_1024_clients_gd_topk_match_inproc_bitwise() {
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    assert!(limit >= 3500, "need ~3 fds per client; soft limit stuck at {limit}");
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-evloop-1024"
+rounds = 4
+eval_every = 2
+seed = 42
+
+[dataset]
+clients = 1024
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+"#,
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join(format!("fedeff-evloop-{}.sock", std::process::id()));
+    let server = NetServer::bind(&format!("uds:{}", path.display())).expect("bind uds");
+    let (net, inproc) = serve_pair(&spec, &server);
+    assert_bitwise_equal(&net, &inproc);
+    let stats = server.stats();
+    // (`connected` may already have ticked down for clients that read
+    // their DONE and hung up while the shutdown flush was pumping)
+    assert_eq!(stats.evicted, 0, "no fleet member may be evicted");
+    // 4 rounds x 1024 clients x 1 channel, each decoded exactly once
+    assert_eq!(stats.frames_in, 4 * 1024, "arrival-order staging lost or duplicated frames");
+    assert!(stats.bytes_in > 0 && stats.bytes_out > 0);
+}
+
+// -------------------------------------------------------------------
+// adversarial connections: trickle, silence, disconnects, churn
+// -------------------------------------------------------------------
+
+/// Frames delivered one byte at a time must reassemble exactly as if
+/// they had arrived whole — including reassembling a *malformed* MSG
+/// whose decode must then fail as loudly as the fast path.
+#[test]
+fn trickled_frames_reassemble_across_reads() {
+    let err = serve_against_broken_peer(|s| {
+        let mut hello = Vec::new();
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        hello.extend_from_slice(&1u32.to_le_bytes());
+        hello.extend_from_slice(&112u32.to_le_bytes());
+        for &b in &frame(1, &hello) {
+            s.write_all(&[b]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // a reassembled-but-undecodable MSG: 3 body bytes where the
+        // sparse layout with k = 4 packs 20
+        let mut msg = Vec::new();
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.push(0);
+        msg.push(0);
+        msg.extend_from_slice(&4u32.to_le_bytes());
+        msg.extend_from_slice(&[0xFF; 3]);
+        for &b in &frame(3, &msg) {
+            s.write_all(&[b]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+    assert!(err.contains("decoding client 0"), "unexpected error: {err}");
+}
+
+/// A connection that never says HELLO must not stall the fleet: the
+/// real clients join and the run completes bit-for-bit while the
+/// silent socket is shed on its own.
+#[test]
+fn silent_connection_never_stalls_the_fleet() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-silent"
+rounds = 6
+eval_every = 2
+seed = 13
+
+[dataset]
+clients = 2
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 6
+"#,
+    )
+    .unwrap();
+    let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    // connect the silent peer BEFORE the fleet so it is guaranteed to
+    // occupy a pending slot while the real clients join around it
+    let silent = TcpStream::connect(&hostport).expect("silent connect");
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("silent peer must not break serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    drop(silent);
+    let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
+    assert_bitwise_equal(&net, &inproc);
+    let stats = server.stats();
+    assert!(
+        stats.rejected + stats.evicted + stats.churned >= 1,
+        "the silent connection must show up as shed in the stats"
+    );
+}
+
+/// A cohort member that hangs up mid-round aborts the round loudly,
+/// naming the client — and does so promptly, on the disconnect event
+/// itself rather than by burning the full progress deadline.
+#[test]
+fn cohort_disconnect_mid_round_names_the_client() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-disconnect"
+rounds = 5
+seed = 1
+
+[dataset]
+clients = 2
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 4
+"#,
+    )
+    .unwrap();
+    let mut server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    server.timeout = Duration::from_secs(2);
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            // a valid HELLO for client 1, then vanish mid-round
+            let mut hello = Vec::new();
+            hello.extend_from_slice(&1u32.to_le_bytes());
+            hello.extend_from_slice(&2u32.to_le_bytes());
+            hello.extend_from_slice(&112u32.to_le_bytes());
+            let mut s = TcpStream::connect(&hostport).expect("connect");
+            s.write_all(&frame(1, &hello)).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet_clients(&addr, spec, &[0]))
+        };
+        let t0 = Instant::now();
+        let err = server.serve(&spec, &mut |_| {}).expect_err("disconnect must abort the round");
+        let elapsed = t0.elapsed();
+        let _ = fleet.join(); // client 0 errors once the server hangs up
+        let msg = format!("{err:#}");
+        assert!(msg.contains("client 1"), "error must name the client: {msg}");
+        assert!(
+            elapsed < Duration::from_secs(3),
+            "disconnect must surface on the event, not a timeout sweep ({elapsed:?})"
+        );
+    });
+}
+
+/// A cohort member that stays connected but never answers is evicted
+/// on *its own* progress deadline — once, not once per peer — while
+/// every other connection's frames keep landing in the staging area.
+#[test]
+fn stalled_client_is_evicted_while_others_progress() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-stall"
+rounds = 5
+seed = 2
+
+[dataset]
+clients = 4
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 4
+"#,
+    )
+    .unwrap();
+    let mut server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    server.timeout = Duration::from_millis(800);
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            // client 3 joins, receives its ROUND, and goes catatonic
+            let mut hello = Vec::new();
+            hello.extend_from_slice(&3u32.to_le_bytes());
+            hello.extend_from_slice(&4u32.to_le_bytes());
+            hello.extend_from_slice(&112u32.to_le_bytes());
+            let mut s = TcpStream::connect(&hostport).expect("connect");
+            s.write_all(&frame(1, &hello)).unwrap();
+            std::thread::sleep(Duration::from_secs(2));
+        });
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet_clients(&addr, spec, &[0, 1, 2]))
+        };
+        let t0 = Instant::now();
+        let err = server.serve(&spec, &mut |_| {}).expect_err("stall must abort the round");
+        let elapsed = t0.elapsed();
+        let _ = fleet.join();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("client 3") && msg.contains("stalled"), "unexpected error: {msg}");
+        // one deadline, not one per awaited connection: well under the
+        // 4 x timeout a serial per-client wait would burn
+        assert!(
+            elapsed >= Duration::from_millis(700) && elapsed < Duration::from_millis(2500),
+            "eviction must fire on the stalled client's own deadline ({elapsed:?})"
+        );
+        // the healthy clients' messages were decoded and staged while
+        // client 3 sat on the clock
+        let stats = server.stats();
+        assert!(
+            stats.frames_in >= 3,
+            "other connections must make decode progress during the stall \
+             (saw {} frames)",
+            stats.frames_in
+        );
+    });
+}
+
+/// Connect/disconnect churn against the listener — before and during
+/// the rounds — never perturbs the run: churned sockets are shed and
+/// the fleet's result stays bit-for-bit.
+#[test]
+fn connect_disconnect_churn_leaves_the_run_bitwise_intact() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-churn"
+rounds = 10
+eval_every = 5
+seed = 21
+
+[dataset]
+clients = 3
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+"#,
+    )
+    .unwrap();
+    let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    let net = std::thread::scope(|scope| {
+        scope.spawn(move || {
+            for _ in 0..40 {
+                // connect, say nothing, hang up (late cycles may race
+                // server shutdown — a refused connect is fine)
+                let _ = TcpStream::connect(&hostport);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("churn must not break serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
+    assert_bitwise_equal(&net, &inproc);
 }

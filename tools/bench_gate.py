@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""CI bench regression gate (DESIGN.md §Benchmarks, ROADMAP item 5).
+
+Compares the committed `BENCH_algorithms.json` medians against a fresh
+`FEDEFF_BENCH_QUICK=1` run (which writes `BENCH_algorithms.json.quick`
+next to it) and fails if any *measured* row regressed by more than the
+threshold. Rows whose committed name carries an `@seeded` (or other
+`@...`) suffix are projections, not measurements, so they are reported
+but never gated; rows only present on one side are reported too.
+
+Quick mode runs one iteration on shared CI hardware, so the threshold
+is deliberately loose: the gate catches "this path got 2x slower"
+rot, not single-digit drift.
+
+Usage:
+    python3 tools/bench_gate.py [--committed BENCH_algorithms.json]
+                                [--quick BENCH_algorithms.json.quick]
+                                [--threshold 1.25]
+
+Exit status: 0 = no gated regression, 1 = regression, 2 = bad input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_entries(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        print(f"bench-gate: {path} has no 'entries' list", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for e in entries:
+        name = e.get("name")
+        ns = e.get("ns_per_iter")
+        if not isinstance(name, str) or not isinstance(ns, (int, float)) or ns <= 0:
+            print(f"bench-gate: malformed entry in {path}: {e!r}", file=sys.stderr)
+            sys.exit(2)
+        out[name] = ns
+    return out
+
+
+def base_name(name):
+    """Strip the '@seeded' / '@pre-PR2' style provenance suffix."""
+    return name.split("@", 1)[0]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--committed", default="BENCH_algorithms.json")
+    ap.add_argument("--quick", default="BENCH_algorithms.json.quick")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.25,
+        help="fail when quick ns_per_iter > committed * THRESHOLD (default 1.25)",
+    )
+    args = ap.parse_args()
+
+    committed = load_entries(args.committed)
+    quick_raw = load_entries(args.quick)
+    # the quick writer never emits provenance suffixes, but strip them
+    # anyway so the gate survives a future tagging scheme
+    quick = {base_name(k): v for k, v in quick_raw.items()}
+
+    failures = []
+    gated = skipped = 0
+    for name, base_ns in sorted(committed.items()):
+        seeded = "@" in name
+        quick_ns = quick.get(base_name(name))
+        if quick_ns is None:
+            print(f"  absent  {name}: no quick measurement (row skipped)")
+            skipped += 1
+            continue
+        ratio = quick_ns / base_ns
+        if seeded:
+            print(f"  seeded  {name}: quick {quick_ns:.0f} ns vs projection ({ratio:.2f}x, not gated)")
+            skipped += 1
+            continue
+        gated += 1
+        verdict = "ok" if ratio <= args.threshold else "REGRESSED"
+        print(f"  {verdict:>8}  {name}: {base_ns:.0f} -> {quick_ns:.0f} ns ({ratio:.2f}x)")
+        if ratio > args.threshold:
+            failures.append((name, ratio))
+
+    for name in sorted(set(quick) - {base_name(n) for n in committed}):
+        print(f"  new     {name}: quick-only row (commit a median or a seeded projection)")
+
+    print(
+        f"bench-gate: {gated} rows gated at {args.threshold:.2f}x, "
+        f"{skipped} skipped, {len(failures)} regressed"
+    )
+    if failures:
+        for name, ratio in failures:
+            print(f"bench-gate: REGRESSION {name} at {ratio:.2f}x", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
