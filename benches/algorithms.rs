@@ -34,6 +34,13 @@
 //! clock and the transport differ. Their JSON rows carry
 //! `bytes_per_round`: the real codec bytes moved per round.
 //!
+//! The `wire_{encode,decode}_delta_*` rows measure the anchor-delta
+//! downlink codec (changed-coordinate patches), and the
+//! `serve_net_async_{sync,buffered}` pair runs the pipelined networked
+//! coordinator both ways — sync barrier vs buffered-async over real
+//! sockets — on the delta downlink; their `bytes_per_round` includes
+//! the *booked* downlink split (delta vs the dense n·d·32).
+//!
 //! The `gd_topk_fused_*` / `fedavg_topk_fused_*` family measures the
 //! fused uplink pipeline at n=1024, d=16384, Top-K k=128: `ref_pool` is
 //! the reference path (`with_fused_uplink(false)` — workers evaluate
@@ -543,6 +550,35 @@ fn main() {
                 black_box(out.len());
             });
         }
+
+        // anchor delta: 128 changed coordinates over d=16384 — the
+        // steady-state downlink patch under a k-sparse uplink
+        let m = 128usize;
+        let coords: Vec<u32> = (0..m as u32).map(|i| i * (d as u32 / m as u32)).collect();
+        let mut newx = x.clone();
+        for &i in &coords {
+            newx[i as usize] += 1.0;
+        }
+        let dbits = codec::anchor_delta_bits(m, d);
+        {
+            let mut w = BitWriter::new();
+            b.run_case_wire("wire_encode_delta_m128_d16384", 1, 1, d, dbits.div_ceil(8), || {
+                w.clear();
+                codec::encode_anchor_delta(&coords, &newx, &mut w).unwrap();
+                black_box(w.bit_len());
+            });
+        }
+        {
+            let mut w = BitWriter::new();
+            codec::encode_anchor_delta(&coords, &newx, &mut w).unwrap();
+            let enc = w.finish().to_vec();
+            let mut anchor = x.clone();
+            b.run_case_wire("wire_decode_delta_m128_d16384", 1, 1, d, dbits.div_ceil(8), || {
+                let mut r = BitReader::new(&enc);
+                codec::decode_anchor_delta(&mut r, m, &mut anchor).unwrap();
+                black_box(anchor[0]);
+            });
+        }
     }
 
     // ---- networked coordinator vs in-process fused driver -------------
@@ -625,6 +661,88 @@ k = 16
             let wire_bytes = big_n as u64 * fedeff::compress::sparse_bits(16, d).div_ceil(8);
             let name = format!("serve_net_evloop_{big_n}clients_gd_topk16_5rounds_d112");
             b.run_case_wire(&name, rounds, big_n, d, wire_bytes, || {
+                let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+                let addr = server.local_addr().unwrap();
+                let rec = std::thread::scope(|scope| {
+                    let spec = &spec;
+                    let fleet = scope.spawn(move || run_fleet(&addr, spec));
+                    let rec = server.serve(spec, &mut |_| {}).unwrap();
+                    fleet.join().unwrap().unwrap();
+                    rec
+                });
+                black_box(rec);
+            });
+        }
+
+        // the pipelined-round rows (PR 9): sync barrier vs the
+        // buffered-async engine over the wire, both on the anchor-delta
+        // downlink. bytes_per_round here is uplink + *actual booked
+        // downlink* per round (read off a probe run) — the downlink
+        // split the delta broadcast is for: dense would book
+        // n * d * 32 bits down per round regardless of k.
+        for (mode, toml) in [
+            (
+                "sync",
+                r#"
+[experiment]
+name = "bench-serve-async-sync"
+rounds = 5
+eval_every = 1000
+seed = 29
+
+[dataset]
+clients = 64
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+downlink = "delta"
+"#
+                .to_string(),
+            ),
+            (
+                "buffered",
+                r#"
+[experiment]
+name = "bench-serve-async-buffered"
+rounds = 5
+eval_every = 1000
+seed = 29
+
+[dataset]
+clients = 64
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+downlink = "delta"
+
+[scenario]
+compute = "uniform(0.01, 0.05)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+mode = "async"
+buffer = 16
+staleness = "poly(0.5)"
+"#
+                .to_string(),
+            ),
+        ] {
+            let spec = Spec::parse(&toml).unwrap();
+            let (n, rounds) = (spec.dataset.clients, spec.experiment.rounds);
+            let probe = run_in_process(&spec, &mut |_| {}).unwrap();
+            let last = probe.rounds.last().unwrap();
+            let wire_bytes = ((last.bits_up + last.bits_down) / rounds as u64).div_ceil(8);
+            let name = format!("serve_net_async_{mode}_64clients_gd_topk16_delta_5rounds_d112");
+            b.run_case_wire(&name, rounds, n, d, wire_bytes, || {
                 let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
                 let addr = server.local_addr().unwrap();
                 let rec = std::thread::scope(|scope| {

@@ -1,8 +1,13 @@
-//! CI serve-smoke (DESIGN.md §Wire): run one spec twice — over the
-//! event-driven networked coordinator with a 1024-client socket fleet,
-//! and through the in-process fused driver — and exit non-zero unless
+//! CI serve-smoke (DESIGN.md §Wire): run each composition twice — over
+//! the event-driven networked coordinator with a socket fleet, and
+//! through the in-process fused driver — and exit non-zero unless
 //! every eval round matches **bit for bit** (loss raw bits, booked
-//! `bits_up` / `bits_down`, comm cost).
+//! `bits_up` / `bits_down`, comm cost; async runs also pin the virtual
+//! clock and the dispatch/apply/drop counters).
+//!
+//! Compositions: the 1024-client dense sync run, the same run on the
+//! anchor-delta downlink, and a buffered-async-over-the-wire run
+//! composed with the delta downlink.
 //!
 //! Uses a Unix domain socket where available (the CI path), TCP
 //! loopback elsewhere. Run with:
@@ -12,9 +17,10 @@
 //! ```
 
 use fedeff::config::Spec;
+use fedeff::metrics::RunRecord;
 use fedeff::wire::net::{run_fleet, run_in_process, NetServer};
 
-const SPEC: &str = r#"
+const DENSE_SPEC: &str = r#"
 [experiment]
 name = "serve-smoke"
 rounds = 30
@@ -33,19 +39,41 @@ up = "top-k"
 k = 16
 "#;
 
-fn main() -> anyhow::Result<()> {
-    let spec = Spec::parse(SPEC)?;
+const ASYNC_DELTA_SPEC: &str = r#"
+[experiment]
+name = "serve-smoke-async"
+rounds = 6
+eval_every = 2
+seed = 2024
+
+[dataset]
+clients = 256
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+downlink = "delta"
+
+[scenario]
+compute = "uniform(0.01, 0.05)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+drop = 0.05
+mode = "async"
+buffer = 64
+staleness = "poly(0.5)"
+"#;
+
+/// Run `toml` networked (socket fleet) and in-process; return the pair.
+fn run_both(label: &str, toml: &str) -> anyhow::Result<(RunRecord, RunRecord, f64, f64)> {
+    let spec = Spec::parse(toml)?;
     let n = spec.dataset.clients;
-
-    // a 1024-client fleet in one process needs ~3 fds per client
-    // (server side + the client Conn's cloned reader/writer pair);
-    // CI runners often default the soft limit to 1024
-    let limit = fedeff::wire::evloop::raise_nofile_limit();
-    if limit < 3 * n as u64 + 64 {
-        anyhow::bail!("fd soft limit {limit} too low for a {n}-client fleet");
-    }
-
-    let sock_path = std::env::temp_dir().join(format!("fedeff-smoke-{}.sock", std::process::id()));
+    let sock_path =
+        std::env::temp_dir().join(format!("fedeff-smoke-{label}-{}.sock", std::process::id()));
     let bind_addr = if cfg!(unix) {
         format!("uds:{}", sock_path.display())
     } else {
@@ -53,10 +81,10 @@ fn main() -> anyhow::Result<()> {
     };
     let server = NetServer::bind(&bind_addr)?;
     let addr = server.local_addr()?;
-    eprintln!("[smoke] coordinator on {addr}, fleet of {n} clients");
+    eprintln!("[smoke:{label}] coordinator on {addr}, fleet of {n} clients");
 
     let t0 = std::time::Instant::now();
-    let net = std::thread::scope(|scope| -> anyhow::Result<fedeff::metrics::RunRecord> {
+    let net = std::thread::scope(|scope| -> anyhow::Result<RunRecord> {
         let fleet = {
             let spec = &spec;
             let addr = addr.clone();
@@ -64,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         };
         let rec = server.serve(&spec, &mut |r| {
             eprintln!(
-                "[smoke] round {:>3}  loss {:.6}  bits_up {}  bits_down {}",
+                "[smoke:{label}] round {:>3}  loss {:.6}  bits_up {}  bits_down {}",
                 r.round, r.loss, r.bits_up, r.bits_down
             );
         })?;
@@ -77,15 +105,19 @@ fn main() -> anyhow::Result<()> {
     let t1 = std::time::Instant::now();
     let inproc = run_in_process(&spec, &mut |_| {})?;
     let inproc_secs = t1.elapsed().as_secs_f64();
+    Ok((net, inproc, net_secs, inproc_secs))
+}
 
-    let mut mismatches = 0usize;
+/// Count every bitwise divergence between the two records, loudly.
+fn mismatches(label: &str, net: &RunRecord, inproc: &RunRecord) -> usize {
+    let mut bad = 0usize;
     if net.rounds.len() != inproc.rounds.len() {
         eprintln!(
-            "[smoke] MISMATCH: {} networked eval rounds vs {} in-process",
+            "[smoke:{label}] MISMATCH: {} networked eval rounds vs {} in-process",
             net.rounds.len(),
             inproc.rounds.len()
         );
-        mismatches += 1;
+        bad += 1;
     }
     for (a, b) in net.rounds.iter().zip(&inproc.rounds) {
         let same = a.round == b.round
@@ -95,25 +127,75 @@ fn main() -> anyhow::Result<()> {
             && a.comm_cost.to_bits() == b.comm_cost.to_bits();
         if !same {
             eprintln!(
-                "[smoke] MISMATCH at round {}: networked (loss {:.9}, up {}, down {}) vs \
-                 in-process (loss {:.9}, up {}, down {})",
+                "[smoke:{label}] MISMATCH at round {}: networked (loss {:.9}, up {}, down {}) \
+                 vs in-process (loss {:.9}, up {}, down {})",
                 a.round, a.loss, a.bits_up, a.bits_down, b.loss, b.bits_up, b.bits_down
             );
-            mismatches += 1;
+            bad += 1;
         }
     }
-    if mismatches > 0 {
-        eprintln!("[smoke] FAILED: {mismatches} mismatching rounds");
-        std::process::exit(1);
+    match (&net.scenario, &inproc.scenario) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            if a.vtime.to_bits() != b.vtime.to_bits()
+                || a.dispatches != b.dispatches
+                || a.applies != b.applies
+                || a.dropped != b.dropped
+            {
+                eprintln!(
+                    "[smoke:{label}] MISMATCH in scenario stats: networked (vtime {:.6}, \
+                     dispatches {}, applies {}, dropped {}) vs in-process (vtime {:.6}, \
+                     dispatches {}, applies {}, dropped {})",
+                    a.vtime, a.dispatches, a.applies, a.dropped, b.vtime, b.dispatches,
+                    b.applies, b.dropped
+                );
+                bad += 1;
+            }
+        }
+        _ => {
+            eprintln!("[smoke:{label}] MISMATCH: scenario stats present on only one side");
+            bad += 1;
+        }
+    }
+    bad
+}
+
+fn main() -> anyhow::Result<()> {
+    // a 1024-client fleet in one process needs ~3 fds per client
+    // (server side + the client Conn's cloned reader/writer pair);
+    // CI runners often default the soft limit to 1024
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    if limit < 3 * 1024 + 64 {
+        anyhow::bail!("fd soft limit {limit} too low for a 1024-client fleet");
     }
 
-    let rounds = spec.experiment.rounds as f64;
-    println!(
-        "serve-smoke OK: {n} networked clients reproduced the in-process run bit-for-bit \
-         over {} eval rounds ({:.1} net vs {:.1} in-proc client-rounds/s)",
-        net.rounds.len(),
-        n as f64 * rounds / net_secs.max(1e-9),
-        n as f64 * rounds / inproc_secs.max(1e-9),
-    );
+    let delta_toml = DENSE_SPEC.replace("k = 16\n", "k = 16\ndownlink = \"delta\"\n");
+    let cases: [(&str, &str); 3] = [
+        ("dense", DENSE_SPEC),
+        ("delta", &delta_toml),
+        ("async-delta", ASYNC_DELTA_SPEC),
+    ];
+
+    let mut bad = 0usize;
+    for (label, toml) in cases {
+        let spec = Spec::parse(toml)?;
+        let n = spec.dataset.clients;
+        let rounds = spec.experiment.rounds as f64;
+        let (net, inproc, net_secs, inproc_secs) = run_both(label, toml)?;
+        bad += mismatches(label, &net, &inproc);
+        println!(
+            "serve-smoke [{label}]: {n} networked clients, {} eval rounds \
+             ({:.1} net vs {:.1} in-proc client-rounds/s)",
+            net.rounds.len(),
+            n as f64 * rounds / net_secs.max(1e-9),
+            n as f64 * rounds / inproc_secs.max(1e-9),
+        );
+    }
+
+    if bad > 0 {
+        eprintln!("[smoke] FAILED: {bad} mismatches across compositions");
+        std::process::exit(1);
+    }
+    println!("serve-smoke OK: dense, delta and buffered-async compositions all bit-for-bit");
     Ok(())
 }

@@ -527,6 +527,12 @@ pub struct RoundCtx<'a> {
     /// leaf transfer times from (`u32::MAX` = unattributed sender);
     /// `None` — the default — skips the bookkeeping entirely.
     pub(crate) senders: Option<Vec<(u32, u64)>>,
+    /// Driver-planned broadcast booking `(bits, receivers)` under
+    /// [`crate::coordinator::delta::DownlinkMode::Delta`]: the per-round
+    /// anchor-delta plan's exact encoded size summed over the cohort.
+    /// Consumed (at most once) by [`RoundCtx::charge_broadcast`];
+    /// `None` — the default — books the legacy dense broadcast.
+    pub(crate) down_plan: Option<(u64, u64)>,
     /// Uplink channel tracking: the client currently sending and the
     /// index of its current routed message this round. Keys both the
     /// per-client compression streams ([`crate::compress::client_rng`])
@@ -568,6 +574,7 @@ impl<'a> RoundCtx<'a> {
             tree,
             mask,
             senders,
+            down_plan: None,
             link_rng,
             up_bits: 0,
             up_nodes: 0,
@@ -1074,6 +1081,23 @@ impl<'a> RoundCtx<'a> {
             for l in 0..tl.scratch.first_compressed {
                 tl.scratch.edge_bits[l] += bits;
             }
+        }
+    }
+
+    /// Book the round's uncompressed model broadcast of dimension `d`.
+    /// With a driver-planned downlink (anchor-delta mode,
+    /// [`crate::coordinator::delta::DownlinkMode::Delta`]) this books the
+    /// plan's exact per-receiver delta/resync bits; otherwise it is
+    /// [`RoundCtx::charge_down`]`(`[`RoundCtx::down_payload_bits`]`(d))`
+    /// — the legacy dense broadcast, bit-identical to what every
+    /// algorithm booked before delta mode existed.
+    pub fn charge_broadcast(&mut self, d: usize) {
+        match self.down_plan.take() {
+            Some((bits, nodes)) => {
+                self.down_bits += bits;
+                self.down_nodes += nodes;
+            }
+            None => self.charge_down(self.down_payload_bits(d)),
         }
     }
 

@@ -130,7 +130,8 @@ pub(crate) fn fedcom_broadcast(
         let bits = ctx.down_compress_add(delta, 1.0, x, sbuf, buf);
         ctx.charge_down(bits);
     } else {
-        ctx.charge_down(ctx.down_payload_bits(x.len()));
+        // delta-priced when the driver planned an anchor-delta downlink
+        ctx.charge_broadcast(x.len());
         x.copy_from_slice(target);
     }
 }
@@ -248,7 +249,7 @@ impl FlAlgorithm for FedAvg {
                 let bits = ctx.down_compress_payload(&self.delta, &mut self.buf);
                 ctx.charge_down(bits);
             } else {
-                ctx.charge_down(ctx.down_payload_bits(self.x.len()));
+                ctx.charge_broadcast(self.x.len());
             }
             return Ok(());
         }

@@ -253,9 +253,10 @@ impl FlAlgorithm for Gd {
     ) -> Result<()> {
         vm::axpy(-self.flix.gamma, &self.grad, &mut self.x);
         self.grad.fill(0.0);
-        // dense model broadcast; support-sized under a global mask (the
-        // masked gradient aggregate keeps x in the support subspace)
-        ctx.charge_down(ctx.down_payload_bits(self.x.len()));
+        // model broadcast; support-sized under a global mask (the
+        // masked gradient aggregate keeps x in the support subspace),
+        // delta-priced when the driver planned an anchor-delta downlink
+        ctx.charge_broadcast(self.x.len());
         Ok(())
     }
 

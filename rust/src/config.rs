@@ -41,6 +41,8 @@
 //! [compressor]
 //! up = "top-k"             # top-k | rand-k | srand-k | comp | mix | qsgd | identity
 //! down = "identity"        # omit a key to leave that link dense
+//! downlink = "delta"       # dense (default) | delta: broadcast the anchor
+//!                          # as exact changed-coordinate pairs per receiver
 //! k = 8
 //! k_prime = 16
 //!
@@ -124,6 +126,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::compress::Compressor;
+use crate::coordinator::delta::DownlinkMode;
 use crate::coordinator::driver::{Driver, Topology};
 use crate::coordinator::hierarchy::{AggTree, Hierarchy};
 
@@ -240,6 +243,12 @@ pub struct EdgeCompSpec {
 pub struct LinkSpec {
     pub up: Option<String>,
     pub down: Option<String>,
+    /// `downlink = "dense" | "delta"`: how the anchor broadcast is
+    /// represented and booked ([`DownlinkMode`]). Distinct from `down`,
+    /// which lossy-compresses the broadcast; `delta` sends it exactly,
+    /// as changed-coordinate pairs against each receiver's last-acked
+    /// version, and the two do not compose.
+    pub downlink: Option<String>,
     pub k: usize,
     pub k_prime: usize,
     /// Index = edge class; `None` entries are pass-through.
@@ -248,7 +257,7 @@ pub struct LinkSpec {
 
 impl Default for LinkSpec {
     fn default() -> Self {
-        Self { up: None, down: None, k: 8, k_prime: 16, up_edges: Vec::new() }
+        Self { up: None, down: None, downlink: None, k: 8, k_prime: 16, up_edges: Vec::new() }
     }
 }
 
@@ -389,6 +398,7 @@ impl Spec {
         let links = LinkSpec {
             up: t.get("compressor", "up").map(|s| s.to_string()),
             down: t.get("compressor", "down").map(|s| s.to_string()),
+            downlink: t.get("compressor", "downlink").map(|s| s.to_string()),
             k: t.get_usize("compressor", "k").unwrap_or(8),
             k_prime: t.get_usize("compressor", "k_prime").unwrap_or(16),
             up_edges,
@@ -709,6 +719,20 @@ pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
         Some(name) => Some(compressor_by_name(name, spec.links.k, spec.links.k_prime)?),
         None => None,
     };
+    let down_mode = match spec.links.downlink.as_deref() {
+        None | Some("dense") => DownlinkMode::Dense,
+        Some("delta") => {
+            anyhow::ensure!(
+                down.is_none(),
+                "[compressor] downlink = \"delta\" replaces the downlink compressor; drop \
+                 the `down` key (the delta broadcast is exact, not lossy-compressed)"
+            );
+            DownlinkMode::Delta
+        }
+        Some(other) => {
+            anyhow::bail!("[compressor] downlink must be \"dense\" or \"delta\", got {other:?}")
+        }
+    };
     let (topology, up_edges) = match &spec.topology {
         Some(t) if t.levels.is_some() => {
             let (tree, edges) = build_tree(t, &spec.links, n)?;
@@ -729,7 +753,7 @@ pub fn build_driver(spec: &Spec, n: usize) -> Result<Driver> {
             (Topology::Flat, Vec::new())
         }
     };
-    Ok(Driver { sampler, up, down, topology, up_edges, mask, ..Driver::default() })
+    Ok(Driver { sampler, up, down, down_mode, topology, up_edges, mask, ..Driver::default() })
 }
 
 #[cfg(test)]
@@ -929,6 +953,29 @@ k = 4
         )
         .unwrap();
         assert!(build_driver(&deep, 8).is_err());
+    }
+
+    #[test]
+    fn downlink_key_wires_down_mode() {
+        let base = "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[compressor]\nup = \"top-k\"\nk = 4\n";
+        let dense = Spec::parse(base).unwrap();
+        assert!(dense.links.downlink.is_none());
+        assert!(matches!(build_driver(&dense, 8).unwrap().down_mode, DownlinkMode::Dense));
+
+        let delta = Spec::parse(&format!("{base}downlink = \"delta\"")).unwrap();
+        assert_eq!(delta.links.downlink.as_deref(), Some("delta"));
+        assert!(matches!(build_driver(&delta, 8).unwrap().down_mode, DownlinkMode::Delta));
+
+        // "dense" is the explicit spelling of the default
+        let dense2 = Spec::parse(&format!("{base}downlink = \"dense\"")).unwrap();
+        assert!(matches!(build_driver(&dense2, 8).unwrap().down_mode, DownlinkMode::Dense));
+
+        // unknown value, and delta composed with a downlink compressor,
+        // are loud errors
+        let bad = Spec::parse(&format!("{base}downlink = \"sparse\"")).unwrap();
+        assert!(build_driver(&bad, 8).is_err());
+        let both = Spec::parse(&format!("{base}down = \"identity\"\ndownlink = \"delta\"")).unwrap();
+        assert!(build_driver(&both, 8).is_err());
     }
 
     const SAMPLE_MASKED: &str = r#"

@@ -1,0 +1,317 @@
+//! Downlink anchor-delta tracking: the server-side state that turns the
+//! per-round model broadcast from O(d) into O(changed-coords) bytes
+//! (DESIGN.md §Wire, delta broadcast).
+//!
+//! The paper's sparse-communication line compresses the *uplink*; with
+//! k-sparse or masked uplinks the server model itself moves by at most
+//! `cohort·k` coordinates per round, so after the first broadcast the
+//! downlink can ship exact `(index, new_f32)` pairs instead of the full
+//! dense anchor. [`DeltaTracker`] owns that bookkeeping:
+//!
+//! * after every server step it records **which coordinates changed**
+//!   (bitwise f32 comparison — exact, no epsilon) as one change set per
+//!   anchor *version*;
+//! * per dispatch it plans, for each receiver, the cheaper of a dense
+//!   resync (`dense_bits(d)`) and a delta against the version that
+//!   receiver is known to hold (`anchor_delta_bits(m, d)` for the
+//!   deduplicated union of the change sets in between) — first contact
+//!   is always a dense resync;
+//! * the driver books exactly the planned bits in the [`super::CommLedger`]
+//!   (via `RoundCtx::charge_broadcast`), on the in-process and networked
+//!   paths alike, so the codec-bits == ledger-bits invariant extends to
+//!   the downlink and networked == in-process stays bit-for-bit.
+//!
+//! Receivers acknowledge implicitly: dispatching version `v` to a client
+//! over a reliable in-order stream (or applying it in-process) means the
+//! client holds `v` afterwards — or its connection dies loudly. There is
+//! no ACK frame; [`DeltaTracker::ack`] is called at dispatch.
+
+use crate::algorithms::dense_bits;
+use crate::wire::codec::anchor_delta_bits;
+
+/// How the driver prices (and a networked transport encodes) the
+/// per-round model broadcast.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DownlinkMode {
+    /// Every round re-ships the full dense anchor (`32·d` bits per
+    /// receiver) — the legacy path, always available.
+    #[default]
+    Dense,
+    /// After first contact each receiver gets exact changed-coordinate
+    /// pairs against the version it last held, with a dense resync
+    /// whenever that would be cheaper or the receiver is unknown.
+    /// Requires a flat topology, no mask, no downlink compressor, and
+    /// an executable Gradient/LocalSgd uplink plan (validated loudly).
+    Delta,
+}
+
+/// One distinct broadcast body within a round: either a dense resync or
+/// a delta from `base` to the round's version, with its change-coord
+/// union stored in the owning [`DeltaRound`]'s `coords` arena.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DeltaVariant {
+    /// `None` = dense resync; `Some(v)` = delta with base version `v`.
+    pub(crate) base: Option<u64>,
+    lo: usize,
+    hi: usize,
+}
+
+/// The planned downlink of one dispatch: per-receiver variant
+/// assignments over a shared coordinate arena. Receivers that share a
+/// base version share a variant (and, on the wire, the encoded frame).
+#[derive(Default)]
+pub(crate) struct DeltaRound {
+    /// The anchor version this dispatch broadcasts.
+    pub(crate) version: u64,
+    dim: usize,
+    coords: Vec<u32>,
+    variants: Vec<DeltaVariant>,
+    /// Cohort position → index into `variants`.
+    pub(crate) assign: Vec<u32>,
+}
+
+impl DeltaRound {
+    fn reset(&mut self, dim: usize, version: u64) {
+        self.dim = dim;
+        self.version = version;
+        self.coords.clear();
+        self.variants.clear();
+        self.assign.clear();
+    }
+
+    pub(crate) fn variant(&self, v: usize) -> DeltaVariant {
+        self.variants[v]
+    }
+
+    /// Number of distinct broadcast bodies this dispatch encodes (a
+    /// networked transport builds one frame per variant).
+    pub(crate) fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// The strictly-ascending changed coordinates of variant `v` (empty
+    /// for a dense resync or an unchanged anchor).
+    pub(crate) fn coords_of(&self, v: usize) -> &[u32] {
+        let DeltaVariant { lo, hi, .. } = self.variants[v];
+        &self.coords[lo..hi]
+    }
+
+    /// Booked (and encoded) bits of variant `v`: `dense_bits(d)` for a
+    /// resync, `anchor_delta_bits(m, d)` otherwise.
+    pub(crate) fn bits_of(&self, v: usize) -> u64 {
+        let DeltaVariant { base, lo, hi } = self.variants[v];
+        match base {
+            None => dense_bits(self.dim),
+            Some(_) => anchor_delta_bits(hi - lo, self.dim),
+        }
+    }
+
+    /// Total bits this dispatch books across every receiver.
+    pub(crate) fn total_bits(&self) -> u64 {
+        self.assign.iter().map(|&v| self.bits_of(v as usize)).sum()
+    }
+}
+
+/// Server-side change tracking across anchor versions plus per-receiver
+/// acknowledgement state. Version 0 is the installed initial anchor;
+/// `record_round` advances it by one per server step.
+pub(crate) struct DeltaTracker {
+    dim: usize,
+    version: u64,
+    /// The latest recorded anchor, bit-exact.
+    prev: Vec<f32>,
+    /// `changed[v]` = coordinates that changed going from version `v`
+    /// to `v + 1` (ascending). One entry per recorded step.
+    changed: Vec<Vec<u32>>,
+    /// Last version each receiver is known to hold (`None` = never
+    /// contacted — e.g. a client outside every cohort so far).
+    acked: Vec<Option<u64>>,
+    /// Dedup stamps for the change-set union (one slot per coordinate).
+    stamp: Vec<u64>,
+    stamp_gen: u64,
+}
+
+impl DeltaTracker {
+    /// Start tracking: `anchor` becomes version 0, all `n` receivers
+    /// unacknowledged.
+    pub(crate) fn new(anchor: &[f32], n: usize) -> Self {
+        DeltaTracker {
+            dim: anchor.len(),
+            version: 0,
+            prev: anchor.to_vec(),
+            changed: Vec::new(),
+            acked: vec![None; n],
+            stamp: vec![0; anchor.len()],
+            stamp_gen: 0,
+        }
+    }
+
+    pub(crate) fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Record one server step: bitwise-diff `anchor` against the last
+    /// recorded version, append the change set, advance the version.
+    pub(crate) fn record_round(&mut self, anchor: &[f32]) {
+        debug_assert_eq!(anchor.len(), self.dim);
+        let mut set = Vec::new();
+        for (j, (&new, old)) in anchor.iter().zip(self.prev.iter_mut()).enumerate() {
+            if new.to_bits() != old.to_bits() {
+                set.push(j as u32);
+                *old = new;
+            }
+        }
+        self.changed.push(set);
+        self.version += 1;
+    }
+
+    /// Mark every cohort member as holding the current version (call at
+    /// dispatch — delivery is reliable-in-order or fails loudly).
+    pub(crate) fn ack(&mut self, cohort: &[usize]) {
+        for &c in cohort {
+            self.acked[c] = Some(self.version);
+        }
+    }
+
+    /// Plan the current version's broadcast for `cohort` into `out`:
+    /// per receiver, the cheaper of dense resync and delta-from-acked,
+    /// with receivers sharing a base version sharing one variant.
+    pub(crate) fn plan(&mut self, cohort: &[usize], out: &mut DeltaRound) {
+        out.reset(self.dim, self.version);
+        let dense = dense_bits(self.dim);
+        // distinct bases per round are few: linear memo of
+        // (base, variant) decisions
+        let mut memo: Vec<(Option<u64>, u32)> = Vec::new();
+        let mut dense_variant: Option<u32> = None;
+        for &c in cohort {
+            let base = self.acked[c];
+            if let Some(&(_, v)) = memo.iter().find(|(b, _)| *b == base) {
+                out.assign.push(v);
+                continue;
+            }
+            let v = match base {
+                None => *dense_variant.get_or_insert_with(|| {
+                    let v = out.variants.len() as u32;
+                    out.variants.push(DeltaVariant { base: None, lo: 0, hi: 0 });
+                    v
+                }),
+                Some(b) => {
+                    debug_assert!(b <= self.version);
+                    let lo = out.coords.len();
+                    self.stamp_gen += 1;
+                    for set in &self.changed[b as usize..self.version as usize] {
+                        for &j in set {
+                            if self.stamp[j as usize] != self.stamp_gen {
+                                self.stamp[j as usize] = self.stamp_gen;
+                                out.coords.push(j);
+                            }
+                        }
+                    }
+                    out.coords[lo..].sort_unstable();
+                    let m = out.coords.len() - lo;
+                    if anchor_delta_bits(m, self.dim) < dense {
+                        let v = out.variants.len() as u32;
+                        out.variants.push(DeltaVariant { base: Some(b), lo, hi: lo + m });
+                        v
+                    } else {
+                        // delta would not win: fall back to the shared
+                        // dense resync and return the arena space
+                        out.coords.truncate(lo);
+                        *dense_variant.get_or_insert_with(|| {
+                            let v = out.variants.len() as u32;
+                            out.variants.push(DeltaVariant { base: None, lo: 0, hi: 0 });
+                            v
+                        })
+                    }
+                }
+            };
+            memo.push((base, v));
+            out.assign.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_contact_is_dense_then_deltas_shrink() {
+        let d = 100usize;
+        let anchor = vec![1.0f32; d];
+        let mut tr = DeltaTracker::new(&anchor, 4);
+        let mut plan = DeltaRound::default();
+        tr.plan(&[0, 1], &mut plan);
+        assert_eq!(plan.total_bits(), 2 * dense_bits(d), "unacked receivers resync dense");
+        tr.ack(&[0, 1]);
+
+        // one coordinate moves
+        let mut a2 = anchor.clone();
+        a2[7] = 2.0;
+        tr.record_round(&a2);
+        tr.plan(&[0, 1], &mut plan);
+        assert_eq!(plan.version, 1);
+        assert_eq!(plan.assign.len(), 2);
+        let v = plan.assign[0] as usize;
+        assert_eq!(plan.assign[1] as usize, v, "same base shares the variant");
+        assert_eq!(plan.coords_of(v), &[7]);
+        assert_eq!(plan.bits_of(v), anchor_delta_bits(1, d));
+        assert_eq!(plan.total_bits(), 2 * anchor_delta_bits(1, d));
+    }
+
+    #[test]
+    fn version_gaps_union_and_dedup_change_sets() {
+        let d = 10usize;
+        let mut a = vec![0.0f32; d];
+        let mut tr = DeltaTracker::new(&a, 2);
+        tr.ack(&[0]);
+        // v0 -> v1 changes {1, 3}; v1 -> v2 changes {3, 5}
+        a[1] = 1.0;
+        a[3] = 1.0;
+        tr.record_round(&a);
+        tr.ack(&[1]); // client 1 holds v1
+        a[3] = 2.0;
+        a[5] = 1.0;
+        tr.record_round(&a);
+        let mut plan = DeltaRound::default();
+        tr.plan(&[0, 1], &mut plan);
+        let v0 = plan.assign[0] as usize;
+        let v1 = plan.assign[1] as usize;
+        assert_ne!(v0, v1, "different bases get different variants");
+        assert_eq!(plan.coords_of(v0), &[1, 3, 5], "v0 base unions both sets, deduped");
+        assert_eq!(plan.coords_of(v1), &[3, 5]);
+        assert_eq!(plan.variant(v0).base, Some(0));
+        assert_eq!(plan.variant(v1).base, Some(1));
+    }
+
+    #[test]
+    fn delta_never_books_more_than_dense() {
+        let d = 4usize; // tiny dim: deltas lose fast
+        let a = vec![0.0f32; d];
+        let mut tr = DeltaTracker::new(&a, 1);
+        tr.ack(&[0]);
+        let mut a2 = a.clone();
+        for j in 0..d {
+            a2[j] = 1.0 + j as f32;
+        }
+        tr.record_round(&a2);
+        let mut plan = DeltaRound::default();
+        tr.plan(&[0], &mut plan);
+        let v = plan.assign[0] as usize;
+        assert_eq!(plan.variant(v).base, None, "losing delta falls back to dense resync");
+        assert_eq!(plan.total_bits(), dense_bits(d));
+    }
+
+    #[test]
+    fn unchanged_anchor_costs_zero_bits() {
+        let a = vec![0.5f32; 50];
+        let mut tr = DeltaTracker::new(&a, 1);
+        tr.ack(&[0]);
+        tr.record_round(&a);
+        let mut plan = DeltaRound::default();
+        tr.plan(&[0], &mut plan);
+        let v = plan.assign[0] as usize;
+        assert_eq!(plan.coords_of(v), &[] as &[u32]);
+        assert_eq!(plan.total_bits(), 0, "an unchanged anchor is free");
+    }
+}

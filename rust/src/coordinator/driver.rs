@@ -80,6 +80,7 @@
 
 use anyhow::Result;
 
+use super::delta::{DeltaRound, DeltaTracker, DownlinkMode};
 use super::fused::{FusedPayload, RowsPtr};
 use super::hierarchy::{AggTree, Hierarchy};
 use super::{default_pool_size, CommLedger, FusedUplink, PoolInput, WorkerPool};
@@ -151,6 +152,13 @@ pub struct Driver {
     /// and enforce them on every link (see the module docs). `None` runs
     /// dense.
     pub mask: Option<MaskSpec>,
+    /// How the model broadcast is priced (and, over a transport,
+    /// encoded): [`DownlinkMode::Dense`] re-ships the full anchor every
+    /// round; [`DownlinkMode::Delta`] ships changed-coordinate pairs
+    /// against each receiver's acknowledged version (dense resync on
+    /// first contact), booking exactly the encoded bits
+    /// ([`super::delta`]).
+    pub down_mode: DownlinkMode,
 }
 
 impl Default for Driver {
@@ -164,6 +172,7 @@ impl Default for Driver {
             sparse_links: true,
             fused_uplink: true,
             mask: None,
+            down_mode: DownlinkMode::default(),
         }
     }
 }
@@ -223,6 +232,16 @@ impl Driver {
     /// init and enforce them on the message path.
     pub fn with_mask(mut self, spec: MaskSpec) -> Self {
         self.mask = Some(spec);
+        self
+    }
+
+    /// Select the broadcast pricing/encoding mode (default:
+    /// [`DownlinkMode::Dense`]). [`DownlinkMode::Delta`] is validated
+    /// loudly at run start — it requires a flat topology, no mask, no
+    /// downlink compressor and an executable gradient / local-SGD
+    /// uplink plan whose anchor is the broadcast model.
+    pub fn with_downlink(mut self, mode: DownlinkMode) -> Self {
+        self.down_mode = mode;
         self
     }
 
@@ -465,6 +484,45 @@ impl Driver {
             None => x0,
         };
         alg.init(oracle, x0, opts)?;
+        // anchor-delta downlink: validated loudly, then the driver plans
+        // every broadcast as per-receiver min(dense resync, changed-coord
+        // delta) and books exactly those bits — identically on the
+        // in-process and transport paths (a transport encodes exactly
+        // the planned variants)
+        let mut delta_down: Option<(DeltaTracker, DeltaRound)> = match self.down_mode {
+            DownlinkMode::Dense => None,
+            DownlinkMode::Delta => {
+                anyhow::ensure!(
+                    matches!(self.topology, Topology::Flat),
+                    "the anchor-delta downlink supports only the flat topology"
+                );
+                anyhow::ensure!(
+                    self.mask.is_none(),
+                    "the anchor-delta downlink does not compose with training-time sparsity \
+                     masks (a global mask already prices support-sized broadcasts)"
+                );
+                anyhow::ensure!(
+                    self.down.is_none(),
+                    "the anchor-delta downlink replaces the downlink compressor; configure one \
+                     or the other"
+                );
+                anyhow::ensure!(
+                    scen.is_none(),
+                    "the anchor-delta downlink does not yet compose with sync-mode scenarios \
+                     (the virtual clock prices a broadcast per receiver-set, not per receiver)"
+                );
+                let plan = alg.uplink_plan();
+                let anchor = match plan.as_ref().map(|p| (&p.payload, p.anchor)) {
+                    Some((PayloadSpec::Gradient, a)) | Some((PayloadSpec::LocalSgd { .. }, a)) => a,
+                    _ => anyhow::bail!(
+                        "the anchor-delta downlink needs a gradient / local-SGD uplink plan \
+                         whose anchor is the broadcast model; {} advertises none",
+                        alg.label()
+                    ),
+                };
+                Some((DeltaTracker::new(anchor, n), DeltaRound::default()))
+            }
+        };
         let mut rec = RunRecord::new(alg.label());
         let mut ledger = CommLedger::default();
         // pre-size the per-round structures: steady-state rounds must not
@@ -626,6 +684,15 @@ impl Driver {
             let groups: Option<&[usize]> =
                 if group_starts.is_empty() { None } else { Some(&group_starts) };
 
+            // anchor-delta: plan this round's broadcast (per-receiver
+            // min(dense resync, changed-coord delta) against acked
+            // versions) and mark it delivered — dispatch is reliable
+            // in-order or fails loudly, so there is no ACK round-trip
+            if let Some((tracker, dround)) = delta_down.as_mut() {
+                tracker.plan(&cohort, dround);
+                tracker.ack(&cohort);
+            }
+
             // fused dispatch: compress-and-stage the whole cohort in the
             // workers before the round context (and with it the mask /
             // tree borrows) is constructed
@@ -700,7 +767,8 @@ impl Driver {
                 match (pool, transport) {
                     (Some(pool), _) => pool.fused_dispatch(&cohort, groups, &mut fill),
                     (None, Some(tr)) => {
-                        tr.fused_dispatch(&cohort, groups, fused_channels, &mut fill)?
+                        let down = delta_down.as_ref().map(|(_, dround)| dround);
+                        tr.fused_dispatch(&cohort, groups, fused_channels, down, &mut fill)?
                     }
                     (None, None) => unreachable!("fused rounds need an execution substrate"),
                 }
@@ -735,6 +803,11 @@ impl Driver {
                 mask_links,
                 if scen.is_some() { Some(std::mem::take(&mut sender_log)) } else { None },
             );
+            if let Some((_, dround)) = delta_down.as_ref() {
+                // the algorithm's charge_broadcast books exactly the
+                // planned encoded bits instead of the dense payload
+                ctx.down_plan = Some((dround.total_bits(), cohort.len() as u64));
+            }
 
             if fused_active {
                 // merge: replay the workers' premultiplied messages in
@@ -803,6 +876,12 @@ impl Driver {
                 }
             }
             alg.server_step(oracle, &cohort, &mut ctx)?;
+            if let Some((tracker, _)) = delta_down.as_mut() {
+                // diff the post-step anchor (exactly what the next
+                // dispatch puts in PoolInput::point) into a change set
+                let plan = alg.uplink_plan().expect("delta run lost its uplink plan");
+                tracker.record_round(plan.anchor);
+            }
 
             // flush the round's accounting into the ledger (exact totals
             // on the classic counters, per-edge totals for trees)

@@ -77,8 +77,14 @@
 //! `FusedUplink` transport — the networked coordinator of
 //! [`crate::wire::net`] streams bit-packed frames from socket clients
 //! into the identical O(k)-per-client merge, bit-for-bit (DESIGN.md
-//! §Wire).
+//! §Wire). The downlink half of that seam is [`delta::DeltaTracker`]:
+//! under [`delta::DownlinkMode::Delta`] the *driver* plans each
+//! broadcast as per-receiver `min(dense resync, changed-coord delta)`
+//! and books exactly those bits, and a transport encodes exactly the
+//! planned variants — which is what keeps in-process and networked
+//! runs bit-identical in booked bytes as well as results.
 
+pub mod delta;
 pub mod driver;
 pub mod fused;
 pub mod hierarchy;
@@ -219,12 +225,16 @@ pub(crate) trait FusedUplink {
     /// shard may ignore it. `channels` is the per-client uplink message
     /// count of this round's plan — dispatch-side knowledge of it lets
     /// a transport size its arrival staging before the first frame
-    /// lands.
+    /// lands. `down` is the driver's broadcast plan under
+    /// [`delta::DownlinkMode::Delta`] (`None` = legacy dense anchor):
+    /// an implementation must ship each cohort position exactly its
+    /// assigned variant — the ledger already booked those bits.
     fn fused_dispatch(
         &self,
         cohort: &[usize],
         groups: Option<&[usize]>,
         channels: usize,
+        down: Option<&delta::DeltaRound>,
         fill: &mut dyn FnMut(&mut PoolInput),
     ) -> Result<()>;
 

@@ -25,7 +25,15 @@
 //!     `--max-clients N` caps how many connections the event loop will
 //!     track (extras are accepted and shed); `--metrics` adds one JSON
 //!     line per eval round with the live transport counters (connected
-//!     clients, socket bytes in/out, booked bits, virtual time).
+//!     clients, socket bytes in/out, booked bits, virtual time) plus a
+//!     final `summary` line at shutdown (totals, frames, churn, queue
+//!     depth, stale frames discarded). `--downlink dense|delta`
+//!     overrides the spec's `[compressor] downlink` key: `delta`
+//!     broadcasts the anchor as exact changed-coordinate pairs against
+//!     each client's last-acked version after round 1 (O(cohort * k)
+//!     downlink instead of O(cohort * d)). A `[scenario]` section with
+//!     `mode = "async"` also runs over `--listen`: buffered-async
+//!     aggregation over real sockets, bit-for-bit the in-process run.
 
 use std::path::PathBuf;
 
@@ -41,7 +49,7 @@ const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | list
               | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]
                       [--listen ADDR | --join ADDR]   (ADDR = tcp:HOST:PORT | uds:PATH)
-                      [--max-clients N] [--metrics]>";
+                      [--max-clients N] [--metrics] [--downlink dense|delta]>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -111,6 +119,7 @@ fn main() -> Result<()> {
             let join = opt_val(&args, "--join");
             let max_clients = opt_val(&args, "--max-clients").and_then(|v| v.parse().ok());
             let metrics = flag(&args, "--metrics");
+            let downlink = opt_val(&args, "--downlink");
             anyhow::ensure!(
                 listen.is_none() || join.is_none(),
                 "--listen and --join are mutually exclusive (one process per role)"
@@ -123,6 +132,7 @@ fn main() -> Result<()> {
                 join: join.as_deref(),
                 max_clients,
                 metrics,
+                downlink: downlink.as_deref(),
             };
             serve(config.as_deref(), &opts)
         }
@@ -235,6 +245,7 @@ struct ServeCli<'a> {
     join: Option<&'a str>,
     max_clients: Option<usize>,
     metrics: bool,
+    downlink: Option<&'a str>,
 }
 
 fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
@@ -257,6 +268,11 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
     }
     if let Some(r) = cli.rounds {
         spec.experiment.rounds = r;
+    }
+    if let Some(mode) = cli.downlink {
+        // validated in build_driver; only the coordinator reads it (the
+        // wire protocol tells joining clients dense vs delta per frame)
+        spec.links.downlink = Some(mode.to_string());
     }
 
     if let Some(addr) = cli.join {
@@ -312,6 +328,27 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
             rec.last().map(|r| r.loss).unwrap_or(f32::NAN),
             rec.rounds.last().map(|r| r.bits_up).unwrap_or(0)
         );
+        if cli.metrics {
+            // one shutdown summary line with the transport's lifetime
+            // totals — everything the per-round lines cannot see
+            // (churn, shed connections, queue depth, stale discards)
+            let s = srv.stats();
+            println!(
+                "{{\"summary\":{{\"bytes_in\":{},\"bytes_out\":{},\"frames_in\":{},\
+                 \"rounds_broadcast\":{},\"connected\":{},\"evicted\":{},\"churned\":{},\
+                 \"rejected\":{},\"max_queue_depth\":{},\"stale_discarded\":{}}}}}",
+                s.bytes_in,
+                s.bytes_out,
+                s.frames_in,
+                s.rounds_broadcast,
+                s.connected,
+                s.evicted,
+                s.churned,
+                s.rejected,
+                s.max_queue_depth,
+                s.stale_discarded
+            );
+        }
         return Ok(());
     }
 

@@ -47,6 +47,7 @@ use anyhow::{bail, ensure, Result};
 use crate::algorithms::api::{dense_bits, FlAlgorithm, PayloadSpec, ScaleSpec};
 use crate::algorithms::RunOptions;
 use crate::compress::client_rng;
+use crate::coordinator::delta::{DeltaRound, DeltaTracker, DownlinkMode};
 use crate::coordinator::driver::{record_eval, Driver, Topology};
 use crate::coordinator::CommLedger;
 use crate::metrics::{RunRecord, ScenarioStat};
@@ -480,6 +481,12 @@ struct AsyncState<'a> {
     version: u64,
     dispatches: u64,
     dropped: u64,
+    /// Anchor-delta downlink state ([`DownlinkMode::Delta`]): each
+    /// redispatch books the per-client min(dense resync, delta) against
+    /// the version that client last received; `None` books the legacy
+    /// dense anchor per dispatch.
+    tracker: Option<DeltaTracker>,
+    dplan: DeltaRound,
 }
 
 impl AsyncState<'_> {
@@ -544,7 +551,15 @@ impl AsyncState<'_> {
         } else {
             ledger.up(bits, 1);
         }
-        ledger.down(dense_bits(self.d), 1);
+        match self.tracker.as_mut() {
+            Some(tr) => {
+                let cc = [c];
+                tr.plan(&cc, &mut self.dplan);
+                ledger.down(self.dplan.total_bits(), 1);
+                tr.ack(&cc);
+            }
+            None => ledger.down(dense_bits(self.d), 1),
+        }
         Ok(())
     }
 }
@@ -560,8 +575,11 @@ impl AsyncState<'_> {
 /// of the sync path's `1 / cohort` (resp. Horvitz–Thompson) scaling
 /// with the buffer as the cohort. Availability traces are a barrier
 /// concept and are ignored here (a client is simply always in flight);
-/// flat topology only, and each dispatch books one dense anchor
-/// broadcast down plus (if not dropped) the compressed payload up.
+/// flat topology only, and each dispatch books one anchor broadcast
+/// down — the full dense model, or under
+/// [`DownlinkMode::Delta`] the per-client min(dense resync,
+/// changed-coord delta) against the version that client last received —
+/// plus (if not dropped) the compressed payload up.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_buffered_async(
     drv: &Driver,
@@ -618,6 +636,19 @@ pub(crate) fn run_buffered_async(
         };
         (payload, weights)
     };
+    let tracker = match drv.down_mode {
+        DownlinkMode::Dense => None,
+        DownlinkMode::Delta => {
+            ensure!(
+                drv.down.is_none(),
+                "the anchor-delta downlink replaces the downlink compressor; configure one or \
+                 the other"
+            );
+            // the async anchor is eval_point() (AsyncState::dispatch):
+            // track exactly that
+            Some(DeltaTracker::new(&alg.eval_point(), n))
+        }
+    };
     let speeds = (0..n)
         .map(|c| spec.speed.sample(&mut event_rng(opts.seed, 0, c, EV_SPEED)))
         .collect();
@@ -639,6 +670,8 @@ pub(crate) fn run_buffered_async(
         version: 0,
         dispatches: 0,
         dropped: 0,
+        tracker,
+        dplan: DeltaRound::default(),
     };
     let mut ledger = CommLedger::default();
     let mut rec = RunRecord::new(alg.label());
@@ -671,6 +704,9 @@ pub(crate) fn run_buffered_async(
                 agg.fill(0.0);
                 in_buffer = 0;
                 st.version += 1;
+                if let Some(tr) = st.tracker.as_mut() {
+                    tr.record_round(&alg.eval_point());
+                }
                 applies += 1;
                 ledger.charge(drv.topology.round_cost(1));
                 ledger.snapshot(applies - 1);

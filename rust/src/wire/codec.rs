@@ -20,6 +20,15 @@
 //!   packs sign+level codes instead of f32s).
 //! - **PermK** — 64-bit shared round seed + 32 bits per kept value; the
 //!   block indices are re-derived from the seed on decode.
+//! - **Anchor delta** — the downlink sibling of the sparse layout:
+//!   `m * (32 + ceil(log2 d))` for `m` changed anchor coordinates, each
+//!   carried as its global index plus the coordinate's **new** raw f32
+//!   bits (not a difference — exact bit replacement, so a client anchor
+//!   can never drift from the server's). Indices are strictly
+//!   ascending; `m == 0` is legal (an unchanged anchor costs 0 bits).
+//!   The driver books `min(dense_bits(d), anchor_delta_bits(m, d))`
+//!   per receiver and falls back to a dense resync when delta would
+//!   not win (DESIGN.md §Wire, delta broadcast).
 //!
 //! Decoders validate everything they read (index ranges, level codes,
 //! lengths) and return `anyhow` errors on malformed input — never a
@@ -225,6 +234,58 @@ pub fn decode_masked_sparse(
         ensure!((g as usize) < dim, "support index {g} out of range for dim {dim}");
         let v = r.read_f32()?;
         out.push(g, v);
+    }
+    Ok(())
+}
+
+/// Exact bit cost of an anchor delta over `m` changed coordinates of a
+/// `d`-dimensional anchor: `m * (32 + idx_width(d))` — what the
+/// [`crate::coordinator::CommLedger`] books per delta-mode receiver
+/// (the frame's version/count header travels unbooked, like every
+/// other frame header).
+pub fn anchor_delta_bits(m: usize, d: usize) -> u64 {
+    m as u64 * (32 + idx_width(d) as u64)
+}
+
+/// Encode an anchor delta: for each changed coordinate (strictly
+/// ascending), its global index at [`idx_width`]`(anchor.len())` plus
+/// the coordinate's **new** value as raw f32 bits. Bit length is
+/// exactly [`anchor_delta_bits`]`(coords.len(), anchor.len())`.
+pub fn encode_anchor_delta(coords: &[u32], anchor: &[f32], w: &mut BitWriter) -> Result<()> {
+    let d = anchor.len();
+    let iw = idx_width(d);
+    let mut prev: Option<u32> = None;
+    for &i in coords {
+        ensure!((i as usize) < d, "delta index {i} out of range for dim {d}");
+        ensure!(
+            prev.is_none_or(|p| p < i),
+            "delta indices must be strictly ascending (saw {i} after {prev:?})"
+        );
+        prev = Some(i);
+        w.push(i as u64, iw);
+        w.push_f32(anchor[i as usize]);
+    }
+    Ok(())
+}
+
+/// Decode `m` anchor-delta pairs straight into `anchor`, overwriting
+/// each changed coordinate with its streamed f32 bits. Rejects
+/// out-of-range and non-ascending indices loudly — a corrupted delta
+/// must never silently desync a client anchor.
+pub fn decode_anchor_delta(r: &mut BitReader, m: usize, anchor: &mut [f32]) -> Result<()> {
+    let d = anchor.len();
+    let iw = idx_width(d);
+    let mut prev: Option<u32> = None;
+    for _ in 0..m {
+        let i = r.read(iw)?;
+        ensure!((i as usize) < d, "delta index {i} out of range for dim {d}");
+        let i = i as u32;
+        ensure!(
+            prev.is_none_or(|p| p < i),
+            "delta indices must be strictly ascending (saw {i} after {prev:?})"
+        );
+        prev = Some(i);
+        anchor[i as usize] = r.read_f32()?;
     }
     Ok(())
 }

@@ -22,18 +22,48 @@
 //! Arrival order affects only *when* decode work happens; commit order
 //! is fixed by the contract.
 //!
-//! The ROUND broadcast is encoded **once** per round; the only
-//! per-client bytes are the 4 little-endian scale bytes, which travel
-//! as the middle segment of a 3-segment vectored write around the
-//! shared frame — the frame itself is never copied or patched per
-//! client. Writes drain through the event loop with explicit
-//! backpressure state (`Outgoing::sent`), so a client with a full
-//! socket buffer delays only its own frames.
+//! The ROUND broadcast is encoded once per *variant* per round (dense
+//! mode: exactly one shared frame); the only per-client bytes are the
+//! 4 little-endian scale bytes, which travel as the middle segment of a
+//! 3-segment vectored write around the shared frame — the frame itself
+//! is never copied or patched per client. Writes drain through a
+//! per-connection **frame queue** with explicit backpressure state
+//! (`Outgoing::sent`), so a client with a full socket buffer delays
+//! only its own frames, and a newly committed round's broadcast is
+//! encoded and queued while earlier frames (a straggling broadcast, a
+//! DONE behind it) are still draining — the pipelining half of this
+//! module. Frames that arrive for an already-committed round are
+//! discarded loudly (`ServeStats::stale_discarded`), never decoded.
+//!
+//! Under [`crate::coordinator::delta::DownlinkMode::Delta`] the driver
+//! plans each round's downlink as per-receiver min(dense resync,
+//! changed-coordinate delta) and this transport encodes exactly the
+//! planned variants: after first contact a ROUND frame carries the
+//! anchor as exact `(index, new_f32)` pairs against the version the
+//! client last received (`amode = AMODE_DELTA`), with a dense resync
+//! (`AMODE_DENSE`) on first contact or whenever the delta would not
+//! win. Clients hold a persistent anchor + version and refuse a delta
+//! whose base version they do not hold — a desync dies loudly, never
+//! silently. Booked downlink bits equal encoded payload bits on both
+//! the in-process and networked paths (frame headers travel unbooked).
+//!
+//! Buffered-async scenarios also run over the wire
+//! ([`NetServer::serve`] routes `[scenario] mode = "async"` to the
+//! event-loop analog of [`crate::scenario::run_buffered_async`]):
+//! every client flies continuously at its own pace on
+//! dispatch-counter-keyed RNG streams, the server folds a
+//! staleness-weighted aggregate every `buffer` arrivals, and each
+//! redispatch re-broadcasts the anchor per-client (dense or delta).
+//! Virtual arrival order — not socket arrival order — decides the fold
+//! sequence, which is what keeps the networked async run bit-for-bit
+//! the in-process one (losses, booked bits, dispatch/apply counters).
 //!
 //! Frame layout (little-endian): `u32 len | u8 kind | payload`, where
 //! `len` counts the kind byte plus the payload and is capped at
 //! [`MAX_FRAME`]. Kinds: HELLO (client joins: id, fleet size, dim),
-//! ROUND (server→client round recipe), MSG (client→server one uplink
+//! ROUND (server→client round recipe; the anchor travels under an
+//! `amode` byte — dense `ver | f32×d`, or delta
+//! `base | ver | m | packed pairs`), MSG (client→server one uplink
 //! channel: round, channel, layout, pair count, bit-packed codec body,
 //! zero-padded to bytes), DONE (server→fleet shutdown). Malformed,
 //! truncated or oversized frames produce `anyhow` errors and a closed
@@ -44,6 +74,7 @@
 //! keeps decoding.
 
 use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::io::{self, BufReader, BufWriter, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
@@ -53,19 +84,23 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::bits::BitWriter;
+use super::bits::{BitReader, BitWriter};
 use super::codec::{self, LAYOUT_MASKED_RAW, LAYOUT_MASKED_SPARSE, LAYOUT_SPARSE};
 use super::evloop;
-use crate::algorithms::build_algorithm;
+use crate::algorithms::{build_algorithm, dense_bits, FlAlgorithm, PayloadSpec, ScaleSpec};
 use crate::algorithms::RunOptions;
 use crate::compress::SparseVec;
-use crate::config::{build_driver, compressor_by_name, Spec};
+use crate::config::{build_driver, build_scenario, compressor_by_name, Spec};
+use crate::coordinator::delta::{DeltaRound, DeltaTracker, DownlinkMode};
+use crate::coordinator::driver::{record_eval, Topology};
 use crate::coordinator::fused::{run_chunk, FusedKit, FusedPayload, StagedUplink};
-use crate::coordinator::{FusedUplink, PoolInput, WorkerOut};
+use crate::coordinator::{CommLedger, FusedUplink, PoolInput, WorkerOut};
 use crate::data::synth::Heterogeneity;
-use crate::metrics::{RoundStat, RunRecord};
+use crate::metrics::{RoundStat, RunRecord, ScenarioStat};
 use crate::oracle::logreg_rs::RustLogReg;
 use crate::oracle::Oracle;
+use crate::scenario::{event_rng, Mode, ScenarioSpec, Staleness, EV_COMPUTE, EV_DROP, EV_SPEED};
+use crate::vecmath as vm;
 
 /// Hard ceiling on one frame's size (kind byte + payload): 64 MiB.
 pub const MAX_FRAME: u32 = 1 << 26;
@@ -91,6 +126,16 @@ const DONE_FRAME: [u8; 5] = [1, 0, 0, 0, KIND_DONE];
 const PAYLOAD_GRADIENT: u8 = 0;
 const PAYLOAD_LOCAL_SGD: u8 = 1;
 
+/// ROUND anchor modes: the byte after the `d u32` field picks how the
+/// anchor travels. Dense: `ver u64 | f32 × d` (the full model, version
+/// stamped). Delta: `base u64 | ver u64 | m u32 | packed pairs` — `m`
+/// (index, new_f32) pairs against the anchor of version `base`, packed
+/// by [`codec::encode_anchor_delta`] and zero-padded to whole bytes
+/// (the byte length is recomputed client-side from `m` and `d`, so a
+/// truncated delta can never parse).
+const AMODE_DENSE: u8 = 0;
+const AMODE_DELTA: u8 = 1;
+
 // ---------------------------------------------------------------------
 // address grammar + stream/listener abstraction
 // ---------------------------------------------------------------------
@@ -111,6 +156,12 @@ impl Stream {
         })
     }
 
+    /// Kernel-level read timeout — **client-side only** (used solely by
+    /// [`Conn::new`] under the fleet's blocking `BufReader` loop, where
+    /// it is the one thing standing between a silent coordinator and a
+    /// client thread blocked forever). The server never calls this: its
+    /// connections are nonblocking under the poller, with progress
+    /// deadlines enforced per connection in the event loop instead.
     fn set_read_timeout(&self, t: Duration) -> Result<()> {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(Some(t))?,
@@ -498,13 +549,33 @@ fn spec_opts(spec: &Spec) -> RunOptions {
 
 /// Run a spec in-process on the fused worker-pool path, streaming eval
 /// rounds — the reference a networked run must match bit for bit.
+/// Specs with a `[scenario]` section run under the virtual clock
+/// (buffered-async included), replaying the recorded eval rounds
+/// through `on_eval` after the run.
 pub fn run_in_process(spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Result<RunRecord> {
     let oracle = fleet_oracle(spec)?;
     let d = oracle.dim();
     let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
     let driver = build_driver(spec, spec.dataset.clients)?;
     let x0 = vec![0.5f32; d];
-    driver.run_parallel_streaming(alg.as_mut(), &oracle, &x0, &spec_opts(spec), |r| on_eval(r))
+    match &spec.scenario {
+        Some(sc) => {
+            let scen = build_scenario(sc)?;
+            let rec =
+                driver.run_scenario_parallel(alg.as_mut(), &oracle, &scen, &x0, &spec_opts(spec))?;
+            for r in &rec.rounds {
+                on_eval(r);
+            }
+            Ok(rec)
+        }
+        None => driver.run_parallel_streaming(
+            alg.as_mut(),
+            &oracle,
+            &x0,
+            &spec_opts(spec),
+            |r| on_eval(r),
+        ),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -566,8 +637,11 @@ impl RecvBuf {
 
 /// A broadcast frame draining through the event loop; `sent` is the
 /// write-backpressure cursor (bytes already accepted by the kernel).
+/// `Frame` carries an index into the transport's per-round frame pool
+/// (dense mode: one shared frame; delta mode: one per variant; async
+/// mode: one per client).
 enum Outgoing {
-    Round { sent: usize },
+    Frame { idx: usize, sent: usize },
     Done { sent: usize },
 }
 
@@ -579,7 +653,10 @@ struct EvConn {
     /// of its vectored ROUND write, in place of the shared frame's
     /// zeroed hole.
     scale: [u8; 4],
-    out: Option<Outgoing>,
+    /// Queued broadcast frames, drained front-first in order — a new
+    /// round's frame (or the shutdown DONE) enqueues behind whatever
+    /// is still draining instead of clobbering it.
+    out: VecDeque<Outgoing>,
     /// Progress deadline: refreshed on every byte read or written.
     /// Consulted only while the round is actually waiting on this
     /// connection.
@@ -609,6 +686,14 @@ pub struct ServeStats {
     /// Connections shed: beyond `--max-clients`, or arriving after the
     /// fleet was already complete.
     pub rejected: u64,
+    /// Deepest per-connection broadcast queue observed (1 = no frame
+    /// ever waited behind another; >1 = pipelined rounds overlapped a
+    /// still-draining frame).
+    pub max_queue_depth: u64,
+    /// MSG frames for an already-committed round, discarded loudly
+    /// without decoding (stragglers racing the shutdown drain, or a
+    /// late answer to a superseded dispatch).
+    pub stale_discarded: u64,
 }
 
 /// What one [`pump`] call runs the event loop for.
@@ -638,13 +723,23 @@ struct TransportInner {
     /// Poll-slot → connection-id map, rebuilt each lap (slot 0 is the
     /// listener).
     pslots: Vec<usize>,
-    /// The round's shared ROUND frame (header + body), encoded once;
-    /// per-client writes splice each connection's scale bytes over the
-    /// hole at `scale_off`.
-    round_frame: Vec<u8>,
+    /// The round's ROUND frame pool (header + body each), encoded once
+    /// per distinct broadcast body; per-client writes splice each
+    /// connection's scale bytes over the hole at `scale_off` (the same
+    /// fixed offset in every variant). Dense mode uses one shared
+    /// frame; delta mode one per [`DeltaRound`] variant; async mode one
+    /// per client.
+    frames: Vec<Vec<u8>>,
+    /// Bit-packing scratch for delta-variant encoding (reused across
+    /// rounds; dense-only runs never touch it).
+    wbuf: BitWriter,
     scale_off: usize,
     round: usize,
     layout: u8,
+    /// True while the run is over and queued DONEs drain: every
+    /// arriving MSG is a straggler, discarded loudly instead of parsed
+    /// against a round that no longer exists.
+    draining: bool,
     sup: Vec<u32>,
     input: PoolInput,
 }
@@ -661,19 +756,113 @@ pub struct NetTransport<'a> {
 
 impl NetTransport<'_> {
     /// Broadcast DONE to every open connection and drain — the fleet's
-    /// clean-shutdown signal.
+    /// clean-shutdown signal. DONE enqueues *behind* any frame still
+    /// draining (an async straggler's last redispatch, a pipelined
+    /// round's tail), and MSG frames arriving during the drain are
+    /// stragglers by definition — discarded loudly, never decoded.
     pub fn shutdown(&self) -> Result<()> {
         let mut guard = self.inner.borrow_mut();
         let inner = &mut *guard;
+        inner.draining = true;
         let now = Instant::now();
         for c in inner.conns.iter_mut() {
             if c.open {
-                c.out = Some(Outgoing::Done { sent: 0 });
+                c.out.push_back(Outgoing::Done { sent: 0 });
+                self.srv.stat(|s| s.max_queue_depth = s.max_queue_depth.max(c.out.len() as u64));
                 c.deadline = now + self.srv.timeout;
             }
         }
         pump(self.srv, inner, self.dim, Until::WritesFlushed).context("broadcasting DONE")
     }
+}
+
+/// Encode one ROUND frame into `buf`: length hole, recipe header, the
+/// anchor under its `amode`, the mask support. `down = None` is the
+/// pure dense downlink (version-stamped with the round counter);
+/// `Some((plan, v))` encodes variant `v` of a [`DeltaRound`] — a dense
+/// resync or a changed-coordinate delta whose packed bits are enforced
+/// equal to the bits the plan books. Returns the scale-hole offset,
+/// which sits at the same fixed position in every variant (after
+/// len/kind/round/seed), so the per-client 3-segment scale splice
+/// never depends on which frame a client gets.
+fn encode_round_frame(
+    buf: &mut Vec<u8>,
+    inp: &PoolInput,
+    layout: u8,
+    dim: usize,
+    down: Option<(&DeltaRound, usize)>,
+    w: &mut BitWriter,
+) -> Result<usize> {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]); // length, patched below
+    buf.push(KIND_ROUND);
+    buf.extend_from_slice(&u32::try_from(inp.round).context("round exceeds u32")?.to_le_bytes());
+    buf.extend_from_slice(&inp.seed.to_le_bytes());
+    let scale_off = buf.len();
+    buf.extend_from_slice(&0f32.to_le_bytes());
+    buf.push(layout);
+    match inp.payload {
+        FusedPayload::Gradient => buf.push(PAYLOAD_GRADIENT),
+        FusedPayload::LocalSgd { steps, lr, prox_mu } => {
+            buf.push(PAYLOAD_LOCAL_SGD);
+            buf.extend_from_slice(
+                &u32::try_from(steps).context("local steps exceed u32")?.to_le_bytes(),
+            );
+            buf.extend_from_slice(&lr.to_le_bytes());
+            match prox_mu {
+                Some(mu) => {
+                    buf.push(1);
+                    buf.extend_from_slice(&mu.to_le_bytes());
+                }
+                None => buf.push(0),
+            }
+        }
+        FusedPayload::Scaffold { .. } => bail!(
+            "stateful (Scaffold) payloads cannot be served over the wire: the control \
+             rows live in server memory"
+        ),
+        FusedPayload::None => bail!("networked round dispatched without a payload recipe"),
+    }
+    buf.extend_from_slice(&(dim as u32).to_le_bytes());
+    let dense_body = |buf: &mut Vec<u8>, ver: u64| {
+        buf.push(AMODE_DENSE);
+        buf.extend_from_slice(&ver.to_le_bytes());
+        for &x in &inp.point {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    match down {
+        None => dense_body(buf, inp.round as u64),
+        Some((plan, v)) => match plan.variant(v).base {
+            None => dense_body(buf, plan.version),
+            Some(base) => {
+                let coords = plan.coords_of(v);
+                buf.push(AMODE_DELTA);
+                buf.extend_from_slice(&base.to_le_bytes());
+                buf.extend_from_slice(&plan.version.to_le_bytes());
+                buf.extend_from_slice(&(coords.len() as u32).to_le_bytes());
+                w.clear();
+                codec::encode_anchor_delta(coords, &inp.point, w)?;
+                // the downlink codec invariant: encoded payload bits ==
+                // the bits the driver books for this variant
+                ensure!(
+                    w.bit_len() == plan.bits_of(v),
+                    "delta variant packs {} bits but the plan books {}",
+                    w.bit_len(),
+                    plan.bits_of(v)
+                );
+                buf.extend_from_slice(w.finish());
+            }
+        },
+    }
+    buf.extend_from_slice(&(inp.sup.len() as u32).to_le_bytes());
+    for &j in &inp.sup {
+        buf.extend_from_slice(&j.to_le_bytes());
+    }
+    let len = buf.len() as u64 - 4;
+    ensure!(len <= MAX_FRAME as u64, "ROUND frame of {len} bytes exceeds MAX_FRAME");
+    buf[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    Ok(scale_off)
 }
 
 impl FusedUplink for NetTransport<'_> {
@@ -682,6 +871,7 @@ impl FusedUplink for NetTransport<'_> {
         cohort: &[usize],
         _groups: Option<&[usize]>,
         channels: usize,
+        down: Option<&DeltaRound>,
         fill: &mut dyn FnMut(&mut PoolInput),
     ) -> Result<()> {
         let mut guard = self.inner.borrow_mut();
@@ -706,67 +896,39 @@ impl FusedUplink for NetTransport<'_> {
         inner.sup.clear();
         inner.sup.extend_from_slice(&inp.sup);
         inner.staging.begin_round(cohort, channels, n);
+        if let Some(plan) = down {
+            ensure!(
+                plan.assign.len() == cohort.len(),
+                "delta plan assigns {} receivers for a cohort of {}",
+                plan.assign.len(),
+                cohort.len()
+            );
+        }
 
-        // one shared ROUND frame per round — encoded once, never
-        // re-patched per client; the scale hole stays zeroed and each
-        // connection's 4 scale bytes are spliced in by the vectored
-        // write
-        let f = &mut inner.round_frame;
-        f.clear();
-        f.extend_from_slice(&[0u8; 4]); // length, patched below
-        f.push(KIND_ROUND);
-        f.extend_from_slice(&u32::try_from(inp.round).context("round exceeds u32")?.to_le_bytes());
-        f.extend_from_slice(&inp.seed.to_le_bytes());
-        let scale_off = f.len();
-        f.extend_from_slice(&0f32.to_le_bytes());
-        f.push(layout);
-        match inp.payload {
-            FusedPayload::Gradient => f.push(PAYLOAD_GRADIENT),
-            FusedPayload::LocalSgd { steps, lr, prox_mu } => {
-                f.push(PAYLOAD_LOCAL_SGD);
-                f.extend_from_slice(
-                    &u32::try_from(steps).context("local steps exceed u32")?.to_le_bytes(),
-                );
-                f.extend_from_slice(&lr.to_le_bytes());
-                match prox_mu {
-                    Some(mu) => {
-                        f.push(1);
-                        f.extend_from_slice(&mu.to_le_bytes());
-                    }
-                    None => f.push(0),
-                }
-            }
-            FusedPayload::Scaffold { .. } => bail!(
-                "stateful (Scaffold) payloads cannot be served over the wire: the control \
-                 rows live in server memory"
-            ),
-            FusedPayload::None => bail!("networked round dispatched without a payload recipe"),
+        // encode the round's frame pool — one frame per distinct
+        // broadcast body, never re-patched per client (the scale hole
+        // stays zeroed; each connection's 4 scale bytes are spliced in
+        // by the vectored write). Delta-mode receivers sharing a base
+        // version share the encoded frame bytes.
+        let nframes = down.map_or(1, |p| p.n_variants());
+        if inner.frames.len() < nframes {
+            inner.frames.resize_with(nframes, Vec::new);
         }
-        f.extend_from_slice(&(self.dim as u32).to_le_bytes());
-        for &v in &inp.point {
-            f.extend_from_slice(&v.to_le_bytes());
+        let mut scale_off = inner.scale_off;
+        for v in 0..nframes {
+            scale_off = encode_round_frame(
+                &mut inner.frames[v],
+                &inner.input,
+                layout,
+                self.dim,
+                down.map(|p| (p, v)),
+                &mut inner.wbuf,
+            )?;
         }
-        f.extend_from_slice(&(inp.sup.len() as u32).to_le_bytes());
-        for &j in &inp.sup {
-            f.extend_from_slice(&j.to_le_bytes());
-        }
-        let len = f.len() as u64 - 4;
-        ensure!(len <= MAX_FRAME as u64, "ROUND frame of {len} bytes exceeds MAX_FRAME");
-        let len32 = (len as u32).to_le_bytes();
-        f[..4].copy_from_slice(&len32);
         inner.scale_off = scale_off;
-        // broadcast-cost invariant: scale patching never changes the
-        // frame, so every client receives the same anchor payload the
-        // ledger prices — 32·d bits, `dense_bits(d)`, the unmasked
-        // uncompressed downlink charge
-        let anchor_bits = 32 * inp.point.len() as u64;
-        ensure!(
-            anchor_bits == crate::algorithms::dense_bits(inp.point.len()),
-            "ROUND anchor packs {anchor_bits} bits but the ledger books {}",
-            crate::algorithms::dense_bits(inp.point.len())
-        );
 
         let now = Instant::now();
+        let mut maxq = 0u64;
         for (p, &client) in cohort.iter().enumerate() {
             let c = inner
                 .conns
@@ -779,20 +941,25 @@ impl FusedUplink for NetTransport<'_> {
                 inp.round
             );
             c.scale = inp.scales[p].to_le_bytes();
-            c.out = Some(Outgoing::Round { sent: 0 });
+            let idx = down.map_or(0, |plan| plan.assign[p] as usize);
+            c.out.push_back(Outgoing::Frame { idx, sent: 0 });
+            maxq = maxq.max(c.out.len() as u64);
             c.deadline = now + self.srv.timeout;
         }
-        self.srv.stat(|s| s.rounds_broadcast += cohort.len() as u64);
+        self.srv.stat(|s| {
+            s.rounds_broadcast += cohort.len() as u64;
+            s.max_queue_depth = s.max_queue_depth.max(maxq);
+        });
 
         // adversarially early bytes (a peer answering before its ROUND
         // even went out) may already sit in a receive window; surface
         // them now so they fail loudly instead of idling untouched
         {
-            let TransportInner { conns, staging, sup, round, layout, .. } = &mut *inner;
+            let TransportInner { conns, staging, sup, round, layout, draining, .. } = &mut *inner;
             let meta = RoundMeta { round: *round, layout: *layout };
             for (id, c) in conns.iter_mut().enumerate() {
                 if c.open && !c.rbuf.is_empty() {
-                    parse_msg_frames(self.srv, c, id, staging, meta, sup, self.dim)?;
+                    parse_msg_frames(self.srv, c, id, staging, meta, sup, self.dim, *draining)?;
                 }
             }
         }
@@ -832,21 +999,28 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
         staging,
         poller,
         pslots,
-        round_frame,
+        frames,
         scale_off,
         round,
         layout,
+        draining,
         sup,
         ..
     } = inner;
     let meta = RoundMeta { round: *round, layout: *layout };
     let scale_off = *scale_off;
+    let draining = *draining;
     loop {
-        let writes_pending = conns.iter().any(|c| c.open && c.out.is_some());
+        let writes_pending = conns.iter().any(|c| c.open && !c.out.is_empty());
         let done = match until {
             Until::Opportunistic => false,
             Until::WritesFlushed => !writes_pending,
-            Until::StagingComplete => !writes_pending && staging.is_complete(),
+            // staging completeness alone closes the barrier: a cohort
+            // member can only have answered after fully receiving its
+            // ROUND, so its own frame has necessarily drained — and any
+            // *other* queued frame (a non-awaited straggler's) may keep
+            // draining into the next round's event loop (pipelining)
+            Until::StagingComplete => staging.is_complete(),
         };
         if done {
             return Ok(());
@@ -859,7 +1033,7 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
             if !c.open {
                 continue;
             }
-            let awaited = c.out.is_some()
+            let awaited = !c.out.is_empty()
                 || (until == Until::StagingComplete
                     && staging.cohort_pos(id).is_some_and(|p| !staging.client_complete(p)));
             if !awaited {
@@ -884,7 +1058,7 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
             if !c.open {
                 continue;
             }
-            let interest = evloop::Interest { read: true, write: c.out.is_some() };
+            let interest = evloop::Interest { read: true, write: !c.out.is_empty() };
             poller.push(c.stream.raw_fd(), interest);
             pslots.push(id);
         }
@@ -910,8 +1084,8 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                 continue;
             }
             let c = &mut conns[id];
-            if c.out.is_some() && (rd.writable || rd.closed) {
-                drain_conn_out(srv, c, id, round_frame, scale_off)?;
+            if !c.out.is_empty() && (rd.writable || rd.closed) {
+                drain_conn_out(srv, c, id, frames, scale_off)?;
             }
             if rd.readable || rd.closed {
                 loop {
@@ -935,9 +1109,9 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                         }
                     }
                 }
-                parse_msg_frames(srv, c, id, staging, meta, sup, dim)?;
+                parse_msg_frames(srv, c, id, staging, meta, sup, dim, draining)?;
                 if !c.open {
-                    let awaited = c.out.is_some()
+                    let awaited = !c.out.is_empty()
                         || staging.cohort_pos(id).is_some_and(|p| !staging.client_complete(p));
                     ensure!(
                         !awaited,
@@ -954,39 +1128,40 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
     }
 }
 
-/// Drain a connection's queued broadcast frame as far as the kernel
-/// will take it right now. A ROUND goes out as a 3-segment vectored
-/// write — shared frame before the scale hole, this client's 4 scale
-/// bytes, shared frame after — so per-client cost is 4 bytes of state,
-/// not a frame copy.
+/// Drain a connection's queued broadcast frames, front-first and in
+/// order, as far as the kernel will take them right now. A ROUND goes
+/// out as a 3-segment vectored write — its frame before the scale
+/// hole, this client's 4 scale bytes, the frame after — so per-client
+/// cost is 4 bytes of state, not a frame copy. A frame that finishes
+/// pops and the next queued one (a pipelined round's broadcast, or the
+/// shutdown DONE behind it) starts immediately.
 fn drain_conn_out(
     srv: &NetServer,
     c: &mut EvConn,
     id: usize,
-    round_frame: &[u8],
+    frames: &[Vec<u8>],
     scale_off: usize,
 ) -> Result<()> {
     let EvConn { stream, scale, out, deadline, open, .. } = c;
-    let round_parts: [&[u8]; 3] =
-        [&round_frame[..scale_off], &scale[..], &round_frame[scale_off + 4..]];
-    let done_parts: [&[u8]; 1] = [&DONE_FRAME];
-    debug_assert_eq!(
-        round_parts.iter().map(|p| p.len()).sum::<usize>(),
-        round_frame.len(),
-        "scale splice must preserve the frame length"
-    );
     loop {
-        let (is_round, sent_now) = match &*out {
+        let (frame, sent_now) = match out.front() {
             None => return Ok(()),
-            Some(Outgoing::Round { sent }) => (true, *sent),
-            Some(Outgoing::Done { sent }) => (false, *sent),
+            Some(Outgoing::Frame { idx, sent }) => (Some(&frames[*idx]), *sent),
+            Some(Outgoing::Done { sent }) => (None, *sent),
         };
-        let parts: &[&[u8]] = if is_round { &round_parts } else { &done_parts };
-        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let round_parts: [&[u8]; 3] = match frame {
+            Some(f) => [&f[..scale_off], &scale[..], &f[scale_off + 4..]],
+            None => [&DONE_FRAME, &[], &[]],
+        };
+        debug_assert!(
+            frame.is_none_or(|f| round_parts.iter().map(|p| p.len()).sum::<usize>() == f.len()),
+            "scale splice must preserve the frame length"
+        );
+        let total: usize = round_parts.iter().map(|p| p.len()).sum();
         let mut iov = [IoSlice::new(&[]); 3];
         let mut niov = 0usize;
         let mut off = sent_now;
-        for p in parts {
+        for p in &round_parts {
             if off >= p.len() {
                 off -= p.len();
                 continue;
@@ -1011,13 +1186,16 @@ fn drain_conn_out(
         srv.stat(|st| st.bytes_out += wrote as u64);
         *deadline = Instant::now() + srv.timeout;
         let new_sent = sent_now + wrote;
-        *out = if new_sent >= total {
-            None
-        } else if is_round {
-            Some(Outgoing::Round { sent: new_sent })
+        if new_sent >= total {
+            out.pop_front();
         } else {
-            Some(Outgoing::Done { sent: new_sent })
-        };
+            match out.front_mut() {
+                Some(Outgoing::Frame { sent, .. }) | Some(Outgoing::Done { sent }) => {
+                    *sent = new_sent;
+                }
+                None => unreachable!("front frame vanished mid-drain"),
+            }
+        }
     }
 }
 
@@ -1026,7 +1204,12 @@ fn drain_conn_out(
 /// The bit-packed body is borrowed straight out of the receive window
 /// (no per-frame copy) and validated against the round context: round
 /// echo, channel range, negotiated layout, and the exact byte length
-/// the server-side bit formula dictates.
+/// the server-side bit formula dictates. Frames for an *earlier* round
+/// (a straggler racing a pipelined broadcast) and every frame arriving
+/// during the shutdown drain are consumed and discarded loudly —
+/// counted in [`ServeStats::stale_discarded`], never decoded; a frame
+/// claiming a *future* round stays a hard protocol error.
+#[allow(clippy::too_many_arguments)]
 fn parse_msg_frames(
     srv: &NetServer,
     c: &mut EvConn,
@@ -1035,9 +1218,10 @@ fn parse_msg_frames(
     meta: RoundMeta,
     sup: &[u32],
     dim: usize,
+    draining: bool,
 ) -> Result<()> {
     loop {
-        let flen = {
+        let (flen, staged) = {
             let data = c.rbuf.data();
             let Some((kind, flen)) = peek_frame(data)? else { return Ok(()) };
             ensure!(kind == KIND_MSG, "client {id} sent frame kind {kind}, expected MSG");
@@ -1048,26 +1232,45 @@ fn parse_msg_frames(
             let mlayout = cur.u8()?;
             let k = cur.u32()? as usize;
             let body = cur.rest();
-            let pos = staging
-                .cohort_pos(id)
-                .with_context(|| format!("client {id} sent an MSG outside its cohort round"))?;
-            ensure!(
-                mround == meta.round && mch < staging.channels() && mlayout == meta.layout,
-                "client {id} answered (round {mround}, ch {mch}, layout {mlayout}); expected \
-                 (round {}, {} channels, layout {})",
-                meta.round,
-                staging.channels(),
-                meta.layout
-            );
-            staging
-                .stage_with(pos, mch, &mut |sv| {
-                    codec::decode_wire_body(mlayout, k, body, dim, sup, sv)
-                })
-                .with_context(|| format!("decoding client {id} channel {mch}"))?;
-            flen
+            if draining || mround < meta.round {
+                eprintln!(
+                    "[fedeff] discarding stale MSG from client {id}: round {mround}, ch {mch} \
+                     (server {})",
+                    if draining {
+                        "is draining for shutdown".to_string()
+                    } else {
+                        format!("is on round {}", meta.round)
+                    }
+                );
+                (flen, false)
+            } else {
+                let pos = staging
+                    .cohort_pos(id)
+                    .with_context(|| format!("client {id} sent an MSG outside its cohort round"))?;
+                ensure!(
+                    mround == meta.round && mch < staging.channels() && mlayout == meta.layout,
+                    "client {id} answered (round {mround}, ch {mch}, layout {mlayout}); expected \
+                     (round {}, {} channels, layout {})",
+                    meta.round,
+                    staging.channels(),
+                    meta.layout
+                );
+                staging
+                    .stage_with(pos, mch, &mut |sv| {
+                        codec::decode_wire_body(mlayout, k, body, dim, sup, sv)
+                    })
+                    .with_context(|| format!("decoding client {id} channel {mch}"))?;
+                (flen, true)
+            }
         };
         c.rbuf.consume(flen);
-        srv.stat(|st| st.frames_in += 1);
+        srv.stat(|st| {
+            if staged {
+                st.frames_in += 1;
+            } else {
+                st.stale_discarded += 1;
+            }
+        });
     }
 }
 
@@ -1271,7 +1474,7 @@ impl NetServer {
                     stream,
                     rbuf,
                     scale: [0u8; 4],
-                    out: None,
+                    out: VecDeque::new(),
                     deadline: now + self.timeout,
                     open: true,
                 }
@@ -1286,10 +1489,12 @@ impl NetServer {
                 staging: StagedUplink::default(),
                 poller: evloop::Poller::new(),
                 pslots: Vec::new(),
-                round_frame: Vec::new(),
+                frames: Vec::new(),
+                wbuf: BitWriter::new(),
                 scale_off: 0,
                 round: 0,
                 layout: LAYOUT_SPARSE,
+                draining: false,
                 sup: Vec::new(),
                 input: PoolInput::default(),
             }),
@@ -1303,11 +1508,19 @@ impl NetServer {
     /// every eval round (the JSON metrics line of `fedeff serve
     /// --listen`).
     pub fn serve(&self, spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Result<RunRecord> {
-        ensure!(
-            spec.scenario.is_none(),
-            "time-aware scenarios are in-process only (the virtual clock replaces the real \
-             barrier); drop [scenario] or serve without --listen"
-        );
+        if let Some(sc) = &spec.scenario {
+            let scen = build_scenario(sc)?;
+            return match scen.mode {
+                Mode::BufferedAsync { buffer, staleness } => {
+                    self.serve_buffered_async(spec, &scen, buffer, staleness, on_eval)
+                }
+                Mode::Sync => bail!(
+                    "sync-mode time-aware scenarios are in-process only (the virtual clock \
+                     replaces the real barrier); use mode = \"async\", drop [scenario], or \
+                     serve without --listen"
+                ),
+            };
+        }
         let oracle = fleet_oracle(spec)?;
         let n = spec.dataset.clients;
         let d = oracle.dim();
@@ -1326,6 +1539,493 @@ impl NetServer {
         )?;
         transport.shutdown()?;
         Ok(rec)
+    }
+
+    /// The event-loop analog of [`crate::scenario::run_buffered_async`]
+    /// over real sockets: every client flies continuously at its own
+    /// pace, computing each payload against the anchor its ROUND frame
+    /// carried (dense or delta) on dispatch-counter-keyed RNG streams;
+    /// the server folds a staleness-weighted aggregate every `buffer`
+    /// arrivals and re-broadcasts the new anchor per client. The fold
+    /// sequence is decided by **virtual** arrival time — dispatch vtime
+    /// + drawn compute + bits/bandwidth — never by socket arrival
+    /// order, and uplink bits are booked when a client's MSG lands,
+    /// which the engine serializes before the next fold so every
+    /// ledger snapshot sees exactly the totals the in-process engine
+    /// books at dispatch time. Bit-for-bit the in-process run: losses,
+    /// booked bits, dispatch/apply counters (pinned by
+    /// rust/tests/serve_net.rs).
+    fn serve_buffered_async(
+        &self,
+        spec: &Spec,
+        sspec: &ScenarioSpec,
+        buffer: usize,
+        staleness: Staleness,
+        on_eval: &mut dyn FnMut(&RoundStat),
+    ) -> Result<RunRecord> {
+        let oracle = fleet_oracle(spec)?;
+        let n = spec.dataset.clients;
+        let d = oracle.dim();
+        let mut alg: Box<dyn FlAlgorithm> = build_algorithm(&spec.algorithm, &oracle)?;
+        let drv = build_driver(spec, n)?;
+        let opts = spec_opts(spec);
+        // the in-process engine's contract, verbatim — plus the wire's
+        // own requirement of a sparse-codable uplink
+        ensure!(
+            matches!(drv.topology, Topology::Flat),
+            "buffered-async scenarios support only the flat topology"
+        );
+        ensure!(
+            drv.mask.is_none(),
+            "buffered-async scenarios do not compose with training-time sparsity masks"
+        );
+        ensure!(
+            drv.sampler.is_none(),
+            "buffered-async scenarios run every client continuously; drop the cohort sampler"
+        );
+        ensure!(
+            alg.supports_async(),
+            "{} does not support buffered-async aggregation",
+            alg.label()
+        );
+        ensure!((1..=n).contains(&buffer), "async buffer size must be in 1..={n}, got {buffer}");
+        let comp = leaf_compressor(spec);
+        ensure!(
+            comp.is_some(),
+            "a networked buffered-async serve needs a sparse-capable uplink compressor (the \
+             wire carries codec frames, not dense payloads)"
+        );
+        let x0 = vec![0.5f32; d];
+        alg.init(&oracle, &x0, &opts)?;
+        let (payload, weights) = {
+            let plan = match alg.uplink_plan() {
+                Some(p) if p.executable() && p.channels() == 1 => p,
+                _ => bail!(
+                    "{} advertises no single-channel executable uplink plan for async execution",
+                    alg.label()
+                ),
+            };
+            let payload = match plan.payload {
+                PayloadSpec::Gradient => FusedPayload::Gradient,
+                PayloadSpec::LocalSgd { steps, lr, prox_mu } => {
+                    FusedPayload::LocalSgd { steps, lr, prox_mu }
+                }
+                _ => bail!(
+                    "{} advertises no single-channel executable uplink plan for async execution",
+                    alg.label()
+                ),
+            };
+            let weights = match plan.scale {
+                ScaleSpec::MeanOverCohort => None,
+                ScaleSpec::WeightedHt { weights } => Some(weights.to_vec()),
+            };
+            (payload, weights)
+        };
+        let mut tracker = match drv.down_mode {
+            DownlinkMode::Dense => None,
+            DownlinkMode::Delta => {
+                ensure!(
+                    drv.down.is_none(),
+                    "the anchor-delta downlink replaces the downlink compressor; configure one \
+                     or the other"
+                );
+                Some(DeltaTracker::new(&alg.eval_point(), n))
+            }
+        };
+        let speeds: Vec<f64> = (0..n)
+            .map(|c| sspec.speed.sample(&mut event_rng(opts.seed, 0, c, EV_SPEED)))
+            .collect();
+
+        let transport = self.accept_fleet(n, d, comp.is_some())?;
+        let mut guard = transport.inner.borrow_mut();
+        let inner = &mut *guard;
+        inner.frames.resize_with(n, Vec::new);
+        inner.layout = LAYOUT_SPARSE;
+        let mut st = AsyncNetState {
+            speeds,
+            k: vec![0; n],
+            base_t: vec![0.0; n],
+            arrival: vec![0.0; n],
+            known: vec![false; n],
+            dropflag: vec![false; n],
+            anchor_ver: vec![0; n],
+            recv: vec![0.0; n * d],
+            sv: SparseVec::default(),
+            dplan: DeltaRound::default(),
+            dispatches: 0,
+            dropped: 0,
+        };
+        let mut version = 0u64;
+        let mut ledger = CommLedger::default();
+        let mut rec = RunRecord::new(alg.label());
+        record_eval(alg.as_ref(), &oracle, 0, &ledger, &opts, 0.0, &mut rec)?;
+        on_eval(rec.rounds.last().expect("eval just recorded"));
+        let bw = sspec.bandwidth;
+        {
+            let anchor = alg.eval_point();
+            for c in 0..n {
+                async_dispatch(
+                    self, inner, &mut st, &mut ledger, &mut tracker, &anchor, payload, sspec,
+                    opts.seed, d, version, c, 0.0,
+                )?;
+            }
+        }
+        let mut agg = vec![0.0f32; d];
+        let mut in_buffer = 0usize;
+        let mut applies = 0usize;
+        let mut vtime = 0.0f64;
+        while applies < opts.rounds {
+            // every in-flight MSG must land before the argmin: booking
+            // its uplink bits here (instead of at dispatch, where the
+            // in-process engine predicts them) is what keeps each
+            // snapshot's totals identical
+            pump_async(self, inner, &mut st, &mut ledger, d, bw)?;
+            // next arrival: earliest in-flight update, client-id tiebreak
+            let mut c = 0usize;
+            for i in 1..n {
+                if st.arrival[i] < st.arrival[c] {
+                    c = i;
+                }
+            }
+            let now = st.arrival[c];
+            vtime = now;
+            if !st.dropflag[c] {
+                let s = version - st.anchor_ver[c];
+                let wc = weights.as_ref().map_or(1.0, |w| w[c] as f64);
+                let coeff = (staleness.weight(s) * wc / buffer as f64) as f32;
+                vm::axpy(coeff, &st.recv[c * d..(c + 1) * d], &mut agg);
+                in_buffer += 1;
+                if in_buffer == buffer {
+                    alg.absorb_async(&agg)?;
+                    agg.fill(0.0);
+                    in_buffer = 0;
+                    version += 1;
+                    if let Some(tr) = tracker.as_mut() {
+                        tr.record_round(&alg.eval_point());
+                    }
+                    applies += 1;
+                    ledger.charge(drv.topology.round_cost(1));
+                    ledger.snapshot(applies - 1);
+                    if applies < opts.rounds && applies % opts.eval_every == 0 {
+                        record_eval(alg.as_ref(), &oracle, applies, &ledger, &opts, vtime, &mut rec)?;
+                        on_eval(rec.rounds.last().expect("eval just recorded"));
+                    }
+                }
+            }
+            if applies < opts.rounds {
+                let anchor = alg.eval_point();
+                async_dispatch(
+                    self, inner, &mut st, &mut ledger, &mut tracker, &anchor, payload, sspec,
+                    opts.seed, d, version, c, now,
+                )?;
+            }
+        }
+        record_eval(alg.as_ref(), &oracle, opts.rounds, &ledger, &opts, vtime, &mut rec)?;
+        on_eval(rec.rounds.last().expect("eval just recorded"));
+        rec.scenario = Some(ScenarioStat {
+            vtime,
+            dropped: st.dropped,
+            unavailable: 0,
+            dispatches: st.dispatches,
+            applies: applies as u64,
+        });
+        drop(guard);
+        transport.shutdown()?;
+        Ok(rec)
+    }
+}
+
+/// Per-client flight state of the *networked* buffered-async engine —
+/// the wire analog of the in-process `AsyncState`: same counters, same
+/// RNG keying, but the payload is computed by the real remote client
+/// and the uplink bits are read off the decoded MSG instead of
+/// predicted at dispatch.
+struct AsyncNetState {
+    /// Per-client persistent speed factor, drawn once per run.
+    speeds: Vec<f64>,
+    /// Per-client dispatch counter — the "round" echoed in its frames,
+    /// so redispatches draw fresh, deterministic randomness.
+    k: Vec<usize>,
+    /// Dispatch vtime + drawn compute; the virtual arrival becomes
+    /// `base_t + bits / bandwidth` once the MSG lands — the exact
+    /// association order of the in-process engine's sum.
+    base_t: Vec<f64>,
+    /// Virtual arrival time of each client's in-flight update (valid
+    /// only where `known`).
+    arrival: Vec<f64>,
+    /// Whether the in-flight update's MSG has landed.
+    known: Vec<bool>,
+    /// Whether the in-flight update drops on arrival (drawn at
+    /// dispatch; a dropped update still travels, its bits just go
+    /// unbooked — the ledger sees only bits the fold accepts).
+    dropflag: Vec<bool>,
+    /// Server version each in-flight update anchored on.
+    anchor_ver: Vec<u64>,
+    /// Decoded payloads, `n * d` flattened (zeroed + scattered per
+    /// MSG — the dense image the in-process compressor writes).
+    recv: Vec<f32>,
+    /// MSG decode scratch.
+    sv: SparseVec,
+    /// Per-dispatch delta-plan scratch ([`DownlinkMode::Delta`]).
+    dplan: DeltaRound,
+    dispatches: u64,
+    dropped: u64,
+}
+
+/// Dispatch client `c` at virtual time `now`: draw its compute time
+/// and dropout coin from the same [`event_rng`] streams as the
+/// in-process engine, book the downlink (dense anchor, or the
+/// per-client min(dense resync, delta) plan), encode its personal
+/// ROUND frame — round = its dispatch counter, so the remote
+/// compressor forks the right `client_rng` stream — and queue it on
+/// its connection. Uplink bits are booked when the MSG arrives
+/// ([`parse_async_msgs`]).
+#[allow(clippy::too_many_arguments)]
+fn async_dispatch(
+    srv: &NetServer,
+    inner: &mut TransportInner,
+    st: &mut AsyncNetState,
+    ledger: &mut CommLedger,
+    tracker: &mut Option<DeltaTracker>,
+    anchor: &[f32],
+    payload: FusedPayload,
+    sspec: &ScenarioSpec,
+    seed: u64,
+    dim: usize,
+    version: u64,
+    c: usize,
+    now: f64,
+) -> Result<()> {
+    let kc = st.k[c];
+    st.k[c] += 1;
+    let compute = st.speeds[c] * sspec.compute.sample(&mut event_rng(seed, kc, c, EV_COMPUTE));
+    let dropped = sspec.drop > 0.0 && event_rng(seed, kc, c, EV_DROP).bernoulli(sspec.drop);
+    st.base_t[c] = now + compute;
+    st.known[c] = false;
+    st.dropflag[c] = dropped;
+    st.anchor_ver[c] = version;
+    st.dispatches += 1;
+    if dropped {
+        st.dropped += 1;
+    }
+    inner.input.round = kc;
+    inner.input.seed = seed;
+    inner.input.payload = payload;
+    inner.input.sup.clear();
+    inner.input.point.clear();
+    inner.input.point.extend_from_slice(anchor);
+    let scale_off = match tracker.as_mut() {
+        Some(tr) => {
+            let cc = [c];
+            tr.plan(&cc, &mut st.dplan);
+            ledger.down(st.dplan.total_bits(), 1);
+            tr.ack(&cc);
+            encode_round_frame(
+                &mut inner.frames[c],
+                &inner.input,
+                LAYOUT_SPARSE,
+                dim,
+                Some((&st.dplan, st.dplan.assign[0] as usize)),
+                &mut inner.wbuf,
+            )?
+        }
+        None => {
+            ledger.down(dense_bits(dim), 1);
+            encode_round_frame(
+                &mut inner.frames[c],
+                &inner.input,
+                LAYOUT_SPARSE,
+                dim,
+                None,
+                &mut inner.wbuf,
+            )?
+        }
+    };
+    inner.scale_off = scale_off;
+    let conn = inner
+        .conns
+        .get_mut(c)
+        .with_context(|| format!("async client {c} has no connection"))?;
+    ensure!(
+        conn.open,
+        "client {c} disconnected in an earlier dispatch; cannot redispatch (dispatch {kc})"
+    );
+    // async folds scale per arrival (staleness * weight / buffer); the
+    // frame's spliced scale is the identity
+    conn.scale = 1.0f32.to_le_bytes();
+    conn.out.push_back(Outgoing::Frame { idx: c, sent: 0 });
+    conn.deadline = Instant::now() + srv.timeout;
+    let qd = conn.out.len() as u64;
+    srv.stat(|s| {
+        s.rounds_broadcast += 1;
+        s.max_queue_depth = s.max_queue_depth.max(qd);
+    });
+    Ok(())
+}
+
+/// Event-loop laps for the buffered-async serve: drain queued
+/// per-client ROUND frames and read MSGs until every in-flight
+/// update's virtual arrival is known — the barrier the fold argmin
+/// needs. Socket arrival order only decides when decode work happens;
+/// the virtual clock decides the folds. Deadlines are per connection,
+/// enforced only for clients the barrier is actually waiting on.
+fn pump_async(
+    srv: &NetServer,
+    inner: &mut TransportInner,
+    st: &mut AsyncNetState,
+    ledger: &mut CommLedger,
+    dim: usize,
+    bw: f64,
+) -> Result<()> {
+    let TransportInner { conns, poller, pslots, frames, scale_off, .. } = inner;
+    let scale_off = *scale_off;
+    loop {
+        if st.known.iter().all(|&b| b) {
+            return Ok(());
+        }
+
+        let now = Instant::now();
+        let mut next_deadline: Option<Instant> = None;
+        for (id, c) in conns.iter().enumerate() {
+            if !c.open {
+                continue;
+            }
+            let awaited = !st.known[id] || !c.out.is_empty();
+            if !awaited {
+                continue;
+            }
+            if now >= c.deadline {
+                bail!(
+                    "client {id} stalled: no socket progress within {:?} (dispatch {}); \
+                     evicting it and aborting the run",
+                    srv.timeout,
+                    st.k[id].saturating_sub(1)
+                );
+            }
+            next_deadline = Some(next_deadline.map_or(c.deadline, |d| d.min(c.deadline)));
+        }
+
+        poller.clear();
+        pslots.clear();
+        poller.push(srv.listener.raw_fd(), evloop::Interest { read: true, write: false });
+        pslots.push(usize::MAX);
+        for (id, c) in conns.iter().enumerate() {
+            if !c.open {
+                continue;
+            }
+            let interest = evloop::Interest { read: true, write: !c.out.is_empty() };
+            poller.push(c.stream.raw_fd(), interest);
+            pslots.push(id);
+        }
+        let timeout =
+            next_deadline.map_or(Duration::from_millis(100), |d| d.saturating_duration_since(now));
+        poller.wait(timeout)?;
+
+        for (slot, &id) in pslots.iter().enumerate() {
+            let rd = poller.readiness(slot);
+            if !(rd.readable || rd.writable || rd.closed) {
+                continue;
+            }
+            if id == usize::MAX {
+                while let Some(s) = srv.listener.accept_nonblocking()? {
+                    drop(s);
+                    srv.stat(|stt| stt.rejected += 1);
+                }
+                continue;
+            }
+            let c = &mut conns[id];
+            if !c.out.is_empty() && (rd.writable || rd.closed) {
+                drain_conn_out(srv, c, id, frames, scale_off)?;
+            }
+            if rd.readable || rd.closed {
+                loop {
+                    match c.rbuf.fill(&mut c.stream) {
+                        Ok(0) => {
+                            c.open = false;
+                            srv.stat(|stt| stt.connected = stt.connected.saturating_sub(1));
+                            break;
+                        }
+                        Ok(n) => {
+                            c.deadline = Instant::now() + srv.timeout;
+                            srv.stat(|stt| stt.bytes_in += n as u64);
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            let _ = e;
+                            c.open = false;
+                            srv.stat(|stt| stt.connected = stt.connected.saturating_sub(1));
+                            break;
+                        }
+                    }
+                }
+                parse_async_msgs(srv, c, id, st, ledger, dim, bw)?;
+                if !c.open {
+                    ensure!(
+                        st.known[id] && c.out.is_empty(),
+                        "client {id} disconnected with its update in flight (dispatch {}); a \
+                         continuous async fleet cannot lose members",
+                        st.k[id].saturating_sub(1)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Decode every complete MSG buffered on one async connection: validate
+/// the dispatch-counter echo, single channel, sparse layout and exact
+/// body length, scatter the payload into the client's dense receive
+/// slot, fix its virtual arrival (`base_t + bits / bandwidth`), and
+/// book the uplink bits unless the update was drawn as dropped. A
+/// duplicate or out-of-order MSG is a hard protocol error — an async
+/// client has exactly one update in flight by construction.
+fn parse_async_msgs(
+    srv: &NetServer,
+    c: &mut EvConn,
+    id: usize,
+    st: &mut AsyncNetState,
+    ledger: &mut CommLedger,
+    dim: usize,
+    bw: f64,
+) -> Result<()> {
+    loop {
+        let flen = {
+            let data = c.rbuf.data();
+            let Some((kind, flen)) = peek_frame(data)? else { return Ok(()) };
+            ensure!(kind == KIND_MSG, "client {id} sent frame kind {kind}, expected MSG");
+            let payload = &data[5..flen];
+            let mut cur = Cur::new(payload);
+            let mround = cur.u32()? as usize;
+            let mch = cur.u8()? as usize;
+            let mlayout = cur.u8()?;
+            let kpairs = cur.u32()? as usize;
+            let body = cur.rest();
+            let kc = st.k[id]
+                .checked_sub(1)
+                .with_context(|| format!("client {id} answered before any dispatch"))?;
+            ensure!(!st.known[id], "client {id} sent a duplicate MSG for dispatch {kc}");
+            ensure!(
+                mround == kc && mch == 0 && mlayout == LAYOUT_SPARSE,
+                "client {id} answered (round {mround}, ch {mch}, layout {mlayout}); expected \
+                 (round {kc}, 1 channel, layout {LAYOUT_SPARSE})"
+            );
+            let bits = codec::decode_wire_body(mlayout, kpairs, body, dim, &[], &mut st.sv)
+                .with_context(|| format!("decoding client {id} dispatch {kc}"))?;
+            let out = &mut st.recv[id * dim..(id + 1) * dim];
+            out.fill(0.0);
+            for (&i, &v) in st.sv.idx.iter().zip(&st.sv.val) {
+                out[i as usize] = v;
+            }
+            st.arrival[id] = st.base_t[id] + bits as f64 / bw;
+            st.known[id] = true;
+            if !st.dropflag[id] {
+                ledger.up(bits, 1);
+            }
+            flen
+        };
+        c.rbuf.consume(flen);
+        srv.stat(|s| s.frames_in += 1);
     }
 }
 
@@ -1418,6 +2118,10 @@ fn client_loop(
     let mut msg = Vec::new();
     let mut w = BitWriter::new();
     let mut sv = SparseVec::default();
+    // the client's persistent anchor replica + the server version it
+    // holds — what delta ROUND frames patch in place
+    let mut anchor: Vec<f32> = Vec::new();
+    let mut aver: Option<u64> = None;
 
     loop {
         let kind = read_frame(&mut conn.r, &mut frame)
@@ -1425,7 +2129,7 @@ fn client_loop(
         match kind {
             KIND_DONE => return Ok(()),
             KIND_ROUND => {
-                let layout = parse_round(&frame, dim, &mut input)?;
+                let layout = parse_round(&frame, dim, &mut input, &mut anchor, &mut aver)?;
                 let expect = if input.sup.is_empty() {
                     ensure!(has_comp, "unmasked round reached a compressor-less client");
                     LAYOUT_SPARSE
@@ -1481,9 +2185,21 @@ fn client_loop(
     }
 }
 
-/// Parse a ROUND frame into the client's single-slot [`PoolInput`];
-/// returns the negotiated layout byte.
-fn parse_round(frame: &[u8], dim: usize, input: &mut PoolInput) -> Result<u8> {
+/// Parse a ROUND frame into the client's single-slot [`PoolInput`],
+/// maintaining its persistent anchor replica: `AMODE_DENSE` replaces
+/// the replica wholesale (first contact, or a planned resync);
+/// `AMODE_DELTA` patches `m` exact `(index, new_f32)` pairs in place —
+/// but only if the client holds exactly the base version the delta was
+/// planned against, so a desynced replica dies loudly instead of
+/// training on a silently wrong anchor. Returns the negotiated layout
+/// byte.
+fn parse_round(
+    frame: &[u8],
+    dim: usize,
+    input: &mut PoolInput,
+    anchor: &mut Vec<f32>,
+    version: &mut Option<u64>,
+) -> Result<u8> {
     let mut cur = Cur::new(frame);
     input.round = cur.u32()? as usize;
     input.seed = cur.u64()?;
@@ -1505,11 +2221,38 @@ fn parse_round(frame: &[u8], dim: usize, input: &mut PoolInput) -> Result<u8> {
     };
     let d = cur.u32()? as usize;
     ensure!(d == dim, "round anchor dim {d} != client dim {dim}");
-    input.point.clear();
-    input.point.reserve(d);
-    for _ in 0..d {
-        input.point.push(cur.f32()?);
+    match cur.u8()? {
+        AMODE_DENSE => {
+            let ver = cur.u64()?;
+            anchor.clear();
+            anchor.reserve(d);
+            for _ in 0..d {
+                anchor.push(cur.f32()?);
+            }
+            *version = Some(ver);
+        }
+        AMODE_DELTA => {
+            let base = cur.u64()?;
+            let ver = cur.u64()?;
+            let m = cur.u32()? as usize;
+            ensure!(
+                *version == Some(base) && anchor.len() == d,
+                "anchor delta against version {base}, but this client holds {version:?} — \
+                 replica desync; the coordinator must resync dense"
+            );
+            ensure!(m <= d, "delta of {m} coords over dim {d}");
+            // byte length is dictated by (m, d) — a truncated or padded
+            // delta body can never parse
+            let body = cur.take(codec::anchor_delta_bits(m, d).div_ceil(8) as usize)?;
+            let mut r = BitReader::new(body);
+            codec::decode_anchor_delta(&mut r, m, anchor)?;
+            r.expect_zero_pad()?;
+            *version = Some(ver);
+        }
+        other => bail!("unknown anchor mode {other}"),
     }
+    input.point.clear();
+    input.point.extend_from_slice(anchor);
     let nsup = cur.u32()? as usize;
     ensure!(nsup <= d, "support of {nsup} over dim {d}");
     input.sup.clear();

@@ -669,3 +669,314 @@ k = 8
     let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
     assert_bitwise_equal(&net, &inproc);
 }
+
+// -------------------------------------------------------------------
+// sparse delta broadcast: the pipelined downlink stays bit-for-bit
+// -------------------------------------------------------------------
+
+const DELTA_SPEC: &str = r#"
+[experiment]
+name = "net-delta"
+rounds = 18
+eval_every = 6
+seed = 3
+
+[dataset]
+clients = 12
+
+[algorithm]
+kind = "fedavg"
+local_steps = 3
+lr = 0.1
+sampler = "nice"
+tau = 3
+
+[compressor]
+up = "top-k"
+k = 4
+downlink = "delta"
+"#;
+
+/// `downlink = "delta"` over TCP: the per-variant anchor-delta frames
+/// (including dense resyncs forced by the changing nice cohorts)
+/// reproduce the in-process delta run bit for bit — losses, booked
+/// bits, comm cost.
+#[test]
+fn sync_delta_downlink_over_tcp_matches_inproc_bitwise() {
+    let (net, inproc) = networked_vs_inproc(DELTA_SPEC);
+    assert_bitwise_equal(&net, &inproc);
+}
+
+/// The delta downlink is exact (identical losses to the dense
+/// broadcast of the same spec) while booking strictly fewer downlink
+/// bits once the per-round change set is O(cohort * k).
+#[test]
+fn delta_downlink_is_exact_and_cheaper_than_dense() {
+    let delta_spec = Spec::parse(DELTA_SPEC).unwrap();
+    let dense_spec = Spec::parse(&DELTA_SPEC.replace("downlink = \"delta\"\n", "")).unwrap();
+    assert!(dense_spec.links.downlink.is_none(), "dense control spec still names a downlink");
+    let delta = run_in_process(&delta_spec, &mut |_| {}).expect("delta run");
+    let dense = run_in_process(&dense_spec, &mut |_| {}).expect("dense run");
+    assert_eq!(delta.rounds.len(), dense.rounds.len());
+    for (a, b) in delta.rounds.iter().zip(&dense.rounds) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "round {}: the delta broadcast must be exact",
+            a.round
+        );
+        assert_eq!(a.bits_up, b.bits_up, "round {}: the uplink is untouched", a.round);
+    }
+    let (a, b) = (delta.rounds.last().unwrap(), dense.rounds.last().unwrap());
+    assert!(
+        a.bits_down < b.bits_down,
+        "delta downlink must beat dense: {} >= {} bits after {} rounds",
+        a.bits_down,
+        b.bits_down,
+        a.round
+    );
+}
+
+// -------------------------------------------------------------------
+// pipelined broadcast: late straggler frames are discarded, not decoded
+// -------------------------------------------------------------------
+
+/// Read one `len | kind | payload` frame off a blocking socket.
+fn read_frame(s: &mut TcpStream) -> (u8, Vec<u8>) {
+    use std::io::Read;
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).expect("frame length");
+    let len = u32::from_le_bytes(len) as usize;
+    let mut kind = [0u8; 1];
+    s.read_exact(&mut kind).expect("frame kind");
+    let mut payload = vec![0u8; len - 1];
+    s.read_exact(&mut payload).expect("frame payload");
+    (kind[0], payload)
+}
+
+/// A valid sparse MSG frame echoing `round`: k strictly-ascending
+/// coordinates bit-packed exactly as the negotiated layout demands.
+fn sparse_msg(round: u32, k: usize, dim: usize) -> Vec<u8> {
+    use fedeff::compress::SparseVec;
+    use fedeff::wire::bits::BitWriter;
+    use fedeff::wire::codec;
+    let mut sv = SparseVec::default();
+    sv.dim = dim;
+    for i in 0..k {
+        sv.push((i * 2) as u32, 0.125 * (i as f32 + 1.0));
+    }
+    let mut w = BitWriter::new();
+    codec::encode_sparse(&sv, &mut w).expect("encode sparse body");
+    let mut msg = Vec::new();
+    msg.extend_from_slice(&round.to_le_bytes());
+    msg.push(0); // channel
+    msg.push(0); // layout: sparse
+    msg.extend_from_slice(&(k as u32).to_le_bytes());
+    msg.extend_from_slice(w.finish());
+    frame(3, &msg)
+}
+
+/// A straggler MSG racing the pipelined next-round broadcast: the
+/// protocol-speaking client answers round 0, reads ROUND 1 (so the
+/// server has definitively committed and moved on), then replays its
+/// round-0 answer before the real one. The stale frame must be
+/// consumed and discarded (`stale_discarded`), never decoded into
+/// round 1, and the serve must complete.
+#[test]
+fn late_straggler_frame_is_discarded_not_decoded() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-stale"
+rounds = 3
+seed = 1
+
+[dataset]
+clients = 1
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 4
+"#,
+    )
+    .unwrap();
+    let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let mut s = TcpStream::connect(&hostport).expect("connect");
+            let mut hello = Vec::new();
+            hello.extend_from_slice(&0u32.to_le_bytes());
+            hello.extend_from_slice(&1u32.to_le_bytes());
+            hello.extend_from_slice(&112u32.to_le_bytes());
+            s.write_all(&frame(1, &hello)).unwrap();
+            loop {
+                let (kind, payload) = read_frame(&mut s);
+                if kind == 4 {
+                    break; // DONE
+                }
+                assert_eq!(kind, 2, "expected ROUND frame");
+                let round = u32::from_le_bytes(payload[..4].try_into().unwrap());
+                if round == 1 {
+                    // the server is provably on round 1; replay round 0
+                    s.write_all(&sparse_msg(0, 4, 112)).unwrap();
+                }
+                s.write_all(&sparse_msg(round, 4, 112)).unwrap();
+            }
+        });
+        server.serve(&spec, &mut |_| {}).expect("stale frame must not break the serve");
+    });
+    let stats = server.stats();
+    assert_eq!(stats.stale_discarded, 1, "exactly the replayed frame is discarded");
+    assert_eq!(stats.frames_in, 3, "each round decoded exactly once");
+    assert!(
+        stats.max_queue_depth >= 1,
+        "the pipelined broadcast must have queued frames ({:?})",
+        stats.max_queue_depth
+    );
+}
+
+// -------------------------------------------------------------------
+// buffered-async over the wire
+// -------------------------------------------------------------------
+
+const ASYNC_SPEC: &str = r#"
+[experiment]
+name = "net-async"
+rounds = 12
+eval_every = 4
+seed = 17
+
+[dataset]
+clients = 6
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+
+[scenario]
+compute = "uniform(0.01, 0.05)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+drop = 0.1
+mode = "async"
+buffer = 3
+staleness = "poly(0.5)"
+"#;
+
+fn assert_scenario_equal(net: &RunRecord, inproc: &RunRecord) {
+    let (a, b) = (
+        net.scenario.as_ref().expect("networked scenario stats"),
+        inproc.scenario.as_ref().expect("in-process scenario stats"),
+    );
+    assert_eq!(a.vtime.to_bits(), b.vtime.to_bits(), "virtual clocks diverged");
+    assert_eq!(a.dispatches, b.dispatches);
+    assert_eq!(a.applies, b.applies);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.unavailable, b.unavailable);
+}
+
+/// `mode = "async"` over TCP: staleness-weighted folds every `buffer`
+/// arrivals, per-client redispatch, mid-flight drops — all bit-for-bit
+/// the in-process virtual-clock engine, including the scenario
+/// counters and the virtual clock itself.
+#[test]
+fn buffered_async_over_tcp_matches_inproc_bitwise() {
+    let (net, inproc) = networked_vs_inproc(ASYNC_SPEC);
+    assert_bitwise_equal(&net, &inproc);
+    assert_scenario_equal(&net, &inproc);
+}
+
+/// Buffered-async composed with the anchor-delta downlink: per-client
+/// version-stamped delta frames stay bit-for-bit, exact (same losses
+/// as the dense-downlink async run) and cheaper on the downlink.
+#[test]
+fn buffered_async_delta_downlink_matches_inproc_bitwise() {
+    let toml = ASYNC_SPEC.replace("k = 8\n", "k = 8\ndownlink = \"delta\"\n");
+    let (net, inproc) = networked_vs_inproc(&toml);
+    assert_bitwise_equal(&net, &inproc);
+    assert_scenario_equal(&net, &inproc);
+    // exactness + the O(k) claim, against the dense async run
+    let dense = run_in_process(&Spec::parse(ASYNC_SPEC).unwrap(), &mut |_| {}).unwrap();
+    assert_eq!(net.rounds.len(), dense.rounds.len());
+    for (a, b) in net.rounds.iter().zip(&dense.rounds) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "apply {}: delta must be exact", a.round);
+        assert_eq!(a.bits_up, b.bits_up);
+    }
+    let (a, b) = (net.rounds.last().unwrap(), dense.rounds.last().unwrap());
+    assert!(a.bits_down < b.bits_down, "delta async downlink must beat dense");
+}
+
+/// The wire's async engine refuses sync-mode scenarios loudly (the
+/// virtual clock replaces the real barrier; there is no faithful
+/// networked analog).
+#[test]
+fn sync_scenario_over_the_wire_is_rejected() {
+    let toml = ASYNC_SPEC
+        .replace("mode = \"async\"\n", "mode = \"sync\"\n")
+        .replace("buffer = 3\n", "")
+        .replace("staleness = \"poly(0.5)\"\n", "");
+    let spec = Spec::parse(&toml).unwrap();
+    let server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    let err = server.serve(&spec, &mut |_| {}).expect_err("sync scenarios are in-process only");
+    assert!(format!("{err:#}").contains("in-process"), "unexpected error: {err:#}");
+}
+
+/// The event-loop scaling bar for the async engine: a 1024-connection
+/// buffered-async fleet over a Unix domain socket reproduces the
+/// in-process virtual-clock run bit for bit.
+#[cfg(unix)]
+#[test]
+fn evloop_1024_clients_buffered_async_match_inproc_bitwise() {
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    assert!(limit >= 3500, "need ~3 fds per client; soft limit stuck at {limit}");
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-evloop-async-1024"
+rounds = 2
+eval_every = 1
+seed = 29
+
+[dataset]
+clients = 1024
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+downlink = "delta"
+
+[scenario]
+compute = "uniform(0.01, 0.05)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+drop = 0.05
+mode = "async"
+buffer = 128
+staleness = "poly(0.5)"
+"#,
+    )
+    .unwrap();
+    let path =
+        std::env::temp_dir().join(format!("fedeff-evloop-async-{}.sock", std::process::id()));
+    let server = NetServer::bind(&format!("uds:{}", path.display())).expect("bind uds");
+    let (net, inproc) = serve_pair(&spec, &server);
+    assert_bitwise_equal(&net, &inproc);
+    assert_scenario_equal(&net, &inproc);
+    let stats = server.stats();
+    assert_eq!(stats.evicted, 0, "no fleet member may be evicted");
+    assert!(stats.bytes_in > 0 && stats.bytes_out > 0);
+}

@@ -331,3 +331,131 @@ fn truncation_errors_loudly_in_every_codec() {
         );
     }
 }
+
+// -------------------------------------------------------------------
+// anchor delta: the downlink's exact changed-coordinate patch
+// -------------------------------------------------------------------
+
+/// Random change patterns over non-power-of-two dims: patching the old
+/// anchor with the decoded delta reproduces the new anchor bitwise, at
+/// exactly the bits the ledger books.
+#[test]
+fn anchor_delta_roundtrips_random_change_patterns() {
+    let mut rng = fedeff::rng(0xD17A);
+    for &d in &[2usize, 7, 23, 100, 128, 1000] {
+        for trial in 0..8u64 {
+            let old = vector(d, 0x01D + d as u64 + trial);
+            let mut new = old.clone();
+            let mut coords: Vec<u32> = Vec::new();
+            for j in 0..d {
+                if rng.below(3) == 0 {
+                    let v = rng.f32_range(-2.0, 2.0);
+                    if v.to_bits() != old[j].to_bits() {
+                        new[j] = v;
+                        coords.push(j as u32);
+                    }
+                }
+            }
+            let m = coords.len();
+            let mut w = BitWriter::new();
+            codec::encode_anchor_delta(&coords, &new, &mut w).unwrap();
+            assert_eq!(
+                w.bit_len(),
+                codec::anchor_delta_bits(m, d),
+                "delta bits formula (d={d}, m={m})"
+            );
+            let bytes = w.finish().to_vec();
+            assert_eq!(bytes.len() as u64, codec::anchor_delta_bits(m, d).div_ceil(8));
+
+            let mut patched = old.clone();
+            let mut r = BitReader::new(&bytes);
+            codec::decode_anchor_delta(&mut r, m, &mut patched).unwrap();
+            r.expect_zero_pad().unwrap();
+            for (j, (p, n)) in patched.iter().zip(&new).enumerate() {
+                assert_eq!(p.to_bits(), n.to_bits(), "coord {j} not bitwise (d={d})");
+            }
+        }
+    }
+}
+
+/// The nnz edges: an empty delta (nothing changed), a single changed
+/// coordinate, and every coordinate changed — including d = 1.
+#[test]
+fn anchor_delta_handles_empty_single_and_full_changes() {
+    for &d in &[1usize, 5, 97] {
+        let old = vector(d, 0xE11 + d as u64);
+        let new = vector(d, 0xF22 + d as u64);
+        let patterns: [Vec<u32>; 3] =
+            [Vec::new(), vec![(d - 1) as u32], (0..d as u32).collect()];
+        for coords in patterns {
+            let m = coords.len();
+            let mut w = BitWriter::new();
+            codec::encode_anchor_delta(&coords, &new, &mut w).unwrap();
+            assert_eq!(w.bit_len(), codec::anchor_delta_bits(m, d));
+            let bytes = w.finish().to_vec();
+            let mut patched = old.clone();
+            let mut r = BitReader::new(&bytes);
+            codec::decode_anchor_delta(&mut r, m, &mut patched).unwrap();
+            r.expect_zero_pad().unwrap();
+            for j in 0..d {
+                let want = if coords.contains(&(j as u32)) { new[j] } else { old[j] };
+                assert_eq!(patched[j].to_bits(), want.to_bits(), "coord {j} (d={d}, m={m})");
+            }
+        }
+    }
+}
+
+/// Both codec halves reject malformed coordinate lists loudly:
+/// duplicates, descending order, out-of-range indices.
+#[test]
+fn anchor_delta_rejects_unsorted_and_out_of_range_coords() {
+    let new = vector(10, 0xBAD);
+    let mut w = BitWriter::new();
+    assert!(codec::encode_anchor_delta(&[3, 3], &new, &mut w).is_err(), "duplicate index");
+    let mut w = BitWriter::new();
+    assert!(codec::encode_anchor_delta(&[5, 2], &new, &mut w).is_err(), "descending indices");
+    let mut w = BitWriter::new();
+    assert!(codec::encode_anchor_delta(&[10], &new, &mut w).is_err(), "index == dim");
+
+    // a hand-packed descending stream must be rejected by the decoder
+    let mut w = BitWriter::new();
+    codec::encode_anchor_delta(&[7], &new, &mut w).unwrap();
+    codec::encode_anchor_delta(&[2], &new, &mut w).unwrap();
+    let bytes = w.finish().to_vec();
+    let mut anchor = new.clone();
+    assert!(
+        codec::decode_anchor_delta(&mut BitReader::new(&bytes), 2, &mut anchor).is_err(),
+        "decoder accepted descending indices"
+    );
+}
+
+/// Fuzzed and truncated delta bodies error loudly, never panic, and an
+/// `Ok` decode can only have written in-range coordinates.
+#[test]
+fn anchor_delta_decoder_survives_random_bytes_and_truncation() {
+    let mut rng = fedeff::rng(0xF0DD);
+    for _ in 0..500 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let d = 2 + rng.below(200);
+        let m = 1 + rng.below(d);
+        let mut anchor = vec![0.0f32; d];
+        let _ = codec::decode_anchor_delta(&mut BitReader::new(&bytes), m, &mut anchor);
+    }
+
+    // every strict byte prefix of a valid delta is missing needed bits
+    let d = 100usize;
+    let new = vector(d, 0x717);
+    let coords: Vec<u32> = (0..d as u32).step_by(7).collect();
+    let mut w = BitWriter::new();
+    codec::encode_anchor_delta(&coords, &new, &mut w).unwrap();
+    let clean = w.finish().to_vec();
+    for cut in 0..clean.len().saturating_sub(1) {
+        let mut anchor = vec![0.0f32; d];
+        assert!(
+            codec::decode_anchor_delta(&mut BitReader::new(&clean[..cut]), coords.len(), &mut anchor)
+                .is_err(),
+            "prefix of {cut} bytes decoded silently"
+        );
+    }
+}
