@@ -1,0 +1,271 @@
+//! CI chaos-smoke (DESIGN.md §Faults): drive the networked coordinator
+//! through the deterministic chaos layer and exit non-zero unless every
+//! composition lands exactly where the fault contract says it must:
+//!
+//! - **drop**: injected connection drops under `[faults] quorum` — the
+//!   run completes, the losses are absorbed as quorum casualties, and a
+//!   replay of the same chaos seed reproduces the record **bit for
+//!   bit** (losses, booked bits, quorum rounds, shed connections).
+//! - **stall + reconnect**: injected read stalls longer than the serve
+//!   timeout trigger real deadline evictions while scripted clients
+//!   crash and re-join on their backoff schedules — the run completes
+//!   at quorum with every re-admission dense-resynced.
+//! - **flip**: an injected bit flip without a quorum must end the serve
+//!   in a hard error naming a client — corrupted bytes never merge.
+//!
+//! A watchdog hard-exits the process if any composition hangs. Run
+//! with:
+//!
+//! ```sh
+//! cargo run --release --example chaos_smoke
+//! ```
+
+use std::time::Duration;
+
+use fedeff::config::Spec;
+use fedeff::metrics::RunRecord;
+use fedeff::wire::chaos::ChaosSpec;
+use fedeff::wire::net::{run_fleet, run_fleet_reconnecting, NetServer, ServeStats};
+
+/// 48 clients, 60 rounds: long enough that the per-connection uplink
+/// byte stream crosses a chaos fault window mid-run (top-k k=16 MSGs
+/// are ~90 bytes, so window 1 opens around round 44), wide enough that
+/// binomial fault counts never threaten the 0.4 quorum floor.
+const CHAOS_SPEC: &str = r#"
+[experiment]
+name = "chaos-smoke"
+rounds = 60
+eval_every = 20
+seed = 2025
+
+[dataset]
+clients = 48
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 16
+
+[faults]
+quorum = 0.4
+"#;
+
+enum Fleet {
+    /// Plain fleet; chaos victims' threads may end in errors (their
+    /// connections were deliberately killed) — the server-side record
+    /// is the verdict.
+    Plain,
+    /// Fleet whose scripted clients crash after the named round and
+    /// re-join on their backoff schedules.
+    Reconnecting(&'static [(usize, usize)]),
+}
+
+/// One networked run under a chaos layer: bind, serve against an
+/// in-thread fleet, snapshot the stats, and *drop the server before
+/// joining the fleet* — with the listener gone, any client still in a
+/// reconnect cycle fails its dial fast instead of parking on a socket
+/// nobody will ever answer.
+fn run_case(
+    label: &str,
+    spec: &Spec,
+    chaos: ChaosSpec,
+    quorum: Option<f64>,
+    timeout: Duration,
+) -> anyhow::Result<(anyhow::Result<RunRecord>, ServeStats)> {
+    run_case_fleet(label, spec, chaos, quorum, timeout, Fleet::Plain)
+}
+
+fn run_case_fleet(
+    label: &str,
+    spec: &Spec,
+    chaos: ChaosSpec,
+    quorum: Option<f64>,
+    timeout: Duration,
+    fleet: Fleet,
+) -> anyhow::Result<(anyhow::Result<RunRecord>, ServeStats)> {
+    let sock_path =
+        std::env::temp_dir().join(format!("fedeff-chaos-{label}-{}.sock", std::process::id()));
+    let bind_addr = if cfg!(unix) {
+        format!("uds:{}", sock_path.display())
+    } else {
+        "tcp:127.0.0.1:0".to_string()
+    };
+    let mut server = NetServer::bind(&bind_addr)?;
+    server.timeout = timeout;
+    server.quorum = quorum;
+    server.chaos = Some(chaos);
+    let addr = server.local_addr()?;
+    eprintln!("[chaos:{label}] coordinator on {addr}, chaos seed {}", chaos.seed);
+
+    let out = std::thread::scope(|scope| {
+        let handle = {
+            let addr = addr.clone();
+            scope.spawn(move || match fleet {
+                Fleet::Plain => run_fleet(&addr, spec),
+                Fleet::Reconnecting(deaths) => run_fleet_reconnecting(&addr, spec, deaths),
+            })
+        };
+        let rec = server.serve(spec, &mut |_| {});
+        let stats = server.stats();
+        drop(server);
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => eprintln!("[chaos:{label}] fleet thread ended: {e:#}"),
+            Err(_) => eprintln!("[chaos:{label}] fleet thread panicked"),
+        }
+        (rec, stats)
+    });
+    let _ = std::fs::remove_file(&sock_path);
+    Ok(out)
+}
+
+/// Bitwise record comparison for the replay check; counts divergences.
+fn replay_mismatches(a: &RunRecord, b: &RunRecord) -> usize {
+    let mut bad = 0usize;
+    if a.rounds.len() != b.rounds.len() {
+        eprintln!(
+            "[chaos:drop] MISMATCH: {} eval rounds vs {} on replay",
+            a.rounds.len(),
+            b.rounds.len()
+        );
+        return 1;
+    }
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        if x.loss.to_bits() != y.loss.to_bits()
+            || x.bits_up != y.bits_up
+            || x.bits_down != y.bits_down
+        {
+            eprintln!(
+                "[chaos:drop] MISMATCH at round {}: (loss {:.9}, up {}, down {}) vs replay \
+                 (loss {:.9}, up {}, down {})",
+                x.round, x.loss, x.bits_up, x.bits_down, y.loss, y.bits_up, y.bits_down
+            );
+            bad += 1;
+        }
+    }
+    bad
+}
+
+fn main() -> anyhow::Result<()> {
+    // nothing in a chaos composition is allowed to hang — not a killed
+    // connection, not a stalled read, not a reconnect cycle
+    std::thread::spawn(|| {
+        std::thread::sleep(Duration::from_secs(120));
+        eprintln!("[chaos] WATCHDOG: smoke exceeded 120 s — a chaos composition hung");
+        std::process::exit(2);
+    });
+    let spec = Spec::parse(CHAOS_SPEC)?;
+    let mut bad = 0usize;
+
+    // --- drop: quorum completion + bit-for-bit replay per seed -------
+    let drop_spec = ChaosSpec { drop: 0.25, seed: 90210, ..Default::default() };
+    let (rec1, st1) = run_case("drop", &spec, drop_spec, Some(0.4), Duration::from_secs(2))?;
+    let (rec2, st2) = run_case("drop2", &spec, drop_spec, Some(0.4), Duration::from_secs(2))?;
+    match (&rec1, &rec2) {
+        (Ok(a), Ok(b)) => {
+            bad += replay_mismatches(a, b);
+            if st1.quorum_rounds == 0 {
+                eprintln!("[chaos:drop] MISMATCH: no round committed short of its cohort");
+                bad += 1;
+            }
+            if st1.faults_injected == 0 {
+                eprintln!("[chaos:drop] MISMATCH: the chaos layer injected nothing");
+                bad += 1;
+            }
+            if st1.quorum_rounds != st2.quorum_rounds
+                || st1.evicted + st1.churned != st2.evicted + st2.churned
+            {
+                eprintln!(
+                    "[chaos:drop] MISMATCH: casualties not replayed ({} quorum rounds, {} shed \
+                     vs {} quorum rounds, {} shed)",
+                    st1.quorum_rounds,
+                    st1.evicted + st1.churned,
+                    st2.quorum_rounds,
+                    st2.evicted + st2.churned
+                );
+                bad += 1;
+            }
+            println!(
+                "chaos-smoke [drop]: {} losses absorbed over {} quorum rounds, replayed bit \
+                 for bit",
+                st1.evicted + st1.churned,
+                st1.quorum_rounds
+            );
+        }
+        _ => {
+            for (tag, r) in [("drop", &rec1), ("drop2", &rec2)] {
+                if let Err(e) = r {
+                    eprintln!("[chaos:{tag}] MISMATCH: quorum run died: {e:#}");
+                }
+            }
+            bad += 1;
+        }
+    }
+
+    // --- stall + reconnect: evictions, rejoins, dense resyncs --------
+    let stall_spec = ChaosSpec { stall: 0.25, stall_ms: 3_000, seed: 7, ..Default::default() };
+    let deaths: &[(usize, usize)] = &[(5, 2), (11, 3)];
+    let (rec, st) = run_case_fleet(
+        "stall",
+        &spec,
+        stall_spec,
+        Some(0.4),
+        Duration::from_secs(2),
+        Fleet::Reconnecting(deaths),
+    )?;
+    match &rec {
+        Ok(_) => {
+            if st.evicted == 0 {
+                eprintln!("[chaos:stall] MISMATCH: no stall outlived a progress deadline");
+                bad += 1;
+            }
+            if st.reconnects == 0 {
+                eprintln!("[chaos:stall] MISMATCH: no scripted client was re-admitted");
+                bad += 1;
+            }
+            if st.resyncs != st.reconnects {
+                eprintln!(
+                    "[chaos:stall] MISMATCH: {} reconnects but {} dense resyncs",
+                    st.reconnects, st.resyncs
+                );
+                bad += 1;
+            }
+            println!(
+                "chaos-smoke [stall]: {} evicted, {} re-admitted (all dense-resynced), run \
+                 completed at quorum",
+                st.evicted, st.reconnects
+            );
+        }
+        Err(e) => {
+            eprintln!("[chaos:stall] MISMATCH: reconnecting quorum run died: {e:#}");
+            bad += 1;
+        }
+    }
+
+    // --- flip, no quorum: corrupted bytes die loudly, by name --------
+    let flip_spec = ChaosSpec { flip: 1.0, seed: 11, ..Default::default() };
+    let (rec, _st) = run_case("flip", &spec, flip_spec, None, Duration::from_secs(1))?;
+    match &rec {
+        Err(e) if format!("{e:#}").contains("client") => {
+            println!("chaos-smoke [flip]: corrupted stream died loudly ({e:#})");
+        }
+        Err(e) => {
+            eprintln!("[chaos:flip] MISMATCH: error does not name a client: {e:#}");
+            bad += 1;
+        }
+        Ok(_) => {
+            eprintln!("[chaos:flip] MISMATCH: a corrupted stream must never complete");
+            bad += 1;
+        }
+    }
+
+    if bad > 0 {
+        eprintln!("[chaos] FAILED: {bad} contract violations");
+        std::process::exit(1);
+    }
+    println!("chaos-smoke OK: drop replay, stall/reconnect and flip compositions all hold");
+    Ok(())
+}

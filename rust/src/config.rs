@@ -120,6 +120,22 @@
 //! buffer = 4                     # async: server applies every 4 arrivals
 //! staleness = "poly(0.5)"        # async: const(c) | poly(a)
 //! ```
+//!
+//! A `[faults]` section makes a **networked** serve (`fedeff serve
+//! --listen`) fault-tolerant ([`crate::wire::net`], DESIGN.md §Faults):
+//! a sync round commits once at least `ceil(quorum * cohort)` clients
+//! delivered and every remaining member was evicted on its progress
+//! deadline or hung up (the lost members book exactly like scenario
+//! mid-round dropout); a buffered-async serve keeps flying while at
+//! least `ceil(quorum * n)` clients survive. Disconnected clients may
+//! reconnect: a re-HELLO with the same id is re-admitted with a dense
+//! anchor resync. Ignored by in-process runs, which have no sockets to
+//! lose. The `--quorum F` CLI flag writes this same section.
+//!
+//! ```toml
+//! [faults]
+//! quorum = 0.9                   # fraction in (0, 1]; 1.0 = full cohort
+//! ```
 
 use std::collections::HashMap;
 
@@ -311,6 +327,20 @@ pub struct ScenarioSection {
     pub staleness: Option<String>,
 }
 
+/// `[faults]`: fault-tolerance policy of the networked coordinator
+/// (`fedeff serve --listen`), resolved by [`build_faults`]. Without this
+/// section (and without `--quorum`) the server keeps the strict
+/// contract: any cohort member lost mid-round aborts the round loudly.
+#[derive(Debug, Clone, Default)]
+pub struct FaultsSection {
+    /// Quorum fraction in (0, 1]: a round commits once at least
+    /// `ceil(quorum * cohort)` clients delivered and every remaining
+    /// member was evicted on its progress deadline or hung up; the
+    /// missing clients are treated exactly like scenario-engine
+    /// mid-round dropout (DESIGN.md §Faults).
+    pub quorum: Option<f64>,
+}
+
 /// `[topology]`: without `levels`, the classic 2-level cost annotation;
 /// with `levels`, an executed multi-level aggregation tree (see the
 /// module docs for the grammar).
@@ -337,6 +367,7 @@ pub struct Spec {
     pub topology: Option<TopologySpec>,
     pub sparsity: Option<SparsitySpec>,
     pub scenario: Option<ScenarioSection>,
+    pub faults: Option<FaultsSection>,
 }
 
 impl Spec {
@@ -457,7 +488,12 @@ impl Spec {
         } else {
             None
         };
-        Ok(Spec { experiment, dataset, algorithm, links, topology, sparsity, scenario })
+        let faults = if t.sections.contains_key("faults") {
+            Some(FaultsSection { quorum: t.get_f64("faults", "quorum") })
+        } else {
+            None
+        };
+        Ok(Spec { experiment, dataset, algorithm, links, topology, sparsity, scenario, faults })
     }
 }
 
@@ -590,6 +626,24 @@ pub fn build_scenario(s: &ScenarioSection) -> Result<crate::scenario::ScenarioSp
     };
     spec.validate()?;
     Ok(spec)
+}
+
+/// Resolve a `[faults]` section into the networked coordinator's
+/// effective quorum fraction, with loud errors on out-of-range values.
+/// `quorum = 1.0` still demands the full cohort (any loss fails the
+/// quorum check, loudly); fractions below 1 enable quorum-complete
+/// rounds (DESIGN.md §Faults).
+pub fn build_faults(f: &FaultsSection) -> Result<Option<f64>> {
+    match f.quorum {
+        None => Ok(None),
+        Some(q) => {
+            anyhow::ensure!(
+                q.is_finite() && q > 0.0 && q <= 1.0,
+                "[faults] quorum must be in (0, 1], got {q}"
+            );
+            Ok(Some(q))
+        }
+    }
 }
 
 /// Build a prox solver by name.
@@ -1140,6 +1194,38 @@ staleness = "poly(0.5)"
         // bandwidth must be positive
         let e = msg(SAMPLE_SCENARIO.replace("bandwidth = 100000.0", "bandwidth = 0.0"));
         assert!(e.contains("bandwidth must be positive"), "{e}");
+    }
+
+    #[test]
+    fn parses_and_builds_faults_section() {
+        let s = Spec::parse(
+            "[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[faults]\nquorum = 0.9",
+        )
+        .unwrap();
+        let f = s.faults.as_ref().expect("faults section");
+        assert_eq!(f.quorum, Some(0.9));
+        assert_eq!(build_faults(f).unwrap(), Some(0.9));
+        // quorum = 1.0 is legal: the full cohort is still demanded, but
+        // losses fail the quorum check instead of aborting the pump
+        let f = FaultsSection { quorum: Some(1.0) };
+        assert_eq!(build_faults(&f).unwrap(), Some(1.0));
+        // an empty [faults] section resolves to no quorum
+        let bare =
+            Spec::parse("[experiment]\nname = \"x\"\n[algorithm]\nkind = \"gd\"\n[faults]")
+                .unwrap();
+        assert_eq!(build_faults(bare.faults.as_ref().unwrap()).unwrap(), None);
+        // no section at all parses to None
+        assert!(Spec::parse(SAMPLE).unwrap().faults.is_none());
+    }
+
+    #[test]
+    fn faults_section_errors_are_loud() {
+        for bad in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let err = build_faults(&FaultsSection { quorum: Some(bad) })
+                .expect_err("expected a config error");
+            let e = format!("{err:#}");
+            assert!(e.contains("[faults] quorum must be in (0, 1]"), "{e}");
+        }
     }
 
     #[test]

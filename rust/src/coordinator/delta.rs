@@ -173,6 +173,15 @@ impl DeltaTracker {
         }
     }
 
+    /// Forget a receiver's acknowledged version — its next [`Self::plan`]
+    /// assigns the dense resync variant, exactly like first contact.
+    /// Called when a client reconnects mid-run (DESIGN.md §Faults): its
+    /// replica may have missed any number of broadcasts, so the only
+    /// safe downlink is a full anchor.
+    pub(crate) fn forget(&mut self, receiver: usize) {
+        self.acked[receiver] = None;
+    }
+
     /// Plan the current version's broadcast for `cohort` into `out`:
     /// per receiver, the cheaper of dense resync and delta-from-acked,
     /// with receivers sharing a base version sharing one variant.

@@ -399,7 +399,48 @@ impl Driver {
             }
             crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
                 crate::scenario::run_buffered_async(
-                    self, alg, oracle, spec, buffer, staleness, x0, opts,
+                    self, alg, oracle, spec, buffer, staleness, None, x0, opts,
+                )
+            }
+        }
+    }
+
+    /// [`Driver::run_scenario`] with a [`crate::scenario::FaultScript`]:
+    /// the scripted clients depart deterministically — mid-round drop at
+    /// their flagged round (sync) or a lost in-flight update at their
+    /// flagged dispatch (buffered-async), gone for good either way. This
+    /// is the in-process bit-for-bit reference the networked
+    /// coordinator's quorum-complete rounds are pinned against
+    /// (DESIGN.md §Faults).
+    pub fn run_scenario_scripted(
+        &self,
+        alg: &mut dyn FlAlgorithm,
+        oracle: &dyn Oracle,
+        spec: &crate::scenario::ScenarioSpec,
+        script: &crate::scenario::FaultScript,
+        x0: &[f32],
+        opts: &RunOptions,
+    ) -> Result<RunRecord> {
+        spec.validate()?;
+        script.validate(oracle.n_clients())?;
+        match spec.mode {
+            crate::scenario::Mode::Sync => {
+                let mut eng =
+                    crate::scenario::SyncEngine::new(*spec, opts.seed, oracle.n_clients());
+                eng.set_script(script);
+                self.run_inner(alg, oracle, None, None, None, x0, opts, Some(&mut eng))
+            }
+            crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
+                crate::scenario::run_buffered_async(
+                    self,
+                    alg,
+                    oracle,
+                    spec,
+                    buffer,
+                    staleness,
+                    Some(script),
+                    x0,
+                    opts,
                 )
             }
         }
@@ -440,7 +481,7 @@ impl Driver {
             }
             crate::scenario::Mode::BufferedAsync { buffer, staleness } => {
                 crate::scenario::run_buffered_async(
-                    self, alg, oracle, spec, buffer, staleness, x0, opts,
+                    self, alg, oracle, spec, buffer, staleness, None, x0, opts,
                 )
             }
         }
@@ -536,6 +577,12 @@ impl Driver {
         rec.rounds.reserve(opts.rounds / opts.eval_every.max(1) + 2);
         let mut rng = crate::rng(opts.seed);
         let mut cohort: Vec<usize> = Vec::with_capacity(n);
+        // fault bookkeeping for quorum-capable transports: clients that
+        // re-joined at this round boundary (their downlink state must
+        // dense-resync) and clients lost mid-round (removed from the
+        // committing cohort)
+        let mut rejoined: Vec<usize> = Vec::new();
+        let mut casualties: Vec<usize> = Vec::new();
         let mut point: Vec<f32> = Vec::new();
         let mut gbuf = vec![0.0f32; d];
         // reusable outputs for the oracle's batched dispatch
@@ -636,6 +683,19 @@ impl Driver {
             // the main rng, so untimed equivalence holds bit-for-bit
             if let Some(eng) = scen.as_deref_mut() {
                 eng.begin_round(t, &mut cohort);
+            }
+            // transport fault hook: install completed mid-run reconnects
+            // (force a dense downlink resync for each) and trim the
+            // cohort to reachable clients — the socket twin of the
+            // scenario trim above (DESIGN.md §Faults)
+            if let Some(tr) = transport {
+                rejoined.clear();
+                tr.begin_round(t, &mut cohort, &mut rejoined)?;
+                if let Some((tracker, _)) = delta_down.as_mut() {
+                    for &c in &rejoined {
+                        tracker.forget(c);
+                    }
+                }
             }
             // multi-level trees with a re-compressing edge: stable-group
             // the cohort by hub (counting sort; consumes no RNG) so each
@@ -837,6 +897,19 @@ impl Driver {
                         (Some(pool), _) => pool.fused_visit(&cohort, fused_channels, &mut on_msg)?,
                         (None, Some(tr)) => tr.fused_visit(&cohort, fused_channels, &mut on_msg)?,
                         (None, None) => unreachable!("fused rounds need an execution substrate"),
+                    }
+                }
+                // quorum-complete commit: clients lost mid-round had
+                // their staged slots skipped (in cohort order) by the
+                // visit above and booked nothing — drop them from the
+                // committing cohort exactly like scenario mid-round
+                // dropout and aggregate over the survivors
+                if let Some(tr) = transport {
+                    casualties.clear();
+                    tr.casualties(&mut casualties);
+                    if !casualties.is_empty() {
+                        cohort.retain(|c| !casualties.contains(c));
+                        ctx.cohort_size = cohort.len();
                     }
                 }
                 alg.absorb_fused(oracle, &cohort, &fagg, &mut ctx)?;

@@ -436,6 +436,38 @@ impl StagedUplink {
         }
         Ok(())
     }
+
+    /// Replay a quorum-completed round in contract order, skipping every
+    /// cohort position that is not fully staged (DESIGN.md §Faults): a
+    /// client lost mid-round contributes *nothing* — partially delivered
+    /// channels are discarded wholesale, matching the scenario engine's
+    /// mid-round dropout (the ledger books only bits actually merged).
+    /// Returns the skipped positions' indices, ascending.
+    pub(crate) fn commit_partial(
+        &self,
+        cohort: &[usize],
+        skipped: &mut Vec<usize>,
+        visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
+    ) -> Result<()> {
+        ensure!(
+            cohort.len() == self.cohort_len,
+            "committing a round staged for {} clients with a cohort of {}",
+            self.cohort_len,
+            cohort.len()
+        );
+        skipped.clear();
+        for (p, &client) in cohort.iter().enumerate() {
+            if !self.client_complete(p) {
+                skipped.push(p);
+                continue;
+            }
+            for ch in 0..self.channels {
+                let s = &self.slots[p * self.channels + ch];
+                visit(client, ch, &s.sv.idx, &s.sv.val, s.bits)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

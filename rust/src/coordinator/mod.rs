@@ -83,6 +83,17 @@
 //! and books exactly those bits, and a transport encodes exactly the
 //! planned variants — which is what keeps in-process and networked
 //! runs bit-identical in booked bytes as well as results.
+//!
+//! Fault tolerance rides the same seams (DESIGN.md §Faults): a
+//! networked round serving under a quorum may commit with casualties —
+//! the driver's casualty sweep shrinks the cohort exactly as the
+//! scenario engine's mid-round dropout does, and
+//! [`driver::Driver::run_scenario_scripted`] replays any casualty
+//! schedule in-process as a [`crate::scenario::FaultScript`], which is
+//! how networked quorum rounds are pinned bit-for-bit against the
+//! engine. [`delta::DeltaTracker::forget`] is the reconnect half: a
+//! re-admitted client's acked version is dropped so its next downlink
+//! is a dense resync, never a delta against state it lost.
 
 pub mod delta;
 pub mod driver;
@@ -246,6 +257,28 @@ pub(crate) trait FusedUplink {
         channels: usize,
         visit: &mut dyn FnMut(usize, usize, &[u32], &[f32], u64) -> Result<()>,
     ) -> Result<()>;
+
+    /// Round-boundary fault hook (DESIGN.md §Faults): install any
+    /// completed mid-run reconnects (their ids pushed to `rejoined`, so
+    /// the driver can reset per-receiver downlink state to force a
+    /// dense resync) and trim `cohort` to the clients this transport
+    /// can still reach. The default is the failure-free transport:
+    /// nothing to do.
+    fn begin_round(
+        &self,
+        _round: usize,
+        _cohort: &mut Vec<usize>,
+        _rejoined: &mut Vec<usize>,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Drain the clients lost mid-round (evicted on their progress
+    /// deadline or hung up under a quorum policy) whose staged uplinks
+    /// the last `fused_visit` skipped — the driver removes them from
+    /// the committing cohort, exactly like scenario-engine mid-round
+    /// dropout. Default: none.
+    fn casualties(&self, _out: &mut Vec<usize>) {}
 }
 
 /// Round inputs shared between the driver thread and the workers,

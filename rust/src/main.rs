@@ -34,6 +34,13 @@
 //!     downlink instead of O(cohort * d)). A `[scenario]` section with
 //!     `mode = "async"` also runs over `--listen`: buffered-async
 //!     aggregation over real sockets, bit-for-bit the in-process run.
+//!     `--quorum F` (or a `[faults] quorum = F` section) makes networked
+//!     rounds quorum-complete: a round commits once at least
+//!     `ceil(F * cohort)` clients delivered and every straggler was
+//!     evicted on its progress deadline or hung up — the lost members
+//!     are booked exactly like scenario mid-round dropout, and a client
+//!     that reconnects re-HELLOs with its id and is re-admitted with a
+//!     dense resync (DESIGN.md §Faults).
 
 use std::path::PathBuf;
 
@@ -49,7 +56,8 @@ const USAGE: &str = "usage: fedeff <repro <id>|all [--fast] [--outdir DIR]
               | list
               | serve [--config SPEC] [--clients N] [--rounds R] [--algorithm NAME]
                       [--listen ADDR | --join ADDR]   (ADDR = tcp:HOST:PORT | uds:PATH)
-                      [--max-clients N] [--metrics] [--downlink dense|delta]>";
+                      [--max-clients N] [--metrics] [--downlink dense|delta]
+                      [--quorum F]   (F in (0,1]: quorum-complete rounds)>";
 
 fn flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
@@ -120,6 +128,13 @@ fn main() -> Result<()> {
             let max_clients = opt_val(&args, "--max-clients").and_then(|v| v.parse().ok());
             let metrics = flag(&args, "--metrics");
             let downlink = opt_val(&args, "--downlink");
+            let quorum = match opt_val(&args, "--quorum") {
+                Some(v) => Some(
+                    v.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--quorum takes a fraction, got {v:?}"))?,
+                ),
+                None => None,
+            };
             anyhow::ensure!(
                 listen.is_none() || join.is_none(),
                 "--listen and --join are mutually exclusive (one process per role)"
@@ -133,6 +148,7 @@ fn main() -> Result<()> {
                 max_clients,
                 metrics,
                 downlink: downlink.as_deref(),
+                quorum,
             };
             serve(config.as_deref(), &opts)
         }
@@ -246,6 +262,7 @@ struct ServeCli<'a> {
     max_clients: Option<usize>,
     metrics: bool,
     downlink: Option<&'a str>,
+    quorum: Option<f64>,
 }
 
 fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
@@ -274,6 +291,17 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
         // wire protocol tells joining clients dense vs delta per frame)
         spec.links.downlink = Some(mode.to_string());
     }
+    if let Some(q) = cli.quorum {
+        // flows through [faults] so the flag and the section share one
+        // validation path (build_faults)
+        spec.faults = Some(fedeff::config::FaultsSection { quorum: Some(q) });
+    }
+    // resolved here (not only server-side) so a bad fraction dies before
+    // any socket is bound, for every role
+    let quorum = match &spec.faults {
+        Some(f) => fedeff::config::build_faults(f)?,
+        None => None,
+    };
 
     if let Some(addr) = cli.join {
         // client-fleet role: one simulated client per dataset client,
@@ -302,6 +330,7 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
     if let Some(addr) = cli.listen {
         let mut server = fedeff::wire::net::NetServer::bind(addr)?;
         server.max_clients = cli.max_clients;
+        server.quorum = quorum;
         eprintln!(
             "[fedeff] serving {} clients on {} (join with: fedeff serve --join {1} ...)",
             spec.dataset.clients,
@@ -336,7 +365,9 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
             println!(
                 "{{\"summary\":{{\"bytes_in\":{},\"bytes_out\":{},\"frames_in\":{},\
                  \"rounds_broadcast\":{},\"connected\":{},\"evicted\":{},\"churned\":{},\
-                 \"rejected\":{},\"max_queue_depth\":{},\"stale_discarded\":{}}}}}",
+                 \"rejected\":{},\"max_queue_depth\":{},\"stale_discarded\":{},\
+                 \"quorum_rounds\":{},\"reconnects\":{},\"resyncs\":{},\
+                 \"faults_injected\":{}}}}}",
                 s.bytes_in,
                 s.bytes_out,
                 s.frames_in,
@@ -346,7 +377,11 @@ fn serve(config: Option<&str>, cli: &ServeCli<'_>) -> Result<()> {
                 s.churned,
                 s.rejected,
                 s.max_queue_depth,
-                s.stale_discarded
+                s.stale_discarded,
+                s.quorum_rounds,
+                s.reconnects,
+                s.resyncs,
+                s.faults_injected
             );
         }
         return Ok(());

@@ -273,6 +273,53 @@ impl ScenarioSpec {
     }
 }
 
+/// Scripted mid-run departures — the deterministic twin of the
+/// probabilistic dropout coins, and the in-process reference for the
+/// networked coordinator's quorum-complete rounds (DESIGN.md §Faults):
+/// a quorum-completed networked round with clients lost mid-round must
+/// be bit-for-bit an in-process run with the same clients scripted
+/// here.
+///
+/// Each `(when, client)` pair removes one client permanently. In
+/// [`Mode::Sync`], `when` is the round at which the client drops
+/// *mid-round* — it computes (its compute time gates the barrier) but
+/// never sends, exactly like a true [`EV_DROP`] coin; every later
+/// round it simply never starts (counted unavailable). In
+/// [`Mode::BufferedAsync`], `when` is the client's dispatch counter
+/// whose in-flight update is lost; the client is never redispatched.
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    /// `(when, client)` pairs; at most one entry per client.
+    pub departures: Vec<(usize, usize)>,
+}
+
+impl FaultScript {
+    /// Loud validation against the fleet size: in-range clients, at
+    /// most one departure each.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        let mut seen = vec![false; n];
+        for &(when, client) in &self.departures {
+            ensure!(client < n, "fault script departs client {client} but the fleet has {n}");
+            ensure!(!seen[client], "fault script departs client {client} twice");
+            ensure!(
+                when < u32::MAX as usize,
+                "fault script departure time {when} for client {client} is out of range"
+            );
+            seen[client] = true;
+        }
+        Ok(())
+    }
+
+    /// Per-client departure time table (`u32::MAX` = never departs).
+    pub(crate) fn departure_table(&self, n: usize) -> Vec<u32> {
+        let mut t = vec![u32::MAX; n];
+        for &(when, client) in &self.departures {
+            t[client] = when as u32;
+        }
+        t
+    }
+}
+
 /// The synchronous-mode clock: it trims each round's cohort (availability
 /// and dropout) before execution and prices the finished round from the
 /// bits the round actually booked. One instance per run, owned by
@@ -299,6 +346,8 @@ pub(crate) struct SyncEngine {
     bits_scratch: Vec<f64>,
     /// Per-level max flush transfer times (tree topologies).
     flush_scratch: Vec<f64>,
+    /// Scripted departure round per client (`u32::MAX` = never).
+    departs: Vec<u32>,
 }
 
 impl SyncEngine {
@@ -319,7 +368,13 @@ impl SyncEngine {
             dropped_compute: 0.0,
             bits_scratch: vec![0.0; n],
             flush_scratch: Vec::new(),
+            departs: vec![u32::MAX; n],
         }
+    }
+
+    /// Install a validated [`FaultScript`] (scripted departures).
+    pub(crate) fn set_script(&mut self, script: &FaultScript) {
+        self.departs = script.departure_table(self.departs.len());
     }
 
     /// Trim the sampled cohort for round `round`. Documented draw order
@@ -336,7 +391,27 @@ impl SyncEngine {
         let (survivors, speeds) = (&mut self.survivors, &self.speeds);
         let (dropped, unavailable) = (&mut self.dropped, &mut self.unavailable);
         let dropped_compute = &mut self.dropped_compute;
+        let departs = &self.departs;
         cohort.retain(|&c| {
+            // scripted departures resolve before any coin: at the
+            // departure round the client drops mid-round (compute drawn,
+            // barrier gated, nothing sent); afterwards it never starts
+            match (round as u32).cmp(&departs[c]) {
+                std::cmp::Ordering::Greater => {
+                    *unavailable += 1;
+                    return false;
+                }
+                std::cmp::Ordering::Equal => {
+                    let compute = speeds[c]
+                        * spec.compute.sample(&mut event_rng(seed, round, c, EV_COMPUTE));
+                    *dropped += 1;
+                    if compute > *dropped_compute {
+                        *dropped_compute = compute;
+                    }
+                    return false;
+                }
+                std::cmp::Ordering::Less => {}
+            }
             if spec.unavailable > 0.0
                 && event_rng(seed, round, c, EV_AVAIL).bernoulli(spec.unavailable)
             {
@@ -473,6 +548,10 @@ struct AsyncState<'a> {
     dropflag: Vec<bool>,
     /// Server version each in-flight update anchored on.
     anchor_ver: Vec<u64>,
+    /// Scripted departure dispatch per client (`u32::MAX` = never): the
+    /// flagged dispatch's update is lost in flight and the client never
+    /// returns (arrival parked at infinity, excluded from the argmin).
+    departs: Vec<u32>,
     /// Server-received payloads, `n * d` flattened.
     recv: Vec<f32>,
     yi: Vec<f32>,
@@ -540,9 +619,12 @@ impl AsyncState<'_> {
         };
         let compute =
             self.speeds[c] * self.spec.compute.sample(&mut event_rng(self.seed, kc, c, EV_COMPUTE));
-        let dropped =
-            self.spec.drop > 0.0 && event_rng(self.seed, kc, c, EV_DROP).bernoulli(self.spec.drop);
-        self.arrival[c] = now + compute + bits as f64 / self.spec.bandwidth;
+        let departs = kc as u32 >= self.departs[c];
+        let dropped = departs
+            || self.spec.drop > 0.0
+                && event_rng(self.seed, kc, c, EV_DROP).bernoulli(self.spec.drop);
+        self.arrival[c] =
+            if departs { f64::INFINITY } else { now + compute + bits as f64 / self.spec.bandwidth };
         self.dropflag[c] = dropped;
         self.anchor_ver[c] = self.version;
         self.dispatches += 1;
@@ -588,6 +670,7 @@ pub(crate) fn run_buffered_async(
     spec: &ScenarioSpec,
     buffer: usize,
     staleness: Staleness,
+    script: Option<&FaultScript>,
     x0: &[f32],
     opts: &RunOptions,
 ) -> Result<RunRecord> {
@@ -663,6 +746,7 @@ pub(crate) fn run_buffered_async(
         arrival: vec![0.0; n],
         dropflag: vec![false; n],
         anchor_ver: vec![0; n],
+        departs: script.map_or_else(|| vec![u32::MAX; n], |s| s.departure_table(n)),
         recv: vec![0.0; n * d],
         yi: vec![0.0; d],
         g: vec![0.0; d],
@@ -692,6 +776,11 @@ pub(crate) fn run_buffered_async(
             }
         }
         let now = st.arrival[c];
+        ensure!(
+            now.is_finite(),
+            "every client has departed (scripted) with {applies}/{} applies done",
+            opts.rounds
+        );
         vtime = now;
         if !st.dropflag[c] {
             let s = st.version - st.anchor_ver[c];

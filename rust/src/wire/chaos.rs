@@ -1,0 +1,310 @@
+//! Deterministic chaos injection at the coordinator's stream seam
+//! (DESIGN.md §Faults).
+//!
+//! A [`ChaosConn`] wraps one accepted connection's reads and writes and
+//! injects faults — connection drops, read stalls, write delays,
+//! truncated writes, bit flips — drawn from dedicated RNG streams keyed
+//! on `(seed, connection × generation, window, direction)`, a sibling
+//! of [`crate::scenario::event_rng`] with its own mixing constants.
+//! Decisions are keyed by **byte offsets**, not call counts: each
+//! direction's byte stream is cut into [`CHUNK`]-byte windows, one fate
+//! is drawn per window, and every read/write is capped at its window
+//! boundary — so however the kernel chunks the actual I/O, a fault
+//! lands at exactly the same byte offset on every replay of the same
+//! seed. Since the frame bytes themselves are deterministic, a
+//! drop-only composition cuts the stream at a reproducible frame
+//! boundary and the run's losses and ledger replay bit for bit (the
+//! chaos-smoke harness pins this).
+//!
+//! Fault semantics, drawn in priority order per window:
+//! - **drop** (read): the connection dies — an injected
+//!   `ConnectionReset` plus a real socket shutdown, so the remote
+//!   client observes EOF and can take its reconnect path.
+//! - **stall** (read): reads report `WouldBlock` for `stall_ms`; a
+//!   stall longer than the serve timeout triggers the event loop's
+//!   own deadline eviction.
+//! - **flip** (read): one bit of the first byte read in the window is
+//!   inverted — a corrupted frame that must die loudly in decode,
+//!   never silently merge.
+//! - **trunc** (write): a short write of at most 64 bytes, then the
+//!   connection dies — the remote peer sees a frame cut mid-body.
+//! - **delay** (write): writes report `WouldBlock` for `delay_ms`.
+//!
+//! A reconnected socket reuses its client id but bumps the connection
+//! *generation*, giving the fresh socket fresh fault streams instead of
+//! replaying the dead one's fate.
+
+use std::io::{self, IoSlice};
+use std::time::{Duration, Instant};
+
+use crate::rng::Rng;
+
+use super::net::{RecvBuf, Stream};
+
+/// Fault-window size in bytes: one fate per `CHUNK` bytes per
+/// direction, and no read or write crosses a window boundary.
+pub const CHUNK: u64 = 4096;
+
+/// Direction keys of the chaos streams.
+pub const CH_READ: u64 = 0;
+pub const CH_WRITE: u64 = 1;
+
+/// One short-lived generator per fault decision — the chaos sibling of
+/// [`crate::scenario::event_rng`], with distinct mixing constants and
+/// rotation so the streams can never collide with the scenario's
+/// event coins even under equal numeric keys.
+pub fn chaos_rng(seed: u64, conn: u64, window: u64, dir: u64) -> Rng {
+    let mut h = seed ^ 0xA076_1D64_78BD_642Fu64.wrapping_mul(conn.wrapping_add(1));
+    h ^= 0xE703_7ED1_A0B4_28DBu64.wrapping_mul(window.wrapping_add(1));
+    h ^= 0x8EBC_6AF0_9C88_C6E3u64.wrapping_mul(dir.wrapping_add(1));
+    Rng::new(h.rotate_left(23))
+}
+
+/// Fault probabilities and timings, applied per [`CHUNK`]-byte window.
+/// Programmatic only (the chaos fleet harness and tests); all-zero
+/// means a chaos layer that passes every byte through untouched.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct ChaosSpec {
+    /// Per-read-window probability of killing the connection.
+    pub drop: f32,
+    /// Per-read-window probability of stalling reads for `stall_ms`.
+    pub stall: f32,
+    pub stall_ms: u64,
+    /// Per-write-window probability of delaying writes for `delay_ms`.
+    pub delay: f32,
+    pub delay_ms: u64,
+    /// Per-write-window probability of a truncated write followed by
+    /// connection death.
+    pub trunc: f32,
+    /// Per-read-window probability of flipping one bit of the first
+    /// byte read in the window.
+    pub flip: f32,
+    /// Seed of the chaos streams — one seed replays one fault schedule.
+    pub seed: u64,
+}
+
+enum Fate {
+    Pass,
+    Drop,
+    Stall,
+    Delay,
+    Trunc(usize),
+    Flip,
+}
+
+fn reset_err() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset, "chaos: injected connection drop")
+}
+
+fn would_block() -> io::Error {
+    io::Error::from(io::ErrorKind::WouldBlock)
+}
+
+/// Per-connection fault state: byte cursors per direction plus the
+/// in-progress stall/delay clocks. Created per accepted connection
+/// (and re-created with a bumped generation on reconnect).
+pub struct ChaosConn {
+    spec: ChaosSpec,
+    /// `conn id << 20 | generation` — the connection key of every
+    /// stream draw.
+    key: u64,
+    r_off: u64,
+    w_off: u64,
+    stall_until: Option<Instant>,
+    delay_until: Option<Instant>,
+    /// Windows whose stall/delay already ran to completion — re-drawing
+    /// the same window's fate must not stall it twice.
+    stall_served: u64,
+    delay_served: u64,
+    killed: bool,
+}
+
+impl ChaosConn {
+    pub fn new(spec: ChaosSpec, conn: usize, generation: u64) -> ChaosConn {
+        ChaosConn {
+            spec,
+            key: (conn as u64) << 20 | (generation & 0xF_FFFF),
+            r_off: 0,
+            w_off: 0,
+            stall_until: None,
+            delay_until: None,
+            stall_served: u64::MAX,
+            delay_served: u64::MAX,
+            killed: false,
+        }
+    }
+
+    fn fate(&self, dir: u64, window: u64) -> Fate {
+        let mut rng = chaos_rng(self.spec.seed, self.key, window, dir);
+        let s = &self.spec;
+        if dir == CH_READ {
+            if rng.bernoulli(s.drop) {
+                return Fate::Drop;
+            }
+            if rng.bernoulli(s.stall) && window != self.stall_served {
+                return Fate::Stall;
+            }
+            if rng.bernoulli(s.flip) {
+                return Fate::Flip;
+            }
+        } else {
+            if rng.bernoulli(s.trunc) {
+                return Fate::Trunc(1 + rng.below(64));
+            }
+            if rng.bernoulli(s.delay) && window != self.delay_served {
+                return Fate::Delay;
+            }
+        }
+        Fate::Pass
+    }
+
+    fn kill(&mut self, stream: &Stream) {
+        self.killed = true;
+        // a real shutdown, so the remote peer observes EOF instead of
+        // blocking on a socket the server merely stopped polling
+        stream.shutdown();
+    }
+
+    /// Chaos-gated [`RecvBuf::fill`]: returns the fill result plus the
+    /// number of faults this call injected.
+    pub(crate) fn fill(
+        &mut self,
+        stream: &mut Stream,
+        rbuf: &mut RecvBuf,
+    ) -> (io::Result<usize>, u64) {
+        if self.killed {
+            return (Err(reset_err()), 0);
+        }
+        if let Some(t) = self.stall_until {
+            if Instant::now() < t {
+                return (Err(would_block()), 0);
+            }
+            self.stall_until = None;
+        }
+        let window = self.r_off / CHUNK;
+        let fresh = self.r_off % CHUNK == 0;
+        let mut flip = false;
+        if fresh {
+            match self.fate(CH_READ, window) {
+                Fate::Drop => {
+                    self.kill(stream);
+                    return (Err(reset_err()), 1);
+                }
+                Fate::Stall => {
+                    self.stall_served = window;
+                    self.stall_until =
+                        Some(Instant::now() + Duration::from_millis(self.spec.stall_ms));
+                    return (Err(would_block()), 1);
+                }
+                Fate::Flip => flip = true,
+                _ => {}
+            }
+        }
+        let cap = (CHUNK - self.r_off % CHUNK) as usize;
+        let r = rbuf.fill_max(stream, cap);
+        let mut faults = 0u64;
+        if let Ok(n) = r {
+            if flip && n > 0 {
+                rbuf.corrupt_tail(n);
+                faults += 1;
+            }
+            self.r_off += n as u64;
+        }
+        (r, faults)
+    }
+
+    /// Chaos-gated vectored write: same contract as
+    /// [`Stream::write_vectored`] plus the injected-fault count.
+    pub(crate) fn write_vectored(
+        &mut self,
+        stream: &mut Stream,
+        bufs: &[IoSlice<'_>],
+    ) -> (io::Result<usize>, u64) {
+        if self.killed {
+            return (Err(reset_err()), 0);
+        }
+        if let Some(t) = self.delay_until {
+            if Instant::now() < t {
+                return (Err(would_block()), 0);
+            }
+            self.delay_until = None;
+        }
+        let window = self.w_off / CHUNK;
+        let fresh = self.w_off % CHUNK == 0;
+        let first = bufs.iter().find(|b| !b.is_empty()).map_or(&[][..], |b| &b[..]);
+        if fresh {
+            match self.fate(CH_WRITE, window) {
+                Fate::Trunc(k) => {
+                    // a short write, then the wire goes dead — the peer
+                    // sees a frame cut mid-body
+                    let k = k.min(first.len());
+                    let r = if k == 0 { Ok(0) } else { stream.write(&first[..k]) };
+                    if let Ok(n) = r {
+                        self.w_off += n as u64;
+                    }
+                    self.kill(stream);
+                    return (r, 1);
+                }
+                Fate::Delay => {
+                    self.delay_served = window;
+                    self.delay_until =
+                        Some(Instant::now() + Duration::from_millis(self.spec.delay_ms));
+                    return (Err(would_block()), 1);
+                }
+                _ => {}
+            }
+        }
+        // cap at the window boundary so fault offsets replay exactly
+        let remain = (CHUNK - self.w_off % CHUNK) as usize;
+        let total: usize = bufs.iter().map(|b| b.len()).sum();
+        let r = if total <= remain {
+            stream.write_vectored(bufs)
+        } else {
+            stream.write(&first[..first.len().min(remain)])
+        };
+        if let Ok(n) = r {
+            self.w_off += n as u64;
+        }
+        (r, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_streams_replay_per_seed() {
+        for dir in [CH_READ, CH_WRITE] {
+            for w in 0..32 {
+                let a = chaos_rng(9, 3, w, dir).next_u64();
+                let b = chaos_rng(9, 3, w, dir).next_u64();
+                assert_eq!(a, b);
+                assert_ne!(a, chaos_rng(10, 3, w, dir).next_u64());
+                assert_ne!(a, chaos_rng(9, 4, w, dir).next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_streams_differ_from_event_streams() {
+        // sibling constants: equal numeric keys must not collide with
+        // the scenario's event coins
+        for k in 0..64u64 {
+            let c = chaos_rng(7, k, k, CH_READ).next_u64();
+            let e = crate::scenario::event_rng(7, k as usize, k as usize, k as usize).next_u64();
+            assert_ne!(c, e);
+        }
+    }
+
+    #[test]
+    fn generation_gets_fresh_streams() {
+        let a = ChaosConn::new(ChaosSpec { drop: 0.5, seed: 1, ..Default::default() }, 2, 0);
+        let b = ChaosConn::new(ChaosSpec { drop: 0.5, seed: 1, ..Default::default() }, 2, 1);
+        let fates_a: Vec<bool> =
+            (0..64).map(|w| matches!(a.fate(CH_READ, w), Fate::Drop)).collect();
+        let fates_b: Vec<bool> =
+            (0..64).map(|w| matches!(b.fate(CH_READ, w), Fate::Drop)).collect();
+        assert_ne!(fates_a, fates_b);
+    }
+}

@@ -12,8 +12,13 @@
 //! bit while sending real, countable bytes. [`evloop`] is the std-only
 //! readiness substrate under [`net`]: a raw `poll(2)` wrapper plus the
 //! socket/rlimit syscalls the event loop needs, no async runtime.
+//! [`chaos`] injects deterministic faults (drops, stalls, delays,
+//! truncations, bit flips) at the stream seam under [`net`], keyed by
+//! byte offsets on seeded streams so a fault schedule replays
+//! bit-identically per seed (DESIGN.md §Faults).
 
 pub mod bits;
+pub mod chaos;
 pub mod codec;
 pub mod evloop;
 pub mod net;

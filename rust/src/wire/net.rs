@@ -58,6 +58,23 @@
 //! sequence, which is what keeps the networked async run bit-for-bit
 //! the in-process one (losses, booked bits, dispatch/apply counters).
 //!
+//! Fault tolerance (DESIGN.md §Faults): with `[faults] quorum` (or
+//! `fedeff serve --quorum`) set, a sync round commits once at least
+//! `ceil(quorum × cohort)` members delivered and every remaining member
+//! was evicted on its own progress deadline or hung up — the missing
+//! clients' staged slots are skipped **in cohort order** and the driver
+//! drops them from the committing cohort, exactly the scenario engine's
+//! mid-round dropout (booked bits cover only what actually travelled;
+//! pinned bit-for-bit against an in-process scripted run). A client
+//! that reconnects mid-run re-HELLOs with its id and is re-admitted
+//! into its dead slot at the next round boundary (sync) or next
+//! dispatch (buffered-async), with a dense anchor resync forced through
+//! [`DeltaTracker::forget`]; a duplicate HELLO while the original
+//! socket is live is rejected loudly by name. The [`super::chaos`]
+//! layer wraps each accepted connection's I/O with deterministic,
+//! seed-replayable fault injection. Without a quorum every mid-round
+//! loss stays the hard, named error it always was.
+//!
 //! Frame layout (little-endian): `u32 len | u8 kind | payload`, where
 //! `len` counts the kind byte plus the payload and is capped at
 //! [`MAX_FRAME`]. Kinds: HELLO (client joins: id, fleet size, dim),
@@ -85,6 +102,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::bits::{BitReader, BitWriter};
+use super::chaos::{ChaosConn, ChaosSpec};
 use super::codec::{self, LAYOUT_MASKED_RAW, LAYOUT_MASKED_SPARSE, LAYOUT_SPARSE};
 use super::evloop;
 use crate::algorithms::{build_algorithm, dense_bits, FlAlgorithm, PayloadSpec, ScaleSpec};
@@ -99,6 +117,7 @@ use crate::data::synth::Heterogeneity;
 use crate::metrics::{RoundStat, RunRecord, ScenarioStat};
 use crate::oracle::logreg_rs::RustLogReg;
 use crate::oracle::Oracle;
+use crate::rng::Rng;
 use crate::scenario::{event_rng, Mode, ScenarioSpec, Staleness, EV_COMPUTE, EV_DROP, EV_SPEED};
 use crate::vecmath as vm;
 
@@ -189,6 +208,22 @@ impl Stream {
             }
             #[cfg(unix)]
             Stream::Unix(_) => {}
+        }
+    }
+
+    /// Best-effort full shutdown — used when the server gives up on a
+    /// connection (quorum eviction, injected chaos drop) so the remote
+    /// peer observes EOF instead of blocking on a socket the event
+    /// loop merely stopped polling.
+    pub(crate) fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
         }
     }
 
@@ -364,16 +399,57 @@ pub fn connect(addr: &str) -> Result<Stream> {
     bail!("address {addr:?} is neither tcp:HOST:PORT nor uds:PATH")
 }
 
+const BACKOFF_BASE_MS: u64 = 10;
+const BACKOFF_CAP_MS: u64 = 640;
+/// `10 ms << 6 == 640 ms` — doublings beyond this only saturate.
+const BACKOFF_DOUBLINGS: u32 = 6;
+
+/// Capped exponential backoff with deterministic jitter for client
+/// (re)connect attempts: attempt `k` sleeps `min(10 ms << k, 640 ms)`
+/// scaled by a jitter factor in `[0.5, 1.0)` drawn from a seed-keyed
+/// stream. Deterministic per seed (the unit tests pin the schedule),
+/// shared by the initial fleet connect and mid-run reconnects, and
+/// seeded per client id so a 1024-client retry storm spreads out
+/// instead of marching in a fixed 20 ms phalanx.
+pub struct Backoff {
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff { attempt: 0, rng: Rng::new(seed ^ 0xBAC0_FF5E_0D1C_E5ED) }
+    }
+
+    /// The delay before the next attempt; advances the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = BACKOFF_BASE_MS << self.attempt.min(BACKOFF_DOUBLINGS);
+        self.attempt = self.attempt.saturating_add(1);
+        let jitter = 0.5 + 0.5 * self.rng.f64_unit();
+        Duration::from_nanos((exp.min(BACKOFF_CAP_MS) as f64 * 1_000_000.0 * jitter) as u64)
+    }
+
+    /// Restart the exponential schedule (a successful connect resets
+    /// the clock); the jitter stream continues rather than repeating.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
 /// [`connect`] with retries while the server is still binding/accepting
-/// (the fleet usually races the coordinator's startup).
-fn connect_retry(addr: &str, budget: Duration) -> Result<Stream> {
+/// (the fleet usually races the coordinator's startup), paced by the
+/// caller's [`Backoff`] — also the mid-run reconnect path.
+fn connect_retry(addr: &str, budget: Duration, backoff: &mut Backoff) -> Result<Stream> {
     let t0 = Instant::now();
     loop {
         match connect(addr) {
-            Ok(s) => return Ok(s),
+            Ok(s) => {
+                backoff.reset();
+                return Ok(s);
+            }
             Err(e) if t0.elapsed() < budget => {
                 let _ = e;
-                std::thread::sleep(Duration::from_millis(20));
+                std::thread::sleep(backoff.next_delay());
             }
             Err(e) => return Err(e),
         }
@@ -591,7 +667,7 @@ pub fn run_in_process(spec: &Spec, on_eval: &mut dyn FnMut(&RoundStat)) -> Resul
 /// payloads are decoded by *borrowing* straight out of this buffer, so
 /// the steady-state round loop does no per-frame allocation at all.
 #[derive(Default)]
-struct RecvBuf {
+pub(crate) struct RecvBuf {
     buf: Vec<u8>,
     start: usize,
 }
@@ -620,8 +696,15 @@ impl RecvBuf {
     /// One non-blocking `read` of up to [`CONN_BUF`] bytes into the
     /// tail; returns the byte count (0 = EOF) or the raw I/O error.
     fn fill(&mut self, stream: &mut Stream) -> io::Result<usize> {
+        self.fill_max(stream, CONN_BUF)
+    }
+
+    /// [`RecvBuf::fill`] capped at `max` bytes — the chaos layer caps
+    /// reads at fault-window boundaries so injected faults land at
+    /// exact, replayable byte offsets.
+    pub(crate) fn fill_max(&mut self, stream: &mut Stream, max: usize) -> io::Result<usize> {
         let len = self.buf.len();
-        self.buf.resize(len + CONN_BUF, 0);
+        self.buf.resize(len + max.min(CONN_BUF), 0);
         match stream.read(&mut self.buf[len..]) {
             Ok(n) => {
                 self.buf.truncate(len + n);
@@ -632,6 +715,13 @@ impl RecvBuf {
                 Err(e)
             }
         }
+    }
+
+    /// Flip the top bit of the first byte of the `n` bytes most
+    /// recently filled — the chaos layer's bit-flip fault.
+    pub(crate) fn corrupt_tail(&mut self, n: usize) {
+        let l = self.buf.len();
+        self.buf[l - n] ^= 0x80;
     }
 }
 
@@ -663,6 +753,9 @@ struct EvConn {
     deadline: Instant,
     /// False once EOF or a hard I/O error was observed.
     open: bool,
+    /// Fault-injection state wrapping this connection's I/O
+    /// ([`NetServer::chaos`]); `None` runs the bytes straight through.
+    chaos: Option<ChaosConn>,
 }
 
 /// Live serve counters, readable via [`NetServer::stats`] (the
@@ -694,6 +787,19 @@ pub struct ServeStats {
     /// without decoding (stragglers racing the shutdown drain, or a
     /// late answer to a superseded dispatch).
     pub stale_discarded: u64,
+    /// Sync rounds committed below full strength: at least the quorum
+    /// delivered, the missing cohort members skipped (quorum mode
+    /// only; zero without `--quorum`).
+    pub quorum_rounds: u64,
+    /// Mid-run re-HELLOs admitted into a dead client's slot.
+    pub reconnects: u64,
+    /// Dense anchor resyncs forced by a reconnect admission (the
+    /// readmitted replica's acked version is forgotten, so its next
+    /// downlink is the full model).
+    pub resyncs: u64,
+    /// Faults injected by the chaos layer: drops, stalls, delays,
+    /// truncations and bit flips ([`ChaosSpec`]).
+    pub faults_injected: u64,
 }
 
 /// What one [`pump`] call runs the event loop for.
@@ -742,6 +848,19 @@ struct TransportInner {
     draining: bool,
     sup: Vec<u32>,
     input: PoolInput,
+    /// Mid-run reconnect handshakes in progress (quorum mode only) —
+    /// polled alongside the fleet, evicted on their own idle deadline.
+    pending: Vec<Option<Pending>>,
+    /// Completed re-HELLOs awaiting installation into their dead slot
+    /// at the next round boundary (sync) or dispatch lap (async).
+    rejoins: Vec<(usize, EvConn)>,
+    /// Cohort clients whose slots the last quorum commit skipped —
+    /// drained by the driver's casualty sweep.
+    casualties: Vec<usize>,
+    /// Per-slot connection generation (bumped on each readmission) —
+    /// keys the chaos layer's fresh fault streams for a reconnected
+    /// socket.
+    gens: Vec<u64>,
 }
 
 /// The driver-facing side of an accepted fleet: implements the fused
@@ -982,7 +1101,75 @@ impl FusedUplink for NetTransport<'_> {
             inner.staging.channels()
         );
         pump(self.srv, inner, self.dim, Until::StagingComplete)?;
-        inner.staging.commit(cohort, visit)
+        let Some(q) = self.srv.quorum else {
+            return inner.staging.commit(cohort, visit);
+        };
+        // quorum-complete commit: survivors in cohort order, the lost
+        // members' slots skipped wholly (no partial channels, no booked
+        // bits) and reported as this round's casualties
+        let TransportInner { staging, casualties, round, .. } = inner;
+        staging.commit_partial(cohort, casualties, visit)?;
+        for p in casualties.iter_mut() {
+            *p = cohort[*p];
+        }
+        let delivered = cohort.len() - casualties.len();
+        let need = ((q * cohort.len() as f64).ceil() as usize).max(1);
+        ensure!(
+            delivered >= need,
+            "round {}: quorum missed — {delivered}/{} cohort clients delivered (quorum {q} \
+             needs {need}); lost clients {:?}",
+            *round,
+            cohort.len(),
+            casualties
+        );
+        if !casualties.is_empty() {
+            self.srv.stat(|s| s.quorum_rounds += 1);
+        }
+        Ok(())
+    }
+
+    /// Round-boundary fault hook (quorum mode only): install completed
+    /// mid-run re-HELLOs into their dead slots — reporting them in
+    /// `rejoined` so the driver forces a dense downlink resync — then
+    /// trim the cohort to reachable clients, the socket twin of the
+    /// scenario engine's availability trim.
+    fn begin_round(
+        &self,
+        round: usize,
+        cohort: &mut Vec<usize>,
+        rejoined: &mut Vec<usize>,
+    ) -> Result<()> {
+        if self.srv.quorum.is_none() {
+            return Ok(());
+        }
+        let mut guard = self.inner.borrow_mut();
+        let inner = &mut *guard;
+        // one zero-timeout lap so a re-HELLO that completed since the
+        // last pump is admitted even on an otherwise idle socket set
+        pump(self.srv, inner, self.dim, Until::Opportunistic)?;
+        let TransportInner { conns, rejoins, .. } = inner;
+        let now = Instant::now();
+        for (id, mut conn) in rejoins.drain(..) {
+            conn.deadline = now + self.srv.timeout;
+            conns[id] = conn;
+            rejoined.push(id);
+            self.srv.stat(|s| {
+                s.connected += 1;
+                s.reconnects += 1;
+                s.resyncs += 1;
+            });
+        }
+        cohort.retain(|&c| conns[c].open);
+        ensure!(
+            !cohort.is_empty(),
+            "round {round}: every cohort client is disconnected; a quorum of zero clients \
+             cannot train"
+        );
+        Ok(())
+    }
+
+    fn casualties(&self, out: &mut Vec<usize>) {
+        out.extend(self.inner.borrow_mut().casualties.drain(..));
     }
 }
 
@@ -1005,11 +1192,15 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
         layout,
         draining,
         sup,
+        pending,
+        rejoins,
+        gens,
         ..
     } = inner;
     let meta = RoundMeta { round: *round, layout: *layout };
     let scale_off = *scale_off;
     let draining = *draining;
+    let quorum = srv.quorum.is_some();
     loop {
         let writes_pending = conns.iter().any(|c| c.open && !c.out.is_empty());
         let done = match until {
@@ -1019,8 +1210,19 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
             // member can only have answered after fully receiving its
             // ROUND, so its own frame has necessarily drained — and any
             // *other* queued frame (a non-awaited straggler's) may keep
-            // draining into the next round's event loop (pipelining)
-            Until::StagingComplete => staging.is_complete(),
+            // draining into the next round's event loop (pipelining).
+            // Under a quorum the barrier also closes once every still-
+            // incomplete cohort member is gone — the commit decides
+            // whether enough survived.
+            Until::StagingComplete => {
+                staging.is_complete()
+                    || (quorum
+                        && conns.iter().enumerate().all(|(id, c)| {
+                            staging
+                                .cohort_pos(id)
+                                .is_none_or(|p| staging.client_complete(p) || !c.open)
+                        }))
+            }
         };
         if done {
             return Ok(());
@@ -1029,7 +1231,7 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
         // deadline sweep over the connections this call waits on
         let now = Instant::now();
         let mut next_deadline: Option<Instant> = None;
-        for (id, c) in conns.iter().enumerate() {
+        for (id, c) in conns.iter_mut().enumerate() {
             if !c.open {
                 continue;
             }
@@ -1040,6 +1242,23 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                 continue;
             }
             if now >= c.deadline {
+                if quorum {
+                    // quorum mode: a stalled client costs itself the
+                    // round, not the fleet the run
+                    eprintln!(
+                        "[fedeff] evicting client {id}: no socket progress within {:?} \
+                         (round {})",
+                        srv.timeout,
+                        meta.round
+                    );
+                    c.open = false;
+                    c.stream.shutdown();
+                    srv.stat(|st| {
+                        st.evicted += 1;
+                        st.connected = st.connected.saturating_sub(1);
+                    });
+                    continue;
+                }
                 bail!(
                     "client {id} stalled: no socket progress within {:?} (round {}); evicting \
                      it and aborting the round — all other connections kept their own deadlines",
@@ -1048,6 +1267,16 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                 );
             }
             next_deadline = Some(next_deadline.map_or(c.deadline, |d| d.min(c.deadline)));
+        }
+        for p in pending.iter_mut() {
+            if p.as_ref().is_some_and(|q| now >= q.deadline) {
+                *p = None;
+                srv.stat(|st| st.evicted += 1);
+            }
+        }
+        pending.retain(|p| p.is_some());
+        for p in pending.iter().flatten() {
+            next_deadline = Some(next_deadline.map_or(p.deadline, |d| d.min(p.deadline)));
         }
 
         poller.clear();
@@ -1062,6 +1291,12 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
             poller.push(c.stream.raw_fd(), interest);
             pslots.push(id);
         }
+        for (i, p) in pending.iter().enumerate() {
+            if let Some(p) = p {
+                poller.push(p.stream.raw_fd(), evloop::Interest { read: true, write: false });
+                pslots.push(PEND_BASE + i);
+            }
+        }
         let timeout = match until {
             Until::Opportunistic => Duration::ZERO,
             _ => next_deadline
@@ -1075,21 +1310,21 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                 continue;
             }
             if id == usize::MAX {
-                // the fleet is complete: late connections are churn,
-                // shed without touching the round
-                while let Some(s) = srv.listener.accept_nonblocking()? {
-                    drop(s);
-                    srv.stat(|st| st.rejected += 1);
-                }
+                accept_churn(srv, pending, quorum)?;
+                continue;
+            }
+            if id >= PEND_BASE {
+                reconnect_step(srv, &mut pending[id - PEND_BASE], conns, rejoins, gens, dim);
                 continue;
             }
             let c = &mut conns[id];
-            if !c.out.is_empty() && (rd.writable || rd.closed) {
-                drain_conn_out(srv, c, id, frames, scale_off)?;
+            if c.open && !c.out.is_empty() && (rd.writable || rd.closed) {
+                drain_conn_out(srv, c, id, frames, scale_off, quorum)?;
             }
-            if rd.readable || rd.closed {
+            if c.open && (rd.readable || rd.closed) {
                 loop {
-                    match c.rbuf.fill(&mut c.stream) {
+                    let r = chaos_fill(srv, c);
+                    match r {
                         Ok(0) => {
                             c.open = false;
                             srv.stat(|st| st.connected = st.connected.saturating_sub(1));
@@ -1113,17 +1348,166 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
                 if !c.open {
                     let awaited = !c.out.is_empty()
                         || staging.cohort_pos(id).is_some_and(|p| !staging.client_complete(p));
-                    ensure!(
-                        !awaited,
-                        "client {id} disconnected mid-round (round {}) with its work \
-                         outstanding; the server keeps serving the remaining connections",
-                        meta.round
-                    );
+                    if quorum {
+                        if awaited {
+                            eprintln!(
+                                "[fedeff] client {id} hung up mid-round (round {}); \
+                                 continuing toward quorum",
+                                meta.round
+                            );
+                            srv.stat(|st| st.churned += 1);
+                        }
+                    } else {
+                        ensure!(
+                            !awaited,
+                            "client {id} disconnected mid-round (round {}) with its work \
+                             outstanding; the server keeps serving the remaining connections",
+                            meta.round
+                        );
+                    }
                 }
             }
         }
         if until == Until::Opportunistic {
             return Ok(());
+        }
+    }
+}
+
+/// Poll-slot tag base for in-progress reconnect handshakes (slot
+/// `usize::MAX` is the listener; fleet slots are plain client ids).
+const PEND_BASE: usize = usize::MAX - (1 << 20);
+
+/// Cap on simultaneously tracked reconnect handshakes — enough for any
+/// realistic crash-restart storm, small enough that a dial flood
+/// cannot balloon the poll set.
+const PEND_CAP: usize = 64;
+
+/// Drain the accept queue mid-run. Without a quorum the fleet is
+/// closed: late connections are churn, shed without touching the
+/// round. With one, each accept becomes a pending reconnect handshake
+/// polled alongside the fleet (up to [`PEND_CAP`]).
+fn accept_churn(srv: &NetServer, pending: &mut Vec<Option<Pending>>, quorum: bool) -> Result<()> {
+    while let Some(s) = srv.listener.accept_nonblocking()? {
+        if quorum && pending.iter().flatten().count() < PEND_CAP {
+            s.set_nonblocking(true)?;
+            s.set_nodelay();
+            pending.push(Some(Pending {
+                stream: s,
+                rbuf: RecvBuf::default(),
+                deadline: Instant::now() + srv.timeout,
+            }));
+        } else {
+            drop(s);
+            srv.stat(|st| st.rejected += 1);
+        }
+    }
+    Ok(())
+}
+
+/// One read of a connection's socket through its chaos layer when one
+/// is installed, counting injected faults; bytes run straight through
+/// otherwise.
+fn chaos_fill(srv: &NetServer, c: &mut EvConn) -> io::Result<usize> {
+    match c.chaos.as_mut() {
+        Some(ch) => {
+            let (r, f) = ch.fill(&mut c.stream, &mut c.rbuf);
+            if f > 0 {
+                srv.stat(|st| st.faults_injected += f);
+            }
+            r
+        }
+        None => c.rbuf.fill(&mut c.stream),
+    }
+}
+
+/// One readiness lap's progress on a mid-run reconnect handshake
+/// (quorum mode only). Unlike the accept phase, nothing here aborts
+/// the run: a malformed, mismatched or duplicate re-HELLO costs the
+/// dialer its connection — never the fleet its round. A valid re-HELLO
+/// for a dead slot parks in `rejoins` until the next round boundary
+/// (sync) or dispatch lap (async) installs it, with a bumped
+/// generation so the chaos layer draws fresh fault streams.
+fn reconnect_step(
+    srv: &NetServer,
+    slot: &mut Option<Pending>,
+    conns: &[EvConn],
+    rejoins: &mut Vec<(usize, EvConn)>,
+    gens: &mut [u64],
+    dim: usize,
+) {
+    let Some(p) = slot.as_mut() else { return };
+    let n = conns.len();
+    let mut open = true;
+    loop {
+        match p.rbuf.fill(&mut p.stream) {
+            Ok(0) => {
+                open = false;
+                break;
+            }
+            Ok(nb) => {
+                p.deadline = Instant::now() + srv.timeout;
+                srv.stat(|st| st.bytes_in += nb as u64);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                open = false;
+                break;
+            }
+        }
+    }
+    let admit = match peek_frame(p.rbuf.data()) {
+        Err(_) => None,
+        Ok(None) if open => return, // frame incomplete; keep waiting
+        Ok(None) => None,           // hung up mid-HELLO
+        Ok(Some((kind, flen))) => {
+            let parsed = (|| {
+                if kind != KIND_HELLO {
+                    return None;
+                }
+                let mut cur = Cur::new(&p.rbuf.data()[5..flen]);
+                let id = cur.u32().ok()? as usize;
+                let fleet = cur.u32().ok()? as usize;
+                let hdim = cur.u32().ok()? as usize;
+                cur.done().ok()?;
+                (id < n && fleet == n && hdim == dim).then_some(id)
+            })();
+            match parsed {
+                Some(id) if conns[id].open => {
+                    eprintln!(
+                        "[fedeff] rejecting duplicate HELLO from client {id}: its original \
+                         connection is still live"
+                    );
+                    None
+                }
+                Some(id) => Some((id, flen)),
+                None => None,
+            }
+        }
+    };
+    match admit {
+        None => {
+            *slot = None;
+            srv.stat(|st| st.rejected += 1);
+        }
+        Some((id, flen)) => {
+            let mut q = slot.take().expect("pending present");
+            q.rbuf.consume(flen);
+            gens[id] += 1;
+            let conn = EvConn {
+                stream: q.stream,
+                rbuf: q.rbuf,
+                scale: [0u8; 4],
+                out: VecDeque::new(),
+                deadline: q.deadline,
+                open: true,
+                chaos: srv.chaos.map(|sp| ChaosConn::new(sp, id, gens[id])),
+            };
+            // latest dial wins if the same id re-HELLOs twice before
+            // its slot is recycled
+            rejoins.retain(|(r, _)| *r != id);
+            rejoins.push((id, conn));
         }
     }
 }
@@ -1134,15 +1518,18 @@ fn pump(srv: &NetServer, inner: &mut TransportInner, dim: usize, until: Until) -
 /// hole, this client's 4 scale bytes, the frame after — so per-client
 /// cost is 4 bytes of state, not a frame copy. A frame that finishes
 /// pops and the next queued one (a pipelined round's broadcast, or the
-/// shutdown DONE behind it) starts immediately.
+/// shutdown DONE behind it) starts immediately. `lenient` (quorum
+/// mode) turns a dead peer into counted churn instead of a run-fatal
+/// error — the commit decides whether enough of the fleet survived.
 fn drain_conn_out(
     srv: &NetServer,
     c: &mut EvConn,
     id: usize,
     frames: &[Vec<u8>],
     scale_off: usize,
+    lenient: bool,
 ) -> Result<()> {
-    let EvConn { stream, scale, out, deadline, open, .. } = c;
+    let EvConn { stream, scale, out, deadline, open, chaos, .. } = c;
     loop {
         let (frame, sent_now) = match out.front() {
             None => return Ok(()),
@@ -1170,9 +1557,31 @@ fn drain_conn_out(
             niov += 1;
             off = 0;
         }
-        let wrote = match stream.write_vectored(&iov[..niov]) {
+        let r = match chaos.as_mut() {
+            Some(ch) => {
+                let (r, f) = ch.write_vectored(stream, &iov[..niov]);
+                if f > 0 {
+                    srv.stat(|st| st.faults_injected += f);
+                }
+                r
+            }
+            None => stream.write_vectored(&iov[..niov]),
+        };
+        let wrote = match r {
             Ok(0) => {
                 *open = false;
+                if lenient {
+                    stream.shutdown();
+                    eprintln!(
+                        "[fedeff] client {id} closed its socket mid-broadcast; continuing \
+                         toward quorum"
+                    );
+                    srv.stat(|st| {
+                        st.churned += 1;
+                        st.connected = st.connected.saturating_sub(1);
+                    });
+                    return Ok(());
+                }
                 bail!("client {id} closed its socket mid-broadcast");
             }
             Ok(n) => n,
@@ -1180,6 +1589,18 @@ fn drain_conn_out(
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(e) => {
                 *open = false;
+                if lenient {
+                    stream.shutdown();
+                    eprintln!(
+                        "[fedeff] client {id} broadcast write failed ({e}); continuing \
+                         toward quorum"
+                    );
+                    srv.stat(|st| {
+                        st.churned += 1;
+                        st.connected = st.connected.saturating_sub(1);
+                    });
+                    return Ok(());
+                }
                 bail!("client {id} broadcast write failed: {e}");
             }
         };
@@ -1223,7 +1644,11 @@ fn parse_msg_frames(
     loop {
         let (flen, staged) = {
             let data = c.rbuf.data();
-            let Some((kind, flen)) = peek_frame(data)? else { return Ok(()) };
+            let Some((kind, flen)) =
+                peek_frame(data).with_context(|| format!("framing bytes from client {id}"))?
+            else {
+                return Ok(());
+            };
             ensure!(kind == KIND_MSG, "client {id} sent frame kind {kind}, expected MSG");
             let payload = &data[5..flen];
             let mut cur = Cur::new(payload);
@@ -1303,6 +1728,15 @@ pub struct NetServer {
     /// Cap on concurrently tracked connections; extras are accepted
     /// and immediately shed. `None` = uncapped.
     pub max_clients: Option<usize>,
+    /// Quorum fraction for sync rounds / async fleet floor
+    /// (`[faults] quorum`, `--quorum`). `None` keeps every mid-round
+    /// loss a hard, named error; `Some(q)` commits a round once
+    /// `ceil(q × cohort)` members delivered, evicting the rest on
+    /// their own deadlines, and re-admits reconnecting clients.
+    pub quorum: Option<f64>,
+    /// Deterministic fault injection wrapped around every accepted
+    /// connection's I/O ([`ChaosSpec`]); `None` runs bytes untouched.
+    pub chaos: Option<ChaosSpec>,
     stats: RefCell<ServeStats>,
 }
 
@@ -1312,6 +1746,8 @@ impl NetServer {
             listener: Listener::bind(addr)?,
             timeout: DEFAULT_TIMEOUT,
             max_clients: None,
+            quorum: None,
+            chaos: None,
             stats: RefCell::new(ServeStats::default()),
         })
     }
@@ -1341,6 +1777,9 @@ impl NetServer {
     fn accept_fleet(&self, n: usize, dim: usize, has_comp: bool) -> Result<NetTransport<'_>> {
         let cap = self.max_clients.unwrap_or(usize::MAX);
         ensure!(cap >= n, "--max-clients {cap} cannot host a fleet of {n}");
+        if let Some(q) = self.quorum {
+            ensure!(q.is_finite() && q > 0.0 && q <= 1.0, "quorum must be in (0, 1], got {q}");
+        }
         self.listener.set_nonblocking(true)?;
         let mut slots: Vec<Option<(Stream, RecvBuf)>> = Vec::new();
         slots.resize_with(n, || None);
@@ -1468,7 +1907,8 @@ impl NetServer {
         let now = Instant::now();
         let conns: Vec<EvConn> = slots
             .into_iter()
-            .map(|s| {
+            .enumerate()
+            .map(|(id, s)| {
                 let (stream, rbuf) = s.expect("all slots filled");
                 EvConn {
                     stream,
@@ -1477,6 +1917,7 @@ impl NetServer {
                     out: VecDeque::new(),
                     deadline: now + self.timeout,
                     open: true,
+                    chaos: self.chaos.map(|sp| ChaosConn::new(sp, id, 0)),
                 }
             })
             .collect();
@@ -1497,6 +1938,10 @@ impl NetServer {
                 draining: false,
                 sup: Vec::new(),
                 input: PoolInput::default(),
+                pending: Vec::new(),
+                rejoins: Vec::new(),
+                casualties: Vec::new(),
+                gens: vec![0; n],
             }),
         })
     }
@@ -1525,6 +1970,19 @@ impl NetServer {
         let n = spec.dataset.clients;
         let d = oracle.dim();
         let mut alg = build_algorithm(&spec.algorithm, &oracle)?;
+        if self.quorum.is_some() {
+            // a MeanOverCohort scale divides by the cohort size the
+            // dispatch assumed — losing a member mid-round would
+            // silently re-weight every survivor. Weighted-HT scales
+            // are per-client and lose exactly the lost member's term.
+            ensure!(
+                alg.uplink_plan()
+                    .is_some_and(|p| matches!(p.scale, ScaleSpec::WeightedHt { .. })),
+                "[faults] quorum needs a cohort-size-independent uplink scale (weighted-HT): \
+                 {} would re-weight the survivors when a cohort member is lost mid-round",
+                alg.label()
+            );
+        }
         let driver = build_driver(spec, n)?;
         let transport = self.accept_fleet(n, d, leaf_compressor(spec).is_some())?;
         let x0 = vec![0.5f32; d];
@@ -1654,6 +2112,7 @@ impl NetServer {
             dplan: DeltaRound::default(),
             dispatches: 0,
             dropped: 0,
+            lost: 0,
         };
         let mut version = 0u64;
         let mut ledger = CommLedger::default();
@@ -1680,6 +2139,34 @@ impl NetServer {
             // in-process engine predicts them) is what keeps each
             // snapshot's totals identical
             pump_async(self, inner, &mut st, &mut ledger, d, bw)?;
+            // install completed re-HELLOs into their dead slots: forget
+            // the replica (next downlink resyncs dense) and, when the
+            // slot's flight already parked at infinity, redispatch at
+            // the current virtual time so the client rejoins the race
+            for (id, mut conn) in std::mem::take(&mut inner.rejoins) {
+                conn.deadline = Instant::now() + self.timeout;
+                inner.conns[id] = conn;
+                self.stat(|s| {
+                    s.connected += 1;
+                    s.reconnects += 1;
+                    s.resyncs += 1;
+                });
+                st.lost = st.lost.saturating_sub(1);
+                if let Some(tr) = tracker.as_mut() {
+                    tr.forget(id);
+                }
+                if st.arrival[id].is_infinite() {
+                    let anchor = alg.eval_point();
+                    async_dispatch(
+                        self, inner, &mut st, &mut ledger, &mut tracker, &anchor, payload,
+                        sspec, opts.seed, d, version, id, vtime,
+                    )?;
+                    // the fresh flight's arrival must be known before
+                    // the argmin — the fold order follows the virtual
+                    // clock, never the socket clock
+                    pump_async(self, inner, &mut st, &mut ledger, d, bw)?;
+                }
+            }
             // next arrival: earliest in-flight update, client-id tiebreak
             let mut c = 0usize;
             for i in 1..n {
@@ -1770,6 +2257,9 @@ struct AsyncNetState {
     dplan: DeltaRound,
     dispatches: u64,
     dropped: u64,
+    /// Clients currently disconnected (quorum mode): the fleet-floor
+    /// count — incremented on eviction/hangup, decremented on rejoin.
+    lost: usize,
 }
 
 /// Dispatch client `c` at virtual time `now`: draw its compute time
@@ -1846,10 +2336,22 @@ fn async_dispatch(
         .conns
         .get_mut(c)
         .with_context(|| format!("async client {c} has no connection"))?;
-    ensure!(
-        conn.open,
-        "client {c} disconnected in an earlier dispatch; cannot redispatch (dispatch {kc})"
-    );
+    if !conn.open {
+        ensure!(
+            srv.quorum.is_some(),
+            "client {c} disconnected in an earlier dispatch; cannot redispatch (dispatch {kc})"
+        );
+        // a departed client's dispatch books exactly like the
+        // in-process engine's scripted departure: downlink planned,
+        // booked and acked above, the uplink never arrives, and the
+        // flight slot parks at infinity so the argmin skips it
+        st.known[c] = true;
+        st.arrival[c] = f64::INFINITY;
+        if !dropped {
+            st.dropped += 1;
+        }
+        return Ok(());
+    }
     // async folds scale per arrival (staleness * weight / buffer); the
     // frame's spliced scale is the identity
     conn.scale = 1.0f32.to_le_bytes();
@@ -1877,8 +2379,10 @@ fn pump_async(
     dim: usize,
     bw: f64,
 ) -> Result<()> {
-    let TransportInner { conns, poller, pslots, frames, scale_off, .. } = inner;
+    let TransportInner { conns, poller, pslots, frames, scale_off, pending, rejoins, gens, .. } =
+        inner;
     let scale_off = *scale_off;
+    let quorum = srv.quorum;
     loop {
         if st.known.iter().all(|&b| b) {
             return Ok(());
@@ -1886,7 +2390,7 @@ fn pump_async(
 
         let now = Instant::now();
         let mut next_deadline: Option<Instant> = None;
-        for (id, c) in conns.iter().enumerate() {
+        for (id, c) in conns.iter_mut().enumerate() {
             if !c.open {
                 continue;
             }
@@ -1895,14 +2399,42 @@ fn pump_async(
                 continue;
             }
             if now >= c.deadline {
-                bail!(
-                    "client {id} stalled: no socket progress within {:?} (dispatch {}); \
-                     evicting it and aborting the run",
+                let Some(q) = quorum else {
+                    bail!(
+                        "client {id} stalled: no socket progress within {:?} (dispatch {}); \
+                         evicting it and aborting the run",
+                        srv.timeout,
+                        st.k[id].saturating_sub(1)
+                    );
+                };
+                eprintln!(
+                    "[fedeff] evicting client {id}: no socket progress within {:?} \
+                     (dispatch {})",
                     srv.timeout,
                     st.k[id].saturating_sub(1)
                 );
+                c.open = false;
+                c.stream.shutdown();
+                srv.stat(|stt| {
+                    stt.evicted += 1;
+                    stt.connected = stt.connected.saturating_sub(1);
+                });
+                st.lost += 1;
+                async_depart(st, id);
+                async_floor(st, q, id)?;
+                continue;
             }
             next_deadline = Some(next_deadline.map_or(c.deadline, |d| d.min(c.deadline)));
+        }
+        for p in pending.iter_mut() {
+            if p.as_ref().is_some_and(|q| now >= q.deadline) {
+                *p = None;
+                srv.stat(|stt| stt.evicted += 1);
+            }
+        }
+        pending.retain(|p| p.is_some());
+        for p in pending.iter().flatten() {
+            next_deadline = Some(next_deadline.map_or(p.deadline, |d| d.min(p.deadline)));
         }
 
         poller.clear();
@@ -1917,6 +2449,12 @@ fn pump_async(
             poller.push(c.stream.raw_fd(), interest);
             pslots.push(id);
         }
+        for (i, p) in pending.iter().enumerate() {
+            if let Some(p) = p {
+                poller.push(p.stream.raw_fd(), evloop::Interest { read: true, write: false });
+                pslots.push(PEND_BASE + i);
+            }
+        }
         let timeout =
             next_deadline.map_or(Duration::from_millis(100), |d| d.saturating_duration_since(now));
         poller.wait(timeout)?;
@@ -1927,19 +2465,22 @@ fn pump_async(
                 continue;
             }
             if id == usize::MAX {
-                while let Some(s) = srv.listener.accept_nonblocking()? {
-                    drop(s);
-                    srv.stat(|stt| stt.rejected += 1);
-                }
+                accept_churn(srv, pending, quorum.is_some())?;
+                continue;
+            }
+            if id >= PEND_BASE {
+                reconnect_step(srv, &mut pending[id - PEND_BASE], conns, rejoins, gens, dim);
                 continue;
             }
             let c = &mut conns[id];
-            if !c.out.is_empty() && (rd.writable || rd.closed) {
-                drain_conn_out(srv, c, id, frames, scale_off)?;
+            let was_open = c.open;
+            if c.open && !c.out.is_empty() && (rd.writable || rd.closed) {
+                drain_conn_out(srv, c, id, frames, scale_off, quorum.is_some())?;
             }
-            if rd.readable || rd.closed {
+            let closed_by_write = was_open && !c.open;
+            if c.open && (rd.readable || rd.closed) {
                 loop {
-                    match c.rbuf.fill(&mut c.stream) {
+                    match chaos_fill(srv, c) {
                         Ok(0) => {
                             c.open = false;
                             srv.stat(|stt| stt.connected = stt.connected.saturating_sub(1));
@@ -1960,17 +2501,66 @@ fn pump_async(
                     }
                 }
                 parse_async_msgs(srv, c, id, st, ledger, dim, bw)?;
-                if !c.open {
-                    ensure!(
-                        st.known[id] && c.out.is_empty(),
-                        "client {id} disconnected with its update in flight (dispatch {}); a \
-                         continuous async fleet cannot lose members",
-                        st.k[id].saturating_sub(1)
-                    );
+            }
+            if was_open && !c.open {
+                match quorum {
+                    Some(q) => {
+                        if !closed_by_write {
+                            eprintln!(
+                                "[fedeff] client {id} hung up (dispatch {}); continuing \
+                                 under the quorum floor",
+                                st.k[id].saturating_sub(1)
+                            );
+                            srv.stat(|stt| stt.churned += 1);
+                        }
+                        st.lost += 1;
+                        async_depart(st, id);
+                        async_floor(st, q, id)?;
+                    }
+                    None => {
+                        ensure!(
+                            st.known[id] && c.out.is_empty(),
+                            "client {id} disconnected with its update in flight (dispatch \
+                             {}); a continuous async fleet cannot lose members",
+                            st.k[id].saturating_sub(1)
+                        );
+                    }
                 }
             }
         }
     }
+}
+
+/// Mark a lost async client's in-flight slot departed — the wire
+/// analog of the in-process engine's scripted departure: the arrival
+/// parks at infinity (the argmin skips it until a rejoin) and the
+/// update counts dropped unless its dispatch already drew the drop.
+/// A no-op when the update already landed: a delivered payload still
+/// folds even if its sender died afterwards.
+fn async_depart(st: &mut AsyncNetState, id: usize) {
+    if !st.known[id] {
+        st.known[id] = true;
+        st.arrival[id] = f64::INFINITY;
+        if !st.dropflag[id] {
+            st.dropped += 1;
+        }
+    }
+}
+
+/// The async fleet floor: with quorum `q` over `n` continuous clients,
+/// losing past `n - ceil(q*n)` members is a run-fatal error naming the
+/// last casualty.
+fn async_floor(st: &AsyncNetState, q: f64, id: usize) -> Result<()> {
+    let n = st.known.len();
+    let need = ((q * n as f64).ceil() as usize).max(1);
+    ensure!(
+        n - st.lost >= need,
+        "client {id} lost (dispatch {}): only {}/{n} async clients remain (quorum {q} needs \
+         {need})",
+        st.k[id].saturating_sub(1),
+        n - st.lost
+    );
+    Ok(())
 }
 
 /// Decode every complete MSG buffered on one async connection: validate
@@ -1992,7 +2582,11 @@ fn parse_async_msgs(
     loop {
         let flen = {
             let data = c.rbuf.data();
-            let Some((kind, flen)) = peek_frame(data)? else { return Ok(()) };
+            let Some((kind, flen)) =
+                peek_frame(data).with_context(|| format!("framing bytes from client {id}"))?
+            else {
+                return Ok(());
+            };
             ensure!(kind == KIND_MSG, "client {id} sent frame kind {kind}, expected MSG");
             let payload = &data[5..flen];
             let mut cur = Cur::new(payload);
@@ -2047,22 +2641,65 @@ pub fn run_fleet(addr: &str, spec: &Spec) -> Result<()> {
 /// stalled or misbehaving fleet members while the rest of the fleet
 /// behaves normally.
 pub fn run_fleet_clients(addr: &str, spec: &Spec, clients: &[usize]) -> Result<()> {
+    let cp: Vec<(usize, ClientPolicy)> =
+        clients.iter().map(|&c| (c, ClientPolicy::default())).collect();
+    run_fleet_inner(addr, spec, &cp)
+}
+
+/// A full fleet where the scripted clients deliberately drop their
+/// connection after fully reading the ROUND/dispatch numbered `r` in
+/// each `(client, r)` pair — and never come back. The deaths are
+/// clean: the victim's thread returns `Ok`, so the server-side record
+/// (quorum skips, eviction/churn counters, the committed losses) is
+/// the sole verdict on the run.
+pub fn run_fleet_faulty(addr: &str, spec: &Spec, deaths: &[(usize, usize)]) -> Result<()> {
+    run_fleet_inner(addr, spec, &death_policies(spec, deaths, false)?)
+}
+
+/// [`run_fleet_faulty`] whose victims crash-restart: each scripted
+/// client drops its connection after the named round/dispatch, then
+/// re-dials with its [`Backoff`] schedule, re-HELLOs with its id, and
+/// serves on — the client half of the coordinator's reconnect/resume
+/// path (quorum mode only; without `--quorum` the server refuses the
+/// re-HELLO and the run dies on the original loss).
+pub fn run_fleet_reconnecting(addr: &str, spec: &Spec, deaths: &[(usize, usize)]) -> Result<()> {
+    run_fleet_inner(addr, spec, &death_policies(spec, deaths, true)?)
+}
+
+fn death_policies(
+    spec: &Spec,
+    deaths: &[(usize, usize)],
+    reconnect: bool,
+) -> Result<Vec<(usize, ClientPolicy)>> {
+    let n = spec.dataset.clients;
+    let mut v: Vec<(usize, ClientPolicy)> =
+        (0..n).map(|c| (c, ClientPolicy::default())).collect();
+    for &(c, r) in deaths {
+        ensure!(c < n, "death script names client {c}, fleet has {n}");
+        v[c].1 = ClientPolicy { reconnect, die_at: Some(r) };
+    }
+    Ok(v)
+}
+
+fn run_fleet_inner(addr: &str, spec: &Spec, clients: &[(usize, ClientPolicy)]) -> Result<()> {
     let oracle = fleet_oracle(spec)?;
     let n = spec.dataset.clients;
     let d = oracle.dim();
     let comp = leaf_compressor(spec);
-    for &c in clients {
+    for &(c, _) in clients {
         ensure!(c < n, "fleet client id {c} out of range for {n} dataset clients");
     }
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(clients.len());
-        for &c in clients {
+        for &(c, policy) in clients {
             let oracle = &oracle;
             let comp = comp.clone();
-            handles.push(scope.spawn(move || client_loop(addr, c, n, d, comp.as_ref(), oracle)));
+            handles.push(
+                scope.spawn(move || client_loop(addr, c, n, d, comp.as_ref(), oracle, policy)),
+            );
         }
         let mut first_err = None;
-        for (h, &c) in handles.into_iter().zip(clients) {
+        for (h, &(c, _)) in handles.into_iter().zip(clients) {
             let res = h.join().map_err(|_| anyhow::anyhow!("fleet client {c} panicked"));
             if let Err(e) = res.and_then(|r| r) {
                 first_err.get_or_insert(e);
@@ -2075,20 +2712,33 @@ pub fn run_fleet_clients(addr: &str, spec: &Spec, clients: &[usize]) -> Result<(
     })
 }
 
-/// One simulated client: HELLO, then execute every ROUND recipe through
-/// the *same* fused pipeline the in-process workers run
-/// ([`run_chunk`]), encode each channel's message with the wire codec,
-/// and enforce the codec invariant (`bit_len == compressor-quoted
-/// bits`) before sending.
-fn client_loop(
+/// Per-client fault script for the simulated fleet.
+#[derive(Clone, Copy, Default)]
+struct ClientPolicy {
+    /// Crash-restart after a scripted death or lost connection instead
+    /// of ending the thread / propagating the error.
+    reconnect: bool,
+    /// Deliberately drop the connection after fully reading the ROUND
+    /// whose round/dispatch counter equals this (fires once).
+    die_at: Option<usize>,
+}
+
+/// Reconnect-cycle cap per client: a coordinator that keeps dying on
+/// the same client propagates the last error instead of dialing
+/// forever.
+const MAX_RECONNECTS: usize = 32;
+
+/// Dial the coordinator (paced by `backoff`) and complete the HELLO —
+/// the one connect path shared by a fleet's initial join and every
+/// mid-run reconnect.
+fn client_connect(
     addr: &str,
     client: usize,
     fleet: usize,
     dim: usize,
-    comp: Option<&(String, usize, usize)>,
-    oracle: &RustLogReg,
-) -> Result<()> {
-    let stream = connect_retry(addr, Duration::from_secs(10))?;
+    backoff: &mut Backoff,
+) -> Result<Conn> {
+    let stream = connect_retry(addr, Duration::from_secs(10), backoff)?;
     stream.set_nodelay();
     let mut conn = Conn::new(stream, DEFAULT_TIMEOUT)?;
     let mut hello = Vec::with_capacity(12);
@@ -2097,7 +2747,35 @@ fn client_loop(
     hello.extend_from_slice(&(dim as u32).to_le_bytes());
     write_frame(&mut conn.w, KIND_HELLO, &hello)?;
     conn.w.flush()?;
+    Ok(conn)
+}
 
+/// What ended one connection's service loop.
+enum ClientEnd {
+    /// DONE received: the run is over.
+    Done,
+    /// The policy's scripted death fired after its round was read.
+    Died,
+}
+
+/// One simulated client: HELLO, then execute every ROUND recipe through
+/// the *same* fused pipeline the in-process workers run
+/// ([`run_chunk`]), encode each channel's message with the wire codec,
+/// and enforce the codec invariant (`bit_len == compressor-quoted
+/// bits`) before sending. Under [`ClientPolicy::reconnect`] the client
+/// treats a scripted death or a lost connection as a crash-restart:
+/// it forgets its anchor replica (the coordinator resyncs dense on
+/// rejoin), re-dials on its [`Backoff`] schedule, and serves on.
+fn client_loop(
+    addr: &str,
+    client: usize,
+    fleet: usize,
+    dim: usize,
+    comp: Option<&(String, usize, usize)>,
+    oracle: &RustLogReg,
+    policy: ClientPolicy,
+) -> Result<()> {
+    let mut backoff = Backoff::new(client as u64);
     let mut kit = FusedKit::default();
     let fork = match comp {
         Some((name, k, kp)) => Some(
@@ -2122,14 +2800,71 @@ fn client_loop(
     // holds — what delta ROUND frames patch in place
     let mut anchor: Vec<f32> = Vec::new();
     let mut aver: Option<u64> = None;
+    let mut died = false;
 
+    let mut conn = client_connect(addr, client, fleet, dim, &mut backoff)?;
+    let mut restarts = 0usize;
     loop {
-        let kind = read_frame(&mut conn.r, &mut frame)
+        let end = client_serve_conn(
+            &mut conn, client, dim, has_comp, &mut kit, oracle, policy, &mut died, &mut input,
+            &mut out, &mut frame, &mut msg, &mut w, &mut sv, &mut anchor, &mut aver,
+        );
+        match end {
+            Ok(ClientEnd::Done) => return Ok(()),
+            // a clean scripted death: the thread ends Ok — the server-
+            // side record is the verdict on what the loss cost
+            Ok(ClientEnd::Died) if !policy.reconnect => return Ok(()),
+            Ok(ClientEnd::Died) => {}
+            Err(e) if policy.reconnect && restarts < MAX_RECONNECTS => {
+                restarts += 1;
+                let _ = e;
+            }
+            Err(e) => return Err(e),
+        }
+        // crash-restart: drop the connection, forget the replica (the
+        // coordinator resyncs a rejoiner dense), pace the re-dial
+        drop(conn);
+        anchor.clear();
+        aver = None;
+        std::thread::sleep(backoff.next_delay());
+        conn = client_connect(addr, client, fleet, dim, &mut backoff)?;
+    }
+}
+
+/// Serve one connection until DONE, a scripted death, or an error.
+#[allow(clippy::too_many_arguments)]
+fn client_serve_conn(
+    conn: &mut Conn,
+    client: usize,
+    dim: usize,
+    has_comp: bool,
+    kit: &mut FusedKit,
+    oracle: &RustLogReg,
+    policy: ClientPolicy,
+    died: &mut bool,
+    input: &mut PoolInput,
+    out: &mut WorkerOut,
+    frame: &mut Vec<u8>,
+    msg: &mut Vec<u8>,
+    w: &mut BitWriter,
+    sv: &mut SparseVec,
+    anchor: &mut Vec<f32>,
+    aver: &mut Option<u64>,
+) -> Result<ClientEnd> {
+    loop {
+        let kind = read_frame(&mut conn.r, frame)
             .with_context(|| format!("client {client} reading from the coordinator"))?;
         match kind {
-            KIND_DONE => return Ok(()),
+            KIND_DONE => return Ok(ClientEnd::Done),
             KIND_ROUND => {
-                let layout = parse_round(&frame, dim, &mut input, &mut anchor, &mut aver)?;
+                let layout = parse_round(frame, dim, input, anchor, aver)?;
+                if !*died && policy.die_at == Some(input.round) {
+                    // the scripted death: the ROUND was fully read (so
+                    // the server cannot observe the EOF before this
+                    // round's own event loop), no answer ever sent
+                    *died = true;
+                    return Ok(ClientEnd::Died);
+                }
                 let expect = if input.sup.is_empty() {
                     ensure!(has_comp, "unmasked round reached a compressor-less client");
                     LAYOUT_SPARSE
@@ -2142,7 +2877,7 @@ fn client_loop(
                     layout == expect,
                     "coordinator negotiated layout {layout}, this client produces {expect}"
                 );
-                run_chunk(oracle, &input, &mut kit, &mut out, 0, 1, dim)?;
+                run_chunk(oracle, input, kit, out, 0, 1, dim)?;
                 let round32 = input.round as u32;
                 let mut off = 0usize;
                 for (ch, &len) in out.lens.iter().enumerate() {
@@ -2154,11 +2889,9 @@ fn client_loop(
                     }
                     w.clear();
                     match layout {
-                        LAYOUT_SPARSE => codec::encode_sparse(&sv, &mut w)?,
-                        LAYOUT_MASKED_RAW => codec::encode_masked_raw(&sv, &input.sup, &mut w)?,
-                        LAYOUT_MASKED_SPARSE => {
-                            codec::encode_masked_sparse(&sv, &input.sup, &mut w)?
-                        }
+                        LAYOUT_SPARSE => codec::encode_sparse(sv, w)?,
+                        LAYOUT_MASKED_RAW => codec::encode_masked_raw(sv, &input.sup, w)?,
+                        LAYOUT_MASKED_SPARSE => codec::encode_masked_sparse(sv, &input.sup, w)?,
                         _ => unreachable!("layout validated above"),
                     }
                     // the codec invariant, enforced on every live message
@@ -2176,7 +2909,7 @@ fn client_loop(
                     msg.push(layout);
                     msg.extend_from_slice(&(sv.len() as u32).to_le_bytes());
                     msg.extend_from_slice(w.finish());
-                    write_frame(&mut conn.w, KIND_MSG, &msg)?;
+                    write_frame(&mut conn.w, KIND_MSG, msg)?;
                 }
                 conn.w.flush()?;
             }

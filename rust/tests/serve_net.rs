@@ -5,15 +5,24 @@
 //! identical comm cost — across the wire-eligible configurations
 //! (sparse compressors, masked raw, masked compressed, local steps,
 //! cohort sampling). Plus the robustness contract: malformed, truncated
-//! and oversized frames error loudly and never hang the server.
+//! and oversized frames error loudly and never hang the server. Under
+//! `[faults] quorum` the bar extends to fault tolerance (DESIGN.md
+//! §Faults): a quorum-completed round with cohort members lost mid-run
+//! must match the in-process `run_scenario_scripted` run that scripts
+//! the same clients as departed — bit for bit, at 1024 connections.
 
 use std::io::Write;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
-use fedeff::config::Spec;
+use fedeff::algorithms::{build_algorithm, RunOptions};
+use fedeff::config::{build_driver, build_faults, build_scenario, Spec};
 use fedeff::metrics::RunRecord;
-use fedeff::wire::net::{run_fleet, run_fleet_clients, run_in_process, NetServer};
+use fedeff::scenario::{FaultScript, ScenarioSpec};
+use fedeff::wire::net::{
+    fleet_oracle, run_fleet, run_fleet_clients, run_fleet_faulty, run_fleet_reconnecting,
+    run_in_process, NetServer,
+};
 
 /// Serve `spec` on an already-bound server with an in-thread fleet,
 /// then run the same spec in-process; return both records.
@@ -979,4 +988,286 @@ staleness = "poly(0.5)"
     let stats = server.stats();
     assert_eq!(stats.evicted, 0, "no fleet member may be evicted");
     assert!(stats.bytes_in > 0 && stats.bytes_out > 0);
+}
+
+// -------------------------------------------------------------------
+// fault tolerance: quorum-complete rounds, reconnect/resume
+// -------------------------------------------------------------------
+
+/// The same spec's deaths, run in-process: translate the fleet's
+/// `(client, dies_after)` script into a [`FaultScript`] and drive
+/// `Driver::run_scenario_scripted` — the bit-for-bit reference a
+/// quorum-completed networked run is pinned against (DESIGN.md
+/// §Faults).
+fn run_scripted_inproc(spec: &Spec, scen: &ScenarioSpec, deaths: &[(usize, usize)]) -> RunRecord {
+    let oracle = fleet_oracle(spec).expect("oracle");
+    let d = oracle.dim();
+    let mut alg = build_algorithm(&spec.algorithm, &oracle).expect("algorithm");
+    let driver = build_driver(spec, spec.dataset.clients).expect("driver");
+    let script = FaultScript { departures: deaths.iter().map(|&(c, r)| (r, c)).collect() };
+    let opts = RunOptions {
+        rounds: spec.experiment.rounds,
+        eval_every: spec.experiment.eval_every,
+        seed: spec.experiment.seed,
+        ..Default::default()
+    };
+    driver
+        .run_scenario_scripted(alg.as_mut(), &oracle, scen, &script, &vec![0.5f32; d], &opts)
+        .expect("scripted in-process run")
+}
+
+const QUORUM_1024_SPEC: &str = r#"
+[experiment]
+name = "net-quorum-1024"
+rounds = 4
+eval_every = 2
+seed = 42
+
+[dataset]
+clients = 1024
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+
+[faults]
+quorum = 0.9
+"#;
+
+/// The quorum acceptance bar: a 1024-connection fleet where three
+/// clients hang up mid-round commits every round at quorum and
+/// reproduces — bit for bit — the in-process scripted run that departs
+/// the same clients at the same rounds. Losses, booked uplink and
+/// downlink bits, comm cost: a quorum-skipped client is *exactly* a
+/// scenario-engine mid-round dropout.
+#[cfg(unix)]
+#[test]
+fn quorum_1024_deaths_match_scripted_inproc_bitwise() {
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    assert!(limit >= 3500, "need ~3 fds per client; soft limit stuck at {limit}");
+    let spec = Spec::parse(QUORUM_1024_SPEC).unwrap();
+    // (client, dies after fully reading round): two losses in round 1,
+    // one more in round 2
+    let deaths = [(7usize, 1usize), (300, 1), (901, 2)];
+    let path = std::env::temp_dir().join(format!("fedeff-quorum-{}.sock", std::process::id()));
+    let mut server = NetServer::bind(&format!("uds:{}", path.display())).expect("bind uds");
+    server.quorum = build_faults(spec.faults.as_ref().expect("[faults] section")).unwrap();
+    assert_eq!(server.quorum, Some(0.9), "the [faults] section must reach the server");
+    let addr = server.local_addr().unwrap();
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet_faulty(&addr, spec, &deaths))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("quorum serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    let inproc = run_scripted_inproc(&spec, &ScenarioSpec::default(), &deaths);
+    assert_bitwise_equal(&net, &inproc);
+    let stats = server.stats();
+    assert_eq!(stats.quorum_rounds, 2, "rounds 1 and 2 each committed short of the cohort");
+    assert_eq!(stats.evicted + stats.churned, 3, "each death is shed exactly once");
+    assert_eq!(stats.reconnects, 0);
+    assert_eq!(stats.resyncs, 0);
+    assert_eq!(stats.faults_injected, 0, "no chaos layer on this run");
+}
+
+const QUORUM_ASYNC_1024_SPEC: &str = r#"
+[experiment]
+name = "net-quorum-async-1024"
+rounds = 2
+eval_every = 1
+seed = 29
+
+[dataset]
+clients = 1024
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+
+[scenario]
+compute = "uniform(0.01, 0.05)"
+speed = "uniform(0.5, 2.0)"
+bandwidth = 100000.0
+drop = 0.05
+mode = "async"
+buffer = 128
+staleness = "poly(0.5)"
+
+[faults]
+quorum = 0.5
+"#;
+
+/// The buffered-async half of the quorum bar at 1024 connections: two
+/// clients vanish after their first dispatch, their in-flight updates
+/// are lost, and the run matches the in-process scripted async engine
+/// bit for bit — virtual clock, dispatch/apply/drop counters and all.
+#[cfg(unix)]
+#[test]
+fn quorum_async_1024_deaths_match_scripted_inproc_bitwise() {
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    assert!(limit >= 3500, "need ~3 fds per client; soft limit stuck at {limit}");
+    let spec = Spec::parse(QUORUM_ASYNC_1024_SPEC).unwrap();
+    // both victims die after fully reading dispatch 0: their first
+    // flight is forever in-flight, parked at infinite arrival
+    let deaths = [(3usize, 0usize), (700, 0)];
+    let path =
+        std::env::temp_dir().join(format!("fedeff-quorum-async-{}.sock", std::process::id()));
+    let mut server = NetServer::bind(&format!("uds:{}", path.display())).expect("bind uds");
+    server.quorum = build_faults(spec.faults.as_ref().expect("[faults] section")).unwrap();
+    let addr = server.local_addr().unwrap();
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet_faulty(&addr, spec, &deaths))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("quorum async serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    let scen = build_scenario(spec.scenario.as_ref().unwrap()).unwrap();
+    let inproc = run_scripted_inproc(&spec, &scen, &deaths);
+    assert_bitwise_equal(&net, &inproc);
+    assert_scenario_equal(&net, &inproc);
+    let stats = server.stats();
+    assert_eq!(stats.evicted + stats.churned, 2, "each death is shed exactly once");
+    assert_eq!(stats.reconnects, 0);
+    assert_eq!(stats.resyncs, 0);
+}
+
+/// Reconnect/resume at 1024 connections with the anchor-delta
+/// downlink: a client crashes after round 1, forgets its anchor
+/// replica, re-dials on its backoff schedule, re-HELLOs with its id —
+/// and is re-admitted at a round boundary with a dense resync (a
+/// stale-round rejoin can never be patched with a delta). The run
+/// completes; the books show exactly one reconnect and one resync.
+#[cfg(unix)]
+#[test]
+fn rejoin_after_hangup_resyncs_dense_at_1024() {
+    let limit = fedeff::wire::evloop::raise_nofile_limit();
+    assert!(limit >= 3500, "need ~3 fds per client; soft limit stuck at {limit}");
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-rejoin-1024"
+rounds = 8
+eval_every = 4
+seed = 11
+
+[dataset]
+clients = 1024
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 8
+downlink = "delta"
+
+[faults]
+quorum = 0.9
+"#,
+    )
+    .unwrap();
+    let deaths = [(37usize, 1usize)];
+    let path = std::env::temp_dir().join(format!("fedeff-rejoin-{}.sock", std::process::id()));
+    let mut server = NetServer::bind(&format!("uds:{}", path.display())).expect("bind uds");
+    server.quorum = build_faults(spec.faults.as_ref().unwrap()).unwrap();
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = server.local_addr().unwrap();
+            scope.spawn(move || run_fleet_reconnecting(&addr, spec, &deaths))
+        };
+        let rec = server.serve(&spec, &mut |_| {}).expect("serve across the rejoin");
+        fleet.join().expect("fleet thread").expect("reconnecting fleet run");
+        rec
+    });
+    assert!(net.rounds.iter().all(|r| r.loss.is_finite()));
+    let stats = server.stats();
+    assert_eq!(stats.reconnects, 1, "client 37 must be re-admitted exactly once");
+    assert_eq!(stats.resyncs, 1, "the rejoin must force exactly one dense resync");
+    assert!(stats.quorum_rounds >= 1, "the crash round must have committed at quorum");
+    assert_eq!(stats.evicted + stats.churned, 1, "one loss, no collateral churn");
+}
+
+/// A duplicate HELLO for a client whose original connection is alive
+/// must be rejected — loudly, without perturbing the run. The impostor
+/// dials mid-run (from the round-2 eval callback, so the timing is
+/// deterministic); the fleet's result stays bit-for-bit the in-process
+/// run, which also pins that a full-strength quorum round (zero
+/// casualties) commits identically to a non-quorum one.
+#[test]
+fn duplicate_hello_for_live_client_is_rejected_mid_run() {
+    let spec = Spec::parse(
+        r#"
+[experiment]
+name = "net-dup-hello"
+rounds = 10
+eval_every = 1
+seed = 5
+
+[dataset]
+clients = 8
+
+[algorithm]
+kind = "gd"
+lr = 0.5
+
+[compressor]
+up = "top-k"
+k = 4
+"#,
+    )
+    .unwrap();
+    let mut server = NetServer::bind("tcp:127.0.0.1:0").unwrap();
+    server.quorum = Some(1.0);
+    let addr = server.local_addr().unwrap();
+    let hostport = addr.strip_prefix("tcp:").unwrap().to_string();
+    let mut impostor: Option<TcpStream> = None;
+    let net = std::thread::scope(|scope| {
+        let fleet = {
+            let spec = &spec;
+            let addr = addr.clone();
+            scope.spawn(move || run_fleet(&addr, spec))
+        };
+        let rec = server
+            .serve(&spec, &mut |r| {
+                if r.round == 2 && impostor.is_none() {
+                    // client 0's original connection is alive and
+                    // mid-round; this HELLO claims its id anyway
+                    let mut hello = Vec::new();
+                    hello.extend_from_slice(&0u32.to_le_bytes());
+                    hello.extend_from_slice(&8u32.to_le_bytes());
+                    hello.extend_from_slice(&112u32.to_le_bytes());
+                    let mut s = TcpStream::connect(&hostport).expect("impostor connect");
+                    s.write_all(&frame(1, &hello)).unwrap();
+                    impostor = Some(s);
+                }
+            })
+            .expect("the impostor must not break the serve");
+        fleet.join().expect("fleet thread").expect("fleet run");
+        rec
+    });
+    drop(impostor);
+    let inproc = run_in_process(&spec, &mut |_| {}).expect("in-process run");
+    assert_bitwise_equal(&net, &inproc);
+    let stats = server.stats();
+    assert_eq!(stats.rejected, 1, "the impostor's HELLO must be rejected exactly once");
+    assert_eq!(stats.reconnects, 0, "a rejected impostor is not a reconnect");
+    assert_eq!(stats.quorum_rounds, 0, "a full fleet under quorum commits complete rounds");
 }

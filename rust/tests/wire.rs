@@ -429,6 +429,55 @@ fn anchor_delta_rejects_unsorted_and_out_of_range_coords() {
     );
 }
 
+// -------------------------------------------------------------------
+// reconnect backoff (DESIGN.md §Faults)
+// -------------------------------------------------------------------
+
+/// The client (re)connect backoff is a capped exponential with
+/// deterministic jitter: attempt `k` sleeps `min(10ms << k, 640ms)`
+/// scaled by a factor in `[0.5, 1.0)` drawn from a seed-keyed stream —
+/// so the same seed replays the same schedule, different seeds spread a
+/// retry storm out, and no delay ever exceeds the cap or undershoots
+/// half the exponential.
+#[test]
+fn backoff_schedule_is_capped_jittered_exponential_per_seed() {
+    use fedeff::wire::net::Backoff;
+    use std::time::Duration;
+
+    let schedule = |seed: u64, n: usize| -> Vec<Duration> {
+        let mut b = Backoff::new(seed);
+        (0..n).map(|_| b.next_delay()).collect()
+    };
+    // deterministic per seed, distinct across seeds
+    assert_eq!(schedule(3, 12), schedule(3, 12));
+    assert_ne!(schedule(3, 12), schedule(4, 12));
+
+    // every delay lands in [exp/2, exp) of the capped exponential
+    for seed in 0..64u64 {
+        let mut b = Backoff::new(seed);
+        for attempt in 0..12u32 {
+            let exp = (10u64 << attempt.min(6)).min(640);
+            let d = b.next_delay().as_nanos() as u64;
+            let (lo, hi) = (exp * 1_000_000 / 2, exp * 1_000_000);
+            assert!(
+                d >= lo && d < hi,
+                "seed {seed} attempt {attempt}: {d} ns outside [{lo}, {hi})"
+            );
+        }
+    }
+
+    // reset restarts the exponential but keeps the jitter stream moving
+    let mut b = Backoff::new(9);
+    let first = b.next_delay();
+    for _ in 0..8 {
+        b.next_delay();
+    }
+    b.reset();
+    let after = b.next_delay();
+    assert!(after.as_millis() < 10, "reset delay {after:?} not back at the 10ms base");
+    assert_ne!(first, after, "jitter stream repeated after reset");
+}
+
 /// Fuzzed and truncated delta bodies error loudly, never panic, and an
 /// `Ok` decode can only have written in-range coordinates.
 #[test]
